@@ -1,0 +1,115 @@
+//! Library construction (§III): run a scaled CGP campaign for 8-bit
+//! multipliers and adders, ingest the Table II baselines, print the Table I
+//! census and the Fig. 2-style Pareto fronts, and persist the library.
+//!
+//! Run: `cargo run --release --example library_build [-- --quick]`
+
+use evoapproxlib::cgp::metrics::{Metric, SELECTION_METRICS};
+use evoapproxlib::circuit::baselines::table2_baselines;
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::library::{
+    pareto_indices, run_campaign, select_diverse, CampaignConfig, Entry, Library, Origin,
+};
+use evoapproxlib::util::table::{ascii_scatter, TextTable};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let model = CostModel::default();
+    let mut lib = Library::new();
+    let f = ArithFn::Mul { w: 8 };
+
+    // 1. evolve: a scaled version of the paper's campaign
+    let mut cfg = CampaignConfig::quick(f);
+    if !quick {
+        cfg.generations = 6_000;
+        cfg.targets_per_metric = 4;
+        cfg.metrics = vec![Metric::Mae, Metric::Wce, Metric::Er, Metric::Mre];
+    }
+    let t0 = std::time::Instant::now();
+    let added = run_campaign(&mut lib, &cfg, &model, Some(&mut |p| {
+        if p.runs_done == p.runs_total {
+            println!(
+                "mul8u campaign: {} runs, {} evaluations, {:.1?}",
+                p.runs_total,
+                p.evaluations,
+                t0.elapsed()
+            );
+        }
+    }));
+    println!("evolved entries: +{added}");
+
+    // also a small adder campaign so the census has both circuit kinds
+    let mut acfg = CampaignConfig::quick(ArithFn::Add { w: 8 });
+    acfg.generations = if quick { 800 } else { 3_000 };
+    acfg.targets_per_metric = 2;
+    run_campaign(&mut lib, &acfg, &model, None);
+
+    // 2. baselines (Table II comparison set)
+    for n in table2_baselines() {
+        let origin = if let Some(k) = n.name.strip_prefix("mul8u_trunc") {
+            Origin::Truncated {
+                keep: k.parse().unwrap(),
+            }
+        } else {
+            let h = n.name.split("_h").nth(1).unwrap().split('_').next().unwrap();
+            let v = n.name.split("_v").nth(1).unwrap();
+            Origin::Bam {
+                h: h.parse().unwrap(),
+                v: v.parse().unwrap(),
+            }
+        };
+        lib.insert(Entry::characterise(n, f, &model, origin));
+    }
+
+    // 3. Table I census
+    let mut t = TextTable::new(&["Circuit", "Bit-width", "# approx. implementations"]);
+    for (kind, w, n) in lib.census() {
+        t.row(vec![kind, w.to_string(), n.to_string()]);
+    }
+    println!("\nTable I (scaled):\n{}", t.render());
+
+    // 4. Fig. 2: power vs MAE, evolved vs baselines vs selected
+    let entries = lib.for_fn(f);
+    let evolved: Vec<(f64, f64)> = entries
+        .iter()
+        .filter(|e| matches!(e.origin, Origin::Evolved { .. }))
+        .map(|e| (e.cost.power_uw, e.rel.mae_pct.max(1e-5).log10()))
+        .collect();
+    let baseline: Vec<(f64, f64)> = entries
+        .iter()
+        .filter(|e| !matches!(e.origin, Origin::Evolved { .. }))
+        .map(|e| (e.cost.power_uw, e.rel.mae_pct.max(1e-5).log10()))
+        .collect();
+    let front = pareto_indices(&entries, Metric::Mae);
+    let selected: Vec<(f64, f64)> = front
+        .iter()
+        .map(|&i| {
+            (
+                entries[i].cost.power_uw,
+                entries[i].rel.mae_pct.max(1e-5).log10(),
+            )
+        })
+        .collect();
+    println!(
+        "Fig. 2 (power vs log10 MAE%):\n{}",
+        ascii_scatter(
+            &[
+                ("evolved", '.', evolved),
+                ("baseline (trunc/BAM)", 'o', baseline),
+                ("pareto", '*', selected),
+            ],
+            72,
+            20,
+            "power µW",
+            "log10 MAE%"
+        )
+    );
+
+    // 5. the §IV selection and persistence
+    let sel = select_diverse(&lib, f, &SELECTION_METRICS, 10);
+    println!("selected {} diverse multipliers (paper: 35)", sel.len());
+    lib.save("library.json")?;
+    println!("library saved to library.json ({} entries)", lib.len());
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Quickstart: evolve an approximate 8-bit multiplier with CGP, inspect its
+//! error metrics and power, and build its 256×256 product LUT — the whole
+//! §II–§III flow in ~40 lines of library calls.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use evoapproxlib::cgp::{evolve, Evaluator, EvolveConfig, Metric};
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::generators::wallace_multiplier;
+use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::library::{Entry, Origin};
+use evoapproxlib::resilience::lut_for_entry;
+
+fn main() -> anyhow::Result<()> {
+    let f = ArithFn::Mul { w: 8 };
+    let model = CostModel::default();
+
+    // 1. seed CGP with the conventional (exact) Wallace multiplier
+    let seed = wallace_multiplier(8);
+    println!(
+        "seed: {} — {} gates, {:.1} µm²",
+        seed.name,
+        seed.active_gate_count(),
+        model.weighted_area(&seed)
+    );
+
+    // 2. evolve: minimise area subject to WCE ≤ 0.5 % of the output range
+    let cfg = EvolveConfig {
+        metric: Metric::Wce,
+        e_max: 0.005 * 65535.0,
+        generations: 4_000,
+        lambda: 4,
+        h: 5,
+        seed: 42,
+        slack: 16,
+        ..Default::default()
+    };
+    let mut evaluator = Evaluator::exhaustive(f);
+    let t0 = std::time::Instant::now();
+    let report = evolve(&seed, f, &cfg, &model, &mut evaluator);
+    println!(
+        "evolved for {} generations in {:.1?} ({} candidate evaluations)",
+        cfg.generations,
+        t0.elapsed(),
+        report.evaluations
+    );
+
+    // 3. characterise the best circuit: all six error metrics + power
+    let best = report.best.expect("seed is always valid");
+    let entry = Entry::characterise(
+        best.decode("best").compact(),
+        f,
+        &model,
+        Origin::Evolved {
+            metric: "WCE".into(),
+            e_max_permille: (cfg.e_max * 1000.0) as u64,
+            seed: cfg.seed,
+        },
+    );
+    let exact = Entry::characterise(seed, f, &model, Origin::Seed("wallace".into()));
+    println!(
+        "\n{}: {} gates (exact: {})",
+        entry.id, entry.cost.gates, exact.cost.gates
+    );
+    println!(
+        "  power {:.2} µW = {:.1} % of exact",
+        entry.cost.power_uw,
+        entry.cost.relative_power(&exact.cost)
+    );
+    println!(
+        "  MAE {:.4}%  WCE {:.3}%  MRE {:.3}%  ER {:.1}%  (of 2¹⁶−1)",
+        entry.rel.mae_pct, entry.rel.wce_pct, entry.rel.mre_pct, entry.rel.er_pct
+    );
+
+    // 4. the harvest: every non-dominated (error, cost) point seen en route
+    println!("\nharvested {} Pareto points:", report.harvest.len());
+    for h in report.harvest.iter().take(8) {
+        println!(
+            "  gen {:>6}: WCE {:>8.1} LSB, cost {:>7.2} µm²",
+            h.generation, h.error, h.cost
+        );
+    }
+
+    // 5. build the TFApprox-style LUT — ready for the DNN accelerator
+    let lut = lut_for_entry(&entry)?;
+    println!(
+        "\nLUT built: {} entries; e.g. 100×200 → {} (exact 20000)",
+        lut.len(),
+        lut[100 * 256 + 200]
+    );
+    Ok(())
+}

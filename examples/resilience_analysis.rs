@@ -1,0 +1,170 @@
+//! END-TO-END DRIVER (recorded in EXPERIMENTS.md): the paper's full §IV
+//! case study on a real workload, exercising every layer of the stack:
+//!
+//!   1. CGP evolves approximate 8-bit multipliers in Rust (L3 substrate);
+//!   2. the library selects Pareto-diverse circuits + Table II baselines;
+//!   3. each circuit is exhaustively simulated into a product LUT;
+//!   4. the coordinator feeds LUT + the canonical test set into the
+//!      AOT-compiled quantised ResNet graphs (Pallas/JAX → HLO → PJRT);
+//!   5. per-layer (Fig. 4) and whole-network (Table II) resilience reports
+//!      come back with accuracy vs multiplier-power trade-offs.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example resilience_analysis [-- --quick]`
+
+use std::time::Instant;
+
+use evoapproxlib::cgp::metrics::SELECTION_METRICS;
+use evoapproxlib::circuit::baselines::table2_baselines;
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::generators::wallace_multiplier;
+use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, KernelKind};
+use evoapproxlib::library::{
+    run_campaign, select_diverse, CampaignConfig, Entry, Library, Origin,
+};
+use evoapproxlib::resilience::{
+    per_layer_campaign, whole_network_campaign, MultiplierSummary,
+};
+use evoapproxlib::util::table::TextTable;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let artifacts = std::env::var("EVOAPPROX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let model = CostModel::default();
+    let f = ArithFn::Mul { w: 8 };
+    let t_all = Instant::now();
+
+    // ---- 1. evolve a multiplier library (scaled campaign) ----------------
+    let mut lib = Library::new();
+    let mut cfg = CampaignConfig::quick(f);
+    cfg.generations = if quick { 600 } else { 4_000 };
+    cfg.targets_per_metric = if quick { 2 } else { 4 };
+    let t0 = Instant::now();
+    let added = run_campaign(&mut lib, &cfg, &model, None);
+    println!(
+        "[1] CGP campaign: {added} evolved entries in {:.1?}",
+        t0.elapsed()
+    );
+
+    // ---- 2. select diverse multipliers + baselines -----------------------
+    let selected: Vec<Entry> = select_diverse(&lib, f, &SELECTION_METRICS, 10)
+        .into_iter()
+        .cloned()
+        .collect();
+    let exact = Entry::characterise(
+        wallace_multiplier(8),
+        f,
+        &model,
+        Origin::Seed("wallace".into()),
+    );
+    let mut mults = vec![MultiplierSummary::from_entry(&exact, &exact.cost)?];
+    for e in &selected {
+        if e.metrics.er > 0.0 {
+            mults.push(MultiplierSummary::from_entry(e, &exact.cost)?);
+        }
+    }
+    for n in table2_baselines() {
+        let origin = if let Some(k) = n.name.strip_prefix("mul8u_trunc") {
+            Origin::Truncated { keep: k.parse()? }
+        } else {
+            let h = n.name.split("_h").nth(1).unwrap().split('_').next().unwrap();
+            let v = n.name.split("_v").nth(1).unwrap();
+            Origin::Bam {
+                h: h.parse()?,
+                v: v.parse()?,
+            }
+        };
+        let e = Entry::characterise(n, f, &model, origin);
+        mults.push(MultiplierSummary::from_entry(&e, &exact.cost)?);
+    }
+    if quick {
+        mults.truncate(6);
+    }
+    println!(
+        "[2] analysis set: {} multipliers ({} evolved + baselines)",
+        mults.len(),
+        selected.len()
+    );
+
+    // ---- 3+4. coordinator + campaigns ------------------------------------
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&artifacts))?;
+    let testset = coord.manifest().load_testset(&artifacts)?;
+    let testset = testset.truncated(if quick { 96 } else { 256 });
+    println!(
+        "[3] coordinator up: {} models, evaluating {} images",
+        coord.manifest().models.len(),
+        testset.n
+    );
+
+    let t0 = Instant::now();
+    let fig4 = per_layer_campaign(&coord, "resnet8", &mults, &testset, KernelKind::Jnp)?;
+    println!(
+        "[4] Fig.4 per-layer campaign: {} points in {:.1?} (reference acc {:.3})",
+        fig4.points.len(),
+        t0.elapsed(),
+        fig4.reference_accuracy
+    );
+    // the paper's headline observation: rank layers by how much power you
+    // save per accuracy lost
+    let mut best: Vec<&evoapproxlib::resilience::Fig4Point> = fig4
+        .points
+        .iter()
+        .filter(|p| p.accuracy_drop < 0.02 && p.power_drop_pct > 0.0)
+        .collect();
+    best.sort_by(|a, b| b.power_drop_pct.partial_cmp(&a.power_drop_pct).unwrap());
+    println!("    best ≤2%-drop points (power saved, layer):");
+    for p in best.iter().take(5) {
+        println!(
+            "      {:>5.2}% power saved — layer {} ({}, {:.1}% of mults) via {}",
+            p.power_drop_pct,
+            p.layer,
+            p.layer_label,
+            p.layer_fraction * 100.0,
+            p.multiplier
+        );
+    }
+
+    let models: Vec<String> = if quick {
+        vec!["resnet8".into(), "resnet14".into()]
+    } else {
+        coord
+            .manifest()
+            .models
+            .iter()
+            .map(|m| m.name.clone())
+            .collect()
+    };
+    let t0 = Instant::now();
+    let table2 = whole_network_campaign(&coord, &models, &mults[1..], &testset, KernelKind::Jnp)?;
+    println!("[5] Table II campaign in {:.1?}:", t0.elapsed());
+    let mut header = vec!["Multiplier".to_string(), "Power%".into(), "MAE%".into()];
+    header.extend(models.iter().cloned());
+    let hrefs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = TextTable::new(&hrefs);
+    let mut row = vec!["8 bit (exact)".to_string(), "100.0".into(), "0".into()];
+    row.extend(table2.exact_row.iter().map(|(_, a)| format!("{:.3}", a)));
+    t.row(row);
+    for r in &table2.rows {
+        let mut row = vec![
+            r.multiplier.label.clone(),
+            format!("{:.1}", r.multiplier.rel_power_pct),
+            format!("{:.4}", r.multiplier.mae_pct),
+        ];
+        row.extend(r.accuracies.iter().map(|(_, a)| format!("{:.3}", a)));
+        t.row(row);
+    }
+    print!("{}", t.render());
+
+    let m = coord.metrics();
+    println!(
+        "\n[6] coordinator metrics: {} jobs, {} images, {} batches, mean exec {:.1} ms",
+        m.jobs,
+        m.images,
+        m.batches,
+        m.execute_mean_us / 1000.0
+    );
+    println!("total wall time {:.1?}", t_all.elapsed());
+    coord.shutdown();
+    Ok(())
+}

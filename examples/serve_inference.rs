@@ -1,0 +1,115 @@
+//! Serving example: classify a stream of single-image requests through the
+//! dynamic batcher in front of the PJRT executor — the accelerator "in
+//! production" with an approximate multiplier installed, reporting
+//! latency/throughput and the power the approximation buys.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example serve_inference [-- --quick]`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use evoapproxlib::circuit::baselines::truncated_multiplier;
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::generators::wallace_multiplier;
+use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::coordinator::batcher::{BatchPolicy, Batcher};
+use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, KernelKind};
+use evoapproxlib::library::{Entry, Origin};
+use evoapproxlib::resilience::lut_for_entry;
+use evoapproxlib::runtime::broadcast_lut;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let artifacts = std::env::var("EVOAPPROX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let n_requests: usize = if quick { 128 } else { 512 };
+
+    // choose the deployed multiplier: truncated-7-bit (a mild approximation)
+    let model = CostModel::default();
+    let f = ArithFn::Mul { w: 8 };
+    let exact = Entry::characterise(
+        wallace_multiplier(8),
+        f,
+        &model,
+        Origin::Seed("wallace".into()),
+    );
+    let approx = Entry::characterise(
+        truncated_multiplier(8, 7),
+        f,
+        &model,
+        Origin::Truncated { keep: 7 },
+    );
+    println!(
+        "deploying {} — {:.1}% of exact multiplier power",
+        approx.origin.label(),
+        approx.cost.relative_power(&exact.cost)
+    );
+
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&artifacts))?;
+    let model_name = "resnet8";
+    coord.warm(model_name, KernelKind::Jnp)?;
+    let n_layers = coord
+        .manifest()
+        .model(model_name)
+        .expect("resnet8 in manifest")
+        .n_conv_layers;
+    let luts = Arc::new(broadcast_lut(&lut_for_entry(&approx)?, n_layers));
+
+    let (batcher, guard) = Batcher::spawn(
+        coord.clone(),
+        model_name,
+        KernelKind::Jnp,
+        luts,
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(10),
+        },
+    )?;
+
+    // request stream from the workload generator (open-loop burst)
+    let testset = coord.manifest().load_testset(&artifacts)?;
+    let il = testset.image_len;
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    let mut latencies = Vec::with_capacity(n_requests);
+    for k in 0..n_requests {
+        let idx = k % testset.n;
+        let img = testset.images[idx * il..(idx + 1) * il].to_vec();
+        pending.push((k, Instant::now(), batcher.classify_async(img)?));
+    }
+    let mut correct = 0usize;
+    for (k, submitted, rx) in pending {
+        let pred = rx.recv()??;
+        latencies.push(submitted.elapsed());
+        if pred == testset.labels[k % testset.n] {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    drop(batcher);
+    let stats = guard.join();
+
+    latencies.sort();
+    println!(
+        "served {n_requests} requests in {wall:.2?} — {:.1} req/s",
+        n_requests as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency p50 {:?}  p95 {:?}  p99 {:?}",
+        latencies[latencies.len() / 2],
+        latencies[latencies.len() * 95 / 100],
+        latencies[latencies.len().saturating_sub(1).min(latencies.len() * 99 / 100)],
+    );
+    println!(
+        "accuracy under approximation: {:.3} (golden: {:.3})",
+        correct as f64 / n_requests as f64,
+        coord.manifest().model(model_name).unwrap().q8_acc
+    );
+    println!(
+        "batcher: {} batches ({} full), mean occupancy {:.2}",
+        stats.batches, stats.full_batches, stats.mean_occupancy
+    );
+    println!("{:#?}", coord.metrics());
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,170 @@
+"""AOT build path: train → fold/quantise → lower to HLO text → export.
+
+Runs ONCE under ``make artifacts``; Python never executes at analysis time.
+Outputs in ``--out-dir`` (default ``../artifacts``):
+
+* ``resnet{D}_b{B}.hlo.txt`` — quantised LUT-conv inference graphs
+  (runtime inputs: images ``f32[B,16,16,3]``, luts ``i32[L,65536]``; all
+  weights/scales are baked constants). HLO *text* interchange — the image's
+  xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit ids), see
+  /opt/xla-example/README.md.
+* ``resnet8_b{B}_pallas.hlo.txt`` — same graph routed through the L1 Pallas
+  kernel (interpret-lowered) for the kernel-path artifact + §Perf compare.
+* ``test_images.f32`` / ``test_labels.u8`` — the canonical evaluation split.
+* ``manifest.json`` — model inventory: per-layer (stage, block, conv,
+  n_mults) for the accelerator power model, float/q8 golden accuracies,
+  artifact paths, shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import model as M
+from . import train as T
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring).
+
+    ``as_hlo_text(True)`` = print_large_constants: the default printer
+    ELIDES big literals as ``constant({...})`` and the text parser then
+    silently fabricates values — the baked weight tensors MUST be printed
+    in full for the Rust round-trip to be faithful.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def lower_model(qmodel, spec, batch: int, use_pallas: bool) -> str:
+    n_layers = len(spec["conv_layers"])
+    fn = M.make_inference_fn(qmodel, spec, use_pallas)
+    img = jax.ShapeDtypeStruct((batch, D.IMAGE_SIZE, D.IMAGE_SIZE, 3), jnp.float32)
+    luts = jax.ShapeDtypeStruct((n_layers, 256 * 256), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(img, luts))
+
+
+def evaluate_quant(qmodel, spec, data, use_pallas=False, batch=128):
+    """Golden-LUT (exact 8-bit multiplier) accuracy of the quantised graph —
+    the paper's "8-bit exact" baseline column."""
+    images, labels = data
+    luts = M.exact_luts(len(spec["conv_layers"]))
+    fwd = jax.jit(lambda x: M.forward_quant(qmodel, spec, x, luts, use_pallas))
+    correct = 0
+    for i in range(0, images.shape[0], batch):
+        logits = fwd(jnp.asarray(images[i:i + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, -1)
+                               == jnp.asarray(labels[i:i + batch].astype(np.int32))))
+    return correct / images.shape[0]
+
+
+def build(args) -> None:
+    os.makedirs(args.out_dir, exist_ok=True)
+    depths = [int(d) for d in args.depths.split(",")]
+    t_all = time.time()
+    print(f"[aot] dataset: train={args.n_train} calib={args.n_calib} "
+          f"test={args.n_test}", flush=True)
+    train_data, calib_data, test_data = D.canonical_splits(
+        args.n_train, args.n_calib, args.n_test)
+
+    # canonical evaluation split for the Rust side
+    test_images, test_labels = test_data
+    test_images.astype("<f4").tofile(os.path.join(args.out_dir, "test_images.f32"))
+    test_labels.astype(np.uint8).tofile(os.path.join(args.out_dir, "test_labels.u8"))
+
+    models = []
+    for depth in depths:
+        print(f"[aot] training resnet{depth} (width {args.width}, "
+              f"≤{args.steps} steps)", flush=True)
+        params, state, spec, history = T.train_model(
+            depth, args.width, train_data, steps=args.steps,
+            batch=args.batch_train, seed=args.seed)
+        float_acc = T.evaluate_float(params, state, spec, test_data)
+        acts = T.calibration_activations(params, state, spec, calib_data)
+        folded, dense = M.fold_bn(params, state, spec)
+        qmodel = M.quantize_model(folded, dense, spec, acts)
+        q8_acc = evaluate_quant(qmodel, spec, test_data)
+        print(f"[aot] resnet{depth}: float acc {float_acc:.4f}, "
+              f"8-bit exact acc {q8_acc:.4f}", flush=True)
+
+        entries = [(args.batch, False)]
+        if depth == depths[0]:
+            entries += [(1, False), (args.batch, True)]
+        arts = []
+        for batch, use_pallas in entries:
+            suffix = "_pallas" if use_pallas else ""
+            name = f"resnet{depth}_b{batch}{suffix}.hlo.txt"
+            t0 = time.time()
+            hlo = lower_model(qmodel, spec, batch, use_pallas)
+            with open(os.path.join(args.out_dir, name), "w") as f:
+                f.write(hlo)
+            print(f"[aot]   wrote {name} ({len(hlo)/1e6:.1f} MB, "
+                  f"{time.time()-t0:.1f}s)", flush=True)
+            arts.append(dict(path=name, batch=batch,
+                             kernel="pallas" if use_pallas else "jnp"))
+
+        counts = M.layer_mult_counts(spec, D.IMAGE_SIZE)
+        layers = [
+            dict(index=i, stage=c["stage"], block=c["block"], conv=c["conv"],
+                 cin=c["cin"], cout=c["cout"], stride=c["stride"],
+                 n_mults=counts[i])
+            for i, c in enumerate(spec["conv_layers"])
+        ]
+        models.append(dict(
+            name=f"resnet{depth}", depth=depth, width=args.width,
+            n_conv_layers=len(spec["conv_layers"]),
+            float_acc=float_acc, q8_acc=q8_acc,
+            artifacts=arts, layers=layers,
+            train_steps=history[-1]["step"] + 1 if history else 0,
+        ))
+
+    manifest = dict(
+        format="evoapprox-artifacts-v1",
+        image=[D.IMAGE_SIZE, D.IMAGE_SIZE, 3],
+        n_classes=D.N_CLASSES,
+        seed=args.seed,
+        testset=dict(images="test_images.f32", labels="test_labels.u8",
+                     n=int(test_labels.shape[0])),
+        models=models,
+    )
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] done in {time.time()-t_all:.0f}s — manifest with "
+          f"{len(models)} models", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--depths", default=os.environ.get(
+        "AOT_DEPTHS", "8,14,20,26,32,38,44,50"))
+    ap.add_argument("--width", type=int,
+                    default=int(os.environ.get("AOT_WIDTH", "8")))
+    ap.add_argument("--steps", type=int,
+                    default=int(os.environ.get("AOT_STEPS", "900")))
+    ap.add_argument("--batch", type=int, default=64,
+                    help="batch size of the main inference artifacts")
+    ap.add_argument("--batch-train", type=int, default=64)
+    ap.add_argument("--n-train", type=int,
+                    default=int(os.environ.get("AOT_NTRAIN", "4000")))
+    ap.add_argument("--n-calib", type=int, default=256)
+    ap.add_argument("--n-test", type=int,
+                    default=int(os.environ.get("AOT_NTEST", "512")))
+    ap.add_argument("--seed", type=int, default=0)
+    build(ap.parse_args())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""L1 — Pallas LUT-gather matmul kernel (the compute hot-spot).
+
+TPU mapping of TFApprox's CUDA kernel (DESIGN.md §3 Hardware-Adaptation):
+
+* the 256x256 i32 product LUT (256 KiB) gets its own ``BlockSpec`` with a
+  constant index map — it is staged HBM→VMEM once and reused by every grid
+  step (CUDA staged it per threadblock in shared memory);
+* an arbitrary LUT breaks MXU bilinearity, so the kernel targets the VPU
+  with a vectorised gather; tiles are sized for VPU lanes (N multiples of
+  128 on hardware — smaller here so tests stay fast under interpret mode);
+* the grid is (M-tiles, N-tiles, K-tiles) with K innermost and an i32
+  accumulator block revisited across K steps, so partial sums never touch
+  HBM (CUDA used a threadblock-resident accumulator).
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; on-TPU numbers are estimated from the VMEM/roofline model in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LUT_SIZE = 256 * 256
+
+# Default tile sizes (perf-tuned in EXPERIMENTS.md §Perf; VMEM budget
+# per grid step = LUT (256 KiB) + BM*BK + BK*BN + BM*BK*BN gathers + BM*BN
+# accumulator, all i32).
+BM, BK, BN = 64, 32, 32
+
+
+def _lut_matmul_kernel(p_ref, w_ref, lut_ref, o_ref):
+    """One (BM, BN) output tile, accumulating one (BK,) slice of K."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    p = p_ref[...].astype(jnp.int32)  # [BM, BK]
+    w = w_ref[...].astype(jnp.int32)  # [BK, BN]
+    lut = lut_ref[...]  # [65536]
+    idx = p[:, :, None] * 256 + w[None, :, :]  # [BM, BK, BN]
+    prod = jnp.take(lut, idx.reshape(-1), axis=0).reshape(idx.shape)
+    o_ref[...] += prod.sum(axis=1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def lut_matmul_pallas(p, w, lut, *, bm: int = BM, bk: int = BK, bn: int = BN):
+    """``S[m, n] = sum_k lut[p[m, k] * 256 + w[k, n]]`` via Pallas.
+
+    Shapes must tile evenly: ``M % bm == K % bk == N % bn == 0`` (callers
+    pad codes with zeros and weights with zeros; ``lut[0] == 0`` for any
+    multiplier whose 0*0 is exact, which holds for every library entry by
+    construction of the zero row/column test in the Rust side).
+    """
+    m, k = p.shape
+    k2, n = w.shape
+    assert k == k2, (p.shape, w.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _lut_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            # whole LUT resident for every step: constant index map
+            pl.BlockSpec((LUT_SIZE,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(p.astype(jnp.int32), w.astype(jnp.int32), lut.astype(jnp.int32))
+
+
+def pad_to_multiple(x, axis: int, multiple: int, value=0):
+    """Pad ``x`` along ``axis`` up to the next multiple (for tile evenness)."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x, size
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value), size
+
+
+def lut_matmul(p, w, lut, *, use_pallas: bool, bm: int = BM, bk: int = BK, bn: int = BN):
+    """Tile-padding front-end: dispatches to the Pallas kernel or the oracle.
+
+    Padding scheme: P rows pad with code 0, W columns pad with code 0 and
+    the shared K axis pads BOTH with code 0, contributing ``lut[0]`` per
+    padded k — subtracted exactly afterwards.
+    """
+    from . import ref
+
+    if not use_pallas:
+        return ref.lut_matmul_ref(p.astype(jnp.int32), w.astype(jnp.int32), lut)
+    m0, k0 = p.shape
+    _, n0 = w.shape
+    p_pad, _ = pad_to_multiple(p, 0, bm)
+    p_pad, _ = pad_to_multiple(p_pad, 1, bk)
+    w_pad, _ = pad_to_multiple(w, 0, bk)
+    w_pad, _ = pad_to_multiple(w_pad, 1, bn)
+    s = lut_matmul_pallas(p_pad, w_pad, lut, bm=bm, bk=bk, bn=bn)
+    s = s[:m0, :n0]
+    k_pad = p_pad.shape[1] - k0
+    if k_pad:
+        # padded K positions contributed lut[0] each
+        s = s - lut[0] * k_pad
+    return s

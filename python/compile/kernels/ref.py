@@ -1,0 +1,101 @@
+"""Pure-jnp oracle for the LUT-multiplier kernels (L1 correctness anchor).
+
+Semantics (TFApprox-equivalent): operands are uint8 *codes*; every scalar
+product ``a*w`` inside a matmul/convolution is replaced by ``lut[a*256+w]``,
+where ``lut`` is the exhaustive 256x256 product table of an (approximate)
+8-bit multiplier. With the exact product table this reduces to ordinary
+integer arithmetic, which is what the tests pin down.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+LUT_SIZE = 256 * 256
+
+
+def lut_matmul_ref(p, w, lut):
+    """``S[m, n] = sum_k lut[p[m, k] * 256 + w[k, n]]``.
+
+    Args:
+      p: ``[M, K]`` int32 codes in [0, 256).
+      w: ``[K, N]`` int32 codes in [0, 256).
+      lut: ``[65536]`` int32 product table.
+
+    Returns:
+      ``[M, N]`` int32 accumulator.
+    """
+    idx = p[:, :, None] * 256 + w[None, :, :]  # [M, K, N]
+    return jnp.take(lut, idx, axis=0).sum(axis=1, dtype=jnp.int32)
+
+
+def exact_lut():
+    """The exact 8-bit product table (the paper's golden multiplier)."""
+    a = jnp.arange(256, dtype=jnp.int32)
+    return (a[:, None] * a[None, :]).reshape(-1)
+
+
+def im2col(x, kh: int, kw: int, stride: int):
+    """Extract conv patches: ``[B, H, W, C] -> [B, Ho, Wo, kh*kw*C]``.
+
+    SAME padding with zeros; zero maps to quantisation code ``z_a`` at the
+    caller (padding is applied on *codes*, so callers pad with ``z_a``).
+    """
+    b, h, w_, c = x.shape
+    patches = lax.conv_general_dilated_patches(
+        x.astype(jnp.float32),
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # conv_general_dilated_patches returns channel-major patch features
+    # [B, Ho, Wo, C*kh*kw]; reorder to (kh, kw, C) patch layout to match
+    # weight layout [kh, kw, C, O].
+    bo, ho, wo, _ = patches.shape
+    patches = patches.reshape(bo, ho, wo, c, kh * kw)
+    patches = jnp.moveaxis(patches, 3, 4).reshape(bo, ho, wo, kh * kw * c)
+    return patches
+
+
+def approx_conv2d_ref(x_codes, w_codes, lut, stride: int, z_a: int):
+    """Approximate 2-D convolution on uint8 codes via the LUT.
+
+    Args:
+      x_codes: ``[B, H, W, C]`` int32 activation codes.
+      w_codes: ``[kh, kw, C, O]`` int32 weight codes.
+      lut: ``[65536]`` int32 product table.
+      stride: spatial stride (SAME padding).
+      z_a: activation zero-point — used as the padding code.
+
+    Returns:
+      ``[B, Ho, Wo, O]`` int32 accumulator ``S`` plus the per-position sum of
+      activation codes (needed for zero-point correction), as a tuple.
+    """
+    kh, kw, c, o = w_codes.shape
+    # pad with z_a so padded positions behave like dequantised zeros
+    x_shift = x_codes - z_a
+    patches = im2col(x_shift, kh, kw, stride)  # zero-padded shifted codes
+    patches = (patches + z_a).astype(jnp.int32)  # restore codes; pads = z_a
+    b, ho, wo, k = patches.shape
+    p2 = patches.reshape(b * ho * wo, k)
+    w2 = w_codes.reshape(k, o).astype(jnp.int32)
+    s = lut_matmul_ref(p2, w2, lut).reshape(b, ho, wo, o)
+    a_sum = p2.sum(axis=1, dtype=jnp.int32).reshape(b, ho, wo, 1)
+    return s, a_sum
+
+
+def dequantize_acc(s, a_sum, w_sum, k, s_a, z_a, s_w, z_w):
+    """Zero-point-corrected dequantisation of a LUT-matmul accumulator.
+
+    ``y = s_a * s_w * (S - z_w * sum_a - z_a * sum_w + K * z_a * z_w)``
+    — exact when the LUT is the exact product table.
+    """
+    corr = (
+        s.astype(jnp.float32)
+        - jnp.float32(z_w) * a_sum.astype(jnp.float32)
+        - jnp.float32(z_a) * w_sum.astype(jnp.float32)
+        + jnp.float32(k) * jnp.float32(z_a) * jnp.float32(z_w)
+    )
+    return jnp.float32(s_a) * jnp.float32(s_w) * corr

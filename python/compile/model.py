@@ -1,0 +1,298 @@
+"""L2 — the ResNet family (He et al., CIFAR variant: depth = 6n+2) in JAX.
+
+Two forward paths share one architecture description:
+
+* ``forward_float`` — float32 training/eval path (conv + batch-norm + ReLU,
+  option-A parameter-free shortcuts, global average pool, dense head). Used
+  by ``train.py``; never shipped.
+* ``forward_quant`` — the AOT-exported inference path: batch-norm is folded
+  into the convolutions, every convolution runs on uint8 codes through the
+  LUT-multiplier kernel (L1), with per-layer LUTs passed as a runtime input
+  ``luts[L, 65536]``. Swapping an approximate multiplier therefore needs NO
+  recompilation — the Rust coordinator just feeds a different LUT row.
+
+The paper's ResNet-8 has 7 conv layers (stem + 3 stages x 1 block x 2
+convs); Fig. 4 labels them (S, R, C). We track those labels per layer and
+export them in the manifest together with per-layer multiplication counts
+(the basis of the accelerator power model, `rust/src/accel`).
+
+Quantisation follows TFApprox: asymmetric uint8 fake-quant at every conv
+boundary; accumulators are corrected with exact-multiplier zero-point
+algebra (exact when the LUT is the exact product table — pinned by tests).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref as kref
+from .kernels.approx_conv import lut_matmul
+
+N_CLASSES = 10
+STAGE_WIDTH_MULTS = (1, 2, 4)
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+SUPPORTED_DEPTHS = (8, 14, 20, 26, 32, 38, 44, 50)
+
+
+# --------------------------------------------------------------------------
+# architecture description
+# --------------------------------------------------------------------------
+
+def resnet_spec(depth: int, width: int = 8):
+    """Layer plan for a 6n+2 ResNet.
+
+    Returns a dict with ``conv_layers``: execution-ordered conv descriptors
+    ``{cin, cout, stride, stage, block, conv}`` (stage 0 = stem), and the
+    block structure used by the forward passes.
+    """
+    assert (depth - 2) % 6 == 0, f"depth {depth} is not 6n+2"
+    n = (depth - 2) // 6
+    convs = [dict(cin=3, cout=width, stride=1, stage=0, block=1, conv=1)]
+    blocks = []
+    cin = width
+    for stage in range(3):
+        cout = width * STAGE_WIDTH_MULTS[stage]
+        for block in range(n):
+            stride = 2 if (stage > 0 and block == 0) else 1
+            convs.append(
+                dict(cin=cin, cout=cout, stride=stride,
+                     stage=stage + 1, block=block + 1, conv=1)
+            )
+            convs.append(
+                dict(cin=cout, cout=cout, stride=1,
+                     stage=stage + 1, block=block + 1, conv=2)
+            )
+            blocks.append(dict(stage=stage + 1, block=block + 1,
+                               stride=stride, cin=cin, cout=cout))
+            cin = cout
+    return dict(depth=depth, n=n, width=width, conv_layers=convs,
+                blocks=blocks, feat=cin)
+
+
+def layer_mult_counts(spec, image_size: int = 16):
+    """Multiplications per image for every conv layer (Fig. 4's percentages
+    and the accelerator power model both derive from these counts)."""
+    counts = []
+    size = image_size
+    for i, c in enumerate(spec["conv_layers"]):
+        if i > 0 and c["stride"] == 2:
+            size //= 2
+        counts.append(size * size * 3 * 3 * c["cin"] * c["cout"])
+    return counts
+
+
+# --------------------------------------------------------------------------
+# float path (training)
+# --------------------------------------------------------------------------
+
+def init_params(rng, spec):
+    """He-initialised parameters + batch-norm state."""
+    params, state = [], []
+    keys = jax.random.split(rng, len(spec["conv_layers"]) + 1)
+    for key, c in zip(keys[:-1], spec["conv_layers"]):
+        fan_in = 3 * 3 * c["cin"]
+        w = jax.random.normal(key, (3, 3, c["cin"], c["cout"]),
+                              jnp.float32) * math.sqrt(2.0 / fan_in)
+        params.append(dict(w=w,
+                           gamma=jnp.ones(c["cout"], jnp.float32),
+                           beta=jnp.zeros(c["cout"], jnp.float32)))
+        state.append(dict(mean=jnp.zeros(c["cout"], jnp.float32),
+                          var=jnp.ones(c["cout"], jnp.float32)))
+    feat = spec["feat"]
+    params.append(dict(
+        w=jax.random.normal(keys[-1], (feat, N_CLASSES), jnp.float32)
+        / math.sqrt(feat),
+        b=jnp.zeros(N_CLASSES, jnp.float32),
+    ))
+    return params, state
+
+
+def _conv_f(x, w, stride):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn(x, p, s, train):
+    if train:
+        mean = x.mean(axis=(0, 1, 2))
+        var = x.var(axis=(0, 1, 2))
+        new_s = dict(
+            mean=BN_MOMENTUM * s["mean"] + (1 - BN_MOMENTUM) * mean,
+            var=BN_MOMENTUM * s["var"] + (1 - BN_MOMENTUM) * var,
+        )
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mean) / jnp.sqrt(var + BN_EPS) * p["gamma"] + p["beta"]
+    return y, new_s
+
+
+def _shortcut_a(x, stride, cout):
+    """Option-A parameter-free shortcut: subsample + zero-pad channels."""
+    if stride > 1:
+        x = x[:, ::stride, ::stride, :]
+    cin = x.shape[-1]
+    if cout > cin:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cout - cin)))
+    return x
+
+
+def forward_float(params, state, spec, x, train: bool):
+    """Float forward; returns (logits, new_state, activations) where
+    ``activations[i]`` is the input of conv layer ``i`` (calibration)."""
+    acts = []
+    new_state = list(state)
+    li = 0
+    acts.append(x)
+    h = _conv_f(x, params[0]["w"], 1)
+    h, new_state[0] = _bn(h, params[0], state[0], train)
+    h = jax.nn.relu(h)
+    li = 1
+    for blk in spec["blocks"]:
+        inp = h
+        acts.append(h)
+        h = _conv_f(h, params[li]["w"], blk["stride"])
+        h, new_state[li] = _bn(h, params[li], state[li], train)
+        h = jax.nn.relu(h)
+        li += 1
+        acts.append(h)
+        h = _conv_f(h, params[li]["w"], 1)
+        h, new_state[li] = _bn(h, params[li], state[li], train)
+        li += 1
+        h = jax.nn.relu(h + _shortcut_a(inp, blk["stride"], blk["cout"]))
+    gap = h.mean(axis=(1, 2))
+    logits = gap @ params[-1]["w"] + params[-1]["b"]
+    return logits, new_state, acts
+
+
+# --------------------------------------------------------------------------
+# BN folding + post-training quantisation
+# --------------------------------------------------------------------------
+
+def fold_bn(params, state, spec):
+    """Fold batch norm into conv weight + bias:
+    ``w' = w * g/sqrt(v+eps)``, ``b' = beta - mean * g/sqrt(v+eps)``."""
+    folded = []
+    for p, s, _c in zip(params[:-1], state, spec["conv_layers"]):
+        scale = p["gamma"] / jnp.sqrt(s["var"] + BN_EPS)
+        folded.append(dict(w=p["w"] * scale[None, None, None, :],
+                           b=p["beta"] - s["mean"] * scale))
+    return folded, dict(w=params[-1]["w"], b=params[-1]["b"])
+
+
+def quant_range(x, qmax: int = 255):
+    """Asymmetric uint8 (scale, zero_point) covering [min(x,0), max(x,0)]."""
+    lo = float(np.minimum(np.min(x), 0.0))
+    hi = float(np.maximum(np.max(x), 0.0))
+    if hi - lo < 1e-12:
+        return 1.0, 0
+    scale = (hi - lo) / qmax
+    zp = int(round(-lo / scale))
+    return scale, int(np.clip(zp, 0, qmax))
+
+
+def quantize_codes(x, scale, zp, qmax: int = 255):
+    return np.clip(np.round(np.asarray(x) / scale) + zp, 0, qmax).astype(np.int32)
+
+
+def quantize_model(folded, dense, spec, calib_acts):
+    """Post-training quantisation: per-layer weight codes + activation
+    (scale, zp) from float-model calibration activations."""
+    qlayers = []
+    for p, act, c in zip(folded, calib_acts, spec["conv_layers"]):
+        s_w, z_w = quant_range(np.asarray(p["w"]))
+        w_q = quantize_codes(p["w"], s_w, z_w)
+        s_a, z_a = quant_range(np.asarray(act))
+        qlayers.append(dict(
+            w_q=w_q, s_w=s_w, z_w=z_w, s_a=s_a, z_a=z_a,
+            b=np.asarray(p["b"], np.float32), stride=c["stride"],
+        ))
+    return dict(layers=qlayers,
+                dense_w=np.asarray(dense["w"], np.float32),
+                dense_b=np.asarray(dense["b"], np.float32))
+
+
+# --------------------------------------------------------------------------
+# quantised LUT forward (the AOT-exported graph)
+# --------------------------------------------------------------------------
+
+def _approx_conv_q(h_float, q, lut, use_pallas):
+    """Fake-quant boundary + LUT conv + dequant for one layer.
+
+    ``h_float``: float input activations; quantised with the layer's
+    calibrated (s_a, z_a); weights are pre-quantised codes.
+    """
+    s_a, z_a, s_w, z_w = q["s_a"], q["z_a"], q["s_w"], q["z_w"]
+    codes = jnp.clip(jnp.round(h_float / s_a) + z_a, 0, 255).astype(jnp.int32)
+    kh, kw, cin, cout = q["w_q"].shape
+    stride = q["stride"]
+    # im2col on zero-shifted codes so SAME padding contributes z_a codes
+    patches = kref.im2col((codes - z_a).astype(jnp.float32), kh, kw, stride)
+    patches = (patches.astype(jnp.int32) + z_a)
+    b, ho, wo, k = patches.shape
+    p2 = patches.reshape(b * ho * wo, k)
+    w2 = jnp.asarray(q["w_q"]).reshape(k, cout)
+    s = lut_matmul(p2, w2, lut, use_pallas=use_pallas)
+    a_sum = p2.sum(axis=1, dtype=jnp.int32)[:, None]
+    w_sum = w2.sum(axis=0, dtype=jnp.int32)[None, :]
+    y = kref.dequantize_acc(s, a_sum, w_sum, k, s_a, z_a, s_w, z_w)
+    y = y.reshape(b, ho, wo, cout) + jnp.asarray(q["b"])
+    return y
+
+
+def forward_quant(qmodel, spec, x, luts, use_pallas: bool = False):
+    """Quantised inference: ``luts[i]`` is conv layer ``i``'s product table.
+
+    Args:
+      qmodel: output of :func:`quantize_model` (weights become constants in
+        the lowered graph).
+      x: ``[B, H, W, 3]`` float32 images in [0, 1].
+      luts: ``[L, 65536]`` int32 — one LUT row per conv layer.
+      use_pallas: route the matmuls through the Pallas kernel (L1) instead
+        of the pure-jnp oracle formulation (same semantics).
+
+    Returns:
+      ``[B, 10]`` float32 logits.
+    """
+    qs = qmodel["layers"]
+    h = _approx_conv_q(x, qs[0], luts[0], use_pallas)
+    h = jax.nn.relu(h)
+    li = 1
+    for blk in spec["blocks"]:
+        inp = h
+        h = _approx_conv_q(h, qs[li], luts[li], use_pallas)
+        h = jax.nn.relu(h)
+        li += 1
+        h = _approx_conv_q(h, qs[li], luts[li], use_pallas)
+        li += 1
+        h = jax.nn.relu(h + _shortcut_a(inp, blk["stride"], blk["cout"]))
+    gap = h.mean(axis=(1, 2))
+    return gap @ jnp.asarray(qmodel["dense_w"]) + jnp.asarray(qmodel["dense_b"])
+
+
+def make_inference_fn(qmodel, spec, use_pallas: bool = False):
+    """The function that gets AOT-lowered: (images, luts) -> (logits,)."""
+    def fn(images, luts):
+        return (forward_quant(qmodel, spec, images, luts, use_pallas),)
+    return fn
+
+
+# --------------------------------------------------------------------------
+# helpers shared with train/aot
+# --------------------------------------------------------------------------
+
+def accuracy(logits, labels):
+    return float(jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32)))
+
+
+def exact_luts(n_layers: int):
+    """[L, 65536] exact product tables (the golden 8-bit multiplier)."""
+    return jnp.broadcast_to(kref.exact_lut()[None, :], (n_layers, 256 * 256))

@@ -1,0 +1,108 @@
+"""Float training of the ResNet family on the synthetic dataset.
+
+Build-time only (invoked by ``aot.py`` under ``make artifacts``). Hand-rolled
+Adam + cosine schedule (the environment ships no optax); single-core CPU
+budgets are deliberate: the networks are narrow (width 8) and images small
+(16x16), see DESIGN.md §4 scaling notes.
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return dict(m=zeros, v=jax.tree_util.tree_map(jnp.zeros_like, params), t=0)
+
+
+def adam_update(params, grads, opt, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v)
+    return new_params, dict(m=m, v=v, t=t)
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def train_model(depth: int, width: int, train_data, steps: int = 1200,
+                batch: int = 64, base_lr: float = 3e-3, seed: int = 0,
+                log_every: int = 200, target_acc: float = 0.995):
+    """Train one ResNet; returns (params, state, spec, history)."""
+    spec = M.resnet_spec(depth, width)
+    images, labels = train_data
+    n = images.shape[0]
+    rng = jax.random.PRNGKey(seed + depth)
+    params, state = M.init_params(rng, spec)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, state, opt, x, y, lr):
+        def loss_fn(p):
+            logits, new_state, _ = M.forward_float(p, state, spec, x, True)
+            return cross_entropy(logits, y), (logits, new_state)
+        (loss, (logits, new_state)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        return params, new_state, opt, loss, acc
+
+    perm_rng = np.random.default_rng(seed + depth)
+    history = []
+    t0 = time.time()
+    smooth_acc = 0.0
+    for step in range(steps):
+        idx = perm_rng.integers(0, n, size=batch)
+        x = jnp.asarray(images[idx])
+        y = jnp.asarray(labels[idx].astype(np.int32))
+        lr = base_lr * 0.5 * (1 + np.cos(np.pi * step / steps))
+        params, state, opt, loss, acc = step_fn(params, state, opt, x, y, lr)
+        smooth_acc = 0.95 * smooth_acc + 0.05 * float(acc)
+        if step % log_every == 0 or step == steps - 1:
+            history.append(dict(step=step, loss=float(loss), acc=float(acc),
+                                wall=time.time() - t0))
+            print(f"  resnet{depth} step {step:5d} loss {float(loss):.4f} "
+                  f"acc {float(acc):.3f} ({time.time()-t0:.1f}s)", flush=True)
+        if smooth_acc > target_acc and step > steps // 4:
+            history.append(dict(step=step, loss=float(loss), acc=float(acc),
+                                wall=time.time() - t0))
+            print(f"  resnet{depth} early stop at {step} "
+                  f"(smoothed acc {smooth_acc:.3f})", flush=True)
+            break
+    return params, state, spec, history
+
+
+def evaluate_float(params, state, spec, data, batch: int = 128):
+    """Eval-mode accuracy of the float model."""
+    images, labels = data
+    fwd = jax.jit(lambda x: M.forward_float(params, state, spec, x, False)[0])
+    correct = 0
+    for i in range(0, images.shape[0], batch):
+        logits = fwd(jnp.asarray(images[i:i + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, -1)
+                               == jnp.asarray(labels[i:i + batch].astype(np.int32))))
+    return correct / images.shape[0]
+
+
+def calibration_activations(params, state, spec, calib_data):
+    """Per-conv-layer input activations of the float model (eval mode) on
+    the calibration split — drives post-training quantisation ranges."""
+    images, _ = calib_data
+    fwd = jax.jit(lambda x: M.forward_float(params, state, spec, x, False)[2])
+    acts = fwd(jnp.asarray(images))
+    return [np.asarray(a) for a in acts]

@@ -1,0 +1,133 @@
+"""L1 kernel correctness: Pallas LUT-matmul vs the pure-jnp oracle and vs
+plain integer arithmetic — the CORE correctness signal of the build path.
+Hypothesis sweeps shapes/dtypes per the project brief."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.approx_conv import lut_matmul, lut_matmul_pallas, pad_to_multiple
+
+
+def random_lut(rng):
+    """A plausible approximate-multiplier LUT: exact table + bounded noise."""
+    a = np.arange(256, dtype=np.int64)
+    exact = (a[:, None] * a[None, :]).reshape(-1)
+    noise = rng.integers(-64, 65, exact.shape)
+    return jnp.asarray(np.clip(exact + noise, 0, 2**31 - 1).astype(np.int32))
+
+
+def test_exact_lut_is_multiplication():
+    lut = np.asarray(ref.exact_lut())
+    for a in [0, 1, 7, 128, 255]:
+        for b in [0, 3, 100, 255]:
+            assert lut[a * 256 + b] == a * b
+
+
+def test_ref_matmul_equals_integer_matmul():
+    rng = np.random.default_rng(1)
+    p = rng.integers(0, 256, (37, 23), dtype=np.int32)
+    w = rng.integers(0, 256, (23, 11), dtype=np.int32)
+    s = ref.lut_matmul_ref(jnp.asarray(p), jnp.asarray(w), ref.exact_lut())
+    np.testing.assert_array_equal(np.asarray(s), p.astype(np.int64) @ w.astype(np.int64))
+
+
+def test_pallas_matches_ref_exact_tiles():
+    rng = np.random.default_rng(2)
+    p = jnp.asarray(rng.integers(0, 256, (128, 64), dtype=np.int32))
+    w = jnp.asarray(rng.integers(0, 256, (64, 32), dtype=np.int32))
+    lut = random_lut(rng)
+    s_ref = ref.lut_matmul_ref(p, w, lut)
+    s_pal = lut_matmul_pallas(p, w, lut)
+    np.testing.assert_array_equal(np.asarray(s_pal), np.asarray(s_ref))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 90),
+    k=st.integers(1, 70),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_matches_ref_ragged_shapes(m, k, n, seed):
+    """Hypothesis sweep: padding front-end must be exact for any shape."""
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.integers(0, 256, (m, k), dtype=np.int32))
+    w = jnp.asarray(rng.integers(0, 256, (k, n), dtype=np.int32))
+    lut = random_lut(rng)
+    s_ref = ref.lut_matmul_ref(p, w, lut)
+    s_pal = lut_matmul(p, w, lut, use_pallas=True, bm=32, bk=16, bn=16)
+    np.testing.assert_array_equal(np.asarray(s_pal), np.asarray(s_ref))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dtype=st.sampled_from([np.int32, np.uint8, np.int64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_dtype_tolerance(dtype, seed):
+    """Codes arriving as other integer dtypes are handled identically."""
+    rng = np.random.default_rng(seed)
+    p = rng.integers(0, 256, (32, 16)).astype(dtype)
+    w = rng.integers(0, 256, (16, 16)).astype(dtype)
+    lut = random_lut(rng)
+    s_ref = ref.lut_matmul_ref(jnp.asarray(p, jnp.int32), jnp.asarray(w, jnp.int32), lut)
+    s_pal = lut_matmul(jnp.asarray(p), jnp.asarray(w), lut,
+                       use_pallas=True, bm=16, bk=16, bn=16)
+    np.testing.assert_array_equal(np.asarray(s_pal), np.asarray(s_ref))
+
+
+def test_nonzero_lut0_padding_correction():
+    """A LUT with lut[0] != 0 exercises the K-padding correction."""
+    rng = np.random.default_rng(3)
+    lut = np.asarray(random_lut(rng)).copy()
+    lut[0] = 999
+    p = jnp.asarray(rng.integers(0, 256, (5, 7), dtype=np.int32))
+    w = jnp.asarray(rng.integers(0, 256, (7, 3), dtype=np.int32))
+    s_ref = ref.lut_matmul_ref(p, w, jnp.asarray(lut))
+    s_pal = lut_matmul(p, w, jnp.asarray(lut), use_pallas=True, bm=8, bk=8, bn=8)
+    np.testing.assert_array_equal(np.asarray(s_pal), np.asarray(s_ref))
+
+
+def test_pad_to_multiple():
+    x = jnp.ones((5, 3))
+    y, orig = pad_to_multiple(x, 0, 4)
+    assert y.shape == (8, 3) and orig == 5
+    y2, _ = pad_to_multiple(y, 0, 4)
+    assert y2.shape == (8, 3)
+
+
+def test_im2col_matches_conv():
+    """patches @ w == lax.conv for random floats (layout pin)."""
+    import jax
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 3)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 3, 5)).astype(np.float32))
+    for stride in (1, 2):
+        patches = ref.im2col(x, 3, 3, stride)
+        b, ho, wo, k = patches.shape
+        got = (patches.reshape(-1, k) @ w.reshape(k, 5)).reshape(b, ho, wo, 5)
+        want = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_dequantize_acc_exact_roundtrip():
+    """With the exact LUT, quant → LUT-matmul → dequant == float matmul of
+    the dequantised operands (zero-point algebra exactness)."""
+    rng = np.random.default_rng(5)
+    s_a, z_a = 0.037, 13
+    s_w, z_w = 0.021, 140
+    a_codes = rng.integers(0, 256, (17, 29), dtype=np.int32)
+    w_codes = rng.integers(0, 256, (29, 9), dtype=np.int32)
+    a_real = (a_codes - z_a) * s_a
+    w_real = (w_codes - z_w) * s_w
+    s = ref.lut_matmul_ref(jnp.asarray(a_codes), jnp.asarray(w_codes), ref.exact_lut())
+    a_sum = jnp.asarray(a_codes.sum(axis=1, keepdims=True))
+    w_sum = jnp.asarray(w_codes.sum(axis=0, keepdims=True))
+    y = ref.dequantize_acc(s, a_sum, w_sum, 29, s_a, z_a, s_w, z_w)
+    np.testing.assert_allclose(np.asarray(y), a_real @ w_real, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,126 @@
+//! Fig. 2 reproduction: parameters of 8-bit approximate multipliers —
+//! power vs MAE scatter with three series:
+//!   * blue  (here `.`): all evolved multipliers,
+//!   * black (here `*`): the Pareto-selected subset,
+//!   * red   (here `o`): the "previous generation" comparison set — stood
+//!     in by the conventional baselines (truncated + BAM), per DESIGN.md §4.
+//!
+//! The claim under test: the evolved front dominates the baseline designs
+//! at matched power (the paper's "blue points are clearly better than red").
+//!
+//! `cargo bench --bench fig2_pareto [-- --quick]`
+
+use evoapproxlib::cgp::dominates;
+use evoapproxlib::cgp::metrics::Metric;
+use evoapproxlib::circuit::baselines::{bam_multiplier, truncated_multiplier};
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::library::{
+    evenly_by_power, pareto_indices, run_campaign, CampaignConfig, Entry, Library, Origin,
+};
+use evoapproxlib::util::bench::{quick_mode, time_once};
+use evoapproxlib::util::table::ascii_scatter;
+
+fn main() {
+    let quick = quick_mode();
+    let model = CostModel::default();
+    let f = ArithFn::Mul { w: 8 };
+
+    // evolved population
+    let mut lib = Library::new();
+    let mut cfg = CampaignConfig::quick(f);
+    cfg.generations = if quick { 2_000 } else { 30_000 };
+    cfg.targets_per_metric = if quick { 2 } else { 5 };
+    cfg.metrics = vec![Metric::Mae, Metric::Wce, Metric::Er, Metric::Mre];
+    let (added, dt) = time_once(|| run_campaign(&mut lib, &cfg, &model, None));
+    println!("bench evolve-campaign: {added} entries in {dt:?}");
+
+    // baseline ("previous library") series
+    let mut baselines: Vec<Entry> = Vec::new();
+    for keep in 4..=7 {
+        baselines.push(Entry::characterise(
+            truncated_multiplier(8, keep),
+            f,
+            &model,
+            Origin::Truncated { keep },
+        ));
+    }
+    for h in 0..3u32 {
+        for v in (2..=9u32).step_by(1) {
+            baselines.push(Entry::characterise(
+                bam_multiplier(8, h, v),
+                f,
+                &model,
+                Origin::Bam { h, v },
+            ));
+        }
+    }
+
+    let evolved: Vec<&Entry> = lib
+        .for_fn(f)
+        .into_iter()
+        .filter(|e| matches!(e.origin, Origin::Evolved { .. }) && e.metrics.mae > 0.0)
+        .collect();
+    let front_idx = pareto_indices(&evolved, Metric::Mae);
+    let front: Vec<&Entry> = front_idx.iter().map(|&i| evolved[i]).collect();
+    let selected = evenly_by_power(&front, 10);
+
+    let log_mae = |e: &Entry| (e.rel.mae_pct.max(1e-5)).log10();
+    let pts = |v: &[&Entry]| -> Vec<(f64, f64)> {
+        v.iter().map(|e| (e.cost.power_uw, log_mae(e))).collect()
+    };
+    let base_refs: Vec<&Entry> = baselines.iter().filter(|e| e.metrics.mae > 0.0).collect();
+    println!(
+        "\nFIG. 2 (power µW vs log10 MAE%) — {} evolved, {} baseline, {} selected",
+        evolved.len(),
+        base_refs.len(),
+        selected.len()
+    );
+    print!(
+        "{}",
+        ascii_scatter(
+            &[
+                ("evolved(all)", '.', pts(&evolved)),
+                ("baseline(trunc+BAM)", 'o', pts(&base_refs)),
+                ("selected", '*', pts(&selected)),
+            ],
+            76,
+            22,
+            "power uW",
+            "log10 MAE%"
+        )
+    );
+
+    // CSV for external plotting
+    let mut csv = String::from("series,power_uw,mae_pct\n");
+    for (name, set) in [("evolved", &evolved), ("baseline", &base_refs), ("selected", &selected)] {
+        for e in set {
+            csv.push_str(&format!("{name},{},{}\n", e.cost.power_uw, e.rel.mae_pct));
+        }
+    }
+    std::fs::write("bench_fig2.csv", &csv).ok();
+    println!("CSV written to bench_fig2.csv");
+
+    // dominance claim: count baselines dominated by some evolved circuit
+    let dominated = base_refs
+        .iter()
+        .filter(|b| {
+            evolved.iter().any(|e| {
+                dominates(
+                    &[e.cost.power_uw, e.metrics.mae],
+                    &[b.cost.power_uw, b.metrics.mae],
+                )
+            })
+        })
+        .count();
+    println!(
+        "dominance: {dominated}/{} baseline designs dominated by evolved circuits \
+         (paper: evolved front clearly better) — {}",
+        base_refs.len(),
+        if dominated * 2 >= base_refs.len() {
+            "HOLDS"
+        } else {
+            "WEAK"
+        }
+    );
+}

@@ -1,0 +1,163 @@
+//! Fig. 4 reproduction: per-layer resilience of ResNet-8 — accuracy drop vs
+//! multiplier-power drop when a single conv layer is approximated, for a
+//! set of Pareto-diverse multipliers (all other layers stay exact).
+//!
+//! Claims under test (paper §IV):
+//!   * approximating the layer holding the largest multiplier share gives
+//!     the best power-saving at low accuracy cost;
+//!   * approximating the first (stem) layer is a negligible contribution.
+//!
+//! Requires `make artifacts`.
+//! `cargo bench --bench fig4_layer_resilience [-- --quick]`
+
+use evoapproxlib::cgp::metrics::SELECTION_METRICS;
+use evoapproxlib::circuit::baselines::table2_baselines;
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::generators::wallace_multiplier;
+use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, KernelKind};
+use evoapproxlib::library::{run_campaign, select_diverse, CampaignConfig, Entry, Library, Origin};
+use evoapproxlib::resilience::{per_layer_campaign, MultiplierSummary};
+use evoapproxlib::util::bench::{quick_mode, time_once};
+use evoapproxlib::util::table::TextTable;
+
+fn main() {
+    let quick = quick_mode();
+    let artifacts = std::env::var("EVOAPPROX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        eprintln!("no artifacts at `{artifacts}` — run `make artifacts` first");
+        return;
+    }
+    let model = CostModel::default();
+    let f = ArithFn::Mul { w: 8 };
+
+    // multiplier set: evolved (diverse selection) + a few baselines
+    let mut lib = Library::new();
+    let mut cfg = CampaignConfig::quick(f);
+    cfg.generations = if quick { 1_500 } else { 15_000 };
+    let (_, dt) = time_once(|| run_campaign(&mut lib, &cfg, &model, None));
+    println!("bench multiplier-evolution: {} entries in {dt:?}", lib.len());
+    let exact = Entry::characterise(
+        wallace_multiplier(8),
+        f,
+        &model,
+        Origin::Seed("wallace".into()),
+    );
+    let mut mults = Vec::new();
+    for e in select_diverse(&lib, f, &SELECTION_METRICS, if quick { 2 } else { 6 }) {
+        if e.metrics.er > 0.0 {
+            mults.push(MultiplierSummary::from_entry(e, &exact.cost).unwrap());
+        }
+    }
+    for n in table2_baselines().into_iter().take(if quick { 2 } else { 4 }) {
+        let e = Entry::characterise(n, f, &model, Origin::Seed("baseline".into()));
+        mults.push(MultiplierSummary::from_entry(&e, &exact.cost).unwrap());
+    }
+    if quick {
+        mults.truncate(4);
+    }
+
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&artifacts)).unwrap();
+    let testset = coord.manifest().load_testset(&artifacts).unwrap();
+    let testset = testset.truncated(if quick { 64 } else { 256 });
+    println!(
+        "running Fig.4 campaign: {} multipliers × layers of resnet8, {} images",
+        mults.len(),
+        testset.n
+    );
+
+    let (report, dt) = time_once(|| {
+        per_layer_campaign(&coord, "resnet8", &mults, &testset, KernelKind::Jnp).unwrap()
+    });
+    println!(
+        "campaign: {} points in {dt:?} (reference accuracy {:.4})",
+        report.points.len(),
+        report.reference_accuracy
+    );
+
+    let mut t = TextTable::new(&[
+        "multiplier", "layer", "label", "%mults", "acc drop %", "power drop %",
+    ]);
+    let mut csv = String::from("multiplier,layer,label,frac,acc_drop,power_drop\n");
+    for p in &report.points {
+        t.row(vec![
+            p.multiplier.clone(),
+            p.layer.to_string(),
+            p.layer_label.clone(),
+            format!("{:.1}", p.layer_fraction * 100.0),
+            format!("{:+.2}", p.accuracy_drop * 100.0),
+            format!("{:.2}", p.power_drop_pct),
+        ]);
+        csv.push_str(&format!(
+            "{},{},{},{:.4},{:.4},{:.4}\n",
+            p.multiplier, p.layer, p.layer_label, p.layer_fraction, p.accuracy_drop, p.power_drop_pct
+        ));
+    }
+    print!("{}", t.render());
+    std::fs::write("bench_fig4.csv", &csv).ok();
+    println!("CSV written to bench_fig4.csv");
+
+    // --- claims ---------------------------------------------------------
+    // per layer: mean power saved among ≤2%-drop points
+    let n_layers = report.points.iter().map(|p| p.layer).max().unwrap_or(0) + 1;
+    let mut per_layer_saving = vec![0.0f64; n_layers];
+    for layer in 0..n_layers {
+        per_layer_saving[layer] = report
+            .points
+            .iter()
+            .filter(|p| p.layer == layer && p.accuracy_drop <= 0.02)
+            .map(|p| p.power_drop_pct)
+            .fold(0.0, f64::max);
+    }
+    let stem_save = per_layer_saving[0];
+    let best_layer = per_layer_saving
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    let frac_best = report
+        .points
+        .iter()
+        .find(|p| p.layer == best_layer)
+        .map(|p| p.layer_fraction)
+        .unwrap_or(0.0);
+    let frac_max = (0..n_layers)
+        .map(|l| {
+            report
+                .points
+                .iter()
+                .find(|p| p.layer == l)
+                .map(|p| p.layer_fraction)
+                .unwrap_or(0.0)
+        })
+        .fold(0.0, f64::max);
+    println!(
+        "claim A (largest-share layer is the best target): best layer {best_layer} \
+         holds {:.1}% of mults (max share {:.1}%) — {}",
+        frac_best * 100.0,
+        frac_max * 100.0,
+        if (frac_best - frac_max).abs() < 1e-9 {
+            "HOLDS"
+        } else {
+            "PARTIAL (see EXPERIMENTS.md geometry note)"
+        }
+    );
+    // paper: "introducing the approximate multipliers to the first layer
+    // makes a negligible contribution" — because it holds the fewest
+    // multipliers. In our scaled geometry the stem share is 7 % (paper:
+    // 2.09 %), so the faithful form of the claim is that the stem offers
+    // the LEAST power headroom of all layers.
+    let stem_is_min = per_layer_saving[1..]
+        .iter()
+        .all(|&s| s >= stem_save - 1e-9);
+    println!(
+        "claim B (stem is the least profitable layer): stem max safe saving {:.2}% \
+         vs best {:.2}% — {}",
+        stem_save,
+        per_layer_saving[best_layer],
+        if stem_is_min { "HOLDS" } else { "VIOLATED" }
+    );
+    println!("{:#?}", coord.metrics());
+    coord.shutdown();
+}

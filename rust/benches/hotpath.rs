@@ -1,0 +1,142 @@
+//! Hot-path micro-benchmarks (§Perf): every layer of the stack measured in
+//! isolation so the optimisation log in EXPERIMENTS.md §Perf has stable
+//! numbers to quote.
+//!
+//!   L3-sim   — bit-parallel exhaustive simulation of an 8×8 multiplier
+//!   L3-cgp   — CGP candidate evaluations/second (the evolution inner loop)
+//!   L3-lut   — netlist → 64 Ki LUT construction
+//!   L3-pjrt  — one PJRT batch through resnet8 (jnp vs pallas artifact)
+//!   L3-batch — dynamic-batcher round trip
+//!
+//! `cargo bench --bench hotpath [-- --quick]`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use evoapproxlib::cgp::{Chromosome, Evaluator, Metric};
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::generators::wallace_multiplier;
+use evoapproxlib::circuit::simulator::eval_exhaustive_u64;
+use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, KernelKind};
+use evoapproxlib::resilience::lut_from_netlist;
+use evoapproxlib::runtime::{broadcast_lut, exact_lut};
+use evoapproxlib::util::bench::{bench, per_second, quick_mode};
+
+fn main() {
+    let quick = quick_mode();
+    let samples = if quick { 3 } else { 10 };
+    let f = ArithFn::Mul { w: 8 };
+    let seed = wallace_multiplier(8);
+
+    // L3-sim: exhaustive 2^16-vector simulation
+    let s = bench("L3-sim/exhaustive-mul8 (65536 vec)", 1, samples, || {
+        std::hint::black_box(eval_exhaustive_u64(&seed));
+    });
+    println!(
+        "  => {:.1} M vector-evals/s",
+        per_second(65_536, s.median()) / 1e6
+    );
+
+    // L3-cgp: candidate evaluations per second (error metric eval)
+    let mut evaluator = Evaluator::exhaustive(f);
+    let chrom = Chromosome::from_netlist(&seed, 16);
+    let s = bench("L3-cgp/candidate-eval (MAE, exhaustive)", 2, samples, || {
+        std::hint::black_box(evaluator.error_bounded(&chrom, Metric::Mae, f64::INFINITY));
+    });
+    println!(
+        "  => {:.0} candidate evals/s  ({:.1} M vec/s through the sim)",
+        1.0 / s.median().as_secs_f64(),
+        per_second(65_536, s.median()) / 1e6
+    );
+    let model = CostModel::default();
+    bench("L3-cgp/cost-eval (weighted area)", 2, samples, || {
+        std::hint::black_box(evaluator.cost(&chrom, &model));
+    });
+
+    // L3-lut
+    bench("L3-lut/netlist→65536-LUT", 1, samples, || {
+        std::hint::black_box(lut_from_netlist(&seed).unwrap());
+    });
+
+    // L3-pjrt: artifacts needed
+    let artifacts = std::env::var("EVOAPPROX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&artifacts)).unwrap();
+        let meta = coord.manifest().model("resnet8").unwrap().clone();
+        let testset = coord.manifest().load_testset(&artifacts).unwrap();
+        let il = testset.image_len;
+        let batch = 64usize;
+        let mut images = testset.images[..testset.n.min(batch) * il].to_vec();
+        images.resize(batch * il, 0.0);
+        let images = Arc::new(images);
+        let luts = Arc::new(broadcast_lut(&exact_lut(), meta.n_conv_layers));
+
+        for kernel in [KernelKind::Jnp, KernelKind::Pallas] {
+            if coord.warm("resnet8", kernel).is_err() {
+                continue;
+            }
+            let name = format!("L3-pjrt/resnet8-b64-{kernel:?}");
+            let s = bench(&name, 1, samples, || {
+                std::hint::black_box(
+                    coord
+                        .logits("resnet8", kernel, images.clone(), luts.clone())
+                        .unwrap(),
+                );
+            });
+            println!(
+                "  => {:.1} images/s",
+                per_second(batch as u64, s.median())
+            );
+        }
+
+        // compile-time (engine warm) for the deepest model
+        let deepest = coord.manifest().models.last().unwrap().name.clone();
+        let t0 = std::time::Instant::now();
+        coord.warm(&deepest, KernelKind::Jnp).unwrap();
+        println!(
+            "bench L3-pjrt/compile-{deepest:<26} once   {:>12?}",
+            t0.elapsed()
+        );
+
+        // L3-batch: batcher round-trip at batch=64
+        use evoapproxlib::coordinator::batcher::{BatchPolicy, Batcher};
+        let (batcher, guard) = Batcher::spawn(
+            coord.clone(),
+            "resnet8",
+            KernelKind::Jnp,
+            luts.clone(),
+            BatchPolicy {
+                max_batch: batch,
+                max_wait: Duration::from_millis(5),
+            },
+        )
+        .unwrap();
+        let n_req = if quick { 64 } else { 256 };
+        let t0 = std::time::Instant::now();
+        let pending: Vec<_> = (0..n_req)
+            .map(|k| {
+                let idx = k % testset.n;
+                batcher
+                    .classify_async(testset.images[idx * il..(idx + 1) * il].to_vec())
+                    .unwrap()
+            })
+            .collect();
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let dt = t0.elapsed();
+        drop(batcher);
+        let stats = guard.join();
+        println!(
+            "bench L3-batch/serve-{n_req}req                       {dt:>12?}  \
+             => {:.1} req/s (occupancy {:.2})",
+            n_req as f64 / dt.as_secs_f64(),
+            stats.mean_occupancy
+        );
+        println!("coordinator metrics: {:#?}", coord.metrics());
+        coord.shutdown();
+    } else {
+        println!("(skipping PJRT benches — no artifacts; run `make artifacts`)");
+    }
+}

@@ -1,0 +1,225 @@
+//! Table II reproduction: selected approximate multipliers (evolved +
+//! truncated + BAM) characterised by relative power and the five error
+//! metrics, with classification accuracy when used in ALL conv layers of
+//! ResNet-8…50.
+//!
+//! Claims under test (paper §IV):
+//!   * accuracy holds near the golden baseline down to mid-range multiplier
+//!     power, then collapses to ~10 % (chance);
+//!   * evolved multipliers beat truncation/BAM at matched power;
+//!   * at a ~50 % multiplier-power budget, a mid-depth network is the
+//!     accuracy sweet spot (the paper picks ResNet-32 at 86.86 %).
+//!
+//! Requires `make artifacts`.
+//! `cargo bench --bench table2_accuracy [-- --quick]`
+
+use evoapproxlib::cgp::metrics::SELECTION_METRICS;
+use evoapproxlib::circuit::baselines::table2_baselines;
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::generators::wallace_multiplier;
+use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, KernelKind};
+use evoapproxlib::library::{run_campaign, select_diverse, CampaignConfig, Entry, Library, Origin};
+use evoapproxlib::resilience::{whole_network_campaign, MultiplierSummary};
+use evoapproxlib::util::bench::{quick_mode, time_once};
+use evoapproxlib::util::table::TextTable;
+
+fn main() {
+    let quick = quick_mode();
+    let artifacts = std::env::var("EVOAPPROX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        eprintln!("no artifacts at `{artifacts}` — run `make artifacts` first");
+        return;
+    }
+    let model = CostModel::default();
+    let f = ArithFn::Mul { w: 8 };
+
+    // ---- multiplier rows: evolved selection + trunc + BAM ----------------
+    let mut lib = Library::new();
+    let mut cfg = CampaignConfig::quick(f);
+    cfg.generations = if quick { 1_500 } else { 20_000 };
+    cfg.targets_per_metric = if quick { 2 } else { 4 };
+    let (_, dt) = time_once(|| run_campaign(&mut lib, &cfg, &model, None));
+    println!("bench multiplier-evolution: {} entries in {dt:?}", lib.len());
+
+    let exact = Entry::characterise(
+        wallace_multiplier(8),
+        f,
+        &model,
+        Origin::Seed("wallace".into()),
+    );
+    let mut mults: Vec<MultiplierSummary> = Vec::new();
+    for e in select_diverse(&lib, f, &SELECTION_METRICS, if quick { 3 } else { 10 }) {
+        if e.metrics.er > 0.0 {
+            mults.push(MultiplierSummary::from_entry(e, &exact.cost).unwrap());
+        }
+    }
+    let n_evolved = mults.len();
+    for n in table2_baselines() {
+        let origin = if let Some(k) = n.name.strip_prefix("mul8u_trunc") {
+            Origin::Truncated {
+                keep: k.parse().unwrap(),
+            }
+        } else {
+            let h: u32 = n.name.split("_h").nth(1).unwrap().split('_').next().unwrap().parse().unwrap();
+            let v: u32 = n.name.split("_v").nth(1).unwrap().parse().unwrap();
+            Origin::Bam { h, v }
+        };
+        let e = Entry::characterise(n, f, &model, origin);
+        mults.push(MultiplierSummary::from_entry(&e, &exact.cost).unwrap());
+    }
+    if quick {
+        mults.truncate(6);
+    }
+    // descending power, Table II row order
+    mults.sort_by(|a, b| b.rel_power_pct.partial_cmp(&a.rel_power_pct).unwrap());
+    println!(
+        "rows: {} multipliers ({n_evolved} evolved + {} baselines)",
+        mults.len(),
+        mults.len() - n_evolved.min(mults.len())
+    );
+
+    // ---- the sweep --------------------------------------------------------
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&artifacts)).unwrap();
+    let all_models: Vec<String> = coord
+        .manifest()
+        .models
+        .iter()
+        .map(|m| m.name.clone())
+        .collect();
+    let models: Vec<String> = if quick {
+        all_models.into_iter().take(3).collect()
+    } else {
+        all_models
+    };
+    let testset = coord.manifest().load_testset(&artifacts).unwrap();
+    let testset = testset.truncated(if quick { 64 } else { 128 });
+    println!(
+        "Table II sweep: {} multipliers × {} networks × {} images",
+        mults.len(),
+        models.len(),
+        testset.n
+    );
+    let (report, dt) = time_once(|| {
+        whole_network_campaign(&coord, &models, &mults, &testset, KernelKind::Jnp).unwrap()
+    });
+    println!("campaign done in {dt:?}");
+
+    // ---- render ------------------------------------------------------------
+    let mut header: Vec<String> = vec![
+        "Multiplier".into(),
+        "Power%".into(),
+        "MAE%".into(),
+        "WCE%".into(),
+        "MRE%".into(),
+        "WCRE%".into(),
+        "ER%".into(),
+    ];
+    header.extend(models.iter().cloned());
+    let hrefs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = TextTable::new(&hrefs);
+    let mut csv = format!("multiplier,power_pct,mae_pct,{}\n", models.join(","));
+    let mut row0 = vec![
+        "8 bit (exact)".to_string(),
+        "100.0".into(),
+        "0".into(),
+        "0".into(),
+        "0".into(),
+        "0".into(),
+        "0".into(),
+    ];
+    row0.extend(report.exact_row.iter().map(|(_, a)| format!("{:.3}", a * 100.0)));
+    t.row(row0);
+    csv.push_str(&format!(
+        "exact,100,0,{}\n",
+        report
+            .exact_row
+            .iter()
+            .map(|(_, a)| format!("{a:.4}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    ));
+    for r in &report.rows {
+        let m = &r.multiplier;
+        let mut cells = vec![
+            m.label.clone(),
+            format!("{:.1}", m.rel_power_pct),
+            format!("{:.4}", m.mae_pct),
+            format!("{:.3}", m.wce_pct),
+            format!("{:.3}", m.mre_pct),
+            format!("{:.1}", m.wcre_pct),
+            format!("{:.1}", m.er_pct),
+        ];
+        cells.extend(r.accuracies.iter().map(|(_, a)| format!("{:.3}", a * 100.0)));
+        t.row(cells);
+        csv.push_str(&format!(
+            "{},{:.2},{:.4},{}\n",
+            m.label,
+            m.rel_power_pct,
+            m.mae_pct,
+            r.accuracies
+                .iter()
+                .map(|(_, a)| format!("{a:.4}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        ));
+    }
+    print!("{}", t.render());
+    std::fs::write("bench_table2.csv", &csv).ok();
+    println!("CSV written to bench_table2.csv");
+
+    // ---- claims -------------------------------------------------------------
+    let chance = 1.0 / 10.0;
+    let golden_mean: f64 = report.exact_row.iter().map(|(_, a)| a).sum::<f64>()
+        / report.exact_row.len().max(1) as f64;
+    // (i) graceful-then-collapse
+    let mut high_power_ok = true;
+    let mut low_power_collapsed = false;
+    for r in &report.rows {
+        let mean_acc: f64 =
+            r.accuracies.iter().map(|(_, a)| a).sum::<f64>() / r.accuracies.len().max(1) as f64;
+        if r.multiplier.rel_power_pct > 90.0 && mean_acc < golden_mean - 0.10 {
+            high_power_ok = false;
+        }
+        if r.multiplier.rel_power_pct < 30.0 && mean_acc < chance + 0.15 {
+            low_power_collapsed = true;
+        }
+    }
+    println!(
+        "claim (graceful degradation then collapse): high-power rows near golden: {}, \
+         low-power rows at chance: {}",
+        if high_power_ok { "HOLDS" } else { "VIOLATED" },
+        if low_power_collapsed { "HOLDS" } else { "NOT OBSERVED (no <30% row)" }
+    );
+    // (ii) evolved vs baseline at matched power
+    let mut wins = 0;
+    let mut comparisons = 0;
+    for r in &report.rows {
+        if !r.multiplier.id.starts_with("mul8u_") || r.multiplier.label.contains("BAM")
+            || r.multiplier.label.contains("Trunc")
+        {
+            continue;
+        }
+        for b in &report.rows {
+            if !(b.multiplier.label.contains("BAM") || b.multiplier.label.contains("Trunc")) {
+                continue;
+            }
+            if (r.multiplier.rel_power_pct - b.multiplier.rel_power_pct).abs() < 10.0 {
+                comparisons += 1;
+                let ra: f64 = r.accuracies.iter().map(|(_, a)| a).sum();
+                let ba: f64 = b.accuracies.iter().map(|(_, a)| a).sum();
+                if ra >= ba {
+                    wins += 1;
+                }
+            }
+        }
+    }
+    if comparisons > 0 {
+        println!(
+            "claim (evolved ≥ baseline at matched power ±10%): {wins}/{comparisons} — {}",
+            if wins * 2 >= comparisons { "HOLDS" } else { "WEAK" }
+        );
+    }
+    println!("{:#?}", coord.metrics());
+    coord.shutdown();
+}

@@ -1,0 +1,248 @@
+//! DNN hardware-accelerator model (§IV): ResNet architecture descriptions,
+//! per-layer multiplier census, and the power model that converts a
+//! multiplier's circuit-level power into the "relative power of the
+//! convolutional layers' multipliers" the paper reports.
+//!
+//! The Rust side re-derives the architecture independently of the Python
+//! manifest (`runtime::manifest`) and the two are cross-checked in tests —
+//! catching drift between the build path and the analysis path.
+
+use crate::circuit::cost::CircuitCost;
+use crate::runtime::manifest::{LayerMeta, ModelMeta};
+
+/// The ResNet depths of the paper's Table II.
+pub const PAPER_DEPTHS: [u32; 8] = [8, 14, 20, 26, 32, 38, 44, 50];
+
+/// One conv layer of a ResNet spec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvLayer {
+    /// Stage (0 = stem).
+    pub stage: u32,
+    /// Block within the stage (1-based).
+    pub block: u32,
+    /// Conv within the block (1-based).
+    pub conv: u32,
+    /// Input channels.
+    pub cin: u32,
+    /// Output channels.
+    pub cout: u32,
+    /// Spatial stride.
+    pub stride: u32,
+}
+
+/// Architecture description of one 6n+2 ResNet (mirrors
+/// `python/compile/model.py::resnet_spec`).
+#[derive(Debug, Clone)]
+pub struct ResNetSpec {
+    /// Network depth (6n+2).
+    pub depth: u32,
+    /// Base width.
+    pub width: u32,
+    /// Conv layers in execution order.
+    pub layers: Vec<ConvLayer>,
+}
+
+impl ResNetSpec {
+    /// Build the spec for `depth = 6n+2` with base `width`.
+    pub fn new(depth: u32, width: u32) -> ResNetSpec {
+        assert_eq!((depth - 2) % 6, 0, "depth must be 6n+2");
+        let n = (depth - 2) / 6;
+        let mut layers = vec![ConvLayer {
+            stage: 0,
+            block: 1,
+            conv: 1,
+            cin: 3,
+            cout: width,
+            stride: 1,
+        }];
+        let mut cin = width;
+        for stage in 0..3u32 {
+            let cout = width * [1, 2, 4][stage as usize];
+            for block in 0..n {
+                let stride = if stage > 0 && block == 0 { 2 } else { 1 };
+                layers.push(ConvLayer {
+                    stage: stage + 1,
+                    block: block + 1,
+                    conv: 1,
+                    cin,
+                    cout,
+                    stride,
+                });
+                layers.push(ConvLayer {
+                    stage: stage + 1,
+                    block: block + 1,
+                    conv: 2,
+                    cin: cout,
+                    cout,
+                    stride: 1,
+                });
+                cin = cout;
+            }
+        }
+        ResNetSpec {
+            depth,
+            width,
+            layers,
+        }
+    }
+
+    /// Multiplications per image for every conv layer at `image_size`
+    /// (3×3 kernels, SAME padding — mirrors
+    /// `model.py::layer_mult_counts`).
+    pub fn mult_counts(&self, image_size: u32) -> Vec<u64> {
+        let mut size = image_size as u64;
+        let mut out = Vec::with_capacity(self.layers.len());
+        for (i, l) in self.layers.iter().enumerate() {
+            if i > 0 && l.stride == 2 {
+                size /= 2;
+            }
+            out.push(size * size * 9 * l.cin as u64 * l.cout as u64);
+        }
+        out
+    }
+
+    /// Total multiplications per inference.
+    pub fn total_mults(&self, image_size: u32) -> u64 {
+        self.mult_counts(image_size).iter().sum()
+    }
+}
+
+/// Power model: energy of all conv multiplications, given a multiplier's
+/// circuit characterisation. Absolute energy uses the cost model's per-
+/// multiplication energy (power × delay would be one convention; following
+/// the paper we only ever *report ratios*, so any per-multiplication
+/// constant cancels).
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    /// Multiplications per image per layer.
+    pub layer_mults: Vec<u64>,
+}
+
+impl PowerModel {
+    /// From a Rust-side spec.
+    pub fn from_spec(spec: &ResNetSpec, image_size: u32) -> PowerModel {
+        PowerModel {
+            layer_mults: spec.mult_counts(image_size),
+        }
+    }
+
+    /// From the build manifest (cross-checked against `from_spec` in tests).
+    pub fn from_manifest(model: &ModelMeta) -> PowerModel {
+        PowerModel {
+            layer_mults: model.layers.iter().map(|l| l.n_mults).collect(),
+        }
+    }
+
+    /// Total multiplications.
+    pub fn total(&self) -> u64 {
+        self.layer_mults.iter().sum()
+    }
+
+    /// Fraction of all multiplications residing in `layer` (Fig. 4's
+    /// per-layer percentages).
+    pub fn layer_fraction(&self, layer: usize) -> f64 {
+        self.layer_mults[layer] as f64 / self.total().max(1) as f64
+    }
+
+    /// Relative power [%] of the multipliers when `approx` replaces
+    /// `exact` in the given layers (`None` ⇒ all layers — Table II;
+    /// `Some(i)` ⇒ only layer `i` — Fig. 4).
+    pub fn relative_power(
+        &self,
+        exact: &CircuitCost,
+        approx: &CircuitCost,
+        layer: Option<usize>,
+    ) -> f64 {
+        if exact.power_uw <= 0.0 {
+            return 0.0;
+        }
+        let ratio = approx.power_uw / exact.power_uw;
+        match layer {
+            None => 100.0 * ratio,
+            Some(i) => {
+                let f = self.layer_fraction(i);
+                100.0 * ((1.0 - f) + f * ratio)
+            }
+        }
+    }
+}
+
+/// Table-row metadata for Fig. 4: label a layer the way the paper does.
+pub fn layer_label(l: &LayerMeta) -> String {
+    if l.stage == 0 {
+        "stem".to_string()
+    } else {
+        format!("S={} R={} C={}", l.stage, l.block, l.conv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_layer_counts() {
+        for depth in PAPER_DEPTHS {
+            let spec = ResNetSpec::new(depth, 8);
+            let n = (depth - 2) / 6;
+            assert_eq!(spec.layers.len() as u32, 6 * n + 1, "depth {depth}");
+        }
+    }
+
+    #[test]
+    fn resnet8_has_seven_convs_and_stage3_peak() {
+        let spec = ResNetSpec::new(8, 8);
+        assert_eq!(spec.layers.len(), 7);
+        let counts = spec.mult_counts(16);
+        let total: u64 = counts.iter().sum();
+        // stem is the clear minimum (paper: 2.09 % at full scale)
+        assert_eq!(counts[0], *counts.iter().min().unwrap());
+        // a stage-3 layer carries the maximum count
+        let max_i = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .unwrap()
+            .0;
+        assert_eq!(spec.layers[max_i].stage, 3);
+        assert!(total > 0);
+    }
+
+    #[test]
+    fn deeper_nets_multiply_more() {
+        let mut prev = 0;
+        for depth in PAPER_DEPTHS {
+            let t = ResNetSpec::new(depth, 8).total_mults(16);
+            assert!(t > prev, "depth {depth}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn per_layer_power_interpolates() {
+        let spec = ResNetSpec::new(8, 8);
+        let pm = PowerModel::from_spec(&spec, 16);
+        let exact = CircuitCost {
+            gates: 100,
+            area_um2: 100.0,
+            delay_ps: 100.0,
+            leakage_uw: 1.0,
+            dynamic_uw: 9.0,
+            power_uw: 10.0,
+        };
+        let approx = CircuitCost {
+            power_uw: 5.0,
+            ..exact
+        };
+        // whole network: exactly the circuit ratio
+        assert!((pm.relative_power(&exact, &approx, None) - 50.0).abs() < 1e-9);
+        // one layer: between 50 % and 100 %, closer to 100 %
+        let one = pm.relative_power(&exact, &approx, Some(0));
+        assert!(one > 90.0 && one < 100.0, "{one}");
+        // exact in the layer: no change
+        assert!((pm.relative_power(&exact, &exact, Some(3)) - 100.0).abs() < 1e-9);
+        // fractions sum to 1
+        let s: f64 = (0..pm.layer_mults.len()).map(|i| pm.layer_fraction(i)).sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

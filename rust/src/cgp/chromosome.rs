@@ -1,0 +1,338 @@
+//! CGP chromosome: the integer-netlist encoding of §II-B.
+//!
+//! A candidate circuit is a fixed grid of `n_cols × n_rows` nodes, each with
+//! a function gene and two connection genes, plus one gene per primary
+//! output. Connection genes are absolute signal ids (primary inputs first,
+//! then nodes in column-major order), constrained by the levels-back
+//! parameter. Decoding walks the active fan-in of the outputs.
+
+use crate::circuit::gate::{GateKind, ALL_GATES};
+use crate::circuit::netlist::Netlist;
+use crate::data::rng::Xoshiro256;
+
+/// Grid/encoding parameters (paper notation: `n_i, n_o, n_c, n_r, l`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CgpParams {
+    /// Primary inputs.
+    pub n_inputs: u32,
+    /// Primary outputs.
+    pub n_outputs: u32,
+    /// Grid columns.
+    pub n_cols: u32,
+    /// Grid rows.
+    pub n_rows: u32,
+    /// Levels-back: a node in column `c` may read primary inputs and nodes
+    /// from columns `c-levels_back .. c`.
+    pub levels_back: u32,
+}
+
+impl CgpParams {
+    /// Single-row, full-levels-back layout with `n` nodes — the layout used
+    /// to seed CGP from an existing netlist (paper §III: `N = k`, the gate
+    /// count of the exact seed).
+    pub fn single_row(n_inputs: u32, n_outputs: u32, n: u32) -> CgpParams {
+        CgpParams {
+            n_inputs,
+            n_outputs,
+            n_cols: n,
+            n_rows: 1,
+            levels_back: n,
+        }
+    }
+
+    /// Total node count `N = n_c · n_r`.
+    pub fn n_nodes(&self) -> u32 {
+        self.n_cols * self.n_rows
+    }
+
+    /// Genes: 3 per node + 1 per output.
+    pub fn n_genes(&self) -> usize {
+        (self.n_nodes() * 3 + self.n_outputs) as usize
+    }
+
+    /// Column of node `j` (column-major layout).
+    #[inline]
+    pub fn col_of(&self, node: u32) -> u32 {
+        node / self.n_rows
+    }
+
+    /// Number of signals a node in column `c` may legally reference:
+    /// primary inputs plus all nodes in columns `[c - l, c)`.
+    /// (Signals of those columns are contiguous: ids
+    /// `n_inputs + (c-l)·n_rows .. n_inputs + c·n_rows`.)
+    #[inline]
+    pub fn allowed_range(&self, col: u32) -> (u32, u32, u32) {
+        // returns (inputs_hi, node_lo, node_hi) — a legal connection is
+        // either `< inputs_hi` or in `node_lo..node_hi` (signal ids).
+        let lo_col = col.saturating_sub(self.levels_back);
+        (
+            self.n_inputs,
+            self.n_inputs + lo_col * self.n_rows,
+            self.n_inputs + col * self.n_rows,
+        )
+    }
+
+    /// Draw a uniformly random legal connection for a node in `col`.
+    pub fn random_connection(&self, col: u32, rng: &mut Xoshiro256) -> u32 {
+        let (in_hi, node_lo, node_hi) = self.allowed_range(col);
+        let span = in_hi + (node_hi - node_lo);
+        let r = rng.next_below(span as u64) as u32;
+        if r < in_hi {
+            r
+        } else {
+            node_lo + (r - in_hi)
+        }
+    }
+
+    /// Check one connection gene for legality.
+    pub fn connection_legal(&self, col: u32, sig: u32) -> bool {
+        let (in_hi, node_lo, node_hi) = self.allowed_range(col);
+        sig < in_hi || (sig >= node_lo && sig < node_hi)
+    }
+}
+
+/// One candidate circuit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Chromosome {
+    /// Encoding parameters (shared across a population).
+    pub params: CgpParams,
+    /// `(func, a, b)` per node, then `n_outputs` output genes.
+    pub genes: Vec<u32>,
+}
+
+impl Chromosome {
+    /// Gene index of node `j`'s function gene.
+    #[inline]
+    fn node_base(&self, j: u32) -> usize {
+        (j * 3) as usize
+    }
+
+    /// The `(kind, a, b)` triple of node `j`.
+    #[inline]
+    pub fn node(&self, j: u32) -> (GateKind, u32, u32) {
+        let b = self.node_base(j);
+        (
+            GateKind::from_code(self.genes[b] as u8).expect("invalid function gene"),
+            self.genes[b + 1],
+            self.genes[b + 2],
+        )
+    }
+
+    /// Output gene `o` (a signal id).
+    #[inline]
+    pub fn output(&self, o: u32) -> u32 {
+        self.genes[(self.params.n_nodes() * 3 + o) as usize]
+    }
+
+    /// Uniformly random (valid) chromosome.
+    pub fn random(params: CgpParams, rng: &mut Xoshiro256) -> Chromosome {
+        let mut genes = Vec::with_capacity(params.n_genes());
+        for j in 0..params.n_nodes() {
+            let col = params.col_of(j);
+            genes.push(ALL_GATES[rng.next_usize(ALL_GATES.len())].code() as u32);
+            genes.push(params.random_connection(col, rng));
+            genes.push(params.random_connection(col, rng));
+        }
+        let total = params.n_inputs + params.n_nodes();
+        for _ in 0..params.n_outputs {
+            genes.push(rng.next_below(total as u64) as u32);
+        }
+        Chromosome { params, genes }
+    }
+
+    /// Seed a chromosome from an existing netlist (single-row layout with
+    /// optional `slack` extra free columns appended for evolution headroom).
+    pub fn from_netlist(n: &Netlist, slack: u32) -> Chromosome {
+        let k = n.nodes.len() as u32 + slack;
+        let params = CgpParams::single_row(n.n_inputs, n.n_outputs(), k);
+        let mut genes = Vec::with_capacity(params.n_genes());
+        for node in &n.nodes {
+            genes.push(node.kind.code() as u32);
+            genes.push(node.a);
+            genes.push(node.b);
+        }
+        // slack nodes: identity wires onto input 0 (inactive until mutated in)
+        for _ in 0..slack {
+            genes.push(GateKind::Identity.code() as u32);
+            genes.push(0);
+            genes.push(0);
+        }
+        for &o in &n.outputs {
+            genes.push(o);
+        }
+        Chromosome { params, genes }
+    }
+
+    /// Mark nodes in the transitive fan-in of the outputs. Returns a dense
+    /// bool map indexed by node id.
+    pub fn active_nodes(&self, buf: &mut Vec<bool>, stack: &mut Vec<u32>) {
+        let p = &self.params;
+        buf.clear();
+        buf.resize(p.n_nodes() as usize, false);
+        stack.clear();
+        for o in 0..p.n_outputs {
+            let s = self.output(o);
+            if s >= p.n_inputs {
+                stack.push(s - p.n_inputs);
+            }
+        }
+        while let Some(j) = stack.pop() {
+            if buf[j as usize] {
+                continue;
+            }
+            buf[j as usize] = true;
+            let (kind, a, b) = self.node(j);
+            let arity = kind.arity();
+            if arity >= 1 && a >= p.n_inputs {
+                stack.push(a - p.n_inputs);
+            }
+            if arity >= 2 && b >= p.n_inputs {
+                stack.push(b - p.n_inputs);
+            }
+        }
+    }
+
+    /// Decode to a [`Netlist`] (keeps the full grid, inactive nodes
+    /// included, so signal ids line up; use `.compact()` to strip).
+    pub fn decode(&self, name: impl Into<String>) -> Netlist {
+        let p = &self.params;
+        let mut n = Netlist::new(p.n_inputs, name);
+        for j in 0..p.n_nodes() {
+            let (kind, a, b) = self.node(j);
+            n.push(kind, a, b);
+        }
+        for o in 0..p.n_outputs {
+            n.output(self.output(o));
+        }
+        n
+    }
+
+    /// Validity check: every gene within its legal range.
+    pub fn validate(&self) -> Result<(), String> {
+        let p = &self.params;
+        if self.genes.len() != p.n_genes() {
+            return Err("gene count mismatch".into());
+        }
+        for j in 0..p.n_nodes() {
+            let base = self.node_base(j);
+            if GateKind::from_code(self.genes[base] as u8).is_none() {
+                return Err(format!("node {j}: bad function code"));
+            }
+            let col = p.col_of(j);
+            for k in 1..=2 {
+                if !p.connection_legal(col, self.genes[base + k]) {
+                    return Err(format!("node {j}: illegal connection {}", self.genes[base + k]));
+                }
+            }
+        }
+        let total = p.n_inputs + p.n_nodes();
+        for o in 0..p.n_outputs {
+            if self.output(o) >= total {
+                return Err(format!("output {o}: out of range"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::generators::wallace_multiplier;
+    use crate::circuit::simulator::eval_exhaustive_u64;
+    use crate::circuit::verify::{is_exact, ArithFn};
+
+    #[test]
+    fn seed_round_trip_preserves_function() {
+        let seed = wallace_multiplier(4);
+        let chrom = Chromosome::from_netlist(&seed, 0);
+        assert!(chrom.validate().is_ok());
+        let decoded = chrom.decode("rt");
+        assert!(is_exact(&decoded, ArithFn::Mul { w: 4 }));
+        assert_eq!(
+            eval_exhaustive_u64(&seed),
+            eval_exhaustive_u64(&decoded)
+        );
+    }
+
+    #[test]
+    fn slack_nodes_are_inactive() {
+        let seed = wallace_multiplier(3);
+        let chrom = Chromosome::from_netlist(&seed, 10);
+        assert!(chrom.validate().is_ok());
+        let mut buf = Vec::new();
+        let mut stack = Vec::new();
+        chrom.active_nodes(&mut buf, &mut stack);
+        let k = seed.nodes.len();
+        assert!(buf[k..].iter().all(|&a| !a), "slack must start inactive");
+        assert!(is_exact(&chrom.decode("s"), ArithFn::Mul { w: 3 }));
+    }
+
+    #[test]
+    fn random_chromosomes_are_valid() {
+        let mut rng = Xoshiro256::new(5);
+        let params = CgpParams {
+            n_inputs: 6,
+            n_outputs: 4,
+            n_cols: 20,
+            n_rows: 3,
+            levels_back: 4,
+        };
+        for _ in 0..50 {
+            let c = Chromosome::random(params, &mut rng);
+            assert!(c.validate().is_ok());
+            let n = c.decode("r");
+            assert!(n.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn levels_back_respected() {
+        let params = CgpParams {
+            n_inputs: 4,
+            n_outputs: 2,
+            n_cols: 10,
+            n_rows: 2,
+            levels_back: 2,
+        };
+        // column 5 may reference inputs (<4) or nodes of columns 3,4
+        // (signal ids 4+6=10 .. 4+10=14)
+        assert!(params.connection_legal(5, 0));
+        assert!(params.connection_legal(5, 3));
+        assert!(!params.connection_legal(5, 4)); // column 0 node — too far back
+        assert!(!params.connection_legal(5, 9));
+        assert!(params.connection_legal(5, 10));
+        assert!(params.connection_legal(5, 13));
+        assert!(!params.connection_legal(5, 14)); // own column
+    }
+
+    #[test]
+    fn random_connection_always_legal() {
+        let mut rng = Xoshiro256::new(1);
+        let params = CgpParams {
+            n_inputs: 3,
+            n_outputs: 1,
+            n_cols: 8,
+            n_rows: 4,
+            levels_back: 1,
+        };
+        for col in 0..8 {
+            for _ in 0..200 {
+                let s = params.random_connection(col, &mut rng);
+                assert!(params.connection_legal(col, s), "col {col} sig {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn active_node_extraction_matches_netlist() {
+        let mut rng = Xoshiro256::new(11);
+        let params = CgpParams::single_row(8, 4, 30);
+        let c = Chromosome::random(params, &mut rng);
+        let mut buf = Vec::new();
+        let mut stack = Vec::new();
+        c.active_nodes(&mut buf, &mut stack);
+        let netlist_active = c.decode("a").active_gates();
+        assert_eq!(buf, netlist_active);
+    }
+}

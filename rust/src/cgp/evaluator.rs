@@ -1,0 +1,319 @@
+//! Allocation-free candidate evaluation — the CGP hot path.
+//!
+//! Evaluates a chromosome's *active* nodes only, bit-parallel over 64-lane
+//! words, against a precomputed exact-output table, with optional early
+//! abort once the optimised metric provably exceeds its bound. All scratch
+//! buffers live in the [`Evaluator`] and are reused across the millions of
+//! candidate evaluations of a run (§Perf L3).
+
+use crate::circuit::cost::CostModel;
+use crate::circuit::simulator::exhaustive_input_word;
+use crate::circuit::verify::{stratified_vectors, ArithFn};
+use crate::data::rng::Xoshiro256;
+
+use super::chromosome::Chromosome;
+use super::metrics::{ErrorMetrics, Metric, SingleMetricAcc};
+
+/// Reusable evaluation context for one arithmetic target function.
+pub struct Evaluator {
+    /// Target function.
+    pub f: ArithFn,
+    /// Sampled input vectors; `None` ⇒ exhaustive enumeration.
+    vectors: Option<Vec<u64>>,
+    /// Exact output per vector (indexed like the evaluation order).
+    exact: Vec<u64>,
+    // scratch
+    sig: Vec<u64>,
+    active: Vec<bool>,
+    stack: Vec<u32>,
+    /// Active nodes pre-decoded to `(kind, a, b)` once per candidate —
+    /// keeps gene decoding out of the per-word inner loop (§Perf L3: this
+    /// took one candidate evaluation from 1.37 ms to ~0.9 ms).
+    order: Vec<(crate::circuit::gate::GateKind, u32, u32, u32)>,
+    /// Signal ids of the outputs (decoded once per candidate).
+    out_sigs: Vec<u32>,
+    in_words: Vec<u64>,
+    out_words: Vec<u64>,
+}
+
+impl Evaluator {
+    /// Exhaustive evaluator (feasible iff `f.exhaustive_feasible()`).
+    pub fn exhaustive(f: ArithFn) -> Evaluator {
+        assert!(f.exhaustive_feasible(), "use sampled() for wide functions");
+        let n_vec = 1u64 << f.n_inputs();
+        let exact = (0..n_vec).map(|i| f.exact(i)).collect();
+        Evaluator {
+            f,
+            vectors: None,
+            exact,
+            sig: Vec::new(),
+            active: Vec::new(),
+            stack: Vec::new(),
+            order: Vec::new(),
+            out_sigs: Vec::new(),
+            in_words: vec![0; f.n_inputs() as usize],
+            out_words: vec![0; f.n_outputs() as usize],
+        }
+    }
+
+    /// Uniform random subsample of the full input space — the preferred
+    /// *search* evaluator for exhaustive-feasible functions: unbiased for
+    /// the mean metrics (MAE/MSE/ER), unlike the stratified sample which
+    /// deliberately over-weights small operands (good for MRE/WCRE tails,
+    /// wrong as an MAE surrogate). §Perf L3.
+    pub fn uniform_subsample(f: ArithFn, n: usize, seed: u64) -> Evaluator {
+        assert!(f.n_inputs() <= 63);
+        let space = 1u64 << f.n_inputs();
+        let mut rng = crate::data::rng::SplitMix64::new(seed ^ 0x5AB5_CAFE);
+        let vectors: Vec<u64> = (0..n).map(|_| rng.next_below(space)).collect();
+        let exact = vectors.iter().map(|&v| f.exact(v)).collect();
+        Evaluator {
+            f,
+            vectors: Some(vectors),
+            exact,
+            sig: Vec::new(),
+            active: Vec::new(),
+            stack: Vec::new(),
+            order: Vec::new(),
+            out_sigs: Vec::new(),
+            in_words: vec![0; f.n_inputs() as usize],
+            out_words: vec![0; f.n_outputs() as usize],
+        }
+    }
+
+    /// Sampled evaluator over the deterministic stratified sample
+    /// (used beyond the exhaustive-feasible widths; DESIGN.md §4).
+    pub fn sampled(f: ArithFn, per_stratum: usize, seed: u64) -> Evaluator {
+        let vectors = stratified_vectors(f, per_stratum, seed);
+        let exact = vectors.iter().map(|&v| f.exact(v)).collect();
+        Evaluator {
+            f,
+            vectors: Some(vectors),
+            exact,
+            sig: Vec::new(),
+            active: Vec::new(),
+            stack: Vec::new(),
+            order: Vec::new(),
+            out_sigs: Vec::new(),
+            in_words: vec![0; f.n_inputs() as usize],
+            out_words: vec![0; f.n_outputs() as usize],
+        }
+    }
+
+    /// Number of vectors per evaluation.
+    pub fn n_vectors(&self) -> u64 {
+        self.exact.len() as u64
+    }
+
+    /// Whether this evaluator enumerates exhaustively.
+    pub fn is_exhaustive(&self) -> bool {
+        self.vectors.is_none()
+    }
+
+    /// Prepare the active-node order for `c` (grid order is topological),
+    /// pre-decoding genes so the per-word loop touches no chromosome state.
+    fn prepare(&mut self, c: &Chromosome) {
+        c.active_nodes(&mut self.active, &mut self.stack);
+        let ni = c.params.n_inputs;
+        self.order.clear();
+        self.sig.clear();
+        self.sig
+            .resize((c.params.n_inputs + c.params.n_nodes()) as usize, 0);
+        // Pre-map each active node's operands to signal indices; the sig
+        // buffer index of node j is ni + j.
+        for (j, &a) in self.active.iter().enumerate() {
+            if a {
+                let (kind, na, nb) = c.node(j as u32);
+                self.order.push((kind, na, nb, ni + j as u32));
+            }
+        }
+        self.out_sigs.clear();
+        for o in 0..c.params.n_outputs {
+            self.out_sigs.push(c.output(o));
+        }
+    }
+
+    /// Evaluate one word of 64 vectors starting at vector index `base`.
+    #[inline]
+    fn eval_word(&mut self, c: &Chromosome, base: u64, lanes: u32) {
+        let ni = c.params.n_inputs;
+        match &self.vectors {
+            None => {
+                let w = base / 64;
+                for i in 0..ni {
+                    self.in_words[i as usize] = exhaustive_input_word(i, w);
+                }
+            }
+            Some(vs) => {
+                for i in 0..ni as usize {
+                    self.in_words[i] = 0;
+                }
+                for lane in 0..lanes as usize {
+                    let v = vs[base as usize + lane];
+                    for i in 0..ni as usize {
+                        self.in_words[i] |= ((v >> i) & 1) << lane;
+                    }
+                }
+            }
+        }
+        self.sig[..ni as usize].copy_from_slice(&self.in_words);
+        for &(kind, a, b, dst) in &self.order {
+            let va = self.sig[a as usize];
+            let vb = self.sig[b as usize];
+            self.sig[dst as usize] = kind.eval_word(va, vb);
+        }
+        for (o, &sig) in self.out_sigs.iter().enumerate() {
+            self.out_words[o] = self.sig[sig as usize];
+        }
+    }
+
+    /// Value of the optimised `metric`, aborting early (returning
+    /// `f64::INFINITY`) once it provably exceeds `bound`.
+    pub fn error_bounded(&mut self, c: &Chromosome, metric: Metric, bound: f64) -> f64 {
+        self.prepare(c);
+        let total = self.n_vectors();
+        let mut acc = SingleMetricAcc::new(metric);
+        // bound in accumulator space: mean metrics compare the running SUM
+        // against bound·N, worst-case metrics compare the max directly.
+        let bound_acc = match metric {
+            Metric::Wce | Metric::Wcre => bound,
+            _ => bound * total as f64,
+        };
+        let n_out = c.params.n_outputs;
+        let mut base = 0u64;
+        while base < total {
+            let lanes = ((total - base).min(64)) as u32;
+            self.eval_word(c, base, lanes);
+            for lane in 0..lanes as u64 {
+                let mut val = 0u64;
+                for j in 0..n_out as usize {
+                    val |= ((self.out_words[j] >> lane) & 1) << j;
+                }
+                let ok = acc.push(val, self.exact[(base + lane) as usize], bound_acc);
+                if !ok {
+                    return f64::INFINITY;
+                }
+            }
+            base += 64;
+        }
+        acc.value(total)
+    }
+
+    /// All six metrics of the candidate (library characterisation path).
+    pub fn full_metrics(&mut self, c: &Chromosome) -> ErrorMetrics {
+        self.prepare(c);
+        let total = self.n_vectors();
+        let n_out = c.params.n_outputs;
+        let mut pairs: Vec<(u64, u64)> = Vec::with_capacity(total as usize);
+        let mut base = 0u64;
+        while base < total {
+            let lanes = ((total - base).min(64)) as u32;
+            self.eval_word(c, base, lanes);
+            for lane in 0..lanes as u64 {
+                let mut val = 0u64;
+                for j in 0..n_out as usize {
+                    val |= ((self.out_words[j] >> lane) & 1) << j;
+                }
+                pairs.push((val, self.exact[(base + lane) as usize]));
+            }
+            base += 64;
+        }
+        ErrorMetrics::from_pairs(pairs.into_iter(), self.is_exhaustive())
+    }
+
+    /// Cost term of the paper's fitness: summed cell area of active gates.
+    pub fn cost(&mut self, c: &Chromosome, model: &CostModel) -> f64 {
+        c.active_nodes(&mut self.active, &mut self.stack);
+        let mut area = 0.0;
+        for (j, &a) in self.active.iter().enumerate() {
+            if a {
+                let (kind, _, _) = c.node(j as u32);
+                area += model.cell(kind).area_um2;
+            }
+        }
+        area
+    }
+}
+
+/// Convenience: a fresh RNG for evaluator-seeded sampling flows.
+pub fn rng_for(seed: u64) -> Xoshiro256 {
+    Xoshiro256::new(seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgp::chromosome::Chromosome;
+    use crate::circuit::baselines::bam_multiplier;
+    use crate::circuit::cost::CostModel;
+    use crate::circuit::generators::wallace_multiplier;
+    use crate::circuit::simulator::eval_exhaustive_u64;
+
+    const MUL6: ArithFn = ArithFn::Mul { w: 6 };
+
+    #[test]
+    fn exact_seed_scores_zero_error() {
+        let mut ev = Evaluator::exhaustive(MUL6);
+        let c = Chromosome::from_netlist(&wallace_multiplier(6), 0);
+        assert_eq!(ev.error_bounded(&c, Metric::Mae, f64::INFINITY), 0.0);
+        assert_eq!(ev.error_bounded(&c, Metric::Wce, f64::INFINITY), 0.0);
+        let m = ev.full_metrics(&c);
+        assert_eq!(m.er, 0.0);
+    }
+
+    #[test]
+    fn matches_reference_metrics() {
+        let mut ev = Evaluator::exhaustive(ArithFn::Mul { w: 8 });
+        let nl = bam_multiplier(8, 1, 5);
+        let c = Chromosome::from_netlist(&nl, 0);
+        let via_eval = ev.full_metrics(&c);
+        let table = eval_exhaustive_u64(&nl);
+        let reference =
+            crate::cgp::metrics::ErrorMetrics::vs_exact_table(&table, ArithFn::Mul { w: 8 });
+        assert!((via_eval.mae - reference.mae).abs() < 1e-9);
+        assert!((via_eval.er - reference.er).abs() < 1e-12);
+        assert_eq!(via_eval.wce, reference.wce);
+        for metric in [Metric::Mae, Metric::Mse, Metric::Mre, Metric::Wce, Metric::Wcre] {
+            let v = ev.error_bounded(&c, metric, f64::INFINITY);
+            assert!(
+                (v - metric.of(&reference)).abs() < 1e-9,
+                "{}",
+                metric.name()
+            );
+        }
+    }
+
+    #[test]
+    fn early_abort_on_bound() {
+        let mut ev = Evaluator::exhaustive(ArithFn::Mul { w: 8 });
+        let c = Chromosome::from_netlist(&bam_multiplier(8, 2, 8), 0);
+        let v = ev.error_bounded(&c, Metric::Wce, 1.0);
+        assert!(v.is_infinite());
+    }
+
+    #[test]
+    fn sampled_evaluator_close_to_exhaustive() {
+        let f = ArithFn::Mul { w: 8 };
+        let nl = bam_multiplier(8, 0, 6);
+        let c = Chromosome::from_netlist(&nl, 0);
+        let exh = Evaluator::exhaustive(f).full_metrics(&c);
+        let smp = Evaluator::sampled(f, 40, 17).full_metrics(&c);
+        assert!(!smp.exhaustive);
+        // stratified sampling over-weights small operands relative to the
+        // uniform exhaustive distribution, so only coarse agreement in ER
+        // and order-of-magnitude agreement in MAE is expected here.
+        assert!((smp.er - exh.er).abs() < 0.3, "{} vs {}", smp.er, exh.er);
+        assert!(smp.wce <= exh.wce, "sampled WCE cannot exceed exhaustive");
+        assert!(smp.mae > 0.0);
+    }
+
+    #[test]
+    fn cost_counts_active_area_only() {
+        let model = CostModel::default();
+        let nl = wallace_multiplier(4);
+        let c = Chromosome::from_netlist(&nl, 25); // slack = inactive
+        let mut ev = Evaluator::exhaustive(ArithFn::Mul { w: 4 });
+        let cost = ev.cost(&c, &model);
+        assert!((cost - model.weighted_area(&nl)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,385 @@
+//! The (1+λ) evolutionary strategy of §II-B2/§II-C.
+//!
+//! Single-objective mode: minimise circuit cost (weighted gate area) subject
+//! to `e_min ≤ error ≤ e_max` for the chosen metric; candidates violating the
+//! error window are ranked by their distance to it, so the search first
+//! drives error into the window, then minimises cost — the standard CGP
+//! circuit-approximation fitness.
+//!
+//! Multi-objective mode: a Pareto-archive variant that mutates random
+//! archive members and keeps the non-dominated set over
+//! (error, area, delay), per §II-C's description of multi-objective CGP.
+//!
+//! Both modes *harvest*: every evaluated candidate whose (error, cost) pair
+//! is non-dominated so far is recorded — this is how a single run
+//! contributes many library entries (the paper's library counts thousands of
+//! circuits from its campaign of runs).
+
+use crate::circuit::cost::CostModel;
+use crate::circuit::netlist::Netlist;
+use crate::circuit::verify::ArithFn;
+use crate::data::rng::Xoshiro256;
+
+use super::chromosome::Chromosome;
+use super::evaluator::Evaluator;
+use super::metrics::{ErrorMetrics, Metric};
+use super::mutation::mutated_copy;
+use super::pareto::ParetoArchive;
+
+/// Configuration of one evolution run.
+#[derive(Debug, Clone)]
+pub struct EvolveConfig {
+    /// Error metric under optimisation.
+    pub metric: Metric,
+    /// Lower edge of the target error window (usually 0).
+    pub e_min: f64,
+    /// Upper edge of the target error window (the control parameter the
+    /// paper sweeps to obtain different trade-offs).
+    pub e_max: f64,
+    /// Generations to run.
+    pub generations: u64,
+    /// Offspring per generation (paper: λ = 1 for single-objective runs).
+    pub lambda: u32,
+    /// Genes mutated per offspring (paper: h = 5).
+    pub h: u32,
+    /// RNG seed.
+    pub seed: u64,
+    /// Extra inactive grid columns appended to the seed for headroom.
+    pub slack: u32,
+}
+
+impl Default for EvolveConfig {
+    fn default() -> Self {
+        EvolveConfig {
+            metric: Metric::Mae,
+            e_min: 0.0,
+            e_max: 100.0,
+            generations: 10_000,
+            lambda: 1,
+            h: 5,
+            seed: 1,
+            slack: 0,
+        }
+    }
+}
+
+/// One harvested candidate: a snapshot on the run's (error, cost) front.
+#[derive(Debug, Clone)]
+pub struct Harvested {
+    /// The candidate (decoded, compacted).
+    pub netlist: Netlist,
+    /// Value of the optimised metric.
+    pub error: f64,
+    /// Weighted-area cost.
+    pub cost: f64,
+    /// Generation at which it appeared.
+    pub generation: u64,
+}
+
+/// Result of an evolution run.
+#[derive(Debug)]
+pub struct EvolveReport {
+    /// Best chromosome found (valid, lowest cost) — `None` if no candidate
+    /// ever entered the error window.
+    pub best: Option<Chromosome>,
+    /// Error/cost of the best candidate.
+    pub best_error: f64,
+    /// Cost (weighted area) of the best candidate.
+    pub best_cost: f64,
+    /// Harvested (error, cost)-front snapshots across the whole run.
+    pub harvest: Vec<Harvested>,
+    /// Candidate evaluations performed.
+    pub evaluations: u64,
+    /// `(generation, best_cost)` improvement trace.
+    pub trace: Vec<(u64, f64)>,
+}
+
+/// Scalar fitness: error window first, then cost. Lower is better.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Fitness {
+    /// Outside the error window; payload = distance to the window.
+    Invalid(f64),
+    /// Inside the window; payload = cost.
+    Valid(f64),
+}
+
+impl Fitness {
+    /// `self` is at least as good as `other` ((1+λ) keeps ties → drift).
+    fn at_least(self, other: Fitness) -> bool {
+        use Fitness::*;
+        match (self, other) {
+            (Valid(a), Valid(b)) => a <= b,
+            (Valid(_), Invalid(_)) => true,
+            (Invalid(_), Valid(_)) => false,
+            (Invalid(a), Invalid(b)) => a <= b,
+        }
+    }
+}
+
+/// Single-objective error-constrained evolution, seeded with `seed_netlist`.
+pub fn evolve(
+    seed_netlist: &Netlist,
+    f: ArithFn,
+    cfg: &EvolveConfig,
+    model: &CostModel,
+    evaluator: &mut Evaluator,
+) -> EvolveReport {
+    assert_eq!(evaluator.f, f, "evaluator target mismatch");
+    let mut rng = Xoshiro256::new(cfg.seed);
+    let mut parent = Chromosome::from_netlist(seed_netlist, cfg.slack);
+    // The early-abort bound: anything beyond e_max can abort, but the abort
+    // must still produce a comparable "distance" for invalid candidates, so
+    // only abort at a slack multiple of the window.
+    let abort_bound = if cfg.e_max > 0.0 {
+        cfg.e_max * 4.0
+    } else {
+        f64::INFINITY
+    };
+    let mut evaluations = 0u64;
+    let mut eval = |c: &Chromosome, ev: &mut Evaluator, n_evals: &mut u64| -> (Fitness, f64, f64) {
+        *n_evals += 1;
+        let err = ev.error_bounded(c, cfg.metric, abort_bound);
+        let cost = ev.cost(c, model);
+        let fit = if err >= cfg.e_min && err <= cfg.e_max {
+            Fitness::Valid(cost)
+        } else if err < cfg.e_min {
+            Fitness::Invalid(cfg.e_min - err)
+        } else {
+            Fitness::Invalid(err - cfg.e_max)
+        };
+        (fit, err, cost)
+    };
+
+    let (mut parent_fit, mut parent_err, mut parent_cost) =
+        eval(&parent, evaluator, &mut evaluations);
+
+    let mut front: ParetoArchive<(Chromosome, u64)> = ParetoArchive::new();
+    if parent_err.is_finite() {
+        front.insert(vec![parent_err, parent_cost], (parent.clone(), 0));
+    }
+    let mut best: Option<(Chromosome, f64, f64)> = match parent_fit {
+        Fitness::Valid(_) => Some((parent.clone(), parent_err, parent_cost)),
+        _ => None,
+    };
+    let mut trace = Vec::new();
+
+    for gen in 1..=cfg.generations {
+        let mut chosen: Option<(Chromosome, Fitness, f64, f64)> = None;
+        for _ in 0..cfg.lambda {
+            let child = mutated_copy(&parent, cfg.h, &mut rng);
+            let (fit, err, cost) = eval(&child, evaluator, &mut evaluations);
+            if err.is_finite() {
+                front.insert(vec![err, cost], (child.clone(), gen));
+            }
+            let better_than_chosen = match &chosen {
+                None => true,
+                Some((_, cf, _, _)) => fit.at_least(*cf),
+            };
+            if better_than_chosen {
+                chosen = Some((child, fit, err, cost));
+            }
+        }
+        if let Some((child, fit, err, cost)) = chosen {
+            if fit.at_least(parent_fit) {
+                parent = child;
+                parent_fit = fit;
+                parent_err = err;
+                parent_cost = cost;
+                if let Fitness::Valid(c) = fit {
+                    let improved = match &best {
+                        None => true,
+                        Some((_, _, bc)) => c < *bc,
+                    };
+                    if improved {
+                        best = Some((parent.clone(), err, cost));
+                        trace.push((gen, cost));
+                    }
+                }
+            }
+        }
+    }
+
+    let _ = (parent_err, parent_cost);
+    let harvest = front
+        .into_items()
+        .into_iter()
+        .map(|(obj, (chrom, generation))| Harvested {
+            netlist: chrom.decode("harvest").compact(),
+            error: obj[0],
+            cost: obj[1],
+            generation,
+        })
+        .collect();
+    match best {
+        Some((chrom, err, cost)) => EvolveReport {
+            best: Some(chrom),
+            best_error: err,
+            best_cost: cost,
+            harvest,
+            evaluations,
+            trace,
+        },
+        None => EvolveReport {
+            best: None,
+            best_error: f64::INFINITY,
+            best_cost: f64::INFINITY,
+            harvest,
+            evaluations,
+            trace,
+        },
+    }
+}
+
+/// Multi-objective archive evolution over (error, area, delay).
+///
+/// Keeps a Pareto archive; each generation mutates a random archive member
+/// (or the seed while the archive is empty) and attempts insertion.
+pub fn evolve_multi(
+    seed_netlist: &Netlist,
+    f: ArithFn,
+    cfg: &EvolveConfig,
+    model: &CostModel,
+    evaluator: &mut Evaluator,
+) -> ParetoArchive<Netlist> {
+    assert_eq!(evaluator.f, f);
+    let mut rng = Xoshiro256::new(cfg.seed ^ 0x4D4F_4541); // "MOEA"
+    let seed_chrom = Chromosome::from_netlist(seed_netlist, cfg.slack);
+    let mut pool: Vec<Chromosome> = vec![seed_chrom];
+    let mut archive: ParetoArchive<Netlist> = ParetoArchive::new();
+    for _ in 0..cfg.generations {
+        let pick = rng.next_usize(pool.len());
+        let child = mutated_copy(&pool[pick], cfg.h, &mut rng);
+        let err = evaluator.error_bounded(&child, cfg.metric, cfg.e_max * 4.0);
+        if !err.is_finite() || err > cfg.e_max {
+            continue;
+        }
+        let decoded = child.decode("mo").compact();
+        let area = model.weighted_area(&decoded);
+        let delay = decoded.depth() as f64;
+        if archive.insert(vec![err, area, delay], decoded) {
+            pool.push(child);
+            if pool.len() > 64 {
+                pool.remove(0);
+            }
+        }
+    }
+    archive
+}
+
+/// Convenience driver: characterise one harvested netlist with *all* six
+/// metrics (library ingestion path).
+pub fn characterise(netlist: &Netlist, f: ArithFn, evaluator: &mut Evaluator) -> ErrorMetrics {
+    assert_eq!(evaluator.f, f, "evaluator target mismatch");
+    let chrom = Chromosome::from_netlist(netlist, 0);
+    evaluator.full_metrics(&chrom)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::generators::wallace_multiplier;
+    use crate::circuit::verify::is_exact;
+
+    const MUL4: ArithFn = ArithFn::Mul { w: 4 };
+
+    fn quick_cfg(metric: Metric, e_max: f64, gens: u64) -> EvolveConfig {
+        EvolveConfig {
+            metric,
+            e_max,
+            generations: gens,
+            lambda: 4,
+            h: 3,
+            seed: 42,
+            slack: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn zero_error_window_preserves_exactness() {
+        // e_max = 0 ⇒ the run may only simplify while staying exact.
+        let seed = wallace_multiplier(4);
+        let model = CostModel::default();
+        let mut ev = Evaluator::exhaustive(MUL4);
+        let cfg = quick_cfg(Metric::Wce, 0.0, 2000);
+        let rep = evolve(&seed, MUL4, &cfg, &model, &mut ev);
+        let best = rep.best.expect("seed itself is valid");
+        let nl = best.decode("best").compact();
+        assert!(is_exact(&nl, MUL4));
+        assert!(rep.best_cost <= model.weighted_area(&seed) + 1e-9);
+        assert_eq!(rep.evaluations, 1 + 2000 * 4);
+    }
+
+    #[test]
+    fn relaxed_window_reduces_cost() {
+        let seed = wallace_multiplier(4);
+        let model = CostModel::default();
+        let seed_cost = model.weighted_area(&seed);
+        let mut ev = Evaluator::exhaustive(MUL4);
+        // WCE ≤ 8 on a 4×4 multiplier is a generous window
+        let cfg = quick_cfg(Metric::Wce, 8.0, 4000);
+        let rep = evolve(&seed, MUL4, &cfg, &model, &mut ev);
+        assert!(rep.best.is_some());
+        assert!(
+            rep.best_cost < seed_cost,
+            "approximation should shed gates: {} !< {seed_cost}",
+            rep.best_cost
+        );
+        // the harvest must contain at least the exact seed and one cheaper point
+        assert!(rep.harvest.len() >= 2);
+        // every harvested point must satisfy its recorded error under re-eval
+        for h in &rep.harvest {
+            let m = characterise(&h.netlist, MUL4, &mut ev);
+            assert!(
+                (m.wce - h.error).abs() < 1e-9,
+                "harvest error mismatch: {} vs {}",
+                m.wce,
+                h.error
+            );
+        }
+    }
+
+    #[test]
+    fn best_error_within_window() {
+        let seed = wallace_multiplier(4);
+        let model = CostModel::default();
+        let mut ev = Evaluator::exhaustive(MUL4);
+        let cfg = quick_cfg(Metric::Mae, 2.0, 3000);
+        let rep = evolve(&seed, MUL4, &cfg, &model, &mut ev);
+        assert!(rep.best_error <= 2.0);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let seed = wallace_multiplier(4);
+        let model = CostModel::default();
+        let cfg = quick_cfg(Metric::Wce, 4.0, 1500);
+        let mut ev1 = Evaluator::exhaustive(MUL4);
+        let mut ev2 = Evaluator::exhaustive(MUL4);
+        let a = evolve(&seed, MUL4, &cfg, &model, &mut ev1);
+        let b = evolve(&seed, MUL4, &cfg, &model, &mut ev2);
+        assert_eq!(a.best_cost, b.best_cost);
+        assert_eq!(a.harvest.len(), b.harvest.len());
+    }
+
+    #[test]
+    fn multi_objective_archive_is_front() {
+        let seed = wallace_multiplier(4);
+        let model = CostModel::default();
+        let mut ev = Evaluator::exhaustive(MUL4);
+        let cfg = quick_cfg(Metric::Mae, 6.0, 3000);
+        let archive = evolve_multi(&seed, MUL4, &cfg, &model, &mut ev);
+        assert!(!archive.is_empty());
+        let objs: Vec<Vec<f64>> = archive.iter().map(|(o, _)| o.to_vec()).collect();
+        for a in &objs {
+            for b in &objs {
+                assert!(!super::super::pareto::dominates(a, b) || a == b);
+            }
+        }
+        // every member must re-verify within the window
+        for (obj, nl) in archive.iter() {
+            let m = characterise(nl, MUL4, &mut ev);
+            assert!((m.mae - obj[0]).abs() < 1e-9);
+        }
+    }
+}

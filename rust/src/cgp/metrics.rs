@@ -1,0 +1,357 @@
+//! Error metrics of approximate circuits — eqs. (1)–(6) of the paper:
+//! ER, MAE, MSE, MRE, WCE, WCRE, computed either exhaustively over all
+//! input vectors or over a (stratified) sample.
+
+use crate::circuit::verify::ArithFn;
+
+/// Which error metric drives an optimisation run / a Pareto selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Error rate — eq. (1).
+    Er,
+    /// Mean absolute error — eq. (2).
+    Mae,
+    /// Mean square error — eq. (3).
+    Mse,
+    /// Mean relative error — eq. (4).
+    Mre,
+    /// Worst-case error — eq. (5).
+    Wce,
+    /// Worst-case relative error — eq. (6).
+    Wcre,
+}
+
+/// The five metrics used for the paper's Pareto subsets (§III pairs power
+/// with EP/ER, MAE, WCE, MSE and MRE) plus WCRE for Table II reporting.
+pub const SELECTION_METRICS: [Metric; 5] =
+    [Metric::Er, Metric::Mae, Metric::Wce, Metric::Mse, Metric::Mre];
+
+impl Metric {
+    /// Short name used in reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::Er => "ER",
+            Metric::Mae => "MAE",
+            Metric::Mse => "MSE",
+            Metric::Mre => "MRE",
+            Metric::Wce => "WCE",
+            Metric::Wcre => "WCRE",
+        }
+    }
+
+    /// Parse from the `name()` spelling (case-insensitive).
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s.to_ascii_uppercase().as_str() {
+            "ER" | "EP" => Some(Metric::Er),
+            "MAE" => Some(Metric::Mae),
+            "MSE" => Some(Metric::Mse),
+            "MRE" => Some(Metric::Mre),
+            "WCE" => Some(Metric::Wce),
+            "WCRE" => Some(Metric::Wcre),
+            _ => None,
+        }
+    }
+
+    /// Extract this metric's value from a computed [`ErrorMetrics`].
+    pub fn of(self, m: &ErrorMetrics) -> f64 {
+        match self {
+            Metric::Er => m.er,
+            Metric::Mae => m.mae,
+            Metric::Mse => m.mse,
+            Metric::Mre => m.mre,
+            Metric::Wce => m.wce,
+            Metric::Wcre => m.wcre,
+        }
+    }
+}
+
+/// All six error metrics of eqs. (1)–(6), in absolute units
+/// (ER/MRE/WCRE are ratios, MAE/WCE in output LSBs, MSE in LSB²).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ErrorMetrics {
+    /// Error rate ∈ [0,1] — fraction of inputs with any output mismatch.
+    pub er: f64,
+    /// Mean absolute error [LSB].
+    pub mae: f64,
+    /// Mean square error [LSB²].
+    pub mse: f64,
+    /// Mean relative error (denominator `max(1, O_orig)` per eq. 4).
+    pub mre: f64,
+    /// Worst-case absolute error [LSB].
+    pub wce: f64,
+    /// Worst-case relative error.
+    pub wcre: f64,
+    /// Number of vectors the metrics were computed over.
+    pub n_vectors: u64,
+    /// True when computed over all `2^n_i` vectors.
+    pub exhaustive: bool,
+}
+
+impl ErrorMetrics {
+    /// Compute all metrics from parallel `(approx, exact)` output streams.
+    pub fn from_pairs(pairs: impl Iterator<Item = (u64, u64)>, exhaustive: bool) -> ErrorMetrics {
+        let mut n = 0u64;
+        let mut errors = 0u64;
+        let mut sum_abs = 0f64;
+        let mut sum_sq = 0f64;
+        let mut sum_rel = 0f64;
+        let mut wce = 0u64;
+        let mut wcre = 0f64;
+        for (approx, exact) in pairs {
+            n += 1;
+            if approx == exact {
+                continue;
+            }
+            errors += 1;
+            let d = approx.abs_diff(exact);
+            let df = d as f64;
+            sum_abs += df;
+            sum_sq += df * df;
+            let rel = df / (exact.max(1) as f64);
+            sum_rel += rel;
+            wce = wce.max(d);
+            if rel > wcre {
+                wcre = rel;
+            }
+        }
+        let nf = n.max(1) as f64;
+        ErrorMetrics {
+            er: errors as f64 / nf,
+            mae: sum_abs / nf,
+            mse: sum_sq / nf,
+            mre: sum_rel / nf,
+            wce: wce as f64,
+            wcre,
+            n_vectors: n,
+            exhaustive,
+        }
+    }
+
+    /// Metrics of an approximate circuit's exhaustive output table against
+    /// the exact function (input index = packed operands).
+    pub fn vs_exact_table(table: &[u64], f: ArithFn) -> ErrorMetrics {
+        Self::from_pairs(
+            table
+                .iter()
+                .enumerate()
+                .map(|(i, &o)| (o, f.exact(i as u64))),
+            true,
+        )
+    }
+
+    /// Metrics over a sampled evaluation (`inputs[k]` packed operands).
+    pub fn vs_exact_sampled(inputs: &[u64], outputs: &[u64], f: ArithFn) -> ErrorMetrics {
+        Self::from_pairs(
+            inputs
+                .iter()
+                .zip(outputs)
+                .map(|(&i, &o)| (o, f.exact(i))),
+            false,
+        )
+    }
+
+    /// Express MAE / WCE / MSE as percentages of the function's maximum
+    /// output value, and ER / MRE / WCRE as percentages — the units of the
+    /// paper's Table II ("Relative Arithmetic errors").
+    pub fn as_percentages(&self, f: ArithFn) -> RelativeErrors {
+        let max_out = (1u128 << f.n_outputs()) as f64 - 1.0;
+        RelativeErrors {
+            er_pct: self.er * 100.0,
+            mae_pct: self.mae / max_out * 100.0,
+            mse_pct: self.mse / (max_out * max_out) * 100.0,
+            mre_pct: self.mre * 100.0,
+            wce_pct: self.wce / max_out * 100.0,
+            wcre_pct: self.wcre * 100.0,
+        }
+    }
+}
+
+/// Error metrics scaled the way Table II reports them.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RelativeErrors {
+    /// ER [%].
+    pub er_pct: f64,
+    /// MAE [% of max output].
+    pub mae_pct: f64,
+    /// MSE [% of max output squared].
+    pub mse_pct: f64,
+    /// MRE [%].
+    pub mre_pct: f64,
+    /// WCE [% of max output].
+    pub wce_pct: f64,
+    /// WCRE [%].
+    pub wcre_pct: f64,
+}
+
+/// Fast single-metric accumulator for the CGP inner loop: evaluates only the
+/// metric under optimisation, with early abort once `bound` is exceeded
+/// (sound for all six metrics — every one is monotone in its accumulator).
+pub struct SingleMetricAcc {
+    metric: Metric,
+    sum: f64,
+    worst: f64,
+    errors: u64,
+    n: u64,
+}
+
+impl SingleMetricAcc {
+    /// New accumulator for `metric`.
+    pub fn new(metric: Metric) -> Self {
+        SingleMetricAcc {
+            metric,
+            sum: 0.0,
+            worst: 0.0,
+            errors: 0,
+            n: 0,
+        }
+    }
+
+    /// Feed one `(approx, exact)` pair. Returns `false` if `bound` is
+    /// already provably exceeded (caller may abort).
+    #[inline]
+    pub fn push(&mut self, approx: u64, exact: u64, bound_times_n: f64) -> bool {
+        self.n += 1;
+        if approx != exact {
+            let d = approx.abs_diff(exact) as f64;
+            match self.metric {
+                Metric::Er => self.errors += 1,
+                Metric::Mae => self.sum += d,
+                Metric::Mse => self.sum += d * d,
+                Metric::Mre => self.sum += d / (exact.max(1) as f64),
+                Metric::Wce => self.worst = self.worst.max(d),
+                Metric::Wcre => self.worst = self.worst.max(d / (exact.max(1) as f64)),
+            }
+        }
+        match self.metric {
+            Metric::Wce | Metric::Wcre => self.worst <= bound_times_n,
+            Metric::Er => (self.errors as f64) <= bound_times_n,
+            _ => self.sum <= bound_times_n,
+        }
+    }
+
+    /// Final metric value over `total` vectors (pass the full vector count —
+    /// mean metrics divide by it even if the run aborted early).
+    pub fn value(&self, total: u64) -> f64 {
+        let nf = total.max(1) as f64;
+        match self.metric {
+            Metric::Er => self.errors as f64 / nf,
+            Metric::Mae | Metric::Mse | Metric::Mre => self.sum / nf,
+            Metric::Wce | Metric::Wcre => self.worst,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::baselines::{bam_multiplier, truncated_multiplier};
+    use crate::circuit::generators::wallace_multiplier;
+    use crate::circuit::simulator::eval_exhaustive_u64;
+
+    const MUL8: ArithFn = ArithFn::Mul { w: 8 };
+
+    #[test]
+    fn exact_circuit_has_zero_errors() {
+        let t = eval_exhaustive_u64(&wallace_multiplier(8));
+        let m = ErrorMetrics::vs_exact_table(&t, MUL8);
+        assert_eq!(m.er, 0.0);
+        assert_eq!(m.mae, 0.0);
+        assert_eq!(m.wce, 0.0);
+        assert_eq!(m.wcre, 0.0);
+        assert_eq!(m.n_vectors, 65536);
+        assert!(m.exhaustive);
+    }
+
+    #[test]
+    fn truncated_multiplier_known_mae() {
+        // trunc-to-7-bits: a loses bit0 → err_a = a&1, product error
+        // = a1*b + b1*(a - a1) summed analytically is tedious; instead check
+        // against a direct reference computation.
+        let t = eval_exhaustive_u64(&truncated_multiplier(8, 7));
+        let m = ErrorMetrics::vs_exact_table(&t, MUL8);
+        let mut sum = 0f64;
+        let mut wce = 0u64;
+        for a in 0u64..256 {
+            for b in 0u64..256 {
+                let approx = (a & !1) * (b & !1);
+                let d = (a * b).abs_diff(approx);
+                sum += d as f64;
+                wce = wce.max(d);
+            }
+        }
+        assert!((m.mae - sum / 65536.0).abs() < 1e-9);
+        assert_eq!(m.wce, wce as f64);
+        assert!(m.er > 0.5, "most products are odd-affected");
+    }
+
+    #[test]
+    fn metric_ordering_bam() {
+        // deeper vertical breaks ⇒ strictly larger MAE
+        let mut prev = -1.0;
+        for v in [2, 4, 6, 8] {
+            let t = eval_exhaustive_u64(&bam_multiplier(8, 0, v));
+            let m = ErrorMetrics::vs_exact_table(&t, MUL8);
+            assert!(m.mae > prev);
+            prev = m.mae;
+        }
+    }
+
+    #[test]
+    fn relative_percentages() {
+        let t = eval_exhaustive_u64(&bam_multiplier(8, 0, 4));
+        let m = ErrorMetrics::vs_exact_table(&t, MUL8);
+        let r = m.as_percentages(MUL8);
+        assert!((r.mae_pct - m.mae / 65535.0 * 100.0).abs() < 1e-12);
+        assert!(r.er_pct <= 100.0);
+        assert!(r.wce_pct >= r.mae_pct);
+    }
+
+    #[test]
+    fn single_metric_acc_matches_full() {
+        let t = eval_exhaustive_u64(&bam_multiplier(8, 1, 5));
+        let full = ErrorMetrics::vs_exact_table(&t, MUL8);
+        for metric in [
+            Metric::Er,
+            Metric::Mae,
+            Metric::Mse,
+            Metric::Mre,
+            Metric::Wce,
+            Metric::Wcre,
+        ] {
+            let mut acc = SingleMetricAcc::new(metric);
+            for (i, &o) in t.iter().enumerate() {
+                acc.push(o, MUL8.exact(i as u64), f64::INFINITY);
+            }
+            let v = acc.value(t.len() as u64);
+            assert!(
+                (v - metric.of(&full)).abs() < 1e-9,
+                "{}: {v} vs {}",
+                metric.name(),
+                metric.of(&full)
+            );
+        }
+    }
+
+    #[test]
+    fn single_metric_early_abort() {
+        let mut acc = SingleMetricAcc::new(Metric::Wce);
+        assert!(acc.push(100, 100, 5.0));
+        assert!(!acc.push(110, 100, 5.0), "wce 10 > bound 5 must abort");
+    }
+
+    #[test]
+    fn metric_parse_round_trip() {
+        for m in [
+            Metric::Er,
+            Metric::Mae,
+            Metric::Mse,
+            Metric::Mre,
+            Metric::Wce,
+            Metric::Wcre,
+        ] {
+            assert_eq!(Metric::parse(m.name()), Some(m));
+        }
+        assert_eq!(Metric::parse("EP"), Some(Metric::Er));
+        assert_eq!(Metric::parse("nope"), None);
+    }
+}

@@ -1,0 +1,18 @@
+//! Cartesian Genetic Programming engine (§II of the paper): chromosome
+//! encoding, validity-preserving mutation, the six error metrics of
+//! eqs. (1)–(6), a fast allocation-free evaluator, the (1+λ) evolutionary
+//! strategy with an error window, and Pareto-archive multi-objective search.
+
+pub mod chromosome;
+pub mod evaluator;
+pub mod evolve;
+pub mod metrics;
+pub mod mutation;
+pub mod pareto;
+
+pub use chromosome::{CgpParams, Chromosome};
+pub use evaluator::Evaluator;
+pub use evolve::{characterise, evolve, evolve_multi, EvolveConfig, EvolveReport, Harvested};
+pub use metrics::{ErrorMetrics, Metric, RelativeErrors, SELECTION_METRICS};
+pub use mutation::{mutate, mutated_copy};
+pub use pareto::{dominates, non_dominated_indices, ParetoArchive};

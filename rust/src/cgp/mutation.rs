@@ -1,0 +1,103 @@
+//! Point mutation (§II-B2): modify `h` randomly chosen genes, each to a new
+//! uniformly drawn *legal* value, so every offspring is a valid circuit by
+//! construction.
+
+use crate::circuit::gate::ALL_GATES;
+use crate::data::rng::Xoshiro256;
+
+use super::chromosome::Chromosome;
+
+/// Mutate `h` genes of `c` in place.
+pub fn mutate(c: &mut Chromosome, h: u32, rng: &mut Xoshiro256) {
+    let p = c.params;
+    let n_genes = p.n_genes();
+    for _ in 0..h {
+        let g = rng.next_usize(n_genes);
+        let node_genes = (p.n_nodes() * 3) as usize;
+        if g < node_genes {
+            let j = (g / 3) as u32;
+            match g % 3 {
+                0 => {
+                    // function gene
+                    c.genes[g] = ALL_GATES[rng.next_usize(ALL_GATES.len())].code() as u32;
+                }
+                _ => {
+                    // connection gene
+                    c.genes[g] = p.random_connection(p.col_of(j), rng);
+                }
+            }
+        } else {
+            // output gene
+            let total = p.n_inputs + p.n_nodes();
+            c.genes[g] = rng.next_below(total as u64) as u32;
+        }
+    }
+}
+
+/// Mutate a copy (the (1+λ) offspring constructor).
+pub fn mutated_copy(c: &Chromosome, h: u32, rng: &mut Xoshiro256) -> Chromosome {
+    let mut child = c.clone();
+    mutate(&mut child, h, rng);
+    child
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgp::chromosome::CgpParams;
+    use crate::circuit::generators::ripple_carry_adder;
+
+    #[test]
+    fn mutation_preserves_validity() {
+        let mut rng = Xoshiro256::new(3);
+        let seed = ripple_carry_adder(6);
+        let mut c = Chromosome::from_netlist(&seed, 8);
+        for _ in 0..500 {
+            mutate(&mut c, 5, &mut rng);
+            assert!(c.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn mutation_preserves_validity_multirow() {
+        let mut rng = Xoshiro256::new(9);
+        let params = CgpParams {
+            n_inputs: 5,
+            n_outputs: 3,
+            n_cols: 12,
+            n_rows: 4,
+            levels_back: 3,
+        };
+        let mut c = Chromosome::random(params, &mut rng);
+        for _ in 0..500 {
+            mutate(&mut c, 7, &mut rng);
+            assert!(c.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn mutated_copy_leaves_parent_untouched() {
+        let mut rng = Xoshiro256::new(4);
+        let seed = ripple_carry_adder(4);
+        let parent = Chromosome::from_netlist(&seed, 2);
+        let before = parent.genes.clone();
+        let child = mutated_copy(&parent, 5, &mut rng);
+        assert_eq!(parent.genes, before);
+        assert!(child.validate().is_ok());
+    }
+
+    #[test]
+    fn mutation_eventually_changes_genes() {
+        let mut rng = Xoshiro256::new(8);
+        let seed = ripple_carry_adder(4);
+        let parent = Chromosome::from_netlist(&seed, 2);
+        let mut changed = false;
+        for _ in 0..20 {
+            if mutated_copy(&parent, 5, &mut rng).genes != parent.genes {
+                changed = true;
+                break;
+            }
+        }
+        assert!(changed);
+    }
+}

@@ -1,0 +1,192 @@
+//! Pareto-dominance machinery (§II-C): non-dominated archives for
+//! multi-objective CGP and for the library's trade-off fronts.
+//!
+//! All objectives are minimised. An item dominates another if it is no worse
+//! in every objective and strictly better in at least one — the paper's
+//! definition verbatim.
+
+/// `a` dominates `b` (all objectives ≤, at least one <).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// A Pareto archive of items with attached objective vectors.
+#[derive(Debug, Clone)]
+pub struct ParetoArchive<T> {
+    items: Vec<(Vec<f64>, T)>,
+    /// Number of insertion attempts rejected as dominated.
+    pub rejected: u64,
+    /// Number of archive members displaced by new entries.
+    pub displaced: u64,
+}
+
+impl<T> Default for ParetoArchive<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> ParetoArchive<T> {
+    /// Empty archive.
+    pub fn new() -> Self {
+        ParetoArchive {
+            items: Vec::new(),
+            rejected: 0,
+            displaced: 0,
+        }
+    }
+
+    /// Try to insert; returns `true` if the item joined the front.
+    /// Duplicated objective vectors are rejected (first wins) to keep the
+    /// archive finite under neutral drift.
+    pub fn insert(&mut self, objectives: Vec<f64>, item: T) -> bool {
+        for (o, _) in &self.items {
+            if dominates(o, &objectives) || o == &objectives {
+                self.rejected += 1;
+                return false;
+            }
+        }
+        let before = self.items.len();
+        self.items.retain(|(o, _)| !dominates(&objectives, o));
+        self.displaced += (before - self.items.len()) as u64;
+        self.items.push((objectives, item));
+        true
+    }
+
+    /// Current front size.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Iterate `(objectives, item)`.
+    pub fn iter(&self) -> impl Iterator<Item = (&[f64], &T)> {
+        self.items.iter().map(|(o, t)| (o.as_slice(), t))
+    }
+
+    /// Borrow member `i`.
+    pub fn get(&self, i: usize) -> (&[f64], &T) {
+        let (o, t) = &self.items[i];
+        (o.as_slice(), t)
+    }
+
+    /// Consume into the raw front.
+    pub fn into_items(self) -> Vec<(Vec<f64>, T)> {
+        self.items
+    }
+
+    /// Members sorted by objective `k` ascending (used for "evenly spaced
+    /// along the power axis" selections).
+    pub fn sorted_by_objective(&self, k: usize) -> Vec<(&[f64], &T)> {
+        let mut v: Vec<_> = self.iter().collect();
+        v.sort_by(|a, b| a.0[k].partial_cmp(&b.0[k]).unwrap());
+        v
+    }
+}
+
+/// Indices of the non-dominated points among `objs` (generic helper for
+/// one-shot front extraction, e.g. Fig. 2's "blue points").
+pub fn non_dominated_indices(objs: &[Vec<f64>]) -> Vec<usize> {
+    let mut keep = Vec::new();
+    'outer: for (i, oi) in objs.iter().enumerate() {
+        for (j, oj) in objs.iter().enumerate() {
+            if i != j && (dominates(oj, oi) || (oj == oi && j < i)) {
+                continue 'outer;
+            }
+        }
+        keep.push(i);
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_definition() {
+        assert!(dominates(&[1.0, 2.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0]));
+        assert!(!dominates(&[2.0, 2.0], &[2.0, 2.0]), "equal does not dominate");
+    }
+
+    #[test]
+    fn archive_keeps_only_front() {
+        let mut a = ParetoArchive::new();
+        assert!(a.insert(vec![5.0, 5.0], "mid"));
+        assert!(a.insert(vec![1.0, 9.0], "left"));
+        assert!(a.insert(vec![9.0, 1.0], "right"));
+        assert_eq!(a.len(), 3);
+        // dominated insert rejected
+        assert!(!a.insert(vec![6.0, 6.0], "bad"));
+        assert_eq!(a.rejected, 1);
+        // dominating insert displaces
+        assert!(a.insert(vec![4.0, 4.0], "better"));
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.displaced, 1);
+        assert!(a.iter().all(|(_, &t)| t != "mid"));
+    }
+
+    #[test]
+    fn duplicate_objectives_rejected() {
+        let mut a = ParetoArchive::new();
+        assert!(a.insert(vec![1.0, 2.0], 0));
+        assert!(!a.insert(vec![1.0, 2.0], 1));
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn sorted_by_objective() {
+        let mut a = ParetoArchive::new();
+        a.insert(vec![3.0, 1.0], "c");
+        a.insert(vec![1.0, 3.0], "a");
+        a.insert(vec![2.0, 2.0], "b");
+        let s = a.sorted_by_objective(0);
+        let names: Vec<_> = s.iter().map(|(_, &t)| t).collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn non_dominated_extraction() {
+        let objs = vec![
+            vec![1.0, 5.0],
+            vec![2.0, 4.0],
+            vec![3.0, 4.5], // dominated by [2,4]
+            vec![5.0, 1.0],
+            vec![2.0, 4.0], // duplicate — first kept
+        ];
+        assert_eq!(non_dominated_indices(&objs), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn archive_front_invariant_random() {
+        // property: after many random inserts no member dominates another
+        let mut rng = crate::data::rng::Xoshiro256::new(77);
+        let mut a = ParetoArchive::new();
+        for i in 0..500 {
+            let o = vec![rng.next_f64(), rng.next_f64(), rng.next_f64()];
+            a.insert(o, i);
+        }
+        let items: Vec<_> = a.iter().map(|(o, _)| o.to_vec()).collect();
+        for x in &items {
+            for y in &items {
+                assert!(!dominates(x, y) || x == y);
+            }
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Baseline approximate multipliers the paper compares against in Table II:
+//! operand-truncated multipliers and the Broken-Array Multiplier (BAM) of
+//! Mahdiani et al. [7], parameterised by horizontal/vertical break levels.
+
+use super::generators::{partial_product_columns, sum_columns};
+use super::netlist::Netlist;
+
+/// `w×w` multiplier with both operands truncated to their `keep` most
+/// significant bits (the paper's "Truncated 7-bit" / "Truncated 6-bit"
+/// rows, with `w = 8`, `keep = 7` or `6`).
+///
+/// Implemented as an exact (`keep × keep`) partial-product array on the top
+/// bits; product bits below `2*(w-keep)` are constant 0.
+pub fn truncated_multiplier(w: u32, keep: u32) -> Netlist {
+    assert!(keep >= 1 && keep <= w);
+    let drop = w - keep;
+    let mut n = Netlist::new(2 * w, format!("mul{w}u_trunc{keep}"));
+    // keep pp(i,j) only when both operand bits are within the kept MSBs
+    let cols = partial_product_columns(&mut n, w, |i, j| i >= drop && j >= drop);
+    let sums = sum_columns(&mut n, cols);
+    for s in sums.into_iter().take(2 * w as usize) {
+        n.output(s);
+    }
+    n
+}
+
+/// Broken-Array Multiplier BAM(h, v) [Mahdiani et al., TCAS-I 2010].
+///
+/// The carry-save array of a `w×w` multiplier is "broken" by omitting
+/// partial-product cells:
+/// * **vertical break level `v`** drops every cell in product columns
+///   `< v` (i.e. `i + j < v`);
+/// * **horizontal break level `h`** additionally drops cells of rows
+///   `i < h` in the columns that survived the vertical break only partially
+///   (following the paper's figure, rows `< h` lose their cells for columns
+///   `i + j < w`, the LSB half of the array).
+///
+/// `BAM(0, 0)` is the exact multiplier.
+pub fn bam_multiplier(w: u32, h: u32, v: u32) -> Netlist {
+    assert!(h <= w && v <= 2 * w);
+    let mut n = Netlist::new(2 * w, format!("mul{w}u_bam_h{h}_v{v}"));
+    let cols = partial_product_columns(&mut n, w, |i, j| {
+        let col = i + j;
+        if col < v {
+            return false; // vertical break
+        }
+        if i < h && col < w {
+            return false; // horizontal break (LSB half)
+        }
+        true
+    });
+    let sums = sum_columns(&mut n, cols);
+    for s in sums.into_iter().take(2 * w as usize) {
+        n.output(s);
+    }
+    n
+}
+
+/// The Table II baseline set for `w = 8`: two truncated and eight BAM
+/// configurations, exactly the rows of the paper.
+pub fn table2_baselines() -> Vec<Netlist> {
+    vec![
+        truncated_multiplier(8, 7),
+        truncated_multiplier(8, 6),
+        bam_multiplier(8, 0, 2),
+        bam_multiplier(8, 0, 4),
+        bam_multiplier(8, 1, 3),
+        bam_multiplier(8, 0, 6),
+        bam_multiplier(8, 1, 6),
+        bam_multiplier(8, 0, 7),
+        bam_multiplier(8, 2, 7),
+        bam_multiplier(8, 2, 8),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::simulator::eval_exhaustive_u64;
+
+    fn max_abs_err(n: &Netlist, w: u32) -> u64 {
+        let t = eval_exhaustive_u64(n);
+        let mut worst = 0u64;
+        for (idx, &v) in t.iter().enumerate() {
+            let a = (idx as u64) & ((1 << w) - 1);
+            let b = (idx as u64) >> w;
+            worst = worst.max((a * b).abs_diff(v));
+        }
+        worst
+    }
+
+    #[test]
+    fn truncation_semantics() {
+        // truncated multiplier must equal (a & ~mask) * (b & ~mask)
+        let keep = 6;
+        let w = 8;
+        let n = truncated_multiplier(w, keep);
+        let t = eval_exhaustive_u64(&n);
+        let mask = (1u64 << (w - keep)) - 1;
+        for (idx, &v) in t.iter().enumerate() {
+            let a = (idx as u64) & 0xFF;
+            let b = (idx as u64) >> 8;
+            assert_eq!(v, (a & !mask) * (b & !mask), "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn trunc_full_keep_is_exact() {
+        assert_eq!(max_abs_err(&truncated_multiplier(8, 8), 8), 0);
+    }
+
+    #[test]
+    fn bam_zero_breaks_is_exact() {
+        assert_eq!(max_abs_err(&bam_multiplier(8, 0, 0), 8), 0);
+    }
+
+    #[test]
+    fn bam_error_monotone_in_v() {
+        let mut prev = 0;
+        for v in [0, 2, 4, 6, 8] {
+            let e = max_abs_err(&bam_multiplier(8, 0, v), 8);
+            assert!(e >= prev, "WCE must not decrease with v (v={v})");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn bam_cheaper_with_more_breaking() {
+        let exact = bam_multiplier(8, 0, 0).active_gate_count();
+        let broken = bam_multiplier(8, 2, 8).active_gate_count();
+        assert!(broken < exact, "{broken} !< {exact}");
+    }
+
+    #[test]
+    fn bam_underestimates_only() {
+        // BAM only removes positive partial products → approx ≤ exact.
+        let t = eval_exhaustive_u64(&bam_multiplier(8, 1, 6));
+        for (idx, &v) in t.iter().enumerate() {
+            let a = (idx as u64) & 0xFF;
+            let b = (idx as u64) >> 8;
+            assert!(v <= a * b);
+        }
+    }
+
+    #[test]
+    fn baseline_set_shape() {
+        let set = table2_baselines();
+        assert_eq!(set.len(), 10);
+        for n in &set {
+            assert!(n.validate().is_ok());
+            assert_eq!(n.n_inputs, 16);
+            assert_eq!(n.n_outputs(), 16);
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Technology cost model — the stand-in for the paper's Synopsys Design
+//! Compiler synthesis step (45 nm, Vdd = 1 V).
+//!
+//! The paper uses synthesis only to obtain area / delay / power numbers that
+//! *rank* circuits on Pareto fronts; its CGP fitness already approximates
+//! cost as "the sum of weighted areas of the gates used in the circuit"
+//! (§III). We therefore model a 45 nm standard-cell library with per-gate
+//! area, leakage, intrinsic switching energy and delay (values patterned on
+//! the NanGate 45 nm Open Cell Library), and estimate dynamic power from the
+//! simulator's zero-delay switching activities. The substitution is recorded
+//! in `DESIGN.md` §4.
+
+
+use super::gate::GateKind;
+use super::netlist::Netlist;
+use super::simulator::Activity;
+
+/// Per-gate physical parameters of one cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellParams {
+    /// Cell area [µm²].
+    pub area_um2: f64,
+    /// Leakage power [nW].
+    pub leakage_nw: f64,
+    /// Energy per output toggle [fJ] (internal + average load).
+    pub toggle_energy_fj: f64,
+    /// Pin-to-output delay [ps].
+    pub delay_ps: f64,
+}
+
+const ZERO_CELL: CellParams = CellParams {
+    area_um2: 0.0,
+    leakage_nw: 0.0,
+    toggle_energy_fj: 0.0,
+    delay_ps: 0.0,
+};
+
+/// The 45 nm-style technology model.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Clock frequency the dynamic power is reported at [GHz].
+    pub clock_ghz: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { clock_ghz: 1.0 }
+    }
+}
+
+impl CostModel {
+    /// Cell parameters for a gate kind. Identity gates and constants are
+    /// free: CGP uses them as wires, synthesis would absorb them.
+    pub fn cell(&self, kind: GateKind) -> CellParams {
+        match kind {
+            GateKind::Identity | GateKind::Const0 | GateKind::Const1 => ZERO_CELL,
+            GateKind::Not => CellParams {
+                area_um2: 0.53,
+                leakage_nw: 9.8,
+                toggle_energy_fj: 0.40,
+                delay_ps: 12.0,
+            },
+            GateKind::Nand => CellParams {
+                area_um2: 0.80,
+                leakage_nw: 11.2,
+                toggle_energy_fj: 0.55,
+                delay_ps: 14.0,
+            },
+            GateKind::Nor => CellParams {
+                area_um2: 0.80,
+                leakage_nw: 11.6,
+                toggle_energy_fj: 0.58,
+                delay_ps: 16.0,
+            },
+            GateKind::And => CellParams {
+                area_um2: 1.06,
+                leakage_nw: 14.9,
+                toggle_energy_fj: 0.72,
+                delay_ps: 20.0,
+            },
+            GateKind::Or => CellParams {
+                area_um2: 1.06,
+                leakage_nw: 15.3,
+                toggle_energy_fj: 0.75,
+                delay_ps: 21.0,
+            },
+            GateKind::Xor => CellParams {
+                area_um2: 1.60,
+                leakage_nw: 24.1,
+                toggle_energy_fj: 1.10,
+                delay_ps: 30.0,
+            },
+            GateKind::Xnor => CellParams {
+                area_um2: 1.60,
+                leakage_nw: 24.4,
+                toggle_energy_fj: 1.12,
+                delay_ps: 30.0,
+            },
+        }
+    }
+
+    /// The CGP fitness cost: sum of weighted (cell) areas of *active* gates —
+    /// exactly the paper's cost term. Cheap: no simulation required.
+    pub fn weighted_area(&self, n: &Netlist) -> f64 {
+        let active = n.active_gates();
+        n.nodes
+            .iter()
+            .zip(active)
+            .filter(|(_, a)| *a)
+            .map(|(node, _)| self.cell(node.kind).area_um2)
+            .sum()
+    }
+
+    /// Full characterisation: area, critical-path delay, leakage and
+    /// activity-based dynamic power. `activity` must come from a simulation
+    /// of this same netlist (signal indices must line up).
+    pub fn evaluate(&self, n: &Netlist, activity: &Activity) -> CircuitCost {
+        assert_eq!(
+            activity.ones_frac.len(),
+            n.n_signals() as usize,
+            "activity profile does not match netlist"
+        );
+        let active = n.active_gates();
+        let mut area = 0.0;
+        let mut leakage_nw = 0.0;
+        let mut dynamic_uw = 0.0;
+        let mut arrival = vec![0.0f64; n.n_signals() as usize];
+        let mut gates = 0usize;
+        for (g, node) in n.nodes.iter().enumerate() {
+            let sig = n.n_inputs as usize + g;
+            let cell = self.cell(node.kind);
+            let input_arrival = match node.kind.arity() {
+                0 => 0.0,
+                1 => arrival[node.a as usize],
+                _ => arrival[node.a as usize].max(arrival[node.b as usize]),
+            };
+            arrival[sig] = input_arrival + cell.delay_ps;
+            if !active[g] {
+                continue;
+            }
+            if cell.area_um2 > 0.0 {
+                gates += 1;
+            }
+            area += cell.area_um2;
+            leakage_nw += cell.leakage_nw;
+            // dynamic power [µW] = α · E[fJ] · f[GHz]
+            // (fJ × 1e9/s = 1e-6 W)
+            dynamic_uw += activity.switching(sig) * cell.toggle_energy_fj * self.clock_ghz;
+        }
+        let delay_ps = n
+            .outputs
+            .iter()
+            .map(|&o| arrival[o as usize])
+            .fold(0.0, f64::max);
+        CircuitCost {
+            gates,
+            area_um2: area,
+            delay_ps,
+            leakage_uw: leakage_nw * 1e-3,
+            dynamic_uw,
+            power_uw: dynamic_uw + leakage_nw * 1e-3,
+        }
+    }
+}
+
+/// Synthesis-style characterisation of one circuit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CircuitCost {
+    /// Active logic-gate count (buffers/constants excluded).
+    pub gates: usize,
+    /// Total active cell area [µm²].
+    pub area_um2: f64,
+    /// Critical-path delay [ps].
+    pub delay_ps: f64,
+    /// Leakage power [µW].
+    pub leakage_uw: f64,
+    /// Activity-based dynamic power [µW] at the model's clock.
+    pub dynamic_uw: f64,
+    /// Total power [µW].
+    pub power_uw: f64,
+}
+
+impl CircuitCost {
+    /// Power relative to a reference circuit (the paper's "Power [%]"
+    /// column, where the exact 8-bit multiplier is 100 %).
+    pub fn relative_power(&self, reference: &CircuitCost) -> f64 {
+        if reference.power_uw <= 0.0 {
+            return 0.0;
+        }
+        100.0 * self.power_uw / reference.power_uw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::baselines::bam_multiplier;
+    use crate::circuit::generators::{array_multiplier, ripple_carry_adder, wallace_multiplier};
+    use crate::circuit::simulator::activity_exhaustive;
+
+    fn cost_of(n: &Netlist) -> CircuitCost {
+        let (_, act) = activity_exhaustive(n);
+        CostModel::default().evaluate(n, &act)
+    }
+
+    #[test]
+    fn exact_mult_cost_is_positive_and_consistent() {
+        let n = wallace_multiplier(8);
+        let c = cost_of(&n);
+        assert!(c.area_um2 > 0.0);
+        assert!(c.delay_ps > 0.0);
+        assert!(c.dynamic_uw > 0.0);
+        assert!(c.leakage_uw > 0.0);
+        assert!((c.power_uw - (c.dynamic_uw + c.leakage_uw)).abs() < 1e-9);
+        assert_eq!(c.gates, n.active_gate_count());
+    }
+
+    #[test]
+    fn weighted_area_tracks_gate_removal() {
+        let model = CostModel::default();
+        let exact = bam_multiplier(8, 0, 0);
+        let broken = bam_multiplier(8, 2, 8);
+        assert!(model.weighted_area(&broken) < model.weighted_area(&exact));
+    }
+
+    #[test]
+    fn broken_multiplier_uses_less_power() {
+        let exact = cost_of(&bam_multiplier(8, 0, 0));
+        let broken = cost_of(&bam_multiplier(8, 2, 8));
+        assert!(broken.power_uw < exact.power_uw);
+        let rel = broken.relative_power(&exact);
+        assert!(rel > 0.0 && rel < 100.0, "rel={rel}");
+    }
+
+    #[test]
+    fn wallace_faster_than_array() {
+        let a = cost_of(&array_multiplier(8));
+        let w = cost_of(&wallace_multiplier(8));
+        assert!(w.delay_ps < a.delay_ps);
+    }
+
+    #[test]
+    fn adder_scales_with_width() {
+        let c4 = cost_of(&ripple_carry_adder(4));
+        let c8 = cost_of(&ripple_carry_adder(8));
+        assert!(c8.area_um2 > 1.8 * c4.area_um2);
+        assert!(c8.delay_ps > c4.delay_ps);
+    }
+
+    #[test]
+    fn free_cells_are_free() {
+        let m = CostModel::default();
+        for k in [GateKind::Identity, GateKind::Const0, GateKind::Const1] {
+            let c = m.cell(k);
+            assert_eq!(c.area_um2, 0.0);
+            assert_eq!(c.toggle_energy_fj, 0.0);
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! The two-input gate set Γ used throughout the paper (Fig. 1).
+//!
+//! Γ = {identity, not, and, or, xor, nand, nor, xnor, const0, const1} with
+//! the paper's integer function codes 0–9. Gates are evaluated bit-parallel
+//! over 64-lane words by [`GateKind::eval_word`].
+
+
+/// Gate function codes, numbered exactly as in the paper's Fig. 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum GateKind {
+    /// `0`: identity (buffer) of input a.
+    Identity = 0,
+    /// `1`: NOT a.
+    Not = 1,
+    /// `2`: a AND b.
+    And = 2,
+    /// `3`: a OR b.
+    Or = 3,
+    /// `4`: a XOR b.
+    Xor = 4,
+    /// `5`: a NAND b.
+    Nand = 5,
+    /// `6`: a NOR b.
+    Nor = 6,
+    /// `7`: a XNOR b.
+    Xnor = 7,
+    /// `8`: constant 0.
+    Const0 = 8,
+    /// `9`: constant 1.
+    Const1 = 9,
+}
+
+/// All ten gate kinds in function-code order.
+pub const ALL_GATES: [GateKind; 10] = [
+    GateKind::Identity,
+    GateKind::Not,
+    GateKind::And,
+    GateKind::Or,
+    GateKind::Xor,
+    GateKind::Nand,
+    GateKind::Nor,
+    GateKind::Xnor,
+    GateKind::Const0,
+    GateKind::Const1,
+];
+
+impl GateKind {
+    /// Decode a function code (as stored in a CGP chromosome).
+    pub fn from_code(code: u8) -> Option<Self> {
+        ALL_GATES.get(code as usize).copied()
+    }
+
+    /// The function code of this gate (chromosome encoding).
+    #[inline]
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    /// Number of inputs actually read by the gate (≤ 2; CGP still stores two
+    /// connection genes for every node).
+    pub fn arity(self) -> usize {
+        match self {
+            GateKind::Identity | GateKind::Not => 1,
+            GateKind::Const0 | GateKind::Const1 => 0,
+            _ => 2,
+        }
+    }
+
+    /// Evaluate the gate over 64 test vectors packed into `u64` words
+    /// (lane *i* of every word belongs to test vector *i*).
+    #[inline(always)]
+    pub fn eval_word(self, a: u64, b: u64) -> u64 {
+        match self {
+            GateKind::Identity => a,
+            GateKind::Not => !a,
+            GateKind::And => a & b,
+            GateKind::Or => a | b,
+            GateKind::Xor => a ^ b,
+            GateKind::Nand => !(a & b),
+            GateKind::Nor => !(a | b),
+            GateKind::Xnor => !(a ^ b),
+            GateKind::Const0 => 0,
+            GateKind::Const1 => !0,
+        }
+    }
+
+    /// Evaluate over single-bit booleans (used by slow-path checks/tests).
+    pub fn eval_bit(self, a: bool, b: bool) -> bool {
+        self.eval_word(bmask(a), bmask(b)) & 1 == 1
+    }
+
+    /// Short lowercase mnemonic (used in reports and serialized netlists).
+    pub fn name(self) -> &'static str {
+        match self {
+            GateKind::Identity => "buf",
+            GateKind::Not => "not",
+            GateKind::And => "and",
+            GateKind::Or => "or",
+            GateKind::Xor => "xor",
+            GateKind::Nand => "nand",
+            GateKind::Nor => "nor",
+            GateKind::Xnor => "xnor",
+            GateKind::Const0 => "zero",
+            GateKind::Const1 => "one",
+        }
+    }
+}
+
+#[inline(always)]
+fn bmask(b: bool) -> u64 {
+    if b {
+        !0
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_round_trip() {
+        for g in ALL_GATES {
+            assert_eq!(GateKind::from_code(g.code()), Some(g));
+        }
+        assert_eq!(GateKind::from_code(10), None);
+        assert_eq!(GateKind::from_code(255), None);
+    }
+
+    #[test]
+    fn truth_tables() {
+        use GateKind::*;
+        let cases: [(GateKind, [bool; 4]); 8] = [
+            // outputs for (a,b) = (0,0),(0,1),(1,0),(1,1)
+            (And, [false, false, false, true]),
+            (Or, [false, true, true, true]),
+            (Xor, [false, true, true, false]),
+            (Nand, [true, true, true, false]),
+            (Nor, [true, false, false, false]),
+            (Xnor, [true, false, false, true]),
+            (Identity, [false, false, true, true]),
+            (Not, [true, true, false, false]),
+        ];
+        for (g, expect) in cases {
+            for (i, &e) in expect.iter().enumerate() {
+                let a = i & 2 != 0;
+                let b = i & 1 != 0;
+                assert_eq!(g.eval_bit(a, b), e, "{g:?}({a},{b})");
+            }
+        }
+        assert!(!Const0.eval_bit(true, true));
+        assert!(Const1.eval_bit(false, false));
+    }
+
+    #[test]
+    fn word_eval_matches_bit_eval() {
+        // exhaustive over all (gate, lane pattern) combinations on a few words
+        for g in ALL_GATES {
+            let a = 0xDEAD_BEEF_0123_4567u64;
+            let b = 0xF0F0_A5A5_3C3C_9999u64;
+            let w = g.eval_word(a, b);
+            for lane in 0..64 {
+                let ab = a >> lane & 1 == 1;
+                let bb = b >> lane & 1 == 1;
+                assert_eq!(w >> lane & 1 == 1, g.eval_bit(ab, bb), "{g:?} lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn arity() {
+        assert_eq!(GateKind::Not.arity(), 1);
+        assert_eq!(GateKind::And.arity(), 2);
+        assert_eq!(GateKind::Const0.arity(), 0);
+    }
+}

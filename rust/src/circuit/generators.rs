@@ -1,0 +1,337 @@
+//! Exact arithmetic-circuit generators — the conventional implementations
+//! the paper seeds CGP with (§III: "we seeded CGP with conventional
+//! implementations of target arithmetic circuits").
+//!
+//! Operand convention for all `w`-bit two-operand circuits: primary inputs
+//! `0..w` are operand A (LSB first) and `w..2w` operand B, so the exhaustive
+//! enumeration index is `a | (b << w)`. Adders drive `w+1` outputs,
+//! multipliers `2w`.
+
+use super::gate::GateKind;
+use super::netlist::{Netlist, SignalId};
+
+/// (sum, carry) of a half adder.
+pub(crate) fn half_adder(n: &mut Netlist, a: SignalId, b: SignalId) -> (SignalId, SignalId) {
+    let s = n.push(GateKind::Xor, a, b);
+    let c = n.push(GateKind::And, a, b);
+    (s, c)
+}
+
+/// (sum, carry) of a full adder (9 gates worth 5 logic gates).
+pub(crate) fn full_adder(
+    n: &mut Netlist,
+    a: SignalId,
+    b: SignalId,
+    cin: SignalId,
+) -> (SignalId, SignalId) {
+    let axb = n.push(GateKind::Xor, a, b);
+    let s = n.push(GateKind::Xor, axb, cin);
+    let t0 = n.push(GateKind::And, a, b);
+    let t1 = n.push(GateKind::And, axb, cin);
+    let c = n.push(GateKind::Or, t0, t1);
+    (s, c)
+}
+
+/// `w`-bit ripple-carry adder: `w+1` outputs (sum bits then carry-out).
+pub fn ripple_carry_adder(w: u32) -> Netlist {
+    assert!(w >= 1);
+    let mut n = Netlist::new(2 * w, format!("add{w}u_rca"));
+    let mut sums = Vec::with_capacity(w as usize + 1);
+    let (s0, mut carry) = half_adder(&mut n, 0, w);
+    sums.push(s0);
+    for i in 1..w {
+        let (s, c) = full_adder(&mut n, i, w + i, carry);
+        sums.push(s);
+        carry = c;
+    }
+    sums.push(carry);
+    for s in sums {
+        n.output(s);
+    }
+    n
+}
+
+/// `w`-bit Kogge–Stone parallel-prefix adder — the "carry-lookahead"-class
+/// seed: structurally very different from the RCA, giving CGP a second
+/// starting point in the design space (log-depth instead of linear).
+pub fn kogge_stone_adder(w: u32) -> Netlist {
+    assert!(w >= 1);
+    let mut n = Netlist::new(2 * w, format!("add{w}u_ks"));
+    // bit-level generate/propagate
+    let mut g: Vec<SignalId> = (0..w).map(|i| n.push(GateKind::And, i, w + i)).collect();
+    let mut p: Vec<SignalId> = (0..w).map(|i| n.push(GateKind::Xor, i, w + i)).collect();
+    let p0 = p.clone(); // half-sum bits for the final XOR stage
+    // prefix tree: (g,p) ∘ (g',p') = (g | p&g', p&p')
+    let mut dist = 1;
+    while dist < w {
+        let mut g_next = g.clone();
+        let mut p_next = p.clone();
+        for i in dist..w {
+            let t = n.push(GateKind::And, p[i as usize], g[(i - dist) as usize]);
+            g_next[i as usize] = n.push(GateKind::Or, g[i as usize], t);
+            p_next[i as usize] = n.push(GateKind::And, p[i as usize], p[(i - dist) as usize]);
+        }
+        g = g_next;
+        p = p_next;
+        dist *= 2;
+    }
+    // sum_i = p0_i ^ carry_i, carry_0 = 0, carry_{i+1} = G_i
+    n.output(p0[0]);
+    for i in 1..w as usize {
+        let s = n.push(GateKind::Xor, p0[i], g[i - 1]);
+        n.output(s);
+    }
+    n.output(g[w as usize - 1]); // carry-out
+    n
+}
+
+/// Per-column partial-product stacks for a `w×w` unsigned multiplier, with a
+/// keep-predicate allowing the BAM baseline to omit cells.
+pub(crate) fn partial_product_columns(
+    n: &mut Netlist,
+    w: u32,
+    keep: impl Fn(u32, u32) -> bool,
+) -> Vec<Vec<SignalId>> {
+    let mut cols: Vec<Vec<SignalId>> = vec![Vec::new(); 2 * w as usize];
+    for i in 0..w {
+        // row i: multiplier bit b_i
+        for j in 0..w {
+            // column j: multiplicand bit a_j
+            if keep(i, j) {
+                let pp = n.push(GateKind::And, j, w + i);
+                cols[(i + j) as usize].push(pp);
+            }
+        }
+    }
+    cols
+}
+
+/// Reduce per-column stacks to a single row with full/half adders
+/// (Wallace-style 3:2 / 2:2 compression), then a final ripple stage.
+/// Returns one signal per output column; empty columns yield constant 0.
+pub(crate) fn sum_columns(n: &mut Netlist, mut cols: Vec<Vec<SignalId>>) -> Vec<SignalId> {
+    let n_cols = cols.len();
+    // Compression phase: while some column has >2 entries, compress.
+    loop {
+        let max_h = cols.iter().map(Vec::len).max().unwrap_or(0);
+        if max_h <= 2 {
+            break;
+        }
+        let mut next: Vec<Vec<SignalId>> = vec![Vec::new(); n_cols + 1];
+        for (c, stack) in cols.iter().enumerate() {
+            let mut k = 0;
+            while stack.len() - k >= 3 {
+                let (s, carry) = full_adder(n, stack[k], stack[k + 1], stack[k + 2]);
+                next[c].push(s);
+                next[c + 1].push(carry);
+                k += 3;
+            }
+            if stack.len() - k == 2 {
+                let (s, carry) = half_adder(n, stack[k], stack[k + 1]);
+                next[c].push(s);
+                next[c + 1].push(carry);
+                k += 2;
+            }
+            if stack.len() - k == 1 {
+                next[c].push(stack[k]);
+            }
+        }
+        next.truncate(n_cols);
+        cols = next;
+    }
+    // Final carry-propagate stage over the ≤2-high rows.
+    let mut out = Vec::with_capacity(n_cols);
+    let mut carry: Option<SignalId> = None;
+    for stack in cols.iter() {
+        let (bit, new_carry) = match (stack.len(), carry) {
+            (0, None) => (None, None),
+            (0, Some(c)) => (Some(c), None),
+            (1, None) => (Some(stack[0]), None),
+            (1, Some(c)) => {
+                let (s, co) = half_adder(n, stack[0], c);
+                (Some(s), Some(co))
+            }
+            (2, None) => {
+                let (s, co) = half_adder(n, stack[0], stack[1]);
+                (Some(s), Some(co))
+            }
+            (2, Some(c)) => {
+                let (s, co) = full_adder(n, stack[0], stack[1], c);
+                (Some(s), Some(co))
+            }
+            _ => unreachable!("columns compressed to ≤2"),
+        };
+        let bit = bit.unwrap_or_else(|| n.push(GateKind::Const0, 0, 0));
+        out.push(bit);
+        carry = new_carry;
+    }
+    out
+}
+
+/// `w×w` unsigned array multiplier (ripple-carry array): the classic
+/// structure the BAM baseline breaks, and one of the CGP seeds.
+pub fn array_multiplier(w: u32) -> Netlist {
+    assert!(w >= 1);
+    let mut n = Netlist::new(2 * w, format!("mul{w}u_array"));
+    // rows of partial products accumulated with a ripple adder per row —
+    // deliberately the sequential array structure (deep, cheap on wiring).
+    let mut acc: Vec<SignalId> = Vec::new(); // running sum, LSB first
+    for i in 0..w {
+        let row: Vec<SignalId> = (0..w).map(|j| n.push(GateKind::And, j, w + i)).collect();
+        if i == 0 {
+            acc = row;
+            continue;
+        }
+        // add `row << i` into acc: bits below i are already final
+        let mut carry: Option<SignalId> = None;
+        for (j, &r) in row.iter().enumerate() {
+            let pos = i as usize + j;
+            let (s, c) = if pos < acc.len() {
+                match carry {
+                    None => {
+                        let (s, c) = half_adder(&mut n, acc[pos], r);
+                        (s, c)
+                    }
+                    Some(ci) => {
+                        let (s, c) = full_adder(&mut n, acc[pos], r, ci);
+                        (s, c)
+                    }
+                }
+            } else {
+                match carry {
+                    None => (r, n.push(GateKind::Const0, 0, 0)),
+                    Some(ci) => half_adder(&mut n, r, ci),
+                }
+            };
+            if pos < acc.len() {
+                acc[pos] = s;
+            } else {
+                acc.push(s);
+            }
+            carry = Some(c);
+        }
+        if let Some(c) = carry {
+            acc.push(c);
+        }
+    }
+    acc.truncate(2 * w as usize);
+    while acc.len() < 2 * w as usize {
+        let z = n.push(GateKind::Const0, 0, 0);
+        acc.push(z);
+    }
+    for s in acc {
+        n.output(s);
+    }
+    n
+}
+
+/// `w×w` unsigned Wallace-tree multiplier — the fast-seed variant
+/// (log-depth partial-product reduction).
+pub fn wallace_multiplier(w: u32) -> Netlist {
+    assert!(w >= 1);
+    let mut n = Netlist::new(2 * w, format!("mul{w}u_wallace"));
+    let cols = partial_product_columns(&mut n, w, |_, _| true);
+    let sums = sum_columns(&mut n, cols);
+    for s in sums.into_iter().take(2 * w as usize) {
+        n.output(s);
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::simulator::eval_exhaustive_u64;
+
+    fn check_adder(n: &Netlist, w: u32) {
+        let t = eval_exhaustive_u64(n);
+        for (idx, &v) in t.iter().enumerate() {
+            let a = (idx as u64) & ((1 << w) - 1);
+            let b = (idx as u64) >> w;
+            assert_eq!(v, a + b, "{}: {a}+{b}", n.name);
+        }
+    }
+
+    fn check_multiplier(n: &Netlist, w: u32) {
+        let t = eval_exhaustive_u64(n);
+        for (idx, &v) in t.iter().enumerate() {
+            let a = (idx as u64) & ((1 << w) - 1);
+            let b = (idx as u64) >> w;
+            assert_eq!(v, a * b, "{}: {a}*{b}", n.name);
+        }
+    }
+
+    #[test]
+    fn rca_widths() {
+        for w in 1..=8 {
+            check_adder(&ripple_carry_adder(w), w);
+        }
+    }
+
+    #[test]
+    fn kogge_stone_widths() {
+        for w in 1..=8 {
+            check_adder(&kogge_stone_adder(w), w);
+        }
+    }
+
+    #[test]
+    fn array_mult_widths() {
+        for w in 1..=8 {
+            check_multiplier(&array_multiplier(w), w);
+        }
+    }
+
+    #[test]
+    fn wallace_mult_widths() {
+        for w in 1..=8 {
+            check_multiplier(&wallace_multiplier(w), w);
+        }
+    }
+
+    #[test]
+    fn wallace_shallower_than_array() {
+        let a = array_multiplier(8);
+        let w = wallace_multiplier(8);
+        assert!(
+            w.depth() < a.depth(),
+            "wallace depth {} should beat array depth {}",
+            w.depth(),
+            a.depth()
+        );
+    }
+
+    #[test]
+    fn seeds_validate_and_are_active() {
+        for n in [
+            ripple_carry_adder(8),
+            kogge_stone_adder(8),
+            array_multiplier(8),
+            wallace_multiplier(8),
+        ] {
+            assert!(n.validate().is_ok(), "{}", n.name);
+            assert!(n.active_gate_count() > 0, "{}", n.name);
+        }
+    }
+
+    #[test]
+    fn wide_adders_sampled() {
+        use crate::circuit::simulator::eval_vectors_u64;
+        // 16-bit adder exceeds comfortable exhaustive here; sample instead.
+        let w = 16;
+        let n = ripple_carry_adder(w);
+        let vecs: Vec<u64> = (0..500u64)
+            .map(|k| {
+                let a = k.wrapping_mul(0x9E37_79B9) & 0xFFFF;
+                let b = k.wrapping_mul(0x85EB_CA6B) & 0xFFFF;
+                a | (b << w)
+            })
+            .collect();
+        let got = eval_vectors_u64(&n, &vecs);
+        for (k, &v) in vecs.iter().enumerate() {
+            let a = v & 0xFFFF;
+            let b = v >> w;
+            assert_eq!(got[k], a + b);
+        }
+    }
+}

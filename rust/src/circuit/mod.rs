@@ -1,0 +1,19 @@
+//! Gate-level circuit substrate: representation, simulation, exact and
+//! baseline generators, technology cost model and verification helpers.
+//!
+//! This module is the foundation both the CGP engine (`crate::cgp`) and the
+//! library (`crate::library`) are built on; see `DESIGN.md` §5.
+
+pub mod baselines;
+pub mod cost;
+pub mod gate;
+pub mod generators;
+pub mod netlist;
+pub mod simulator;
+pub mod verify;
+
+pub use cost::{CircuitCost, CostModel};
+pub use gate::GateKind;
+pub use netlist::{Netlist, Node, SignalId};
+pub use simulator::{Activity, BitSim};
+pub use verify::ArithFn;

@@ -1,0 +1,298 @@
+//! Gate-level netlist: the circuit representation shared by the generators,
+//! the CGP decoder, the simulator and the cost model.
+//!
+//! A [`Netlist`] is a DAG over *signals*. Signal ids are assigned densely:
+//! `0..n_inputs` are the primary inputs, every added gate creates the next
+//! id. Outputs are an ordered list of signal ids. Nodes are stored in
+//! topological order by construction (a gate may only reference
+//! already-existing signals), which makes simulation a single forward sweep.
+
+use std::collections::HashMap;
+
+
+use super::gate::GateKind;
+
+/// Id of a signal (primary input or gate output) within a netlist.
+pub type SignalId = u32;
+
+/// One gate instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Node {
+    /// Gate function.
+    pub kind: GateKind,
+    /// First input signal.
+    pub a: SignalId,
+    /// Second input signal (ignored by arity-<2 gates but always valid).
+    pub b: SignalId,
+}
+
+/// A combinational circuit as a topologically ordered gate list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Netlist {
+    /// Number of primary inputs.
+    pub n_inputs: u32,
+    /// Gates; gate `g` drives signal `n_inputs + g`.
+    pub nodes: Vec<Node>,
+    /// Primary outputs (ordered, may repeat or reference inputs directly).
+    pub outputs: Vec<SignalId>,
+    /// Human-readable name, e.g. `mul8u_wallace` or `mul8u_evo_a3f2`.
+    pub name: String,
+}
+
+impl Netlist {
+    /// Create an empty netlist with `n_inputs` primary inputs.
+    pub fn new(n_inputs: u32, name: impl Into<String>) -> Self {
+        Netlist {
+            n_inputs,
+            nodes: Vec::new(),
+            outputs: Vec::new(),
+            name: name.into(),
+        }
+    }
+
+    /// Total number of signals (inputs + gate outputs).
+    #[inline]
+    pub fn n_signals(&self) -> u32 {
+        self.n_inputs + self.nodes.len() as u32
+    }
+
+    /// Number of primary outputs.
+    #[inline]
+    pub fn n_outputs(&self) -> u32 {
+        self.outputs.len() as u32
+    }
+
+    /// Signal id of primary input `i`.
+    #[inline]
+    pub fn input(&self, i: u32) -> SignalId {
+        debug_assert!(i < self.n_inputs);
+        i
+    }
+
+    /// Append a gate; returns the signal it drives. Panics if an operand
+    /// references a not-yet-existing signal (would break topological order).
+    pub fn push(&mut self, kind: GateKind, a: SignalId, b: SignalId) -> SignalId {
+        let id = self.n_signals();
+        assert!(a < id && b < id, "operand references future signal");
+        self.nodes.push(Node { kind, a, b });
+        id
+    }
+
+    /// Convenience unary gate.
+    pub fn push1(&mut self, kind: GateKind, a: SignalId) -> SignalId {
+        self.push(kind, a, a)
+    }
+
+    /// Constant-0 signal.
+    pub fn zero(&mut self) -> SignalId {
+        self.push(GateKind::Const0, 0.min(self.n_signals() - 1), 0)
+    }
+
+    /// Constant-1 signal.
+    pub fn one(&mut self) -> SignalId {
+        self.push(GateKind::Const1, 0.min(self.n_signals() - 1), 0)
+    }
+
+    /// Mark a signal as the next primary output.
+    pub fn output(&mut self, s: SignalId) {
+        assert!(s < self.n_signals(), "output references unknown signal");
+        self.outputs.push(s);
+    }
+
+    /// Ids of gates that are *active*, i.e. in the transitive fan-in of some
+    /// primary output. CGP chromosomes routinely contain inactive nodes; cost
+    /// is always charged on active gates only (as in the paper's fitness).
+    pub fn active_gates(&self) -> Vec<bool> {
+        let n = self.nodes.len();
+        let mut active = vec![false; n];
+        let mut stack: Vec<SignalId> = self
+            .outputs
+            .iter()
+            .copied()
+            .filter(|&s| s >= self.n_inputs)
+            .collect();
+        while let Some(s) = stack.pop() {
+            let g = (s - self.n_inputs) as usize;
+            if active[g] {
+                continue;
+            }
+            active[g] = true;
+            let node = &self.nodes[g];
+            let arity = node.kind.arity();
+            if arity >= 1 && node.a >= self.n_inputs {
+                stack.push(node.a);
+            }
+            if arity >= 2 && node.b >= self.n_inputs {
+                stack.push(node.b);
+            }
+        }
+        active
+    }
+
+    /// Number of active gates, excluding zero-cost buffers/constants
+    /// (the paper's "number of gates" objective counts logic gates).
+    pub fn active_gate_count(&self) -> usize {
+        let active = self.active_gates();
+        self.nodes
+            .iter()
+            .zip(active)
+            .filter(|(n, a)| {
+                *a && !matches!(
+                    n.kind,
+                    GateKind::Identity | GateKind::Const0 | GateKind::Const1
+                )
+            })
+            .count()
+    }
+
+    /// Produce a compacted copy containing only active gates (dead gates and
+    /// their wiring removed, signal ids renumbered). Output order preserved.
+    pub fn compact(&self) -> Netlist {
+        let active = self.active_gates();
+        let mut remap: HashMap<SignalId, SignalId> = HashMap::new();
+        for i in 0..self.n_inputs {
+            remap.insert(i, i);
+        }
+        let mut out = Netlist::new(self.n_inputs, self.name.clone());
+        for (g, node) in self.nodes.iter().enumerate() {
+            if !active[g] {
+                continue;
+            }
+            // Unused operand slots (arity < 2) may point at dead gates that
+            // were not remapped; tie them to input 0 instead.
+            let arity = node.kind.arity();
+            let a = if arity >= 1 {
+                *remap.get(&node.a).expect("active fan-in must be remapped")
+            } else {
+                0
+            };
+            let b = if arity >= 2 {
+                *remap.get(&node.b).expect("active fan-in must be remapped")
+            } else {
+                a
+            };
+            let new_id = out.push(node.kind, a, b);
+            remap.insert(self.n_inputs + g as u32, new_id);
+        }
+        for &o in &self.outputs {
+            let mapped = *remap
+                .get(&o)
+                .expect("active output must have been remapped");
+            out.output(mapped);
+        }
+        out
+    }
+
+    /// Logic depth (longest input→output path counting logic gates only).
+    pub fn depth(&self) -> u32 {
+        let mut depth = vec![0u32; self.n_signals() as usize];
+        for (g, node) in self.nodes.iter().enumerate() {
+            let id = (self.n_inputs as usize) + g;
+            let d = match node.kind.arity() {
+                0 => 0,
+                1 => depth[node.a as usize],
+                _ => depth[node.a as usize].max(depth[node.b as usize]),
+            };
+            let cost = matches!(
+                node.kind,
+                GateKind::Identity | GateKind::Const0 | GateKind::Const1
+            ) as u32;
+            depth[id] = d + (1 - cost);
+        }
+        self.outputs
+            .iter()
+            .map(|&o| depth[o as usize])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Structural sanity check: all operand/out references in range and
+    /// topologically ordered. Returns a description of the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        for (g, node) in self.nodes.iter().enumerate() {
+            let id = self.n_inputs + g as u32;
+            if node.a >= id || node.b >= id {
+                return Err(format!("gate {g} references future signal"));
+            }
+        }
+        for (i, &o) in self.outputs.iter().enumerate() {
+            if o >= self.n_signals() {
+                return Err(format!("output {i} references unknown signal {o}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::simulator::eval_exhaustive_u64;
+
+    /// Build a 1-bit full adder and check its truth table.
+    #[test]
+    fn full_adder() {
+        let mut n = Netlist::new(3, "fa");
+        let (a, b, cin) = (0, 1, 2);
+        let axb = n.push(GateKind::Xor, a, b);
+        let sum = n.push(GateKind::Xor, axb, cin);
+        let ab = n.push(GateKind::And, a, b);
+        let cx = n.push(GateKind::And, axb, cin);
+        let cout = n.push(GateKind::Or, ab, cx);
+        n.output(sum);
+        n.output(cout);
+        assert!(n.validate().is_ok());
+        let table = eval_exhaustive_u64(&n);
+        for i in 0u64..8 {
+            let (a, b, c) = (i & 1, (i >> 1) & 1, (i >> 2) & 1);
+            let expect = a + b + c;
+            assert_eq!(table[i as usize], expect, "a={a} b={b} cin={c}");
+        }
+    }
+
+    #[test]
+    fn active_gate_extraction() {
+        let mut n = Netlist::new(2, "t");
+        let g0 = n.push(GateKind::And, 0, 1);
+        let _dead = n.push(GateKind::Or, 0, 1);
+        let g2 = n.push(GateKind::Xor, g0, 0);
+        n.output(g2);
+        let active = n.active_gates();
+        assert_eq!(active, vec![true, false, true]);
+        assert_eq!(n.active_gate_count(), 2);
+        let compacted = n.compact();
+        assert_eq!(compacted.nodes.len(), 2);
+        assert_eq!(
+            eval_exhaustive_u64(&n),
+            eval_exhaustive_u64(&compacted),
+            "compaction must preserve function"
+        );
+    }
+
+    #[test]
+    fn depth_ignores_buffers() {
+        let mut n = Netlist::new(2, "d");
+        let g0 = n.push(GateKind::And, 0, 1);
+        let b = n.push1(GateKind::Identity, g0);
+        let g1 = n.push(GateKind::Xor, b, 0);
+        n.output(g1);
+        assert_eq!(n.depth(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "future signal")]
+    fn rejects_forward_reference() {
+        let mut n = Netlist::new(1, "bad");
+        n.push(GateKind::And, 0, 5);
+    }
+
+    #[test]
+    fn output_can_be_input_passthrough() {
+        let mut n = Netlist::new(2, "wire");
+        n.output(1);
+        n.output(0);
+        let t = eval_exhaustive_u64(&n);
+        // out0 = in1, out1 = in0 → value = in1 | in0<<1
+        assert_eq!(t, vec![0b00, 0b10, 0b01, 0b11]);
+    }
+}

@@ -1,0 +1,334 @@
+//! Bit-parallel logic simulation.
+//!
+//! Evaluation packs 64 test vectors into each `u64` word (lane *i* of every
+//! word belongs to vector *i*), so one sweep over the gate list evaluates 64
+//! input vectors at once — the workhorse that makes exhaustive evaluation of
+//! 8×8-bit multipliers (2¹⁶ vectors) cheap enough for the CGP inner loop.
+//!
+//! Two evaluation modes mirror the paper (§II-C):
+//! * **exhaustive** — all `2^n_inputs` vectors, used up to
+//!   [`MAX_EXHAUSTIVE_INPUTS`] primary inputs;
+//! * **sampled** — caller-supplied vectors (the library uses deterministic
+//!   stratified samples for wide adders/multipliers where the paper defers
+//!   to SAT/BDD-based analysis).
+//!
+//! The same sweep also collects per-signal ones-densities, from which the
+//! cost model derives zero-delay switching activities for dynamic power.
+
+use super::netlist::Netlist;
+
+/// Exhaustive evaluation is permitted up to this many primary inputs
+/// (2²⁰ ≈ 1 M vectors; an 8×8 multiplier needs 2¹⁶).
+pub const MAX_EXHAUSTIVE_INPUTS: u32 = 20;
+
+/// Lane patterns for exhaustive enumeration: input `i < 6` toggles with
+/// period `2^i` inside every 64-lane word.
+const LOW_INPUT_PATTERNS: [u64; 6] = [
+    0xAAAA_AAAA_AAAA_AAAA, // i=0: 0101...
+    0xCCCC_CCCC_CCCC_CCCC, // i=1
+    0xF0F0_F0F0_F0F0_F0F0, // i=2
+    0xFF00_FF00_FF00_FF00, // i=3
+    0xFFFF_0000_FFFF_0000, // i=4
+    0xFFFF_FFFF_0000_0000, // i=5
+];
+
+/// Word that primary input `i` contributes to word-index `w` of the
+/// exhaustive enumeration (vectors `64w .. 64w+63`).
+#[inline(always)]
+pub fn exhaustive_input_word(i: u32, w: u64) -> u64 {
+    if i < 6 {
+        LOW_INPUT_PATTERNS[i as usize]
+    } else if (w >> (i - 6)) & 1 == 1 {
+        !0
+    } else {
+        0
+    }
+}
+
+/// Reusable simulation scratch (signal values for one 64-vector word).
+/// Keeping it allocated across candidate evaluations removes allocation from
+/// the CGP hot loop.
+#[derive(Debug, Default)]
+pub struct BitSim {
+    sig: Vec<u64>,
+    /// per-signal count of one-lanes accumulated over `n_vectors`.
+    ones: Vec<u64>,
+    n_vectors: u64,
+    track_activity: bool,
+}
+
+impl BitSim {
+    /// New simulator; `track_activity` additionally accumulates per-signal
+    /// ones counts (used by the power model, skipped in the CGP hot loop).
+    pub fn new(track_activity: bool) -> Self {
+        BitSim {
+            sig: Vec::new(),
+            ones: Vec::new(),
+            n_vectors: 0,
+            track_activity,
+        }
+    }
+
+    fn reset(&mut self, n: &Netlist) {
+        self.sig.clear();
+        self.sig.resize(n.n_signals() as usize, 0);
+        if self.track_activity {
+            self.ones.clear();
+            self.ones.resize(n.n_signals() as usize, 0);
+        }
+        self.n_vectors = 0;
+    }
+
+    /// Evaluate one packed word: `inputs[i]` is the 64-lane word for primary
+    /// input `i`; `out[j]` receives the word for primary output `j`.
+    /// `valid_lanes` masks how many of the 64 lanes are real vectors.
+    #[inline]
+    fn eval_word_into(&mut self, n: &Netlist, inputs: &[u64], valid_lanes: u64, out: &mut [u64]) {
+        let ni = n.n_inputs as usize;
+        self.sig[..ni].copy_from_slice(inputs);
+        // Single forward sweep — nodes are topologically ordered by
+        // construction.
+        let (in_sigs, gate_sigs) = self.sig.split_at_mut(ni);
+        for (g, node) in n.nodes.iter().enumerate() {
+            let a = if (node.a as usize) < ni {
+                in_sigs[node.a as usize]
+            } else {
+                gate_sigs[node.a as usize - ni]
+            };
+            let b = if (node.b as usize) < ni {
+                in_sigs[node.b as usize]
+            } else {
+                gate_sigs[node.b as usize - ni]
+            };
+            gate_sigs[g] = node.kind.eval_word(a, b);
+        }
+        for (j, &o) in n.outputs.iter().enumerate() {
+            out[j] = self.sig[o as usize] & valid_lanes;
+        }
+        if self.track_activity {
+            for (s, &w) in self.sig.iter().enumerate() {
+                self.ones[s] += (w & valid_lanes).count_ones() as u64;
+            }
+            self.n_vectors += valid_lanes.count_ones() as u64;
+        }
+    }
+
+    /// Exhaustive evaluation: returns the output value (outputs packed
+    /// little-endian into a `u64`) for every input index `0..2^n_inputs`.
+    pub fn eval_exhaustive(&mut self, n: &Netlist) -> Vec<u64> {
+        assert!(
+            n.n_inputs <= MAX_EXHAUSTIVE_INPUTS,
+            "{} inputs exceeds exhaustive limit {MAX_EXHAUSTIVE_INPUTS}; use sampled evaluation",
+            n.n_inputs
+        );
+        assert!(n.outputs.len() <= 64, "more than 64 outputs");
+        self.reset(n);
+        let n_vec: u64 = 1u64 << n.n_inputs;
+        let n_words = n_vec.div_ceil(64);
+        let valid = if n_vec >= 64 { !0u64 } else { (1u64 << n_vec) - 1 };
+        let mut result = vec![0u64; n_vec as usize];
+        let mut in_words = vec![0u64; n.n_inputs as usize];
+        let mut out_words = vec![0u64; n.outputs.len()];
+        for w in 0..n_words {
+            for i in 0..n.n_inputs {
+                in_words[i as usize] = exhaustive_input_word(i, w);
+            }
+            self.eval_word_into(n, &in_words, valid, &mut out_words);
+            unpack_outputs(&out_words, w, n_vec, &mut result);
+        }
+        result
+    }
+
+    /// Sampled evaluation: `vectors[k]` packs the primary-input values of
+    /// sample `k` (bit `i` = input `i`). Returns one output value per sample.
+    pub fn eval_vectors(&mut self, n: &Netlist, vectors: &[u64]) -> Vec<u64> {
+        assert!(n.n_inputs <= 64, "more than 64 inputs");
+        assert!(n.outputs.len() <= 64, "more than 64 outputs");
+        self.reset(n);
+        let mut result = vec![0u64; vectors.len()];
+        let mut in_words = vec![0u64; n.n_inputs as usize];
+        let mut out_words = vec![0u64; n.outputs.len()];
+        for (w, chunk) in vectors.chunks(64).enumerate() {
+            in_words.iter_mut().for_each(|x| *x = 0);
+            for (lane, &v) in chunk.iter().enumerate() {
+                for i in 0..n.n_inputs as usize {
+                    in_words[i] |= ((v >> i) & 1) << lane;
+                }
+            }
+            let valid = if chunk.len() == 64 {
+                !0u64
+            } else {
+                (1u64 << chunk.len()) - 1
+            };
+            self.eval_word_into(n, &in_words, valid, &mut out_words);
+            for (lane, slot) in chunk.iter().enumerate().map(|(l, _)| l).zip(
+                result[w * 64..w * 64 + chunk.len()].iter_mut(),
+            ) {
+                let mut val = 0u64;
+                for (j, &ow) in out_words.iter().enumerate() {
+                    val |= ((ow >> lane) & 1) << j;
+                }
+                *slot = val;
+            }
+        }
+        result
+    }
+
+    /// Per-signal ones-density `p` after an activity-tracked run, from which
+    /// the zero-delay switching activity is `α = 2·p·(1−p)`.
+    pub fn activity(&self) -> Activity {
+        assert!(self.track_activity, "simulator built without activity tracking");
+        let nv = self.n_vectors.max(1) as f64;
+        Activity {
+            ones_frac: self.ones.iter().map(|&o| o as f64 / nv).collect(),
+            n_vectors: self.n_vectors,
+        }
+    }
+}
+
+/// Per-signal ones-densities from a simulation run.
+#[derive(Debug, Clone)]
+pub struct Activity {
+    /// Fraction of evaluated vectors on which each signal was 1.
+    pub ones_frac: Vec<f64>,
+    /// Number of vectors the densities were estimated over.
+    pub n_vectors: u64,
+}
+
+impl Activity {
+    /// Zero-delay switching activity of signal `s`: `2·p·(1−p)` — the
+    /// probability that two independent consecutive vectors toggle it.
+    pub fn switching(&self, s: usize) -> f64 {
+        let p = self.ones_frac[s];
+        2.0 * p * (1.0 - p)
+    }
+}
+
+#[inline]
+fn unpack_outputs(out_words: &[u64], w: u64, n_vec: u64, result: &mut [u64]) {
+    let base = w * 64;
+    let lanes = (n_vec - base).min(64);
+    for lane in 0..lanes {
+        let mut val = 0u64;
+        for (j, &ow) in out_words.iter().enumerate() {
+            val |= ((ow >> lane) & 1) << j;
+        }
+        result[(base + lane) as usize] = val;
+    }
+}
+
+/// One-shot exhaustive evaluation (convenience wrapper; tests and
+/// LUT-building use this, the CGP loop reuses a [`BitSim`]).
+pub fn eval_exhaustive_u64(n: &Netlist) -> Vec<u64> {
+    BitSim::new(false).eval_exhaustive(n)
+}
+
+/// One-shot sampled evaluation.
+pub fn eval_vectors_u64(n: &Netlist, vectors: &[u64]) -> Vec<u64> {
+    BitSim::new(false).eval_vectors(n, vectors)
+}
+
+/// Exhaustive evaluation with activity collection (power estimation path).
+pub fn activity_exhaustive(n: &Netlist) -> (Vec<u64>, Activity) {
+    let mut sim = BitSim::new(true);
+    let table = sim.eval_exhaustive(n);
+    let act = sim.activity();
+    (table, act)
+}
+
+/// Sampled evaluation with activity collection.
+pub fn activity_vectors(n: &Netlist, vectors: &[u64]) -> (Vec<u64>, Activity) {
+    let mut sim = BitSim::new(true);
+    let table = sim.eval_vectors(n, vectors);
+    let act = sim.activity();
+    (table, act)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::gate::GateKind;
+
+    fn xor2() -> Netlist {
+        let mut n = Netlist::new(2, "xor2");
+        let g = n.push(GateKind::Xor, 0, 1);
+        n.output(g);
+        n
+    }
+
+    #[test]
+    fn exhaustive_xor() {
+        assert_eq!(eval_exhaustive_u64(&xor2()), vec![0, 1, 1, 0]);
+    }
+
+    #[test]
+    fn sampled_matches_exhaustive() {
+        let n = xor2();
+        let vecs: Vec<u64> = (0..4).collect();
+        assert_eq!(eval_vectors_u64(&n, &vecs), eval_exhaustive_u64(&n));
+    }
+
+    #[test]
+    fn sampled_partial_word_and_multiword() {
+        // 7-input parity circuit, 130 samples (crosses a word boundary and
+        // ends mid-word).
+        let mut n = Netlist::new(7, "par7");
+        let mut acc = n.input(0);
+        for i in 1..7 {
+            acc = n.push(GateKind::Xor, acc, i);
+        }
+        n.output(acc);
+        let vecs: Vec<u64> = (0..130).map(|k| (k * 37) % 128).collect();
+        let got = eval_vectors_u64(&n, &vecs);
+        for (k, &v) in vecs.iter().enumerate() {
+            assert_eq!(got[k], (v.count_ones() as u64) & 1, "sample {k}");
+        }
+    }
+
+    #[test]
+    fn exhaustive_input_patterns_enumerate_all_vectors() {
+        // inputs reproduced as outputs must enumerate 0..2^n in order
+        let mut n = Netlist::new(8, "id8");
+        for i in 0..8 {
+            n.output(i);
+        }
+        let t = eval_exhaustive_u64(&n);
+        assert_eq!(t.len(), 256);
+        for (i, &v) in t.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn activity_densities() {
+        let n = xor2();
+        let (_, act) = activity_exhaustive(&n);
+        // inputs are balanced, xor of two balanced independent inputs is balanced
+        assert_eq!(act.n_vectors, 4);
+        assert!((act.ones_frac[0] - 0.5).abs() < 1e-12);
+        assert!((act.ones_frac[2] - 0.5).abs() < 1e-12);
+        assert!((act.switching(2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn const_gate_activity_is_zero() {
+        let mut n = Netlist::new(1, "c");
+        let z = n.push(GateKind::Const0, 0, 0);
+        let o = n.push(GateKind::Const1, 0, 0);
+        n.output(z);
+        n.output(o);
+        let (t, act) = activity_exhaustive(&n);
+        assert_eq!(t, vec![0b10, 0b10]);
+        assert_eq!(act.ones_frac[1], 0.0);
+        assert_eq!(act.ones_frac[2], 1.0);
+        assert_eq!(act.switching(1), 0.0);
+        assert_eq!(act.switching(2), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exhaustive limit")]
+    fn exhaustive_limit_enforced() {
+        let n = Netlist::new(24, "wide");
+        eval_exhaustive_u64(&n);
+    }
+}

@@ -1,0 +1,202 @@
+//! Functional verification helpers: reference tables for the arithmetic
+//! functions the library targets, exactness checks, and the deterministic
+//! stratified sampler used where exhaustive evaluation is infeasible
+//! (the paper defers to SAT/BDD there; see DESIGN.md §4).
+
+
+use super::netlist::Netlist;
+use super::simulator::{eval_exhaustive_u64, eval_vectors_u64, MAX_EXHAUSTIVE_INPUTS};
+use crate::data::rng::SplitMix64;
+
+/// The arithmetic function a circuit is meant to implement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArithFn {
+    /// `w`-bit unsigned addition, `w+1` outputs.
+    Add { w: u32 },
+    /// `w×w`-bit unsigned multiplication, `2w` outputs.
+    Mul { w: u32 },
+}
+
+impl ArithFn {
+    /// Operand width in bits.
+    pub fn width(self) -> u32 {
+        match self {
+            ArithFn::Add { w } | ArithFn::Mul { w } => w,
+        }
+    }
+
+    /// Number of primary inputs of a conforming circuit.
+    pub fn n_inputs(self) -> u32 {
+        2 * self.width()
+    }
+
+    /// Number of primary outputs of a conforming circuit.
+    pub fn n_outputs(self) -> u32 {
+        match self {
+            ArithFn::Add { w } => w + 1,
+            ArithFn::Mul { w } => 2 * w,
+        }
+    }
+
+    /// Exact result for the packed input index `a | (b << w)`.
+    #[inline]
+    pub fn exact(self, packed: u64) -> u64 {
+        let w = self.width();
+        let mask = if w == 64 { !0 } else { (1u64 << w) - 1 };
+        let a = packed & mask;
+        let b = (packed >> w) & mask;
+        match self {
+            ArithFn::Add { .. } => a + b,
+            ArithFn::Mul { .. } => a.wrapping_mul(b),
+        }
+    }
+
+    /// Whether exhaustive evaluation over all `2^(2w)` vectors is in budget.
+    pub fn exhaustive_feasible(self) -> bool {
+        self.n_inputs() <= MAX_EXHAUSTIVE_INPUTS
+    }
+
+    /// Short name used in library entries (`add8u`, `mul16u`, …).
+    pub fn tag(self) -> String {
+        match self {
+            ArithFn::Add { w } => format!("add{w}u"),
+            ArithFn::Mul { w } => format!("mul{w}u"),
+        }
+    }
+}
+
+/// Check that a netlist has the right interface for `f`.
+pub fn conforms(n: &Netlist, f: ArithFn) -> bool {
+    n.n_inputs == f.n_inputs() && n.n_outputs() == f.n_outputs()
+}
+
+/// Exhaustively verify that `n` implements `f` exactly.
+/// Panics if `f` is too wide for exhaustive evaluation.
+pub fn is_exact(n: &Netlist, f: ArithFn) -> bool {
+    assert!(f.exhaustive_feasible());
+    let t = eval_exhaustive_u64(n);
+    t.iter()
+        .enumerate()
+        .all(|(idx, &v)| v == f.exact(idx as u64))
+}
+
+/// Deterministic stratified sample of input vectors for a wide `f`.
+///
+/// Strata: for each (magnitude-bucket of A × magnitude-bucket of B) pair we
+/// draw equally many uniform samples within the bucket, guaranteeing
+/// coverage of the small-operand corners that dominate relative-error
+/// metrics (MRE/WCRE) and would be missed by plain uniform sampling.
+pub fn stratified_vectors(f: ArithFn, per_stratum: usize, seed: u64) -> Vec<u64> {
+    let w = f.width();
+    let mut rng = SplitMix64::new(seed ^ 0xA55A_5AA5_u64 ^ ((w as u64) << 32));
+    let buckets: Vec<(u64, u64)> = (0..=w)
+        .map(|k| {
+            if k == 0 {
+                (0, 0)
+            } else {
+                (1u64 << (k - 1), (1u64 << k) - 1)
+            }
+        })
+        .collect();
+    let mut out = Vec::with_capacity(per_stratum * buckets.len() * buckets.len());
+    for &(alo, ahi) in &buckets {
+        for &(blo, bhi) in &buckets {
+            for _ in 0..per_stratum {
+                let a = alo + rng.next_below(ahi - alo + 1);
+                let b = blo + rng.next_below(bhi - blo + 1);
+                out.push(a | (b << w));
+            }
+        }
+    }
+    out
+}
+
+/// Evaluate a netlist on either the exhaustive table (when feasible) or the
+/// stratified sample; returns `(inputs, outputs)` pairs and whether the
+/// evaluation was exhaustive.
+pub fn evaluate_for_metrics(
+    n: &Netlist,
+    f: ArithFn,
+    per_stratum: usize,
+    seed: u64,
+) -> (Vec<u64>, Vec<u64>, bool) {
+    if f.exhaustive_feasible() {
+        let outs = eval_exhaustive_u64(n);
+        let ins: Vec<u64> = (0..outs.len() as u64).collect();
+        (ins, outs, true)
+    } else {
+        let ins = stratified_vectors(f, per_stratum, seed);
+        let outs = eval_vectors_u64(n, &ins);
+        (ins, outs, false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::baselines::truncated_multiplier;
+    use crate::circuit::generators::{ripple_carry_adder, wallace_multiplier};
+
+    #[test]
+    fn exactness_checks() {
+        assert!(is_exact(&ripple_carry_adder(6), ArithFn::Add { w: 6 }));
+        assert!(is_exact(&wallace_multiplier(7), ArithFn::Mul { w: 7 }));
+        assert!(!is_exact(
+            &truncated_multiplier(8, 6),
+            ArithFn::Mul { w: 8 }
+        ));
+    }
+
+    #[test]
+    fn conformance() {
+        assert!(conforms(&ripple_carry_adder(8), ArithFn::Add { w: 8 }));
+        assert!(!conforms(&ripple_carry_adder(8), ArithFn::Mul { w: 8 }));
+    }
+
+    #[test]
+    fn arith_fn_exact_values() {
+        let f = ArithFn::Mul { w: 8 };
+        assert_eq!(f.exact(0), 0);
+        assert_eq!(f.exact(3 | (7 << 8)), 21);
+        let g = ArithFn::Add { w: 8 };
+        assert_eq!(g.exact(255 | (255 << 8)), 510);
+    }
+
+    #[test]
+    fn stratified_sampler_is_deterministic_and_in_range() {
+        let f = ArithFn::Mul { w: 16 };
+        let v1 = stratified_vectors(f, 3, 42);
+        let v2 = stratified_vectors(f, 3, 42);
+        assert_eq!(v1, v2);
+        let mask = (1u64 << 32) - 1;
+        assert!(v1.iter().all(|&v| v <= mask));
+        // strata: (16+1)^2 buckets × 3
+        assert_eq!(v1.len(), 17 * 17 * 3);
+    }
+
+    #[test]
+    fn stratified_sampler_covers_small_operands() {
+        let f = ArithFn::Mul { w: 16 };
+        let v = stratified_vectors(f, 2, 7);
+        assert!(v.iter().any(|&x| (x & 0xFFFF) == 0), "zero operand covered");
+        assert!(
+            v.iter().any(|&x| (x & 0xFFFF) == 1),
+            "one-valued operand covered"
+        );
+    }
+
+    #[test]
+    fn evaluate_for_metrics_switches_modes() {
+        let (_, _, exh) =
+            evaluate_for_metrics(&wallace_multiplier(8), ArithFn::Mul { w: 8 }, 4, 1);
+        assert!(exh);
+        let (ins, outs, exh) =
+            evaluate_for_metrics(&wallace_multiplier(12), ArithFn::Mul { w: 12 }, 2, 1);
+        assert!(!exh);
+        assert_eq!(ins.len(), outs.len());
+        let f = ArithFn::Mul { w: 12 };
+        for (&i, &o) in ins.iter().zip(&outs) {
+            assert_eq!(o, f.exact(i), "exact wallace must match reference");
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Dynamic batcher — the serving front of the coordinator.
+//!
+//! Single-image classification requests arrive asynchronously; the batcher
+//! aggregates them until either the engine's batch size is reached or
+//! `max_wait` elapses, then dispatches one PJRT execution and fans the
+//! per-image results back out — the same shape as a vLLM-style router's
+//! continuous batching, specialised to fixed-size classification batches.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::{Coordinator, KernelKind};
+
+/// One in-flight request.
+struct Pending {
+    image: Vec<f32>,
+    reply: Sender<Result<u8>>,
+    enqueued: Instant,
+}
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Dispatch as soon as this many requests are queued (engine batch).
+    pub max_batch: usize,
+    /// …or when the oldest request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Handle for submitting single-image requests.
+#[derive(Clone)]
+pub struct Batcher {
+    tx: Sender<Pending>,
+    image_len: usize,
+}
+
+/// Join handle for the batcher thread.
+pub struct BatcherGuard {
+    handle: Option<JoinHandle<BatcherStats>>,
+}
+
+impl BatcherGuard {
+    /// Stop accepting (drop all [`Batcher`] clones first) and join,
+    /// returning the final stats.
+    pub fn join(mut self) -> BatcherStats {
+        self.handle
+            .take()
+            .map(|h| h.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+/// Aggregate statistics of a batcher run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatcherStats {
+    /// Requests served.
+    pub requests: u64,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Batches dispatched because they were full (vs deadline).
+    pub full_batches: u64,
+    /// Mean occupancy of dispatched batches (0–1).
+    pub mean_occupancy: f64,
+}
+
+impl Batcher {
+    /// Spawn a batcher for `model` on `coord`.
+    pub fn spawn(
+        coord: Coordinator,
+        model: &str,
+        kernel: KernelKind,
+        luts: Arc<Vec<i32>>,
+        policy: BatchPolicy,
+    ) -> Result<(Batcher, BatcherGuard)> {
+        let meta = coord
+            .manifest()
+            .model(model)
+            .ok_or_else(|| anyhow!("unknown model `{model}`"))?;
+        let (h, w, c) = meta.image_dims;
+        let image_len = h * w * c;
+        let model = model.to_string();
+        let (tx, rx) = channel::<Pending>();
+        let handle = std::thread::Builder::new()
+            .name("batcher".into())
+            .spawn(move || batcher_loop(rx, coord, model, kernel, luts, policy, image_len))?;
+        Ok((
+            Batcher { tx, image_len },
+            BatcherGuard {
+                handle: Some(handle),
+            },
+        ))
+    }
+
+    /// Submit one image; blocks until its class prediction is ready.
+    pub fn classify(&self, image: Vec<f32>) -> Result<u8> {
+        if image.len() != self.image_len {
+            anyhow::bail!("image length {} != {}", image.len(), self.image_len);
+        }
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Pending {
+                image,
+                reply: rtx,
+                enqueued: Instant::now(),
+            })
+            .map_err(|_| anyhow!("batcher stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("batcher stopped"))?
+    }
+
+    /// Submit one image without waiting; returns the reply channel.
+    pub fn classify_async(&self, image: Vec<f32>) -> Result<Receiver<Result<u8>>> {
+        if image.len() != self.image_len {
+            anyhow::bail!("image length {} != {}", image.len(), self.image_len);
+        }
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Pending {
+                image,
+                reply: rtx,
+                enqueued: Instant::now(),
+            })
+            .map_err(|_| anyhow!("batcher stopped"))?;
+        Ok(rrx)
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<Pending>,
+    coord: Coordinator,
+    model: String,
+    kernel: KernelKind,
+    luts: Arc<Vec<i32>>,
+    policy: BatchPolicy,
+    image_len: usize,
+) -> BatcherStats {
+    let mut stats = BatcherStats::default();
+    let mut occupancy_sum = 0.0f64;
+    let mut queue: Vec<Pending> = Vec::new();
+    loop {
+        // fill the queue up to max_batch or deadline
+        let deadline = queue.first().map(|p| p.enqueued + policy.max_wait);
+        let next = if queue.is_empty() {
+            match rx.recv() {
+                Ok(p) => Some(p),
+                Err(_) => break, // all senders gone
+            }
+        } else {
+            let now = Instant::now();
+            let timeout = deadline
+                .map(|d| d.saturating_duration_since(now))
+                .unwrap_or_default();
+            match rx.recv_timeout(timeout) {
+                Ok(p) => Some(p),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => {
+                    dispatch(&coord, &model, kernel, &luts, &mut queue, image_len, policy.max_batch, &mut stats, &mut occupancy_sum);
+                    break;
+                }
+            }
+        };
+        if let Some(p) = next {
+            queue.push(p);
+        }
+        // Drain whatever already sits in the channel (requests that arrived
+        // while the previous batch executed) before deciding to dispatch —
+        // otherwise a long execute turns every following batch into a
+        // singleton once the oldest deadline has passed.
+        while queue.len() < policy.max_batch {
+            match rx.try_recv() {
+                Ok(p) => queue.push(p),
+                Err(_) => break,
+            }
+        }
+        let deadline_hit = queue
+            .first()
+            .map(|p| p.enqueued.elapsed() >= policy.max_wait)
+            .unwrap_or(false);
+        if queue.len() >= policy.max_batch || (deadline_hit && !queue.is_empty()) {
+            if queue.len() >= policy.max_batch {
+                stats.full_batches += 1;
+            }
+            dispatch(&coord, &model, kernel, &luts, &mut queue, image_len, policy.max_batch, &mut stats, &mut occupancy_sum);
+        }
+    }
+    if stats.batches > 0 {
+        stats.mean_occupancy = occupancy_sum / stats.batches as f64;
+    }
+    stats
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dispatch(
+    coord: &Coordinator,
+    model: &str,
+    kernel: KernelKind,
+    luts: &Arc<Vec<i32>>,
+    queue: &mut Vec<Pending>,
+    image_len: usize,
+    max_batch: usize,
+    stats: &mut BatcherStats,
+    occupancy_sum: &mut f64,
+) {
+    if queue.is_empty() {
+        return;
+    }
+    let take: Vec<Pending> = queue.drain(..).collect();
+    let mut images = Vec::with_capacity(take.len() * image_len);
+    for p in &take {
+        images.extend_from_slice(&p.image);
+    }
+    let preds = coord.predict(model, kernel, Arc::new(images), luts.clone());
+    stats.batches += 1;
+    stats.requests += take.len() as u64;
+    *occupancy_sum += take.len() as f64 / max_batch.max(1) as f64;
+    match preds {
+        Ok(preds) => {
+            for (p, pred) in take.into_iter().zip(preds) {
+                let _ = p.reply.send(Ok(pred));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for p in take {
+                let _ = p.reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_defaults() {
+        let p = BatchPolicy::default();
+        assert_eq!(p.max_batch, 64);
+        assert!(p.max_wait > Duration::ZERO);
+    }
+}

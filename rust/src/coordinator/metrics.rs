@@ -1,0 +1,162 @@
+//! Service metrics for the coordinator: counters + fixed-bucket latency
+//! histograms (lock-free on the hot path).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-spaced latency buckets: 100 µs … ~100 s.
+const BUCKET_BOUNDS_US: [u64; 14] = [
+    100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000, 1_000_000, 3_000_000, 10_000_000,
+    30_000_000, 60_000_000, 100_000_000,
+];
+
+/// A fixed-bucket histogram.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; 15],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    /// Record one duration.
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = BUCKET_BOUNDS_US
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(BUCKET_BOUNDS_US.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Approximate quantile (upper bucket bound).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return BUCKET_BOUNDS_US
+                    .get(i)
+                    .copied()
+                    .unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Coordinator-wide metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Jobs executed.
+    pub jobs: AtomicU64,
+    /// Images pushed through the engines.
+    pub images: AtomicU64,
+    /// Batches executed on PJRT.
+    pub batches: AtomicU64,
+    /// Jobs that returned an error.
+    pub errors: AtomicU64,
+    /// End-to-end job latency.
+    pub job_latency: Histogram,
+    /// Time jobs spent queued before execution.
+    pub queue_wait: Histogram,
+    /// Pure PJRT execute time per batch.
+    pub execute_time: Histogram,
+}
+
+impl Metrics {
+    /// Snapshot for reports.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            jobs: self.jobs.load(Ordering::Relaxed),
+            images: self.images.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            job_latency_mean_us: self.job_latency.mean_us(),
+            job_latency_p50_us: self.job_latency.quantile_us(0.5),
+            job_latency_p99_us: self.job_latency.quantile_us(0.99),
+            queue_wait_mean_us: self.queue_wait.mean_us(),
+            execute_mean_us: self.execute_time.mean_us(),
+        }
+    }
+}
+
+/// Plain-data metrics snapshot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Jobs executed.
+    pub jobs: u64,
+    /// Images processed.
+    pub images: u64,
+    /// PJRT batches run.
+    pub batches: u64,
+    /// Failed jobs.
+    pub errors: u64,
+    /// Mean job latency [µs].
+    pub job_latency_mean_us: f64,
+    /// Median job latency [µs].
+    pub job_latency_p50_us: u64,
+    /// p99 job latency [µs].
+    pub job_latency_p99_us: u64,
+    /// Mean queue wait [µs].
+    pub queue_wait_mean_us: f64,
+    /// Mean PJRT execute time [µs].
+    pub execute_mean_us: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles() {
+        let h = Histogram::default();
+        for ms in [1u64, 2, 5, 10, 50] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean_us() > 0.0);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.quantile_us(0.99), 0);
+    }
+
+    #[test]
+    fn metrics_snapshot_roundtrip() {
+        let m = Metrics::default();
+        m.jobs.fetch_add(3, Ordering::Relaxed);
+        m.images.fetch_add(192, Ordering::Relaxed);
+        m.job_latency.record(Duration::from_millis(7));
+        let s = m.snapshot();
+        assert_eq!(s.jobs, 3);
+        assert_eq!(s.images, 192);
+        assert!(s.job_latency_mean_us > 0.0);
+    }
+}

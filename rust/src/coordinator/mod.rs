@@ -1,0 +1,351 @@
+//! L3 coordinator: the process that owns all PJRT state and schedules work
+//! onto it.
+//!
+//! PJRT wrapper types are `!Send`, so a single *executor thread* owns the
+//! client and every compiled engine; the rest of the process talks to it
+//! through channels (a synchronous actor). On the single-core testbed this
+//! is also the right performance shape: one execution stream, zero
+//! contention, engines compiled once and cached.
+//!
+//! Layers on top:
+//! * [`Coordinator`] — synchronous job API (`predict`, `logits`,
+//!   `accuracy`) used by the resilience campaigns and benches;
+//! * [`batcher::Batcher`] — a dynamic batcher for the serving example:
+//!   aggregates single-image requests up to the engine batch (or a
+//!   deadline) before dispatching, vLLM-router style;
+//! * [`metrics::Metrics`] — counters + latency histograms.
+
+pub mod batcher;
+pub mod metrics;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::{InferenceEngine, Manifest, PjrtRuntime};
+
+pub use metrics::{Metrics, MetricsSnapshot};
+
+/// Which artifact variant a job wants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Pure-jnp formulation (default analysis path).
+    Jnp,
+    /// Pallas (interpret-lowered) L1 kernel path.
+    Pallas,
+}
+
+impl KernelKind {
+    fn as_str(self) -> &'static str {
+        match self {
+            KernelKind::Jnp => "jnp",
+            KernelKind::Pallas => "pallas",
+        }
+    }
+}
+
+/// A request to the executor actor.
+enum Request {
+    Logits {
+        model: String,
+        kernel: KernelKind,
+        images: Arc<Vec<f32>>,
+        luts: Arc<Vec<i32>>,
+        reply: Sender<Result<Vec<f32>>>,
+        enqueued: Instant,
+    },
+    Predict {
+        model: String,
+        kernel: KernelKind,
+        images: Arc<Vec<f32>>,
+        luts: Arc<Vec<i32>>,
+        reply: Sender<Result<Vec<u8>>>,
+        enqueued: Instant,
+    },
+    /// Warm a model's engine (compile ahead of the first job).
+    Warm {
+        model: String,
+        kernel: KernelKind,
+        reply: Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Configuration of a coordinator instance.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Artifacts directory (must contain `manifest.json`).
+    pub artifacts_dir: PathBuf,
+}
+
+impl CoordinatorConfig {
+    /// Default config rooted at `dir`.
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        CoordinatorConfig {
+            artifacts_dir: dir.into(),
+        }
+    }
+}
+
+/// Handle to the executor actor. Cloneable (channel sender + shared
+/// metrics); `Send`, unlike the PJRT state it fronts.
+#[derive(Clone)]
+pub struct Coordinator {
+    tx: Sender<Request>,
+    metrics: Arc<Metrics>,
+    manifest: Arc<Manifest>,
+}
+
+impl Coordinator {
+    /// Start the executor thread: loads the manifest eagerly (fail fast) and
+    /// compiles engines lazily, caching per (model, kernel).
+    pub fn start(cfg: CoordinatorConfig) -> Result<(Coordinator, CoordinatorGuard)> {
+        let manifest = Arc::new(Manifest::load(&cfg.artifacts_dir)?);
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = channel::<Request>();
+        let thread_manifest = manifest.clone();
+        let thread_metrics = metrics.clone();
+        let dir = cfg.artifacts_dir.clone();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || executor_loop(rx, dir, thread_manifest, thread_metrics))
+            .context("spawning executor thread")?;
+        Ok((
+            Coordinator {
+                tx,
+                metrics,
+                manifest,
+            },
+            CoordinatorGuard {
+                tx2: None,
+                handle: Some(handle),
+            },
+        ))
+    }
+
+    /// The loaded manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Pre-compile a model's engine.
+    pub fn warm(&self, model: &str, kernel: KernelKind) -> Result<()> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Warm {
+                model: model.to_string(),
+                kernel,
+                reply: rtx,
+            })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rrx.recv().map_err(|_| anyhow!("executor gone"))?
+    }
+
+    /// Raw logits for a full batch (must match the engine batch size).
+    pub fn logits(
+        &self,
+        model: &str,
+        kernel: KernelKind,
+        images: Arc<Vec<f32>>,
+        luts: Arc<Vec<i32>>,
+    ) -> Result<Vec<f32>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Logits {
+                model: model.to_string(),
+                kernel,
+                images,
+                luts,
+                reply: rtx,
+                enqueued: Instant::now(),
+            })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rrx.recv().map_err(|_| anyhow!("executor gone"))?
+    }
+
+    /// Argmax predictions for an arbitrary number of images (the executor
+    /// splits/pads batches internally).
+    pub fn predict(
+        &self,
+        model: &str,
+        kernel: KernelKind,
+        images: Arc<Vec<f32>>,
+        luts: Arc<Vec<i32>>,
+    ) -> Result<Vec<u8>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::Predict {
+                model: model.to_string(),
+                kernel,
+                images,
+                luts,
+                reply: rtx,
+                enqueued: Instant::now(),
+            })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rrx.recv().map_err(|_| anyhow!("executor gone"))?
+    }
+
+    /// Accuracy of `model` on a labelled image set under `luts`.
+    pub fn accuracy(
+        &self,
+        model: &str,
+        kernel: KernelKind,
+        images: Arc<Vec<f32>>,
+        labels: &[u8],
+        luts: Arc<Vec<i32>>,
+    ) -> Result<f64> {
+        let preds = self.predict(model, kernel, images, luts)?;
+        if preds.len() != labels.len() {
+            bail!("prediction/label length mismatch");
+        }
+        let correct = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+        Ok(correct as f64 / labels.len().max(1) as f64)
+    }
+
+    /// Ask the executor to exit (pending jobs drain first).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+/// Joins the executor thread on drop (after sending shutdown).
+pub struct CoordinatorGuard {
+    tx2: Option<Sender<Request>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Drop for CoordinatorGuard {
+    fn drop(&mut self) {
+        drop(self.tx2.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_loop(
+    rx: Receiver<Request>,
+    dir: PathBuf,
+    manifest: Arc<Manifest>,
+    metrics: Arc<Metrics>,
+) {
+    let runtime = match PjrtRuntime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("executor: PJRT init failed: {e:#}");
+            return;
+        }
+    };
+    let mut engines: HashMap<(String, KernelKind), InferenceEngine> = HashMap::new();
+
+    let mut get_engine = |model: &str,
+                          kernel: KernelKind,
+                          engines: &mut HashMap<(String, KernelKind), InferenceEngine>|
+     -> Result<()> {
+        let key = (model.to_string(), kernel);
+        if engines.contains_key(&key) {
+            return Ok(());
+        }
+        let meta = manifest
+            .model(model)
+            .ok_or_else(|| anyhow!("unknown model `{model}`"))?;
+        let artifact = meta
+            .artifacts
+            .iter()
+            .filter(|a| a.kernel == kernel.as_str())
+            .max_by_key(|a| a.batch)
+            .ok_or_else(|| anyhow!("model `{model}` has no `{}` artifact", kernel.as_str()))?;
+        let engine = runtime.load_model(&dir, meta, artifact)?;
+        engines.insert(key, engine);
+        Ok(())
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Warm {
+                model,
+                kernel,
+                reply,
+            } => {
+                let r = get_engine(&model, kernel, &mut engines);
+                let _ = reply.send(r);
+            }
+            Request::Logits {
+                model,
+                kernel,
+                images,
+                luts,
+                reply,
+                enqueued,
+            } => {
+                metrics.queue_wait.record(enqueued.elapsed());
+                let started = Instant::now();
+                let result = get_engine(&model, kernel, &mut engines).and_then(|()| {
+                    let engine = &engines[&(model.clone(), kernel)];
+                    let t0 = Instant::now();
+                    let out = engine.run(&images, &luts);
+                    metrics.execute_time.record(t0.elapsed());
+                    metrics.batches.fetch_add(1, Ordering::Relaxed);
+                    metrics
+                        .images
+                        .fetch_add(engine.batch as u64, Ordering::Relaxed);
+                    out
+                });
+                metrics.jobs.fetch_add(1, Ordering::Relaxed);
+                if result.is_err() {
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                metrics.job_latency.record(started.elapsed());
+                let _ = reply.send(result);
+            }
+            Request::Predict {
+                model,
+                kernel,
+                images,
+                luts,
+                reply,
+                enqueued,
+            } => {
+                metrics.queue_wait.record(enqueued.elapsed());
+                let started = Instant::now();
+                let result = get_engine(&model, kernel, &mut engines).and_then(|()| {
+                    let engine = &engines[&(model.clone(), kernel)];
+                    let il = engine.image_len();
+                    if images.len() % il != 0 {
+                        bail!("image buffer not a multiple of image size");
+                    }
+                    let n_batches = (images.len() / il).div_ceil(engine.batch).max(1);
+                    let t0 = Instant::now();
+                    let preds = engine.predict_all(&images, &luts);
+                    metrics.execute_time.record(t0.elapsed());
+                    metrics
+                        .batches
+                        .fetch_add(n_batches as u64, Ordering::Relaxed);
+                    metrics
+                        .images
+                        .fetch_add((images.len() / il) as u64, Ordering::Relaxed);
+                    preds
+                });
+                metrics.jobs.fetch_add(1, Ordering::Relaxed);
+                if result.is_err() {
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                metrics.job_latency.record(started.elapsed());
+                let _ = reply.send(result);
+            }
+        }
+    }
+}

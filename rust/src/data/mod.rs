@@ -1,0 +1,12 @@
+//! Deterministic randomness and the synthetic dataset substrate.
+//!
+//! The paper trains on CIFAR-10; this reproduction substitutes a seeded
+//! synthetic 10-class image task (see DESIGN.md §4) whose generator is
+//! mirrored bit-for-bit by `python/compile/data.py` so the Rust analysis
+//! side and the Python training side see the same data.
+
+pub mod dataset;
+pub mod rng;
+
+pub use dataset::{Dataset, DatasetConfig};
+pub use rng::{SplitMix64, Xoshiro256};

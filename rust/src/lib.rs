@@ -1,0 +1,51 @@
+//! # evoapproxlib
+//!
+//! Reproduction of *"Using Libraries of Approximate Circuits in Design of
+//! Hardware Accelerators of Deep Neural Networks"* (Mrazek, Sekanina,
+//! Vasicek — AICAS 2020).
+//!
+//! The crate implements the full stack the paper describes:
+//!
+//! * [`circuit`] — gate-level netlist substrate: representation, bit-parallel
+//!   simulation, exact adder/multiplier generators, truncation and BAM
+//!   baseline approximations, and a 45 nm-style area/power/delay cost model
+//!   (substituting for Synopsys Design Compiler — see `DESIGN.md`).
+//! * [`cgp`] — Cartesian Genetic Programming engine: chromosome encoding,
+//!   mutation, (1+λ) evolutionary strategy, all six error metrics of the
+//!   paper (eqs. 1–6), single-objective error-constrained search and
+//!   multi-objective Pareto-archive search.
+//! * [`library`] — the approximate-circuit library itself: typed entries with
+//!   full metric characterisation, JSON persistence, Pareto-front extraction
+//!   and the paper's "10 circuits evenly spaced along the power axis per
+//!   metric" selection procedure (§III/§IV).
+//! * [`accel`] — the DNN hardware-accelerator model: ResNet-N architecture
+//!   descriptions, per-layer multiplier counts and the power model used to
+//!   report "relative power of multipliers in convolutional layers".
+//! * [`resilience`] — the resilience-analysis framework of §IV: LUT
+//!   construction from netlists, per-layer and whole-network replacement
+//!   campaigns, accuracy/power trade-off reports (Fig. 4, Table II).
+//! * [`runtime`] — PJRT runtime: loads the AOT-compiled HLO artifacts
+//!   produced by `python/compile/aot.py` and executes them from Rust.
+//! * [`coordinator`] — the L3 coordinator: job scheduling of evolution and
+//!   analysis campaigns, a dynamic batcher in front of the PJRT executor,
+//!   and service metrics.
+//! * [`data`] — synthetic CIFAR-like dataset generation (shared, seeded
+//!   generator mirrored by `python/compile/data.py`).
+//!
+//! Python (JAX + Pallas) is used only at build time: `make artifacts` trains
+//! the ResNet family on the synthetic dataset and lowers the quantised
+//! LUT-multiplier inference graphs to HLO text; the Rust binary is fully
+//! self-contained afterwards.
+
+pub mod accel;
+pub mod cgp;
+pub mod circuit;
+pub mod coordinator;
+pub mod data;
+pub mod library;
+pub mod resilience;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

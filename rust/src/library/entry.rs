@@ -1,0 +1,346 @@
+//! One library entry: a characterised approximate circuit.
+
+use crate::circuit::cost::{CircuitCost, CostModel};
+use crate::circuit::gate::GateKind;
+use crate::circuit::netlist::{Netlist, Node};
+use crate::circuit::simulator::{activity_exhaustive, activity_vectors, eval_exhaustive_u64};
+use crate::circuit::verify::{stratified_vectors, ArithFn};
+use crate::cgp::metrics::{ErrorMetrics, RelativeErrors};
+use crate::util::json::Json;
+
+/// How an entry came to exist — recorded for reproducibility.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Origin {
+    /// Conventional exact implementation (a CGP seed).
+    Seed(String),
+    /// Evolved by CGP: `(metric, e_max, seed)`.
+    Evolved { metric: String, e_max_permille: u64, seed: u64 },
+    /// Operand truncation to `keep` bits.
+    Truncated { keep: u32 },
+    /// Broken-array multiplier with break levels `(h, v)`.
+    Bam { h: u32, v: u32 },
+}
+
+impl Origin {
+    /// Serialise.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Origin::Seed(s) => Json::obj([("kind", "seed".into()), ("name", s.as_str().into())]),
+            Origin::Evolved {
+                metric,
+                e_max_permille,
+                seed,
+            } => Json::obj([
+                ("kind", "evolved".into()),
+                ("metric", metric.as_str().into()),
+                ("e_max_permille", (*e_max_permille as i64).into()),
+                ("seed", (*seed as i64).into()),
+            ]),
+            Origin::Truncated { keep } => {
+                Json::obj([("kind", "truncated".into()), ("keep", (*keep).into())])
+            }
+            Origin::Bam { h, v } => Json::obj([
+                ("kind", "bam".into()),
+                ("h", (*h).into()),
+                ("v", (*v).into()),
+            ]),
+        }
+    }
+
+    /// Deserialise.
+    pub fn from_json(j: &Json) -> Result<Origin, String> {
+        match j.req_str("kind")? {
+            "seed" => Ok(Origin::Seed(j.req_str("name")?.to_string())),
+            "evolved" => Ok(Origin::Evolved {
+                metric: j.req_str("metric")?.to_string(),
+                e_max_permille: j.req_i64("e_max_permille")? as u64,
+                seed: j.req_i64("seed")? as u64,
+            }),
+            "truncated" => Ok(Origin::Truncated {
+                keep: j.req_i64("keep")? as u32,
+            }),
+            "bam" => Ok(Origin::Bam {
+                h: j.req_i64("h")? as u32,
+                v: j.req_i64("v")? as u32,
+            }),
+            k => Err(format!("unknown origin kind `{k}`")),
+        }
+    }
+
+    /// Short human label (Table II first column style).
+    pub fn label(&self) -> String {
+        match self {
+            Origin::Seed(s) => format!("exact ({s})"),
+            Origin::Evolved { .. } => "evolved".to_string(),
+            Origin::Truncated { keep } => format!("Truncated {keep}-bit"),
+            Origin::Bam { h, v } => format!("BAM h={h} v={v}"),
+        }
+    }
+}
+
+/// A fully characterised approximate (or exact) arithmetic circuit.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    /// Stable id, e.g. `mul8u_03F2` (tag + functional hash).
+    pub id: String,
+    /// Target arithmetic function.
+    pub f: ArithFn,
+    /// The circuit itself (compacted).
+    pub netlist: Netlist,
+    /// All six error metrics (eqs. 1–6).
+    pub metrics: ErrorMetrics,
+    /// The metrics as Table-II-style percentages.
+    pub rel: RelativeErrors,
+    /// Synthesis-model characterisation.
+    pub cost: CircuitCost,
+    /// Provenance.
+    pub origin: Origin,
+}
+
+impl Entry {
+    /// Characterise a netlist into an entry: functional hash id, all six
+    /// metrics, activity-based power — exhaustively when feasible, over the
+    /// deterministic stratified sample otherwise.
+    pub fn characterise(
+        netlist: Netlist,
+        f: ArithFn,
+        model: &CostModel,
+        origin: Origin,
+    ) -> Entry {
+        let netlist = netlist.compact();
+        let (metrics, cost, hash) = if f.exhaustive_feasible() {
+            let (table, act) = activity_exhaustive(&netlist);
+            let metrics = ErrorMetrics::vs_exact_table(&table, f);
+            let cost = model.evaluate(&netlist, &act);
+            (metrics, cost, fnv1a(table.iter().copied()))
+        } else {
+            let vecs = stratified_vectors(f, 16, 0x11B);
+            let (outs, act) = activity_vectors(&netlist, &vecs);
+            let metrics = ErrorMetrics::vs_exact_sampled(&vecs, &outs, f);
+            let cost = model.evaluate(&netlist, &act);
+            (metrics, cost, fnv1a(outs.iter().copied()))
+        };
+        let rel = metrics.as_percentages(f);
+        let id = format!("{}_{:04X}", f.tag(), hash & 0xFFFF);
+        let mut netlist = netlist;
+        netlist.name = id.clone();
+        Entry {
+            id,
+            f,
+            netlist,
+            metrics,
+            rel,
+            cost,
+            origin,
+        }
+    }
+
+    /// Functional hash — same id ⇔ same behaviour on the evaluation set.
+    pub fn functional_hash(&self) -> u64 {
+        if self.f.exhaustive_feasible() {
+            fnv1a(eval_exhaustive_u64(&self.netlist).iter().copied())
+        } else {
+            let vecs = stratified_vectors(self.f, 16, 0x11B);
+            fnv1a(
+                crate::circuit::simulator::eval_vectors_u64(&self.netlist, &vecs)
+                    .iter()
+                    .copied(),
+            )
+        }
+    }
+
+    /// Serialise the whole entry (including the netlist).
+    pub fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .netlist
+            .nodes
+            .iter()
+            .map(|n| {
+                Json::Arr(vec![
+                    (n.kind.code() as i64).into(),
+                    (n.a as i64).into(),
+                    (n.b as i64).into(),
+                ])
+            })
+            .collect();
+        let outputs: Vec<Json> = self
+            .netlist
+            .outputs
+            .iter()
+            .map(|&o| (o as i64).into())
+            .collect();
+        Json::obj([
+            ("id", self.id.as_str().into()),
+            ("fn", self.f.tag().into()),
+            ("width", self.f.width().into()),
+            (
+                "is_mul",
+                matches!(self.f, ArithFn::Mul { .. }).into(),
+            ),
+            ("n_inputs", self.netlist.n_inputs.into()),
+            ("nodes", Json::Arr(nodes)),
+            ("outputs", Json::Arr(outputs)),
+            (
+                "metrics",
+                Json::obj([
+                    ("er", self.metrics.er.into()),
+                    ("mae", self.metrics.mae.into()),
+                    ("mse", self.metrics.mse.into()),
+                    ("mre", self.metrics.mre.into()),
+                    ("wce", self.metrics.wce.into()),
+                    ("wcre", self.metrics.wcre.into()),
+                    ("n_vectors", (self.metrics.n_vectors as i64).into()),
+                    ("exhaustive", self.metrics.exhaustive.into()),
+                ]),
+            ),
+            (
+                "cost",
+                Json::obj([
+                    ("gates", self.cost.gates.into()),
+                    ("area_um2", self.cost.area_um2.into()),
+                    ("delay_ps", self.cost.delay_ps.into()),
+                    ("leakage_uw", self.cost.leakage_uw.into()),
+                    ("dynamic_uw", self.cost.dynamic_uw.into()),
+                    ("power_uw", self.cost.power_uw.into()),
+                ]),
+            ),
+            ("origin", self.origin.to_json()),
+        ])
+    }
+
+    /// Deserialise (recomputes the Table-II percentage view).
+    pub fn from_json(j: &Json) -> Result<Entry, String> {
+        let width = j.req_i64("width")? as u32;
+        let f = if j.req("is_mul")?.as_bool().unwrap_or(false) {
+            ArithFn::Mul { w: width }
+        } else {
+            ArithFn::Add { w: width }
+        };
+        let n_inputs = j.req_i64("n_inputs")? as u32;
+        let mut netlist = Netlist::new(n_inputs, j.req_str("id")?);
+        for n in j.req_arr("nodes")? {
+            let t = n.as_arr().ok_or("node not an array")?;
+            if t.len() != 3 {
+                return Err("node arity".into());
+            }
+            let kind = GateKind::from_code(t[0].as_i64().ok_or("code")? as u8)
+                .ok_or("bad gate code")?;
+            netlist.nodes.push(Node {
+                kind,
+                a: t[1].as_i64().ok_or("a")? as u32,
+                b: t[2].as_i64().ok_or("b")? as u32,
+            });
+        }
+        for o in j.req_arr("outputs")? {
+            netlist.outputs.push(o.as_i64().ok_or("output")? as u32);
+        }
+        netlist.validate()?;
+        let m = j.req("metrics")?;
+        let metrics = ErrorMetrics {
+            er: m.req_f64("er")?,
+            mae: m.req_f64("mae")?,
+            mse: m.req_f64("mse")?,
+            mre: m.req_f64("mre")?,
+            wce: m.req_f64("wce")?,
+            wcre: m.req_f64("wcre")?,
+            n_vectors: m.req_i64("n_vectors")? as u64,
+            exhaustive: m.req("exhaustive")?.as_bool().unwrap_or(false),
+        };
+        let c = j.req("cost")?;
+        let cost = CircuitCost {
+            gates: c.req_i64("gates")? as usize,
+            area_um2: c.req_f64("area_um2")?,
+            delay_ps: c.req_f64("delay_ps")?,
+            leakage_uw: c.req_f64("leakage_uw")?,
+            dynamic_uw: c.req_f64("dynamic_uw")?,
+            power_uw: c.req_f64("power_uw")?,
+        };
+        Ok(Entry {
+            id: j.req_str("id")?.to_string(),
+            f,
+            rel: metrics.as_percentages(f),
+            netlist,
+            metrics,
+            cost,
+            origin: Origin::from_json(j.req("origin")?)?,
+        })
+    }
+}
+
+/// FNV-1a over a u64 stream.
+pub fn fnv1a(values: impl Iterator<Item = u64>) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in values {
+        for byte in v.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::baselines::{bam_multiplier, truncated_multiplier};
+    use crate::circuit::generators::wallace_multiplier;
+
+    #[test]
+    fn characterise_exact_seed() {
+        let model = CostModel::default();
+        let e = Entry::characterise(
+            wallace_multiplier(8),
+            ArithFn::Mul { w: 8 },
+            &model,
+            Origin::Seed("wallace".into()),
+        );
+        assert_eq!(e.metrics.er, 0.0);
+        assert!(e.cost.power_uw > 0.0);
+        assert!(e.id.starts_with("mul8u_"));
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let model = CostModel::default();
+        let e = Entry::characterise(
+            bam_multiplier(8, 1, 3),
+            ArithFn::Mul { w: 8 },
+            &model,
+            Origin::Bam { h: 1, v: 3 },
+        );
+        let j = e.to_json();
+        let e2 = Entry::from_json(&j).unwrap();
+        assert_eq!(e2.id, e.id);
+        assert_eq!(e2.netlist, e.netlist);
+        assert_eq!(e2.metrics.mae, e.metrics.mae);
+        assert_eq!(e2.cost.power_uw, e.cost.power_uw);
+        assert_eq!(e2.origin, e.origin);
+        // functional hash must survive the round trip
+        assert_eq!(e2.functional_hash(), e.functional_hash());
+    }
+
+    #[test]
+    fn same_function_same_id() {
+        let model = CostModel::default();
+        let a = Entry::characterise(
+            truncated_multiplier(8, 8),
+            ArithFn::Mul { w: 8 },
+            &model,
+            Origin::Truncated { keep: 8 },
+        );
+        let b = Entry::characterise(
+            wallace_multiplier(8),
+            ArithFn::Mul { w: 8 },
+            &model,
+            Origin::Seed("wallace".into()),
+        );
+        // both are exact 8-bit multipliers → identical functional hash/id
+        assert_eq!(a.id, b.id);
+    }
+
+    #[test]
+    fn origin_labels() {
+        assert_eq!(Origin::Truncated { keep: 7 }.label(), "Truncated 7-bit");
+        assert_eq!(Origin::Bam { h: 0, v: 2 }.label(), "BAM h=0 v=2");
+    }
+}

@@ -1,0 +1,13 @@
+//! The approximate-circuit library (§III): characterised entries, JSON
+//! persistence, Table-I census, Pareto selection (§IV) and the CGP
+//! construction campaigns.
+
+pub mod catalog;
+pub mod entry;
+pub mod selection;
+pub mod store;
+
+pub use catalog::{run_campaign, seeds_for, target_ladder, CampaignConfig, CampaignProgress};
+pub use entry::{Entry, Origin};
+pub use selection::{evenly_by_power, pareto_indices, select_diverse};
+pub use store::Library;

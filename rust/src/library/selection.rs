@@ -1,0 +1,181 @@
+//! The paper's circuit-selection procedure (§III/§IV):
+//!
+//! 1. for each of the five error metrics (ER, MAE, WCE, MSE, MRE), extract
+//!    the Pareto front of (power, metric);
+//! 2. take 10 circuits evenly distributed along the power axis;
+//! 3. union the five subsets and drop functional duplicates — the paper
+//!    lands on 35 unique approximate multipliers this way.
+
+use crate::cgp::metrics::Metric;
+use crate::cgp::pareto::non_dominated_indices;
+use crate::circuit::verify::ArithFn;
+
+use super::entry::Entry;
+use super::store::Library;
+
+/// Indices (into `entries`) of the (power, metric)-Pareto-optimal entries.
+pub fn pareto_indices(entries: &[&Entry], metric: Metric) -> Vec<usize> {
+    let objs: Vec<Vec<f64>> = entries
+        .iter()
+        .map(|e| vec![e.cost.power_uw, metric.of(&e.metrics)])
+        .collect();
+    non_dominated_indices(&objs)
+}
+
+/// Pick (up to) `k` front members evenly spaced along the power axis:
+/// for each of `k` equidistant target powers between the front's min and
+/// max, take the nearest not-yet-chosen member.
+pub fn evenly_by_power<'e>(front: &[&'e Entry], k: usize) -> Vec<&'e Entry> {
+    if front.is_empty() || k == 0 {
+        return Vec::new();
+    }
+    let mut sorted: Vec<&Entry> = front.to_vec();
+    sorted.sort_by(|a, b| a.cost.power_uw.partial_cmp(&b.cost.power_uw).unwrap());
+    if sorted.len() <= k {
+        return sorted;
+    }
+    let lo = sorted.first().unwrap().cost.power_uw;
+    let hi = sorted.last().unwrap().cost.power_uw;
+    let mut taken = vec![false; sorted.len()];
+    let mut out = Vec::with_capacity(k);
+    for i in 0..k {
+        let target = lo + (hi - lo) * i as f64 / (k - 1) as f64;
+        let mut best: Option<(f64, usize)> = None;
+        for (j, e) in sorted.iter().enumerate() {
+            if taken[j] {
+                continue;
+            }
+            let d = (e.cost.power_uw - target).abs();
+            if best.map_or(true, |(bd, _)| d < bd) {
+                best = Some((d, j));
+            }
+        }
+        if let Some((_, j)) = best {
+            taken[j] = true;
+            out.push(sorted[j]);
+        }
+    }
+    out.sort_by(|a, b| a.cost.power_uw.partial_cmp(&b.cost.power_uw).unwrap());
+    out
+}
+
+/// The full §IV selection: per-metric Pareto subsets of `k` → union →
+/// functional dedup (by id). Returns entries sorted by descending power
+/// (Table II row order).
+pub fn select_diverse<'l>(
+    lib: &'l Library,
+    f: ArithFn,
+    metrics: &[Metric],
+    k: usize,
+) -> Vec<&'l Entry> {
+    let all = lib.for_fn(f);
+    let mut chosen: Vec<&Entry> = Vec::new();
+    for &m in metrics {
+        let front_idx = pareto_indices(&all, m);
+        let front: Vec<&Entry> = front_idx.iter().map(|&i| all[i]).collect();
+        for e in evenly_by_power(&front, k) {
+            if !chosen.iter().any(|c| c.id == e.id) {
+                chosen.push(e);
+            }
+        }
+    }
+    chosen.sort_by(|a, b| b.cost.power_uw.partial_cmp(&a.cost.power_uw).unwrap());
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgp::metrics::SELECTION_METRICS;
+    use crate::circuit::baselines::{bam_multiplier, truncated_multiplier};
+    use crate::circuit::cost::CostModel;
+    use crate::circuit::generators::wallace_multiplier;
+    use crate::library::entry::Origin;
+
+    fn test_library() -> Library {
+        let model = CostModel::default();
+        let f = ArithFn::Mul { w: 8 };
+        let mut lib = Library::new();
+        lib.insert(Entry::characterise(
+            wallace_multiplier(8),
+            f,
+            &model,
+            Origin::Seed("wallace".into()),
+        ));
+        for keep in [5, 6, 7] {
+            lib.insert(Entry::characterise(
+                truncated_multiplier(8, keep),
+                f,
+                &model,
+                Origin::Truncated { keep },
+            ));
+        }
+        for (h, v) in [(0, 2), (0, 4), (1, 3), (0, 6), (1, 6), (0, 7), (2, 7), (2, 8)] {
+            lib.insert(Entry::characterise(
+                bam_multiplier(8, h, v),
+                f,
+                &model,
+                Origin::Bam { h, v },
+            ));
+        }
+        lib
+    }
+
+    #[test]
+    fn pareto_front_excludes_dominated() {
+        let lib = test_library();
+        let all = lib.for_fn(ArithFn::Mul { w: 8 });
+        let front = pareto_indices(&all, Metric::Mae);
+        assert!(!front.is_empty());
+        assert!(front.len() < all.len(), "some entries must be dominated");
+        // the exact multiplier (mae = 0) is always on the front
+        let has_exact = front.iter().any(|&i| all[i].metrics.mae == 0.0);
+        assert!(has_exact);
+    }
+
+    #[test]
+    fn evenly_by_power_spacing() {
+        let lib = test_library();
+        let all = lib.for_fn(ArithFn::Mul { w: 8 });
+        let front_idx = pareto_indices(&all, Metric::Mae);
+        let front: Vec<&Entry> = front_idx.iter().map(|&i| all[i]).collect();
+        let picked = evenly_by_power(&front, 4);
+        assert!(picked.len() <= 4);
+        assert!(picked.len() >= 2.min(front.len()));
+        // sorted by power ascending, no duplicates
+        for w in picked.windows(2) {
+            assert!(w[0].cost.power_uw <= w[1].cost.power_uw);
+            assert_ne!(w[0].id, w[1].id);
+        }
+        // extremes of the front are included
+        let mut sorted = front.clone();
+        sorted.sort_by(|a, b| a.cost.power_uw.partial_cmp(&b.cost.power_uw).unwrap());
+        assert_eq!(picked.first().unwrap().id, sorted.first().unwrap().id);
+        assert_eq!(picked.last().unwrap().id, sorted.last().unwrap().id);
+    }
+
+    #[test]
+    fn select_diverse_dedups_across_metrics() {
+        let lib = test_library();
+        let sel = select_diverse(&lib, ArithFn::Mul { w: 8 }, &SELECTION_METRICS, 10);
+        assert!(!sel.is_empty());
+        for i in 0..sel.len() {
+            for j in (i + 1)..sel.len() {
+                assert_ne!(sel[i].id, sel[j].id);
+            }
+        }
+        // descending power order (Table II)
+        for w in sel.windows(2) {
+            assert!(w[0].cost.power_uw >= w[1].cost.power_uw);
+        }
+    }
+
+    #[test]
+    fn small_front_returned_whole() {
+        let lib = test_library();
+        let all = lib.for_fn(ArithFn::Mul { w: 8 });
+        let two: Vec<&Entry> = all.into_iter().take(2).collect();
+        assert_eq!(evenly_by_power(&two, 10).len(), 2);
+        assert!(evenly_by_power(&[], 10).is_empty());
+    }
+}

@@ -1,0 +1,186 @@
+//! The library itself: a deduplicated collection of characterised entries
+//! with JSON persistence and Table-I-style census reporting.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::circuit::verify::ArithFn;
+use crate::util::json::Json;
+
+use super::entry::Entry;
+
+/// A library of approximate arithmetic circuits (the EvoApproxLib analogue).
+#[derive(Debug, Default)]
+pub struct Library {
+    entries: Vec<Entry>,
+}
+
+impl Library {
+    /// Empty library.
+    pub fn new() -> Library {
+        Library::default()
+    }
+
+    /// Insert, deduplicating on `(function, functional hash)` — two circuits
+    /// computing the same function keep only the *cheaper* one (by power),
+    /// mirroring how the published library keeps distinct behaviours.
+    /// Returns `true` if the entry was added or replaced an existing one.
+    pub fn insert(&mut self, e: Entry) -> bool {
+        if let Some(existing) = self
+            .entries
+            .iter_mut()
+            .find(|x| x.f == e.f && x.id == e.id)
+        {
+            if e.cost.power_uw < existing.cost.power_uw {
+                *existing = e;
+                return true;
+            }
+            return false;
+        }
+        self.entries.push(e);
+        true
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[Entry] {
+        &self.entries
+    }
+
+    /// Entries implementing `f`.
+    pub fn for_fn(&self, f: ArithFn) -> Vec<&Entry> {
+        self.entries.iter().filter(|e| e.f == f).collect()
+    }
+
+    /// Find by id.
+    pub fn get(&self, id: &str) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.id == id)
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Census per `(circuit kind, bit width)` — the data of Table I.
+    pub fn census(&self) -> Vec<(String, u32, usize)> {
+        let mut map: BTreeMap<(String, u32), usize> = BTreeMap::new();
+        for e in &self.entries {
+            let kind = match e.f {
+                ArithFn::Add { .. } => "adder".to_string(),
+                ArithFn::Mul { .. } => "multiplier".to_string(),
+            };
+            *map.entry((kind, e.f.width())).or_default() += 1;
+        }
+        map.into_iter()
+            .map(|((k, w), n)| (k, w, n))
+            .collect()
+    }
+
+    /// Serialise the whole library.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("format", "evoapproxlib-v1".into()),
+            (
+                "entries",
+                Json::Arr(self.entries.iter().map(Entry::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Deserialise.
+    pub fn from_json(j: &Json) -> Result<Library, String> {
+        let mut lib = Library::new();
+        for e in j.req_arr("entries")? {
+            lib.entries.push(Entry::from_json(e)?);
+        }
+        Ok(lib)
+    }
+
+    /// Save to a JSON file.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Library> {
+        let text = std::fs::read_to_string(&path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Library::from_json(&j).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::baselines::{bam_multiplier, truncated_multiplier};
+    use crate::circuit::cost::CostModel;
+    use crate::circuit::generators::{ripple_carry_adder, wallace_multiplier};
+    use crate::library::entry::Origin;
+
+    fn mk(n: crate::circuit::netlist::Netlist, f: ArithFn) -> Entry {
+        Entry::characterise(n, f, &CostModel::default(), Origin::Seed("t".into()))
+    }
+
+    #[test]
+    fn insert_dedup_same_function() {
+        let mut lib = Library::new();
+        let f = ArithFn::Mul { w: 8 };
+        assert!(lib.insert(mk(wallace_multiplier(8), f)));
+        // same function, different structure (array mult is exact too)
+        let added = lib.insert(mk(truncated_multiplier(8, 8), f));
+        assert_eq!(lib.len(), 1, "functionally identical entries deduplicate");
+        // whichever is cheaper won; `added` reflects replacement decision
+        let _ = added;
+    }
+
+    #[test]
+    fn census_counts() {
+        let mut lib = Library::new();
+        lib.insert(mk(wallace_multiplier(8), ArithFn::Mul { w: 8 }));
+        lib.insert(mk(bam_multiplier(8, 0, 4), ArithFn::Mul { w: 8 }));
+        lib.insert(mk(ripple_carry_adder(8), ArithFn::Add { w: 8 }));
+        lib.insert(mk(ripple_carry_adder(12), ArithFn::Add { w: 12 }));
+        let census = lib.census();
+        assert_eq!(
+            census,
+            vec![
+                ("adder".to_string(), 8, 1),
+                ("adder".to_string(), 12, 1),
+                ("multiplier".to_string(), 8, 2),
+            ]
+        );
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let mut lib = Library::new();
+        lib.insert(mk(bam_multiplier(8, 1, 3), ArithFn::Mul { w: 8 }));
+        lib.insert(mk(ripple_carry_adder(6), ArithFn::Add { w: 6 }));
+        let dir = std::env::temp_dir().join("evoapprox_test_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lib.json");
+        lib.save(&path).unwrap();
+        let loaded = Library::load(&path).unwrap();
+        assert_eq!(loaded.len(), lib.len());
+        let a = &lib.entries()[0];
+        let b = loaded.get(&a.id).unwrap();
+        assert_eq!(a.netlist, b.netlist);
+        assert_eq!(a.metrics.mae, b.metrics.mae);
+    }
+
+    #[test]
+    fn for_fn_filters() {
+        let mut lib = Library::new();
+        lib.insert(mk(wallace_multiplier(8), ArithFn::Mul { w: 8 }));
+        lib.insert(mk(ripple_carry_adder(8), ArithFn::Add { w: 8 }));
+        assert_eq!(lib.for_fn(ArithFn::Mul { w: 8 }).len(), 1);
+        assert_eq!(lib.for_fn(ArithFn::Add { w: 8 }).len(), 1);
+        assert_eq!(lib.for_fn(ArithFn::Add { w: 16 }).len(), 0);
+    }
+}

@@ -1,0 +1,522 @@
+//! `evoapprox` — CLI for the EvoApproxLib reproduction.
+//!
+//! Subcommands (argument parsing is hand-rolled; the offline vendor set has
+//! no clap):
+//!
+//! ```text
+//! evoapprox info                         # manifest + artifact inventory
+//! evoapprox evolve  [--width 8] [--metric MAE] [--emax-frac 0.005]
+//!                   [--generations 20000] [--seed 1] [--adder]
+//! evoapprox library [--out lib.json] [--quick] [--widths 8,12,16]
+//! evoapprox census  --lib lib.json       # Table I counts
+//! evoapprox select  --lib lib.json [--k 10]
+//! evoapprox fig4    [--lib lib.json] [--images 256] [--multipliers 6]
+//! evoapprox table2  [--lib lib.json] [--images 128] [--models resnet8,resnet14]
+//! evoapprox serve   [--requests 512] [--max-wait-ms 20]
+//! ```
+
+use std::collections::HashMap;
+
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::cgp::{evolve, Evaluator, EvolveConfig, Metric};
+use evoapproxlib::library::{run_campaign, CampaignConfig, Library};
+use evoapproxlib::util::table::TextTable;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, flags) = parse(&args);
+    let r = match cmd.as_str() {
+        "info" => cmd_info(&flags),
+        "evolve" => cmd_evolve(&flags),
+        "library" => cmd_library(&flags),
+        "census" => cmd_census(&flags),
+        "select" => cmd_select(&flags),
+        "fig4" => cmd_fig4(&flags),
+        "table2" => cmd_table2(&flags),
+        "serve" => cmd_serve(&flags),
+        "" | "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+evoapprox — approximate-circuit library + DNN resilience analysis
+commands: info | evolve | library | census | select | fig4 | table2 | serve
+(see rust/src/main.rs docs for flags)
+";
+
+fn parse(args: &[String]) -> (String, HashMap<String, String>) {
+    let cmd = args.first().cloned().unwrap_or_default();
+    let mut flags = HashMap::new();
+    let mut i = 1;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    (cmd, flags)
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags
+        .get(key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn artifacts_dir(flags: &HashMap<String, String>) -> String {
+    flags
+        .get("artifacts")
+        .cloned()
+        .or_else(|| std::env::var("EVOAPPROX_ARTIFACTS").ok())
+        .unwrap_or_else(|| "artifacts".to_string())
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let dir = artifacts_dir(flags);
+    let m = evoapproxlib::runtime::Manifest::load(&dir)?;
+    println!(
+        "artifacts: {dir} — {} models, test set n={}, image {:?}",
+        m.models.len(),
+        m.testset_n,
+        m.image_dims
+    );
+    let mut t = TextTable::new(&[
+        "model", "depth", "convs", "mults/img", "float acc", "q8 acc", "variants",
+    ]);
+    for model in &m.models {
+        t.row(vec![
+            model.name.clone(),
+            model.depth.to_string(),
+            model.n_conv_layers.to_string(),
+            model.total_mults().to_string(),
+            format!("{:.4}", model.float_acc),
+            format!("{:.4}", model.q8_acc),
+            model
+                .artifacts
+                .iter()
+                .map(|a| format!("b{}/{}", a.batch, a.kernel))
+                .collect::<Vec<_>>()
+                .join(" "),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_evolve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let w: u32 = flag(flags, "width", 8);
+    let f = if flags.contains_key("adder") {
+        ArithFn::Add { w }
+    } else {
+        ArithFn::Mul { w }
+    };
+    let metric = Metric::parse(&flag::<String>(flags, "metric", "MAE".into()))
+        .ok_or_else(|| anyhow::anyhow!("bad --metric"))?;
+    let max_out = ((1u128 << f.n_outputs()) - 1) as f64;
+    let emax_frac: f64 = flag(flags, "emax-frac", 0.005);
+    let e_max = match metric {
+        Metric::Er | Metric::Mre | Metric::Wcre => emax_frac,
+        Metric::Mse => emax_frac * max_out * max_out,
+        _ => emax_frac * max_out,
+    };
+    let cfg = EvolveConfig {
+        metric,
+        e_max,
+        generations: flag(flags, "generations", 20_000),
+        lambda: flag(flags, "lambda", 4),
+        h: flag(flags, "h", 5),
+        seed: flag(flags, "seed", 1),
+        slack: flag(flags, "slack", 16),
+        ..Default::default()
+    };
+    let model = CostModel::default();
+    let seeds = evoapproxlib::library::seeds_for(f);
+    let mut evaluator = if f.exhaustive_feasible() {
+        Evaluator::exhaustive(f)
+    } else {
+        Evaluator::sampled(f, 16, cfg.seed)
+    };
+    println!(
+        "evolving {} under {} ≤ {e_max:.4} for {} generations…",
+        f.tag(),
+        metric.name(),
+        cfg.generations
+    );
+    let t0 = std::time::Instant::now();
+    let report = evolve(&seeds[0], f, &cfg, &model, &mut evaluator);
+    println!(
+        "done in {:.1?}: {} evaluations, best cost {:.2} µm² at {} = {:.4} ({} harvested)",
+        t0.elapsed(),
+        report.evaluations,
+        report.best_cost,
+        metric.name(),
+        report.best_error,
+        report.harvest.len()
+    );
+    if let Some(out) = flags.get("out") {
+        let mut lib = Library::new();
+        for h in &report.harvest {
+            lib.insert(evoapproxlib::library::Entry::characterise(
+                h.netlist.clone(),
+                f,
+                &model,
+                evoapproxlib::library::Origin::Evolved {
+                    metric: metric.name().to_string(),
+                    e_max_permille: (e_max * 1000.0) as u64,
+                    seed: cfg.seed,
+                },
+            ));
+        }
+        lib.save(out)?;
+        println!("saved {} entries to {out}", lib.len());
+    }
+    Ok(())
+}
+
+fn cmd_library(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let quick = flags.contains_key("quick");
+    let widths: Vec<u32> = flag::<String>(flags, "widths", "8".into())
+        .split(',')
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    let model = CostModel::default();
+    let mut lib = Library::new();
+    for &w in &widths {
+        for f in [ArithFn::Mul { w }, ArithFn::Add { w }] {
+            let mut cfg = CampaignConfig::quick(f);
+            if !quick {
+                cfg.generations = flag(flags, "generations", 10_000);
+                cfg.targets_per_metric = flag(flags, "targets", 5);
+            }
+            cfg.seed = flag(flags, "seed", 0x5EED);
+            println!("campaign: {} …", f.tag());
+            let added = run_campaign(
+                &mut lib,
+                &cfg,
+                &model,
+                Some(&mut |p: evoapproxlib::library::CampaignProgress| {
+                    if p.runs_done % 4 == 0 {
+                        println!(
+                            "  run {}/{} — {} entries, {} evals",
+                            p.runs_done, p.runs_total, p.entries, p.evaluations
+                        );
+                    }
+                }),
+            );
+            println!("  +{added} entries");
+        }
+    }
+    // always include the Table II baselines
+    for n in evoapproxlib::circuit::baselines::table2_baselines() {
+        let origin = origin_from_name(&n.name);
+        lib.insert(evoapproxlib::library::Entry::characterise(
+            n,
+            ArithFn::Mul { w: 8 },
+            &model,
+            origin,
+        ));
+    }
+    let out = flag::<String>(flags, "out", "library.json".into());
+    lib.save(&out)?;
+    println!("library: {} entries → {out}", lib.len());
+    Ok(())
+}
+
+fn origin_from_name(name: &str) -> evoapproxlib::library::Origin {
+    if let Some(rest) = name.strip_prefix("mul8u_trunc") {
+        evoapproxlib::library::Origin::Truncated {
+            keep: rest.parse().unwrap_or(0),
+        }
+    } else if name.contains("bam") {
+        let h = name
+            .split("_h")
+            .nth(1)
+            .and_then(|s| s.split('_').next())
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        let v = name
+            .split("_v")
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        evoapproxlib::library::Origin::Bam { h, v }
+    } else {
+        evoapproxlib::library::Origin::Seed(name.to_string())
+    }
+}
+
+fn cmd_census(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let lib = Library::load(flag::<String>(flags, "lib", "library.json".into()))?;
+    let mut t = TextTable::new(&["Circuit", "Bit-width", "# approx. implementations"]);
+    for (kind, w, n) in lib.census() {
+        t.row(vec![kind, w.to_string(), n.to_string()]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_select(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let lib = Library::load(flag::<String>(flags, "lib", "library.json".into()))?;
+    let k = flag(flags, "k", 10);
+    let sel = evoapproxlib::library::select_diverse(
+        &lib,
+        ArithFn::Mul { w: 8 },
+        &evoapproxlib::cgp::SELECTION_METRICS,
+        k,
+    );
+    let mut t = TextTable::new(&["id", "origin", "power µW", "MAE%", "WCE%", "ER%"]);
+    for e in &sel {
+        t.row(vec![
+            e.id.clone(),
+            e.origin.label(),
+            format!("{:.2}", e.cost.power_uw),
+            format!("{:.4}", e.rel.mae_pct),
+            format!("{:.3}", e.rel.wce_pct),
+            format!("{:.1}", e.rel.er_pct),
+        ]);
+    }
+    println!("{} selected (paper: 35)", sel.len());
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// Shared analysis setup: coordinator + multiplier summaries from a library.
+fn analysis_setup(
+    flags: &HashMap<String, String>,
+    k_per_metric: usize,
+    max_multipliers: usize,
+) -> anyhow::Result<(
+    evoapproxlib::coordinator::Coordinator,
+    evoapproxlib::coordinator::CoordinatorGuard,
+    Vec<evoapproxlib::resilience::MultiplierSummary>,
+    evoapproxlib::runtime::manifest::TestSet,
+)> {
+    use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig};
+    use evoapproxlib::resilience::MultiplierSummary;
+
+    let dir = artifacts_dir(flags);
+    let (coord, guard) = Coordinator::start(CoordinatorConfig::new(&dir))?;
+    let testset = coord.manifest().load_testset(&dir)?;
+    let n_images = flag(flags, "images", 256usize);
+    let testset = testset.truncated(n_images);
+
+    let model = CostModel::default();
+    let f = ArithFn::Mul { w: 8 };
+    let exact = evoapproxlib::library::Entry::characterise(
+        evoapproxlib::circuit::generators::wallace_multiplier(8),
+        f,
+        &model,
+        evoapproxlib::library::Origin::Seed("wallace".into()),
+    );
+    let mut sel: Vec<evoapproxlib::library::Entry> = Vec::new();
+    if let Some(libpath) = flags.get("lib") {
+        let lib = Library::load(libpath)?;
+        sel = evoapproxlib::library::select_diverse(
+            &lib,
+            f,
+            &evoapproxlib::cgp::SELECTION_METRICS,
+            k_per_metric,
+        )
+        .into_iter()
+        .cloned()
+        .collect();
+    }
+    if sel.is_empty() {
+        // fall back to the baseline set so the command works pre-campaign
+        for n in evoapproxlib::circuit::baselines::table2_baselines() {
+            let origin = origin_from_name(&n.name);
+            sel.push(evoapproxlib::library::Entry::characterise(
+                n, f, &model, origin,
+            ));
+        }
+    }
+    sel.truncate(max_multipliers);
+    let mut mults = vec![MultiplierSummary::from_entry(&exact, &exact.cost)?];
+    for e in &sel {
+        mults.push(MultiplierSummary::from_entry(e, &exact.cost)?);
+    }
+    Ok((coord, guard, mults, testset))
+}
+
+fn cmd_fig4(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use evoapproxlib::coordinator::KernelKind;
+    let max_m = flag(flags, "multipliers", 8usize);
+    let (coord, _guard, mults, testset) = analysis_setup(flags, 4, max_m)?;
+    let report = evoapproxlib::resilience::per_layer_campaign(
+        &coord,
+        &flag::<String>(flags, "model", "resnet8".into()),
+        &mults,
+        &testset,
+        KernelKind::Jnp,
+    )?;
+    println!(
+        "Fig.4 — {} reference accuracy {:.2}% over {} images",
+        report.model,
+        report.reference_accuracy * 100.0,
+        testset.n
+    );
+    let mut t = TextTable::new(&[
+        "multiplier", "layer", "label", "%mults", "accuracy", "acc drop", "power drop %",
+    ]);
+    for p in &report.points {
+        t.row(vec![
+            p.multiplier.clone(),
+            p.layer.to_string(),
+            p.layer_label.clone(),
+            format!("{:.1}", p.layer_fraction * 100.0),
+            format!("{:.4}", p.accuracy),
+            format!("{:+.4}", p.accuracy_drop),
+            format!("{:.2}", p.power_drop_pct),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("{:#?}", coord.metrics());
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_table2(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use evoapproxlib::coordinator::KernelKind;
+    let max_m = flag(flags, "multipliers", 28usize);
+    let (coord, _guard, mults, testset) = analysis_setup(flags, 10, max_m)?;
+    let models: Vec<String> = flag::<String>(
+        flags,
+        "models",
+        coord
+            .manifest()
+            .models
+            .iter()
+            .map(|m| m.name.clone())
+            .collect::<Vec<_>>()
+            .join(","),
+    )
+    .split(',')
+    .map(str::to_string)
+    .collect();
+    let report = evoapproxlib::resilience::whole_network_campaign(
+        &coord,
+        &models,
+        &mults[1..], // exact row is reported separately
+        &testset,
+        KernelKind::Jnp,
+    )?;
+    let mut header: Vec<String> = vec![
+        "Multiplier".into(),
+        "Power%".into(),
+        "MAE%".into(),
+        "WCE%".into(),
+        "MRE%".into(),
+        "WCRE%".into(),
+        "ER%".into(),
+    ];
+    header.extend(models.iter().cloned());
+    let hrefs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = TextTable::new(&hrefs);
+    let mut exact_row = vec![
+        "8 bit (exact)".to_string(),
+        "100.0".into(),
+        "0".into(),
+        "0".into(),
+        "0".into(),
+        "0".into(),
+        "0".into(),
+    ];
+    exact_row.extend(report.exact_row.iter().map(|(_, a)| format!("{a:.4}")));
+    t.row(exact_row);
+    for row in &report.rows {
+        let m = &row.multiplier;
+        let mut cells = vec![
+            m.label.clone(),
+            format!("{:.1}", m.rel_power_pct),
+            format!("{:.4}", m.mae_pct),
+            format!("{:.3}", m.wce_pct),
+            format!("{:.3}", m.mre_pct),
+            format!("{:.1}", m.wcre_pct),
+            format!("{:.1}", m.er_pct),
+        ];
+        cells.extend(row.accuracies.iter().map(|(_, a)| format!("{a:.4}")));
+        t.row(cells);
+    }
+    print!("{}", t.render());
+    println!("{:#?}", coord.metrics());
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use evoapproxlib::coordinator::batcher::{BatchPolicy, Batcher};
+    use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, KernelKind};
+    use evoapproxlib::data::{Dataset, DatasetConfig};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let dir = artifacts_dir(flags);
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&dir))?;
+    let model = flag::<String>(flags, "model", "resnet8".into());
+    coord.warm(&model, KernelKind::Jnp)?;
+    let n_layers = coord
+        .manifest()
+        .model(&model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?
+        .n_conv_layers;
+    let luts = Arc::new(evoapproxlib::runtime::broadcast_lut(
+        &evoapproxlib::runtime::exact_lut(),
+        n_layers,
+    ));
+    let policy = BatchPolicy {
+        max_batch: 64,
+        max_wait: Duration::from_millis(flag(flags, "max-wait-ms", 20)),
+    };
+    let (batcher, guard) = Batcher::spawn(coord.clone(), &model, KernelKind::Jnp, luts, policy)?;
+    let n: usize = flag(flags, "requests", 512);
+    let data = Dataset::generate(&DatasetConfig {
+        n,
+        ..Default::default()
+    });
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for k in 0..n {
+        pending.push(batcher.classify_async(data.image(k).to_vec())?);
+    }
+    let mut correct = 0usize;
+    for (k, rx) in pending.into_iter().enumerate() {
+        if rx.recv()?? == data.labels[k] {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    drop(batcher);
+    let stats = guard.join();
+    println!(
+        "served {n} requests in {dt:.2?} ({:.1} req/s), accuracy {:.3}",
+        n as f64 / dt.as_secs_f64(),
+        correct as f64 / n as f64
+    );
+    println!(
+        "batches {} (full {}), mean occupancy {:.2}",
+        stats.batches, stats.full_batches, stats.mean_occupancy
+    );
+    println!("{:#?}", coord.metrics());
+    coord.shutdown();
+    Ok(())
+}

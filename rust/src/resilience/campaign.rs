@@ -1,0 +1,261 @@
+//! Campaign drivers: Fig. 4 (per-layer) and Table II (whole-network)
+//! sweeps, scheduled through the coordinator.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::accel::PowerModel;
+use crate::circuit::cost::CircuitCost;
+use crate::coordinator::{Coordinator, KernelKind};
+use crate::library::entry::Entry;
+use crate::runtime::manifest::TestSet;
+use crate::runtime::{broadcast_lut, exact_lut, LUT_LEN};
+
+use super::lut::lut_for_entry;
+
+/// A multiplier under analysis: its LUT plus reporting metadata.
+#[derive(Debug, Clone)]
+pub struct MultiplierSummary {
+    /// Library id (`mul8u_XXXX`) or baseline label.
+    pub id: String,
+    /// Human label (Table II first column).
+    pub label: String,
+    /// Relative power vs the exact multiplier [%].
+    pub rel_power_pct: f64,
+    /// Table-II error columns [%].
+    pub mae_pct: f64,
+    /// WCE [%].
+    pub wce_pct: f64,
+    /// MRE [%].
+    pub mre_pct: f64,
+    /// WCRE [%].
+    pub wcre_pct: f64,
+    /// ER [%].
+    pub er_pct: f64,
+    /// The 65536-entry product table.
+    pub lut: Vec<i32>,
+    /// Circuit power characterisation (for per-layer power accounting).
+    pub cost: CircuitCost,
+}
+
+impl MultiplierSummary {
+    /// Build from a library entry, with `exact_cost` as the 100 % reference.
+    pub fn from_entry(e: &Entry, exact_cost: &CircuitCost) -> Result<MultiplierSummary> {
+        Ok(MultiplierSummary {
+            id: e.id.clone(),
+            label: match &e.origin {
+                crate::library::entry::Origin::Evolved { .. } => e.id.clone(),
+                other => other.label(),
+            },
+            rel_power_pct: e.cost.relative_power(exact_cost),
+            mae_pct: e.rel.mae_pct,
+            wce_pct: e.rel.wce_pct,
+            mre_pct: e.rel.mre_pct,
+            wcre_pct: e.rel.wcre_pct,
+            er_pct: e.rel.er_pct,
+            lut: lut_for_entry(e)?,
+            cost: e.cost,
+        })
+    }
+}
+
+/// One Fig. 4 point: (multiplier, layer) → accuracy & power drop.
+#[derive(Debug, Clone)]
+pub struct Fig4Point {
+    /// Multiplier id.
+    pub multiplier: String,
+    /// Layer index (execution order).
+    pub layer: usize,
+    /// Paper-style layer label (`S=3 R=1 C=1` / `stem`).
+    pub layer_label: String,
+    /// Fraction of the network's multiplications in this layer.
+    pub layer_fraction: f64,
+    /// Classification accuracy with only this layer approximated.
+    pub accuracy: f64,
+    /// Accuracy drop vs the golden baseline (positive = worse).
+    pub accuracy_drop: f64,
+    /// Multiplier-power drop of the whole accelerator [%].
+    pub power_drop_pct: f64,
+}
+
+/// Fig. 4 output: reference accuracy + all points.
+#[derive(Debug, Clone)]
+pub struct Fig4Report {
+    /// Model analysed (paper: ResNet-8).
+    pub model: String,
+    /// Golden (exact-LUT) accuracy.
+    pub reference_accuracy: f64,
+    /// All (multiplier × layer) points.
+    pub points: Vec<Fig4Point>,
+}
+
+/// Fig. 4: approximate ONE conv layer at a time (§IV).
+pub fn per_layer_campaign(
+    coord: &Coordinator,
+    model: &str,
+    multipliers: &[MultiplierSummary],
+    testset: &TestSet,
+    kernel: KernelKind,
+) -> Result<Fig4Report> {
+    let meta = coord
+        .manifest()
+        .model(model)
+        .ok_or_else(|| anyhow!("unknown model `{model}`"))?
+        .clone();
+    let n_layers = meta.n_conv_layers;
+    let pm = PowerModel::from_manifest(&meta);
+    let exact = exact_lut();
+    let images = Arc::new(testset.images.clone());
+    let golden = coord.accuracy(
+        model,
+        kernel,
+        images.clone(),
+        &testset.labels,
+        Arc::new(broadcast_lut(&exact, n_layers)),
+    )?;
+    let exact_cost = multipliers
+        .iter()
+        .find(|m| (m.rel_power_pct - 100.0).abs() < 1e-6)
+        .map(|m| m.cost);
+    let mut points = Vec::new();
+    for m in multipliers {
+        for layer in 0..n_layers {
+            let mut luts = broadcast_lut(&exact, n_layers);
+            luts[layer * LUT_LEN..(layer + 1) * LUT_LEN].copy_from_slice(&m.lut);
+            let acc = coord.accuracy(
+                model,
+                kernel,
+                images.clone(),
+                &testset.labels,
+                Arc::new(luts),
+            )?;
+            // power: whole-accelerator multiplier power with this one layer
+            // approximated; the reference cost is the exact multiplier's.
+            let power_pct = match &exact_cost {
+                Some(e) => pm.relative_power(e, &m.cost, Some(layer)),
+                None => {
+                    let f = pm.layer_fraction(layer);
+                    (1.0 - f) * 100.0 + f * m.rel_power_pct
+                }
+            };
+            points.push(Fig4Point {
+                multiplier: m.id.clone(),
+                layer,
+                layer_label: crate::accel::layer_label(&meta.layers[layer]),
+                layer_fraction: pm.layer_fraction(layer),
+                accuracy: acc,
+                accuracy_drop: golden - acc,
+                power_drop_pct: 100.0 - power_pct,
+            });
+        }
+    }
+    Ok(Fig4Report {
+        model: model.to_string(),
+        reference_accuracy: golden,
+        points,
+    })
+}
+
+/// One Table II row: a multiplier's metrics + accuracy on every network.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    /// Multiplier metadata (errors, power).
+    pub multiplier: MultiplierSummary,
+    /// `(model name, accuracy)` per network, in manifest order.
+    pub accuracies: Vec<(String, f64)>,
+}
+
+/// Table II output.
+#[derive(Debug, Clone)]
+pub struct Table2Report {
+    /// Golden accuracy per network (the "8 bit (exact)" row).
+    pub exact_row: Vec<(String, f64)>,
+    /// One row per multiplier.
+    pub rows: Vec<Table2Row>,
+}
+
+/// Table II: approximate ALL conv layers of every network (§IV).
+pub fn whole_network_campaign(
+    coord: &Coordinator,
+    models: &[String],
+    multipliers: &[MultiplierSummary],
+    testset: &TestSet,
+    kernel: KernelKind,
+) -> Result<Table2Report> {
+    let images = Arc::new(testset.images.clone());
+    let exact = exact_lut();
+    let mut exact_row = Vec::new();
+    let mut luts_per_model = Vec::new();
+    for name in models {
+        let meta = coord
+            .manifest()
+            .model(name)
+            .ok_or_else(|| anyhow!("unknown model `{name}`"))?;
+        let n_layers = meta.n_conv_layers;
+        luts_per_model.push(n_layers);
+        let acc = coord.accuracy(
+            name,
+            kernel,
+            images.clone(),
+            &testset.labels,
+            Arc::new(broadcast_lut(&exact, n_layers)),
+        )?;
+        exact_row.push((name.clone(), acc));
+    }
+    let mut rows = Vec::new();
+    for m in multipliers {
+        let mut accuracies = Vec::new();
+        for (name, &n_layers) in models.iter().zip(&luts_per_model) {
+            let acc = coord.accuracy(
+                name,
+                kernel,
+                images.clone(),
+                &testset.labels,
+                Arc::new(broadcast_lut(&m.lut, n_layers)),
+            )?;
+            accuracies.push((name.clone(), acc));
+        }
+        rows.push(Table2Row {
+            multiplier: m.clone(),
+            accuracies,
+        });
+    }
+    Ok(Table2Report { exact_row, rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::baselines::bam_multiplier;
+    use crate::circuit::cost::CostModel;
+    use crate::circuit::generators::wallace_multiplier;
+    use crate::circuit::verify::ArithFn;
+    use crate::library::entry::{Entry, Origin};
+
+    #[test]
+    fn summary_from_entry() {
+        let model = CostModel::default();
+        let f = ArithFn::Mul { w: 8 };
+        let exact = Entry::characterise(
+            wallace_multiplier(8),
+            f,
+            &model,
+            Origin::Seed("wallace".into()),
+        );
+        let bam = Entry::characterise(
+            bam_multiplier(8, 0, 6),
+            f,
+            &model,
+            Origin::Bam { h: 0, v: 6 },
+        );
+        let s = MultiplierSummary::from_entry(&bam, &exact.cost).unwrap();
+        assert!(s.rel_power_pct < 100.0);
+        assert!(s.mae_pct > 0.0);
+        assert_eq!(s.lut.len(), LUT_LEN);
+        assert_eq!(s.label, "BAM h=0 v=6");
+        let se = MultiplierSummary::from_entry(&exact, &exact.cost).unwrap();
+        assert!((se.rel_power_pct - 100.0).abs() < 1e-9);
+        assert_eq!(se.lut, crate::runtime::exact_lut());
+    }
+}

@@ -1,0 +1,82 @@
+//! Netlist → product-LUT construction (the TFApprox ingestion path).
+//!
+//! An 8×8 unsigned multiplier netlist is exhaustively simulated over all
+//! 2¹⁶ operand pairs (bit-parallel, ~1 ms) and its outputs become the
+//! 256×256 i32 table the AOT graphs gather from. Row-major layout:
+//! `lut[a * 256 + w]` — operand A is the activation code, W the weight
+//! code, matching `python/compile/kernels/ref.py`.
+
+use anyhow::{bail, Result};
+
+use crate::circuit::netlist::Netlist;
+use crate::circuit::simulator::eval_exhaustive_u64;
+use crate::library::entry::Entry;
+use crate::runtime::LUT_LEN;
+
+/// Build the LUT of an 8-bit multiplier netlist.
+///
+/// Input convention (see `circuit::generators`): inputs `0..8` = operand A,
+/// `8..16` = operand B; the exhaustive enumeration index is `a | b << 8`,
+/// i.e. B is the *major* axis — the LUT wants A major, so indices are
+/// transposed here.
+pub fn lut_from_netlist(n: &Netlist) -> Result<Vec<i32>> {
+    if n.n_inputs != 16 || n.n_outputs() != 16 {
+        bail!(
+            "LUT construction needs an 8×8→16 multiplier (got {}→{})",
+            n.n_inputs,
+            n.n_outputs()
+        );
+    }
+    let table = eval_exhaustive_u64(n);
+    let mut lut = vec![0i32; LUT_LEN];
+    for b in 0..256usize {
+        for a in 0..256usize {
+            // enumeration index: a | b<<8 ; LUT index: a*256 + b
+            lut[a * 256 + b] = table[(b << 8) | a] as i32;
+        }
+    }
+    Ok(lut)
+}
+
+/// Build the LUT of a library entry (must be a `mul8u`).
+pub fn lut_for_entry(e: &Entry) -> Result<Vec<i32>> {
+    lut_from_netlist(&e.netlist)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::baselines::{bam_multiplier, truncated_multiplier};
+    use crate::circuit::generators::wallace_multiplier;
+    use crate::runtime::exact_lut;
+
+    #[test]
+    fn exact_multiplier_gives_exact_lut() {
+        let lut = lut_from_netlist(&wallace_multiplier(8)).unwrap();
+        assert_eq!(lut, exact_lut());
+    }
+
+    #[test]
+    fn truncated_multiplier_lut_semantics() {
+        let lut = lut_from_netlist(&truncated_multiplier(8, 7)).unwrap();
+        for a in [0usize, 3, 77, 254, 255] {
+            for w in [0usize, 9, 128, 255] {
+                let expect = ((a & !1) * (w & !1)) as i32;
+                assert_eq!(lut[a * 256 + w], expect, "a={a} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn bam_lut_underestimates() {
+        let lut = lut_from_netlist(&bam_multiplier(8, 1, 6)).unwrap();
+        let exact = exact_lut();
+        assert!(lut.iter().zip(&exact).all(|(l, e)| l <= e));
+        assert!(lut.iter().zip(&exact).any(|(l, e)| l < e));
+    }
+
+    #[test]
+    fn rejects_wrong_interface() {
+        assert!(lut_from_netlist(&wallace_multiplier(4)).is_err());
+    }
+}

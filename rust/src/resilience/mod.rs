@@ -1,0 +1,22 @@
+//! Resilience analysis of DNN accelerators (§IV): the paper's case study as
+//! a reusable framework.
+//!
+//! A *campaign* sweeps approximate multipliers over networks/layers:
+//! * [`per_layer_campaign`] — Fig. 4: one conv layer of ResNet-8 at a time
+//!   is given the approximate multiplier's LUT (all other layers exact);
+//!   reports per-layer accuracy drop vs. power drop.
+//! * [`whole_network_campaign`] — Table II: every conv layer of every
+//!   network uses the multiplier; reports accuracy per network next to the
+//!   multiplier's circuit-level error metrics and relative power.
+//!
+//! LUTs come from [`lut`]: exhaustive bit-parallel simulation of the
+//! multiplier netlist (the TFApprox ingestion path, done in Rust).
+
+pub mod campaign;
+pub mod lut;
+
+pub use campaign::{
+    per_layer_campaign, whole_network_campaign, Fig4Point, Fig4Report, MultiplierSummary,
+    Table2Report, Table2Row,
+};
+pub use lut::{lut_for_entry, lut_from_netlist};

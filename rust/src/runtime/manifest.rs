@@ -1,0 +1,287 @@
+//! `artifacts/manifest.json` parsing + canonical test-set loading.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One conv layer's metadata (Fig. 4 labels + multiplier census).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerMeta {
+    /// Execution index (= LUT row).
+    pub index: usize,
+    /// Stage (0 = stem).
+    pub stage: u32,
+    /// Residual block within the stage (1-based).
+    pub block: u32,
+    /// Conv within the block (1-based).
+    pub conv: u32,
+    /// Input/output channels and stride.
+    pub cin: u32,
+    /// Output channels.
+    pub cout: u32,
+    /// Spatial stride.
+    pub stride: u32,
+    /// Multiplications per image in this layer.
+    pub n_mults: u64,
+}
+
+/// One compiled artifact variant of a model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    /// File name inside the artifacts dir.
+    pub path: String,
+    /// Compiled batch size.
+    pub batch: usize,
+    /// `"jnp"` or `"pallas"` (which L1 path the graph routes through).
+    pub kernel: String,
+}
+
+/// One model of the family.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    /// `resnet8` … `resnet50`.
+    pub name: String,
+    /// 6n+2 depth.
+    pub depth: u32,
+    /// Base width.
+    pub width: u32,
+    /// Conv layer count (= LUT rows).
+    pub n_conv_layers: usize,
+    /// Float test accuracy measured at build time.
+    pub float_acc: f64,
+    /// 8-bit-exact (golden) accuracy measured at build time.
+    pub q8_acc: f64,
+    /// Compiled variants.
+    pub artifacts: Vec<ArtifactMeta>,
+    /// Per-layer metadata.
+    pub layers: Vec<LayerMeta>,
+    /// (H, W, C) image dims.
+    pub image_dims: (usize, usize, usize),
+    /// Classes.
+    pub n_classes: usize,
+}
+
+impl ModelMeta {
+    /// The artifact with `batch` and kernel kind, if present.
+    pub fn artifact(&self, batch: usize, kernel: &str) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.batch == batch && a.kernel == kernel)
+    }
+
+    /// Default analysis artifact: largest-batch `jnp` variant.
+    pub fn default_artifact(&self) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kernel == "jnp")
+            .max_by_key(|a| a.batch)
+    }
+
+    /// Total multiplications per image over all conv layers.
+    pub fn total_mults(&self) -> u64 {
+        self.layers.iter().map(|l| l.n_mults).sum()
+    }
+}
+
+/// The build manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Models in build order.
+    pub models: Vec<ModelMeta>,
+    /// Test-set file names + size.
+    pub testset_images: String,
+    /// Labels file.
+    pub testset_labels: String,
+    /// Number of test images.
+    pub testset_n: usize,
+    /// (H, W, C).
+    pub image_dims: (usize, usize, usize),
+    /// Classes.
+    pub n_classes: usize,
+}
+
+impl Manifest {
+    /// Parse `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        if j.req_str("format").map_err(anyhow::Error::msg)? != "evoapprox-artifacts-v1" {
+            bail!("unknown manifest format");
+        }
+        let img = j.req_arr("image").map_err(anyhow::Error::msg)?;
+        if img.len() != 3 {
+            bail!("image dims must have 3 entries");
+        }
+        let image_dims = (
+            img[0].as_i64().context("image h")? as usize,
+            img[1].as_i64().context("image w")? as usize,
+            img[2].as_i64().context("image c")? as usize,
+        );
+        let n_classes = j.req_i64("n_classes").map_err(anyhow::Error::msg)? as usize;
+        let ts = j.req("testset").map_err(anyhow::Error::msg)?;
+        let mut models = Vec::new();
+        for m in j.req_arr("models").map_err(anyhow::Error::msg)? {
+            let mut artifacts = Vec::new();
+            for a in m.req_arr("artifacts").map_err(anyhow::Error::msg)? {
+                artifacts.push(ArtifactMeta {
+                    path: a.req_str("path").map_err(anyhow::Error::msg)?.to_string(),
+                    batch: a.req_i64("batch").map_err(anyhow::Error::msg)? as usize,
+                    kernel: a.req_str("kernel").map_err(anyhow::Error::msg)?.to_string(),
+                });
+            }
+            let mut layers = Vec::new();
+            for l in m.req_arr("layers").map_err(anyhow::Error::msg)? {
+                layers.push(LayerMeta {
+                    index: l.req_i64("index").map_err(anyhow::Error::msg)? as usize,
+                    stage: l.req_i64("stage").map_err(anyhow::Error::msg)? as u32,
+                    block: l.req_i64("block").map_err(anyhow::Error::msg)? as u32,
+                    conv: l.req_i64("conv").map_err(anyhow::Error::msg)? as u32,
+                    cin: l.req_i64("cin").map_err(anyhow::Error::msg)? as u32,
+                    cout: l.req_i64("cout").map_err(anyhow::Error::msg)? as u32,
+                    stride: l.req_i64("stride").map_err(anyhow::Error::msg)? as u32,
+                    n_mults: l.req_i64("n_mults").map_err(anyhow::Error::msg)? as u64,
+                });
+            }
+            models.push(ModelMeta {
+                name: m.req_str("name").map_err(anyhow::Error::msg)?.to_string(),
+                depth: m.req_i64("depth").map_err(anyhow::Error::msg)? as u32,
+                width: m.req_i64("width").map_err(anyhow::Error::msg)? as u32,
+                n_conv_layers: m
+                    .req_i64("n_conv_layers")
+                    .map_err(anyhow::Error::msg)? as usize,
+                float_acc: m.req_f64("float_acc").map_err(anyhow::Error::msg)?,
+                q8_acc: m.req_f64("q8_acc").map_err(anyhow::Error::msg)?,
+                artifacts,
+                layers,
+                image_dims,
+                n_classes,
+            });
+        }
+        Ok(Manifest {
+            models,
+            testset_images: ts
+                .req_str("images")
+                .map_err(anyhow::Error::msg)?
+                .to_string(),
+            testset_labels: ts
+                .req_str("labels")
+                .map_err(anyhow::Error::msg)?
+                .to_string(),
+            testset_n: ts.req_i64("n").map_err(anyhow::Error::msg)? as usize,
+            image_dims,
+            n_classes,
+        })
+    }
+
+    /// Look a model up by name.
+    pub fn model(&self, name: &str) -> Option<&ModelMeta> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    /// Load the canonical test split referenced by the manifest.
+    pub fn load_testset(&self, dir: impl AsRef<Path>) -> Result<TestSet> {
+        let dir = dir.as_ref();
+        let img_bytes = std::fs::read(dir.join(&self.testset_images))?;
+        let labels = std::fs::read(dir.join(&self.testset_labels))?;
+        let (h, w, c) = self.image_dims;
+        let expect = self.testset_n * h * w * c * 4;
+        if img_bytes.len() != expect {
+            bail!(
+                "test images: {} bytes, want {expect}",
+                img_bytes.len()
+            );
+        }
+        if labels.len() != self.testset_n {
+            bail!("test labels: {} bytes, want {}", labels.len(), self.testset_n);
+        }
+        let images = img_bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(TestSet {
+            images,
+            labels,
+            n: self.testset_n,
+            image_len: h * w * c,
+        })
+    }
+}
+
+/// The canonical evaluation split (exported by `aot.py`).
+#[derive(Debug, Clone)]
+pub struct TestSet {
+    /// Flattened f32 images.
+    pub images: Vec<f32>,
+    /// Labels.
+    pub labels: Vec<u8>,
+    /// Image count.
+    pub n: usize,
+    /// Floats per image.
+    pub image_len: usize,
+}
+
+impl TestSet {
+    /// First `k` images (prefix truncation for `--quick` runs).
+    pub fn truncated(&self, k: usize) -> TestSet {
+        let k = k.min(self.n);
+        TestSet {
+            images: self.images[..k * self.image_len].to_vec(),
+            labels: self.labels[..k].to_vec(),
+            n: k,
+            image_len: self.image_len,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let dir = std::env::temp_dir().join("evoapprox_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+          "format": "evoapprox-artifacts-v1",
+          "image": [16, 16, 3], "n_classes": 10, "seed": 0,
+          "testset": {"images": "ti.f32", "labels": "tl.u8", "n": 2},
+          "models": [{
+            "name": "resnet8", "depth": 8, "width": 8, "n_conv_layers": 7,
+            "float_acc": 0.9, "q8_acc": 0.88, "train_steps": 100,
+            "artifacts": [
+               {"path": "resnet8_b64.hlo.txt", "batch": 64, "kernel": "jnp"},
+               {"path": "resnet8_b64_pallas.hlo.txt", "batch": 64, "kernel": "pallas"}],
+            "layers": [{"index":0,"stage":0,"block":1,"conv":1,"cin":3,
+                        "cout":8,"stride":1,"n_mults":55296}]
+          }]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        // matching test-set binaries
+        let imgs: Vec<u8> = vec![0u8; 2 * 16 * 16 * 3 * 4];
+        std::fs::write(dir.join("ti.f32"), &imgs).unwrap();
+        std::fs::write(dir.join("tl.u8"), [1u8, 2]).unwrap();
+
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.models.len(), 1);
+        let model = m.model("resnet8").unwrap();
+        assert_eq!(model.n_conv_layers, 7);
+        assert_eq!(model.total_mults(), 55296);
+        assert_eq!(model.artifact(64, "pallas").unwrap().kernel, "pallas");
+        assert_eq!(model.default_artifact().unwrap().batch, 64);
+        let ts = m.load_testset(&dir).unwrap();
+        assert_eq!(ts.n, 2);
+        assert_eq!(ts.labels, vec![1, 2]);
+        let t1 = ts.truncated(1);
+        assert_eq!(t1.n, 1);
+        assert_eq!(t1.images.len(), 16 * 16 * 3);
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(Manifest::load("/nonexistent_dir_xyz").is_err());
+    }
+}

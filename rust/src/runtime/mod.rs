@@ -1,0 +1,211 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from Rust — the only place the `xla` crate is touched.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): the image's
+//! xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit instruction
+//! ids), while the text parser reassigns ids — see /opt/xla-example/README.md.
+//!
+//! Executable inputs (fixed by `aot.py`):
+//! * `images: f32[B, H, W, C]`
+//! * `luts:   i32[L, 65536]` — one 256×256 product table per conv layer.
+//!
+//! Output: 1-tuple of `logits f32[B, 10]`.
+//!
+//! PJRT wrapper types are deliberately kept `!Send`; the coordinator
+//! confines them to a dedicated executor thread (see `crate::coordinator`).
+
+pub mod manifest;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ArtifactMeta, LayerMeta, Manifest, ModelMeta, TestSet};
+
+/// Number of entries in one multiplier LUT (256×256).
+pub const LUT_LEN: usize = 256 * 256;
+
+/// A PJRT CPU client plus the compiled executables it owns.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one model artifact.
+    pub fn load_model(
+        &self,
+        artifacts_dir: impl AsRef<Path>,
+        model: &ModelMeta,
+        artifact: &ArtifactMeta,
+    ) -> Result<InferenceEngine> {
+        let path: PathBuf = artifacts_dir.as_ref().join(&artifact.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(InferenceEngine {
+            exe,
+            batch: artifact.batch,
+            image_dims: model.image_dims,
+            n_layers: model.n_conv_layers,
+            n_classes: model.n_classes,
+            name: format!("{}_b{}_{}", model.name, artifact.batch, artifact.kernel),
+        })
+    }
+}
+
+/// One compiled inference executable.
+pub struct InferenceEngine {
+    exe: xla::PjRtLoadedExecutable,
+    /// Compiled batch size.
+    pub batch: usize,
+    /// (H, W, C) of one image.
+    pub image_dims: (usize, usize, usize),
+    /// Number of conv layers = LUT rows expected.
+    pub n_layers: usize,
+    /// Classes in the logits.
+    pub n_classes: usize,
+    /// Diagnostic name.
+    pub name: String,
+}
+
+impl InferenceEngine {
+    /// Floats per image.
+    pub fn image_len(&self) -> usize {
+        self.image_dims.0 * self.image_dims.1 * self.image_dims.2
+    }
+
+    /// Execute one batch.
+    ///
+    /// `images` must hold exactly `batch * image_len()` floats; `luts`
+    /// exactly `n_layers * LUT_LEN` i32 values. Returns `batch * n_classes`
+    /// logits.
+    pub fn run(&self, images: &[f32], luts: &[i32]) -> Result<Vec<f32>> {
+        if images.len() != self.batch * self.image_len() {
+            bail!(
+                "images: got {} floats, want {} (batch {} × {})",
+                images.len(),
+                self.batch * self.image_len(),
+                self.batch,
+                self.image_len()
+            );
+        }
+        if luts.len() != self.n_layers * LUT_LEN {
+            bail!(
+                "luts: got {} values, want {} ({} layers × {LUT_LEN})",
+                luts.len(),
+                self.n_layers * LUT_LEN,
+                self.n_layers
+            );
+        }
+        let (h, w, c) = self.image_dims;
+        let img = xla::Literal::vec1(images)
+            .reshape(&[self.batch as i64, h as i64, w as i64, c as i64])?;
+        let lut = xla::Literal::vec1(luts)
+            .reshape(&[self.n_layers as i64, LUT_LEN as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[img, lut])?[0][0]
+            .to_literal_sync()?;
+        let logits = result.to_tuple1()?;
+        Ok(logits.to_vec::<f32>()?)
+    }
+
+    /// Run a full dataset (padding the tail batch) and return per-image
+    /// argmax predictions.
+    pub fn predict_all(&self, images: &[f32], luts: &[i32]) -> Result<Vec<u8>> {
+        let il = self.image_len();
+        assert_eq!(images.len() % il, 0);
+        let n = images.len() / il;
+        let mut preds = Vec::with_capacity(n);
+        let mut batch_buf = vec![0f32; self.batch * il];
+        let mut i = 0;
+        while i < n {
+            let take = (n - i).min(self.batch);
+            batch_buf[..take * il].copy_from_slice(&images[i * il..(i + take) * il]);
+            batch_buf[take * il..].fill(0.0);
+            let logits = self.run(&batch_buf, luts)?;
+            for k in 0..take {
+                let row = &logits[k * self.n_classes..(k + 1) * self.n_classes];
+                let arg = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j as u8)
+                    .unwrap();
+                preds.push(arg);
+            }
+            i += take;
+        }
+        Ok(preds)
+    }
+
+    /// Classification accuracy over a labelled set.
+    pub fn accuracy(&self, images: &[f32], labels: &[u8], luts: &[i32]) -> Result<f64> {
+        let preds = self.predict_all(images, luts)?;
+        assert_eq!(preds.len(), labels.len());
+        let correct = preds
+            .iter()
+            .zip(labels)
+            .filter(|(p, l)| p == l)
+            .count();
+        Ok(correct as f64 / labels.len().max(1) as f64)
+    }
+}
+
+/// The exact 8-bit product LUT (the paper's golden multiplier).
+pub fn exact_lut() -> Vec<i32> {
+    let mut lut = Vec::with_capacity(LUT_LEN);
+    for a in 0..256i32 {
+        for b in 0..256i32 {
+            lut.push(a * b);
+        }
+    }
+    lut
+}
+
+/// Tile one per-multiplier LUT across all `n_layers` rows.
+pub fn broadcast_lut(lut: &[i32], n_layers: usize) -> Vec<i32> {
+    assert_eq!(lut.len(), LUT_LEN);
+    let mut out = Vec::with_capacity(n_layers * LUT_LEN);
+    for _ in 0..n_layers {
+        out.extend_from_slice(lut);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_lut_values() {
+        let lut = exact_lut();
+        assert_eq!(lut.len(), LUT_LEN);
+        assert_eq!(lut[0], 0);
+        assert_eq!(lut[255 * 256 + 255], 255 * 255);
+        assert_eq!(lut[7 * 256 + 11], 77);
+    }
+
+    #[test]
+    fn broadcast_layout() {
+        let lut = exact_lut();
+        let b = broadcast_lut(&lut, 3);
+        assert_eq!(b.len(), 3 * LUT_LEN);
+        assert_eq!(&b[LUT_LEN..LUT_LEN + 10], &lut[..10]);
+    }
+}

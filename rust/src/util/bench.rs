@@ -1,0 +1,104 @@
+//! Tiny benchmarking harness used by the `cargo bench` targets.
+//!
+//! Criterion is not available offline, so each bench target is a plain
+//! `harness = false` binary built on this module: warmup, N timed samples,
+//! median/mean/min reporting, and a `--quick` mode every bench honours so
+//! the full suite stays runnable on the single-core testbed.
+
+use std::time::{Duration, Instant};
+
+/// Measurement of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Case label.
+    pub name: String,
+    /// Per-iteration timings.
+    pub times: Vec<Duration>,
+}
+
+impl Sample {
+    /// Median per-iteration time.
+    pub fn median(&self) -> Duration {
+        let mut t = self.times.clone();
+        t.sort();
+        t[t.len() / 2]
+    }
+
+    /// Arithmetic mean.
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.times.iter().sum();
+        total / self.times.len().max(1) as u32
+    }
+
+    /// Fastest sample.
+    pub fn min(&self) -> Duration {
+        self.times.iter().min().copied().unwrap_or_default()
+    }
+}
+
+/// Run `f` `samples` times (after `warmup` untimed runs) and report.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    let s = Sample {
+        name: name.to_string(),
+        times,
+    };
+    println!(
+        "bench {:<42} median {:>12?}  mean {:>12?}  min {:>12?}  (n={})",
+        s.name,
+        s.median(),
+        s.mean(),
+        s.min(),
+        s.times.len()
+    );
+    s
+}
+
+/// Time a single run of `f`, returning `(result, elapsed)`.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+/// `--quick` flag shared by all bench binaries (also honoured via the
+/// `EVOAPPROX_BENCH_QUICK` env var so a plain `cargo bench` sweep can run
+/// the whole suite at reduced budgets; the full-budget results live in
+/// `bench_results/` and EXPERIMENTS.md).
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("EVOAPPROX_BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Throughput helper: items/second from a duration.
+pub fn per_second(items: u64, d: Duration) -> f64 {
+    items as f64 / d.as_secs_f64().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let s = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.times.len(), 5);
+        assert!(s.min() <= s.median());
+    }
+
+    #[test]
+    fn per_second_math() {
+        let r = per_second(1000, Duration::from_millis(500));
+        assert!((r - 2000.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small in-tree utilities: JSON (the offline vendor set has no serde),
+//! a timing harness for the `cargo bench` targets (no criterion offline),
+//! and table formatting for the experiment reports.
+
+pub mod bench;
+pub mod json;
+pub mod table;
+
+pub use json::Json;

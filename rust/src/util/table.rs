@@ -1,0 +1,174 @@
+//! Plain-text table and ASCII-scatter rendering for the experiment
+//! harnesses (Table I/II rows, Fig. 2/4 series) — keeps bench output
+//! directly comparable to the paper's artifacts.
+
+/// A simple column-aligned text table.
+#[derive(Debug, Default)]
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    /// New table with a header row.
+    pub fn new(header: &[&str]) -> TextTable {
+        TextTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(c);
+                for _ in c.len()..widths[i] {
+                    out.push(' ');
+                }
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &widths, &mut out);
+        }
+        out
+    }
+
+    /// Render as CSV (for plotting outside).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// ASCII scatter plot (x right, y up) for Fig.-2-style outputs.
+pub fn ascii_scatter(
+    series: &[(&str, char, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+    x_label: &str,
+    y_label: &str,
+) -> String {
+    let all: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|(_, _, pts)| pts.iter().copied())
+        .collect();
+    if all.is_empty() {
+        return "(no points)\n".to_string();
+    }
+    let (mut x0, mut x1, mut y0, mut y1) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for &(x, y) in &all {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    let (xs, ys) = ((x1 - x0).max(1e-12), (y1 - y0).max(1e-12));
+    let mut grid = vec![vec![' '; width]; height];
+    for (_, ch, pts) in series {
+        for &(x, y) in pts {
+            let cx = (((x - x0) / xs) * (width - 1) as f64).round() as usize;
+            let cy = (((y - y0) / ys) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = *ch;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{y_label} ^  [{y0:.3} .. {y1:.3}]\n"));
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("{x_label} -> [{x0:.3} .. {x1:.3}]  legend: "));
+    for (name, ch, _) in series {
+        out.push_str(&format!("{ch}={name} "));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TextTable::new(&["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("long-name"));
+        assert_eq!(s.lines().count(), 4);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().next().unwrap(), "name,value");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_checked() {
+        let mut t = TextTable::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn scatter_contains_markers() {
+        let s = ascii_scatter(
+            &[
+                ("evolved", '*', vec![(0.0, 0.0), (1.0, 1.0)]),
+                ("baseline", 'o', vec![(0.5, 0.9)]),
+            ],
+            40,
+            10,
+            "power",
+            "mae",
+        );
+        assert!(s.contains('*'));
+        assert!(s.contains('o'));
+        assert!(s.contains("legend"));
+    }
+
+    #[test]
+    fn scatter_empty_ok() {
+        assert_eq!(ascii_scatter(&[], 10, 5, "x", "y"), "(no points)\n");
+    }
+}

@@ -1,0 +1,147 @@
+//! Integration: coordinator + batcher behaviour over the real PJRT engines
+//! (skips without artifacts), plus engine-independent property tests of the
+//! coordinator data structures.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use evoapproxlib::coordinator::batcher::{BatchPolicy, Batcher};
+use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, KernelKind};
+use evoapproxlib::runtime::{broadcast_lut, exact_lut};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::env::var("EVOAPPROX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = std::path::PathBuf::from(dir);
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: no artifacts");
+        None
+    }
+}
+
+#[test]
+fn unknown_model_is_an_error_not_a_crash() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&dir)).unwrap();
+    let r = coord.warm("resnet9000", KernelKind::Jnp);
+    assert!(r.is_err());
+    // the executor must still serve valid requests afterwards
+    assert!(coord.warm("resnet8", KernelKind::Jnp).is_ok());
+    let m = coord.metrics();
+    assert_eq!(m.errors, 0, "warm errors are not job errors");
+    coord.shutdown();
+}
+
+#[test]
+fn predict_handles_non_multiple_of_batch() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&dir)).unwrap();
+    let testset = coord.manifest().load_testset(&dir).unwrap();
+    let meta = coord.manifest().model("resnet8").unwrap();
+    let n = meta.artifacts.iter().map(|a| a.batch).max().unwrap() + 7; // deliberately ragged
+    let n = n.min(testset.n);
+    let il = testset.image_len;
+    let images = Arc::new(testset.images[..n * il].to_vec());
+    let luts = Arc::new(broadcast_lut(&exact_lut(), meta.n_conv_layers));
+    let preds = coord
+        .predict("resnet8", KernelKind::Jnp, images, luts)
+        .unwrap();
+    assert_eq!(preds.len(), n);
+    assert!(preds.iter().all(|&p| p < 10));
+    coord.shutdown();
+}
+
+#[test]
+fn batcher_preserves_request_order_and_matches_direct_path() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&dir)).unwrap();
+    coord.warm("resnet8", KernelKind::Jnp).unwrap();
+    let testset = coord.manifest().load_testset(&dir).unwrap();
+    let meta = coord.manifest().model("resnet8").unwrap();
+    let il = testset.image_len;
+    let n = 48usize.min(testset.n);
+    let luts = Arc::new(broadcast_lut(&exact_lut(), meta.n_conv_layers));
+
+    // direct path
+    let direct = coord
+        .predict(
+            "resnet8",
+            KernelKind::Jnp,
+            Arc::new(testset.images[..n * il].to_vec()),
+            luts.clone(),
+        )
+        .unwrap();
+
+    // batched path (async submits, same order)
+    let (batcher, guard) = Batcher::spawn(
+        coord.clone(),
+        "resnet8",
+        KernelKind::Jnp,
+        luts,
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_millis(5),
+        },
+    )
+    .unwrap();
+    let pending: Vec<_> = (0..n)
+        .map(|k| {
+            batcher
+                .classify_async(testset.images[k * il..(k + 1) * il].to_vec())
+                .unwrap()
+        })
+        .collect();
+    let batched: Vec<u8> = pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    drop(batcher);
+    let stats = guard.join();
+    assert_eq!(batched, direct, "batching must not change predictions");
+    assert_eq!(stats.requests, n as u64);
+    assert!(stats.batches <= (n as u64).div_ceil(16) + 2);
+    coord.shutdown();
+}
+
+#[test]
+fn batcher_rejects_wrong_image_size() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&dir)).unwrap();
+    let meta = coord.manifest().model("resnet8").unwrap();
+    let luts = Arc::new(broadcast_lut(&exact_lut(), meta.n_conv_layers));
+    let (batcher, _g) = Batcher::spawn(
+        coord.clone(),
+        "resnet8",
+        KernelKind::Jnp,
+        luts,
+        BatchPolicy::default(),
+    )
+    .unwrap();
+    assert!(batcher.classify(vec![0.0; 7]).is_err());
+    coord.shutdown();
+}
+
+#[test]
+fn metrics_accumulate() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&dir)).unwrap();
+    let testset = coord.manifest().load_testset(&dir).unwrap();
+    let meta = coord.manifest().model("resnet8").unwrap();
+    let il = testset.image_len;
+    let luts = Arc::new(broadcast_lut(&exact_lut(), meta.n_conv_layers));
+    let n = 16.min(testset.n);
+    for _ in 0..3 {
+        coord
+            .predict(
+                "resnet8",
+                KernelKind::Jnp,
+                Arc::new(testset.images[..n * il].to_vec()),
+                luts.clone(),
+            )
+            .unwrap();
+    }
+    let m = coord.metrics();
+    assert_eq!(m.jobs, 3);
+    assert_eq!(m.images, 3 * n as u64);
+    assert!(m.batches >= 3);
+    assert!(m.job_latency_mean_us > 0.0);
+    coord.shutdown();
+}

@@ -1,0 +1,140 @@
+//! Integration: the full paper pipeline — CGP evolution → library →
+//! Pareto selection → LUT → accelerator accuracy via the coordinator.
+//! Skips gracefully when `make artifacts` has not run.
+
+use std::sync::Arc;
+
+use evoapproxlib::cgp::metrics::SELECTION_METRICS;
+use evoapproxlib::circuit::baselines::truncated_multiplier;
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::generators::wallace_multiplier;
+use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, KernelKind};
+use evoapproxlib::library::{run_campaign, select_diverse, CampaignConfig, Entry, Library, Origin};
+use evoapproxlib::resilience::{lut_for_entry, per_layer_campaign, MultiplierSummary};
+use evoapproxlib::runtime::broadcast_lut;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::env::var("EVOAPPROX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = std::path::PathBuf::from(dir);
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: no artifacts");
+        None
+    }
+}
+
+/// Evolve → select → LUT → accuracy: an evolved high-accuracy multiplier
+/// must keep the network near golden; the accuracy must degrade
+/// monotonically as we move down the selected Pareto front (allowing noise).
+#[test]
+fn evolved_multipliers_run_through_accelerator() {
+    let Some(dir) = artifacts_dir() else { return };
+    let f = ArithFn::Mul { w: 8 };
+    let model = CostModel::default();
+    let mut lib = Library::new();
+    let mut cfg = CampaignConfig::quick(f);
+    cfg.generations = 500;
+    cfg.targets_per_metric = 2;
+    run_campaign(&mut lib, &cfg, &model, None);
+    let sel = select_diverse(&lib, f, &SELECTION_METRICS, 3);
+    assert!(!sel.is_empty());
+
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&dir)).unwrap();
+    let testset = coord.manifest().load_testset(&dir).unwrap().truncated(64);
+    let n_layers = coord.manifest().model("resnet8").unwrap().n_conv_layers;
+    let images = Arc::new(testset.images.clone());
+
+    // golden
+    let golden = coord
+        .accuracy(
+            "resnet8",
+            KernelKind::Jnp,
+            images.clone(),
+            &testset.labels,
+            Arc::new(broadcast_lut(&evoapproxlib::runtime::exact_lut(), n_layers)),
+        )
+        .unwrap();
+    assert!(golden > 0.5, "golden accuracy implausibly low: {golden}");
+
+    // the mildest evolved multiplier must stay within 15 points of golden
+    let mild = sel
+        .iter()
+        .min_by(|a, b| a.metrics.mae.partial_cmp(&b.metrics.mae).unwrap())
+        .unwrap();
+    let lut = lut_for_entry(mild).unwrap();
+    let acc = coord
+        .accuracy(
+            "resnet8",
+            KernelKind::Jnp,
+            images.clone(),
+            &testset.labels,
+            Arc::new(broadcast_lut(&lut, n_layers)),
+        )
+        .unwrap();
+    assert!(
+        acc >= golden - 0.15,
+        "mild evolved multiplier (MAE {:.2}) dropped accuracy {golden} → {acc}",
+        mild.metrics.mae
+    );
+    coord.shutdown();
+}
+
+/// Fig. 4 invariants: exact multiplier row has zero drops; per-layer power
+/// drop is proportional to the layer's multiplier share.
+#[test]
+fn per_layer_campaign_invariants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let f = ArithFn::Mul { w: 8 };
+    let model = CostModel::default();
+    let exact = Entry::characterise(
+        wallace_multiplier(8),
+        f,
+        &model,
+        Origin::Seed("wallace".into()),
+    );
+    let trunc = Entry::characterise(
+        truncated_multiplier(8, 6),
+        f,
+        &model,
+        Origin::Truncated { keep: 6 },
+    );
+    let mults = vec![
+        MultiplierSummary::from_entry(&exact, &exact.cost).unwrap(),
+        MultiplierSummary::from_entry(&trunc, &exact.cost).unwrap(),
+    ];
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&dir)).unwrap();
+    let testset = coord.manifest().load_testset(&dir).unwrap().truncated(64);
+    let report =
+        per_layer_campaign(&coord, "resnet8", &mults, &testset, KernelKind::Jnp).unwrap();
+
+    let n_layers = coord.manifest().model("resnet8").unwrap().n_conv_layers;
+    assert_eq!(report.points.len(), 2 * n_layers);
+    for p in &report.points {
+        if p.multiplier == mults[0].id {
+            // exact multiplier: no accuracy change, no power change
+            assert_eq!(p.accuracy_drop, 0.0, "layer {}", p.layer);
+            assert!(p.power_drop_pct.abs() < 1e-6);
+        } else {
+            // power drop proportional to the layer share
+            let expect = p.layer_fraction * (100.0 - mults[1].rel_power_pct);
+            assert!(
+                (p.power_drop_pct - expect).abs() < 1e-6,
+                "layer {}: {} vs {}",
+                p.layer,
+                p.power_drop_pct,
+                expect
+            );
+        }
+    }
+    // fractions over all layers sum to 1
+    let frac_sum: f64 = report
+        .points
+        .iter()
+        .filter(|p| p.multiplier == mults[0].id)
+        .map(|p| p.layer_fraction)
+        .sum();
+    assert!((frac_sum - 1.0).abs() < 1e-9);
+    coord.shutdown();
+}

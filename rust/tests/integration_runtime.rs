@@ -1,0 +1,99 @@
+//! Integration: the full AOT bridge — manifest → HLO text → PJRT compile →
+//! execute → accuracy against the Python-measured golden numbers.
+//!
+//! Requires `make artifacts` (or EVOAPPROX_ARTIFACTS pointing at a build);
+//! tests skip gracefully otherwise so `cargo test` works pre-build.
+
+use evoapproxlib::runtime::{broadcast_lut, exact_lut, Manifest, PjrtRuntime, LUT_LEN};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::env::var("EVOAPPROX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = std::path::PathBuf::from(dir);
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: no artifacts at {}", p.display());
+        None
+    }
+}
+
+#[test]
+fn golden_accuracy_matches_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let model = &manifest.models[0];
+    let artifact = model.default_artifact().expect("jnp artifact");
+    let rt = PjrtRuntime::cpu().unwrap();
+    let engine = rt.load_model(&dir, model, artifact).unwrap();
+    let testset = manifest.load_testset(&dir).unwrap();
+    let luts = broadcast_lut(&exact_lut(), model.n_conv_layers);
+    let acc = engine
+        .accuracy(&testset.images, &testset.labels, &luts)
+        .unwrap();
+    // Same graph, same inputs as aot.py's q8 evaluation → must agree
+    // closely (padding of the tail batch is the only difference).
+    assert!(
+        (acc - model.q8_acc).abs() < 0.02,
+        "rust accuracy {acc} vs python golden {}",
+        model.q8_acc
+    );
+}
+
+#[test]
+fn lut_swap_changes_predictions() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let model = &manifest.models[0];
+    let artifact = model.default_artifact().unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let engine = rt.load_model(&dir, model, artifact).unwrap();
+    let testset = manifest.load_testset(&dir).unwrap();
+    let n = engine.batch.min(testset.n);
+    let images = &testset.images[..n * testset.image_len];
+    let mut padded = images.to_vec();
+    padded.resize(engine.batch * testset.image_len, 0.0);
+
+    let exact = broadcast_lut(&exact_lut(), model.n_conv_layers);
+    let logits_exact = engine.run(&padded, &exact).unwrap();
+
+    // A destroyed LUT (everything = 0) must change the outputs.
+    let zero = vec![0i32; model.n_conv_layers * LUT_LEN];
+    let logits_zero = engine.run(&padded, &zero).unwrap();
+    assert_ne!(logits_exact, logits_zero);
+
+    // Determinism: same inputs → identical logits.
+    let logits_again = engine.run(&padded, &exact).unwrap();
+    assert_eq!(logits_exact, logits_again);
+}
+
+#[test]
+fn pallas_artifact_agrees_with_jnp() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let model = &manifest.models[0];
+    let Some(pallas) = model
+        .artifacts
+        .iter()
+        .find(|a| a.kernel == "pallas")
+    else {
+        eprintln!("skipping: no pallas artifact");
+        return;
+    };
+    let jnp = model.artifact(pallas.batch, "jnp").expect("matching jnp");
+    let rt = PjrtRuntime::cpu().unwrap();
+    let e_pal = rt.load_model(&dir, model, pallas).unwrap();
+    let e_jnp = rt.load_model(&dir, model, jnp).unwrap();
+    let testset = manifest.load_testset(&dir).unwrap();
+    let il = testset.image_len;
+    let mut images = testset.images[..testset.n.min(e_pal.batch) * il].to_vec();
+    images.resize(e_pal.batch * il, 0.0);
+    let luts = broadcast_lut(&exact_lut(), model.n_conv_layers);
+    let a = e_pal.run(&images, &luts).unwrap();
+    let b = e_jnp.run(&images, &luts).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert!(
+            (x - y).abs() < 1e-3,
+            "pallas vs jnp logits diverge: {x} vs {y}"
+        );
+    }
+}
