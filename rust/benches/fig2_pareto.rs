@@ -32,8 +32,12 @@ fn main() {
     cfg.generations = if quick { 2_000 } else { 30_000 };
     cfg.targets_per_metric = if quick { 2 } else { 5 };
     cfg.metrics = vec![Metric::Mae, Metric::Wce, Metric::Er, Metric::Mre];
+    cfg.jobs = evoapproxlib::cgp::default_workers();
     let (added, dt) = time_once(|| run_campaign(&mut lib, &cfg, &model, None));
-    println!("bench evolve-campaign: {added} entries in {dt:?}");
+    println!(
+        "bench evolve-campaign: {added} entries in {dt:?} ({} workers)",
+        cfg.jobs
+    );
 
     // baseline ("previous library") series
     let mut baselines: Vec<Entry> = Vec::new();

@@ -35,6 +35,7 @@ fn main() {
     let mut lib = Library::new();
     let mut cfg = CampaignConfig::quick(f);
     cfg.generations = if quick { 1_500 } else { 15_000 };
+    cfg.jobs = evoapproxlib::cgp::default_workers();
     let (_, dt) = time_once(|| run_campaign(&mut lib, &cfg, &model, None));
     println!("bench multiplier-evolution: {} entries in {dt:?}", lib.len());
     let exact = Entry::characterise(

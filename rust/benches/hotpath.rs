@@ -13,7 +13,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use evoapproxlib::cgp::{Chromosome, Evaluator, Metric};
+use evoapproxlib::cgp::{Chromosome, EvalContext, EvalScratch, Evaluator, Metric};
 use evoapproxlib::circuit::cost::CostModel;
 use evoapproxlib::circuit::generators::wallace_multiplier;
 use evoapproxlib::circuit::simulator::eval_exhaustive_u64;
@@ -53,6 +53,46 @@ fn main() {
     bench("L3-cgp/cost-eval (weighted area)", 2, samples, || {
         std::hint::black_box(evaluator.cost(&chrom, &model));
     });
+
+    // L3-cgp-par: one shared EvalContext, K workers with private scratch —
+    // the scaling shape of the campaign engine (ideal: linear in K until
+    // the core count).
+    let ctx = EvalContext::exhaustive(f);
+    let evals_per_worker = if quick { 20 } else { 100 };
+    let mut baseline = None;
+    for workers in [1usize, 2, 4] {
+        let name = format!("L3-cgp-par/shared-ctx x{workers} ({evals_per_worker} evals/worker)");
+        let s = bench(&name, 1, samples, || {
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| {
+                        let mut scratch = EvalScratch::new();
+                        for _ in 0..evals_per_worker {
+                            std::hint::black_box(ctx.error_bounded(
+                                &mut scratch,
+                                &chrom,
+                                Metric::Mae,
+                                f64::INFINITY,
+                            ));
+                        }
+                    });
+                }
+            });
+        });
+        let throughput = (workers * evals_per_worker) as f64 / s.median().as_secs_f64();
+        match baseline {
+            None => {
+                baseline = Some(throughput);
+                println!("  => {throughput:.0} evals/s");
+            }
+            Some(base) => {
+                println!(
+                    "  => {throughput:.0} evals/s ({:.2}x vs 1 worker)",
+                    throughput / base
+                );
+            }
+        }
+    }
 
     // L3-lut
     bench("L3-lut/netlist→65536-LUT", 1, samples, || {

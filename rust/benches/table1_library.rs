@@ -7,7 +7,13 @@
 //! at 8–128 b, multipliers at 8–32 b, counts dominated by the 8/16-bit
 //! multiplier families exactly as in the paper.
 //!
-//! `cargo bench --bench table1_library [-- --quick]`
+//! Campaigns fan out across the parallel job pool; `--jobs N` (or
+//! `EVOAPPROX_JOBS`) sets the worker count, defaulting to all cores. The
+//! final section calibrates the engine: the same campaign at 1 worker vs N
+//! workers, reporting the wall-clock speedup and checking the two library
+//! JSONs are byte-identical (the pool's determinism contract).
+//!
+//! `cargo bench --bench table1_library [-- --quick] [-- --jobs N]`
 
 use evoapproxlib::cgp::metrics::Metric;
 use evoapproxlib::circuit::cost::CostModel;
@@ -16,10 +22,32 @@ use evoapproxlib::library::{run_campaign, CampaignConfig, Library};
 use evoapproxlib::util::bench::{quick_mode, time_once};
 use evoapproxlib::util::table::TextTable;
 
+fn jobs_arg() -> usize {
+    let argv: Vec<String> = std::env::args().collect();
+    if let Some(i) = argv.iter().position(|a| a == "--jobs") {
+        // a bad value must error like the binary's CLI, not silently
+        // fall back to a worker count the user never chose
+        let v = argv
+            .get(i + 1)
+            .unwrap_or_else(|| panic!("--jobs requires a value"));
+        return v
+            .parse()
+            .unwrap_or_else(|_| panic!("invalid --jobs value `{v}`"));
+    }
+    if let Ok(v) = std::env::var("EVOAPPROX_JOBS") {
+        return v
+            .parse()
+            .unwrap_or_else(|_| panic!("invalid EVOAPPROX_JOBS value `{v}`"));
+    }
+    evoapproxlib::cgp::default_workers()
+}
+
 fn main() {
     let quick = quick_mode();
+    let jobs = jobs_arg();
     let model = CostModel::default();
     let mut lib = Library::new();
+    println!("job pool: {jobs} workers");
 
     // (function, generations, targets/metric) — budgets shaped like the
     // paper's effort distribution: multipliers get the most, wide adders
@@ -51,6 +79,7 @@ fn main() {
             cfg.targets_per_metric = *targets;
             cfg.metrics = vec![Metric::Mae, Metric::Wce, Metric::Er];
             cfg.per_stratum = 6;
+            cfg.jobs = jobs;
             let (added, dt) = time_once(|| run_campaign(&mut lib, &cfg, &model, None));
             println!(
                 "bench campaign {:<8} gens {:>5}: +{added:>4} entries in {dt:?}",
@@ -106,4 +135,35 @@ fn main() {
     }
     let _ = lib.save("bench_table1_library.json");
     println!("library saved to bench_table1_library.json");
+
+    // ---- parallel-engine calibration: jobs=1 vs jobs=N -------------------
+    // Same campaign twice; the outputs must be byte-identical and the
+    // N-worker run must show the wall-clock win the engine exists for.
+    let n_jobs = jobs.max(2);
+    let calibration_cfg = |jobs: usize| {
+        let mut c = CampaignConfig::quick(ArithFn::Mul { w: 8 });
+        c.generations = if quick { 600 } else { 4_000 };
+        c.targets_per_metric = 2;
+        c.per_stratum = 6;
+        c.jobs = jobs;
+        c
+    };
+    let mut lib_serial = Library::new();
+    let (_, dt_serial) =
+        time_once(|| run_campaign(&mut lib_serial, &calibration_cfg(1), &model, None));
+    let mut lib_par = Library::new();
+    let (_, dt_par) =
+        time_once(|| run_campaign(&mut lib_par, &calibration_cfg(n_jobs), &model, None));
+    let json_serial = lib_serial.to_json().to_string();
+    let json_par = lib_par.to_json().to_string();
+    let speedup = dt_serial.as_secs_f64() / dt_par.as_secs_f64().max(1e-9);
+    println!(
+        "\nbench campaign-jobs: 1 worker {dt_serial:?} vs {n_jobs} workers {dt_par:?} \
+         — speedup {speedup:.2}x, outputs {}",
+        if json_serial == json_par {
+            "byte-identical"
+        } else {
+            "DIVERGENT (determinism bug!)"
+        }
+    );
 }

@@ -39,6 +39,7 @@ fn main() {
     let mut cfg = CampaignConfig::quick(f);
     cfg.generations = if quick { 1_500 } else { 20_000 };
     cfg.targets_per_metric = if quick { 2 } else { 4 };
+    cfg.jobs = evoapproxlib::cgp::default_workers();
     let (_, dt) = time_once(|| run_campaign(&mut lib, &cfg, &model, None));
     println!("bench multiplier-evolution: {} entries in {dt:?}", lib.len());
 

@@ -1,0 +1,238 @@
+//! The parallel campaign engine: a deterministic std-thread job pool for
+//! embarrassingly parallel CGP work (DESIGN.md §6).
+//!
+//! The paper's library is the product of thousands of *independent* CGP
+//! runs (one per width × metric × error-budget point). Three properties
+//! make that sweep trivially parallel yet bit-reproducible:
+//!
+//! * every job carries its **own RNG seed**, derived from the root seed and
+//!   the job's grid position — never from execution order;
+//! * one immutable [`EvalContext`] per target function is shared by
+//!   reference across all workers (the exact-output table is built once),
+//!   while each worker owns a private [`EvalScratch`];
+//! * results are delivered to the caller **in submission order** regardless
+//!   of completion order, so merging into a library is byte-identical for
+//!   any worker count (`--jobs 1` ≡ `--jobs 8`).
+//!
+//! [`map_parallel`] is the generic ordered map (also used by the island
+//! model's epoch barriers); [`run_evolve_jobs`] specialises it to
+//! [`EvolveConfig`] jobs with streamed, in-order completion callbacks.
+//! Both are thin wrappers over one internal pool.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Mutex;
+
+use crate::circuit::cost::CostModel;
+use crate::circuit::netlist::Netlist;
+
+use super::evaluator::{EvalContext, EvalScratch};
+use super::evolve::{evolve_with, EvolveConfig, EvolveReport};
+
+/// Sensible worker-count default: all available cores (1 if unknown).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// The pool core: run `work` over `items` on up to `workers` threads (each
+/// owning one [`EvalScratch`]) and stream results to `on_result` on the
+/// calling thread, **strictly in item order** (item 0 first) regardless of
+/// completion order. `workers <= 1` (or a single item) runs inline with no
+/// spawn overhead — same results by construction.
+fn pool_run<I, T, W, D>(items: Vec<I>, workers: usize, work: W, mut on_result: D)
+where
+    I: Send,
+    T: Send,
+    W: Fn(usize, I, &mut EvalScratch) -> T + Sync,
+    D: FnMut(usize, T),
+{
+    let n = items.len();
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 {
+        let mut scratch = EvalScratch::new();
+        for (i, item) in items.into_iter().enumerate() {
+            let result = work(i, item, &mut scratch);
+            on_result(i, result);
+        }
+        return;
+    }
+    let slots: Vec<Mutex<Option<I>>> = items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let cursor = AtomicUsize::new(0);
+    let (tx, rx) = channel::<(usize, T)>();
+    std::thread::scope(|s| {
+        let slots = &slots;
+        let cursor = &cursor;
+        let work = &work;
+        for _ in 0..workers {
+            let tx = tx.clone();
+            s.spawn(move || {
+                let mut scratch = EvalScratch::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let item = slots[i]
+                        .lock()
+                        .expect("job slot poisoned")
+                        .take()
+                        .expect("job handed out twice");
+                    let result = work(i, item, &mut scratch);
+                    if tx.send((i, result)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+        // Re-order completions: deliver strictly by item index.
+        let mut pending: BTreeMap<usize, T> = BTreeMap::new();
+        let mut next = 0usize;
+        while let Ok((i, result)) = rx.recv() {
+            pending.insert(i, result);
+            while let Some(result) = pending.remove(&next) {
+                on_result(next, result);
+                next += 1;
+            }
+        }
+        while let Some(result) = pending.remove(&next) {
+            on_result(next, result);
+            next += 1;
+        }
+    });
+}
+
+/// Map `items` through `work` on up to `workers` threads, each owning one
+/// [`EvalScratch`]; results return **in input order**.
+pub fn map_parallel<I, T, F>(items: Vec<I>, workers: usize, work: F) -> Vec<T>
+where
+    I: Send,
+    T: Send,
+    F: Fn(usize, I, &mut EvalScratch) -> T + Sync,
+{
+    let mut out: Vec<T> = Vec::with_capacity(items.len());
+    pool_run(items, workers, work, |i, result| {
+        debug_assert_eq!(i, out.len(), "pool must deliver in order");
+        out.push(result);
+    });
+    out
+}
+
+/// One evolution job of a campaign grid. Its position in the submitted
+/// `Vec` is its identity: seeds and metadata are keyed by that index, and
+/// the merge replays results in that order.
+#[derive(Debug, Clone)]
+pub struct EvolveJob {
+    /// Seed netlist the run starts from.
+    pub seed: Netlist,
+    /// Full run configuration (including the per-job RNG seed).
+    pub cfg: EvolveConfig,
+}
+
+/// Run `jobs` across `workers` threads against a shared context.
+///
+/// `post` runs **on the worker** right after its job finishes (use it for
+/// expensive post-processing such as harvest characterisation) and
+/// receives the job's index; `on_done` runs on the calling thread and is
+/// invoked exactly once per job **in submission order** (job 0 first),
+/// independent of completion order — the property that makes campaign
+/// merges deterministic under any worker count.
+pub fn run_evolve_jobs<T, P, D>(
+    ctx: &EvalContext,
+    model: &CostModel,
+    jobs: Vec<EvolveJob>,
+    workers: usize,
+    post: P,
+    on_done: D,
+) where
+    T: Send,
+    P: Fn(usize, &EvolveJob, EvolveReport) -> T + Sync,
+    D: FnMut(usize, T),
+{
+    let post = &post;
+    pool_run(
+        jobs,
+        workers,
+        move |i, job: EvolveJob, scratch| {
+            let report = evolve_with(&job.seed, ctx.f, &job.cfg, model, ctx, scratch);
+            post(i, &job, report)
+        },
+        on_done,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgp::metrics::Metric;
+    use crate::circuit::generators::wallace_multiplier;
+    use crate::circuit::verify::ArithFn;
+
+    #[test]
+    fn map_parallel_preserves_order() {
+        for workers in [1, 3, 8] {
+            let items: Vec<usize> = (0..25).collect();
+            let out = map_parallel(items, workers, |i, item, _scratch| {
+                assert_eq!(i, item);
+                item * 2
+            });
+            assert_eq!(out, (0..25).map(|x| x * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn map_parallel_empty_and_single() {
+        let out: Vec<u32> = map_parallel(Vec::<u32>::new(), 4, |_, x, _| x);
+        assert!(out.is_empty());
+        let out = map_parallel(vec![7u32], 4, |_, x, _| x + 1);
+        assert_eq!(out, vec![8]);
+    }
+
+    fn grid_jobs(n: usize, gens: u64) -> Vec<EvolveJob> {
+        let seed = wallace_multiplier(4);
+        (0..n)
+            .map(|k| EvolveJob {
+                seed: seed.clone(),
+                cfg: EvolveConfig {
+                    metric: Metric::Wce,
+                    e_max: 6.0,
+                    generations: gens,
+                    lambda: 2,
+                    h: 3,
+                    seed: 1000 + k as u64,
+                    slack: 4,
+                    ..Default::default()
+                },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn run_evolve_jobs_in_order_and_worker_invariant() {
+        let f = ArithFn::Mul { w: 4 };
+        let model = CostModel::default();
+        let ctx = EvalContext::exhaustive(f);
+        let collect = |workers: usize| {
+            let mut done: Vec<(usize, u64, f64, u64)> = Vec::new();
+            run_evolve_jobs(
+                &ctx,
+                &model,
+                grid_jobs(6, 300),
+                workers,
+                |i, job, report| (i, job.cfg.seed, report.best_cost, report.evaluations),
+                |i, t| {
+                    assert_eq!(i, t.0, "callbacks must arrive in submission order");
+                    done.push(t);
+                },
+            );
+            done
+        };
+        let serial = collect(1);
+        let parallel = collect(4);
+        assert_eq!(serial.len(), 6);
+        assert_eq!(serial, parallel, "jobs=1 and jobs=4 must agree exactly");
+    }
+}

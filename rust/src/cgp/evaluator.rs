@@ -2,11 +2,23 @@
 //!
 //! Evaluates a chromosome's *active* nodes only, bit-parallel over 64-lane
 //! words, against a precomputed exact-output table, with optional early
-//! abort once the optimised metric provably exceeds its bound. All scratch
-//! buffers live in the [`Evaluator`] and are reused across the millions of
-//! candidate evaluations of a run (§Perf L3).
+//! abort once the optimised metric provably exceeds its bound.
+//!
+//! The state is split for the parallel campaign engine (DESIGN.md §6):
+//!
+//! * [`EvalContext`] — the immutable, `Sync`-shareable part: target
+//!   function, sampled vectors and the exact-output table. Built **once**
+//!   per target function and shared by reference across every worker of a
+//!   campaign, so the (potentially large) exact table is never duplicated.
+//! * [`EvalScratch`] — the per-worker mutable part: sig/active/stack/order
+//!   buffers reused across the millions of candidate evaluations of a run
+//!   (§Perf L3). Each worker thread owns exactly one.
+//!
+//! [`Evaluator`] bundles one context with one scratch for the serial
+//! call sites (CLI one-shot runs, tests, benches).
 
 use crate::circuit::cost::CostModel;
+use crate::circuit::gate::GateKind;
 use crate::circuit::simulator::exhaustive_input_word;
 use crate::circuit::verify::{stratified_vectors, ArithFn};
 use crate::data::rng::Xoshiro256;
@@ -14,89 +26,85 @@ use crate::data::rng::Xoshiro256;
 use super::chromosome::Chromosome;
 use super::metrics::{ErrorMetrics, Metric, SingleMetricAcc};
 
-/// Reusable evaluation context for one arithmetic target function.
-pub struct Evaluator {
+/// Immutable evaluation context for one arithmetic target function.
+///
+/// Holds no per-candidate state, so a single instance can drive any number
+/// of concurrent workers, each supplying its own [`EvalScratch`].
+pub struct EvalContext {
     /// Target function.
     pub f: ArithFn,
     /// Sampled input vectors; `None` ⇒ exhaustive enumeration.
     vectors: Option<Vec<u64>>,
     /// Exact output per vector (indexed like the evaluation order).
     exact: Vec<u64>,
-    // scratch
+}
+
+/// Per-worker scratch buffers for candidate evaluation.
+///
+/// All buffers grow on demand in [`EvalContext::prepare`] and are reused
+/// across evaluations, keeping allocation out of the hot loop (§Perf L3).
+#[derive(Default)]
+pub struct EvalScratch {
     sig: Vec<u64>,
     active: Vec<bool>,
     stack: Vec<u32>,
-    /// Active nodes pre-decoded to `(kind, a, b)` once per candidate —
+    /// Active nodes pre-decoded to `(kind, a, b, dst)` once per candidate —
     /// keeps gene decoding out of the per-word inner loop (§Perf L3: this
     /// took one candidate evaluation from 1.37 ms to ~0.9 ms).
-    order: Vec<(crate::circuit::gate::GateKind, u32, u32, u32)>,
+    order: Vec<(GateKind, u32, u32, u32)>,
     /// Signal ids of the outputs (decoded once per candidate).
     out_sigs: Vec<u32>,
     in_words: Vec<u64>,
     out_words: Vec<u64>,
 }
 
-impl Evaluator {
-    /// Exhaustive evaluator (feasible iff `f.exhaustive_feasible()`).
-    pub fn exhaustive(f: ArithFn) -> Evaluator {
+impl EvalScratch {
+    /// Fresh (empty) scratch; buffers are sized on first use.
+    pub fn new() -> EvalScratch {
+        EvalScratch::default()
+    }
+}
+
+impl EvalContext {
+    /// Exhaustive context (feasible iff `f.exhaustive_feasible()`).
+    pub fn exhaustive(f: ArithFn) -> EvalContext {
         assert!(f.exhaustive_feasible(), "use sampled() for wide functions");
         let n_vec = 1u64 << f.n_inputs();
         let exact = (0..n_vec).map(|i| f.exact(i)).collect();
-        Evaluator {
+        EvalContext {
             f,
             vectors: None,
             exact,
-            sig: Vec::new(),
-            active: Vec::new(),
-            stack: Vec::new(),
-            order: Vec::new(),
-            out_sigs: Vec::new(),
-            in_words: vec![0; f.n_inputs() as usize],
-            out_words: vec![0; f.n_outputs() as usize],
         }
     }
 
     /// Uniform random subsample of the full input space — the preferred
-    /// *search* evaluator for exhaustive-feasible functions: unbiased for
+    /// *search* context for exhaustive-feasible functions: unbiased for
     /// the mean metrics (MAE/MSE/ER), unlike the stratified sample which
     /// deliberately over-weights small operands (good for MRE/WCRE tails,
     /// wrong as an MAE surrogate). §Perf L3.
-    pub fn uniform_subsample(f: ArithFn, n: usize, seed: u64) -> Evaluator {
+    pub fn uniform_subsample(f: ArithFn, n: usize, seed: u64) -> EvalContext {
         assert!(f.n_inputs() <= 63);
         let space = 1u64 << f.n_inputs();
         let mut rng = crate::data::rng::SplitMix64::new(seed ^ 0x5AB5_CAFE);
         let vectors: Vec<u64> = (0..n).map(|_| rng.next_below(space)).collect();
         let exact = vectors.iter().map(|&v| f.exact(v)).collect();
-        Evaluator {
+        EvalContext {
             f,
             vectors: Some(vectors),
             exact,
-            sig: Vec::new(),
-            active: Vec::new(),
-            stack: Vec::new(),
-            order: Vec::new(),
-            out_sigs: Vec::new(),
-            in_words: vec![0; f.n_inputs() as usize],
-            out_words: vec![0; f.n_outputs() as usize],
         }
     }
 
-    /// Sampled evaluator over the deterministic stratified sample
+    /// Sampled context over the deterministic stratified sample
     /// (used beyond the exhaustive-feasible widths; DESIGN.md §4).
-    pub fn sampled(f: ArithFn, per_stratum: usize, seed: u64) -> Evaluator {
+    pub fn sampled(f: ArithFn, per_stratum: usize, seed: u64) -> EvalContext {
         let vectors = stratified_vectors(f, per_stratum, seed);
         let exact = vectors.iter().map(|&v| f.exact(v)).collect();
-        Evaluator {
+        EvalContext {
             f,
             vectors: Some(vectors),
             exact,
-            sig: Vec::new(),
-            active: Vec::new(),
-            stack: Vec::new(),
-            order: Vec::new(),
-            out_sigs: Vec::new(),
-            in_words: vec![0; f.n_inputs() as usize],
-            out_words: vec![0; f.n_outputs() as usize],
         }
     }
 
@@ -105,72 +113,81 @@ impl Evaluator {
         self.exact.len() as u64
     }
 
-    /// Whether this evaluator enumerates exhaustively.
+    /// Whether this context enumerates exhaustively.
     pub fn is_exhaustive(&self) -> bool {
         self.vectors.is_none()
     }
 
     /// Prepare the active-node order for `c` (grid order is topological),
     /// pre-decoding genes so the per-word loop touches no chromosome state.
-    fn prepare(&mut self, c: &Chromosome) {
-        c.active_nodes(&mut self.active, &mut self.stack);
+    fn prepare(&self, s: &mut EvalScratch, c: &Chromosome) {
+        c.active_nodes(&mut s.active, &mut s.stack);
         let ni = c.params.n_inputs;
-        self.order.clear();
-        self.sig.clear();
-        self.sig
+        s.order.clear();
+        s.sig.clear();
+        s.sig
             .resize((c.params.n_inputs + c.params.n_nodes()) as usize, 0);
         // Pre-map each active node's operands to signal indices; the sig
         // buffer index of node j is ni + j.
-        for (j, &a) in self.active.iter().enumerate() {
+        for (j, &a) in s.active.iter().enumerate() {
             if a {
                 let (kind, na, nb) = c.node(j as u32);
-                self.order.push((kind, na, nb, ni + j as u32));
+                s.order.push((kind, na, nb, ni + j as u32));
             }
         }
-        self.out_sigs.clear();
+        s.out_sigs.clear();
         for o in 0..c.params.n_outputs {
-            self.out_sigs.push(c.output(o));
+            s.out_sigs.push(c.output(o));
         }
+        s.in_words.clear();
+        s.in_words.resize(ni as usize, 0);
+        s.out_words.clear();
+        s.out_words.resize(c.params.n_outputs as usize, 0);
     }
 
     /// Evaluate one word of 64 vectors starting at vector index `base`.
     #[inline]
-    fn eval_word(&mut self, c: &Chromosome, base: u64, lanes: u32) {
-        let ni = c.params.n_inputs;
+    fn eval_word(&self, s: &mut EvalScratch, ni: u32, base: u64, lanes: u32) {
         match &self.vectors {
             None => {
                 let w = base / 64;
                 for i in 0..ni {
-                    self.in_words[i as usize] = exhaustive_input_word(i, w);
+                    s.in_words[i as usize] = exhaustive_input_word(i, w);
                 }
             }
             Some(vs) => {
                 for i in 0..ni as usize {
-                    self.in_words[i] = 0;
+                    s.in_words[i] = 0;
                 }
                 for lane in 0..lanes as usize {
                     let v = vs[base as usize + lane];
                     for i in 0..ni as usize {
-                        self.in_words[i] |= ((v >> i) & 1) << lane;
+                        s.in_words[i] |= ((v >> i) & 1) << lane;
                     }
                 }
             }
         }
-        self.sig[..ni as usize].copy_from_slice(&self.in_words);
-        for &(kind, a, b, dst) in &self.order {
-            let va = self.sig[a as usize];
-            let vb = self.sig[b as usize];
-            self.sig[dst as usize] = kind.eval_word(va, vb);
+        s.sig[..ni as usize].copy_from_slice(&s.in_words);
+        for &(kind, a, b, dst) in &s.order {
+            let va = s.sig[a as usize];
+            let vb = s.sig[b as usize];
+            s.sig[dst as usize] = kind.eval_word(va, vb);
         }
-        for (o, &sig) in self.out_sigs.iter().enumerate() {
-            self.out_words[o] = self.sig[sig as usize];
+        for (o, &sig) in s.out_sigs.iter().enumerate() {
+            s.out_words[o] = s.sig[sig as usize];
         }
     }
 
     /// Value of the optimised `metric`, aborting early (returning
     /// `f64::INFINITY`) once it provably exceeds `bound`.
-    pub fn error_bounded(&mut self, c: &Chromosome, metric: Metric, bound: f64) -> f64 {
-        self.prepare(c);
+    pub fn error_bounded(
+        &self,
+        s: &mut EvalScratch,
+        c: &Chromosome,
+        metric: Metric,
+        bound: f64,
+    ) -> f64 {
+        self.prepare(s, c);
         let total = self.n_vectors();
         let mut acc = SingleMetricAcc::new(metric);
         // bound in accumulator space: mean metrics compare the running SUM
@@ -179,15 +196,16 @@ impl Evaluator {
             Metric::Wce | Metric::Wcre => bound,
             _ => bound * total as f64,
         };
+        let ni = c.params.n_inputs;
         let n_out = c.params.n_outputs;
         let mut base = 0u64;
         while base < total {
             let lanes = ((total - base).min(64)) as u32;
-            self.eval_word(c, base, lanes);
+            self.eval_word(s, ni, base, lanes);
             for lane in 0..lanes as u64 {
                 let mut val = 0u64;
                 for j in 0..n_out as usize {
-                    val |= ((self.out_words[j] >> lane) & 1) << j;
+                    val |= ((s.out_words[j] >> lane) & 1) << j;
                 }
                 let ok = acc.push(val, self.exact[(base + lane) as usize], bound_acc);
                 if !ok {
@@ -200,19 +218,20 @@ impl Evaluator {
     }
 
     /// All six metrics of the candidate (library characterisation path).
-    pub fn full_metrics(&mut self, c: &Chromosome) -> ErrorMetrics {
-        self.prepare(c);
+    pub fn full_metrics(&self, s: &mut EvalScratch, c: &Chromosome) -> ErrorMetrics {
+        self.prepare(s, c);
         let total = self.n_vectors();
+        let ni = c.params.n_inputs;
         let n_out = c.params.n_outputs;
         let mut pairs: Vec<(u64, u64)> = Vec::with_capacity(total as usize);
         let mut base = 0u64;
         while base < total {
             let lanes = ((total - base).min(64)) as u32;
-            self.eval_word(c, base, lanes);
+            self.eval_word(s, ni, base, lanes);
             for lane in 0..lanes as u64 {
                 let mut val = 0u64;
                 for j in 0..n_out as usize {
-                    val |= ((self.out_words[j] >> lane) & 1) << j;
+                    val |= ((s.out_words[j] >> lane) & 1) << j;
                 }
                 pairs.push((val, self.exact[(base + lane) as usize]));
             }
@@ -222,16 +241,89 @@ impl Evaluator {
     }
 
     /// Cost term of the paper's fitness: summed cell area of active gates.
-    pub fn cost(&mut self, c: &Chromosome, model: &CostModel) -> f64 {
-        c.active_nodes(&mut self.active, &mut self.stack);
+    pub fn cost(&self, s: &mut EvalScratch, c: &Chromosome, model: &CostModel) -> f64 {
+        c.active_nodes(&mut s.active, &mut s.stack);
         let mut area = 0.0;
-        for (j, &a) in self.active.iter().enumerate() {
+        for (j, &a) in s.active.iter().enumerate() {
             if a {
                 let (kind, _, _) = c.node(j as u32);
                 area += model.cell(kind).area_um2;
             }
         }
         area
+    }
+}
+
+/// One context paired with one scratch — the serial evaluator used by
+/// one-shot runs, tests and benches. The parallel engine shares an
+/// [`EvalContext`] directly instead.
+pub struct Evaluator {
+    ctx: EvalContext,
+    scratch: EvalScratch,
+}
+
+impl Evaluator {
+    /// Wrap an existing context.
+    pub fn from_ctx(ctx: EvalContext) -> Evaluator {
+        Evaluator {
+            ctx,
+            scratch: EvalScratch::new(),
+        }
+    }
+
+    /// Target function under evaluation.
+    pub fn f(&self) -> ArithFn {
+        self.ctx.f
+    }
+
+    /// Exhaustive evaluator (feasible iff `f.exhaustive_feasible()`).
+    pub fn exhaustive(f: ArithFn) -> Evaluator {
+        Evaluator::from_ctx(EvalContext::exhaustive(f))
+    }
+
+    /// Uniform-subsample evaluator (see [`EvalContext::uniform_subsample`]).
+    pub fn uniform_subsample(f: ArithFn, n: usize, seed: u64) -> Evaluator {
+        Evaluator::from_ctx(EvalContext::uniform_subsample(f, n, seed))
+    }
+
+    /// Stratified-sample evaluator (see [`EvalContext::sampled`]).
+    pub fn sampled(f: ArithFn, per_stratum: usize, seed: u64) -> Evaluator {
+        Evaluator::from_ctx(EvalContext::sampled(f, per_stratum, seed))
+    }
+
+    /// The shared context.
+    pub fn ctx(&self) -> &EvalContext {
+        &self.ctx
+    }
+
+    /// Borrow the context and scratch separately (for `evolve_with`).
+    pub fn parts(&mut self) -> (&EvalContext, &mut EvalScratch) {
+        (&self.ctx, &mut self.scratch)
+    }
+
+    /// Number of vectors per evaluation.
+    pub fn n_vectors(&self) -> u64 {
+        self.ctx.n_vectors()
+    }
+
+    /// Whether this evaluator enumerates exhaustively.
+    pub fn is_exhaustive(&self) -> bool {
+        self.ctx.is_exhaustive()
+    }
+
+    /// See [`EvalContext::error_bounded`].
+    pub fn error_bounded(&mut self, c: &Chromosome, metric: Metric, bound: f64) -> f64 {
+        self.ctx.error_bounded(&mut self.scratch, c, metric, bound)
+    }
+
+    /// See [`EvalContext::full_metrics`].
+    pub fn full_metrics(&mut self, c: &Chromosome) -> ErrorMetrics {
+        self.ctx.full_metrics(&mut self.scratch, c)
+    }
+
+    /// See [`EvalContext::cost`].
+    pub fn cost(&mut self, c: &Chromosome, model: &CostModel) -> f64 {
+        self.ctx.cost(&mut self.scratch, c, model)
     }
 }
 
@@ -315,5 +407,54 @@ mod tests {
         let mut ev = Evaluator::exhaustive(ArithFn::Mul { w: 4 });
         let cost = ev.cost(&c, &model);
         assert!((cost - model.weighted_area(&nl)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_context_is_thread_safe_and_consistent() {
+        // One context, N workers with private scratch: every worker must
+        // reproduce the serial result exactly.
+        let f = ArithFn::Mul { w: 6 };
+        let ctx = EvalContext::exhaustive(f);
+        let c = Chromosome::from_netlist(&bam_multiplier(6, 1, 4), 0);
+        let serial = {
+            let mut s = EvalScratch::new();
+            (
+                ctx.error_bounded(&mut s, &c, Metric::Mae, f64::INFINITY),
+                ctx.full_metrics(&mut s, &c),
+            )
+        };
+        let results: Vec<(f64, ErrorMetrics)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut s = EvalScratch::new();
+                        (
+                            ctx.error_bounded(&mut s, &c, Metric::Mae, f64::INFINITY),
+                            ctx.full_metrics(&mut s, &c),
+                        )
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (err, m) in results {
+            assert_eq!(err, serial.0);
+            assert_eq!(m, serial.1);
+        }
+    }
+
+    #[test]
+    fn scratch_adapts_across_functions() {
+        // One scratch reused against contexts of different widths must not
+        // carry stale buffer sizes.
+        let mut s = EvalScratch::new();
+        let ctx8 = EvalContext::exhaustive(ArithFn::Mul { w: 8 });
+        let c8 = Chromosome::from_netlist(&wallace_multiplier(8), 0);
+        assert_eq!(ctx8.error_bounded(&mut s, &c8, Metric::Wce, f64::INFINITY), 0.0);
+        let ctx4 = EvalContext::exhaustive(ArithFn::Mul { w: 4 });
+        let c4 = Chromosome::from_netlist(&wallace_multiplier(4), 0);
+        assert_eq!(ctx4.error_bounded(&mut s, &c4, Metric::Wce, f64::INFINITY), 0.0);
+        let m = ctx4.full_metrics(&mut s, &c4);
+        assert_eq!(m.n_vectors, 256);
     }
 }

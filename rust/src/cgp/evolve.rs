@@ -10,7 +10,14 @@
 //! archive members and keeps the non-dominated set over
 //! (error, area, delay), per §II-C's description of multi-objective CGP.
 //!
-//! Both modes *harvest*: every evaluated candidate whose (error, cost) pair
+//! Island mode ([`evolve_islands`]): M independent demes run the same
+//! (1+λ) search from decorrelated seeds and periodically migrate their best
+//! candidate around a ring — the escape hatch for wide (16/32-bit) operands
+//! where a single run stalls in a local optimum. Demes synchronise at
+//! migration barriers, so results are bit-identical regardless of how many
+//! worker threads execute the epochs (DESIGN.md §6).
+//!
+//! All modes *harvest*: every evaluated candidate whose (error, cost) pair
 //! is non-dominated so far is recorded — this is how a single run
 //! contributes many library entries (the paper's library counts thousands of
 //! circuits from its campaign of runs).
@@ -20,8 +27,9 @@ use crate::circuit::netlist::Netlist;
 use crate::circuit::verify::ArithFn;
 use crate::data::rng::Xoshiro256;
 
+use super::campaign::map_parallel;
 use super::chromosome::Chromosome;
-use super::evaluator::Evaluator;
+use super::evaluator::{EvalContext, EvalScratch, Evaluator};
 use super::metrics::{ErrorMetrics, Metric};
 use super::mutation::mutated_copy;
 use super::pareto::ParetoArchive;
@@ -59,6 +67,28 @@ impl Default for EvolveConfig {
             h: 5,
             seed: 1,
             slack: 0,
+        }
+    }
+}
+
+/// Island-model parameters for [`evolve_islands`].
+#[derive(Debug, Clone)]
+pub struct IslandsConfig {
+    /// Number of demes (M ≥ 1; M = 1 degenerates to a plain run).
+    pub demes: u32,
+    /// Generations between migration barriers.
+    pub migration_interval: u64,
+    /// Worker threads executing deme epochs (results are identical for any
+    /// value; this only controls wall-clock).
+    pub workers: usize,
+}
+
+impl Default for IslandsConfig {
+    fn default() -> Self {
+        IslandsConfig {
+            demes: 4,
+            migration_interval: 500,
+            workers: 1,
         }
     }
 }
@@ -114,92 +144,144 @@ impl Fitness {
             (Invalid(a), Invalid(b)) => a <= b,
         }
     }
+
+    /// `self` is strictly better than `other` (migration acceptance test —
+    /// ties must NOT migrate, or all demes would collapse onto one parent).
+    fn strictly_better(self, other: Fitness) -> bool {
+        self.at_least(other) && !other.at_least(self)
+    }
 }
 
-/// Single-objective error-constrained evolution, seeded with `seed_netlist`.
-pub fn evolve(
-    seed_netlist: &Netlist,
-    f: ArithFn,
-    cfg: &EvolveConfig,
-    model: &CostModel,
-    evaluator: &mut Evaluator,
-) -> EvolveReport {
-    assert_eq!(evaluator.f, f, "evaluator target mismatch");
-    let mut rng = Xoshiro256::new(cfg.seed);
-    let mut parent = Chromosome::from_netlist(seed_netlist, cfg.slack);
-    // The early-abort bound: anything beyond e_max can abort, but the abort
-    // must still produce a comparable "distance" for invalid candidates, so
-    // only abort at a slack multiple of the window.
-    let abort_bound = if cfg.e_max > 0.0 {
+fn fitness_of(err: f64, cost: f64, cfg: &EvolveConfig) -> Fitness {
+    if err >= cfg.e_min && err <= cfg.e_max {
+        Fitness::Valid(cost)
+    } else if err < cfg.e_min {
+        Fitness::Invalid(cfg.e_min - err)
+    } else {
+        Fitness::Invalid(err - cfg.e_max)
+    }
+}
+
+/// The early-abort bound: anything beyond e_max can abort, but the abort
+/// must still produce a comparable "distance" for invalid candidates, so
+/// only abort at a slack multiple of the window.
+fn abort_bound(cfg: &EvolveConfig) -> f64 {
+    if cfg.e_max > 0.0 {
         cfg.e_max * 4.0
     } else {
         f64::INFINITY
-    };
-    let mut evaluations = 0u64;
-    let mut eval = |c: &Chromosome, ev: &mut Evaluator, n_evals: &mut u64| -> (Fitness, f64, f64) {
-        *n_evals += 1;
-        let err = ev.error_bounded(c, cfg.metric, abort_bound);
-        let cost = ev.cost(c, model);
-        let fit = if err >= cfg.e_min && err <= cfg.e_max {
-            Fitness::Valid(cost)
-        } else if err < cfg.e_min {
-            Fitness::Invalid(cfg.e_min - err)
-        } else {
-            Fitness::Invalid(err - cfg.e_max)
-        };
-        (fit, err, cost)
-    };
-
-    let (mut parent_fit, mut parent_err, mut parent_cost) =
-        eval(&parent, evaluator, &mut evaluations);
-
-    let mut front: ParetoArchive<(Chromosome, u64)> = ParetoArchive::new();
-    if parent_err.is_finite() {
-        front.insert(vec![parent_err, parent_cost], (parent.clone(), 0));
     }
-    let mut best: Option<(Chromosome, f64, f64)> = match parent_fit {
-        Fitness::Valid(_) => Some((parent.clone(), parent_err, parent_cost)),
-        _ => None,
-    };
-    let mut trace = Vec::new();
+}
 
-    for gen in 1..=cfg.generations {
-        let mut chosen: Option<(Chromosome, Fitness, f64, f64)> = None;
-        for _ in 0..cfg.lambda {
-            let child = mutated_copy(&parent, cfg.h, &mut rng);
-            let (fit, err, cost) = eval(&child, evaluator, &mut evaluations);
-            if err.is_finite() {
-                front.insert(vec![err, cost], (child.clone(), gen));
-            }
-            let better_than_chosen = match &chosen {
-                None => true,
-                Some((_, cf, _, _)) => fit.at_least(*cf),
-            };
-            if better_than_chosen {
-                chosen = Some((child, fit, err, cost));
-            }
+/// Live state of one (1+λ) search. The search runs in *epochs* so the
+/// island model can interleave migration with evolution; a single epoch of
+/// `cfg.generations` generations reproduces the classic serial run.
+struct DemeState {
+    parent: Chromosome,
+    parent_fit: Fitness,
+    rng: Xoshiro256,
+    front: ParetoArchive<(Chromosome, u64)>,
+    best: Option<(Chromosome, f64, f64)>,
+    trace: Vec<(u64, f64)>,
+    evaluations: u64,
+    generation: u64,
+}
+
+impl DemeState {
+    fn init(
+        seed_netlist: &Netlist,
+        cfg: &EvolveConfig,
+        rng_seed: u64,
+        model: &CostModel,
+        ctx: &EvalContext,
+        scratch: &mut EvalScratch,
+    ) -> DemeState {
+        let parent = Chromosome::from_netlist(seed_netlist, cfg.slack);
+        let err = ctx.error_bounded(scratch, &parent, cfg.metric, abort_bound(cfg));
+        let cost = ctx.cost(scratch, &parent, model);
+        let fit = fitness_of(err, cost, cfg);
+        let mut front: ParetoArchive<(Chromosome, u64)> = ParetoArchive::new();
+        if err.is_finite() {
+            front.insert(vec![err, cost], (parent.clone(), 0));
         }
-        if let Some((child, fit, err, cost)) = chosen {
-            if fit.at_least(parent_fit) {
-                parent = child;
-                parent_fit = fit;
-                parent_err = err;
-                parent_cost = cost;
-                if let Fitness::Valid(c) = fit {
-                    let improved = match &best {
-                        None => true,
-                        Some((_, _, bc)) => c < *bc,
-                    };
-                    if improved {
-                        best = Some((parent.clone(), err, cost));
-                        trace.push((gen, cost));
+        let best = match fit {
+            Fitness::Valid(_) => Some((parent.clone(), err, cost)),
+            _ => None,
+        };
+        DemeState {
+            parent,
+            parent_fit: fit,
+            rng: Xoshiro256::new(rng_seed),
+            front,
+            best,
+            trace: Vec::new(),
+            evaluations: 1,
+            generation: 0,
+        }
+    }
+
+    /// Advance the search by `gens` generations.
+    fn run_epoch(
+        &mut self,
+        gens: u64,
+        cfg: &EvolveConfig,
+        model: &CostModel,
+        ctx: &EvalContext,
+        scratch: &mut EvalScratch,
+    ) {
+        let bound = abort_bound(cfg);
+        let end = self.generation + gens;
+        while self.generation < end {
+            let gen = self.generation + 1;
+            let mut chosen: Option<(Chromosome, Fitness, f64, f64)> = None;
+            for _ in 0..cfg.lambda {
+                let child = mutated_copy(&self.parent, cfg.h, &mut self.rng);
+                self.evaluations += 1;
+                let err = ctx.error_bounded(scratch, &child, cfg.metric, bound);
+                let cost = ctx.cost(scratch, &child, model);
+                let fit = fitness_of(err, cost, cfg);
+                if err.is_finite() {
+                    self.front.insert(vec![err, cost], (child.clone(), gen));
+                }
+                let better_than_chosen = match &chosen {
+                    None => true,
+                    Some((_, cf, _, _)) => fit.at_least(*cf),
+                };
+                if better_than_chosen {
+                    chosen = Some((child, fit, err, cost));
+                }
+            }
+            if let Some((child, fit, err, cost)) = chosen {
+                if fit.at_least(self.parent_fit) {
+                    self.parent = child;
+                    self.parent_fit = fit;
+                    if let Fitness::Valid(c) = fit {
+                        let improved = match &self.best {
+                            None => true,
+                            Some((_, _, bc)) => c < *bc,
+                        };
+                        if improved {
+                            self.best = Some((self.parent.clone(), err, cost));
+                            self.trace.push((gen, cost));
+                        }
                     }
                 }
             }
+            self.generation = gen;
         }
     }
 
-    let _ = (parent_err, parent_cost);
+    fn finish(self) -> EvolveReport {
+        report_from(self.front, self.best, self.evaluations, self.trace)
+    }
+}
+
+fn report_from(
+    front: ParetoArchive<(Chromosome, u64)>,
+    best: Option<(Chromosome, f64, f64)>,
+    evaluations: u64,
+    trace: Vec<(u64, f64)>,
+) -> EvolveReport {
     let harvest = front
         .into_items()
         .into_iter()
@@ -230,6 +312,139 @@ pub fn evolve(
     }
 }
 
+/// Single-objective error-constrained evolution against a shared
+/// [`EvalContext`] and caller-supplied [`EvalScratch`] — the worker-pool
+/// entry point of the campaign engine.
+pub fn evolve_with(
+    seed_netlist: &Netlist,
+    f: ArithFn,
+    cfg: &EvolveConfig,
+    model: &CostModel,
+    ctx: &EvalContext,
+    scratch: &mut EvalScratch,
+) -> EvolveReport {
+    assert_eq!(ctx.f, f, "evaluator target mismatch");
+    let mut deme = DemeState::init(seed_netlist, cfg, cfg.seed, model, ctx, scratch);
+    deme.run_epoch(cfg.generations, cfg, model, ctx, scratch);
+    deme.finish()
+}
+
+/// Single-objective error-constrained evolution, seeded with `seed_netlist`
+/// (serial convenience wrapper over [`evolve_with`]).
+pub fn evolve(
+    seed_netlist: &Netlist,
+    f: ArithFn,
+    cfg: &EvolveConfig,
+    model: &CostModel,
+    evaluator: &mut Evaluator,
+) -> EvolveReport {
+    let (ctx, scratch) = evaluator.parts();
+    evolve_with(seed_netlist, f, cfg, model, ctx, scratch)
+}
+
+/// RNG seed of deme `d`: deme 0 keeps the root seed (so `demes = 1`
+/// reproduces the plain run), higher demes decorrelate via golden-ratio
+/// mixing.
+fn deme_seed(root: u64, d: u64) -> u64 {
+    root ^ d.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17)
+}
+
+/// Island-model evolution: `isl.demes` independent (1+λ) searches with
+/// ring migration of the parent every `isl.migration_interval` generations.
+///
+/// Each deme runs `cfg.generations` generations in total. After every
+/// epoch, deme `d` adopts the parent of deme `d-1 (mod M)` iff it is
+/// strictly fitter than its own. The merged report contains the union
+/// Pareto front of all demes and the globally best candidate. Output is
+/// deterministic in (`cfg.seed`, `isl.demes`, `isl.migration_interval`)
+/// and independent of `isl.workers`.
+pub fn evolve_islands(
+    seed_netlist: &Netlist,
+    f: ArithFn,
+    cfg: &EvolveConfig,
+    isl: &IslandsConfig,
+    model: &CostModel,
+    ctx: &EvalContext,
+) -> EvolveReport {
+    assert_eq!(ctx.f, f, "evaluator target mismatch");
+    let m = isl.demes.max(1) as usize;
+    if m == 1 {
+        let mut scratch = EvalScratch::new();
+        return evolve_with(seed_netlist, f, cfg, model, ctx, &mut scratch);
+    }
+    let interval = isl.migration_interval.max(1);
+
+    // Initialise demes (parallel — one seed evaluation each).
+    let mut demes: Vec<DemeState> = map_parallel(
+        (0..m).collect::<Vec<usize>>(),
+        isl.workers,
+        |_, d, scratch| {
+            DemeState::init(
+                seed_netlist,
+                cfg,
+                deme_seed(cfg.seed, d as u64),
+                model,
+                ctx,
+                scratch,
+            )
+        },
+    );
+
+    // Epoch / migrate until every deme has spent its generation budget.
+    let mut done = 0u64;
+    while done < cfg.generations {
+        let step = interval.min(cfg.generations - done);
+        demes = map_parallel(demes, isl.workers, |_, mut deme, scratch| {
+            deme.run_epoch(step, cfg, model, ctx, scratch);
+            deme
+        });
+        done += step;
+        if done < cfg.generations {
+            migrate_ring(&mut demes);
+        }
+    }
+
+    // Deterministic merge in deme order.
+    let mut merged: ParetoArchive<(Chromosome, u64)> = ParetoArchive::new();
+    let mut best: Option<(Chromosome, f64, f64)> = None;
+    let mut trace: Vec<(u64, f64)> = Vec::new();
+    let mut evaluations = 0u64;
+    for deme in demes {
+        evaluations += deme.evaluations;
+        let take = match (&best, &deme.best) {
+            (_, None) => false,
+            (None, Some(_)) => true,
+            (Some((_, _, bc)), Some((_, _, dc))) => dc < bc,
+        };
+        if take {
+            best = deme.best.clone();
+            trace = deme.trace.clone();
+        }
+        for (obj, item) in deme.front.into_items() {
+            merged.insert(obj, item);
+        }
+    }
+    report_from(merged, best, evaluations, trace)
+}
+
+/// Ring migration: deme `d` adopts the pre-migration parent of deme
+/// `d-1 (mod M)` iff strictly fitter. Simultaneous (snapshot-based), so the
+/// result is independent of iteration order.
+fn migrate_ring(demes: &mut [DemeState]) {
+    let m = demes.len();
+    let snapshot: Vec<(Chromosome, Fitness)> = demes
+        .iter()
+        .map(|d| (d.parent.clone(), d.parent_fit))
+        .collect();
+    for (d, deme) in demes.iter_mut().enumerate() {
+        let (incoming, fit) = &snapshot[(d + m - 1) % m];
+        if fit.strictly_better(deme.parent_fit) {
+            deme.parent = incoming.clone();
+            deme.parent_fit = *fit;
+        }
+    }
+}
+
 /// Multi-objective archive evolution over (error, area, delay).
 ///
 /// Keeps a Pareto archive; each generation mutates a random archive member
@@ -241,7 +456,8 @@ pub fn evolve_multi(
     model: &CostModel,
     evaluator: &mut Evaluator,
 ) -> ParetoArchive<Netlist> {
-    assert_eq!(evaluator.f, f);
+    let (ctx, scratch) = evaluator.parts();
+    assert_eq!(ctx.f, f);
     let mut rng = Xoshiro256::new(cfg.seed ^ 0x4D4F_4541); // "MOEA"
     let seed_chrom = Chromosome::from_netlist(seed_netlist, cfg.slack);
     let mut pool: Vec<Chromosome> = vec![seed_chrom];
@@ -249,7 +465,7 @@ pub fn evolve_multi(
     for _ in 0..cfg.generations {
         let pick = rng.next_usize(pool.len());
         let child = mutated_copy(&pool[pick], cfg.h, &mut rng);
-        let err = evaluator.error_bounded(&child, cfg.metric, cfg.e_max * 4.0);
+        let err = ctx.error_bounded(scratch, &child, cfg.metric, cfg.e_max * 4.0);
         if !err.is_finite() || err > cfg.e_max {
             continue;
         }
@@ -266,12 +482,24 @@ pub fn evolve_multi(
     archive
 }
 
-/// Convenience driver: characterise one harvested netlist with *all* six
-/// metrics (library ingestion path).
-pub fn characterise(netlist: &Netlist, f: ArithFn, evaluator: &mut Evaluator) -> ErrorMetrics {
-    assert_eq!(evaluator.f, f, "evaluator target mismatch");
+/// Characterise one harvested netlist with *all* six metrics against a
+/// shared context (library ingestion path, worker-pool entry point).
+pub fn characterise_with(
+    netlist: &Netlist,
+    f: ArithFn,
+    ctx: &EvalContext,
+    scratch: &mut EvalScratch,
+) -> ErrorMetrics {
+    assert_eq!(ctx.f, f, "evaluator target mismatch");
     let chrom = Chromosome::from_netlist(netlist, 0);
-    evaluator.full_metrics(&chrom)
+    ctx.full_metrics(scratch, &chrom)
+}
+
+/// Convenience driver: characterise one harvested netlist with *all* six
+/// metrics (serial library ingestion path).
+pub fn characterise(netlist: &Netlist, f: ArithFn, evaluator: &mut Evaluator) -> ErrorMetrics {
+    let (ctx, scratch) = evaluator.parts();
+    characterise_with(netlist, f, ctx, scratch)
 }
 
 #[cfg(test)]
@@ -380,6 +608,81 @@ mod tests {
         for (obj, nl) in archive.iter() {
             let m = characterise(nl, MUL4, &mut ev);
             assert!((m.mae - obj[0]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn islands_deterministic_across_worker_counts() {
+        let seed = wallace_multiplier(4);
+        let model = CostModel::default();
+        let ctx = EvalContext::exhaustive(MUL4);
+        let cfg = quick_cfg(Metric::Wce, 6.0, 900);
+        let base = IslandsConfig {
+            demes: 3,
+            migration_interval: 150,
+            workers: 1,
+        };
+        let a = evolve_islands(&seed, MUL4, &cfg, &base, &model, &ctx);
+        let par = IslandsConfig {
+            workers: 4,
+            ..base.clone()
+        };
+        let b = evolve_islands(&seed, MUL4, &cfg, &par, &model, &ctx);
+        assert_eq!(a.best_cost, b.best_cost);
+        assert_eq!(a.best_error, b.best_error);
+        assert_eq!(a.harvest.len(), b.harvest.len());
+        // every deme evaluates its seed once plus λ offspring per generation
+        assert_eq!(a.evaluations, 3 * (1 + 900 * 4));
+        assert_eq!(a.evaluations, b.evaluations);
+    }
+
+    #[test]
+    fn islands_single_deme_matches_plain_run() {
+        let seed = wallace_multiplier(4);
+        let model = CostModel::default();
+        let ctx = EvalContext::exhaustive(MUL4);
+        let cfg = quick_cfg(Metric::Wce, 4.0, 600);
+        let isl = IslandsConfig {
+            demes: 1,
+            migration_interval: 100,
+            workers: 2,
+        };
+        let a = evolve_islands(&seed, MUL4, &cfg, &isl, &model, &ctx);
+        let mut ev = Evaluator::exhaustive(MUL4);
+        let b = evolve(&seed, MUL4, &cfg, &model, &mut ev);
+        assert_eq!(a.best_cost, b.best_cost);
+        assert_eq!(a.evaluations, b.evaluations);
+        assert_eq!(a.harvest.len(), b.harvest.len());
+    }
+
+    #[test]
+    fn islands_find_valid_solutions() {
+        let seed = wallace_multiplier(4);
+        let model = CostModel::default();
+        let seed_cost = model.weighted_area(&seed);
+        let ctx = EvalContext::exhaustive(MUL4);
+        let cfg = quick_cfg(Metric::Wce, 8.0, 800);
+        let isl = IslandsConfig {
+            demes: 4,
+            migration_interval: 200,
+            workers: 4,
+        };
+        let rep = evolve_islands(&seed, MUL4, &cfg, &isl, &model, &ctx);
+        assert!(rep.best.is_some());
+        assert!(rep.best_error <= 8.0);
+        assert!(rep.best_cost < seed_cost);
+        // merged harvest must be a clean front
+        for (i, a) in rep.harvest.iter().enumerate() {
+            for (j, b) in rep.harvest.iter().enumerate() {
+                if i != j {
+                    assert!(
+                        !(a.error <= b.error && a.cost <= b.cost
+                            && (a.error < b.error || a.cost < b.cost))
+                            || (a.error == b.error && a.cost == b.cost),
+                        "harvest contains dominated point"
+                    );
+                }
+            }
         }
     }
 }

@@ -1,8 +1,11 @@
 //! Cartesian Genetic Programming engine (§II of the paper): chromosome
 //! encoding, validity-preserving mutation, the six error metrics of
-//! eqs. (1)–(6), a fast allocation-free evaluator, the (1+λ) evolutionary
-//! strategy with an error window, and Pareto-archive multi-objective search.
+//! eqs. (1)–(6), a fast allocation-free evaluator split into a shared
+//! context and per-worker scratch, the (1+λ) evolutionary strategy with an
+//! error window (serial, island-model and job-pool parallel variants), and
+//! Pareto-archive multi-objective search.
 
+pub mod campaign;
 pub mod chromosome;
 pub mod evaluator;
 pub mod evolve;
@@ -10,9 +13,13 @@ pub mod metrics;
 pub mod mutation;
 pub mod pareto;
 
+pub use campaign::{default_workers, map_parallel, run_evolve_jobs, EvolveJob};
 pub use chromosome::{CgpParams, Chromosome};
-pub use evaluator::Evaluator;
-pub use evolve::{characterise, evolve, evolve_multi, EvolveConfig, EvolveReport, Harvested};
+pub use evaluator::{EvalContext, EvalScratch, Evaluator};
+pub use evolve::{
+    characterise, characterise_with, evolve, evolve_islands, evolve_multi, evolve_with,
+    EvolveConfig, EvolveReport, Harvested, IslandsConfig,
+};
 pub use metrics::{ErrorMetrics, Metric, RelativeErrors, SELECTION_METRICS};
 pub use mutation::{mutate, mutated_copy};
 pub use pareto::{dominates, non_dominated_indices, ParetoArchive};

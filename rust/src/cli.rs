@@ -1,0 +1,414 @@
+//! Dependency-free, clap-style command-line layer for the `evoapprox`
+//! binary (the offline vendor set has no clap).
+//!
+//! Subcommands and flags are declared as const [`CommandSpec`]/[`FlagSpec`]
+//! tables; [`parse`] validates argv against them, rejecting unknown
+//! commands, unknown flags and missing values with errors that name the
+//! valid alternatives — instead of the old hand-rolled parser's silent
+//! ignore. Supported syntax:
+//!
+//! * `--flag value` and `--flag=value`;
+//! * boolean switches (`--quick`) that take no value;
+//! * negative numbers as values (`--seed -5`): only a leading `--` marks
+//!   the next token as a flag.
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Declaration of one flag.
+#[derive(Debug, Clone, Copy)]
+pub struct FlagSpec {
+    /// Flag name without the leading `--`.
+    pub name: &'static str,
+    /// `Some(placeholder)` if the flag takes a value, `None` for switches.
+    pub value: Option<&'static str>,
+    /// One-line help text.
+    pub help: &'static str,
+}
+
+/// Declaration of one subcommand.
+#[derive(Debug, Clone, Copy)]
+pub struct CommandSpec {
+    /// Subcommand name.
+    pub name: &'static str,
+    /// One-line description.
+    pub about: &'static str,
+    /// Accepted flags.
+    pub flags: &'static [FlagSpec],
+}
+
+/// Everything that can go wrong while parsing argv.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CliError {
+    /// The first argument names no known subcommand.
+    UnknownCommand {
+        /// What was typed.
+        command: String,
+        /// Valid subcommand names.
+        known: Vec<String>,
+    },
+    /// A `--flag` the subcommand does not accept.
+    UnknownFlag {
+        /// Subcommand being parsed.
+        command: String,
+        /// The offending flag (with `--`).
+        flag: String,
+        /// Flags the subcommand does accept.
+        known: Vec<String>,
+    },
+    /// A bare token where a flag was expected.
+    UnexpectedArg {
+        /// Subcommand being parsed.
+        command: String,
+        /// The stray token.
+        arg: String,
+    },
+    /// A value-taking flag at the end of argv or followed by another flag.
+    MissingValue {
+        /// The offending flag (with `--`).
+        flag: String,
+    },
+    /// A value that failed to parse as the requested type.
+    BadValue {
+        /// The offending flag (with `--`).
+        flag: String,
+        /// The unparseable value.
+        value: String,
+    },
+    /// An inline `=value` on a switch that takes none (`--quick=false`
+    /// must not silently enable quick mode).
+    UnexpectedValue {
+        /// The offending flag (with `--`).
+        flag: String,
+        /// The rejected inline value.
+        value: String,
+    },
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::UnknownCommand { command, known } => write!(
+                f,
+                "unknown command `{command}` (expected one of: {})",
+                known.join(", ")
+            ),
+            CliError::UnknownFlag {
+                command,
+                flag,
+                known,
+            } => {
+                if known.is_empty() {
+                    write!(f, "`{command}` takes no flags, got `{flag}`")
+                } else {
+                    write!(
+                        f,
+                        "unknown flag `{flag}` for `{command}` (valid: {})",
+                        known.join(", ")
+                    )
+                }
+            }
+            CliError::UnexpectedArg { command, arg } => {
+                write!(f, "unexpected argument `{arg}` after `{command}` (flags start with --)")
+            }
+            CliError::MissingValue { flag } => {
+                write!(f, "flag `{flag}` requires a value")
+            }
+            CliError::BadValue { flag, value } => {
+                write!(f, "invalid value `{value}` for `{flag}`")
+            }
+            CliError::UnexpectedValue { flag, value } => {
+                write!(f, "flag `{flag}` takes no value (got `{value}`)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed command line: the subcommand plus its validated flags.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    /// Subcommand name (`"help"` when argv was empty or asked for help).
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+fn known_flags(spec: &CommandSpec) -> Vec<String> {
+    spec.flags.iter().map(|f| format!("--{}", f.name)).collect()
+}
+
+/// Parse argv (without the binary name) against the command table.
+pub fn parse(specs: &[CommandSpec], args: &[String]) -> Result<Cli, CliError> {
+    let command = args.first().cloned().unwrap_or_default();
+    // `--help`/`-h` anywhere (the clap idiom `evoapprox evolve --help`)
+    // short-circuits to help instead of tripping the unknown-flag check.
+    if command.is_empty()
+        || matches!(command.as_str(), "help" | "--help" | "-h")
+        || args.iter().any(|a| a == "--help" || a == "-h")
+    {
+        return Ok(Cli {
+            command: "help".to_string(),
+            flags: HashMap::new(),
+        });
+    }
+    let spec = specs
+        .iter()
+        .find(|c| c.name == command)
+        .ok_or_else(|| CliError::UnknownCommand {
+            command: command.clone(),
+            known: specs.iter().map(|c| c.name.to_string()).collect(),
+        })?;
+    let mut flags = HashMap::new();
+    let mut i = 1;
+    while i < args.len() {
+        let arg = &args[i];
+        let Some(body) = arg.strip_prefix("--") else {
+            return Err(CliError::UnexpectedArg {
+                command,
+                arg: arg.clone(),
+            });
+        };
+        let (key, inline) = match body.split_once('=') {
+            Some((k, v)) => (k, Some(v.to_string())),
+            None => (body, None),
+        };
+        let flag_spec = spec
+            .flags
+            .iter()
+            .find(|f| f.name == key)
+            .ok_or_else(|| CliError::UnknownFlag {
+                command: command.clone(),
+                flag: format!("--{key}"),
+                known: known_flags(spec),
+            })?;
+        let value = match (flag_spec.value.is_some(), inline) {
+            (true, Some(v)) => v,
+            (false, Some(v)) => {
+                return Err(CliError::UnexpectedValue {
+                    flag: format!("--{key}"),
+                    value: v,
+                })
+            }
+            (false, None) => "true".to_string(),
+            (true, None) => match args.get(i + 1) {
+                // a following `--whatever` is another flag, not a value; a
+                // bare `-5` (negative number) is a legitimate value
+                Some(v) if !v.starts_with("--") => {
+                    i += 1;
+                    v.clone()
+                }
+                _ => {
+                    return Err(CliError::MissingValue {
+                        flag: format!("--{key}"),
+                    })
+                }
+            },
+        };
+        flags.insert(key.to_string(), value);
+        i += 1;
+    }
+    Ok(Cli { command, flags })
+}
+
+impl Cli {
+    /// Raw value of a flag, if present.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    /// Whether a switch (or any flag) was passed.
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// Typed flag lookup with a default; a present-but-unparseable value is
+    /// an error (the old parser silently fell back to the default).
+    pub fn flag<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                flag: format!("--{key}"),
+                value: v.clone(),
+            }),
+        }
+    }
+
+    /// String flag with a default.
+    pub fn flag_str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+/// Render the full help text from the command table.
+pub fn render_help(binary: &str, about: &str, specs: &[CommandSpec]) -> String {
+    let mut out = format!("{binary} — {about}\n\nCOMMANDS\n");
+    for c in specs {
+        out.push_str(&format!("  {:<9} {}\n", c.name, c.about));
+        for f in c.flags {
+            let left = match f.value {
+                Some(v) => format!("--{} <{v}>", f.name),
+                None => format!("--{}", f.name),
+            };
+            out.push_str(&format!("      {left:<24} {}\n", f.help));
+        }
+    }
+    out.push_str("\nRun with `help` (or no arguments) to print this text.\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FLAGS: &[FlagSpec] = &[
+        FlagSpec {
+            name: "width",
+            value: Some("BITS"),
+            help: "operand width",
+        },
+        FlagSpec {
+            name: "seed",
+            value: Some("N"),
+            help: "rng seed",
+        },
+        FlagSpec {
+            name: "quick",
+            value: None,
+            help: "reduced budget",
+        },
+    ];
+    const SPECS: &[CommandSpec] = &[
+        CommandSpec {
+            name: "evolve",
+            about: "run evolution",
+            flags: FLAGS,
+        },
+        CommandSpec {
+            name: "info",
+            about: "print info",
+            flags: &[],
+        },
+    ];
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_switches_and_equals() {
+        let cli = parse(SPECS, &args(&["evolve", "--width", "12", "--quick"])).unwrap();
+        assert_eq!(cli.command, "evolve");
+        assert_eq!(cli.flag("width", 8u32).unwrap(), 12);
+        assert!(cli.has("quick"));
+        assert!(!cli.has("seed"));
+        let cli = parse(SPECS, &args(&["evolve", "--width=9"])).unwrap();
+        assert_eq!(cli.flag("width", 8u32).unwrap(), 9);
+    }
+
+    #[test]
+    fn defaults_apply_when_absent() {
+        let cli = parse(SPECS, &args(&["evolve"])).unwrap();
+        assert_eq!(cli.flag("width", 8u32).unwrap(), 8);
+        assert_eq!(cli.flag_str("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn empty_and_help_variants() {
+        for argv in [
+            vec![],
+            args(&["help"]),
+            args(&["--help"]),
+            args(&["-h"]),
+            args(&["evolve", "--help"]),
+            args(&["evolve", "--width", "8", "-h"]),
+        ] {
+            assert_eq!(parse(SPECS, &argv).unwrap().command, "help");
+        }
+        assert!(!render_help("evoapprox", "test", SPECS).is_empty());
+    }
+
+    #[test]
+    fn switch_rejects_inline_value() {
+        let e = parse(SPECS, &args(&["evolve", "--quick=false"])).unwrap_err();
+        assert_eq!(
+            e,
+            CliError::UnexpectedValue {
+                flag: "--quick".into(),
+                value: "false".into()
+            }
+        );
+        assert!(e.to_string().contains("takes no value"));
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        let e = parse(SPECS, &args(&["evolv"])).unwrap_err();
+        assert!(matches!(e, CliError::UnknownCommand { .. }));
+        assert!(e.to_string().contains("evolve"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected_with_suggestions() {
+        let e = parse(SPECS, &args(&["evolve", "--widht", "8"])).unwrap_err();
+        let CliError::UnknownFlag { flag, known, .. } = &e else {
+            panic!("wrong error: {e:?}");
+        };
+        assert_eq!(flag, "--widht");
+        assert!(known.contains(&"--width".to_string()));
+    }
+
+    #[test]
+    fn missing_value_detected() {
+        // at end of argv
+        let e = parse(SPECS, &args(&["evolve", "--width"])).unwrap_err();
+        assert_eq!(
+            e,
+            CliError::MissingValue {
+                flag: "--width".into()
+            }
+        );
+        // followed by another flag
+        let e = parse(SPECS, &args(&["evolve", "--width", "--quick"])).unwrap_err();
+        assert_eq!(
+            e,
+            CliError::MissingValue {
+                flag: "--width".into()
+            }
+        );
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        let cli = parse(SPECS, &args(&["evolve", "--seed", "-5"])).unwrap();
+        assert_eq!(cli.flag("seed", 0i64).unwrap(), -5);
+    }
+
+    #[test]
+    fn bad_value_is_an_error_not_a_silent_default() {
+        let cli = parse(SPECS, &args(&["evolve", "--width", "lots"])).unwrap();
+        let e = cli.flag("width", 8u32).unwrap_err();
+        assert_eq!(
+            e,
+            CliError::BadValue {
+                flag: "--width".into(),
+                value: "lots".into()
+            }
+        );
+    }
+
+    #[test]
+    fn stray_positional_rejected() {
+        let e = parse(SPECS, &args(&["evolve", "fast"])).unwrap_err();
+        assert!(matches!(e, CliError::UnexpectedArg { .. }));
+    }
+
+    #[test]
+    fn command_without_flags_rejects_any_flag() {
+        let e = parse(SPECS, &args(&["info", "--width", "8"])).unwrap_err();
+        assert!(e.to_string().contains("takes no flags"));
+    }
+}

@@ -12,8 +12,13 @@
 //!   (substituting for Synopsys Design Compiler — see `DESIGN.md`).
 //! * [`cgp`] — Cartesian Genetic Programming engine: chromosome encoding,
 //!   mutation, (1+λ) evolutionary strategy, all six error metrics of the
-//!   paper (eqs. 1–6), single-objective error-constrained search and
-//!   multi-objective Pareto-archive search.
+//!   paper (eqs. 1–6), single-objective error-constrained search,
+//!   multi-objective Pareto-archive search, an island-model multi-deme
+//!   variant for wide operands, and the deterministic job-pool campaign
+//!   engine that fans independent runs across worker threads
+//!   (`DESIGN.md` §6).
+//! * [`cli`] — dependency-free clap-style command/flag layer used by the
+//!   `evoapprox` binary (unknown flags are rejected, not ignored).
 //! * [`library`] — the approximate-circuit library itself: typed entries with
 //!   full metric characterisation, JSON persistence, Pareto-front extraction
 //!   and the paper's "10 circuits evenly spaced along the power axis per
@@ -40,6 +45,7 @@
 pub mod accel;
 pub mod cgp;
 pub mod circuit;
+pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod library;

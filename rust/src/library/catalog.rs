@@ -4,10 +4,18 @@
 //!
 //! The published campaign runs 1 M generations per target for weeks of CPU
 //! time; budgets here are configurable and the defaults are scaled for the
-//! single-core testbed (DESIGN.md §4 records the substitution).
+//! testbed (DESIGN.md §4 records the substitution).
+//!
+//! Execution goes through the job pool of [`crate::cgp::campaign`]
+//! (DESIGN.md §6): the full metric × e_max × seed grid is expanded into an
+//! ordered job list, every job derives its RNG seed from the grid position
+//! (never from scheduling), harvest characterisation runs on the workers,
+//! and ingestion happens in grid order — so `jobs = 1` and `jobs = N`
+//! produce byte-identical libraries.
 
-use crate::cgp::evaluator::Evaluator;
-use crate::cgp::evolve::{evolve, EvolveConfig};
+use crate::cgp::campaign::{run_evolve_jobs, EvolveJob};
+use crate::cgp::evaluator::EvalContext;
+use crate::cgp::evolve::EvolveConfig;
 use crate::cgp::metrics::Metric;
 use crate::circuit::cost::CostModel;
 use crate::circuit::generators::{
@@ -45,6 +53,9 @@ pub struct CampaignConfig {
     /// §Perf L3). Candidates are still characterised *exhaustively* before
     /// entering the library, so entry metrics stay exact.
     pub sampled_search: bool,
+    /// Worker threads for the run grid (1 = serial; the library output is
+    /// byte-identical for every value).
+    pub jobs: usize,
 }
 
 impl CampaignConfig {
@@ -63,6 +74,7 @@ impl CampaignConfig {
             seed: 0x5EED,
             per_stratum: 24,
             sampled_search: true,
+            jobs: 1,
         }
     }
 }
@@ -130,8 +142,23 @@ pub struct CampaignProgress {
     pub evaluations: u64,
 }
 
-/// Run the campaign, ingesting results into `lib`.
-/// Returns the number of entries added.
+/// Build the shared evaluation context for a campaign on `cfg.f`.
+pub fn campaign_context(cfg: &CampaignConfig) -> EvalContext {
+    if cfg.f.exhaustive_feasible() {
+        if cfg.sampled_search {
+            // unbiased uniform subsample for the search; characterisation
+            // is always exhaustive for feasible widths
+            EvalContext::uniform_subsample(cfg.f, 81 * cfg.per_stratum, cfg.seed ^ 0xE7A1)
+        } else {
+            EvalContext::exhaustive(cfg.f)
+        }
+    } else {
+        EvalContext::sampled(cfg.f, cfg.per_stratum, cfg.seed ^ 0xE7A1)
+    }
+}
+
+/// Run the campaign across `cfg.jobs` workers, ingesting results into
+/// `lib` in deterministic job order. Returns the number of entries added.
 pub fn run_campaign(
     lib: &mut Library,
     cfg: &CampaignConfig,
@@ -162,20 +189,13 @@ pub fn run_campaign(
             added += 1;
         }
     }
-    let mut evaluator = if cfg.f.exhaustive_feasible() {
-        if cfg.sampled_search {
-            // unbiased uniform subsample for the search; characterisation
-            // below is always exhaustive for feasible widths
-            Evaluator::uniform_subsample(cfg.f, 81 * cfg.per_stratum, cfg.seed ^ 0xE7A1)
-        } else {
-            Evaluator::exhaustive(cfg.f)
-        }
-    } else {
-        Evaluator::sampled(cfg.f, cfg.per_stratum, cfg.seed ^ 0xE7A1)
-    };
-    let runs_total = cfg.metrics.len() as u32 * cfg.targets_per_metric * seeds.len() as u32;
-    let mut runs_done = 0u32;
-    let mut evaluations = 0u64;
+    let ctx = campaign_context(cfg);
+
+    // Expand the metric × target × seed grid into an ordered job list. The
+    // RNG seed of each run depends only on the grid position, so the sweep
+    // is reproducible under any scheduling.
+    let mut jobs: Vec<EvolveJob> = Vec::new();
+    let mut job_meta: Vec<(Metric, f64, u64)> = Vec::new();
     for (mi, &metric) in cfg.metrics.iter().enumerate() {
         for (ti, &e_max) in target_ladder(cfg.f, metric, cfg.targets_per_metric)
             .iter()
@@ -187,51 +207,77 @@ pub fn run_campaign(
                     .wrapping_add((mi as u64) << 40)
                     .wrapping_add((ti as u64) << 20)
                     .wrapping_add(si as u64);
-                let ecfg = EvolveConfig {
-                    metric,
-                    e_min: 0.0,
-                    e_max,
-                    generations: cfg.generations,
-                    lambda: cfg.lambda,
-                    h: cfg.h,
-                    seed: run_seed,
-                    slack: cfg.slack,
-                };
-                let report = evolve(seed_netlist, cfg.f, &ecfg, model, &mut evaluator);
-                evaluations += report.evaluations;
-                for h in report.harvest {
-                    let entry = Entry::characterise(
-                        h.netlist,
-                        cfg.f,
-                        model,
-                        Origin::Evolved {
-                            metric: metric.name().to_string(),
-                            e_max_permille: (e_max * 1000.0) as u64,
-                            seed: run_seed,
-                        },
-                    );
-                    // skip exact variants (the seeds are already ingested);
-                    // checked on the *exhaustive* characterisation, since a
-                    // sampled search can report spurious zero error.
-                    if entry.metrics.er == 0.0 {
-                        continue;
-                    }
-                    if lib.insert(entry) {
-                        added += 1;
-                    }
-                }
-                runs_done += 1;
-                if let Some(cb) = progress.as_deref_mut() {
-                    cb(CampaignProgress {
-                        runs_done,
-                        runs_total,
-                        entries: lib.len(),
-                        evaluations,
-                    });
-                }
+                jobs.push(EvolveJob {
+                    seed: seed_netlist.clone(),
+                    cfg: EvolveConfig {
+                        metric,
+                        e_min: 0.0,
+                        e_max,
+                        generations: cfg.generations,
+                        lambda: cfg.lambda,
+                        h: cfg.h,
+                        seed: run_seed,
+                        slack: cfg.slack,
+                    },
+                });
+                job_meta.push((metric, e_max, run_seed));
             }
         }
     }
+    let runs_total = jobs.len() as u32;
+    let mut runs_done = 0u32;
+    let mut evaluations = 0u64;
+    let job_meta = &job_meta;
+    run_evolve_jobs(
+        &ctx,
+        model,
+        jobs,
+        cfg.jobs,
+        // Worker-side: characterise the harvest (the expensive exhaustive
+        // re-evaluation) so ingestion on the merge thread stays cheap.
+        |i, _job, report| {
+            let (metric, e_max, run_seed) = job_meta[i];
+            let mut entries: Vec<Entry> = Vec::with_capacity(report.harvest.len());
+            for h in report.harvest {
+                let entry = Entry::characterise(
+                    h.netlist,
+                    cfg.f,
+                    model,
+                    Origin::Evolved {
+                        metric: metric.name().to_string(),
+                        e_max_permille: (e_max * 1000.0) as u64,
+                        seed: run_seed,
+                    },
+                );
+                // skip exact variants (the seeds are already ingested);
+                // checked on the *exhaustive* characterisation, since a
+                // sampled search can report spurious zero error.
+                if entry.metrics.er == 0.0 {
+                    continue;
+                }
+                entries.push(entry);
+            }
+            (entries, report.evaluations)
+        },
+        // Merge-side: invoked strictly in grid order.
+        |_, (entries, evals)| {
+            evaluations += evals;
+            for entry in entries {
+                if lib.insert(entry) {
+                    added += 1;
+                }
+            }
+            runs_done += 1;
+            if let Some(cb) = progress.as_deref_mut() {
+                cb(CampaignProgress {
+                    runs_done,
+                    runs_total,
+                    entries: lib.len(),
+                    evaluations,
+                });
+            }
+        },
+    );
     added
 }
 
@@ -273,6 +319,26 @@ mod tests {
         // selection works end-to-end on the campaign output
         let sel = select_diverse(&lib, f, &SELECTION_METRICS, 5);
         assert!(!sel.is_empty());
+    }
+
+    #[test]
+    fn campaign_is_worker_count_invariant() {
+        let f = ArithFn::Mul { w: 4 };
+        let model = CostModel::default();
+        let build = |jobs: usize| {
+            let mut cfg = CampaignConfig::quick(f);
+            cfg.generations = 300;
+            cfg.targets_per_metric = 2;
+            cfg.metrics = vec![Metric::Mae, Metric::Wce];
+            cfg.jobs = jobs;
+            let mut lib = Library::new();
+            run_campaign(&mut lib, &cfg, &model, None);
+            lib.to_json().to_string()
+        };
+        let serial = build(1);
+        let parallel = build(4);
+        assert!(!serial.is_empty());
+        assert_eq!(serial, parallel, "library JSON must not depend on --jobs");
     }
 
     #[test]

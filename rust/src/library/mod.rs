@@ -7,7 +7,10 @@ pub mod entry;
 pub mod selection;
 pub mod store;
 
-pub use catalog::{run_campaign, seeds_for, target_ladder, CampaignConfig, CampaignProgress};
+pub use catalog::{
+    approx_seeds_for, campaign_context, run_campaign, seeds_for, target_ladder, CampaignConfig,
+    CampaignProgress,
+};
 pub use entry::{Entry, Origin};
 pub use selection::{evenly_by_power, pareto_indices, select_diverse};
 pub use store::Library;

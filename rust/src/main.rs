@@ -1,13 +1,14 @@
 //! `evoapprox` — CLI for the EvoApproxLib reproduction.
 //!
-//! Subcommands (argument parsing is hand-rolled; the offline vendor set has
-//! no clap):
+//! Subcommands (see `evoapprox help` for the full flag tables; parsing is
+//! the dependency-free clap-style layer in `evoapproxlib::cli`):
 //!
 //! ```text
 //! evoapprox info                         # manifest + artifact inventory
 //! evoapprox evolve  [--width 8] [--metric MAE] [--emax-frac 0.005]
 //!                   [--generations 20000] [--seed 1] [--adder]
-//! evoapprox library [--out lib.json] [--quick] [--widths 8,12,16]
+//!                   [--demes 4] [--migration-interval 500] [--jobs N]
+//! evoapprox library [--out lib.json] [--quick] [--widths 8,12,16] [--jobs N]
 //! evoapprox census  --lib lib.json       # Table I counts
 //! evoapprox select  --lib lib.json [--k 10]
 //! evoapprox fig4    [--lib lib.json] [--images 256] [--multipliers 6]
@@ -15,33 +16,140 @@
 //! evoapprox serve   [--requests 512] [--max-wait-ms 20]
 //! ```
 
-use std::collections::HashMap;
-
+use evoapproxlib::cgp::{
+    default_workers, evolve_islands, evolve_with, EvalContext, EvalScratch, EvolveConfig,
+    IslandsConfig, Metric,
+};
 use evoapproxlib::circuit::cost::CostModel;
 use evoapproxlib::circuit::verify::ArithFn;
-use evoapproxlib::cgp::{evolve, Evaluator, EvolveConfig, Metric};
+use evoapproxlib::cli::{parse, render_help, Cli, CommandSpec, FlagSpec};
 use evoapproxlib::library::{run_campaign, CampaignConfig, Library};
 use evoapproxlib::util::table::TextTable;
 
+const ABOUT: &str = "approximate-circuit library + DNN resilience analysis";
+
+const ARTIFACTS_FLAG: FlagSpec = FlagSpec {
+    name: "artifacts",
+    value: Some("DIR"),
+    help: "artifacts directory (default `artifacts` or $EVOAPPROX_ARTIFACTS)",
+};
+const LIB_FLAG: FlagSpec = FlagSpec {
+    name: "lib",
+    value: Some("FILE"),
+    help: "library JSON (default library.json)",
+};
+const JOBS_FLAG: FlagSpec = FlagSpec {
+    name: "jobs",
+    value: Some("N"),
+    help: "worker threads (default: all cores; output is identical for any N)",
+};
+
+const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "info",
+        about: "manifest + artifact inventory",
+        flags: &[ARTIFACTS_FLAG],
+    },
+    CommandSpec {
+        name: "evolve",
+        about: "one CGP run (or an island-model multi-deme run)",
+        flags: &[
+            FlagSpec { name: "width", value: Some("BITS"), help: "operand width (default 8)" },
+            FlagSpec { name: "adder", value: None, help: "target an adder instead of a multiplier" },
+            FlagSpec { name: "metric", value: Some("NAME"), help: "error metric: ER|MAE|MSE|MRE|WCE|WCRE (default MAE)" },
+            FlagSpec { name: "emax-frac", value: Some("F"), help: "error budget as a fraction of the metric scale (default 0.005)" },
+            FlagSpec { name: "generations", value: Some("N"), help: "generations (default 20000)" },
+            FlagSpec { name: "lambda", value: Some("N"), help: "offspring per generation (default 4)" },
+            FlagSpec { name: "h", value: Some("N"), help: "genes mutated per offspring (default 5)" },
+            FlagSpec { name: "seed", value: Some("N"), help: "RNG seed (default 1)" },
+            FlagSpec { name: "slack", value: Some("N"), help: "extra grid columns (default 16)" },
+            FlagSpec { name: "demes", value: Some("M"), help: "island-model demes; >1 enables migration (default 1)" },
+            FlagSpec { name: "migration-interval", value: Some("G"), help: "generations between migrations (default 500)" },
+            JOBS_FLAG,
+            FlagSpec { name: "out", value: Some("FILE"), help: "save the harvested front as a library JSON" },
+        ],
+    },
+    CommandSpec {
+        name: "library",
+        about: "full construction campaign across widths (parallel job pool)",
+        flags: &[
+            FlagSpec { name: "out", value: Some("FILE"), help: "output path (default library.json)" },
+            FlagSpec { name: "quick", value: None, help: "reduced budgets" },
+            FlagSpec { name: "widths", value: Some("LIST"), help: "comma-separated operand widths (default 8)" },
+            FlagSpec { name: "generations", value: Some("N"), help: "generations per run (default 10000)" },
+            FlagSpec { name: "targets", value: Some("N"), help: "e_max targets per metric (default 5)" },
+            FlagSpec { name: "seed", value: Some("N"), help: "campaign master seed" },
+            JOBS_FLAG,
+        ],
+    },
+    CommandSpec {
+        name: "census",
+        about: "Table I counts from a library",
+        flags: &[LIB_FLAG],
+    },
+    CommandSpec {
+        name: "select",
+        about: "the §IV Pareto-diverse selection",
+        flags: &[
+            LIB_FLAG,
+            FlagSpec { name: "k", value: Some("N"), help: "circuits per metric front (default 10)" },
+        ],
+    },
+    CommandSpec {
+        name: "fig4",
+        about: "per-layer resilience campaign (needs artifacts)",
+        flags: &[
+            LIB_FLAG,
+            ARTIFACTS_FLAG,
+            FlagSpec { name: "images", value: Some("N"), help: "test images (default 256)" },
+            FlagSpec { name: "multipliers", value: Some("N"), help: "multipliers to sweep (default 8)" },
+            FlagSpec { name: "model", value: Some("NAME"), help: "network (default resnet8)" },
+        ],
+    },
+    CommandSpec {
+        name: "table2",
+        about: "whole-network accuracy campaign (needs artifacts)",
+        flags: &[
+            LIB_FLAG,
+            ARTIFACTS_FLAG,
+            FlagSpec { name: "images", value: Some("N"), help: "test images (default 256)" },
+            FlagSpec { name: "multipliers", value: Some("N"), help: "multiplier rows (default 28)" },
+            FlagSpec { name: "models", value: Some("LIST"), help: "comma-separated networks (default: all)" },
+        ],
+    },
+    CommandSpec {
+        name: "serve",
+        about: "dynamic-batching inference demo (needs artifacts)",
+        flags: &[
+            ARTIFACTS_FLAG,
+            FlagSpec { name: "model", value: Some("NAME"), help: "network (default resnet8)" },
+            FlagSpec { name: "requests", value: Some("N"), help: "requests to serve (default 512)" },
+            FlagSpec { name: "max-wait-ms", value: Some("MS"), help: "batching deadline (default 20)" },
+        ],
+    },
+];
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (cmd, flags) = parse(&args);
-    let r = match cmd.as_str() {
-        "info" => cmd_info(&flags),
-        "evolve" => cmd_evolve(&flags),
-        "library" => cmd_library(&flags),
-        "census" => cmd_census(&flags),
-        "select" => cmd_select(&flags),
-        "fig4" => cmd_fig4(&flags),
-        "table2" => cmd_table2(&flags),
-        "serve" => cmd_serve(&flags),
-        "" | "help" | "--help" | "-h" => {
-            print!("{}", HELP);
-            Ok(())
-        }
-        other => {
-            eprintln!("unknown command `{other}`\n{HELP}");
+    let cli = match parse(COMMANDS, &args) {
+        Ok(cli) => cli,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", render_help("evoapprox", ABOUT, COMMANDS));
             std::process::exit(2);
+        }
+    };
+    let r = match cli.command.as_str() {
+        "info" => cmd_info(&cli),
+        "evolve" => cmd_evolve(&cli),
+        "library" => cmd_library(&cli),
+        "census" => cmd_census(&cli),
+        "select" => cmd_select(&cli),
+        "fig4" => cmd_fig4(&cli),
+        "table2" => cmd_table2(&cli),
+        "serve" => cmd_serve(&cli),
+        _ => {
+            print!("{}", render_help("evoapprox", ABOUT, COMMANDS));
+            Ok(())
         }
     };
     if let Err(e) = r {
@@ -50,49 +158,15 @@ fn main() {
     }
 }
 
-const HELP: &str = "\
-evoapprox — approximate-circuit library + DNN resilience analysis
-commands: info | evolve | library | census | select | fig4 | table2 | serve
-(see rust/src/main.rs docs for flags)
-";
-
-fn parse(args: &[String]) -> (String, HashMap<String, String>) {
-    let cmd = args.first().cloned().unwrap_or_default();
-    let mut flags = HashMap::new();
-    let mut i = 1;
-    while i < args.len() {
-        let a = &args[i];
-        if let Some(key) = a.strip_prefix("--") {
-            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                i += 1;
-                args[i].clone()
-            } else {
-                "true".to_string()
-            };
-            flags.insert(key.to_string(), val);
-        }
-        i += 1;
-    }
-    (cmd, flags)
-}
-
-fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
-    flags
-        .get(key)
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
-}
-
-fn artifacts_dir(flags: &HashMap<String, String>) -> String {
-    flags
-        .get("artifacts")
-        .cloned()
+fn artifacts_dir(cli: &Cli) -> String {
+    cli.get("artifacts")
+        .map(str::to_string)
         .or_else(|| std::env::var("EVOAPPROX_ARTIFACTS").ok())
         .unwrap_or_else(|| "artifacts".to_string())
 }
 
-fn cmd_info(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let dir = artifacts_dir(flags);
+fn cmd_info(cli: &Cli) -> anyhow::Result<()> {
+    let dir = artifacts_dir(cli);
     let m = evoapproxlib::runtime::Manifest::load(&dir)?;
     println!(
         "artifacts: {dir} — {} models, test set n={}, image {:?}",
@@ -123,17 +197,17 @@ fn cmd_info(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_evolve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let w: u32 = flag(flags, "width", 8);
-    let f = if flags.contains_key("adder") {
+fn cmd_evolve(cli: &Cli) -> anyhow::Result<()> {
+    let w: u32 = cli.flag("width", 8u32)?;
+    let f = if cli.has("adder") {
         ArithFn::Add { w }
     } else {
         ArithFn::Mul { w }
     };
-    let metric = Metric::parse(&flag::<String>(flags, "metric", "MAE".into()))
+    let metric = Metric::parse(&cli.flag_str("metric", "MAE"))
         .ok_or_else(|| anyhow::anyhow!("bad --metric"))?;
     let max_out = ((1u128 << f.n_outputs()) - 1) as f64;
-    let emax_frac: f64 = flag(flags, "emax-frac", 0.005);
+    let emax_frac: f64 = cli.flag("emax-frac", 0.005f64)?;
     let e_max = match metric {
         Metric::Er | Metric::Mre | Metric::Wcre => emax_frac,
         Metric::Mse => emax_frac * max_out * max_out,
@@ -142,28 +216,54 @@ fn cmd_evolve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let cfg = EvolveConfig {
         metric,
         e_max,
-        generations: flag(flags, "generations", 20_000),
-        lambda: flag(flags, "lambda", 4),
-        h: flag(flags, "h", 5),
-        seed: flag(flags, "seed", 1),
-        slack: flag(flags, "slack", 16),
+        generations: cli.flag("generations", 20_000u64)?,
+        lambda: cli.flag("lambda", 4u32)?,
+        h: cli.flag("h", 5u32)?,
+        seed: cli.flag("seed", 1u64)?,
+        slack: cli.flag("slack", 16u32)?,
         ..Default::default()
     };
+    let demes: u32 = cli.flag("demes", 1u32)?;
     let model = CostModel::default();
     let seeds = evoapproxlib::library::seeds_for(f);
-    let mut evaluator = if f.exhaustive_feasible() {
-        Evaluator::exhaustive(f)
+    let ctx = if f.exhaustive_feasible() {
+        EvalContext::exhaustive(f)
     } else {
-        Evaluator::sampled(f, 16, cfg.seed)
+        EvalContext::sampled(f, 16, cfg.seed)
     };
-    println!(
-        "evolving {} under {} ≤ {e_max:.4} for {} generations…",
-        f.tag(),
-        metric.name(),
-        cfg.generations
-    );
     let t0 = std::time::Instant::now();
-    let report = evolve(&seeds[0], f, &cfg, &model, &mut evaluator);
+    let report = if demes > 1 {
+        let isl = IslandsConfig {
+            demes,
+            migration_interval: cli.flag("migration-interval", 500u64)?,
+            workers: cli.flag("jobs", default_workers())?,
+        };
+        println!(
+            "evolving {} under {} ≤ {e_max:.4} for {} generations × {demes} demes \
+             (migration every {}, {} workers)…",
+            f.tag(),
+            metric.name(),
+            cfg.generations,
+            isl.migration_interval,
+            isl.workers
+        );
+        evolve_islands(&seeds[0], f, &cfg, &isl, &model, &ctx)
+    } else {
+        if cli.has("jobs") {
+            eprintln!(
+                "note: --jobs only parallelises multi-deme runs; a single (1+λ) \
+                 run is inherently serial — pass --demes N to use workers"
+            );
+        }
+        println!(
+            "evolving {} under {} ≤ {e_max:.4} for {} generations…",
+            f.tag(),
+            metric.name(),
+            cfg.generations
+        );
+        let mut scratch = EvalScratch::new();
+        evolve_with(&seeds[0], f, &cfg, &model, &ctx, &mut scratch)
+    };
     println!(
         "done in {:.1?}: {} evaluations, best cost {:.2} µm² at {} = {:.4} ({} harvested)",
         t0.elapsed(),
@@ -173,7 +273,7 @@ fn cmd_evolve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         report.best_error,
         report.harvest.len()
     );
-    if let Some(out) = flags.get("out") {
+    if let Some(out) = cli.get("out") {
         let mut lib = Library::new();
         for h in &report.harvest {
             lib.insert(evoapproxlib::library::Entry::characterise(
@@ -193,23 +293,38 @@ fn cmd_evolve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_library(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let quick = flags.contains_key("quick");
-    let widths: Vec<u32> = flag::<String>(flags, "widths", "8".into())
+fn cmd_library(cli: &Cli) -> anyhow::Result<()> {
+    let quick = cli.has("quick");
+    // strict parse: a typo'd width must error, not silently shrink the sweep
+    let widths_raw = cli.flag_str("widths", "8");
+    let widths: Vec<u32> = widths_raw
         .split(',')
-        .filter_map(|s| s.parse().ok())
-        .collect();
+        .map(|s| {
+            s.trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid width `{s}` in --widths `{widths_raw}`"))
+        })
+        .collect::<Result<_, _>>()?;
+    if widths.is_empty() {
+        anyhow::bail!("--widths must name at least one operand width");
+    }
+    let jobs: usize = cli.flag("jobs", default_workers())?;
     let model = CostModel::default();
     let mut lib = Library::new();
     for &w in &widths {
         for f in [ArithFn::Mul { w }, ArithFn::Add { w }] {
             let mut cfg = CampaignConfig::quick(f);
             if !quick {
-                cfg.generations = flag(flags, "generations", 10_000);
-                cfg.targets_per_metric = flag(flags, "targets", 5);
+                cfg.generations = 10_000;
+                cfg.targets_per_metric = 5;
             }
-            cfg.seed = flag(flags, "seed", 0x5EED);
-            println!("campaign: {} …", f.tag());
+            // explicit flags always win — `--quick --generations N` must
+            // honour N, not silently keep the quick budget
+            cfg.generations = cli.flag("generations", cfg.generations)?;
+            cfg.targets_per_metric = cli.flag("targets", cfg.targets_per_metric)?;
+            cfg.seed = cli.flag("seed", 0x5EEDu64)?;
+            cfg.jobs = jobs;
+            println!("campaign: {} ({jobs} workers)…", f.tag());
             let added = run_campaign(
                 &mut lib,
                 &cfg,
@@ -236,7 +351,7 @@ fn cmd_library(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             origin,
         ));
     }
-    let out = flag::<String>(flags, "out", "library.json".into());
+    let out = cli.flag_str("out", "library.json");
     lib.save(&out)?;
     println!("library: {} entries → {out}", lib.len());
     Ok(())
@@ -265,8 +380,8 @@ fn origin_from_name(name: &str) -> evoapproxlib::library::Origin {
     }
 }
 
-fn cmd_census(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let lib = Library::load(flag::<String>(flags, "lib", "library.json".into()))?;
+fn cmd_census(cli: &Cli) -> anyhow::Result<()> {
+    let lib = Library::load(cli.flag_str("lib", "library.json"))?;
     let mut t = TextTable::new(&["Circuit", "Bit-width", "# approx. implementations"]);
     for (kind, w, n) in lib.census() {
         t.row(vec![kind, w.to_string(), n.to_string()]);
@@ -275,9 +390,9 @@ fn cmd_census(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_select(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let lib = Library::load(flag::<String>(flags, "lib", "library.json".into()))?;
-    let k = flag(flags, "k", 10);
+fn cmd_select(cli: &Cli) -> anyhow::Result<()> {
+    let lib = Library::load(cli.flag_str("lib", "library.json"))?;
+    let k = cli.flag("k", 10usize)?;
     let sel = evoapproxlib::library::select_diverse(
         &lib,
         ArithFn::Mul { w: 8 },
@@ -302,7 +417,7 @@ fn cmd_select(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
 /// Shared analysis setup: coordinator + multiplier summaries from a library.
 fn analysis_setup(
-    flags: &HashMap<String, String>,
+    cli: &Cli,
     k_per_metric: usize,
     max_multipliers: usize,
 ) -> anyhow::Result<(
@@ -314,10 +429,10 @@ fn analysis_setup(
     use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig};
     use evoapproxlib::resilience::MultiplierSummary;
 
-    let dir = artifacts_dir(flags);
+    let dir = artifacts_dir(cli);
     let (coord, guard) = Coordinator::start(CoordinatorConfig::new(&dir))?;
     let testset = coord.manifest().load_testset(&dir)?;
-    let n_images = flag(flags, "images", 256usize);
+    let n_images = cli.flag("images", 256usize)?;
     let testset = testset.truncated(n_images);
 
     let model = CostModel::default();
@@ -329,7 +444,7 @@ fn analysis_setup(
         evoapproxlib::library::Origin::Seed("wallace".into()),
     );
     let mut sel: Vec<evoapproxlib::library::Entry> = Vec::new();
-    if let Some(libpath) = flags.get("lib") {
+    if let Some(libpath) = cli.get("lib") {
         let lib = Library::load(libpath)?;
         sel = evoapproxlib::library::select_diverse(
             &lib,
@@ -358,13 +473,13 @@ fn analysis_setup(
     Ok((coord, guard, mults, testset))
 }
 
-fn cmd_fig4(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_fig4(cli: &Cli) -> anyhow::Result<()> {
     use evoapproxlib::coordinator::KernelKind;
-    let max_m = flag(flags, "multipliers", 8usize);
-    let (coord, _guard, mults, testset) = analysis_setup(flags, 4, max_m)?;
+    let max_m = cli.flag("multipliers", 8usize)?;
+    let (coord, _guard, mults, testset) = analysis_setup(cli, 4, max_m)?;
     let report = evoapproxlib::resilience::per_layer_campaign(
         &coord,
-        &flag::<String>(flags, "model", "resnet8".into()),
+        &cli.flag_str("model", "resnet8"),
         &mults,
         &testset,
         KernelKind::Jnp,
@@ -395,24 +510,24 @@ fn cmd_fig4(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_table2(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_table2(cli: &Cli) -> anyhow::Result<()> {
     use evoapproxlib::coordinator::KernelKind;
-    let max_m = flag(flags, "multipliers", 28usize);
-    let (coord, _guard, mults, testset) = analysis_setup(flags, 10, max_m)?;
-    let models: Vec<String> = flag::<String>(
-        flags,
-        "models",
-        coord
-            .manifest()
-            .models
-            .iter()
-            .map(|m| m.name.clone())
-            .collect::<Vec<_>>()
-            .join(","),
-    )
-    .split(',')
-    .map(str::to_string)
-    .collect();
+    let max_m = cli.flag("multipliers", 28usize)?;
+    let (coord, _guard, mults, testset) = analysis_setup(cli, 10, max_m)?;
+    let models: Vec<String> = cli
+        .flag_str(
+            "models",
+            &coord
+                .manifest()
+                .models
+                .iter()
+                .map(|m| m.name.clone())
+                .collect::<Vec<_>>()
+                .join(","),
+        )
+        .split(',')
+        .map(str::to_string)
+        .collect();
     let report = evoapproxlib::resilience::whole_network_campaign(
         &coord,
         &models,
@@ -463,16 +578,16 @@ fn cmd_table2(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
     use evoapproxlib::coordinator::batcher::{BatchPolicy, Batcher};
     use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, KernelKind};
     use evoapproxlib::data::{Dataset, DatasetConfig};
     use std::sync::Arc;
     use std::time::Duration;
 
-    let dir = artifacts_dir(flags);
+    let dir = artifacts_dir(cli);
     let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&dir))?;
-    let model = flag::<String>(flags, "model", "resnet8".into());
+    let model = cli.flag_str("model", "resnet8");
     coord.warm(&model, KernelKind::Jnp)?;
     let n_layers = coord
         .manifest()
@@ -485,10 +600,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     ));
     let policy = BatchPolicy {
         max_batch: 64,
-        max_wait: Duration::from_millis(flag(flags, "max-wait-ms", 20)),
+        max_wait: Duration::from_millis(cli.flag("max-wait-ms", 20u64)?),
     };
     let (batcher, guard) = Batcher::spawn(coord.clone(), &model, KernelKind::Jnp, luts, policy)?;
-    let n: usize = flag(flags, "requests", 512);
+    let n: usize = cli.flag("requests", 512usize)?;
     let data = Dataset::generate(&DatasetConfig {
         n,
         ..Default::default()

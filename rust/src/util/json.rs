@@ -344,6 +344,11 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
                     Some(b'b') => s.push('\u{8}'),
                     Some(b'f') => s.push('\u{c}'),
                     Some(b'u') => {
+                        // bounds-checked: a truncated `\uXY` at end of input
+                        // must be a parse error, not a slice panic
+                        if *pos + 5 > b.len() {
+                            return Err("bad \\u escape (truncated)".into());
+                        }
                         let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
                             .map_err(|_| "bad \\u escape")?;
                         let code =
@@ -460,5 +465,113 @@ mod tests {
     fn obj_builder() {
         let v = Json::obj([("x", 1i64.into()), ("y", "s".into())]);
         assert_eq!(v.to_string(), r#"{"x":1,"y":"s"}"#);
+    }
+
+    #[test]
+    fn string_escapes_exhaustive_round_trip() {
+        // every escape class the writer emits plus the reader-only ones
+        let originals = [
+            "plain",
+            "quote\"backslash\\slash/",
+            "ctl\u{1}\u{2}\u{1f}tab\tnl\ncr\r",
+            "backspace\u{8}formfeed\u{c}",
+            "unicode héllo ✓ 你好 €",
+        ];
+        for s in originals {
+            let v = Json::Str(s.to_string());
+            let parsed = Json::parse(&v.to_string()).unwrap();
+            assert_eq!(parsed.as_str(), Some(s), "round trip of {s:?}");
+        }
+        // reader-side escapes the writer never produces
+        assert_eq!(Json::parse(r#""\u0041\u20ac""#).unwrap().as_str(), Some("A€"));
+        assert_eq!(Json::parse(r#""\b\f\/""#).unwrap().as_str(), Some("\u{8}\u{c}/"));
+    }
+
+    #[test]
+    fn exponent_numbers() {
+        for (text, want) in [
+            ("1e3", 1000.0),
+            ("1E3", 1000.0),
+            ("-2.5e-2", -0.025),
+            ("1.5e+2", 150.0),
+            ("0e0", 0.0),
+            ("1e300", 1e300),
+        ] {
+            let v = Json::parse(text).unwrap();
+            assert_eq!(v.as_f64(), Some(want), "{text}");
+            // value survives a write/parse cycle exactly
+            assert_eq!(Json::parse(&v.to_string()).unwrap(), v, "{text}");
+        }
+        // huge magnitudes must not round-trip through the integer printer
+        assert_eq!(Json::parse("1e300").unwrap().to_string(), "1e300");
+    }
+
+    #[test]
+    fn deep_nesting_round_trips() {
+        const DEPTH: usize = 64;
+        let mut text = String::new();
+        for _ in 0..DEPTH {
+            text.push('[');
+        }
+        text.push_str("42");
+        for _ in 0..DEPTH {
+            text.push(']');
+        }
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.to_string(), text);
+        let mut cur = &v;
+        for _ in 0..DEPTH {
+            cur = &cur.as_arr().unwrap()[0];
+        }
+        assert_eq!(cur.as_i64(), Some(42));
+        // deep objects too
+        let obj = "{\"k\":".repeat(DEPTH) + "true" + &"}".repeat(DEPTH);
+        let v = Json::parse(&obj).unwrap();
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn malformed_inputs_error_cleanly() {
+        // every case must return Err — never panic, never accept
+        let bad = [
+            "",                  // empty input
+            "{\"a\"}",           // missing colon
+            "{\"a\":}",          // missing value
+            "{\"a\":1,}",        // trailing comma in object
+            "[1 2]",             // missing comma
+            "[1,]",              // trailing comma in array
+            "{1:2}",             // non-string key
+            "\"\\q\"",           // unknown escape
+            "\"\\u12",           // truncated \u escape at end of input
+            "\"\\uZZZZ\"",       // non-hex \u escape
+            "\"\\ud800\"",       // lone surrogate codepoint
+            "\"open",            // unterminated string
+            "nul",               // truncated literal
+            "tru",               // truncated literal
+            "+",                 // sign without digits
+            "1e",                // dangling exponent
+            "--1",               // double sign
+            "{\"a\":1",          // unterminated object
+            "[1,2",              // unterminated array
+            "12 34",             // trailing garbage
+        ];
+        for case in bad {
+            assert!(Json::parse(case).is_err(), "must reject {case:?}");
+        }
+    }
+
+    #[test]
+    fn req_helpers_report_wrong_types() {
+        let v = Json::parse(r#"{"s":"x","n":1.5,"a":[1],"b":true}"#).unwrap();
+        assert!(v.req_str("n").is_err());
+        assert!(v.req_f64("s").is_err());
+        assert!(v.req_i64("n").is_err(), "1.5 is not an integer");
+        assert!(v.req_arr("b").is_err());
+        assert!(v.req("missing").is_err());
+        assert!(v.req_i64("a").is_err());
+        // non-object lookups are None/Err, not panics
+        let arr = Json::parse("[1]").unwrap();
+        assert!(arr.get("k").is_none());
+        assert!(arr.req("k").is_err());
     }
 }

@@ -1,0 +1,171 @@
+//! Integration: the parallel campaign engine and the CLI layer.
+//!
+//! * `--jobs 1` vs `--jobs 4` must produce byte-identical library JSON
+//!   (the determinism contract of `cgp::campaign`);
+//! * the island model must be worker-count invariant and actually search;
+//! * CLI parsing must reject the malformed inputs the old hand-rolled
+//!   parser silently swallowed.
+
+use evoapproxlib::cgp::metrics::Metric;
+use evoapproxlib::cgp::{evolve_islands, EvalContext, EvolveConfig, IslandsConfig};
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::generators::wallace_multiplier;
+use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::cli::{parse, CliError, CommandSpec, FlagSpec};
+use evoapproxlib::library::{run_campaign, CampaignConfig, Library};
+
+fn args(list: &[&str]) -> Vec<String> {
+    list.iter().map(|s| s.to_string()).collect()
+}
+
+const TEST_FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        name: "generations",
+        value: Some("N"),
+        help: "generations",
+    },
+    FlagSpec {
+        name: "seed",
+        value: Some("N"),
+        help: "rng seed",
+    },
+    FlagSpec {
+        name: "emax-frac",
+        value: Some("F"),
+        help: "error budget",
+    },
+    FlagSpec {
+        name: "adder",
+        value: None,
+        help: "adder target",
+    },
+];
+const TEST_SPECS: &[CommandSpec] = &[CommandSpec {
+    name: "evolve",
+    about: "test command",
+    flags: TEST_FLAGS,
+}];
+
+#[test]
+fn cli_full_flow_with_mixed_flags() {
+    let cli = parse(
+        TEST_SPECS,
+        &args(&[
+            "evolve",
+            "--generations=2500",
+            "--seed",
+            "-7",
+            "--adder",
+            "--emax-frac",
+            "0.01",
+        ]),
+    )
+    .unwrap();
+    assert_eq!(cli.command, "evolve");
+    assert_eq!(cli.flag("generations", 0u64).unwrap(), 2500);
+    assert_eq!(cli.flag("seed", 0i64).unwrap(), -7);
+    assert!(cli.has("adder"));
+    assert_eq!(cli.flag("emax-frac", 0.0f64).unwrap(), 0.01);
+}
+
+#[test]
+fn cli_rejects_what_the_old_parser_swallowed() {
+    // unknown flag (typo) — the old parser would silently run defaults
+    let e = parse(TEST_SPECS, &args(&["evolve", "--generation", "10"])).unwrap_err();
+    assert!(matches!(e, CliError::UnknownFlag { .. }), "{e}");
+    // value-taking flag followed directly by another flag
+    let e = parse(TEST_SPECS, &args(&["evolve", "--seed", "--adder"])).unwrap_err();
+    assert!(matches!(e, CliError::MissingValue { .. }), "{e}");
+    // value-taking flag at end of argv
+    let e = parse(TEST_SPECS, &args(&["evolve", "--generations"])).unwrap_err();
+    assert!(matches!(e, CliError::MissingValue { .. }), "{e}");
+    // unknown command
+    let e = parse(TEST_SPECS, &args(&["evovle"])).unwrap_err();
+    assert!(matches!(e, CliError::UnknownCommand { .. }), "{e}");
+}
+
+fn campaign_json(jobs: usize) -> String {
+    let f = ArithFn::Mul { w: 4 };
+    let mut cfg = CampaignConfig::quick(f);
+    cfg.generations = 400;
+    cfg.targets_per_metric = 2;
+    cfg.metrics = vec![Metric::Mae, Metric::Wce];
+    cfg.jobs = jobs;
+    let model = CostModel::default();
+    let mut lib = Library::new();
+    let added = run_campaign(&mut lib, &cfg, &model, None);
+    assert!(added > 0, "campaign must produce entries");
+    lib.to_json().to_string()
+}
+
+#[test]
+fn campaign_byte_identical_across_jobs() {
+    let serial = campaign_json(1);
+    let four = campaign_json(4);
+    assert_eq!(
+        serial, four,
+        "library JSON must be byte-identical for --jobs 1 vs --jobs 4"
+    );
+}
+
+#[test]
+fn campaign_save_is_byte_stable() {
+    // end-to-end through the file system, as `evoapprox library --out` does
+    let f = ArithFn::Mul { w: 4 };
+    let model = CostModel::default();
+    let dir = std::env::temp_dir().join("evoapprox_campaign_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut paths = Vec::new();
+    for (tag, jobs) in [("a", 1usize), ("b", 3usize)] {
+        let mut cfg = CampaignConfig::quick(f);
+        cfg.generations = 250;
+        cfg.targets_per_metric = 1;
+        cfg.metrics = vec![Metric::Wce];
+        cfg.jobs = jobs;
+        let mut lib = Library::new();
+        run_campaign(&mut lib, &cfg, &model, None);
+        let path = dir.join(format!("lib_{tag}.json"));
+        lib.save(&path).unwrap();
+        paths.push(path);
+    }
+    let a = std::fs::read(&paths[0]).unwrap();
+    let b = std::fs::read(&paths[1]).unwrap();
+    assert_eq!(a, b, "saved library files must be byte-identical");
+    // and the file round-trips back into an equal library
+    let loaded = Library::load(&paths[0]).unwrap();
+    assert!(!loaded.is_empty());
+}
+
+#[test]
+fn islands_worker_invariance_end_to_end() {
+    let f = ArithFn::Mul { w: 4 };
+    let seed = wallace_multiplier(4);
+    let model = CostModel::default();
+    let ctx = EvalContext::exhaustive(f);
+    let cfg = EvolveConfig {
+        metric: Metric::Wce,
+        e_max: 6.0,
+        generations: 600,
+        lambda: 4,
+        h: 3,
+        seed: 7,
+        slack: 8,
+        ..Default::default()
+    };
+    let run = |workers: usize| {
+        let isl = IslandsConfig {
+            demes: 4,
+            migration_interval: 150,
+            workers,
+        };
+        evolve_islands(&seed, f, &cfg, &isl, &model, &ctx)
+    };
+    let one = run(1);
+    let many = run(8);
+    assert_eq!(one.best_cost, many.best_cost);
+    assert_eq!(one.best_error, many.best_error);
+    assert_eq!(one.evaluations, many.evaluations);
+    assert_eq!(one.harvest.len(), many.harvest.len());
+    assert!(one.best.is_some(), "a WCE ≤ 6 window on mul4 is reachable");
+    assert!(one.best_error <= 6.0);
+}

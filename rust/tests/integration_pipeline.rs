@@ -37,6 +37,7 @@ fn evolved_multipliers_run_through_accelerator() {
     let mut cfg = CampaignConfig::quick(f);
     cfg.generations = 500;
     cfg.targets_per_metric = 2;
+    cfg.jobs = evoapproxlib::cgp::default_workers();
     run_campaign(&mut lib, &cfg, &model, None);
     let sel = select_diverse(&lib, f, &SELECTION_METRICS, 3);
     assert!(!sel.is_empty());

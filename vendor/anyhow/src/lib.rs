@@ -1,0 +1,213 @@
+//! Offline, dependency-free subset of the `anyhow` error-handling crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides exactly the surface the workspace uses: [`Error`], [`Result`],
+//! the [`anyhow!`] / [`bail!`] macros and the [`Context`] extension trait
+//! for `Result` and `Option`. Semantics mirror the real crate where it
+//! matters here:
+//!
+//! * `{}` prints the outermost message only, `{:#}` prints the whole
+//!   context chain joined by `": "` (the format the CLI relies on);
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`,
+//!   capturing its `source()` chain;
+//! * `context`/`with_context` wrap an error (or a `None`) with an outer
+//!   message.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error` (that is what makes the blanket `From` impl legal).
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message-chain error: `stack[0]` is the outermost (most recent)
+/// context, deeper entries are the wrapped causes.
+pub struct Error {
+    stack: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display + Send + Sync + 'static>(message: M) -> Error {
+        Error {
+            stack: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display + Send + Sync + 'static>(mut self, context: C) -> Error {
+        self.stack.insert(0, context.to_string());
+        self
+    }
+
+    /// The context/cause messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.stack.iter().map(String::as_str)
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        self.stack.first().map(String::as_str).unwrap_or("")
+    }
+
+    fn write_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, msg) in self.stack.iter().enumerate() {
+            if i > 0 {
+                write!(f, ": ")?;
+            }
+            write!(f, "{msg}")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            self.write_chain(f)
+        } else {
+            write!(f, "{}", self.root_message())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.write_chain(f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut stack = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            stack.push(s.to_string());
+            source = s.source();
+        }
+        Error { stack }
+    }
+}
+
+/// Extension trait adding `context`/`with_context` to `Result` and
+/// `Option` (the subset of the real `Context` trait used here).
+pub trait Context<T> {
+    /// Wrap the error case with a context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error case with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("loading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: missing thing");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        let e = none.context("no value").unwrap_err();
+        assert_eq!(format!("{e}"), "no value");
+        let name = "x";
+        let e = anyhow!("bad flag `{name}`");
+        assert_eq!(format!("{e}"), "bad flag `x`");
+        let e = anyhow!("{} and {}", 1, 2);
+        assert_eq!(format!("{e}"), "1 and 2");
+    }
+
+    #[test]
+    fn question_mark_conversion() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+    }
+
+    #[test]
+    fn bail_early_return() {
+        fn inner(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("nope: {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(inner(false).unwrap(), 1);
+        assert_eq!(format!("{}", inner(true).unwrap_err()), "nope: 7");
+    }
+
+    #[test]
+    fn error_msg_as_fn_reference() {
+        let r: std::result::Result<(), String> = Err("boom".to_string());
+        let e = r.map_err(Error::msg).unwrap_err();
+        assert_eq!(format!("{e}"), "boom");
+    }
+}
