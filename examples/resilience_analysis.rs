@@ -9,7 +9,8 @@
 //!   5. per-layer (Fig. 4) and whole-network (Table II) resilience reports
 //!      come back with accuracy vs multiplier-power trade-offs.
 //!
-//! Requires `make artifacts`. Run:
+//! Uses the PJRT backend when artifacts + real bindings exist, the native
+//! pure-Rust backend (synthetic models + split) everywhere else. Run:
 //! `cargo run --release --example resilience_analysis [-- --quick]`
 
 use std::time::Instant;
@@ -88,17 +89,29 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- 3+4. coordinator + campaigns ------------------------------------
+    // Auto backend: PJRT when artifacts + real bindings exist, the native
+    // pure-Rust engine (synthetic models/split) everywhere else.
     let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&artifacts))?;
-    let testset = coord.manifest().load_testset(&artifacts)?;
-    let testset = testset.truncated(if quick { 96 } else { 256 });
+    let n_images = if quick { 96 } else { 256 };
+    // synthetic split only stands in for the native-fallback models; on a
+    // trained PJRT build a broken test-set export must fail loudly
+    let testset = match coord.manifest().load_testset(&artifacts) {
+        Ok(ts) => ts.truncated(n_images),
+        Err(_) if coord.backend() == evoapproxlib::coordinator::Backend::Native => {
+            evoapproxlib::runtime::TestSet::synthetic(n_images)
+        }
+        Err(e) => return Err(e),
+    };
+    let jobs = evoapproxlib::cgp::default_workers();
     println!(
-        "[3] coordinator up: {} models, evaluating {} images",
+        "[3] coordinator up ({} backend): {} models, evaluating {} images on {jobs} jobs",
+        coord.backend().as_str(),
         coord.manifest().models.len(),
         testset.n
     );
 
     let t0 = Instant::now();
-    let fig4 = per_layer_campaign(&coord, "resnet8", &mults, &testset, KernelKind::Jnp)?;
+    let fig4 = per_layer_campaign(&coord, "resnet8", &mults, &testset, KernelKind::Jnp, jobs)?;
     println!(
         "[4] Fig.4 per-layer campaign: {} points in {:.1?} (reference acc {:.3})",
         fig4.points.len(),
@@ -136,7 +149,8 @@ fn main() -> anyhow::Result<()> {
             .collect()
     };
     let t0 = Instant::now();
-    let table2 = whole_network_campaign(&coord, &models, &mults[1..], &testset, KernelKind::Jnp)?;
+    let table2 =
+        whole_network_campaign(&coord, &models, &mults[1..], &testset, KernelKind::Jnp, jobs)?;
     println!("[5] Table II campaign in {:.1?}:", t0.elapsed());
     let mut header = vec!["Multiplier".to_string(), "Power%".into(), "MAE%".into()];
     header.extend(models.iter().cloned());

@@ -1,9 +1,10 @@
 //! Serving example: classify a stream of single-image requests through the
-//! dynamic batcher in front of the PJRT executor — the accelerator "in
+//! dynamic batcher in front of the coordinator — the accelerator "in
 //! production" with an approximate multiplier installed, reporting
 //! latency/throughput and the power the approximation buys.
 //!
-//! Requires `make artifacts`. Run:
+//! Uses the PJRT backend when artifacts + real bindings exist, the native
+//! pure-Rust backend (synthetic model + split) everywhere else. Run:
 //! `cargo run --release --example serve_inference [-- --quick]`
 
 use std::sync::Arc;
@@ -46,6 +47,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&artifacts))?;
+    println!("serving on the {} backend", coord.backend().as_str());
     let model_name = "resnet8";
     coord.warm(model_name, KernelKind::Jnp)?;
     let n_layers = coord
@@ -66,8 +68,15 @@ fn main() -> anyhow::Result<()> {
         },
     )?;
 
-    // request stream from the workload generator (open-loop burst)
-    let testset = coord.manifest().load_testset(&artifacts)?;
+    // request stream from the workload generator (open-loop burst);
+    // synthetic split only stands in for the native-fallback models
+    let testset = match coord.manifest().load_testset(&artifacts) {
+        Ok(ts) => ts,
+        Err(_) if coord.backend() == evoapproxlib::coordinator::Backend::Native => {
+            evoapproxlib::runtime::TestSet::synthetic(512)
+        }
+        Err(e) => return Err(e),
+    };
     let il = testset.image_len;
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(n_requests);

@@ -10,10 +10,21 @@ Outputs in ``--out-dir`` (default ``../artifacts``):
   /opt/xla-example/README.md.
 * ``resnet8_b{B}_pallas.hlo.txt`` — same graph routed through the L1 Pallas
   kernel (interpret-lowered) for the kernel-path artifact + §Perf compare.
+* ``resnet{D}.qweights.bin`` — the quantised weights as a flat binary
+  (format below) so the pure-Rust native backend can run the identical
+  model with no PJRT and no HLO parsing.
 * ``test_images.f32`` / ``test_labels.u8`` — the canonical evaluation split.
 * ``manifest.json`` — model inventory: per-layer (stage, block, conv,
   n_mults) for the accelerator power model, float/q8 golden accuracies,
-  artifact paths, shapes.
+  artifact paths (incl. ``qweights``), shapes.
+
+qweights binary format (all little-endian, version 1):
+
+    b"EVOQ" u32(version=1) u32(n_layers)
+    per layer: u32 kh kw cin cout stride; f32 s_w; u32 z_w; f32 s_a; u32 z_a;
+               u8  w_q[kh*kw*cin*cout]  (row-major [kh,kw,cin,cout]);
+               f32 b[cout]
+    u32 feat n_classes; f32 dense_w[feat*n_classes]; f32 dense_b[n_classes]
 """
 
 from __future__ import annotations
@@ -21,6 +32,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import struct
 import time
 
 import jax
@@ -70,6 +82,27 @@ def evaluate_quant(qmodel, spec, data, use_pallas=False, batch=128):
     return correct / images.shape[0]
 
 
+def dump_qweights(qmodel, path: str) -> None:
+    """Write the quantised model as the native backend's binary artifact
+    (format in the module docstring)."""
+    layers = qmodel["layers"]
+    with open(path, "wb") as f:
+        f.write(b"EVOQ")
+        f.write(struct.pack("<II", 1, len(layers)))
+        for q in layers:
+            kh, kw, cin, cout = q["w_q"].shape
+            f.write(struct.pack("<5I", kh, kw, cin, cout, int(q["stride"])))
+            f.write(struct.pack("<fIfI",
+                                float(q["s_w"]), int(q["z_w"]),
+                                float(q["s_a"]), int(q["z_a"])))
+            np.asarray(q["w_q"], np.uint8).tofile(f)
+            np.asarray(q["b"], "<f4").tofile(f)
+        dw = np.asarray(qmodel["dense_w"], "<f4")
+        f.write(struct.pack("<II", dw.shape[0], dw.shape[1]))
+        dw.tofile(f)
+        np.asarray(qmodel["dense_b"], "<f4").tofile(f)
+
+
 def build(args) -> None:
     os.makedirs(args.out_dir, exist_ok=True)
     depths = [int(d) for d in args.depths.split(",")]
@@ -115,6 +148,10 @@ def build(args) -> None:
             arts.append(dict(path=name, batch=batch,
                              kernel="pallas" if use_pallas else "jnp"))
 
+        qw_name = f"resnet{depth}.qweights.bin"
+        dump_qweights(qmodel, os.path.join(args.out_dir, qw_name))
+        print(f"[aot]   wrote {qw_name} (native-backend weights)", flush=True)
+
         counts = M.layer_mult_counts(spec, D.IMAGE_SIZE)
         layers = [
             dict(index=i, stage=c["stage"], block=c["block"], conv=c["conv"],
@@ -126,7 +163,7 @@ def build(args) -> None:
             name=f"resnet{depth}", depth=depth, width=args.width,
             n_conv_layers=len(spec["conv_layers"]),
             float_acc=float_acc, q8_acc=q8_acc,
-            artifacts=arts, layers=layers,
+            artifacts=arts, layers=layers, qweights=qw_name,
             train_steps=history[-1]["step"] + 1 if history else 0,
         ))
 

@@ -1,0 +1,100 @@
+"""Pin the ref.py oracle: generate the golden-logits fixture the Rust
+native backend is tested against (``rust/tests/fixtures/native_fixture.json``).
+
+Builds a small untrained-but-calibrated quantised ResNet through the real
+production pipeline (init → fold → calibrate → quantise), runs the
+``forward_quant``/ref.py path under three LUT configurations, and dumps the
+whole quantised model + inputs + expected logits as JSON. Run once and
+commit the output; CI then verifies the pure-Rust engine against it with
+no Python (or JAX) in the loop:
+
+    python -m compile.make_fixture [--out ../rust/tests/fixtures/native_fixture.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+from . import train as T
+
+DEPTH = 8
+WIDTH = 4
+N_IMAGES = 2
+TRUNC_KEEP = 6  # mul8u_trunc6 semantics: (a & ~3) * (w & ~3)
+
+
+def trunc_lut(keep: int) -> np.ndarray:
+    mask = 0xFF & ~((1 << (8 - keep)) - 1)
+    a = np.arange(256, dtype=np.int32) & mask
+    return (a[:, None] * a[None, :]).reshape(-1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "..",
+        "rust", "tests", "fixtures", "native_fixture.json"))
+    args = ap.parse_args()
+
+    spec = M.resnet_spec(DEPTH, WIDTH)
+    params, state = M.init_params(jax.random.PRNGKey(7), spec)
+    calib_images, calib_labels = D.make_dataset(64, seed=0xCA11B)
+    acts = T.calibration_activations(params, state, spec, (calib_images, calib_labels))
+    folded, dense = M.fold_bn(params, state, spec)
+    qmodel = M.quantize_model(folded, dense, spec, acts)
+
+    images, _ = D.make_dataset(N_IMAGES, seed=0xF1C5)
+    n_layers = len(spec["conv_layers"])
+    exact = np.asarray(M.exact_luts(n_layers))
+    trunc = np.broadcast_to(trunc_lut(TRUNC_KEEP)[None, :], exact.shape).copy()
+    layer2 = exact.copy()
+    layer2[2] = trunc_lut(TRUNC_KEEP)
+
+    fwd = jax.jit(lambda x, l: M.forward_quant(qmodel, spec, x, l))
+    x = jnp.asarray(images)
+    logits = {
+        "logits_exact": np.asarray(fwd(x, jnp.asarray(exact))),
+        "logits_trunc": np.asarray(fwd(x, jnp.asarray(trunc))),
+        "logits_layer2": np.asarray(fwd(x, jnp.asarray(layer2))),
+    }
+
+    fixture = dict(
+        format="evoapprox-native-fixture-v1",
+        depth=DEPTH, width=WIDTH,
+        image=[D.IMAGE_SIZE, D.IMAGE_SIZE, D.N_CHANNELS],
+        n_classes=D.N_CLASSES,
+        trunc_keep=TRUNC_KEEP,
+        layers=[
+            dict(
+                kh=int(q["w_q"].shape[0]), kw=int(q["w_q"].shape[1]),
+                cin=int(q["w_q"].shape[2]), cout=int(q["w_q"].shape[3]),
+                stride=int(q["stride"]),
+                s_w=float(q["s_w"]), z_w=int(q["z_w"]),
+                s_a=float(q["s_a"]), z_a=int(q["z_a"]),
+                w_q=np.asarray(q["w_q"], np.int32).reshape(-1).tolist(),
+                b=[float(v) for v in np.asarray(q["b"], np.float32)],
+            )
+            for q in qmodel["layers"]
+        ],
+        dense_w=[float(v) for v in np.asarray(qmodel["dense_w"], np.float32).reshape(-1)],
+        dense_b=[float(v) for v in np.asarray(qmodel["dense_b"], np.float32)],
+        images=[float(v) for v in np.asarray(images, np.float32).reshape(-1)],
+        **{k: [float(x) for x in v.reshape(-1)] for k, v in logits.items()},
+    )
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(fixture, f)
+    print(f"wrote {args.out} "
+          f"({os.path.getsize(args.out) / 1024:.0f} KiB, {n_layers} layers)")
+
+
+if __name__ == "__main__":
+    main()

@@ -189,9 +189,6 @@ fn batcher_loop(
             .map(|p| p.enqueued.elapsed() >= policy.max_wait)
             .unwrap_or(false);
         if queue.len() >= policy.max_batch || (deadline_hit && !queue.is_empty()) {
-            if queue.len() >= policy.max_batch {
-                stats.full_batches += 1;
-            }
             dispatch(&coord, &model, kernel, &luts, &mut queue, image_len, policy.max_batch, &mut stats, &mut occupancy_sum);
         }
     }
@@ -213,28 +210,36 @@ fn dispatch(
     stats: &mut BatcherStats,
     occupancy_sum: &mut f64,
 ) {
-    if queue.is_empty() {
-        return;
-    }
-    let take: Vec<Pending> = queue.drain(..).collect();
-    let mut images = Vec::with_capacity(take.len() * image_len);
-    for p in &take {
-        images.extend_from_slice(&p.image);
-    }
-    let preds = coord.predict(model, kernel, Arc::new(images), luts.clone());
-    stats.batches += 1;
-    stats.requests += take.len() as u64;
-    *occupancy_sum += take.len() as f64 / max_batch.max(1) as f64;
-    match preds {
-        Ok(preds) => {
-            for (p, pred) in take.into_iter().zip(preds) {
-                let _ = p.reply.send(Ok(pred));
-            }
+    // Never hand the engine more than `max_batch` requests at once: drain
+    // in chunks and re-loop for the remainder, so occupancy stays ≤ 1 and
+    // full-batch accounting stays truthful even when the queue has grown
+    // past the policy (e.g. a backlog drained on sender disconnect).
+    let max_batch = max_batch.max(1);
+    while !queue.is_empty() {
+        let take_n = queue.len().min(max_batch);
+        let take: Vec<Pending> = queue.drain(..take_n).collect();
+        if take.len() == max_batch {
+            stats.full_batches += 1;
         }
-        Err(e) => {
-            let msg = format!("{e:#}");
-            for p in take {
-                let _ = p.reply.send(Err(anyhow!("{msg}")));
+        let mut images = Vec::with_capacity(take.len() * image_len);
+        for p in &take {
+            images.extend_from_slice(&p.image);
+        }
+        let preds = coord.predict(model, kernel, Arc::new(images), luts.clone());
+        stats.batches += 1;
+        stats.requests += take.len() as u64;
+        *occupancy_sum += take.len() as f64 / max_batch as f64;
+        match preds {
+            Ok(preds) => {
+                for (p, pred) in take.into_iter().zip(preds) {
+                    let _ = p.reply.send(Ok(pred));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for p in take {
+                    let _ = p.reply.send(Err(anyhow!("{msg}")));
+                }
             }
         }
     }
@@ -243,11 +248,61 @@ fn dispatch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::runtime::{broadcast_lut, exact_lut};
 
     #[test]
     fn policy_defaults() {
         let p = BatchPolicy::default();
         assert_eq!(p.max_batch, 64);
         assert!(p.max_wait > Duration::ZERO);
+    }
+
+    /// An over-full queue must be dispatched in `max_batch` chunks: the old
+    /// `drain(..)` pushed occupancy past 1.0 and undercounted full batches.
+    #[test]
+    fn dispatch_chunks_at_max_batch() {
+        let dir = std::env::temp_dir().join("evoapprox_batcher_no_artifacts");
+        let (coord, _guard) = Coordinator::start(CoordinatorConfig::native(dir)).unwrap();
+        let meta = coord.manifest().model("resnet8").unwrap();
+        let (h, w, c) = meta.image_dims;
+        let image_len = h * w * c;
+        let luts = Arc::new(broadcast_lut(&exact_lut(), meta.n_conv_layers));
+        let max_batch = 4usize;
+        let n = 2 * max_batch + 1; // forces 2 full chunks + 1 remainder
+        let mut queue = Vec::new();
+        let mut replies = Vec::new();
+        for _ in 0..n {
+            let (rtx, rrx) = channel();
+            queue.push(Pending {
+                image: vec![0.25; image_len],
+                reply: rtx,
+                enqueued: Instant::now(),
+            });
+            replies.push(rrx);
+        }
+        let mut stats = BatcherStats::default();
+        let mut occupancy_sum = 0.0;
+        dispatch(
+            &coord,
+            "resnet8",
+            KernelKind::Jnp,
+            &luts,
+            &mut queue,
+            image_len,
+            max_batch,
+            &mut stats,
+            &mut occupancy_sum,
+        );
+        assert!(queue.is_empty());
+        assert_eq!(stats.batches, 3);
+        assert_eq!(stats.full_batches, 2);
+        assert_eq!(stats.requests, n as u64);
+        let mean = occupancy_sum / stats.batches as f64;
+        assert!(mean <= 1.0, "mean occupancy {mean} must not exceed 1.0");
+        for rx in replies {
+            assert!(rx.recv().unwrap().is_ok(), "every request must be answered");
+        }
+        coord.shutdown();
     }
 }

@@ -1,11 +1,18 @@
-//! L3 coordinator: the process that owns all PJRT state and schedules work
-//! onto it.
+//! L3 coordinator: the process-wide scheduler that owns all engine state
+//! and routes inference jobs onto the selected backend.
 //!
-//! PJRT wrapper types are `!Send`, so a single *executor thread* owns the
-//! client and every compiled engine; the rest of the process talks to it
-//! through channels (a synchronous actor). On the single-core testbed this
-//! is also the right performance shape: one execution stream, zero
-//! contention, engines compiled once and cached.
+//! Two backends sit behind one job API (see [`Backend`]):
+//!
+//! * **PJRT** — wrapper types are `!Send`, so a single *executor thread*
+//!   owns the client and every compiled engine; the rest of the process
+//!   talks to it through channels (a synchronous actor). One execution
+//!   stream, zero contention, engines compiled once and cached.
+//! * **Native** — [`crate::runtime::NativeEngine`] is `Send + Sync`, so
+//!   jobs execute inline on the calling thread against a shared engine
+//!   cache. This is what lets the resilience campaigns fan their
+//!   (multiplier × layer) grids across the `cgp::campaign` job pool with
+//!   real parallelism — and what makes the whole stack run on machines
+//!   with no PJRT and no artifacts at all.
 //!
 //! Layers on top:
 //! * [`Coordinator`] — synchronous job API (`predict`, `logits`,
@@ -22,13 +29,13 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::runtime::{InferenceEngine, Manifest, PjrtRuntime};
+use crate::runtime::{native, EngineBackend, InferenceEngine, Manifest, NativeEngine, PjrtRuntime};
 
 pub use metrics::{Metrics, MetricsSnapshot};
 
@@ -50,7 +57,44 @@ impl KernelKind {
     }
 }
 
-/// A request to the executor actor.
+/// Which inference backend the coordinator schedules onto. The native
+/// backend has a single formulation, so [`KernelKind`] is ignored there.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// PJRT when artifacts + a working client exist, native otherwise.
+    #[default]
+    Auto,
+    /// Pure-Rust LUT inference (quantized-weights artifact or the seeded
+    /// synthetic fallback model) — runs everywhere.
+    Native,
+    /// AOT-compiled HLO executed through PJRT (requires artifacts and the
+    /// real `xla` bindings).
+    Pjrt,
+}
+
+impl Backend {
+    /// Parse a CLI value.
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "auto" => Some(Backend::Auto),
+            "native" => Some(Backend::Native),
+            "pjrt" => Some(Backend::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// CLI name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Backend::Auto => "auto",
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// A request to the executor actor (PJRT backend only — native jobs run
+/// inline on the calling thread).
 enum Request {
     Logits {
         model: String,
@@ -80,50 +124,113 @@ enum Request {
 /// Configuration of a coordinator instance.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Artifacts directory (must contain `manifest.json`).
+    /// Artifacts directory (may be absent for the native backend, which
+    /// then serves the synthetic model family).
     pub artifacts_dir: PathBuf,
+    /// Backend selection policy.
+    pub backend: Backend,
 }
 
 impl CoordinatorConfig {
-    /// Default config rooted at `dir`.
+    /// Default config rooted at `dir` (backend auto-detected).
     pub fn new(dir: impl Into<PathBuf>) -> Self {
         CoordinatorConfig {
             artifacts_dir: dir.into(),
+            backend: Backend::Auto,
         }
+    }
+
+    /// Force a backend.
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Native backend rooted at `dir` (qweights artifacts when present,
+    /// synthetic models otherwise).
+    pub fn native(dir: impl Into<PathBuf>) -> Self {
+        CoordinatorConfig::new(dir).with_backend(Backend::Native)
     }
 }
 
-/// Handle to the executor actor. Cloneable (channel sender + shared
-/// metrics); `Send`, unlike the PJRT state it fronts.
+/// Handle to the coordinator. Cloneable (channel sender + shared caches);
+/// `Send + Sync`, unlike the PJRT state it fronts.
 #[derive(Clone)]
 pub struct Coordinator {
     tx: Sender<Request>,
     metrics: Arc<Metrics>,
     manifest: Arc<Manifest>,
+    backend: Backend,
+    artifacts_dir: Arc<PathBuf>,
+    natives: Arc<Mutex<HashMap<String, Arc<NativeEngine>>>>,
 }
 
 impl Coordinator {
-    /// Start the executor thread: loads the manifest eagerly (fail fast) and
-    /// compiles engines lazily, caching per (model, kernel).
+    /// Start the coordinator: resolves the backend, loads the manifest
+    /// eagerly (fail fast; the native backend synthesises one when no
+    /// artifacts exist) and spawns the executor thread. Engines compile/
+    /// build lazily, cached per (model, kernel).
     pub fn start(cfg: CoordinatorConfig) -> Result<(Coordinator, CoordinatorGuard)> {
-        let manifest = Arc::new(Manifest::load(&cfg.artifacts_dir)?);
+        let have_artifacts = cfg.artifacts_dir.join("manifest.json").exists();
+        let backend = match cfg.backend {
+            Backend::Pjrt => {
+                if !have_artifacts {
+                    bail!(
+                        "backend `pjrt` needs artifacts at {} (run `make artifacts`)",
+                        cfg.artifacts_dir.display()
+                    );
+                }
+                Backend::Pjrt
+            }
+            Backend::Native => Backend::Native,
+            Backend::Auto => {
+                // PJRT only when both the artifacts and a working client
+                // exist. Probing means creating a CPU client (the stub
+                // fails instantly, the real bindings pay full XLA init),
+                // so cache the verdict process-wide: repeated starts —
+                // every test, bench iteration and campaign — probe once.
+                static PJRT_AVAILABLE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+                // short-circuit: without artifacts the probe's verdict
+                // cannot matter, so don't pay XLA client init to get it
+                if have_artifacts
+                    && *PJRT_AVAILABLE.get_or_init(|| PjrtRuntime::cpu().is_ok())
+                {
+                    Backend::Pjrt
+                } else {
+                    Backend::Native
+                }
+            }
+        };
+        let manifest = if have_artifacts {
+            Arc::new(Manifest::load(&cfg.artifacts_dir)?)
+        } else {
+            Arc::new(native::synthetic_manifest())
+        };
         let metrics = Arc::new(Metrics::default());
         let (tx, rx) = channel::<Request>();
         let thread_manifest = manifest.clone();
         let thread_metrics = metrics.clone();
         let dir = cfg.artifacts_dir.clone();
+        // The executor thread exists on BOTH backends (on native it only
+        // ever sees Shutdown): one uniform guard/shutdown lifecycle, and
+        // the guard-deadlock regression test exercises a live executor
+        // even on machines where PJRT never initialises. It holds no PJRT
+        // state until the first PJRT job (lazy init).
         let handle = std::thread::Builder::new()
-            .name("pjrt-executor".into())
+            .name("coordinator-executor".into())
             .spawn(move || executor_loop(rx, dir, thread_manifest, thread_metrics))
             .context("spawning executor thread")?;
         Ok((
             Coordinator {
-                tx,
+                tx: tx.clone(),
                 metrics,
                 manifest,
+                backend,
+                artifacts_dir: Arc::new(cfg.artifacts_dir),
+                natives: Arc::new(Mutex::new(HashMap::new())),
             },
             CoordinatorGuard {
-                tx2: None,
+                tx: Some(tx),
                 handle: Some(handle),
             },
         ))
@@ -134,13 +241,63 @@ impl Coordinator {
         &self.manifest
     }
 
+    /// The resolved backend (never `Auto`).
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
     /// Metrics snapshot.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
 
-    /// Pre-compile a model's engine.
+    /// Fetch (building on first use) the shared native engine for `model`.
+    fn native_engine(&self, model: &str) -> Result<Arc<NativeEngine>> {
+        let mut cache = self.natives.lock().expect("native engine cache poisoned");
+        if let Some(e) = cache.get(model) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .model(model)
+            .ok_or_else(|| anyhow!("unknown model `{model}`"))?;
+        let engine = Arc::new(NativeEngine::for_model(self.artifacts_dir.as_ref(), meta)?);
+        cache.insert(model.to_string(), engine.clone());
+        Ok(engine)
+    }
+
+    /// Run one native job inline on the calling thread, with the same
+    /// metrics accounting as the executor path.
+    fn native_job<T>(
+        &self,
+        model: &str,
+        f: impl FnOnce(&NativeEngine) -> Result<(T, u64 /* images */, u64 /* batches */)>,
+    ) -> Result<T> {
+        let started = Instant::now();
+        self.metrics.queue_wait.record(std::time::Duration::ZERO);
+        let result = self.native_engine(model).and_then(|engine| {
+            let t0 = Instant::now();
+            let out = f(&engine);
+            self.metrics.execute_time.record(t0.elapsed());
+            out
+        });
+        self.metrics.jobs.fetch_add(1, Ordering::Relaxed);
+        if result.is_err() {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        self.metrics.job_latency.record(started.elapsed());
+        result.map(|(out, images, batches)| {
+            self.metrics.images.fetch_add(images, Ordering::Relaxed);
+            self.metrics.batches.fetch_add(batches, Ordering::Relaxed);
+            out
+        })
+    }
+
+    /// Pre-compile (or pre-build) a model's engine.
     pub fn warm(&self, model: &str, kernel: KernelKind) -> Result<()> {
+        if self.backend == Backend::Native {
+            return self.native_engine(model).map(|_| ());
+        }
         let (rtx, rrx) = channel();
         self.tx
             .send(Request::Warm {
@@ -160,6 +317,12 @@ impl Coordinator {
         images: Arc<Vec<f32>>,
         luts: Arc<Vec<i32>>,
     ) -> Result<Vec<f32>> {
+        if self.backend == Backend::Native {
+            return self.native_job(model, |engine| {
+                let out = engine.run(&images, &luts)?;
+                Ok((out, engine.batch() as u64, 1))
+            });
+        }
         let (rtx, rrx) = channel();
         self.tx
             .send(Request::Logits {
@@ -174,8 +337,8 @@ impl Coordinator {
         rrx.recv().map_err(|_| anyhow!("executor gone"))?
     }
 
-    /// Argmax predictions for an arbitrary number of images (the executor
-    /// splits/pads batches internally).
+    /// Argmax predictions for an arbitrary number of images (batches are
+    /// split/padded internally).
     pub fn predict(
         &self,
         model: &str,
@@ -183,6 +346,19 @@ impl Coordinator {
         images: Arc<Vec<f32>>,
         luts: Arc<Vec<i32>>,
     ) -> Result<Vec<u8>> {
+        if self.backend == Backend::Native {
+            return self.native_job(model, |engine| {
+                let il = engine.image_len();
+                if il == 0 || images.len() % il != 0 {
+                    bail!("image buffer not a multiple of image size");
+                }
+                let n = images.len() / il;
+                // the native predict_all runs the request as ONE forward
+                // pass (no chunk-and-pad), so that is one batch
+                let preds = engine.predict_all(&images, &luts)?;
+                Ok((preds, n as u64, 1))
+            });
+        }
         let (rtx, rrx) = channel();
         self.tx
             .send(Request::Predict {
@@ -220,15 +396,20 @@ impl Coordinator {
     }
 }
 
-/// Joins the executor thread on drop (after sending shutdown).
+/// Stops the executor thread on drop: sends `Shutdown` through its own
+/// sender, then joins. Holding a real sender (not `None`) is load-bearing —
+/// without it, dropping the guard while any [`Coordinator`] clone was
+/// still alive would join a thread blocked forever in `rx.recv()`.
 pub struct CoordinatorGuard {
-    tx2: Option<Sender<Request>>,
+    tx: Option<Sender<Request>>,
     handle: Option<JoinHandle<()>>,
 }
 
 impl Drop for CoordinatorGuard {
     fn drop(&mut self) {
-        drop(self.tx2.take());
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Request::Shutdown);
+        }
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -241,23 +422,25 @@ fn executor_loop(
     manifest: Arc<Manifest>,
     metrics: Arc<Metrics>,
 ) {
-    let runtime = match PjrtRuntime::cpu() {
-        Ok(r) => r,
-        Err(e) => {
-            eprintln!("executor: PJRT init failed: {e:#}");
-            return;
-        }
-    };
+    // PJRT init is lazy: on the native backend (or before the first PJRT
+    // job) this thread holds no client at all, and an init failure is a
+    // per-request error instead of a dead executor.
+    let mut runtime: Option<PjrtRuntime> = None;
     let mut engines: HashMap<(String, KernelKind), InferenceEngine> = HashMap::new();
 
     let mut get_engine = |model: &str,
                           kernel: KernelKind,
+                          runtime: &mut Option<PjrtRuntime>,
                           engines: &mut HashMap<(String, KernelKind), InferenceEngine>|
      -> Result<()> {
         let key = (model.to_string(), kernel);
         if engines.contains_key(&key) {
             return Ok(());
         }
+        if runtime.is_none() {
+            *runtime = Some(PjrtRuntime::cpu()?);
+        }
+        let rt = runtime.as_ref().expect("runtime initialised above");
         let meta = manifest
             .model(model)
             .ok_or_else(|| anyhow!("unknown model `{model}`"))?;
@@ -267,7 +450,7 @@ fn executor_loop(
             .filter(|a| a.kernel == kernel.as_str())
             .max_by_key(|a| a.batch)
             .ok_or_else(|| anyhow!("model `{model}` has no `{}` artifact", kernel.as_str()))?;
-        let engine = runtime.load_model(&dir, meta, artifact)?;
+        let engine = rt.load_model(&dir, meta, artifact)?;
         engines.insert(key, engine);
         Ok(())
     };
@@ -280,7 +463,7 @@ fn executor_loop(
                 kernel,
                 reply,
             } => {
-                let r = get_engine(&model, kernel, &mut engines);
+                let r = get_engine(&model, kernel, &mut runtime, &mut engines);
                 let _ = reply.send(r);
             }
             Request::Logits {
@@ -293,17 +476,18 @@ fn executor_loop(
             } => {
                 metrics.queue_wait.record(enqueued.elapsed());
                 let started = Instant::now();
-                let result = get_engine(&model, kernel, &mut engines).and_then(|()| {
-                    let engine = &engines[&(model.clone(), kernel)];
-                    let t0 = Instant::now();
-                    let out = engine.run(&images, &luts);
-                    metrics.execute_time.record(t0.elapsed());
-                    metrics.batches.fetch_add(1, Ordering::Relaxed);
-                    metrics
-                        .images
-                        .fetch_add(engine.batch as u64, Ordering::Relaxed);
-                    out
-                });
+                let result =
+                    get_engine(&model, kernel, &mut runtime, &mut engines).and_then(|()| {
+                        let engine = &engines[&(model.clone(), kernel)];
+                        let t0 = Instant::now();
+                        let out = engine.run(&images, &luts);
+                        metrics.execute_time.record(t0.elapsed());
+                        metrics.batches.fetch_add(1, Ordering::Relaxed);
+                        metrics
+                            .images
+                            .fetch_add(engine.batch as u64, Ordering::Relaxed);
+                        out
+                    });
                 metrics.jobs.fetch_add(1, Ordering::Relaxed);
                 if result.is_err() {
                     metrics.errors.fetch_add(1, Ordering::Relaxed);
@@ -321,24 +505,25 @@ fn executor_loop(
             } => {
                 metrics.queue_wait.record(enqueued.elapsed());
                 let started = Instant::now();
-                let result = get_engine(&model, kernel, &mut engines).and_then(|()| {
-                    let engine = &engines[&(model.clone(), kernel)];
-                    let il = engine.image_len();
-                    if images.len() % il != 0 {
-                        bail!("image buffer not a multiple of image size");
-                    }
-                    let n_batches = (images.len() / il).div_ceil(engine.batch).max(1);
-                    let t0 = Instant::now();
-                    let preds = engine.predict_all(&images, &luts);
-                    metrics.execute_time.record(t0.elapsed());
-                    metrics
-                        .batches
-                        .fetch_add(n_batches as u64, Ordering::Relaxed);
-                    metrics
-                        .images
-                        .fetch_add((images.len() / il) as u64, Ordering::Relaxed);
-                    preds
-                });
+                let result =
+                    get_engine(&model, kernel, &mut runtime, &mut engines).and_then(|()| {
+                        let engine = &engines[&(model.clone(), kernel)];
+                        let il = engine.image_len();
+                        if images.len() % il != 0 {
+                            bail!("image buffer not a multiple of image size");
+                        }
+                        let n_batches = (images.len() / il).div_ceil(engine.batch).max(1);
+                        let t0 = Instant::now();
+                        let preds = engine.predict_all(&images, &luts);
+                        metrics.execute_time.record(t0.elapsed());
+                        metrics
+                            .batches
+                            .fetch_add(n_batches as u64, Ordering::Relaxed);
+                        metrics
+                            .images
+                            .fetch_add((images.len() / il) as u64, Ordering::Relaxed);
+                        preds
+                    });
                 metrics.jobs.fetch_add(1, Ordering::Relaxed);
                 if result.is_err() {
                     metrics.errors.fetch_add(1, Ordering::Relaxed);

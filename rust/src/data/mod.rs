@@ -8,5 +8,5 @@
 pub mod dataset;
 pub mod rng;
 
-pub use dataset::{Dataset, DatasetConfig};
+pub use dataset::{Dataset, DatasetConfig, IMAGE_LEN};
 pub use rng::{SplitMix64, Xoshiro256};

@@ -28,12 +28,17 @@
 //!   report "relative power of multipliers in convolutional layers".
 //! * [`resilience`] — the resilience-analysis framework of §IV: LUT
 //!   construction from netlists, per-layer and whole-network replacement
-//!   campaigns, accuracy/power trade-off reports (Fig. 4, Table II).
-//! * [`runtime`] — PJRT runtime: loads the AOT-compiled HLO artifacts
-//!   produced by `python/compile/aot.py` and executes them from Rust.
-//! * [`coordinator`] — the L3 coordinator: job scheduling of evolution and
-//!   analysis campaigns, a dynamic batcher in front of the PJRT executor,
-//!   and service metrics.
+//!   campaigns fanned over the job pool, accuracy/power trade-off reports
+//!   (Fig. 4, Table II) byte-identical for any worker count.
+//! * [`runtime`] — inference runtimes behind one `EngineBackend` trait:
+//!   the PJRT engine for the AOT-compiled HLO artifacts produced by
+//!   `python/compile/aot.py`, and the pure-Rust `native` LUT-inference
+//!   engine (quantized-weights artifact or seeded synthetic fallback)
+//!   that needs no PJRT, no artifacts and no Python.
+//! * [`coordinator`] — the L3 coordinator: backend selection
+//!   (`auto`/`native`/`pjrt`), job scheduling of evolution and analysis
+//!   campaigns, a dynamic batcher in front of the engines, and service
+//!   metrics.
 //! * [`data`] — synthetic CIFAR-like dataset generation (shared, seeded
 //!   generator mirrored by `python/compile/data.py`).
 //!

@@ -12,8 +12,12 @@
 //! evoapprox census  --lib lib.json       # Table I counts
 //! evoapprox select  --lib lib.json [--k 10]
 //! evoapprox fig4    [--lib lib.json] [--images 256] [--multipliers 6]
+//!                   [--backend auto|native|pjrt] [--jobs N]
+//! evoapprox resilience  # same sweep, explicit §IV entry point — runs on
+//!                   # any machine via `--backend native` (no artifacts)
 //! evoapprox table2  [--lib lib.json] [--images 128] [--models resnet8,resnet14]
-//! evoapprox serve   [--requests 512] [--max-wait-ms 20]
+//!                   [--backend auto|native|pjrt] [--jobs N]
+//! evoapprox serve   [--requests 512] [--max-wait-ms 20] [--backend KIND]
 //! ```
 
 use evoapproxlib::cgp::{
@@ -43,6 +47,22 @@ const JOBS_FLAG: FlagSpec = FlagSpec {
     value: Some("N"),
     help: "worker threads (default: all cores; output is identical for any N)",
 };
+const BACKEND_FLAG: FlagSpec = FlagSpec {
+    name: "backend",
+    value: Some("KIND"),
+    help: "inference backend: auto|native|pjrt (default auto)",
+};
+/// `fig4` and its §IV alias `resilience` accept identical flags — one
+/// table so the two cannot drift.
+const FIG4_FLAGS: &[FlagSpec] = &[
+    LIB_FLAG,
+    ARTIFACTS_FLAG,
+    BACKEND_FLAG,
+    JOBS_FLAG,
+    FlagSpec { name: "images", value: Some("N"), help: "test images (default 256)" },
+    FlagSpec { name: "multipliers", value: Some("N"), help: "multipliers to sweep (default 8)" },
+    FlagSpec { name: "model", value: Some("NAME"), help: "network (default resnet8)" },
+];
 
 const COMMANDS: &[CommandSpec] = &[
     CommandSpec {
@@ -97,21 +117,22 @@ const COMMANDS: &[CommandSpec] = &[
     },
     CommandSpec {
         name: "fig4",
-        about: "per-layer resilience campaign (needs artifacts)",
-        flags: &[
-            LIB_FLAG,
-            ARTIFACTS_FLAG,
-            FlagSpec { name: "images", value: Some("N"), help: "test images (default 256)" },
-            FlagSpec { name: "multipliers", value: Some("N"), help: "multipliers to sweep (default 8)" },
-            FlagSpec { name: "model", value: Some("NAME"), help: "network (default resnet8)" },
-        ],
+        about: "per-layer resilience campaign",
+        flags: FIG4_FLAGS,
+    },
+    CommandSpec {
+        name: "resilience",
+        about: "full §IV resilience stack: Fig.4 per-layer sweep on any backend",
+        flags: FIG4_FLAGS,
     },
     CommandSpec {
         name: "table2",
-        about: "whole-network accuracy campaign (needs artifacts)",
+        about: "whole-network accuracy campaign",
         flags: &[
             LIB_FLAG,
             ARTIFACTS_FLAG,
+            BACKEND_FLAG,
+            JOBS_FLAG,
             FlagSpec { name: "images", value: Some("N"), help: "test images (default 256)" },
             FlagSpec { name: "multipliers", value: Some("N"), help: "multiplier rows (default 28)" },
             FlagSpec { name: "models", value: Some("LIST"), help: "comma-separated networks (default: all)" },
@@ -119,9 +140,10 @@ const COMMANDS: &[CommandSpec] = &[
     },
     CommandSpec {
         name: "serve",
-        about: "dynamic-batching inference demo (needs artifacts)",
+        about: "dynamic-batching inference demo",
         flags: &[
             ARTIFACTS_FLAG,
+            BACKEND_FLAG,
             FlagSpec { name: "model", value: Some("NAME"), help: "network (default resnet8)" },
             FlagSpec { name: "requests", value: Some("N"), help: "requests to serve (default 512)" },
             FlagSpec { name: "max-wait-ms", value: Some("MS"), help: "batching deadline (default 20)" },
@@ -144,7 +166,7 @@ fn main() {
         "library" => cmd_library(&cli),
         "census" => cmd_census(&cli),
         "select" => cmd_select(&cli),
-        "fig4" => cmd_fig4(&cli),
+        "fig4" | "resilience" => cmd_fig4(&cli),
         "table2" => cmd_table2(&cli),
         "serve" => cmd_serve(&cli),
         _ => {
@@ -163,6 +185,12 @@ fn artifacts_dir(cli: &Cli) -> String {
         .map(str::to_string)
         .or_else(|| std::env::var("EVOAPPROX_ARTIFACTS").ok())
         .unwrap_or_else(|| "artifacts".to_string())
+}
+
+fn backend(cli: &Cli) -> anyhow::Result<evoapproxlib::coordinator::Backend> {
+    let raw = cli.flag_str("backend", "auto");
+    evoapproxlib::coordinator::Backend::parse(&raw)
+        .ok_or_else(|| anyhow::anyhow!("invalid --backend `{raw}` (valid: auto, native, pjrt)"))
 }
 
 fn cmd_info(cli: &Cli) -> anyhow::Result<()> {
@@ -426,14 +454,23 @@ fn analysis_setup(
     Vec<evoapproxlib::resilience::MultiplierSummary>,
     evoapproxlib::runtime::manifest::TestSet,
 )> {
-    use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig};
+    use evoapproxlib::coordinator::{Backend, Coordinator, CoordinatorConfig};
     use evoapproxlib::resilience::MultiplierSummary;
 
     let dir = artifacts_dir(cli);
-    let (coord, guard) = Coordinator::start(CoordinatorConfig::new(&dir))?;
-    let testset = coord.manifest().load_testset(&dir)?;
+    let (coord, guard) =
+        Coordinator::start(CoordinatorConfig::new(&dir).with_backend(backend(cli)?))?;
     let n_images = cli.flag("images", 256usize)?;
-    let testset = testset.truncated(n_images);
+    // the native backend can run without the canonical exported split —
+    // fall back to the shared synthetic generator
+    let testset = match coord.manifest().load_testset(&dir) {
+        Ok(ts) => ts.truncated(n_images),
+        Err(e) if coord.backend() == Backend::Native => {
+            eprintln!("note: no exported test set ({e:#}); using the synthetic split");
+            evoapproxlib::runtime::manifest::TestSet::synthetic(n_images)
+        }
+        Err(e) => return Err(e),
+    };
 
     let model = CostModel::default();
     let f = ArithFn::Mul { w: 8 };
@@ -476,6 +513,7 @@ fn analysis_setup(
 fn cmd_fig4(cli: &Cli) -> anyhow::Result<()> {
     use evoapproxlib::coordinator::KernelKind;
     let max_m = cli.flag("multipliers", 8usize)?;
+    let jobs: usize = cli.flag("jobs", default_workers())?;
     let (coord, _guard, mults, testset) = analysis_setup(cli, 4, max_m)?;
     let report = evoapproxlib::resilience::per_layer_campaign(
         &coord,
@@ -483,12 +521,14 @@ fn cmd_fig4(cli: &Cli) -> anyhow::Result<()> {
         &mults,
         &testset,
         KernelKind::Jnp,
+        jobs,
     )?;
     println!(
-        "Fig.4 — {} reference accuracy {:.2}% over {} images",
+        "Fig.4 — {} reference accuracy {:.2}% over {} images ({} backend, {jobs} jobs)",
         report.model,
         report.reference_accuracy * 100.0,
-        testset.n
+        testset.n,
+        coord.backend().as_str(),
     );
     let mut t = TextTable::new(&[
         "multiplier", "layer", "label", "%mults", "accuracy", "acc drop", "power drop %",
@@ -513,6 +553,7 @@ fn cmd_fig4(cli: &Cli) -> anyhow::Result<()> {
 fn cmd_table2(cli: &Cli) -> anyhow::Result<()> {
     use evoapproxlib::coordinator::KernelKind;
     let max_m = cli.flag("multipliers", 28usize)?;
+    let jobs: usize = cli.flag("jobs", default_workers())?;
     let (coord, _guard, mults, testset) = analysis_setup(cli, 10, max_m)?;
     let models: Vec<String> = cli
         .flag_str(
@@ -534,6 +575,7 @@ fn cmd_table2(cli: &Cli) -> anyhow::Result<()> {
         &mults[1..], // exact row is reported separately
         &testset,
         KernelKind::Jnp,
+        jobs,
     )?;
     let mut header: Vec<String> = vec![
         "Multiplier".into(),
@@ -586,7 +628,9 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
     use std::time::Duration;
 
     let dir = artifacts_dir(cli);
-    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&dir))?;
+    let (coord, _guard) =
+        Coordinator::start(CoordinatorConfig::new(&dir).with_backend(backend(cli)?))?;
+    println!("serving on the {} backend", coord.backend().as_str());
     let model = cli.flag_str("model", "resnet8");
     coord.warm(&model, KernelKind::Jnp)?;
     let n_layers = coord

@@ -1,14 +1,22 @@
 //! Campaign drivers: Fig. 4 (per-layer) and Table II (whole-network)
 //! sweeps, scheduled through the coordinator.
+//!
+//! Both campaigns fan their evaluation grids — (multiplier × layer) for
+//! Fig. 4, (multiplier × network) for Table II — across the
+//! `cgp::campaign` job pool. The pool's submission-order-merge contract
+//! makes the reports byte-identical for any worker count: on the native
+//! backend jobs execute truly in parallel, on PJRT they serialise through
+//! the executor actor, and either way the points come back in grid order.
 
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::accel::PowerModel;
+use crate::cgp::campaign::map_parallel;
 use crate::circuit::cost::CircuitCost;
 use crate::coordinator::{Coordinator, KernelKind};
-use crate::library::entry::Entry;
+use crate::library::entry::{Entry, Origin};
 use crate::runtime::manifest::TestSet;
 use crate::runtime::{broadcast_lut, exact_lut, LUT_LEN};
 
@@ -21,6 +29,12 @@ pub struct MultiplierSummary {
     pub id: String,
     /// Human label (Table II first column).
     pub label: String,
+    /// Provenance of the entry (seed / evolved / truncated / BAM).
+    pub origin: Origin,
+    /// Whether this is a functionally exact multiplier (the paper's
+    /// golden reference) — judged by provenance and exhaustive zero error,
+    /// never by floating-point power coincidence.
+    pub is_exact: bool,
     /// Relative power vs the exact multiplier [%].
     pub rel_power_pct: f64,
     /// Table-II error columns [%].
@@ -45,9 +59,12 @@ impl MultiplierSummary {
         Ok(MultiplierSummary {
             id: e.id.clone(),
             label: match &e.origin {
-                crate::library::entry::Origin::Evolved { .. } => e.id.clone(),
+                Origin::Evolved { .. } => e.id.clone(),
                 other => other.label(),
             },
+            origin: e.origin.clone(),
+            is_exact: matches!(e.origin, Origin::Seed(_))
+                || (e.metrics.exhaustive && e.metrics.er == 0.0),
             rel_power_pct: e.cost.relative_power(exact_cost),
             mae_pct: e.rel.mae_pct,
             wce_pct: e.rel.wce_pct,
@@ -86,17 +103,26 @@ pub struct Fig4Report {
     pub model: String,
     /// Golden (exact-LUT) accuracy.
     pub reference_accuracy: f64,
+    /// Whether per-layer power used a real exact-multiplier circuit as the
+    /// 100 % reference (`true`), or fell back to interpolating from the
+    /// summaries' pre-computed relative powers because no exact entry was
+    /// in the sweep (`false`).
+    pub power_reference_exact: bool,
     /// All (multiplier × layer) points.
     pub points: Vec<Fig4Point>,
 }
 
-/// Fig. 4: approximate ONE conv layer at a time (§IV).
+/// Fig. 4: approximate ONE conv layer at a time (§IV). The
+/// (multiplier × layer) grid is evaluated on `jobs` pool workers; results
+/// are merged in submission order, so the report is byte-identical for any
+/// `jobs` value.
 pub fn per_layer_campaign(
     coord: &Coordinator,
     model: &str,
     multipliers: &[MultiplierSummary],
     testset: &TestSet,
     kernel: KernelKind,
+    jobs: usize,
 ) -> Result<Fig4Report> {
     let meta = coord
         .manifest()
@@ -114,45 +140,53 @@ pub fn per_layer_campaign(
         &testset.labels,
         Arc::new(broadcast_lut(&exact, n_layers)),
     )?;
-    let exact_cost = multipliers
-        .iter()
-        .find(|m| (m.rel_power_pct - 100.0).abs() < 1e-6)
-        .map(|m| m.cost);
-    let mut points = Vec::new();
-    for m in multipliers {
-        for layer in 0..n_layers {
-            let mut luts = broadcast_lut(&exact, n_layers);
-            luts[layer * LUT_LEN..(layer + 1) * LUT_LEN].copy_from_slice(&m.lut);
-            let acc = coord.accuracy(
-                model,
-                kernel,
-                images.clone(),
-                &testset.labels,
-                Arc::new(luts),
-            )?;
-            // power: whole-accelerator multiplier power with this one layer
-            // approximated; the reference cost is the exact multiplier's.
-            let power_pct = match &exact_cost {
-                Some(e) => pm.relative_power(e, &m.cost, Some(layer)),
-                None => {
-                    let f = pm.layer_fraction(layer);
-                    (1.0 - f) * 100.0 + f * m.rel_power_pct
-                }
-            };
-            points.push(Fig4Point {
-                multiplier: m.id.clone(),
-                layer,
-                layer_label: crate::accel::layer_label(&meta.layers[layer]),
-                layer_fraction: pm.layer_fraction(layer),
-                accuracy: acc,
-                accuracy_drop: golden - acc,
-                power_drop_pct: 100.0 - power_pct,
-            });
-        }
+    // The 100 % power reference is the exact multiplier itself, identified
+    // by provenance — NOT by a floating-point `rel_power == 100` match,
+    // which silently picks nothing (or a coincidental entry) when the
+    // exact row is absent.
+    let exact_cost = multipliers.iter().find(|m| m.is_exact).map(|m| m.cost);
+    let grid: Vec<(usize, usize)> = (0..multipliers.len())
+        .flat_map(|mi| (0..n_layers).map(move |layer| (mi, layer)))
+        .collect();
+    let accuracies = map_parallel(grid.clone(), jobs.max(1), |_, (mi, layer), _scratch| {
+        let m = &multipliers[mi];
+        let mut luts = broadcast_lut(&exact, n_layers);
+        luts[layer * LUT_LEN..(layer + 1) * LUT_LEN].copy_from_slice(&m.lut);
+        coord.accuracy(
+            model,
+            kernel,
+            images.clone(),
+            &testset.labels,
+            Arc::new(luts),
+        )
+    });
+    let mut points = Vec::with_capacity(grid.len());
+    for ((mi, layer), acc) in grid.into_iter().zip(accuracies) {
+        let m = &multipliers[mi];
+        let acc = acc?;
+        // power: whole-accelerator multiplier power with this one layer
+        // approximated; the reference cost is the exact multiplier's.
+        let power_pct = match &exact_cost {
+            Some(e) => pm.relative_power(e, &m.cost, Some(layer)),
+            None => {
+                let f = pm.layer_fraction(layer);
+                (1.0 - f) * 100.0 + f * m.rel_power_pct
+            }
+        };
+        points.push(Fig4Point {
+            multiplier: m.id.clone(),
+            layer,
+            layer_label: crate::accel::layer_label(&meta.layers[layer]),
+            layer_fraction: pm.layer_fraction(layer),
+            accuracy: acc,
+            accuracy_drop: golden - acc,
+            power_drop_pct: 100.0 - power_pct,
+        });
     }
     Ok(Fig4Report {
         model: model.to_string(),
         reference_accuracy: golden,
+        power_reference_exact: exact_cost.is_some(),
         points,
     })
 }
@@ -175,51 +209,61 @@ pub struct Table2Report {
     pub rows: Vec<Table2Row>,
 }
 
-/// Table II: approximate ALL conv layers of every network (§IV).
+/// Table II: approximate ALL conv layers of every network (§IV). The
+/// (multiplier × network) grid — including the exact reference row — runs
+/// on `jobs` pool workers with submission-order merging (`jobs = 1` and
+/// `jobs = N` produce byte-identical reports).
 pub fn whole_network_campaign(
     coord: &Coordinator,
     models: &[String],
     multipliers: &[MultiplierSummary],
     testset: &TestSet,
     kernel: KernelKind,
+    jobs: usize,
 ) -> Result<Table2Report> {
     let images = Arc::new(testset.images.clone());
     let exact = exact_lut();
-    let mut exact_row = Vec::new();
-    let mut luts_per_model = Vec::new();
+    let mut layers_per_model = Vec::with_capacity(models.len());
     for name in models {
         let meta = coord
             .manifest()
             .model(name)
             .ok_or_else(|| anyhow!("unknown model `{name}`"))?;
-        let n_layers = meta.n_conv_layers;
-        luts_per_model.push(n_layers);
-        let acc = coord.accuracy(
-            name,
+        layers_per_model.push(meta.n_conv_layers);
+    }
+    // grid row -1 = the exact baseline, rows 0.. = the multipliers
+    let grid: Vec<(Option<usize>, usize)> = std::iter::once(None)
+        .chain((0..multipliers.len()).map(Some))
+        .flat_map(|mi| (0..models.len()).map(move |m| (mi, m)))
+        .collect();
+    let accuracies = map_parallel(grid.clone(), jobs.max(1), |_, (mi, mdl), _scratch| {
+        let n_layers = layers_per_model[mdl];
+        let lut = match mi {
+            None => &exact,
+            Some(i) => &multipliers[i].lut,
+        };
+        coord.accuracy(
+            &models[mdl],
             kernel,
             images.clone(),
             &testset.labels,
-            Arc::new(broadcast_lut(&exact, n_layers)),
-        )?;
-        exact_row.push((name.clone(), acc));
-    }
-    let mut rows = Vec::new();
-    for m in multipliers {
-        let mut accuracies = Vec::new();
-        for (name, &n_layers) in models.iter().zip(&luts_per_model) {
-            let acc = coord.accuracy(
-                name,
-                kernel,
-                images.clone(),
-                &testset.labels,
-                Arc::new(broadcast_lut(&m.lut, n_layers)),
-            )?;
-            accuracies.push((name.clone(), acc));
-        }
-        rows.push(Table2Row {
+            Arc::new(broadcast_lut(lut, n_layers)),
+        )
+    });
+    let mut exact_row = Vec::with_capacity(models.len());
+    let mut rows: Vec<Table2Row> = multipliers
+        .iter()
+        .map(|m| Table2Row {
             multiplier: m.clone(),
-            accuracies,
-        });
+            accuracies: Vec::with_capacity(models.len()),
+        })
+        .collect();
+    for ((mi, mdl), acc) in grid.into_iter().zip(accuracies) {
+        let acc = acc?;
+        match mi {
+            None => exact_row.push((models[mdl].clone(), acc)),
+            Some(i) => rows[i].accuracies.push((models[mdl].clone(), acc)),
+        }
     }
     Ok(Table2Report { exact_row, rows })
 }
@@ -254,8 +298,28 @@ mod tests {
         assert!(s.mae_pct > 0.0);
         assert_eq!(s.lut.len(), LUT_LEN);
         assert_eq!(s.label, "BAM h=0 v=6");
+        assert!(!s.is_exact);
         let se = MultiplierSummary::from_entry(&exact, &exact.cost).unwrap();
         assert!((se.rel_power_pct - 100.0).abs() < 1e-9);
         assert_eq!(se.lut, crate::runtime::exact_lut());
+        assert!(se.is_exact);
+    }
+
+    /// A 100 % relative power coincidence must NOT be mistaken for the
+    /// exact reference — exactness is judged by provenance/function only.
+    #[test]
+    fn power_coincidence_is_not_exactness() {
+        let model = CostModel::default();
+        let f = ArithFn::Mul { w: 8 };
+        let bam = Entry::characterise(
+            bam_multiplier(8, 0, 6),
+            f,
+            &model,
+            Origin::Bam { h: 0, v: 6 },
+        );
+        // reference the BAM against its own cost → rel_power == 100 %
+        let s = MultiplierSummary::from_entry(&bam, &bam.cost).unwrap();
+        assert!((s.rel_power_pct - 100.0).abs() < 1e-9);
+        assert!(!s.is_exact);
     }
 }

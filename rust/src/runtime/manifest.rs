@@ -61,6 +61,10 @@ pub struct ModelMeta {
     pub image_dims: (usize, usize, usize),
     /// Classes.
     pub n_classes: usize,
+    /// Quantized-weights artifact for the native backend, when the build
+    /// exported one (older manifests lack it; the native backend then
+    /// falls back to the seeded synthetic model).
+    pub qweights: Option<String>,
 }
 
 impl ModelMeta {
@@ -159,6 +163,7 @@ impl Manifest {
                 layers,
                 image_dims,
                 n_classes,
+                qweights: m.get("qweights").and_then(Json::as_str).map(str::to_string),
             });
         }
         Ok(Manifest {
@@ -225,6 +230,22 @@ pub struct TestSet {
 }
 
 impl TestSet {
+    /// A deterministic synthetic evaluation split (the shared seeded
+    /// generator in `crate::data`) — the no-artifacts analogue of the
+    /// canonical split `aot.py` exports, used by the native backend.
+    pub fn synthetic(n: usize) -> TestSet {
+        let d = crate::data::Dataset::generate(&crate::data::DatasetConfig {
+            n,
+            ..Default::default()
+        });
+        TestSet {
+            images: d.images,
+            labels: d.labels,
+            n,
+            image_len: crate::data::IMAGE_LEN,
+        }
+    }
+
     /// First `k` images (prefix truncation for `--quick` runs).
     pub fn truncated(&self, k: usize) -> TestSet {
         let k = k.min(self.n);

@@ -1,29 +1,115 @@
-//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
-//! and executes them from Rust — the only place the `xla` crate is touched.
+//! Model runtimes: the PJRT-backed engine for AOT-compiled HLO artifacts
+//! and the pure-Rust [`native`] backend, unified behind [`EngineBackend`].
 //!
-//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): the image's
-//! xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit instruction
-//! ids), while the text parser reassigns ids — see /opt/xla-example/README.md.
+//! * [`PjrtRuntime`] / [`InferenceEngine`] — loads the AOT artifacts
+//!   produced by `python/compile/aot.py` and executes them through the
+//!   `xla` crate (the only place it is touched). Interchange is HLO *text*
+//!   (`HloModuleProto::from_text_file`): the image's xla_extension 0.5.1
+//!   rejects jax≥0.5 serialized protos (64-bit instruction ids), while the
+//!   text parser reassigns ids — see /opt/xla-example/README.md.
+//! * [`native::NativeEngine`] — the same quantized LUT-multiplier forward
+//!   pass implemented directly in Rust, fed by the quantized-weights
+//!   artifact (or a seeded synthetic model), requiring no PJRT at all.
 //!
-//! Executable inputs (fixed by `aot.py`):
+//! Executable inputs (fixed by `aot.py`, mirrored by the native backend):
 //! * `images: f32[B, H, W, C]`
 //! * `luts:   i32[L, 65536]` — one 256×256 product table per conv layer.
 //!
-//! Output: 1-tuple of `logits f32[B, 10]`.
+//! Output: `logits f32[B, 10]`.
 //!
 //! PJRT wrapper types are deliberately kept `!Send`; the coordinator
 //! confines them to a dedicated executor thread (see `crate::coordinator`).
+//! [`native::NativeEngine`] is `Send + Sync` and may run on any thread.
 
 pub mod manifest;
+pub mod native;
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 pub use manifest::{ArtifactMeta, LayerMeta, Manifest, ModelMeta, TestSet};
+pub use native::NativeEngine;
 
 /// Number of entries in one multiplier LUT (256×256).
 pub const LUT_LEN: usize = 256 * 256;
+
+/// The uniform surface of an inference backend: execute one fixed-size
+/// batch, plus dataset-level helpers built on it. Implemented by the PJRT
+/// [`InferenceEngine`] and the pure-Rust [`native::NativeEngine`]; the
+/// coordinator schedules onto `dyn EngineBackend` without caring which.
+pub trait EngineBackend {
+    /// Batch size `run` expects.
+    fn batch(&self) -> usize;
+    /// (H, W, C) of one image.
+    fn image_dims(&self) -> (usize, usize, usize);
+    /// Number of conv layers = LUT rows expected.
+    fn n_layers(&self) -> usize;
+    /// Classes in the logits.
+    fn n_classes(&self) -> usize;
+    /// Diagnostic name.
+    fn name(&self) -> &str;
+
+    /// Execute one batch. `images` must hold exactly
+    /// `batch() * image_len()` floats; `luts` exactly
+    /// `n_layers() * LUT_LEN` i32 values. Returns `batch * n_classes`
+    /// logits.
+    fn run(&self, images: &[f32], luts: &[i32]) -> Result<Vec<f32>>;
+
+    /// Floats per image.
+    fn image_len(&self) -> usize {
+        let (h, w, c) = self.image_dims();
+        h * w * c
+    }
+
+    /// Run a full dataset (padding the tail batch) and return per-image
+    /// argmax predictions. A malformed buffer is an `Err`, never a panic —
+    /// the executor thread must survive bad requests.
+    fn predict_all(&self, images: &[f32], luts: &[i32]) -> Result<Vec<u8>> {
+        let il = self.image_len();
+        if il == 0 || images.len() % il != 0 {
+            bail!(
+                "images: {} floats is not a whole number of {il}-float images",
+                images.len()
+            );
+        }
+        let n = images.len() / il;
+        let batch = self.batch();
+        let n_classes = self.n_classes();
+        let mut preds = Vec::with_capacity(n);
+        let mut batch_buf = vec![0f32; batch * il];
+        let mut i = 0;
+        while i < n {
+            let take = (n - i).min(batch);
+            batch_buf[..take * il].copy_from_slice(&images[i * il..(i + take) * il]);
+            batch_buf[take * il..].fill(0.0);
+            let logits = self.run(&batch_buf, luts)?;
+            for k in 0..take {
+                preds.push(argmax_u8(&logits[k * n_classes..(k + 1) * n_classes]));
+            }
+            i += take;
+        }
+        Ok(preds)
+    }
+
+    /// Classification accuracy over a labelled set.
+    fn accuracy(&self, images: &[f32], labels: &[u8], luts: &[i32]) -> Result<f64> {
+        let preds = self.predict_all(images, luts)?;
+        if preds.len() != labels.len() {
+            bail!(
+                "prediction/label length mismatch: {} vs {}",
+                preds.len(),
+                labels.len()
+            );
+        }
+        let correct = preds
+            .iter()
+            .zip(labels)
+            .filter(|(p, l)| p == l)
+            .count();
+        Ok(correct as f64 / labels.len().max(1) as f64)
+    }
+}
 
 /// A PJRT CPU client plus the compiled executables it owns.
 pub struct PjrtRuntime {
@@ -70,7 +156,7 @@ impl PjrtRuntime {
     }
 }
 
-/// One compiled inference executable.
+/// One compiled PJRT inference executable.
 pub struct InferenceEngine {
     exe: xla::PjRtLoadedExecutable,
     /// Compiled batch size.
@@ -85,18 +171,24 @@ pub struct InferenceEngine {
     pub name: String,
 }
 
-impl InferenceEngine {
-    /// Floats per image.
-    pub fn image_len(&self) -> usize {
-        self.image_dims.0 * self.image_dims.1 * self.image_dims.2
+impl EngineBackend for InferenceEngine {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn image_dims(&self) -> (usize, usize, usize) {
+        self.image_dims
+    }
+    fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+    fn name(&self) -> &str {
+        &self.name
     }
 
-    /// Execute one batch.
-    ///
-    /// `images` must hold exactly `batch * image_len()` floats; `luts`
-    /// exactly `n_layers * LUT_LEN` i32 values. Returns `batch * n_classes`
-    /// logits.
-    pub fn run(&self, images: &[f32], luts: &[i32]) -> Result<Vec<f32>> {
+    fn run(&self, images: &[f32], luts: &[i32]) -> Result<Vec<f32>> {
         if images.len() != self.batch * self.image_len() {
             bail!(
                 "images: got {} floats, want {} (batch {} × {})",
@@ -124,47 +216,16 @@ impl InferenceEngine {
         let logits = result.to_tuple1()?;
         Ok(logits.to_vec::<f32>()?)
     }
+}
 
-    /// Run a full dataset (padding the tail batch) and return per-image
-    /// argmax predictions.
-    pub fn predict_all(&self, images: &[f32], luts: &[i32]) -> Result<Vec<u8>> {
-        let il = self.image_len();
-        assert_eq!(images.len() % il, 0);
-        let n = images.len() / il;
-        let mut preds = Vec::with_capacity(n);
-        let mut batch_buf = vec![0f32; self.batch * il];
-        let mut i = 0;
-        while i < n {
-            let take = (n - i).min(self.batch);
-            batch_buf[..take * il].copy_from_slice(&images[i * il..(i + take) * il]);
-            batch_buf[take * il..].fill(0.0);
-            let logits = self.run(&batch_buf, luts)?;
-            for k in 0..take {
-                let row = &logits[k * self.n_classes..(k + 1) * self.n_classes];
-                let arg = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(j, _)| j as u8)
-                    .unwrap();
-                preds.push(arg);
-            }
-            i += take;
-        }
-        Ok(preds)
-    }
-
-    /// Classification accuracy over a labelled set.
-    pub fn accuracy(&self, images: &[f32], labels: &[u8], luts: &[i32]) -> Result<f64> {
-        let preds = self.predict_all(images, luts)?;
-        assert_eq!(preds.len(), labels.len());
-        let correct = preds
-            .iter()
-            .zip(labels)
-            .filter(|(p, l)| p == l)
-            .count();
-        Ok(correct as f64 / labels.len().max(1) as f64)
-    }
+/// NaN-tolerant argmax over one logits row (`total_cmp`: a panic here
+/// would poison the executor thread, violating `predict_all`'s contract).
+pub(crate) fn argmax_u8(row: &[f32]) -> u8 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(j, _)| j as u8)
+        .unwrap_or(0)
 }
 
 /// The exact 8-bit product LUT (the paper's golden multiplier).
@@ -207,5 +268,24 @@ mod tests {
         let b = broadcast_lut(&lut, 3);
         assert_eq!(b.len(), 3 * LUT_LEN);
         assert_eq!(&b[LUT_LEN..LUT_LEN + 10], &lut[..10]);
+    }
+
+    #[test]
+    fn predict_all_rejects_ragged_buffer() {
+        // the native engine exercises the trait's shared error path
+        let e = native::NativeEngine::synthetic(8, 4, 1, 2);
+        let luts = broadcast_lut(&exact_lut(), e.n_layers());
+        let ragged = vec![0.0f32; e.image_len() + 1];
+        let err = e.predict_all(&ragged, &luts);
+        assert!(err.is_err(), "ragged buffer must be an Err, not a panic");
+    }
+
+    #[test]
+    fn accuracy_rejects_label_mismatch() {
+        let e = native::NativeEngine::synthetic(8, 4, 1, 2);
+        let luts = broadcast_lut(&exact_lut(), e.n_layers());
+        let images = vec![0.5f32; 2 * e.image_len()];
+        let err = e.accuracy(&images, &[1u8, 2, 3], &luts);
+        assert!(err.is_err(), "label mismatch must be an Err, not a panic");
     }
 }

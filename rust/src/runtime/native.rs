@@ -1,0 +1,917 @@
+//! Native (pure-Rust) inference backend: the quantized LUT-multiplier
+//! ResNet forward pass executed directly on the CPU, with no PJRT, no HLO
+//! artifacts and no Python in the loop.
+//!
+//! Semantics are pinned to the `python/compile/kernels/ref.py` oracle
+//! (TFApprox-equivalent): activations are fake-quantised to uint8 codes at
+//! every conv boundary, every scalar product inside the convolution is the
+//! gather `lut[a * 256 + w]`, and accumulators are dequantised with the
+//! exact zero-point-correction algebra
+//! `y = s_a·s_w·(S − z_w·Σa − z_a·Σw + K·z_a·z_w)`. Float operations mirror
+//! ref.py's f32 evaluation order so logits agree with the golden fixtures
+//! to float round-off (the integer LUT path is bit-exact by construction).
+//!
+//! Weights come from one of two sources:
+//! * the **quantized-weights artifact** (`resnet{D}.qweights.bin`) dumped
+//!   by `python/compile/aot.py` next to the HLO text — real trained codes,
+//!   giving the same accuracy surface as the PJRT path;
+//! * a **deterministic seeded synthetic model** ([`NativeEngine::synthetic`])
+//!   — He-initialised float weights calibrated on the synthetic dataset and
+//!   quantised through the same (scale, zero-point) pipeline — so the full
+//!   coordinator/resilience/serving stack runs (and CI tests it) on a
+//!   machine with no artifacts at all.
+//!
+//! Unlike the PJRT wrappers, [`NativeEngine`] is `Send + Sync`: the
+//! coordinator services native jobs inline on the calling thread, which is
+//! what lets the resilience campaigns fan the (multiplier × layer) grid
+//! across the `cgp::campaign` job pool.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::accel::ResNetSpec;
+use crate::data::dataset::{Dataset, DatasetConfig, IMAGE_SIZE, N_CHANNELS, N_CLASSES};
+use crate::data::rng::SplitMix64;
+
+use super::manifest::{ArtifactMeta, LayerMeta, Manifest, ModelMeta};
+use super::{EngineBackend, LUT_LEN};
+
+/// Round half-to-even (numpy/jnp `round` semantics; Rust's `f32::round`
+/// rounds half away from zero, which would drift from the Python oracle on
+/// exact .5 ties).
+pub fn round_half_even(x: f32) -> f32 {
+    let t = x.trunc();
+    if (x - t).abs() == 0.5 {
+        if (t as i64) % 2 == 0 {
+            t
+        } else {
+            t + x.signum()
+        }
+    } else {
+        x.round()
+    }
+}
+
+/// Quantise one float to a uint8 code: `clip(round(x / s) + z, 0, 255)`.
+/// (Saturating add: an out-of-calibration activation must clip, not trip
+/// the debug overflow check.)
+#[inline]
+fn quantize_code(x: f32, scale: f32, zp: i32) -> u8 {
+    (round_half_even(x / scale) as i32)
+        .saturating_add(zp)
+        .clamp(0, 255) as u8
+}
+
+/// Asymmetric uint8 (scale, zero-point) covering `[min(x,0), max(x,0)]` —
+/// mirrors `python/compile/model.py::quant_range`.
+fn quant_range(lo: f32, hi: f32) -> (f32, i32) {
+    let lo = lo.min(0.0);
+    let hi = hi.max(0.0);
+    if (hi - lo) < 1e-12 {
+        return (1.0, 0);
+    }
+    let scale = (hi - lo) / 255.0;
+    let zp = round_half_even(-lo / scale) as i32;
+    (scale, zp.clamp(0, 255))
+}
+
+/// One quantised conv layer: uint8 weight codes in patch-major
+/// `[kh*kw*cin, cout]` layout plus the calibrated (scale, zero-point)
+/// pairs and the folded float bias.
+#[derive(Debug, Clone)]
+pub struct QuantConv {
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Input channels.
+    pub cin: usize,
+    /// Output channels.
+    pub cout: usize,
+    /// Spatial stride (SAME padding).
+    pub stride: usize,
+    /// Weight scale.
+    pub s_w: f32,
+    /// Weight zero-point.
+    pub z_w: i32,
+    /// Activation scale.
+    pub s_a: f32,
+    /// Activation zero-point (also the padding code).
+    pub z_a: i32,
+    /// Weight codes, `[kh*kw*cin, cout]` row-major.
+    pub w_q: Vec<u8>,
+    /// Per-output-channel code sums (zero-point correction term).
+    pub w_sum: Vec<i32>,
+    /// Float bias, `[cout]`.
+    pub bias: Vec<f32>,
+}
+
+impl QuantConv {
+    /// Build a layer, deriving `w_sum` from the codes.
+    pub fn new(
+        kh: usize,
+        kw: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        s_w: f32,
+        z_w: i32,
+        s_a: f32,
+        z_a: i32,
+        w_q: Vec<u8>,
+        bias: Vec<f32>,
+    ) -> Result<QuantConv> {
+        if w_q.len() != kh * kw * cin * cout {
+            bail!(
+                "weight codes: {} values, want {}",
+                w_q.len(),
+                kh * kw * cin * cout
+            );
+        }
+        if bias.len() != cout {
+            bail!("bias: {} values, want {cout}", bias.len());
+        }
+        if !(0..=255).contains(&z_w) || !(0..=255).contains(&z_a) {
+            bail!("zero-points must be uint8 codes: z_w={z_w}, z_a={z_a}");
+        }
+        let k = kh * kw * cin;
+        let mut w_sum = vec![0i32; cout];
+        for kk in 0..k {
+            for (n, s) in w_sum.iter_mut().enumerate() {
+                *s += w_q[kk * cout + n] as i32;
+            }
+        }
+        Ok(QuantConv {
+            kh,
+            kw,
+            cin,
+            cout,
+            stride,
+            s_w,
+            z_w,
+            s_a,
+            z_a,
+            w_q,
+            w_sum,
+            bias,
+        })
+    }
+}
+
+/// One residual block of the 6n+2 topology (option-A shortcuts).
+#[derive(Debug, Clone, Copy)]
+pub struct BlockSpec {
+    /// Stride of the block's first conv.
+    pub stride: usize,
+    /// Output channels of the block.
+    pub cout: usize,
+}
+
+/// The native inference engine: a quantised ResNet whose convolutions
+/// gather every product from the runtime-supplied LUTs.
+#[derive(Debug, Clone)]
+pub struct NativeEngine {
+    /// Preferred batch size (chunking granularity; any batch works).
+    pub batch: usize,
+    /// (H, W, C) of one image.
+    pub image_dims: (usize, usize, usize),
+    /// Classes in the logits.
+    pub n_classes: usize,
+    /// Diagnostic name.
+    pub name: String,
+    layers: Vec<QuantConv>,
+    blocks: Vec<BlockSpec>,
+    /// Dense head weights, `[feat, n_classes]` row-major.
+    dense_w: Vec<f32>,
+    /// Dense head bias.
+    dense_b: Vec<f32>,
+}
+
+/// SAME-padding geometry: output extent and low-side padding for one axis
+/// (matches XLA's `padding="SAME"` convention: `pad_lo = pad_total / 2`).
+fn same_geometry(extent: usize, k: usize, stride: usize) -> (usize, usize) {
+    let out = extent.div_ceil(stride);
+    let pad_total = ((out - 1) * stride + k).saturating_sub(extent);
+    (out, pad_total / 2)
+}
+
+impl NativeEngine {
+    /// Assemble an engine from explicit parts (loader, synthesis, tests).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        layers: Vec<QuantConv>,
+        blocks: Vec<BlockSpec>,
+        dense_w: Vec<f32>,
+        dense_b: Vec<f32>,
+        batch: usize,
+        image_dims: (usize, usize, usize),
+        n_classes: usize,
+        name: String,
+    ) -> Result<NativeEngine> {
+        if layers.len() != 1 + 2 * blocks.len() {
+            bail!(
+                "{} conv layers inconsistent with {} blocks (want 1 + 2·blocks)",
+                layers.len(),
+                blocks.len()
+            );
+        }
+        // channel-chain consistency: a mismatched weights artifact (e.g.
+        // exported at a different width than the manifest claims) must be
+        // an Err at load time, not an out-of-bounds panic mid-campaign
+        if let Some(first) = layers.first() {
+            if first.cin != image_dims.2 {
+                bail!(
+                    "stem expects {} input channels, images have {}",
+                    first.cin,
+                    image_dims.2
+                );
+            }
+        }
+        for (i, pair) in layers.windows(2).enumerate() {
+            if pair[1].cin != pair[0].cout {
+                bail!(
+                    "conv {} consumes {} channels but conv {i} produces {}",
+                    i + 1,
+                    pair[1].cin,
+                    pair[0].cout
+                );
+            }
+        }
+        for (j, blk) in blocks.iter().enumerate() {
+            if blk.cout != layers[2 * j + 2].cout {
+                bail!(
+                    "block {j} cout {} disagrees with its conv2 cout {}",
+                    blk.cout,
+                    layers[2 * j + 2].cout
+                );
+            }
+        }
+        let feat = layers.last().map(|l| l.cout).unwrap_or(0);
+        if dense_w.len() != feat * n_classes || dense_b.len() != n_classes {
+            bail!("dense head shape mismatch");
+        }
+        Ok(NativeEngine {
+            batch: batch.max(1),
+            image_dims,
+            n_classes,
+            name,
+            layers,
+            blocks,
+            dense_w,
+            dense_b,
+        })
+    }
+
+    /// The conv layers (read-only view, used by tests).
+    pub fn layers(&self) -> &[QuantConv] {
+        &self.layers
+    }
+
+    /// Load the quantized-weights artifact named in the manifest.
+    pub fn load(
+        artifacts_dir: impl AsRef<Path>,
+        model: &ModelMeta,
+        artifact: &str,
+    ) -> Result<NativeEngine> {
+        let path = artifacts_dir.as_ref().join(artifact);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut r = Reader { buf: &bytes, pos: 0 };
+        if r.take(4)? != b"EVOQ" {
+            bail!("{}: not a qweights artifact", path.display());
+        }
+        let version = r.u32()?;
+        if version != 1 {
+            bail!("{}: unsupported qweights version {version}", path.display());
+        }
+        let n_layers = r.u32()? as usize;
+        if n_layers != model.n_conv_layers {
+            bail!(
+                "{}: {n_layers} conv layers, manifest says {}",
+                path.display(),
+                model.n_conv_layers
+            );
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let kh = r.dim()?;
+            let kw = r.dim()?;
+            let cin = r.dim()?;
+            let cout = r.dim()?;
+            let stride = r.dim()?;
+            let s_w = r.f32()?;
+            let z_w = r.u32()? as i32;
+            let s_a = r.f32()?;
+            let z_a = r.u32()? as i32;
+            // dims are header-bounded, so this product cannot overflow
+            let w_q = r.take(kh * kw * cin * cout)?.to_vec();
+            let bias = r.f32_vec(cout)?;
+            layers.push(QuantConv::new(
+                kh, kw, cin, cout, stride, s_w, z_w, s_a, z_a, w_q, bias,
+            )?);
+        }
+        let feat = r.dim()?;
+        let n_classes = r.dim()?;
+        let dense_w = r.f32_vec(feat * n_classes)?;
+        let dense_b = r.f32_vec(n_classes)?;
+        let blocks = blocks_for(model.depth, model.width);
+        let batch = model
+            .artifacts
+            .iter()
+            .map(|a| a.batch)
+            .max()
+            .unwrap_or(64);
+        NativeEngine::from_parts(
+            layers,
+            blocks,
+            dense_w,
+            dense_b,
+            batch,
+            model.image_dims,
+            n_classes,
+            format!("{}_b{batch}_native", model.name),
+        )
+    }
+
+    /// Deterministic seeded synthetic model: He-initialised float weights,
+    /// calibrated on the synthetic dataset, quantised through the same
+    /// (scale, zero-point) pipeline as the Python AOT path. Untrained (so
+    /// accuracy sits near chance) but numerically well-conditioned — LUT
+    /// perturbations degrade logits the same way they do on trained models,
+    /// which is all the determinism/plumbing tests need.
+    pub fn synthetic(depth: u32, width: u32, seed: u64, batch: usize) -> NativeEngine {
+        let spec = ResNetSpec::new(depth, width);
+        let mut rng = SplitMix64::new(seed ^ 0x5EED_0DE1);
+        let normal = |rng: &mut SplitMix64| -> f32 {
+            // Irwin–Hall(4) ≈ N(0, 1/√3), scaled — same cheap portable
+            // normal the dataset generator uses.
+            let n = rng.next_f64() + rng.next_f64() + rng.next_f64() + rng.next_f64() - 2.0;
+            (n * 1.732) as f32
+        };
+        // float weights, patch-major [K, cout]
+        struct FloatConv {
+            w: Vec<f32>,
+            b: Vec<f32>,
+        }
+        let mut fconvs = Vec::with_capacity(spec.layers.len());
+        for l in &spec.layers {
+            let k = 9 * l.cin as usize;
+            let gain = (2.0 / k as f32).sqrt();
+            let w: Vec<f32> = (0..k * l.cout as usize).map(|_| normal(&mut rng) * gain).collect();
+            let b: Vec<f32> = (0..l.cout as usize).map(|_| normal(&mut rng) * 0.05).collect();
+            fconvs.push(FloatConv { w, b });
+        }
+        let feat = spec.layers.last().unwrap().cout as usize;
+        let dense_gain = 1.0 / (feat as f32).sqrt();
+        let dense_w: Vec<f32> = (0..feat * N_CLASSES).map(|_| normal(&mut rng) * dense_gain).collect();
+        let dense_b = vec![0.0f32; N_CLASSES];
+        let blocks = blocks_for(depth, width);
+
+        // calibration: run the float forward over a small seeded batch and
+        // record each conv input's range (mirrors calibration_activations)
+        let calib = Dataset::generate(&DatasetConfig {
+            n: 16,
+            seed: seed ^ 0xCA11_B8A7E,
+            noise: 0.10,
+        });
+        let b = calib.len();
+        let mut ranges = vec![(0.0f32, 0.0f32); spec.layers.len()];
+        let dims = (IMAGE_SIZE, IMAGE_SIZE, N_CHANNELS);
+        run_topology(&blocks, calib.images.clone(), dims, |li, x, d| {
+            for &v in &x {
+                ranges[li].0 = ranges[li].0.min(v);
+                ranges[li].1 = ranges[li].1.max(v);
+            }
+            let l = &spec.layers[li];
+            float_conv(
+                &x,
+                b,
+                d,
+                l.stride as usize,
+                l.cout as usize,
+                &fconvs[li].w,
+                &fconvs[li].b,
+            )
+        });
+
+        // quantise every conv with its calibrated ranges
+        let mut layers = Vec::with_capacity(spec.layers.len());
+        for (li, l) in spec.layers.iter().enumerate() {
+            let k = 9 * l.cin as usize;
+            let cout = l.cout as usize;
+            let fw = &fconvs[li].w;
+            let (mut lo, mut hi) = (0.0f32, 0.0f32);
+            for &v in fw {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let (s_w, z_w) = quant_range(lo, hi);
+            let w_q: Vec<u8> = fw.iter().map(|&v| quantize_code(v, s_w, z_w)).collect();
+            let (s_a, z_a) = quant_range(ranges[li].0, ranges[li].1);
+            layers.push(
+                QuantConv::new(
+                    3,
+                    3,
+                    l.cin as usize,
+                    cout,
+                    l.stride as usize,
+                    s_w,
+                    z_w,
+                    s_a,
+                    z_a,
+                    w_q,
+                    fconvs[li].b.clone(),
+                )
+                .expect("synthetic layer shapes are consistent by construction"),
+            );
+        }
+        NativeEngine::from_parts(
+            layers,
+            blocks,
+            dense_w,
+            dense_b,
+            batch,
+            dims,
+            N_CLASSES,
+            format!("resnet{depth}_b{batch}_native_synthetic"),
+        )
+        .expect("synthetic model shapes are consistent by construction")
+    }
+
+    /// Build the engine for a manifest model: real quantized weights when
+    /// the manifest names a qweights artifact, the seeded synthetic model
+    /// otherwise.
+    pub fn for_model(artifacts_dir: impl AsRef<Path>, model: &ModelMeta) -> Result<NativeEngine> {
+        match &model.qweights {
+            Some(q) => NativeEngine::load(artifacts_dir, model, q),
+            None => Ok(NativeEngine::synthetic(
+                model.depth,
+                model.width,
+                SYNTHETIC_SEED,
+                model.artifacts.iter().map(|a| a.batch).max().unwrap_or(64),
+            )),
+        }
+    }
+
+    /// Full forward pass: `images` is any whole number of images; `luts`
+    /// one 65536-entry row per conv layer. Returns `n × n_classes` logits.
+    pub fn forward(&self, images: &[f32], luts: &[i32]) -> Result<Vec<f32>> {
+        let il = self.image_dims.0 * self.image_dims.1 * self.image_dims.2;
+        if il == 0 || images.len() % il != 0 {
+            bail!(
+                "images: {} floats is not a whole number of {il}-float images",
+                images.len()
+            );
+        }
+        if luts.len() != self.layers.len() * LUT_LEN {
+            bail!(
+                "luts: got {} values, want {} ({} layers × {LUT_LEN})",
+                luts.len(),
+                self.layers.len() * LUT_LEN,
+                self.layers.len()
+            );
+        }
+        let b = images.len() / il;
+        let (h, dims) = run_topology(&self.blocks, images.to_vec(), self.image_dims, |li, x, d| {
+            self.quant_conv(li, &x, b, d, &luts[li * LUT_LEN..(li + 1) * LUT_LEN])
+        });
+        // global average pool + dense head
+        let (ho, wo, c) = dims;
+        let hw = ho * wo;
+        let mut logits = Vec::with_capacity(b * self.n_classes);
+        let mut gap = vec![0.0f32; c];
+        for bi in 0..b {
+            gap.iter_mut().for_each(|g| *g = 0.0);
+            let base = bi * hw * c;
+            for p in 0..hw {
+                for (ch, g) in gap.iter_mut().enumerate() {
+                    *g += h[base + p * c + ch];
+                }
+            }
+            let inv = 1.0 / hw as f32;
+            for n in 0..self.n_classes {
+                let mut acc = self.dense_b[n];
+                for (f, g) in gap.iter().enumerate() {
+                    acc += (g * inv) * self.dense_w[f * self.n_classes + n];
+                }
+                logits.push(acc);
+            }
+        }
+        Ok(logits)
+    }
+
+    /// One quantised LUT convolution (fake-quant boundary → im2col with
+    /// zero-point padding → LUT gather-matmul → zero-point-corrected
+    /// dequantisation → bias), mirroring `model.py::_approx_conv_q`.
+    fn quant_conv(
+        &self,
+        li: usize,
+        x: &[f32],
+        b: usize,
+        (h, w, cin): (usize, usize, usize),
+        lut: &[i32],
+    ) -> (Vec<f32>, (usize, usize, usize)) {
+        let q = &self.layers[li];
+        debug_assert_eq!(cin, q.cin);
+        let codes: Vec<u8> = x.iter().map(|&v| quantize_code(v, q.s_a, q.z_a)).collect();
+        let (ho, pad_top) = same_geometry(h, q.kh, q.stride);
+        let (wo, pad_left) = same_geometry(w, q.kw, q.stride);
+        let cout = q.cout;
+        let k = q.kh * q.kw * cin;
+        let mut out = vec![0.0f32; b * ho * wo * cout];
+        let mut acc = vec![0i32; cout];
+        // precompute the f32 constant terms of the correction, in ref.py's
+        // evaluation order: (K · z_a) · z_w
+        let za_f = q.z_a as f32;
+        let zw_f = q.z_w as f32;
+        let k_za_zw = (k as f32 * za_f) * zw_f;
+        let scale = q.s_a * q.s_w;
+        let pad_code = q.z_a as u8;
+        for bi in 0..b {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    acc.iter_mut().for_each(|a| *a = 0);
+                    let mut a_sum = 0i32;
+                    for ki in 0..q.kh {
+                        let iy = (oy * q.stride + ki) as isize - pad_top as isize;
+                        for kj in 0..q.kw {
+                            let ix = (ox * q.stride + kj) as isize - pad_left as isize;
+                            let inside =
+                                iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize;
+                            let wbase = ((ki * q.kw + kj) * cin) * cout;
+                            for ch in 0..cin {
+                                let a = if inside {
+                                    codes[((bi * h + iy as usize) * w + ix as usize) * cin + ch]
+                                } else {
+                                    pad_code
+                                };
+                                a_sum += a as i32;
+                                let lut_row = &lut[(a as usize) << 8..][..256];
+                                let wrow = &q.w_q[wbase + ch * cout..][..cout];
+                                for (n, &wc) in wrow.iter().enumerate() {
+                                    acc[n] += lut_row[wc as usize];
+                                }
+                            }
+                        }
+                    }
+                    let a_sum_f = a_sum as f32;
+                    let obase = ((bi * ho + oy) * wo + ox) * cout;
+                    for n in 0..cout {
+                        // ref.py::dequantize_acc, term by term in f32
+                        let corr = ((acc[n] as f32 - zw_f * a_sum_f)
+                            - za_f * q.w_sum[n] as f32)
+                            + k_za_zw;
+                        out[obase + n] = scale * corr + q.bias[n];
+                    }
+                }
+            }
+        }
+        (out, (ho, wo, cout))
+    }
+}
+
+impl EngineBackend for NativeEngine {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn image_dims(&self) -> (usize, usize, usize) {
+        self.image_dims
+    }
+    fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn run(&self, images: &[f32], luts: &[i32]) -> Result<Vec<f32>> {
+        if images.len() != self.batch * self.image_len() {
+            bail!(
+                "images: got {} floats, want {} (batch {} × {})",
+                images.len(),
+                self.batch * self.image_len(),
+                self.batch,
+                self.image_len()
+            );
+        }
+        self.forward(images, luts)
+    }
+
+    /// Override the default chunk-and-pad loop: `forward` already accepts
+    /// any whole number of images, so tail padding would only burn conv
+    /// work on throwaway rows.
+    fn predict_all(&self, images: &[f32], luts: &[i32]) -> Result<Vec<u8>> {
+        let logits = self.forward(images, luts)?;
+        Ok(logits
+            .chunks_exact(self.n_classes)
+            .map(super::argmax_u8)
+            .collect())
+    }
+}
+
+/// Run the 6n+2 residual topology (stem → blocks with option-A shortcuts),
+/// calling `conv(layer_index, input, dims)` for every conv layer in
+/// execution order. ReLU and residual adds mirror
+/// `model.py::forward_quant`.
+fn run_topology<F>(
+    blocks: &[BlockSpec],
+    x: Vec<f32>,
+    dims: (usize, usize, usize),
+    mut conv: F,
+) -> (Vec<f32>, (usize, usize, usize))
+where
+    F: FnMut(usize, Vec<f32>, (usize, usize, usize)) -> (Vec<f32>, (usize, usize, usize)),
+{
+    let n_images = {
+        let (h, w, c) = dims;
+        x.len() / (h * w * c).max(1)
+    };
+    let (mut h, mut d) = conv(0, x, dims);
+    h.iter_mut().for_each(|v| *v = v.max(0.0));
+    let mut li = 1;
+    for blk in blocks {
+        let inp = h.clone();
+        let idims = d;
+        let (h1, d1) = conv(li, h, d);
+        li += 1;
+        let mut h1 = h1;
+        h1.iter_mut().for_each(|v| *v = v.max(0.0));
+        let (h2, d2) = conv(li, h1, d1);
+        li += 1;
+        h = h2;
+        d = d2;
+        let sc = shortcut_a(&inp, n_images, idims, blk.stride, blk.cout);
+        for (v, s) in h.iter_mut().zip(&sc) {
+            *v = (*v + s).max(0.0);
+        }
+    }
+    (h, d)
+}
+
+/// Option-A parameter-free shortcut: spatial subsampling + zero channel
+/// padding (`model.py::_shortcut_a`).
+fn shortcut_a(
+    x: &[f32],
+    b: usize,
+    (h, w, c): (usize, usize, usize),
+    stride: usize,
+    cout: usize,
+) -> Vec<f32> {
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let mut out = vec![0.0f32; b * ho * wo * cout];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let src = ((bi * h + oy * stride) * w + ox * stride) * c;
+                let dst = ((bi * ho + oy) * wo + ox) * cout;
+                out[dst..dst + c.min(cout)].copy_from_slice(&x[src..src + c.min(cout)]);
+            }
+        }
+    }
+    out
+}
+
+/// Plain f32 convolution (zero padding) — the calibration path of the
+/// synthetic model.
+fn float_conv(
+    x: &[f32],
+    b: usize,
+    (h, w, cin): (usize, usize, usize),
+    stride: usize,
+    cout: usize,
+    weights: &[f32],
+    bias: &[f32],
+) -> (Vec<f32>, (usize, usize, usize)) {
+    let (kh, kw) = (3usize, 3usize);
+    let (ho, pad_top) = same_geometry(h, kh, stride);
+    let (wo, pad_left) = same_geometry(w, kw, stride);
+    let mut out = vec![0.0f32; b * ho * wo * cout];
+    let mut acc = vec![0.0f32; cout];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                acc.copy_from_slice(bias);
+                for ki in 0..kh {
+                    let iy = (oy * stride + ki) as isize - pad_top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kj in 0..kw {
+                        let ix = (ox * stride + kj) as isize - pad_left as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let wbase = ((ki * kw + kj) * cin) * cout;
+                        let xbase = ((bi * h + iy as usize) * w + ix as usize) * cin;
+                        for ch in 0..cin {
+                            let a = x[xbase + ch];
+                            let wrow = &weights[wbase + ch * cout..][..cout];
+                            for (n, &wv) in wrow.iter().enumerate() {
+                                acc[n] += a * wv;
+                            }
+                        }
+                    }
+                }
+                let obase = ((bi * ho + oy) * wo + ox) * cout;
+                out[obase..obase + cout].copy_from_slice(&acc);
+            }
+        }
+    }
+    (out, (ho, wo, cout))
+}
+
+/// Residual-block plan of a 6n+2 ResNet (derived the same way as
+/// `accel::ResNetSpec` / `model.py::resnet_spec`).
+pub fn blocks_for(depth: u32, width: u32) -> Vec<BlockSpec> {
+    let spec = ResNetSpec::new(depth, width);
+    spec.layers[1..]
+        .chunks(2)
+        .map(|pair| BlockSpec {
+            stride: pair[0].stride as usize,
+            cout: pair[0].cout as usize,
+        })
+        .collect()
+}
+
+/// Root seed of the synthetic fallback models (one fixed constant so every
+/// process, thread and `--jobs` count sees identical weights).
+pub const SYNTHETIC_SEED: u64 = 0x5EED_CAFE;
+
+/// An in-memory manifest describing the synthetic model family — lets the
+/// coordinator (and everything above it) run with no `artifacts/` dir at
+/// all. Accuracies are the synthetic models' chance-level baselines (they
+/// are untrained), reported as 0.0 "unmeasured".
+pub fn synthetic_manifest() -> Manifest {
+    let image_dims = (IMAGE_SIZE, IMAGE_SIZE, N_CHANNELS);
+    let width = 8u32;
+    let models = crate::accel::PAPER_DEPTHS
+        .iter()
+        .map(|&depth| {
+            let spec = ResNetSpec::new(depth, width);
+            let counts = spec.mult_counts(IMAGE_SIZE as u32);
+            let layers = spec
+                .layers
+                .iter()
+                .zip(&counts)
+                .enumerate()
+                .map(|(i, (l, &n_mults))| LayerMeta {
+                    index: i,
+                    stage: l.stage,
+                    block: l.block,
+                    conv: l.conv,
+                    cin: l.cin,
+                    cout: l.cout,
+                    stride: l.stride,
+                    n_mults,
+                })
+                .collect();
+            ModelMeta {
+                name: format!("resnet{depth}"),
+                depth,
+                width,
+                n_conv_layers: spec.layers.len(),
+                float_acc: 0.0,
+                q8_acc: 0.0,
+                artifacts: vec![ArtifactMeta {
+                    path: String::new(),
+                    batch: 64,
+                    kernel: "native".to_string(),
+                }],
+                layers,
+                image_dims,
+                n_classes: N_CLASSES,
+                qweights: None,
+            }
+        })
+        .collect();
+    Manifest {
+        models,
+        testset_images: String::new(),
+        testset_labels: String::new(),
+        testset_n: 512,
+        image_dims,
+        n_classes: N_CLASSES,
+    }
+}
+
+/// Little-endian byte-stream reader for the qweights artifact.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("qweights artifact truncated at byte {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    /// A shape/stride header field: bounded so products of up to four of
+    /// them cannot overflow `usize` on a corrupt artifact (the bound is
+    /// far above any real layer dimension).
+    fn dim(&mut self) -> Result<usize> {
+        let v = self.u32()?;
+        if v > 1 << 15 {
+            bail!(
+                "qweights artifact corrupt: implausible dimension {v} at byte {}",
+                self.pos
+            );
+        }
+        Ok(v as usize)
+    }
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let b = self.take(4 * n)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{broadcast_lut, exact_lut};
+
+    #[test]
+    fn rounding_is_half_even() {
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(3.5), 4.0);
+        assert_eq!(round_half_even(-2.5), -2.0);
+        assert_eq!(round_half_even(-3.5), -4.0);
+        assert_eq!(round_half_even(2.4), 2.0);
+        assert_eq!(round_half_even(-2.6), -3.0);
+    }
+
+    #[test]
+    fn same_geometry_matches_xla() {
+        // H=16, k=3: s=1 → out 16 pad (1,1); s=2 → out 8, pad (0,1)
+        assert_eq!(same_geometry(16, 3, 1), (16, 1));
+        assert_eq!(same_geometry(16, 3, 2), (8, 0));
+    }
+
+    #[test]
+    fn synthetic_engine_is_deterministic_and_lut_sensitive() {
+        let e1 = NativeEngine::synthetic(8, 4, 7, 4);
+        let e2 = NativeEngine::synthetic(8, 4, 7, 4);
+        let n_layers = e1.n_layers();
+        assert_eq!(n_layers, 7);
+        let imgs = Dataset::generate(&DatasetConfig {
+            n: 4,
+            ..Default::default()
+        });
+        let exact = broadcast_lut(&exact_lut(), n_layers);
+        let a = e1.forward(&imgs.images, &exact).unwrap();
+        let b = e2.forward(&imgs.images, &exact).unwrap();
+        assert_eq!(a, b, "same seed must give identical engines");
+        // destroyed LUT must change the logits
+        let zero = vec![0i32; n_layers * LUT_LEN];
+        let z = e1.forward(&imgs.images, &zero).unwrap();
+        assert_ne!(a, z);
+        // different seed → different model
+        let e3 = NativeEngine::synthetic(8, 4, 8, 4);
+        assert_ne!(a, e3.forward(&imgs.images, &exact).unwrap());
+    }
+
+    #[test]
+    fn forward_rejects_malformed_buffers() {
+        let e = NativeEngine::synthetic(8, 4, 1, 2);
+        let exact = broadcast_lut(&exact_lut(), e.n_layers());
+        assert!(e.forward(&[0.0; 7], &exact).is_err());
+        let img = vec![0.0f32; e.image_len()];
+        assert!(e.forward(&img, &[0i32; 5]).is_err());
+    }
+
+    #[test]
+    fn blocks_match_spec() {
+        let b = blocks_for(8, 8);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0].stride, 1);
+        assert_eq!(b[1].stride, 2);
+        assert_eq!(b[2].stride, 2);
+        assert_eq!(b[2].cout, 32);
+    }
+
+    #[test]
+    fn synthetic_manifest_mirrors_family() {
+        let m = synthetic_manifest();
+        assert_eq!(m.models.len(), 8);
+        let r8 = m.model("resnet8").unwrap();
+        assert_eq!(r8.n_conv_layers, 7);
+        assert!(r8.total_mults() > 0);
+    }
+}

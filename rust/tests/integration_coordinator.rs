@@ -1,32 +1,34 @@
-//! Integration: coordinator + batcher behaviour over the real PJRT engines
-//! (skips without artifacts), plus engine-independent property tests of the
-//! coordinator data structures.
+//! Integration: coordinator + batcher behaviour over real engines. With
+//! artifacts present these run against whatever backend `Auto` resolves
+//! (PJRT when the real bindings exist); without artifacts they run against
+//! the native backend's synthetic models — so this suite never skips.
 
+use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
 
 use evoapproxlib::coordinator::batcher::{BatchPolicy, Batcher};
-use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, KernelKind};
-use evoapproxlib::runtime::{broadcast_lut, exact_lut};
+use evoapproxlib::coordinator::{Backend, Coordinator, CoordinatorConfig, KernelKind};
+use evoapproxlib::runtime::{broadcast_lut, exact_lut, TestSet};
 
-fn artifacts_dir() -> Option<std::path::PathBuf> {
+/// A coordinator + test split that works everywhere: artifacts + Auto when
+/// a build exists, native synthetic otherwise.
+fn start_coordinator() -> (Coordinator, evoapproxlib::coordinator::CoordinatorGuard, TestSet) {
     let dir = std::env::var("EVOAPPROX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let p = std::path::PathBuf::from(dir);
-    if p.join("manifest.json").exists() {
-        Some(p)
-    } else {
-        eprintln!("skipping: no artifacts");
-        None
-    }
+    let (coord, guard) = Coordinator::start(CoordinatorConfig::new(&dir)).unwrap();
+    let testset = coord
+        .manifest()
+        .load_testset(&dir)
+        .unwrap_or_else(|_| TestSet::synthetic(96));
+    (coord, guard, testset)
 }
 
 #[test]
 fn unknown_model_is_an_error_not_a_crash() {
-    let Some(dir) = artifacts_dir() else { return };
-    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&dir)).unwrap();
+    let (coord, _guard, _) = start_coordinator();
     let r = coord.warm("resnet9000", KernelKind::Jnp);
     assert!(r.is_err());
-    // the executor must still serve valid requests afterwards
+    // the coordinator must still serve valid requests afterwards
     assert!(coord.warm("resnet8", KernelKind::Jnp).is_ok());
     let m = coord.metrics();
     assert_eq!(m.errors, 0, "warm errors are not job errors");
@@ -35,9 +37,7 @@ fn unknown_model_is_an_error_not_a_crash() {
 
 #[test]
 fn predict_handles_non_multiple_of_batch() {
-    let Some(dir) = artifacts_dir() else { return };
-    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&dir)).unwrap();
-    let testset = coord.manifest().load_testset(&dir).unwrap();
+    let (coord, _guard, testset) = start_coordinator();
     let meta = coord.manifest().model("resnet8").unwrap();
     let n = meta.artifacts.iter().map(|a| a.batch).max().unwrap() + 7; // deliberately ragged
     let n = n.min(testset.n);
@@ -52,12 +52,59 @@ fn predict_handles_non_multiple_of_batch() {
     coord.shutdown();
 }
 
+/// A malformed buffer must come back as `Err`, and the engine must keep
+/// serving afterwards — the old `assert_eq!` panicked the executor thread.
+#[test]
+fn malformed_request_is_an_error_and_engine_survives() {
+    let (coord, _guard, testset) = start_coordinator();
+    let meta = coord.manifest().model("resnet8").unwrap();
+    let il = testset.image_len;
+    let luts = Arc::new(broadcast_lut(&exact_lut(), meta.n_conv_layers));
+
+    // ragged image buffer (not a multiple of the image size)
+    let bad = Arc::new(testset.images[..il + 3].to_vec());
+    let r = coord.predict("resnet8", KernelKind::Jnp, bad, luts.clone());
+    assert!(r.is_err(), "ragged buffer must be an Err, not a panic");
+
+    // wrong LUT row count
+    let images = Arc::new(testset.images[..4 * il].to_vec());
+    let bad_luts = Arc::new(exact_lut()); // one row instead of n_layers
+    if meta.n_conv_layers > 1 {
+        let r = coord.predict("resnet8", KernelKind::Jnp, images.clone(), bad_luts);
+        assert!(r.is_err(), "short LUT buffer must be an Err");
+    }
+
+    // and the very same engine still answers valid requests
+    let preds = coord
+        .predict("resnet8", KernelKind::Jnp, images, luts)
+        .unwrap();
+    assert_eq!(preds.len(), 4);
+    assert!(coord.metrics().errors >= 1);
+    coord.shutdown();
+}
+
+/// Dropping the guard while `Coordinator` clones are still alive must shut
+/// the executor down and return — the old guard held `tx2: None` and
+/// joined a thread blocked forever in `recv()`.
+#[test]
+fn guard_drop_with_live_coordinator_does_not_deadlock() {
+    let (coord, guard, _) = start_coordinator();
+    let keep_alive = coord.clone(); // holds a live request sender
+    let (done_tx, done_rx) = channel();
+    std::thread::spawn(move || {
+        drop(guard);
+        let _ = done_tx.send(());
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("guard drop deadlocked against a live Coordinator clone");
+    drop(keep_alive);
+}
+
 #[test]
 fn batcher_preserves_request_order_and_matches_direct_path() {
-    let Some(dir) = artifacts_dir() else { return };
-    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&dir)).unwrap();
+    let (coord, _guard, testset) = start_coordinator();
     coord.warm("resnet8", KernelKind::Jnp).unwrap();
-    let testset = coord.manifest().load_testset(&dir).unwrap();
     let meta = coord.manifest().model("resnet8").unwrap();
     let il = testset.image_len;
     let n = 48usize.min(testset.n);
@@ -97,14 +144,17 @@ fn batcher_preserves_request_order_and_matches_direct_path() {
     let stats = guard.join();
     assert_eq!(batched, direct, "batching must not change predictions");
     assert_eq!(stats.requests, n as u64);
-    assert!(stats.batches <= (n as u64).div_ceil(16) + 2);
+    assert!(
+        stats.mean_occupancy <= 1.0 + 1e-9,
+        "occupancy {} exceeds 1.0 — dispatch over-drained the queue",
+        stats.mean_occupancy
+    );
     coord.shutdown();
 }
 
 #[test]
 fn batcher_rejects_wrong_image_size() {
-    let Some(dir) = artifacts_dir() else { return };
-    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&dir)).unwrap();
+    let (coord, _guard, _) = start_coordinator();
     let meta = coord.manifest().model("resnet8").unwrap();
     let luts = Arc::new(broadcast_lut(&exact_lut(), meta.n_conv_layers));
     let (batcher, _g) = Batcher::spawn(
@@ -121,9 +171,7 @@ fn batcher_rejects_wrong_image_size() {
 
 #[test]
 fn metrics_accumulate() {
-    let Some(dir) = artifacts_dir() else { return };
-    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&dir)).unwrap();
-    let testset = coord.manifest().load_testset(&dir).unwrap();
+    let (coord, _guard, testset) = start_coordinator();
     let meta = coord.manifest().model("resnet8").unwrap();
     let il = testset.image_len;
     let luts = Arc::new(broadcast_lut(&exact_lut(), meta.n_conv_layers));
@@ -144,4 +192,38 @@ fn metrics_accumulate() {
     assert!(m.batches >= 3);
     assert!(m.job_latency_mean_us > 0.0);
     coord.shutdown();
+}
+
+/// Forcing `--backend native` must work with no artifacts dir at all.
+#[test]
+fn forced_native_backend_runs_without_artifacts() {
+    let dir = std::env::temp_dir().join("evoapprox_definitely_no_artifacts");
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::native(&dir)).unwrap();
+    assert_eq!(coord.backend(), Backend::Native);
+    assert!(coord.manifest().model("resnet8").is_some());
+    let ts = TestSet::synthetic(8);
+    let meta = coord.manifest().model("resnet8").unwrap();
+    let luts = Arc::new(broadcast_lut(&exact_lut(), meta.n_conv_layers));
+    let acc = coord
+        .accuracy(
+            "resnet8",
+            KernelKind::Jnp,
+            Arc::new(ts.images.clone()),
+            &ts.labels,
+            luts,
+        )
+        .unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    coord.shutdown();
+}
+
+/// Forcing `--backend pjrt` without artifacts must fail fast with a clear
+/// error, not limp along.
+#[test]
+fn forced_pjrt_backend_without_artifacts_errors() {
+    let dir = std::env::temp_dir().join("evoapprox_definitely_no_artifacts");
+    let r = Coordinator::start(
+        CoordinatorConfig::new(&dir).with_backend(Backend::Pjrt),
+    );
+    assert!(r.is_err());
 }

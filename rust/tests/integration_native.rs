@@ -1,0 +1,383 @@
+//! Backend-equivalence suite for the native LUT-inference engine:
+//!
+//! 1. **Golden fixtures** — `tests/fixtures/native_fixture.json` pins
+//!    logits computed by the JAX `ref.py`/`forward_quant` oracle
+//!    (`python -m compile.make_fixture`); the pure-Rust engine must agree
+//!    to float round-off under exact, truncated and single-layer LUTs.
+//! 2. **Exact LUT ≡ integer arithmetic** — with the exact product table,
+//!    the LUT-gather convolution must be *bit-identical* to plain integer
+//!    multiply-accumulate followed by the same dequantisation.
+//! 3. **Determinism across workers** — native accuracy campaigns must be
+//!    byte-identical for `--jobs 1` and `--jobs N`.
+//!
+//! None of these need artifacts, PJRT or Python at test time.
+
+use evoapproxlib::circuit::baselines::truncated_multiplier;
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::generators::wallace_multiplier;
+use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::coordinator::{Backend, Coordinator, CoordinatorConfig, KernelKind};
+use evoapproxlib::library::{Entry, Origin};
+use evoapproxlib::resilience::{
+    per_layer_campaign, whole_network_campaign, MultiplierSummary,
+};
+use evoapproxlib::runtime::native::{blocks_for, round_half_even, BlockSpec, NativeEngine, QuantConv};
+use evoapproxlib::runtime::{broadcast_lut, exact_lut, EngineBackend, TestSet, LUT_LEN};
+use evoapproxlib::util::json::Json;
+
+fn fixture() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/native_fixture.json");
+    let text = std::fs::read_to_string(path).expect("fixture committed with the repo");
+    Json::parse(&text).expect("fixture parses")
+}
+
+fn f64_vec(j: &Json, key: &str) -> Vec<f64> {
+    j.req_arr(key)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect()
+}
+
+fn engine_from_fixture(fx: &Json) -> NativeEngine {
+    let depth = fx.req_i64("depth").unwrap() as u32;
+    let width = fx.req_i64("width").unwrap() as u32;
+    let img = fx.req_arr("image").unwrap();
+    let dims = (
+        img[0].as_i64().unwrap() as usize,
+        img[1].as_i64().unwrap() as usize,
+        img[2].as_i64().unwrap() as usize,
+    );
+    let n_classes = fx.req_i64("n_classes").unwrap() as usize;
+    let layers: Vec<QuantConv> = fx
+        .req_arr("layers")
+        .unwrap()
+        .iter()
+        .map(|l| {
+            QuantConv::new(
+                l.req_i64("kh").unwrap() as usize,
+                l.req_i64("kw").unwrap() as usize,
+                l.req_i64("cin").unwrap() as usize,
+                l.req_i64("cout").unwrap() as usize,
+                l.req_i64("stride").unwrap() as usize,
+                l.req_f64("s_w").unwrap() as f32,
+                l.req_i64("z_w").unwrap() as i32,
+                l.req_f64("s_a").unwrap() as f32,
+                l.req_i64("z_a").unwrap() as i32,
+                l.req_arr("w_q")
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.as_i64().unwrap() as u8)
+                    .collect(),
+                f64_vec(l, "b").iter().map(|&v| v as f32).collect(),
+            )
+            .unwrap()
+        })
+        .collect();
+    NativeEngine::from_parts(
+        layers,
+        blocks_for(depth, width),
+        f64_vec(fx, "dense_w").iter().map(|&v| v as f32).collect(),
+        f64_vec(fx, "dense_b").iter().map(|&v| v as f32).collect(),
+        2,
+        dims,
+        n_classes,
+        "fixture".into(),
+    )
+    .unwrap()
+}
+
+/// The truncated-multiplier product table the fixture was generated with.
+fn trunc_lut(keep: u32) -> Vec<i32> {
+    let mask = 0xFFu32 & !((1u32 << (8 - keep)) - 1);
+    let mut lut = Vec::with_capacity(LUT_LEN);
+    for a in 0..256u32 {
+        for w in 0..256u32 {
+            lut.push(((a & mask) * (w & mask)) as i32);
+        }
+    }
+    lut
+}
+
+fn assert_logits_close(got: &[f32], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let tol = 1e-3 * 1.0f64.max(w.abs());
+        assert!(
+            (g as f64 - w).abs() <= tol,
+            "{what}: logit {i} diverges: {g} vs {w}"
+        );
+    }
+    // the classification decisions must agree exactly
+    let n = 10;
+    for img in 0..got.len() / n {
+        let argmax = |row: &[f64]| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        let g: Vec<f64> = got[img * n..(img + 1) * n].iter().map(|&v| v as f64).collect();
+        assert_eq!(
+            argmax(&g),
+            argmax(&want[img * n..(img + 1) * n]),
+            "{what}: image {img} argmax"
+        );
+    }
+}
+
+/// 1. The native engine reproduces the ref.py-pinned golden logits under
+///    the exact LUT, a whole-network truncated LUT, and a single-layer
+///    substitution (exercising per-layer LUT row slicing).
+#[test]
+fn native_engine_matches_ref_py_golden_fixture() {
+    let fx = fixture();
+    let engine = engine_from_fixture(&fx);
+    let n_layers = engine.n_layers();
+    assert_eq!(n_layers, 7);
+    let images: Vec<f32> = f64_vec(&fx, "images").iter().map(|&v| v as f32).collect();
+    let keep = fx.req_i64("trunc_keep").unwrap() as u32;
+    let trunc = trunc_lut(keep);
+
+    let exact_all = broadcast_lut(&exact_lut(), n_layers);
+    let logits = engine.forward(&images, &exact_all).unwrap();
+    assert_logits_close(&logits, &f64_vec(&fx, "logits_exact"), "exact LUT");
+
+    let trunc_all = broadcast_lut(&trunc, n_layers);
+    let logits = engine.forward(&images, &trunc_all).unwrap();
+    assert_logits_close(&logits, &f64_vec(&fx, "logits_trunc"), "trunc LUT");
+
+    let mut layer2 = exact_all.clone();
+    layer2[2 * LUT_LEN..3 * LUT_LEN].copy_from_slice(&trunc);
+    let logits = engine.forward(&images, &layer2).unwrap();
+    assert_logits_close(&logits, &f64_vec(&fx, "logits_layer2"), "layer-2 LUT");
+
+    // the three configurations must genuinely differ (LUT sensitivity)
+    let a = engine.forward(&images, &exact_all).unwrap();
+    let b = engine.forward(&images, &trunc_all).unwrap();
+    assert_ne!(a, b);
+
+    // the netlist-simulated truncated multiplier produces the same table
+    // the fixture's arithmetic formula used (TFApprox ingestion ≡ math)
+    let net_lut =
+        evoapproxlib::resilience::lut_from_netlist(&truncated_multiplier(8, keep)).unwrap();
+    assert_eq!(net_lut, trunc, "netlist LUT must equal the arithmetic table");
+}
+
+/// 2. With the exact product table, the LUT path must be bit-identical to
+///    plain integer multiply-accumulate + the same dequantisation — on a
+///    minimal single-conv network computed independently here.
+#[test]
+fn exact_lut_equals_integer_arithmetic() {
+    let (h, w, cin, cout, n_classes) = (2usize, 2usize, 1usize, 2usize, 3usize);
+    let (s_w, z_w, s_a, z_a) = (0.125f32, 117i32, 0.5f32, 3i32);
+    let w_q: Vec<u8> = (0..9 * cin * cout).map(|i| (i * 29 % 256) as u8).collect();
+    let bias = vec![0.1f32, -0.2];
+    let layer = QuantConv::new(3, 3, cin, cout, 1, s_w, z_w, s_a, z_a, w_q.clone(), bias.clone())
+        .unwrap();
+    let dense_w = vec![0.3f32, -0.1, 0.2, 0.05, -0.4, 0.6]; // [2, 3]
+    let dense_b = vec![0.0f32, 0.25, -0.5];
+    let engine = NativeEngine::from_parts(
+        vec![layer],
+        Vec::<BlockSpec>::new(),
+        dense_w.clone(),
+        dense_b.clone(),
+        1,
+        (h, w, cin),
+        n_classes,
+        "micro".into(),
+    )
+    .unwrap();
+    let images = vec![0.9f32, -0.7, 2.3, 0.4];
+    let luts = exact_lut();
+    let got = engine.forward(&images, &luts).unwrap();
+
+    // independent computation: codes → direct integer products → the same
+    // correction algebra → relu → gap → dense (no LUT anywhere)
+    let codes: Vec<i32> = images
+        .iter()
+        .map(|&v| (round_half_even(v / s_a) as i32 + z_a).clamp(0, 255))
+        .collect();
+    let k = 9 * cin;
+    let w_sum: Vec<i32> = (0..cout)
+        .map(|n| (0..k).map(|kk| w_q[kk * cout + n] as i32).sum())
+        .collect();
+    let k_za_zw = (k as f32 * z_a as f32) * z_w as f32;
+    let scale = s_a * s_w;
+    let mut gap = vec![0.0f32; cout];
+    for oy in 0..h as isize {
+        for ox in 0..w as isize {
+            let mut acc = vec![0i32; cout];
+            let mut a_sum = 0i32;
+            for ki in 0..3isize {
+                for kj in 0..3isize {
+                    let (iy, ix) = (oy + ki - 1, ox + kj - 1);
+                    let a = if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
+                        codes[(iy as usize * w + ix as usize) * cin]
+                    } else {
+                        z_a
+                    };
+                    a_sum += a;
+                    for (n, slot) in acc.iter_mut().enumerate() {
+                        let wc = w_q[((ki * 3 + kj) as usize) * cout + n] as i32;
+                        *slot += a * wc; // plain multiply — no LUT
+                    }
+                }
+            }
+            for n in 0..cout {
+                let corr = ((acc[n] as f32 - z_w as f32 * a_sum as f32)
+                    - z_a as f32 * w_sum[n] as f32)
+                    + k_za_zw;
+                let y = (scale * corr + bias[n]).max(0.0);
+                gap[n] += y;
+            }
+        }
+    }
+    let inv = 1.0 / (h * w) as f32;
+    let want: Vec<f32> = (0..n_classes)
+        .map(|n| {
+            let mut acc = dense_b[n];
+            for (f, g) in gap.iter().enumerate() {
+                acc += (g * inv) * dense_w[f * n_classes + n];
+            }
+            acc
+        })
+        .collect();
+    assert_eq!(got, want, "exact-LUT path must be bit-identical to integer arithmetic");
+}
+
+fn exact_and_trunc_summaries() -> Vec<MultiplierSummary> {
+    let model = CostModel::default();
+    let f = ArithFn::Mul { w: 8 };
+    let exact = Entry::characterise(
+        wallace_multiplier(8),
+        f,
+        &model,
+        Origin::Seed("wallace".into()),
+    );
+    let trunc = Entry::characterise(
+        truncated_multiplier(8, 6),
+        f,
+        &model,
+        Origin::Truncated { keep: 6 },
+    );
+    vec![
+        MultiplierSummary::from_entry(&exact, &exact.cost).unwrap(),
+        MultiplierSummary::from_entry(&trunc, &exact.cost).unwrap(),
+    ]
+}
+
+/// 3. Native accuracy campaigns are byte-identical across worker counts —
+///    the submission-order-merge contract extended to the inference grid.
+#[test]
+fn native_campaigns_identical_across_jobs() {
+    let dir = std::env::temp_dir().join("evoapprox_native_jobs_no_artifacts");
+    let mults = exact_and_trunc_summaries();
+    let testset = TestSet::synthetic(16);
+
+    let run_fig4 = |jobs: usize| {
+        let (coord, _guard) = Coordinator::start(CoordinatorConfig::native(&dir)).unwrap();
+        assert_eq!(coord.backend(), Backend::Native);
+        let r = per_layer_campaign(&coord, "resnet8", &mults, &testset, KernelKind::Jnp, jobs)
+            .unwrap();
+        coord.shutdown();
+        r
+    };
+    let a = run_fig4(1);
+    let b = run_fig4(4);
+    assert_eq!(
+        a.reference_accuracy.to_bits(),
+        b.reference_accuracy.to_bits()
+    );
+    assert_eq!(a.points.len(), b.points.len());
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.multiplier, pb.multiplier);
+        assert_eq!(pa.layer, pb.layer);
+        assert_eq!(
+            pa.accuracy.to_bits(),
+            pb.accuracy.to_bits(),
+            "jobs=1 vs jobs=4 diverged at ({}, {})",
+            pa.multiplier,
+            pa.layer
+        );
+        assert_eq!(pa.power_drop_pct.to_bits(), pb.power_drop_pct.to_bits());
+    }
+
+    let models = vec!["resnet8".to_string()];
+    let run_t2 = |jobs: usize| {
+        let (coord, _guard) = Coordinator::start(CoordinatorConfig::native(&dir)).unwrap();
+        let r = whole_network_campaign(&coord, &models, &mults, &testset, KernelKind::Jnp, jobs)
+            .unwrap();
+        coord.shutdown();
+        r
+    };
+    let a = run_t2(1);
+    let b = run_t2(3);
+    assert_eq!(a.exact_row.len(), b.exact_row.len());
+    for (ra, rb) in a.exact_row.iter().zip(&b.exact_row) {
+        assert_eq!(ra.0, rb.0);
+        assert_eq!(ra.1.to_bits(), rb.1.to_bits());
+    }
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        for (aa, bb) in ra.accuracies.iter().zip(&rb.accuracies) {
+            assert_eq!(aa.1.to_bits(), bb.1.to_bits());
+        }
+    }
+}
+
+/// The qweights loader round-trips a hand-written artifact.
+#[test]
+fn qweights_artifact_round_trip() {
+    use std::io::Write;
+    let fx = fixture();
+    let engine = engine_from_fixture(&fx);
+    // serialise the fixture model in the aot.py binary format
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(b"EVOQ");
+    buf.extend_from_slice(&1u32.to_le_bytes());
+    buf.extend_from_slice(&(engine.n_layers() as u32).to_le_bytes());
+    for l in engine.layers() {
+        for v in [l.kh, l.kw, l.cin, l.cout, l.stride] {
+            buf.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        buf.extend_from_slice(&l.s_w.to_le_bytes());
+        buf.extend_from_slice(&(l.z_w as u32).to_le_bytes());
+        buf.extend_from_slice(&l.s_a.to_le_bytes());
+        buf.extend_from_slice(&(l.z_a as u32).to_le_bytes());
+        buf.extend_from_slice(&l.w_q);
+        for b in &l.bias {
+            buf.extend_from_slice(&b.to_le_bytes());
+        }
+    }
+    let feat = engine.layers().last().unwrap().cout;
+    buf.extend_from_slice(&(feat as u32).to_le_bytes());
+    buf.extend_from_slice(&(engine.n_classes as u32).to_le_bytes());
+    let dw = f64_vec(&fx, "dense_w");
+    let db = f64_vec(&fx, "dense_b");
+    for v in dw.iter().chain(db.iter()) {
+        buf.extend_from_slice(&(*v as f32).to_le_bytes());
+    }
+    let dir = std::env::temp_dir().join("evoapprox_qweights_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fixture.qweights.bin");
+    std::fs::File::create(&path)
+        .unwrap()
+        .write_all(&buf)
+        .unwrap();
+
+    // a minimal ModelMeta describing the fixture network
+    let mut manifest = evoapproxlib::runtime::native::synthetic_manifest();
+    let meta = manifest.models.iter_mut().find(|m| m.name == "resnet8").unwrap();
+    meta.width = 4;
+    meta.qweights = Some("fixture.qweights.bin".to_string());
+    let loaded = NativeEngine::load(&dir, meta, "fixture.qweights.bin").unwrap();
+
+    let images: Vec<f32> = f64_vec(&fx, "images").iter().map(|&v| v as f32).collect();
+    let luts = broadcast_lut(&exact_lut(), engine.n_layers());
+    assert_eq!(
+        loaded.forward(&images, &luts).unwrap(),
+        engine.forward(&images, &luts).unwrap(),
+        "loaded artifact must behave identically to the in-memory model"
+    );
+}

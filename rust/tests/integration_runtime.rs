@@ -1,10 +1,15 @@
 //! Integration: the full AOT bridge — manifest → HLO text → PJRT compile →
 //! execute → accuracy against the Python-measured golden numbers.
 //!
-//! Requires `make artifacts` (or EVOAPPROX_ARTIFACTS pointing at a build);
-//! tests skip gracefully otherwise so `cargo test` works pre-build.
+//! The PJRT tests require `make artifacts` (or EVOAPPROX_ARTIFACTS
+//! pointing at a build) and skip gracefully otherwise; the native-backend
+//! golden test additionally needs the build to have exported a
+//! `qweights` artifact (pure-Rust equivalence surface lives in
+//! `integration_native.rs` and needs nothing).
 
-use evoapproxlib::runtime::{broadcast_lut, exact_lut, Manifest, PjrtRuntime, LUT_LEN};
+use evoapproxlib::runtime::{
+    broadcast_lut, exact_lut, EngineBackend, Manifest, NativeEngine, PjrtRuntime, LUT_LEN,
+};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::env::var("EVOAPPROX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -35,6 +40,31 @@ fn golden_accuracy_matches_python() {
     assert!(
         (acc - model.q8_acc).abs() < 0.02,
         "rust accuracy {acc} vs python golden {}",
+        model.q8_acc
+    );
+}
+
+/// Same golden bar as `golden_accuracy_matches_python`, but through the
+/// pure-Rust backend loading the quantized-weights artifact — the two
+/// backends must sit on the same accuracy surface.
+#[test]
+fn native_golden_accuracy_matches_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let model = &manifest.models[0];
+    if model.qweights.is_none() {
+        eprintln!("skipping: artifacts predate the qweights export");
+        return;
+    }
+    let engine = NativeEngine::for_model(&dir, model).unwrap();
+    let testset = manifest.load_testset(&dir).unwrap();
+    let luts = broadcast_lut(&exact_lut(), model.n_conv_layers);
+    let acc = engine
+        .accuracy(&testset.images, &testset.labels, &luts)
+        .unwrap();
+    assert!(
+        (acc - model.q8_acc).abs() < 0.02,
+        "native accuracy {acc} vs python golden {}",
         model.q8_acc
     );
 }
