@@ -1,124 +1,165 @@
-//! Serving example: classify a stream of single-image requests through the
-//! dynamic batcher in front of the coordinator — the accelerator "in
-//! production" with an approximate multiplier installed, reporting
-//! latency/throughput and the power the approximation buys.
+//! Serving example — the accelerator "in production" behind the real
+//! network path: starts the `server` subsystem on an ephemeral port and
+//! drives every endpoint group through the in-crate HTTP client:
+//!
+//! 1. `GET /healthz` — liveness + resolved backend;
+//! 2. `POST /v1/predict` — a stream of single-image classification
+//!    requests that aggregate in the dynamic batcher;
+//! 3. `GET /v1/library/census` + `GET /v1/select` — the library/autoAx
+//!    query surface;
+//! 4. `POST /v1/campaigns/resilience` → `GET /v1/jobs/{id}` — an async
+//!    Fig. 4 campaign, submitted and polled to completion;
+//! 5. `POST /v1/admin/shutdown` — graceful drain.
 //!
 //! Uses the PJRT backend when artifacts + real bindings exist, the native
 //! pure-Rust backend (synthetic model + split) everywhere else. Run:
 //! `cargo run --release --example serve_inference [-- --quick]`
 
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use evoapproxlib::circuit::baselines::truncated_multiplier;
-use evoapproxlib::circuit::cost::CostModel;
-use evoapproxlib::circuit::generators::wallace_multiplier;
-use evoapproxlib::circuit::verify::ArithFn;
-use evoapproxlib::coordinator::batcher::{BatchPolicy, Batcher};
-use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, KernelKind};
-use evoapproxlib::library::{Entry, Origin};
-use evoapproxlib::resilience::lut_for_entry;
-use evoapproxlib::runtime::broadcast_lut;
+use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig};
+use evoapproxlib::library::Library;
+use evoapproxlib::runtime::TestSet;
+use evoapproxlib::server::{http, Server, ServerConfig};
+use evoapproxlib::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let artifacts = std::env::var("EVOAPPROX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let n_requests: usize = if quick { 128 } else { 512 };
-
-    // choose the deployed multiplier: truncated-7-bit (a mild approximation)
-    let model = CostModel::default();
-    let f = ArithFn::Mul { w: 8 };
-    let exact = Entry::characterise(
-        wallace_multiplier(8),
-        f,
-        &model,
-        Origin::Seed("wallace".into()),
-    );
-    let approx = Entry::characterise(
-        truncated_multiplier(8, 7),
-        f,
-        &model,
-        Origin::Truncated { keep: 7 },
-    );
-    println!(
-        "deploying {} — {:.1}% of exact multiplier power",
-        approx.origin.label(),
-        approx.cost.relative_power(&exact.cost)
-    );
+    let n_requests: usize = if quick { 64 } else { 256 };
 
     let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&artifacts))?;
-    println!("serving on the {} backend", coord.backend().as_str());
-    let model_name = "resnet8";
-    coord.warm(model_name, KernelKind::Jnp)?;
-    let n_layers = coord
-        .manifest()
-        .model(model_name)
-        .expect("resnet8 in manifest")
-        .n_conv_layers;
-    let luts = Arc::new(broadcast_lut(&lut_for_entry(&approx)?, n_layers));
-
-    let (batcher, guard) = Batcher::spawn(
+    let handle = Server::start(
         coord.clone(),
-        model_name,
-        KernelKind::Jnp,
-        luts,
-        BatchPolicy {
-            max_batch: 64,
-            max_wait: Duration::from_millis(10),
+        Library::baseline(),
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            ..Default::default()
         },
     )?;
+    let addr = handle.addr().to_string();
 
-    // request stream from the workload generator (open-loop burst);
-    // synthetic split only stands in for the native-fallback models
-    let testset = match coord.manifest().load_testset(&artifacts) {
-        Ok(ts) => ts,
-        Err(_) if coord.backend() == evoapproxlib::coordinator::Backend::Native => {
-            evoapproxlib::runtime::TestSet::synthetic(512)
-        }
-        Err(e) => return Err(e),
-    };
+    // 1. liveness
+    let (status, body) = http::get(&addr, "/healthz")?;
+    anyhow::ensure!(status == 200, "healthz returned {status}");
+    let health = Json::parse(&body).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "server http://{addr} is {} on the {} backend",
+        health.req_str("status").map_err(|e| anyhow::anyhow!("{e}"))?,
+        health.req_str("backend").map_err(|e| anyhow::anyhow!("{e}"))?,
+    );
+
+    // 2. classification stream through the batcher
+    let testset = TestSet::synthetic(64);
     let il = testset.image_len;
+    let bodies: Vec<String> = (0..testset.n)
+        .map(|k| http::predict_body(&testset.images[k * il..(k + 1) * il]))
+        .collect();
     let t0 = Instant::now();
-    let mut pending = Vec::with_capacity(n_requests);
-    let mut latencies = Vec::with_capacity(n_requests);
-    for k in 0..n_requests {
-        let idx = k % testset.n;
-        let img = testset.images[idx * il..(idx + 1) * il].to_vec();
-        pending.push((k, Instant::now(), batcher.classify_async(img)?));
-    }
     let mut correct = 0usize;
-    for (k, submitted, rx) in pending {
-        let pred = rx.recv()??;
-        latencies.push(submitted.elapsed());
-        if pred == testset.labels[k % testset.n] {
-            correct += 1;
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let mut workers = Vec::new();
+        for c in 0..4usize {
+            let addr = &addr;
+            let bodies = &bodies;
+            let labels = &testset.labels;
+            workers.push(s.spawn(move || -> anyhow::Result<usize> {
+                let mut correct = 0usize;
+                for i in 0..n_requests / 4 {
+                    let idx = (c * (n_requests / 4) + i) % bodies.len();
+                    let (status, body) = http::post_json(addr, "/v1/predict", &bodies[idx])?;
+                    anyhow::ensure!(status == 200, "predict returned {status}: {body}");
+                    let j = Json::parse(&body).map_err(|e| anyhow::anyhow!("{e}"))?;
+                    let pred = j
+                        .req_arr("predictions")
+                        .map_err(|e| anyhow::anyhow!("{e}"))?
+                        .first()
+                        .and_then(Json::as_i64)
+                        .ok_or_else(|| anyhow::anyhow!("empty predictions"))?;
+                    if pred == labels[idx] as i64 {
+                        correct += 1;
+                    }
+                }
+                Ok(correct)
+            }));
         }
-    }
+        for w in workers {
+            correct += w.join().expect("client thread panicked")?;
+        }
+        Ok(())
+    })?;
     let wall = t0.elapsed();
-    drop(batcher);
-    let stats = guard.join();
+    let served = (n_requests / 4) * 4;
+    println!(
+        "served {served} predict requests in {wall:.2?} ({:.1} req/s), accuracy {:.3}",
+        served as f64 / wall.as_secs_f64(),
+        correct as f64 / served as f64
+    );
 
-    latencies.sort();
+    // 3. library + selection queries
+    let (status, body) = http::get(&addr, "/v1/library/census")?;
+    anyhow::ensure!(status == 200, "census returned {status}");
+    println!("census: {body}");
+    let (status, body) = http::get(
+        &addr,
+        "/v1/select?max_accuracy_drop=0.05&images=16&limit=4",
+    )?;
+    anyhow::ensure!(status == 200, "select returned {status}");
+    let sel = Json::parse(&body).map_err(|e| anyhow::anyhow!("{e}"))?;
+    match sel.req("picked").map_err(|e| anyhow::anyhow!("{e}"))? {
+        Json::Null => println!("select: no multiplier satisfies the bound"),
+        picked => println!(
+            "select: deploy {} at {:.1}% of exact power",
+            picked.req_str("id").map_err(|e| anyhow::anyhow!("{e}"))?,
+            picked
+                .req_f64("rel_power_pct")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+        ),
+    }
+
+    // 4. async campaign job
+    let (status, body) = http::post_json(
+        &addr,
+        "/v1/campaigns/resilience",
+        "{\"images\":8,\"multipliers\":2}",
+    )?;
+    anyhow::ensure!(status == 202, "campaign submit returned {status}: {body}");
+    let job = Json::parse(&body).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let poll = job.req_str("poll").map_err(|e| anyhow::anyhow!("{e}"))?.to_string();
+    let deadline = Instant::now() + Duration::from_secs(300);
+    let result = loop {
+        let (status, body) = http::get(&addr, &poll)?;
+        anyhow::ensure!(status == 200, "job poll returned {status}");
+        let rec = Json::parse(&body).map_err(|e| anyhow::anyhow!("{e}"))?;
+        match rec.req_str("status").map_err(|e| anyhow::anyhow!("{e}"))? {
+            "done" => break rec,
+            "failed" => anyhow::bail!("campaign failed: {body}"),
+            _ => {
+                anyhow::ensure!(Instant::now() < deadline, "campaign timed out");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    };
+    let points = result
+        .req("result")
+        .and_then(|r| r.req_arr("points"))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("campaign {poll} done: {} Fig.4 points", points.len());
+
+    // 5. graceful shutdown via the admin endpoint
+    let (status, _) = http::post_json(&addr, "/v1/admin/shutdown", "")?;
+    anyhow::ensure!(status == 200, "shutdown returned {status}");
+    let report = handle.join();
     println!(
-        "served {n_requests} requests in {wall:.2?} — {:.1} req/s",
-        n_requests as f64 / wall.as_secs_f64()
+        "server report: {} requests ({} ok), p50 {} µs p99 {} µs; batcher {} batches \
+         (mean occupancy {:.2})",
+        report.http_requests,
+        report.responses_2xx,
+        report.request_p50_us,
+        report.request_p99_us,
+        report.batcher.batches,
+        report.batcher.mean_occupancy
     );
-    println!(
-        "latency p50 {:?}  p95 {:?}  p99 {:?}",
-        latencies[latencies.len() / 2],
-        latencies[latencies.len() * 95 / 100],
-        latencies[latencies.len().saturating_sub(1).min(latencies.len() * 99 / 100)],
-    );
-    println!(
-        "accuracy under approximation: {:.3} (golden: {:.3})",
-        correct as f64 / n_requests as f64,
-        coord.manifest().model(model_name).unwrap().q8_acc
-    );
-    println!(
-        "batcher: {} batches ({} full), mean occupancy {:.2}",
-        stats.batches, stats.full_batches, stats.mean_occupancy
-    );
-    println!("{:#?}", coord.metrics());
     coord.shutdown();
     Ok(())
 }

@@ -1,0 +1,150 @@
+//! `loadgen` — closed-loop HTTP load generator against the `server`
+//! subsystem: starts an in-process server on an ephemeral port, fires
+//! `/v1/predict` requests from a pool of client threads through the
+//! in-crate HTTP client, and reports throughput + client-side latency
+//! percentiles next to the server-reported ones.
+//!
+//! Every prediction is checked against the in-process
+//! `Coordinator::predict` result for the same image — the network path
+//! must be a transparent wrapper, not a different answer.
+//!
+//! Run: `cargo bench --bench loadgen [-- --quick]`
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use evoapproxlib::coordinator::batcher::BatchPolicy;
+use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, KernelKind};
+use evoapproxlib::library::Library;
+use evoapproxlib::runtime::{broadcast_lut, exact_lut, TestSet};
+use evoapproxlib::server::{http, Server, ServerConfig};
+use evoapproxlib::util::bench::{per_second, quick_mode};
+use evoapproxlib::util::json::Json;
+
+const MODEL: &str = "resnet8";
+
+fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let idx = ((p * sorted.len() as f64).ceil() as usize)
+        .saturating_sub(1)
+        .min(sorted.len() - 1);
+    sorted[idx]
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let n_requests: usize = if quick { 256 } else { 2048 };
+    let clients: usize = 8;
+    let unique_images: usize = 64;
+
+    // native backend against a directory with no artifacts: runs anywhere
+    let dir = std::env::temp_dir().join("evoapprox_loadgen_no_artifacts");
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::native(dir))?;
+    let handle = Server::start(
+        coord.clone(),
+        Library::baseline(),
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 4,
+            model: MODEL.to_string(),
+            batch_policy: BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_millis(5),
+            },
+            ..Default::default()
+        },
+    )?;
+    let addr = handle.addr().to_string();
+    println!("loadgen → http://{addr} ({} backend)", coord.backend().as_str());
+
+    // golden in-process predictions for the same image set
+    let testset = TestSet::synthetic(unique_images);
+    let n_layers = coord.manifest().model(MODEL).unwrap().n_conv_layers;
+    let golden = coord.predict(
+        MODEL,
+        KernelKind::Jnp,
+        Arc::new(testset.images.clone()),
+        Arc::new(broadcast_lut(&exact_lut(), n_layers)),
+    )?;
+
+    // pre-render one request body per unique image
+    let il = testset.image_len;
+    let bodies: Vec<String> = (0..unique_images)
+        .map(|k| http::predict_body(&testset.images[k * il..(k + 1) * il]))
+        .collect();
+
+    let t0 = Instant::now();
+    let (tx, rx) = channel::<(Duration, bool)>();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let tx = tx.clone();
+            let addr = &addr;
+            let bodies = &bodies;
+            let golden = &golden;
+            s.spawn(move || {
+                let per_client = n_requests / clients;
+                for i in 0..per_client {
+                    let idx = (c * per_client + i) % unique_images;
+                    let r0 = Instant::now();
+                    let ok = match http::post_json(addr, "/v1/predict", &bodies[idx]) {
+                        Ok((200, body)) => Json::parse(&body)
+                            .ok()
+                            .and_then(|j| {
+                                j.req_arr("predictions")
+                                    .ok()
+                                    .and_then(|p| p.first())
+                                    .and_then(Json::as_i64)
+                            })
+                            .map(|p| p == golden[idx] as i64)
+                            .unwrap_or(false),
+                        _ => false,
+                    };
+                    let _ = tx.send((r0.elapsed(), ok));
+                }
+            });
+        }
+        drop(tx);
+    });
+    let mut latencies = Vec::with_capacity(n_requests);
+    let mut mismatches = 0usize;
+    for (d, ok) in rx {
+        latencies.push(d);
+        if !ok {
+            mismatches += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    latencies.sort();
+    let served = latencies.len();
+
+    println!(
+        "client side: {served} requests in {wall:.2?} — {:.1} req/s, p50 {:?} p95 {:?} p99 {:?}",
+        per_second(served as u64, wall),
+        percentile(&latencies, 0.50),
+        percentile(&latencies, 0.95),
+        percentile(&latencies, 0.99),
+    );
+    println!(
+        "predictions identical to the in-process path: {} / {served} (mismatches {mismatches})",
+        served - mismatches
+    );
+
+    let report = handle.shutdown();
+    println!(
+        "server side: {} requests ({} ok), p50 {} µs p99 {} µs",
+        report.http_requests, report.responses_2xx, report.request_p50_us, report.request_p99_us
+    );
+    println!(
+        "batcher: {} requests in {} batches ({} full), mean occupancy {:.2}",
+        report.batcher.requests,
+        report.batcher.batches,
+        report.batcher.full_batches,
+        report.batcher.mean_occupancy
+    );
+    coord.shutdown();
+    assert_eq!(mismatches, 0, "network path must match in-process predictions");
+    Ok(())
+}

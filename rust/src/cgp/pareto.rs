@@ -93,7 +93,7 @@ impl<T> ParetoArchive<T> {
     /// along the power axis" selections).
     pub fn sorted_by_objective(&self, k: usize) -> Vec<(&[f64], &T)> {
         let mut v: Vec<_> = self.iter().collect();
-        v.sort_by(|a, b| a.0[k].partial_cmp(&b.0[k]).unwrap());
+        v.sort_by(|a, b| a.0[k].total_cmp(&b.0[k]));
         v
     }
 }

@@ -45,6 +45,56 @@ impl Histogram {
         self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
     }
 
+    /// Sum of all recorded durations in microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// The finite bucket upper bounds [µs]; samples above the last bound
+    /// land in the implicit overflow (`+Inf`) bucket.
+    pub fn bucket_bounds_us() -> &'static [u64] {
+        &BUCKET_BOUNDS_US
+    }
+
+    /// Prometheus-style cumulative buckets: for each finite bound `b`,
+    /// the number of samples `<= b`, followed by one `(None, count())`
+    /// entry for the `+Inf` overflow bucket. Monotonically non-decreasing
+    /// by construction; the final count equals [`Histogram::count`] (up to
+    /// concurrent recording races, which Prometheus scrapes tolerate).
+    pub fn cumulative_buckets(&self) -> Vec<(Option<u64>, u64)> {
+        let mut out = Vec::with_capacity(self.buckets.len());
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            out.push((BUCKET_BOUNDS_US.get(i).copied(), acc));
+        }
+        out
+    }
+
+    /// Render as a Prometheus text-format histogram named `name` (bounds
+    /// converted to seconds, the exporter convention). Appends
+    /// `# TYPE`, `_bucket{le=…}`, `_sum` and `_count` lines to `out`.
+    pub fn render_prometheus(&self, name: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        for (bound, cum) in self.cumulative_buckets() {
+            match bound {
+                Some(us) => {
+                    let _ = writeln!(
+                        out,
+                        "{name}_bucket{{le=\"{}\"}} {cum}",
+                        us as f64 / 1e6
+                    );
+                }
+                None => {
+                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+                }
+            }
+        }
+        let _ = writeln!(out, "{name}_sum {}", self.sum_us() as f64 / 1e6);
+        let _ = writeln!(out, "{name}_count {}", self.count());
+    }
+
     /// Approximate quantile (upper bucket bound).
     pub fn quantile_us(&self, q: f64) -> u64 {
         let total = self.count();
@@ -146,6 +196,78 @@ mod tests {
         assert_eq!(h.count(), 0);
         assert_eq!(h.mean_us(), 0.0);
         assert_eq!(h.quantile_us(0.99), 0);
+    }
+
+    /// `record` puts a sample of exactly a bound's value in THAT bucket
+    /// (`us <= b`), the next microsecond in the following one, and anything
+    /// beyond the last bound in the overflow bucket.
+    #[test]
+    fn bucket_boundaries_are_inclusive_upper_bounds() {
+        let h = Histogram::default();
+        h.record(Duration::from_micros(100)); // == first bound → bucket 0
+        h.record(Duration::from_micros(101)); // just over → bucket 1
+        h.record(Duration::from_secs(101)); // beyond 100 s → overflow
+        let cum = h.cumulative_buckets();
+        assert_eq!(cum.len(), Histogram::bucket_bounds_us().len() + 1);
+        assert_eq!(cum[0], (Some(100), 1));
+        assert_eq!(cum[1], (Some(300), 2));
+        // every finite bucket from there on has seen 2 samples…
+        for &(bound, c) in &cum[1..cum.len() - 1] {
+            assert!(bound.is_some());
+            assert_eq!(c, 2);
+        }
+        // …and the +Inf bucket catches the overflow sample
+        assert_eq!(*cum.last().unwrap(), (None, 3));
+        assert_eq!(h.count(), 3);
+        // cumulative counts never decrease
+        for w in cum.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn quantile_edge_cases() {
+        // empty: every quantile is 0 (tested above for 0.99; cover more)
+        let h = Histogram::default();
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(h.quantile_us(q), 0);
+        }
+        // single sample: all quantiles land in its bucket's upper bound
+        h.record(Duration::from_micros(250));
+        for q in [0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_us(q), 300, "q={q}");
+        }
+        // overflow-bucket sample: high quantiles report u64::MAX (no
+        // finite bound covers them), low quantiles stay finite
+        let h = Histogram::default();
+        h.record(Duration::from_micros(150));
+        h.record(Duration::from_secs(200));
+        assert_eq!(h.quantile_us(0.5), 300);
+        assert_eq!(h.quantile_us(0.99), u64::MAX);
+    }
+
+    #[test]
+    fn prometheus_rendering() {
+        let h = Histogram::default();
+        h.record(Duration::from_micros(80));
+        h.record(Duration::from_millis(2));
+        h.record(Duration::from_secs(200)); // overflow
+        let mut out = String::new();
+        h.render_prometheus("test_latency_seconds", &mut out);
+        assert!(out.contains("# TYPE test_latency_seconds histogram"));
+        // first bound 100 µs → 0.0001 s, cumulative 1
+        assert!(out.contains("test_latency_seconds_bucket{le=\"0.0001\"} 1"));
+        // 2 ms lands at the 3 ms bound → cumulative 2 from there on
+        assert!(out.contains("test_latency_seconds_bucket{le=\"0.003\"} 2"));
+        // +Inf equals the total count
+        assert!(out.contains("test_latency_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(out.contains("test_latency_seconds_count 3"));
+        let sum_line = out
+            .lines()
+            .find(|l| l.starts_with("test_latency_seconds_sum"))
+            .unwrap();
+        let sum: f64 = sum_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        assert!((sum - 200.00208).abs() < 1e-6, "sum {sum}");
     }
 
     #[test]

@@ -251,6 +251,13 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
+    /// The live metrics registry (counters + histograms) — used by the
+    /// server's Prometheus exporter, which needs the raw buckets rather
+    /// than the summarised snapshot.
+    pub fn metrics_raw(&self) -> &Metrics {
+        &self.metrics
+    }
+
     /// Fetch (building on first use) the shared native engine for `model`.
     fn native_engine(&self, model: &str) -> Result<Arc<NativeEngine>> {
         let mut cache = self.natives.lock().expect("native engine cache poisoned");

@@ -38,7 +38,12 @@
 //! * [`coordinator`] — the L3 coordinator: backend selection
 //!   (`auto`/`native`/`pjrt`), job scheduling of evolution and analysis
 //!   campaigns, a dynamic batcher in front of the engines, and service
-//!   metrics.
+//!   metrics (with a Prometheus-style histogram renderer).
+//! * [`server`] — the L4 service layer: a std-only HTTP/1.1 server
+//!   (`evoapprox serve`) exposing classification through the batcher,
+//!   library census/Pareto/selection queries, async resilience-campaign
+//!   jobs and a Prometheus `/metrics` exporter, plus the tiny in-crate
+//!   HTTP client the `loadgen` bench drives it with (DESIGN.md §7).
 //! * [`data`] — synthetic CIFAR-like dataset generation (shared, seeded
 //!   generator mirrored by `python/compile/data.py`).
 //!
@@ -56,6 +61,7 @@ pub mod data;
 pub mod library;
 pub mod resilience;
 pub mod runtime;
+pub mod server;
 pub mod util;
 
 /// Crate-wide result type.

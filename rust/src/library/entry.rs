@@ -67,6 +67,32 @@ impl Origin {
         }
     }
 
+    /// Recover the provenance of a built-in baseline netlist from its
+    /// generator-assigned name (`mul8u_trunc7`, `mul8u_bam_h0_v6`, …).
+    /// Anything unrecognised is recorded as a seed.
+    pub fn from_baseline_name(name: &str) -> Origin {
+        if let Some(rest) = name.strip_prefix("mul8u_trunc") {
+            Origin::Truncated {
+                keep: rest.parse().unwrap_or(0),
+            }
+        } else if name.contains("bam") {
+            let h = name
+                .split("_h")
+                .nth(1)
+                .and_then(|s| s.split('_').next())
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            let v = name
+                .split("_v")
+                .nth(1)
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            Origin::Bam { h, v }
+        } else {
+            Origin::Seed(name.to_string())
+        }
+    }
+
     /// Short human label (Table II first column style).
     pub fn label(&self) -> String {
         match self {

@@ -30,7 +30,7 @@ pub fn evenly_by_power<'e>(front: &[&'e Entry], k: usize) -> Vec<&'e Entry> {
         return Vec::new();
     }
     let mut sorted: Vec<&Entry> = front.to_vec();
-    sorted.sort_by(|a, b| a.cost.power_uw.partial_cmp(&b.cost.power_uw).unwrap());
+    sorted.sort_by(|a, b| a.cost.power_uw.total_cmp(&b.cost.power_uw));
     if sorted.len() <= k {
         return sorted;
     }
@@ -55,7 +55,7 @@ pub fn evenly_by_power<'e>(front: &[&'e Entry], k: usize) -> Vec<&'e Entry> {
             out.push(sorted[j]);
         }
     }
-    out.sort_by(|a, b| a.cost.power_uw.partial_cmp(&b.cost.power_uw).unwrap());
+    out.sort_by(|a, b| a.cost.power_uw.total_cmp(&b.cost.power_uw));
     out
 }
 
@@ -79,7 +79,7 @@ pub fn select_diverse<'l>(
             }
         }
     }
-    chosen.sort_by(|a, b| b.cost.power_uw.partial_cmp(&a.cost.power_uw).unwrap());
+    chosen.sort_by(|a, b| b.cost.power_uw.total_cmp(&a.cost.power_uw));
     chosen
 }
 
@@ -149,7 +149,7 @@ mod tests {
         }
         // extremes of the front are included
         let mut sorted = front.clone();
-        sorted.sort_by(|a, b| a.cost.power_uw.partial_cmp(&b.cost.power_uw).unwrap());
+        sorted.sort_by(|a, b| a.cost.power_uw.total_cmp(&b.cost.power_uw));
         assert_eq!(picked.first().unwrap().id, sorted.first().unwrap().id);
         assert_eq!(picked.last().unwrap().id, sorted.last().unwrap().id);
     }
@@ -167,6 +167,35 @@ mod tests {
         // descending power order (Table II)
         for w in sel.windows(2) {
             assert!(w[0].cost.power_uw >= w[1].cost.power_uw);
+        }
+    }
+
+    /// A NaN power characterisation (e.g. a corrupt library file) must not
+    /// panic the selection path — the server exposes it on a GET endpoint.
+    /// `total_cmp` orders NaN after every real number instead of unwrapping.
+    #[test]
+    fn nan_power_does_not_panic_selection() {
+        let mut lib = test_library();
+        let model = CostModel::default();
+        let f = ArithFn::Mul { w: 8 };
+        let mut poison = Entry::characterise(
+            bam_multiplier(8, 3, 9),
+            f,
+            &model,
+            Origin::Bam { h: 3, v: 9 },
+        );
+        poison.cost.power_uw = f64::NAN;
+        lib.insert(poison);
+        let all = lib.for_fn(f);
+        // all three sort sites: evenly_by_power (two sorts) + select_diverse
+        let _ = evenly_by_power(&all, 4);
+        let sel = select_diverse(&lib, f, &SELECTION_METRICS, 10);
+        assert!(!sel.is_empty());
+        // the finite-powered prefix still comes out in descending order
+        for w in sel.windows(2) {
+            if w[0].cost.power_uw.is_finite() && w[1].cost.power_uw.is_finite() {
+                assert!(w[0].cost.power_uw >= w[1].cost.power_uw);
+            }
         }
     }
 

@@ -1,18 +1,28 @@
 //! The library itself: a deduplicated collection of characterised entries
 //! with JSON persistence and Table-I-style census reporting.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 
+use crate::circuit::cost::CostModel;
 use crate::circuit::verify::ArithFn;
 use crate::util::json::Json;
 
-use super::entry::Entry;
+use super::entry::{Entry, Origin};
 
 /// A library of approximate arithmetic circuits (the EvoApproxLib analogue).
+///
+/// Entries are held in insertion order (`entries`), with two hash indices
+/// kept in lock-step so lookups stay O(1) as the library grows:
+/// `index` maps the dedup key `(function, functional-hash id)` to the
+/// entry's position, and `by_fn` holds per-function position lists (in
+/// insertion order) for [`Library::for_fn`]. The old linear scans made
+/// every catalog merge and server library endpoint quadratic.
 #[derive(Debug, Default)]
 pub struct Library {
     entries: Vec<Entry>,
+    index: HashMap<(ArithFn, String), usize>,
+    by_fn: HashMap<ArithFn, Vec<usize>>,
 }
 
 impl Library {
@@ -21,22 +31,35 @@ impl Library {
         Library::default()
     }
 
+    /// The built-in Table II baseline set (two truncated + eight BAM
+    /// 8-bit multipliers), characterised into a ready-to-query library.
+    /// This is what the analysis commands and the HTTP server fall back to
+    /// when no campaign-built library file is given.
+    pub fn baseline() -> Library {
+        let model = CostModel::default();
+        let mut lib = Library::new();
+        for n in crate::circuit::baselines::table2_baselines() {
+            let origin = Origin::from_baseline_name(&n.name);
+            lib.insert(Entry::characterise(n, ArithFn::Mul { w: 8 }, &model, origin));
+        }
+        lib
+    }
+
     /// Insert, deduplicating on `(function, functional hash)` — two circuits
     /// computing the same function keep only the *cheaper* one (by power),
     /// mirroring how the published library keeps distinct behaviours.
     /// Returns `true` if the entry was added or replaced an existing one.
     pub fn insert(&mut self, e: Entry) -> bool {
-        if let Some(existing) = self
-            .entries
-            .iter_mut()
-            .find(|x| x.f == e.f && x.id == e.id)
-        {
-            if e.cost.power_uw < existing.cost.power_uw {
-                *existing = e;
+        if let Some(&i) = self.index.get(&(e.f, e.id.clone())) {
+            if e.cost.power_uw < self.entries[i].cost.power_uw {
+                self.entries[i] = e;
                 return true;
             }
             return false;
         }
+        let i = self.entries.len();
+        self.index.insert((e.f, e.id.clone()), i);
+        self.by_fn.entry(e.f).or_default().push(i);
         self.entries.push(e);
         true
     }
@@ -46,14 +69,27 @@ impl Library {
         &self.entries
     }
 
-    /// Entries implementing `f`.
+    /// Entries implementing `f`, in insertion order.
     pub fn for_fn(&self, f: ArithFn) -> Vec<&Entry> {
-        self.entries.iter().filter(|e| e.f == f).collect()
+        self.by_fn
+            .get(&f)
+            .map(|idxs| idxs.iter().map(|&i| &self.entries[i]).collect())
+            .unwrap_or_default()
     }
 
-    /// Find by id.
+    /// Find by `(function, id)` — the indexed dedup key.
+    pub fn get_for_fn(&self, f: ArithFn, id: &str) -> Option<&Entry> {
+        self.index
+            .get(&(f, id.to_string()))
+            .map(|&i| &self.entries[i])
+    }
+
+    /// Find by id alone. Ids embed the function tag (`mul8u_…`), so this
+    /// only has to probe the per-function indices, not scan all entries.
     pub fn get(&self, id: &str) -> Option<&Entry> {
-        self.entries.iter().find(|e| e.id == id)
+        self.by_fn
+            .keys()
+            .find_map(|&f| self.get_for_fn(f, id))
     }
 
     /// Number of entries.
@@ -92,11 +128,13 @@ impl Library {
         ])
     }
 
-    /// Deserialise.
+    /// Deserialise. Entries are re-inserted through [`Library::insert`] so
+    /// the `(function, id)` index is rebuilt (and a hand-edited file with
+    /// duplicate ids collapses to the same state `insert` would produce).
     pub fn from_json(j: &Json) -> Result<Library, String> {
         let mut lib = Library::new();
         for e in j.req_arr("entries")? {
-            lib.entries.push(Entry::from_json(e)?);
+            lib.insert(Entry::from_json(e)?);
         }
         Ok(lib)
     }
@@ -172,6 +210,42 @@ mod tests {
         let b = loaded.get(&a.id).unwrap();
         assert_eq!(a.netlist, b.netlist);
         assert_eq!(a.metrics.mae, b.metrics.mae);
+    }
+
+    #[test]
+    fn index_tracks_inserts_and_replacements() {
+        let mut lib = Library::new();
+        let f = ArithFn::Mul { w: 8 };
+        let mut a = mk(bam_multiplier(8, 0, 4), f);
+        a.cost.power_uw = 50.0;
+        assert!(lib.insert(a.clone()));
+        // indexed lookups agree with the entry list
+        assert_eq!(lib.get_for_fn(f, &a.id).unwrap().cost.power_uw, 50.0);
+        assert_eq!(lib.get(&a.id).unwrap().id, a.id);
+        // a cheaper functional duplicate replaces in place…
+        let mut b = a.clone();
+        b.cost.power_uw = 25.0;
+        assert!(lib.insert(b));
+        assert_eq!(lib.len(), 1);
+        assert_eq!(lib.get_for_fn(f, &a.id).unwrap().cost.power_uw, 25.0);
+        // …and a dearer one is rejected without disturbing the index
+        let mut c = a.clone();
+        c.cost.power_uw = 99.0;
+        assert!(!lib.insert(c));
+        assert_eq!(lib.get(&a.id).unwrap().cost.power_uw, 25.0);
+        assert!(lib.get_for_fn(ArithFn::Add { w: 8 }, &a.id).is_none());
+        assert!(lib.get("mul8u_FFFF_missing").is_none());
+    }
+
+    #[test]
+    fn baseline_library_is_queryable() {
+        let lib = Library::baseline();
+        assert!(!lib.is_empty());
+        let mults = lib.for_fn(ArithFn::Mul { w: 8 });
+        assert_eq!(mults.len(), lib.len());
+        for e in mults {
+            assert_eq!(lib.get(&e.id).unwrap().id, e.id);
+        }
     }
 
     #[test]

@@ -17,7 +17,10 @@
 //!                   # any machine via `--backend native` (no artifacts)
 //! evoapprox table2  [--lib lib.json] [--images 128] [--models resnet8,resnet14]
 //!                   [--backend auto|native|pjrt] [--jobs N]
-//! evoapprox serve   [--requests 512] [--max-wait-ms 20] [--backend KIND]
+//! evoapprox serve   [--addr 127.0.0.1:8080] [--workers 4] [--model resnet8]
+//!                   [--backend KIND] [--library lib.json] [--max-wait-ms 20]
+//!                   # HTTP service: predict, library queries, campaign
+//!                   # jobs, /metrics — POST /v1/admin/shutdown stops it
 //! ```
 
 use evoapproxlib::cgp::{
@@ -140,13 +143,16 @@ const COMMANDS: &[CommandSpec] = &[
     },
     CommandSpec {
         name: "serve",
-        about: "dynamic-batching inference demo",
+        about: "HTTP service: batched inference, library queries, campaign jobs, /metrics",
         flags: &[
             ARTIFACTS_FLAG,
             BACKEND_FLAG,
-            FlagSpec { name: "model", value: Some("NAME"), help: "network (default resnet8)" },
-            FlagSpec { name: "requests", value: Some("N"), help: "requests to serve (default 512)" },
+            FlagSpec { name: "addr", value: Some("HOST:PORT"), help: "bind address (default 127.0.0.1:8080; port 0 = ephemeral)" },
+            FlagSpec { name: "workers", value: Some("N"), help: "HTTP worker threads (default 4)" },
+            FlagSpec { name: "model", value: Some("NAME"), help: "served network (default resnet8)" },
+            FlagSpec { name: "library", value: Some("FILE"), help: "library JSON backing the query endpoints (default: built-in baselines)" },
             FlagSpec { name: "max-wait-ms", value: Some("MS"), help: "batching deadline (default 20)" },
+            FlagSpec { name: "max-batch", value: Some("N"), help: "max images per dispatched batch (default 64)" },
         ],
     },
 ];
@@ -371,7 +377,7 @@ fn cmd_library(cli: &Cli) -> anyhow::Result<()> {
     }
     // always include the Table II baselines
     for n in evoapproxlib::circuit::baselines::table2_baselines() {
-        let origin = origin_from_name(&n.name);
+        let origin = evoapproxlib::library::Origin::from_baseline_name(&n.name);
         lib.insert(evoapproxlib::library::Entry::characterise(
             n,
             ArithFn::Mul { w: 8 },
@@ -383,29 +389,6 @@ fn cmd_library(cli: &Cli) -> anyhow::Result<()> {
     lib.save(&out)?;
     println!("library: {} entries → {out}", lib.len());
     Ok(())
-}
-
-fn origin_from_name(name: &str) -> evoapproxlib::library::Origin {
-    if let Some(rest) = name.strip_prefix("mul8u_trunc") {
-        evoapproxlib::library::Origin::Truncated {
-            keep: rest.parse().unwrap_or(0),
-        }
-    } else if name.contains("bam") {
-        let h = name
-            .split("_h")
-            .nth(1)
-            .and_then(|s| s.split('_').next())
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(0);
-        let v = name
-            .split("_v")
-            .nth(1)
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(0);
-        evoapproxlib::library::Origin::Bam { h, v }
-    } else {
-        evoapproxlib::library::Origin::Seed(name.to_string())
-    }
 }
 
 fn cmd_census(cli: &Cli) -> anyhow::Result<()> {
@@ -455,7 +438,6 @@ fn analysis_setup(
     evoapproxlib::runtime::manifest::TestSet,
 )> {
     use evoapproxlib::coordinator::{Backend, Coordinator, CoordinatorConfig};
-    use evoapproxlib::resilience::MultiplierSummary;
 
     let dir = artifacts_dir(cli);
     let (coord, guard) =
@@ -472,41 +454,14 @@ fn analysis_setup(
         Err(e) => return Err(e),
     };
 
-    let model = CostModel::default();
-    let f = ArithFn::Mul { w: 8 };
-    let exact = evoapproxlib::library::Entry::characterise(
-        evoapproxlib::circuit::generators::wallace_multiplier(8),
-        f,
-        &model,
-        evoapproxlib::library::Origin::Seed("wallace".into()),
-    );
-    let mut sel: Vec<evoapproxlib::library::Entry> = Vec::new();
-    if let Some(libpath) = cli.get("lib") {
-        let lib = Library::load(libpath)?;
-        sel = evoapproxlib::library::select_diverse(
-            &lib,
-            f,
-            &evoapproxlib::cgp::SELECTION_METRICS,
-            k_per_metric,
-        )
-        .into_iter()
-        .cloned()
-        .collect();
-    }
-    if sel.is_empty() {
-        // fall back to the baseline set so the command works pre-campaign
-        for n in evoapproxlib::circuit::baselines::table2_baselines() {
-            let origin = origin_from_name(&n.name);
-            sel.push(evoapproxlib::library::Entry::characterise(
-                n, f, &model, origin,
-            ));
-        }
-    }
-    sel.truncate(max_multipliers);
-    let mut mults = vec![MultiplierSummary::from_entry(&exact, &exact.cost)?];
-    for e in &sel {
-        mults.push(MultiplierSummary::from_entry(e, &exact.cost)?);
-    }
+    // exact reference + §IV selection (or baselines): the same roster
+    // builder the HTTP server uses for its select/campaign endpoints
+    let lib = cli.get("lib").map(Library::load).transpose()?;
+    let mults = evoapproxlib::resilience::standard_multipliers(
+        lib.as_ref(),
+        k_per_metric,
+        max_multipliers,
+    )?;
     Ok((coord, guard, mults, testset))
 }
 
@@ -621,59 +576,54 @@ fn cmd_table2(cli: &Cli) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
-    use evoapproxlib::coordinator::batcher::{BatchPolicy, Batcher};
+    use evoapproxlib::coordinator::batcher::BatchPolicy;
     use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, KernelKind};
-    use evoapproxlib::data::{Dataset, DatasetConfig};
-    use std::sync::Arc;
+    use evoapproxlib::server::{Server, ServerConfig};
     use std::time::Duration;
 
     let dir = artifacts_dir(cli);
     let (coord, _guard) =
         Coordinator::start(CoordinatorConfig::new(&dir).with_backend(backend(cli)?))?;
-    println!("serving on the {} backend", coord.backend().as_str());
-    let model = cli.flag_str("model", "resnet8");
-    coord.warm(&model, KernelKind::Jnp)?;
-    let n_layers = coord
-        .manifest()
-        .model(&model)
-        .ok_or_else(|| anyhow::anyhow!("unknown model"))?
-        .n_conv_layers;
-    let luts = Arc::new(evoapproxlib::runtime::broadcast_lut(
-        &evoapproxlib::runtime::exact_lut(),
-        n_layers,
-    ));
-    let policy = BatchPolicy {
-        max_batch: 64,
-        max_wait: Duration::from_millis(cli.flag("max-wait-ms", 20u64)?),
+    let library = match cli.get("library") {
+        Some(path) => Library::load(path)?,
+        None => Library::baseline(),
     };
-    let (batcher, guard) = Batcher::spawn(coord.clone(), &model, KernelKind::Jnp, luts, policy)?;
-    let n: usize = cli.flag("requests", 512usize)?;
-    let data = Dataset::generate(&DatasetConfig {
-        n,
+    let cfg = ServerConfig {
+        addr: cli.flag_str("addr", "127.0.0.1:8080"),
+        workers: cli.flag("workers", 4usize)?,
+        model: cli.flag_str("model", "resnet8"),
+        kernel: KernelKind::Jnp,
+        batch_policy: BatchPolicy {
+            max_batch: cli.flag("max-batch", 64usize)?,
+            max_wait: Duration::from_millis(cli.flag("max-wait-ms", 20u64)?),
+        },
         ..Default::default()
-    });
-    let t0 = std::time::Instant::now();
-    let mut pending = Vec::new();
-    for k in 0..n {
-        pending.push(batcher.classify_async(data.image(k).to_vec())?);
-    }
-    let mut correct = 0usize;
-    for (k, rx) in pending.into_iter().enumerate() {
-        if rx.recv()?? == data.labels[k] {
-            correct += 1;
-        }
-    }
-    let dt = t0.elapsed();
-    drop(batcher);
-    let stats = guard.join();
+    };
+    let model = cfg.model.clone();
+    let handle = Server::start(coord.clone(), library, cfg)?;
     println!(
-        "served {n} requests in {dt:.2?} ({:.1} req/s), accuracy {:.3}",
-        n as f64 / dt.as_secs_f64(),
-        correct as f64 / n as f64
+        "evoapprox server on http://{} — {} backend, model {model}",
+        handle.addr(),
+        coord.backend().as_str()
+    );
+    println!("endpoints: GET / lists the catalogue; POST /v1/admin/shutdown stops the server");
+    let report = handle.join();
+    println!(
+        "served {} requests ({} ok / {} client err / {} server err), p50 {} µs p99 {} µs",
+        report.http_requests,
+        report.responses_2xx,
+        report.responses_4xx,
+        report.responses_5xx,
+        report.request_p50_us,
+        report.request_p99_us
     );
     println!(
-        "batches {} (full {}), mean occupancy {:.2}",
-        stats.batches, stats.full_batches, stats.mean_occupancy
+        "batcher: {} requests in {} batches ({} full), mean occupancy {:.2}; {} campaign jobs",
+        report.batcher.requests,
+        report.batcher.batches,
+        report.batcher.full_batches,
+        report.batcher.mean_occupancy,
+        report.campaign_jobs
     );
     println!("{:#?}", coord.metrics());
     coord.shutdown();

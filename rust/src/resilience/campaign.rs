@@ -14,9 +14,14 @@ use anyhow::{anyhow, Result};
 
 use crate::accel::PowerModel;
 use crate::cgp::campaign::map_parallel;
-use crate::circuit::cost::CircuitCost;
+use crate::cgp::metrics::SELECTION_METRICS;
+use crate::circuit::baselines::table2_baselines;
+use crate::circuit::cost::{CircuitCost, CostModel};
+use crate::circuit::generators::wallace_multiplier;
+use crate::circuit::verify::ArithFn;
 use crate::coordinator::{Coordinator, KernelKind};
 use crate::library::entry::{Entry, Origin};
+use crate::library::{select_diverse, Library};
 use crate::runtime::manifest::TestSet;
 use crate::runtime::{broadcast_lut, exact_lut, LUT_LEN};
 
@@ -75,6 +80,50 @@ impl MultiplierSummary {
             cost: e.cost,
         })
     }
+}
+
+/// The standard multiplier roster shared by the CLI analysis commands and
+/// the HTTP server: the exact 8-bit reference first, then the §IV
+/// Pareto-diverse selection from `lib` (falling back to the Table II
+/// baseline set when `lib` is `None` or its selection comes back empty),
+/// truncated to at most `limit` approximate entries.
+///
+/// Determinism matters here: for a fixed library the roster is a pure
+/// function of `(k_per_metric, limit)`, which is what lets the server's
+/// campaign endpoint reproduce an in-process campaign byte-for-byte.
+pub fn standard_multipliers(
+    lib: Option<&Library>,
+    k_per_metric: usize,
+    limit: usize,
+) -> Result<Vec<MultiplierSummary>> {
+    let model = CostModel::default();
+    let f = ArithFn::Mul { w: 8 };
+    let exact = Entry::characterise(
+        wallace_multiplier(8),
+        f,
+        &model,
+        Origin::Seed("wallace".into()),
+    );
+    let mut sel: Vec<Entry> = Vec::new();
+    if let Some(lib) = lib {
+        sel = select_diverse(lib, f, &SELECTION_METRICS, k_per_metric)
+            .into_iter()
+            .cloned()
+            .collect();
+    }
+    if sel.is_empty() {
+        // pre-campaign fallback: the paper's published baseline rows
+        for n in table2_baselines() {
+            let origin = Origin::from_baseline_name(&n.name);
+            sel.push(Entry::characterise(n, f, &model, origin));
+        }
+    }
+    sel.truncate(limit);
+    let mut mults = vec![MultiplierSummary::from_entry(&exact, &exact.cost)?];
+    for e in &sel {
+        mults.push(MultiplierSummary::from_entry(e, &exact.cost)?);
+    }
+    Ok(mults)
 }
 
 /// One Fig. 4 point: (multiplier, layer) → accuracy & power drop.
@@ -303,6 +352,22 @@ mod tests {
         assert!((se.rel_power_pct - 100.0).abs() < 1e-9);
         assert_eq!(se.lut, crate::runtime::exact_lut());
         assert!(se.is_exact);
+    }
+
+    #[test]
+    fn standard_multipliers_roster() {
+        // no library → exact reference + the baseline rows, truncated
+        let mults = standard_multipliers(None, 10, 4).unwrap();
+        assert_eq!(mults.len(), 5);
+        assert!(mults[0].is_exact);
+        assert!(mults[1..].iter().all(|m| !m.is_exact));
+        // library-backed roster is a pure function of its inputs
+        let lib = Library::baseline();
+        let a = standard_multipliers(Some(&lib), 10, 6).unwrap();
+        let b = standard_multipliers(Some(&lib), 10, 6).unwrap();
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.id == y.id));
+        assert!(a.len() <= 1 + 6);
     }
 
     /// A 100 % relative power coincidence must NOT be mistaken for the

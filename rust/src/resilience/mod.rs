@@ -16,7 +16,7 @@ pub mod campaign;
 pub mod lut;
 
 pub use campaign::{
-    per_layer_campaign, whole_network_campaign, Fig4Point, Fig4Report, MultiplierSummary,
-    Table2Report, Table2Row,
+    per_layer_campaign, standard_multipliers, whole_network_campaign, Fig4Point, Fig4Report,
+    MultiplierSummary, Table2Report, Table2Row,
 };
 pub use lut::{lut_for_entry, lut_from_netlist};

@@ -1,0 +1,323 @@
+//! Minimal HTTP/1.1 wire layer: request reader, response writer and a
+//! tiny blocking client — std-only, one request per connection
+//! (`Connection: close`), which is all the service endpoints need.
+//!
+//! Deliberate limits (documented in DESIGN.md §7):
+//! * headers are capped at [`MAX_HEADER_BYTES`]; bodies at the server's
+//!   configured maximum — an oversized `Content-Length` is rejected with
+//!   413 *before* the body is read;
+//! * no chunked transfer encoding, no keep-alive, no TLS — future scaling
+//!   surfaces, not current requirements;
+//! * request targets are used verbatim (the endpoints only ever need
+//!   ASCII identifiers and numbers, so percent-decoding is omitted).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Maximum bytes of request line + headers.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Upper-case method (`GET`, `POST`, …).
+    pub method: String,
+    /// Raw request target (`/v1/predict`, `/v1/select?max_accuracy_drop=1`).
+    pub target: String,
+    /// Headers with lower-cased names, in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// Request body (empty when no `Content-Length`).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header value with the given (lower-case) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request could not be read. The server maps these onto 4xx
+/// responses without tearing down the worker.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Peer closed before sending a full request (not an error worth a
+    /// response — there is nobody left to read it).
+    Disconnected,
+    /// Syntactically invalid request → 400.
+    Malformed(&'static str),
+    /// Request line + headers over [`MAX_HEADER_BYTES`] → 431.
+    HeaderTooLarge,
+    /// Declared `Content-Length` over the server's body limit → 413.
+    BodyTooLarge,
+}
+
+/// Read one HTTP/1.1 request from `stream`. Bodies larger than
+/// `max_body_bytes` are rejected from the `Content-Length` declaration
+/// alone — the body is never buffered.
+pub fn read_request(stream: &mut TcpStream, max_body_bytes: usize) -> Result<Request, ReadError> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 2048];
+    let header_end = loop {
+        if let Some(pos) = find_header_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err(ReadError::HeaderTooLarge);
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                return if buf.is_empty() {
+                    Err(ReadError::Disconnected)
+                } else {
+                    Err(ReadError::Malformed("connection closed mid-header"))
+                };
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) => return Err(ReadError::Disconnected),
+        }
+    };
+    let head = std::str::from_utf8(&buf[..header_end])
+        .map_err(|_| ReadError::Malformed("non-UTF-8 header block"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split(' ');
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or(ReadError::Malformed("empty request line"))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or(ReadError::Malformed("missing request target"))?
+        .to_string();
+    let version = parts
+        .next()
+        .ok_or(ReadError::Malformed("missing HTTP version"))?;
+    if !version.starts_with("HTTP/1.") || parts.next().is_some() {
+        return Err(ReadError::Malformed("bad HTTP version"));
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or(ReadError::Malformed("header line without a colon"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let content_length = match headers.iter().find(|(k, _)| k == "content-length") {
+        None => 0usize,
+        Some((_, v)) => v
+            .parse::<usize>()
+            .map_err(|_| ReadError::Malformed("unparseable Content-Length"))?,
+    };
+    if content_length > max_body_bytes {
+        return Err(ReadError::BodyTooLarge);
+    }
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        match stream.read(&mut chunk) {
+            Ok(0) => return Err(ReadError::Malformed("connection closed mid-body")),
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(_) => return Err(ReadError::Disconnected),
+        }
+    }
+    body.truncate(content_length);
+    Ok(Request {
+        method,
+        target,
+        headers,
+        body,
+    })
+}
+
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Canonical reason phrase for the status codes the server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        403 => "Forbidden",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Response",
+    }
+}
+
+/// Write one complete response and flush. Always closes the exchange
+/// (`Connection: close`).
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// Blocking one-shot HTTP client: connect, send, read the full response.
+/// This is the client the `loadgen` bench, the serving example and the
+/// integration tests drive the server with — kept in-crate so the whole
+/// network path needs zero external tooling.
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(120)))
+        .ok();
+    let body = body.unwrap_or_default();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    let mut raw = Vec::new();
+    stream
+        .read_to_end(&mut raw)
+        .context("reading HTTP response")?;
+    let text = String::from_utf8(raw).map_err(|_| anyhow!("non-UTF-8 response"))?;
+    let (head, payload) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow!("response without header terminator"))?;
+    let status: u16 = head
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line `{}`", head.lines().next().unwrap_or("")))?;
+    Ok((status, payload.to_string()))
+}
+
+/// Render the canonical single-image `POST /v1/predict` body for `image`.
+/// The one definition of the predict wire format on the client side —
+/// shared by `loadgen`, the serving example and the integration tests.
+pub fn predict_body(image: &[f32]) -> String {
+    use crate::util::json::Json;
+    let img: Vec<Json> = image.iter().map(|&x| Json::Num(x as f64)).collect();
+    Json::obj([("image", Json::Arr(img))]).to_string()
+}
+
+/// `GET path` against `addr`.
+pub fn get(addr: &str, path: &str) -> Result<(u16, String)> {
+    request(addr, "GET", path, None)
+}
+
+/// `POST path` with a JSON body against `addr`.
+pub fn post_json(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    request(addr, "POST", path, Some(body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Round-trip a raw request through a real socket pair.
+    fn parse_raw(raw: &[u8], max_body: usize) -> Result<Request, ReadError> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_vec();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&raw).unwrap();
+            // keep the stream open long enough for the reader to finish
+            s.flush().unwrap();
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        let r = read_request(&mut conn, max_body);
+        writer.join().unwrap();
+        r
+    }
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = b"POST /v1/predict HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd";
+        let req = parse_raw(raw, 1024).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.target, "/v1/predict");
+        assert_eq!(req.header("content-length"), Some("4"));
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn parses_request_without_body() {
+        let req = parse_raw(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n", 1024).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.target, "/healthz");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn malformed_requests_are_errors() {
+        for raw in [
+            &b"NOT-HTTP\r\n\r\n"[..],
+            b"GET /x\r\n\r\n",
+            b"GET /x SMTP/1.0\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nbroken-header-line\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n",
+        ] {
+            assert!(
+                matches!(parse_raw(raw, 1024), Err(ReadError::Malformed(_))),
+                "must reject {:?}",
+                String::from_utf8_lossy(raw)
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_body_rejected_from_declaration() {
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 10000\r\n\r\n";
+        assert!(matches!(parse_raw(raw, 1024), Err(ReadError::BodyTooLarge)));
+    }
+
+    #[test]
+    fn client_server_round_trip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let req = read_request(&mut conn, 1 << 20).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.target, "/echo");
+            let body = req.body.clone();
+            write_response(&mut conn, 200, "application/json", &body).unwrap();
+        });
+        let (status, body) = post_json(&addr, "/echo", "{\"x\":1}").unwrap();
+        server.join().unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "{\"x\":1}");
+    }
+
+    #[test]
+    fn reason_phrases() {
+        assert_eq!(reason(200), "OK");
+        assert_eq!(reason(413), "Payload Too Large");
+        assert_eq!(reason(599), "Response");
+    }
+}

@@ -1,0 +1,210 @@
+//! Async job store for long-running campaign work.
+//!
+//! `POST /v1/campaigns/…` returns immediately with a job id; the campaign
+//! runs on its own thread (fanning its grid over the deterministic
+//! `cgp::campaign` pool) and clients poll `GET /v1/jobs/{id}` until the
+//! record flips to `done`/`failed`. Results are retained for the life of
+//! the server process — the store is a service-lifetime ledger, not a
+//! cache with eviction (a future scaling surface, like keep-alive).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Lifecycle of one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted, worker thread not yet running.
+    Queued,
+    /// Executing.
+    Running,
+    /// Finished with a result.
+    Done,
+    /// Finished with an error.
+    Failed,
+}
+
+impl JobState {
+    /// Wire name used in job JSON.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+}
+
+/// One job's record (cloned out to handlers).
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    /// Server-assigned id.
+    pub id: u64,
+    /// Job kind (`"resilience"`).
+    pub kind: String,
+    /// Current state.
+    pub state: JobState,
+    /// Rendered result (present iff `Done`).
+    pub result: Option<Json>,
+    /// Error chain (present iff `Failed`).
+    pub error: Option<String>,
+}
+
+#[derive(Default)]
+struct Inner {
+    next_id: AtomicU64,
+    jobs: Mutex<HashMap<u64, JobRecord>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Cloneable handle to the shared job ledger.
+#[derive(Clone, Default)]
+pub struct JobStore {
+    inner: Arc<Inner>,
+}
+
+impl JobStore {
+    /// Empty store.
+    pub fn new() -> JobStore {
+        JobStore::default()
+    }
+
+    /// Submit `work` as a named job: allocates an id, spawns the worker
+    /// thread and returns immediately. The closure's `Ok(Json)` becomes
+    /// the job result; its `Err` chain the failure message.
+    pub fn submit(
+        &self,
+        kind: &str,
+        work: impl FnOnce() -> Result<Json> + Send + 'static,
+    ) -> u64 {
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        {
+            let mut jobs = self.inner.jobs.lock().expect("job ledger poisoned");
+            jobs.insert(
+                id,
+                JobRecord {
+                    id,
+                    kind: kind.to_string(),
+                    state: JobState::Queued,
+                    result: None,
+                    error: None,
+                },
+            );
+        }
+        let inner = self.inner.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("job-{id}"))
+            .spawn(move || {
+                set_state(&inner, id, JobState::Running);
+                match work() {
+                    Ok(result) => {
+                        let mut jobs = inner.jobs.lock().expect("job ledger poisoned");
+                        if let Some(rec) = jobs.get_mut(&id) {
+                            rec.state = JobState::Done;
+                            rec.result = Some(result);
+                        }
+                    }
+                    Err(e) => {
+                        let mut jobs = inner.jobs.lock().expect("job ledger poisoned");
+                        if let Some(rec) = jobs.get_mut(&id) {
+                            rec.state = JobState::Failed;
+                            rec.error = Some(format!("{e:#}"));
+                        }
+                    }
+                }
+            })
+            .expect("spawning job thread");
+        self.inner
+            .handles
+            .lock()
+            .expect("job handles poisoned")
+            .push(handle);
+        id
+    }
+
+    /// Snapshot one record.
+    pub fn get(&self, id: u64) -> Option<JobRecord> {
+        self.inner
+            .jobs
+            .lock()
+            .expect("job ledger poisoned")
+            .get(&id)
+            .cloned()
+    }
+
+    /// Number of jobs ever submitted.
+    pub fn submitted(&self) -> u64 {
+        self.inner.next_id.load(Ordering::Relaxed)
+    }
+
+    /// Wait for every submitted job to finish (graceful-shutdown drain).
+    pub fn join_all(&self) {
+        let handles: Vec<JoinHandle<()>> = std::mem::take(
+            &mut *self.inner.handles.lock().expect("job handles poisoned"),
+        );
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn set_state(inner: &Inner, id: u64, state: JobState) {
+    if let Some(rec) = inner
+        .jobs
+        .lock()
+        .expect("job ledger poisoned")
+        .get_mut(&id)
+    {
+        rec.state = state;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    #[test]
+    fn submit_poll_result() {
+        let store = JobStore::new();
+        let id = store.submit("test", || Ok(Json::obj([("x", 1i64.into())])));
+        store.join_all();
+        let rec = store.get(id).unwrap();
+        assert_eq!(rec.state, JobState::Done);
+        assert_eq!(rec.result.unwrap().to_string(), "{\"x\":1}");
+        assert!(rec.error.is_none());
+        assert_eq!(store.submitted(), 1);
+    }
+
+    #[test]
+    fn failures_are_recorded_not_propagated() {
+        let store = JobStore::new();
+        let id = store.submit("test", || {
+            Err(anyhow!("inner").context("outer"))
+        });
+        store.join_all();
+        let rec = store.get(id).unwrap();
+        assert_eq!(rec.state, JobState::Failed);
+        assert!(rec.result.is_none());
+        let msg = rec.error.unwrap();
+        assert!(msg.contains("outer") && msg.contains("inner"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_id_is_none_and_ids_are_distinct() {
+        let store = JobStore::new();
+        assert!(store.get(1).is_none());
+        let a = store.submit("test", || Ok(Json::Null));
+        let b = store.submit("test", || Ok(Json::Null));
+        assert_ne!(a, b);
+        store.join_all();
+        assert_eq!(store.get(a).unwrap().state, JobState::Done);
+        assert_eq!(store.get(b).unwrap().state, JobState::Done);
+    }
+}

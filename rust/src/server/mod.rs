@@ -1,0 +1,996 @@
+//! L4 service layer: a std-only HTTP/1.1 server fronting the
+//! [`Coordinator`] — the paper's accelerator-selection case study as a
+//! network service (DESIGN.md §7).
+//!
+//! Architecture (no tokio/hyper — consistent with the vendored-shim
+//! policy):
+//!
+//! * an **acceptor thread** owns the `TcpListener` and feeds accepted
+//!   connections to a fixed pool of **worker threads** over a channel
+//!   (one request per connection, `Connection: close`);
+//! * classification requests route through the [`Batcher`], so
+//!   single-image requests from many concurrent connections aggregate
+//!   into full engine batches exactly like in-process callers —
+//!   backpressure comes from the batcher/engine, not from the socket
+//!   layer;
+//! * campaign requests become **async jobs** ([`jobs::JobStore`]): the
+//!   submit endpoint returns an id immediately and the campaign fans its
+//!   (multiplier × layer) grid over the deterministic `cgp::campaign`
+//!   pool on its own thread;
+//! * **graceful shutdown** (`POST /v1/admin/shutdown`, or
+//!   [`ServerHandle::shutdown`]): stop accepting, drain queued
+//!   connections, join workers, drain campaign jobs, then retire the
+//!   batcher and collect its stats.
+//!
+//! Endpoints (all JSON unless noted):
+//!
+//! | method | path | purpose |
+//! |--------|------|---------|
+//! | GET  | `/healthz` | liveness + backend/model info |
+//! | GET  | `/metrics` | Prometheus text exporter |
+//! | POST | `/v1/predict` | classify `image`/`images` via the batcher |
+//! | GET  | `/v1/library/census` | Table-I counts |
+//! | GET  | `/v1/library/pareto?metric=MAE` | (power, metric) Pareto front |
+//! | GET  | `/v1/select?max_accuracy_drop=D` | autoAx-style pick |
+//! | POST | `/v1/campaigns/resilience` | submit a Fig. 4 campaign job |
+//! | GET  | `/v1/jobs/{id}` | poll a job |
+//! | POST | `/v1/admin/shutdown` | graceful shutdown |
+
+pub mod http;
+pub mod jobs;
+pub mod report;
+pub mod router;
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cgp::campaign::{default_workers, map_parallel};
+use crate::cgp::metrics::Metric;
+use crate::circuit::verify::ArithFn;
+use crate::coordinator::batcher::{BatchPolicy, Batcher, BatcherGuard, BatcherStats};
+use crate::coordinator::metrics::Histogram;
+use crate::coordinator::{Coordinator, KernelKind};
+use crate::library::{pareto_indices, Entry, Library};
+use crate::resilience::{per_layer_campaign, standard_multipliers};
+use crate::runtime::{broadcast_lut, exact_lut, TestSet};
+use crate::util::json::Json;
+
+use jobs::JobStore;
+use router::Target;
+
+/// Most images accepted in one `/v1/predict` request.
+pub const MAX_IMAGES_PER_REQUEST: usize = 256;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address (`127.0.0.1:8080`; port `0` picks an ephemeral port).
+    pub addr: String,
+    /// HTTP worker threads.
+    pub workers: usize,
+    /// Model served by `/v1/predict` (and the default for campaigns).
+    pub model: String,
+    /// Kernel variant scheduled on the PJRT backend.
+    pub kernel: KernelKind,
+    /// Batching policy for the predict path.
+    pub batch_policy: BatchPolicy,
+    /// Request-body cap (the declared `Content-Length` is checked before
+    /// any body byte is buffered).
+    pub max_body_bytes: usize,
+    /// Default evaluation-image count for `/v1/select`.
+    pub select_images: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            workers: 4,
+            model: "resnet8".to_string(),
+            kernel: KernelKind::Jnp,
+            batch_policy: BatchPolicy::default(),
+            max_body_bytes: 8 * 1024 * 1024,
+            select_images: 32,
+        }
+    }
+}
+
+/// HTTP-layer service metrics (the coordinator keeps its own).
+#[derive(Debug, Default)]
+struct HttpMetrics {
+    requests: AtomicU64,
+    responses_2xx: AtomicU64,
+    responses_4xx: AtomicU64,
+    responses_5xx: AtomicU64,
+    latency: Histogram,
+}
+
+/// One cached `/v1/select` evaluation: reference accuracy + per-candidate
+/// whole-network accuracies (the join of resilience results with the §IV
+/// selection). The quality bound is applied per request against this.
+struct SelectEval {
+    reference_accuracy: f64,
+    candidates: Vec<SelectCandidate>,
+}
+
+struct SelectCandidate {
+    id: String,
+    label: String,
+    rel_power_pct: f64,
+    accuracy: f64,
+    accuracy_drop: f64,
+}
+
+/// Shared state behind every worker.
+struct ServerState {
+    coord: Coordinator,
+    library: Library,
+    cfg: ServerConfig,
+    addr: SocketAddr,
+    image_len: usize,
+    batcher: Mutex<Option<Batcher>>,
+    batcher_stats: Mutex<Option<BatcherStats>>,
+    jobs: JobStore,
+    select_cache: Mutex<HashMap<String, Arc<SelectEval>>>,
+    shutdown: AtomicBool,
+    http: HttpMetrics,
+    started: Instant,
+}
+
+/// Final report a server run hands back on shutdown.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerReport {
+    /// HTTP requests parsed (excluding empty disconnects).
+    pub http_requests: u64,
+    /// 2xx responses.
+    pub responses_2xx: u64,
+    /// 4xx responses.
+    pub responses_4xx: u64,
+    /// 5xx responses.
+    pub responses_5xx: u64,
+    /// Server-side request latency median [µs].
+    pub request_p50_us: u64,
+    /// Server-side request latency p99 [µs].
+    pub request_p99_us: u64,
+    /// Campaign jobs submitted over the run.
+    pub campaign_jobs: u64,
+    /// Batcher statistics for the predict path.
+    pub batcher: BatcherStats,
+}
+
+/// A running server. Dropping the handle shuts the server down.
+pub struct Server;
+
+/// Join/shutdown handle for a running server.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    listener: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `cfg.addr`, warm the served model and start the acceptor +
+    /// worker threads. The coordinator stays owned by the caller (keep its
+    /// `CoordinatorGuard` alive for the server's lifetime).
+    pub fn start(coord: Coordinator, library: Library, cfg: ServerConfig) -> Result<ServerHandle> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding HTTP listener on {}", cfg.addr))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let (image_len, n_layers) = {
+            let meta = coord
+                .manifest()
+                .model(&cfg.model)
+                .ok_or_else(|| anyhow!("unknown model `{}`", cfg.model))?;
+            let (h, w, c) = meta.image_dims;
+            (h * w * c, meta.n_conv_layers)
+        };
+        // fail fast: build/compile the serving engine before accepting
+        coord.warm(&cfg.model, cfg.kernel)?;
+        let luts = Arc::new(broadcast_lut(&exact_lut(), n_layers));
+        let (batcher, batcher_guard) = Batcher::spawn(
+            coord.clone(),
+            &cfg.model,
+            cfg.kernel,
+            luts,
+            cfg.batch_policy,
+        )?;
+        let workers = cfg.workers.max(1);
+        let state = Arc::new(ServerState {
+            coord,
+            library,
+            addr,
+            image_len,
+            batcher: Mutex::new(Some(batcher)),
+            batcher_stats: Mutex::new(None),
+            jobs: JobStore::new(),
+            select_cache: Mutex::new(HashMap::new()),
+            shutdown: AtomicBool::new(false),
+            http: HttpMetrics::default(),
+            started: Instant::now(),
+            cfg,
+        });
+        let acceptor_state = state.clone();
+        let listener_handle = std::thread::Builder::new()
+            .name("http-acceptor".into())
+            .spawn(move || acceptor_loop(listener, acceptor_state, workers, batcher_guard))
+            .context("spawning acceptor thread")?;
+        Ok(ServerHandle {
+            addr,
+            state,
+            listener: Some(listener_handle),
+        })
+    }
+}
+
+impl ServerHandle {
+    /// The actual bound address (resolves port `0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request shutdown without waiting (e.g. from another thread).
+    pub fn trigger_shutdown(&self) {
+        trigger_shutdown(&self.state);
+    }
+
+    /// Graceful shutdown: stop accepting, drain in-flight work, join all
+    /// threads, return the run report.
+    pub fn shutdown(mut self) -> ServerReport {
+        trigger_shutdown(&self.state);
+        self.join_inner()
+    }
+
+    /// Block until the server shuts down (via the admin endpoint or
+    /// [`ServerHandle::trigger_shutdown`]) and return the run report.
+    pub fn join(mut self) -> ServerReport {
+        self.join_inner()
+    }
+
+    fn join_inner(&mut self) -> ServerReport {
+        if let Some(h) = self.listener.take() {
+            let _ = h.join();
+        }
+        let state = &self.state;
+        ServerReport {
+            http_requests: state.http.requests.load(Ordering::Relaxed),
+            responses_2xx: state.http.responses_2xx.load(Ordering::Relaxed),
+            responses_4xx: state.http.responses_4xx.load(Ordering::Relaxed),
+            responses_5xx: state.http.responses_5xx.load(Ordering::Relaxed),
+            request_p50_us: state.http.latency.quantile_us(0.5),
+            request_p99_us: state.http.latency.quantile_us(0.99),
+            campaign_jobs: state.jobs.submitted(),
+            batcher: state
+                .batcher_stats
+                .lock()
+                .expect("batcher stats poisoned")
+                .take()
+                .unwrap_or_default(),
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        if self.listener.is_some() {
+            trigger_shutdown(&self.state);
+            self.join_inner();
+        }
+    }
+}
+
+/// Flip the shutdown flag and poke the acceptor out of `accept()` with a
+/// throwaway connection. A wildcard bind address (`0.0.0.0`/`::`) is not
+/// connectable on every platform, so the wake targets loopback on the
+/// bound port instead.
+fn trigger_shutdown(state: &ServerState) {
+    if !state.shutdown.swap(true, Ordering::SeqCst) {
+        let mut wake = state.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect(wake);
+    }
+}
+
+fn acceptor_loop(
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    workers: usize,
+    batcher_guard: BatcherGuard,
+) {
+    let (tx, rx) = channel::<TcpStream>();
+    let rx = Arc::new(Mutex::new(rx));
+    let mut handles = Vec::with_capacity(workers);
+    for i in 0..workers {
+        let state = state.clone();
+        let rx = rx.clone();
+        let h = std::thread::Builder::new()
+            .name(format!("http-worker-{i}"))
+            .spawn(move || worker_loop(state, rx))
+            .expect("spawning http worker");
+        handles.push(h);
+    }
+    for conn in listener.incoming() {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break; // the waking connection (if any) is dropped unanswered
+        }
+        match conn {
+            Ok(stream) => {
+                let _ = tx.send(stream);
+            }
+            // transient accept failures (e.g. EMFILE under fd exhaustion)
+            // return instantly — back off instead of spinning a core
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(50)),
+        }
+    }
+    // Drain: close the queue (workers finish whatever is already accepted
+    // and exit), join them, drain campaign jobs, then retire the batcher.
+    drop(tx);
+    for h in handles {
+        let _ = h.join();
+    }
+    state.jobs.join_all();
+    *state.batcher.lock().expect("batcher slot poisoned") = None;
+    let stats = batcher_guard.join();
+    *state
+        .batcher_stats
+        .lock()
+        .expect("batcher stats poisoned") = Some(stats);
+}
+
+fn worker_loop(state: Arc<ServerState>, rx: Arc<Mutex<Receiver<TcpStream>>>) {
+    loop {
+        // lock only for the dequeue — handling runs lock-free
+        let conn = rx.lock().expect("connection queue poisoned").recv();
+        match conn {
+            Ok(stream) => handle_connection(&state, stream),
+            Err(_) => break, // acceptor dropped the sender: drain complete
+        }
+    }
+}
+
+/// One response, plus whether to initiate shutdown after sending it.
+struct Response {
+    status: u16,
+    content_type: &'static str,
+    body: String,
+    shutdown_after: bool,
+}
+
+impl Response {
+    fn json(status: u16, j: Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: j.to_string(),
+            shutdown_after: false,
+        }
+    }
+
+    fn error(status: u16, msg: impl std::fmt::Display) -> Response {
+        Response::json(
+            status,
+            Json::obj([("error", msg.to_string().into())]),
+        )
+    }
+}
+
+/// How long a worker will wait on a silent peer before giving the
+/// connection up. Without this a client that connects and sends nothing
+/// would park a worker forever — and park shutdown with it, since the
+/// acceptor joins every worker while draining.
+const CONNECTION_IO_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
+
+fn handle_connection(state: &Arc<ServerState>, mut stream: TcpStream) {
+    let t0 = Instant::now();
+    // a timed-out read surfaces as ReadError::Disconnected below
+    let _ = stream.set_read_timeout(Some(CONNECTION_IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(CONNECTION_IO_TIMEOUT));
+    let peer_is_loopback = stream
+        .peer_addr()
+        .map(|a| a.ip().is_loopback())
+        .unwrap_or(false);
+    let response = match http::read_request(&mut stream, state.cfg.max_body_bytes) {
+        Err(http::ReadError::Disconnected) => return, // nobody to answer
+        Err(http::ReadError::Malformed(msg)) => Response::error(400, msg),
+        Err(http::ReadError::HeaderTooLarge) => Response::error(431, "header block too large"),
+        Err(http::ReadError::BodyTooLarge) => Response::error(
+            413,
+            format!("body exceeds the {} byte limit", state.cfg.max_body_bytes),
+        ),
+        Ok(req) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            dispatch(state, &req, peer_is_loopback)
+        }))
+        .unwrap_or_else(|_| Response::error(500, "handler panicked")),
+    };
+    state.http.requests.fetch_add(1, Ordering::Relaxed);
+    let class = match response.status / 100 {
+        2 => &state.http.responses_2xx,
+        4 => &state.http.responses_4xx,
+        _ => &state.http.responses_5xx,
+    };
+    class.fetch_add(1, Ordering::Relaxed);
+    let _ = http::write_response(
+        &mut stream,
+        response.status,
+        response.content_type,
+        response.body.as_bytes(),
+    );
+    state.http.latency.record(t0.elapsed());
+    if response.shutdown_after {
+        trigger_shutdown(state);
+    }
+}
+
+const ENDPOINTS: &[&str] = &[
+    "GET /healthz",
+    "GET /metrics",
+    "POST /v1/predict",
+    "GET /v1/library/census",
+    "GET /v1/library/pareto?metric=MAE&width=8&fn=mul",
+    "GET /v1/select?max_accuracy_drop=D&model=M&images=N&limit=K",
+    "POST /v1/campaigns/resilience",
+    "GET /v1/jobs/{id}",
+    "POST /v1/admin/shutdown",
+];
+
+fn known_path(p: &[&str]) -> bool {
+    matches!(
+        p,
+        []
+            | ["healthz"]
+            | ["metrics"]
+            | ["v1", "predict"]
+            | ["v1", "library", "census"]
+            | ["v1", "library", "pareto"]
+            | ["v1", "select"]
+            | ["v1", "campaigns", "resilience"]
+            | ["v1", "jobs", _]
+            | ["v1", "admin", "shutdown"]
+    )
+}
+
+fn dispatch(state: &Arc<ServerState>, req: &http::Request, peer_is_loopback: bool) -> Response {
+    let target = Target::parse(&req.target);
+    let path = target.path();
+    match (req.method.as_str(), path.as_slice()) {
+        ("GET", []) => Response::json(
+            200,
+            Json::obj([
+                ("service", "evoapprox".into()),
+                (
+                    "endpoints",
+                    Json::Arr(ENDPOINTS.iter().map(|&e| e.into()).collect()),
+                ),
+            ]),
+        ),
+        ("GET", ["healthz"]) => handle_healthz(state),
+        ("GET", ["metrics"]) => handle_metrics(state),
+        ("POST", ["v1", "predict"]) => handle_predict(state, &req.body),
+        ("GET", ["v1", "library", "census"]) => {
+            Response::json(200, report::census_to_json(&state.library))
+        }
+        ("GET", ["v1", "library", "pareto"]) => handle_pareto(state, &target),
+        ("GET", ["v1", "select"]) => handle_select(state, &target),
+        ("POST", ["v1", "campaigns", "resilience"]) => handle_campaign(state, &req.body),
+        ("GET", ["v1", "jobs", id]) => handle_job(state, id),
+        // admin surface is loopback-only: a non-loopback bind must not
+        // hand every network peer a remote off-switch
+        ("POST", ["v1", "admin", "shutdown"]) if !peer_is_loopback => {
+            Response::error(403, "admin endpoints are restricted to loopback peers")
+        }
+        ("POST", ["v1", "admin", "shutdown"]) => Response {
+            status: 200,
+            content_type: "application/json",
+            body: Json::obj([("status", "shutting-down".into())]).to_string(),
+            shutdown_after: true,
+        },
+        (_, p) if known_path(p) => Response::error(405, "method not allowed for this route"),
+        _ => Response::error(404, "unknown route (GET / lists the endpoints)"),
+    }
+}
+
+fn handle_healthz(state: &ServerState) -> Response {
+    Response::json(
+        200,
+        Json::obj([
+            ("status", "ok".into()),
+            ("backend", state.coord.backend().as_str().into()),
+            ("model", state.cfg.model.as_str().into()),
+            ("uptime_ms", (state.started.elapsed().as_millis() as i64).into()),
+            ("jobs_submitted", (state.jobs.submitted() as i64).into()),
+        ]),
+    )
+}
+
+fn handle_metrics(state: &ServerState) -> Response {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let m = state.coord.metrics_raw();
+    for (name, value) in [
+        ("evoapprox_coordinator_jobs_total", m.jobs.load(Ordering::Relaxed)),
+        ("evoapprox_coordinator_images_total", m.images.load(Ordering::Relaxed)),
+        ("evoapprox_coordinator_batches_total", m.batches.load(Ordering::Relaxed)),
+        ("evoapprox_coordinator_errors_total", m.errors.load(Ordering::Relaxed)),
+    ] {
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {value}");
+    }
+    m.job_latency
+        .render_prometheus("evoapprox_job_latency_seconds", &mut out);
+    m.queue_wait
+        .render_prometheus("evoapprox_queue_wait_seconds", &mut out);
+    m.execute_time
+        .render_prometheus("evoapprox_execute_time_seconds", &mut out);
+    let h = &state.http;
+    let _ = writeln!(out, "# TYPE evoapprox_http_requests_total counter");
+    let _ = writeln!(
+        out,
+        "evoapprox_http_requests_total {}",
+        h.requests.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(out, "# TYPE evoapprox_http_responses_total counter");
+    for (class, counter) in [
+        ("2xx", &h.responses_2xx),
+        ("4xx", &h.responses_4xx),
+        ("5xx", &h.responses_5xx),
+    ] {
+        let _ = writeln!(
+            out,
+            "evoapprox_http_responses_total{{class=\"{class}\"}} {}",
+            counter.load(Ordering::Relaxed)
+        );
+    }
+    h.latency
+        .render_prometheus("evoapprox_http_request_seconds", &mut out);
+    let _ = writeln!(out, "# TYPE evoapprox_campaign_jobs_submitted_total counter");
+    let _ = writeln!(
+        out,
+        "evoapprox_campaign_jobs_submitted_total {}",
+        state.jobs.submitted()
+    );
+    Response {
+        status: 200,
+        content_type: "text/plain; version=0.0.4",
+        body: out,
+        shutdown_after: false,
+    }
+}
+
+/// Optional integer body field: absent → default, present but not an
+/// integer → an error (a mistyped request must fail loudly, not run with
+/// silently substituted defaults).
+fn body_i64(j: &Json, key: &str, default: i64) -> Result<i64, String> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_i64()
+            .ok_or_else(|| format!("`{key}` must be an integer")),
+    }
+}
+
+/// Optional string body field with the same strictness as [`body_i64`].
+fn body_str<'j>(j: &'j Json, key: &str, default: &'j str) -> Result<&'j str, String> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| format!("`{key}` must be a string")),
+    }
+}
+
+fn parse_image(j: &Json, image_len: usize) -> Result<Vec<f32>, String> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| "each image must be an array of numbers".to_string())?;
+    if arr.len() != image_len {
+        return Err(format!(
+            "image must hold exactly {image_len} values, got {}",
+            arr.len()
+        ));
+    }
+    arr.iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|x| x as f32)
+                .ok_or_else(|| "image values must be numbers".to_string())
+        })
+        .collect()
+}
+
+fn handle_predict(state: &ServerState, body: &[u8]) -> Response {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return Response::error(400, "body is not UTF-8"),
+    };
+    let j = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, format!("invalid JSON: {e}")),
+    };
+    match body_str(&j, "model", &state.cfg.model) {
+        Err(msg) => return Response::error(400, msg),
+        Ok(m) if m != state.cfg.model => {
+            return Response::error(
+                400,
+                format!("this server serves model `{}`", state.cfg.model),
+            );
+        }
+        Ok(_) => {}
+    }
+    let mut images: Vec<Vec<f32>> = Vec::new();
+    let parsed: Result<(), String> = (|| {
+        if let Some(arr) = j.get("images").and_then(Json::as_arr) {
+            // enforce the cap before parsing a single image — an abusive
+            // request must not cost a full JSON-to-f32 decode first
+            if arr.len() > MAX_IMAGES_PER_REQUEST {
+                return Err(format!(
+                    "at most {MAX_IMAGES_PER_REQUEST} images per request, got {}",
+                    arr.len()
+                ));
+            }
+            for img in arr {
+                images.push(parse_image(img, state.image_len)?);
+            }
+            Ok(())
+        } else if let Some(img) = j.get("image") {
+            images.push(parse_image(img, state.image_len)?);
+            Ok(())
+        } else {
+            Err("body must carry `image` (one) or `images` (array)".to_string())
+        }
+    })();
+    if let Err(msg) = parsed {
+        return Response::error(400, msg);
+    }
+    if images.is_empty() {
+        return Response::error(400, "no images in request");
+    }
+    let batcher = match state
+        .batcher
+        .lock()
+        .expect("batcher slot poisoned")
+        .clone()
+    {
+        Some(b) => b,
+        None => return Response::error(503, "server is shutting down"),
+    };
+    let mut pending = Vec::with_capacity(images.len());
+    for img in images {
+        match batcher.classify_async(img) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => return Response::error(503, format!("{e:#}")),
+        }
+    }
+    let mut preds = Vec::with_capacity(pending.len());
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(p)) => preds.push(Json::Num(p as f64)),
+            Ok(Err(e)) => return Response::error(500, format!("{e:#}")),
+            Err(_) => return Response::error(503, "batcher stopped mid-request"),
+        }
+    }
+    Response::json(
+        200,
+        Json::obj([
+            ("model", state.cfg.model.as_str().into()),
+            ("count", preds.len().into()),
+            ("predictions", Json::Arr(preds)),
+        ]),
+    )
+}
+
+fn handle_pareto(state: &ServerState, target: &Target) -> Response {
+    let metric_name = target.query_get("metric").unwrap_or("MAE");
+    let Some(metric) = Metric::parse(metric_name) else {
+        return Response::error(
+            400,
+            format!("unknown metric `{metric_name}` (ER|MAE|MSE|MRE|WCE|WCRE)"),
+        );
+    };
+    let width = match target.query_parse("width", 8u32) {
+        Ok(w) => w,
+        Err(e) => return Response::error(400, e),
+    };
+    let f = match target.query_get("fn").unwrap_or("mul") {
+        "mul" => ArithFn::Mul { w: width },
+        "add" => ArithFn::Add { w: width },
+        other => {
+            return Response::error(400, format!("unknown fn `{other}` (mul|add)"));
+        }
+    };
+    let all = state.library.for_fn(f);
+    let front_idx = pareto_indices(&all, metric);
+    let mut front: Vec<&Entry> = front_idx.iter().map(|&i| all[i]).collect();
+    front.sort_by(|a, b| a.cost.power_uw.total_cmp(&b.cost.power_uw));
+    Response::json(
+        200,
+        Json::obj([
+            ("metric", metric.name().into()),
+            ("fn", f.tag().into()),
+            ("population", all.len().into()),
+            ("count", front.len().into()),
+            (
+                "front",
+                Json::Arr(front.iter().map(|e| report::entry_to_json(e)).collect()),
+            ),
+        ]),
+    )
+}
+
+impl ServerState {
+    /// Compute (or fetch) the `/v1/select` evaluation: whole-network
+    /// accuracy of every roster multiplier on a deterministic synthetic
+    /// split. Inference runs outside the cache lock; two racing misses
+    /// compute twice and agree (the whole pipeline is deterministic).
+    fn select_eval(
+        &self,
+        model: &str,
+        images: usize,
+        limit: usize,
+    ) -> Result<Arc<SelectEval>> {
+        let key = format!("{model}|{images}|{limit}");
+        if let Some(e) = self
+            .select_cache
+            .lock()
+            .expect("select cache poisoned")
+            .get(&key)
+        {
+            return Ok(e.clone());
+        }
+        let n_layers = self
+            .coord
+            .manifest()
+            .model(model)
+            .ok_or_else(|| anyhow!("unknown model `{model}`"))?
+            .n_conv_layers;
+        let mults = standard_multipliers(Some(&self.library), 10, limit)?;
+        let testset = TestSet::synthetic(images);
+        let imgs = Arc::new(testset.images.clone());
+        let accs = map_parallel(
+            (0..mults.len()).collect(),
+            default_workers(),
+            |_, mi, _scratch| {
+                self.coord.accuracy(
+                    model,
+                    self.cfg.kernel,
+                    imgs.clone(),
+                    &testset.labels,
+                    Arc::new(broadcast_lut(&mults[mi].lut, n_layers)),
+                )
+            },
+        );
+        let mut it = accs.into_iter();
+        let reference_accuracy = it
+            .next()
+            .ok_or_else(|| anyhow!("empty multiplier roster"))??;
+        let mut candidates = Vec::with_capacity(mults.len().saturating_sub(1));
+        for (m, acc) in mults[1..].iter().zip(it) {
+            let acc = acc?;
+            candidates.push(SelectCandidate {
+                id: m.id.clone(),
+                label: m.label.clone(),
+                rel_power_pct: m.rel_power_pct,
+                accuracy: acc,
+                accuracy_drop: reference_accuracy - acc,
+            });
+        }
+        let eval = Arc::new(SelectEval {
+            reference_accuracy,
+            candidates,
+        });
+        self.select_cache
+            .lock()
+            .expect("select cache poisoned")
+            .insert(key, eval.clone());
+        Ok(eval)
+    }
+}
+
+fn candidate_to_json(c: &SelectCandidate) -> Json {
+    Json::obj([
+        ("id", c.id.as_str().into()),
+        ("label", c.label.as_str().into()),
+        ("rel_power_pct", c.rel_power_pct.into()),
+        ("power_saving_pct", (100.0 - c.rel_power_pct).into()),
+        ("accuracy", c.accuracy.into()),
+        ("accuracy_drop", c.accuracy_drop.into()),
+    ])
+}
+
+/// The autoAx-style quality-constrained pick: cheapest multiplier whose
+/// whole-network accuracy drop stays within the caller's bound.
+fn handle_select(state: &ServerState, target: &Target) -> Response {
+    let drop_limit: f64 = match target.query_get("max_accuracy_drop") {
+        None => {
+            return Response::error(400, "query parameter `max_accuracy_drop` is required")
+        }
+        Some(v) => match v.parse() {
+            Ok(x) => x,
+            Err(_) => {
+                return Response::error(400, format!("invalid max_accuracy_drop `{v}`"))
+            }
+        },
+    };
+    if !drop_limit.is_finite() || drop_limit < 0.0 {
+        return Response::error(400, "max_accuracy_drop must be a non-negative number");
+    }
+    let model = target
+        .query_get("model")
+        .unwrap_or(&state.cfg.model)
+        .to_string();
+    if state.coord.manifest().model(&model).is_none() {
+        return Response::error(404, format!("unknown model `{model}`"));
+    }
+    let images = match target.query_parse("images", state.cfg.select_images) {
+        Ok(n) => n,
+        Err(e) => return Response::error(400, e),
+    };
+    let limit = match target.query_parse("limit", 8usize) {
+        Ok(n) => n,
+        Err(e) => return Response::error(400, e),
+    };
+    // select runs synchronously on an HTTP worker (cached per
+    // (model, images, limit) afterwards), so its worst case is bounded
+    // tighter than the async campaign endpoint's — heavy sweeps belong
+    // on POST /v1/campaigns/resilience
+    if images == 0 || images > 128 || limit == 0 || limit > 16 {
+        return Response::error(400, "images must be 1..=128 and limit 1..=16");
+    }
+    let eval = match state.select_eval(&model, images, limit) {
+        Ok(e) => e,
+        Err(e) => return Response::error(500, format!("{e:#}")),
+    };
+    let picked = eval
+        .candidates
+        .iter()
+        .filter(|c| c.accuracy_drop <= drop_limit)
+        .min_by(|a, b| a.rel_power_pct.total_cmp(&b.rel_power_pct));
+    Response::json(
+        200,
+        Json::obj([
+            ("model", model.as_str().into()),
+            ("images", images.into()),
+            ("reference_accuracy", eval.reference_accuracy.into()),
+            ("max_accuracy_drop", drop_limit.into()),
+            (
+                "picked",
+                picked.map(candidate_to_json).unwrap_or(Json::Null),
+            ),
+            (
+                "candidates",
+                Json::Arr(eval.candidates.iter().map(candidate_to_json).collect()),
+            ),
+        ]),
+    )
+}
+
+fn handle_campaign(state: &Arc<ServerState>, body: &[u8]) -> Response {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return Response::error(400, "body is not UTF-8"),
+    };
+    let j = if text.trim().is_empty() {
+        Json::Obj(std::collections::BTreeMap::new())
+    } else {
+        match Json::parse(text) {
+            Ok(j) => j,
+            Err(e) => return Response::error(400, format!("invalid JSON: {e}")),
+        }
+    };
+    let model = match body_str(&j, "model", &state.cfg.model) {
+        Ok(m) => m.to_string(),
+        Err(msg) => return Response::error(400, msg),
+    };
+    if state.coord.manifest().model(&model).is_none() {
+        return Response::error(404, format!("unknown model `{model}`"));
+    }
+    let (images, multipliers, jobs) = match (|| {
+        Ok::<_, String>((
+            body_i64(&j, "images", 32)?,
+            body_i64(&j, "multipliers", 4)?,
+            body_i64(&j, "jobs", default_workers() as i64)?,
+        ))
+    })() {
+        Ok(t) => t,
+        Err(msg) => return Response::error(400, msg),
+    };
+    if !(1..=512).contains(&images) || !(1..=32).contains(&multipliers) || !(1..=64).contains(&jobs)
+    {
+        return Response::error(
+            400,
+            "images must be 1..=512, multipliers 1..=32, jobs 1..=64",
+        );
+    }
+    let (images, multipliers, jobs) = (images as usize, multipliers as usize, jobs as usize);
+    let st = state.clone();
+    let id = state.jobs.submit("resilience", move || {
+        let mults = standard_multipliers(Some(&st.library), 10, multipliers)?;
+        let testset = TestSet::synthetic(images);
+        let report =
+            per_layer_campaign(&st.coord, &model, &mults, &testset, st.cfg.kernel, jobs)?;
+        Ok(report::fig4_to_json(&report))
+    });
+    Response::json(
+        202,
+        Json::obj([
+            ("job", (id as i64).into()),
+            ("status", "queued".into()),
+            ("poll", format!("/v1/jobs/{id}").into()),
+        ]),
+    )
+}
+
+fn handle_job(state: &ServerState, id: &str) -> Response {
+    let Ok(id) = id.parse::<u64>() else {
+        return Response::error(400, "job id must be an integer");
+    };
+    let Some(rec) = state.jobs.get(id) else {
+        return Response::error(404, format!("no job {id}"));
+    };
+    Response::json(
+        200,
+        Json::obj([
+            ("id", (rec.id as i64).into()),
+            ("kind", rec.kind.as_str().into()),
+            ("status", rec.state.as_str().into()),
+            ("result", rec.result.unwrap_or(Json::Null)),
+            (
+                "error",
+                rec.error.map(Json::Str).unwrap_or(Json::Null),
+            ),
+        ]),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_paths_cover_the_dispatch_table() {
+        for p in [
+            vec!["healthz"],
+            vec!["metrics"],
+            vec!["v1", "predict"],
+            vec!["v1", "library", "census"],
+            vec!["v1", "library", "pareto"],
+            vec!["v1", "select"],
+            vec!["v1", "campaigns", "resilience"],
+            vec!["v1", "jobs", "7"],
+            vec!["v1", "admin", "shutdown"],
+        ] {
+            assert!(known_path(&p), "{p:?}");
+        }
+        assert!(!known_path(&["v2", "predict"]));
+        assert!(!known_path(&["v1", "jobs"]));
+    }
+
+    #[test]
+    fn response_helpers() {
+        let r = Response::error(404, "nope");
+        assert_eq!(r.status, 404);
+        assert_eq!(r.body, "{\"error\":\"nope\"}");
+        assert!(!r.shutdown_after);
+        let r = Response::json(200, Json::obj([("ok", true.into())]));
+        assert_eq!(r.content_type, "application/json");
+        assert_eq!(r.body, "{\"ok\":true}");
+    }
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let cfg = ServerConfig::default();
+        assert_eq!(cfg.model, "resnet8");
+        assert!(cfg.workers >= 1);
+        assert!(cfg.max_body_bytes >= 1024 * 1024);
+    }
+}

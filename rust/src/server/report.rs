@@ -1,0 +1,124 @@
+//! Canonical JSON renderings of library/campaign results.
+//!
+//! These are the single source of truth for the server's response bodies
+//! AND for the integration tests' in-process references: because both
+//! sides render through the same functions (and `util::json` serialises
+//! objects with sorted keys), "the server's campaign result equals the
+//! in-process campaign" can be asserted byte-for-byte.
+
+use crate::library::{Entry, Library};
+use crate::resilience::Fig4Report;
+use crate::util::json::Json;
+
+/// Brief entry view used by the library endpoints: identity, provenance,
+/// cost and the Table-II error percentages.
+pub fn entry_to_json(e: &Entry) -> Json {
+    Json::obj([
+        ("id", e.id.as_str().into()),
+        ("origin", e.origin.label().into()),
+        ("power_uw", e.cost.power_uw.into()),
+        ("area_um2", e.cost.area_um2.into()),
+        ("delay_ps", e.cost.delay_ps.into()),
+        ("mae_pct", e.rel.mae_pct.into()),
+        ("wce_pct", e.rel.wce_pct.into()),
+        ("mre_pct", e.rel.mre_pct.into()),
+        ("wcre_pct", e.rel.wcre_pct.into()),
+        ("er_pct", e.rel.er_pct.into()),
+    ])
+}
+
+/// Table-I census: `{"total": n, "census": [{kind, width, count}…]}`.
+pub fn census_to_json(lib: &Library) -> Json {
+    Json::obj([
+        ("total", lib.len().into()),
+        (
+            "census",
+            Json::Arr(
+                lib.census()
+                    .into_iter()
+                    .map(|(kind, width, count)| {
+                        Json::obj([
+                            ("kind", kind.into()),
+                            ("width", width.into()),
+                            ("count", count.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Fig. 4 per-layer campaign report.
+pub fn fig4_to_json(r: &Fig4Report) -> Json {
+    Json::obj([
+        ("model", r.model.as_str().into()),
+        ("reference_accuracy", r.reference_accuracy.into()),
+        ("power_reference_exact", r.power_reference_exact.into()),
+        (
+            "points",
+            Json::Arr(
+                r.points
+                    .iter()
+                    .map(|p| {
+                        Json::obj([
+                            ("multiplier", p.multiplier.as_str().into()),
+                            ("layer", p.layer.into()),
+                            ("layer_label", p.layer_label.as_str().into()),
+                            ("layer_fraction", p.layer_fraction.into()),
+                            ("accuracy", p.accuracy.into()),
+                            ("accuracy_drop", p.accuracy_drop.into()),
+                            ("power_drop_pct", p.power_drop_pct.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resilience::Fig4Point;
+
+    #[test]
+    fn census_shape() {
+        let lib = Library::baseline();
+        let j = census_to_json(&lib);
+        assert_eq!(j.req_i64("total").unwrap() as usize, lib.len());
+        let rows = j.req_arr("census").unwrap();
+        assert!(!rows.is_empty());
+        assert_eq!(rows[0].req_str("kind").unwrap(), "multiplier");
+        assert_eq!(rows[0].req_i64("width").unwrap(), 8);
+    }
+
+    #[test]
+    fn entry_and_fig4_round_trip_canonically() {
+        let lib = Library::baseline();
+        let e = &lib.entries()[0];
+        let j = entry_to_json(e);
+        // canonical: serialise → parse → serialise is a fixed point
+        let s = j.to_string();
+        assert_eq!(Json::parse(&s).unwrap().to_string(), s);
+        assert_eq!(j.req_str("id").unwrap(), e.id);
+
+        let report = Fig4Report {
+            model: "resnet8".into(),
+            reference_accuracy: 0.75,
+            power_reference_exact: true,
+            points: vec![Fig4Point {
+                multiplier: "mul8u_0001".into(),
+                layer: 0,
+                layer_label: "stem".into(),
+                layer_fraction: 0.125,
+                accuracy: 0.7421875,
+                accuracy_drop: 0.0078125,
+                power_drop_pct: 3.5,
+            }],
+        };
+        let s = fig4_to_json(&report).to_string();
+        assert_eq!(Json::parse(&s).unwrap().to_string(), s);
+        assert!(s.contains("\"layer_label\":\"stem\""));
+    }
+}

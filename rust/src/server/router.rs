@@ -1,0 +1,107 @@
+//! Request-target decomposition: path segments + query parameters.
+//!
+//! Routing itself is a `match` over `(method, segments)` in `super::route`
+//! — with under a dozen endpoints a table-driven router would be
+//! indirection for its own sake. This module owns the parsing the match
+//! arms share.
+
+/// A decomposed request target.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Target {
+    /// Path segments (`/v1/jobs/3` → `["v1", "jobs", "3"]`).
+    pub segments: Vec<String>,
+    /// Query parameters in arrival order (`?a=1&b=2`); a key without `=`
+    /// gets an empty value.
+    pub query: Vec<(String, String)>,
+}
+
+impl Target {
+    /// Split a raw request target. Never fails: an empty target is just
+    /// zero segments (routed to 404).
+    pub fn parse(raw: &str) -> Target {
+        let (path, query_str) = match raw.split_once('?') {
+            Some((p, q)) => (p, Some(q)),
+            None => (raw, None),
+        };
+        let segments = path
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
+        let mut query = Vec::new();
+        if let Some(q) = query_str {
+            for pair in q.split('&').filter(|p| !p.is_empty()) {
+                match pair.split_once('=') {
+                    Some((k, v)) => query.push((k.to_string(), v.to_string())),
+                    None => query.push((pair.to_string(), String::new())),
+                }
+            }
+        }
+        Target { segments, query }
+    }
+
+    /// Borrowed segment view for matching.
+    pub fn path(&self) -> Vec<&str> {
+        self.segments.iter().map(String::as_str).collect()
+    }
+
+    /// First value of query parameter `key`.
+    pub fn query_get(&self, key: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Typed query parameter with a default; `Err` carries the offending
+    /// key for a 400 message.
+    pub fn query_parse<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> Result<T, String> {
+        match self.query_get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("invalid value `{v}` for query parameter `{key}`")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_path_and_query() {
+        let t = Target::parse("/v1/library/pareto?metric=MAE&width=8");
+        assert_eq!(t.path(), vec!["v1", "library", "pareto"]);
+        assert_eq!(t.query_get("metric"), Some("MAE"));
+        assert_eq!(t.query_get("width"), Some("8"));
+        assert_eq!(t.query_get("absent"), None);
+    }
+
+    #[test]
+    fn handles_edge_targets() {
+        assert!(Target::parse("/").path().is_empty());
+        assert!(Target::parse("").path().is_empty());
+        let t = Target::parse("/healthz");
+        assert_eq!(t.path(), vec!["healthz"]);
+        // duplicate slashes collapse, bare keys get empty values
+        let t = Target::parse("//v1//jobs/7?flag&x=");
+        assert_eq!(t.path(), vec!["v1", "jobs", "7"]);
+        assert_eq!(t.query_get("flag"), Some(""));
+        assert_eq!(t.query_get("x"), Some(""));
+    }
+
+    #[test]
+    fn typed_query_params() {
+        let t = Target::parse("/v1/select?max_accuracy_drop=0.05&images=32");
+        assert_eq!(t.query_parse("images", 8usize).unwrap(), 32);
+        assert_eq!(t.query_parse("missing", 7u32).unwrap(), 7);
+        assert!((t.query_parse("max_accuracy_drop", 0.0f64).unwrap() - 0.05).abs() < 1e-12);
+        let e = Target::parse("/x?n=lots").query_parse("n", 1usize).unwrap_err();
+        assert!(e.contains("`lots`") && e.contains("`n`"));
+    }
+}

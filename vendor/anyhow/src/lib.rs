@@ -153,6 +153,22 @@ macro_rules! bail {
     };
 }
 
+/// Return early with an [`Error`] unless the condition holds (the subset
+/// of the real `ensure!`: a condition plus an optional message).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,6 +218,18 @@ mod tests {
         }
         assert_eq!(inner(false).unwrap(), 1);
         assert_eq!(format!("{}", inner(true).unwrap_err()), "nope: 7");
+    }
+
+    #[test]
+    fn ensure_early_return() {
+        fn inner(n: u32) -> Result<u32> {
+            ensure!(n < 10, "n too big: {n}");
+            ensure!(n != 7);
+            Ok(n)
+        }
+        assert_eq!(inner(3).unwrap(), 3);
+        assert_eq!(format!("{}", inner(12).unwrap_err()), "n too big: 12");
+        assert!(format!("{}", inner(7).unwrap_err()).contains("n != 7"));
     }
 
     #[test]
