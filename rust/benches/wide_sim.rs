@@ -1,0 +1,77 @@
+//! Wide-operand sampled-simulation throughput — the multi-word path that
+//! removed the 32-bit width cliff (DESIGN.md §4).
+//!
+//!   wide-sim  — multi-word sampled evaluation of mul/add seeds at
+//!               16/32/64/128-bit operands (vectors/second)
+//!   wide-char — full library characterisation (metrics + activity +
+//!               functional hash) of a wide seed
+//!
+//! `cargo bench --bench wide_sim [-- --quick]`
+
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::generators::{ripple_carry_adder, wallace_multiplier};
+use evoapproxlib::circuit::simulator::eval_vectors_wide;
+use evoapproxlib::circuit::verify::{
+    per_stratum_for_budget, stratified_vectors_wide, ArithFn,
+};
+use evoapproxlib::library::{Entry, Origin};
+use evoapproxlib::util::bench::{bench, per_second, quick_mode};
+
+fn main() {
+    let quick = quick_mode();
+    let samples = if quick { 3 } else { 10 };
+    let budget = if quick { 2_048 } else { 16_384 };
+
+    for w in [16u32, 32, 64, 128] {
+        let f = ArithFn::mul(w).expect("library width");
+        let netlist = wallace_multiplier(w);
+        let per = per_stratum_for_budget(f, budget);
+        let vecs = stratified_vectors_wide(f, per, 7);
+        let name = format!(
+            "wide-sim/mul{w}u sampled ({} vec, {} gates)",
+            vecs.len(),
+            netlist.active_gate_count()
+        );
+        let s = bench(&name, 1, samples, || {
+            std::hint::black_box(eval_vectors_wide(&netlist, &vecs));
+        });
+        println!(
+            "  => {:.2} M vector-evals/s",
+            per_second(vecs.len() as u64, s.median()) / 1e6
+        );
+    }
+
+    for w in [64u32, 128] {
+        let f = ArithFn::add(w).expect("library width");
+        let netlist = ripple_carry_adder(w);
+        let per = per_stratum_for_budget(f, budget);
+        let vecs = stratified_vectors_wide(f, per, 7);
+        let name = format!("wide-sim/add{w}u sampled ({} vec)", vecs.len());
+        let s = bench(&name, 1, samples, || {
+            std::hint::black_box(eval_vectors_wide(&netlist, &vecs));
+        });
+        println!(
+            "  => {:.2} M vector-evals/s",
+            per_second(vecs.len() as u64, s.median()) / 1e6
+        );
+    }
+
+    // full characterisation of the flagship width (metrics + activity +
+    // hash — the library-ingestion hot path for wide campaigns)
+    let model = CostModel::default();
+    let char_samples = if quick { 2 } else { 5 };
+    for (f, netlist) in [
+        (ArithFn::add(128).unwrap(), ripple_carry_adder(128)),
+        (ArithFn::mul(128).unwrap(), wallace_multiplier(128)),
+    ] {
+        let name = format!("wide-char/{} characterise", f.tag());
+        bench(&name, 1, char_samples, || {
+            std::hint::black_box(Entry::characterise(
+                netlist.clone(),
+                f,
+                &model,
+                Origin::Seed(netlist.name.clone()),
+            ));
+        });
+    }
+}

@@ -20,11 +20,33 @@
 use crate::circuit::cost::CostModel;
 use crate::circuit::gate::GateKind;
 use crate::circuit::simulator::exhaustive_input_word;
-use crate::circuit::verify::{stratified_vectors, ArithFn};
+use crate::circuit::verify::{
+    per_stratum_for_budget, stratified_vectors, stratified_vectors_wide, ArithFn,
+};
+use crate::circuit::wide::U256;
 use crate::data::rng::Xoshiro256;
 
 use super::chromosome::Chromosome;
 use super::metrics::{ErrorMetrics, Metric, SingleMetricAcc};
+
+/// The evaluation set in the representation matching the target width:
+/// narrow functions (w ≤ 32) pack vector and exact value into one `u64`
+/// each (the hot path, unchanged); wide functions carry multi-word
+/// [`U256`] values end to end.
+enum Table {
+    Narrow {
+        /// Sampled input vectors; `None` ⇒ exhaustive enumeration.
+        vectors: Option<Vec<u64>>,
+        /// Exact output per vector (indexed like the evaluation order).
+        exact: Vec<u64>,
+    },
+    Wide {
+        /// Multi-word packed input vectors (always sampled).
+        vectors: Vec<U256>,
+        /// Exact multi-word output per vector.
+        exact: Vec<U256>,
+    },
+}
 
 /// Immutable evaluation context for one arithmetic target function.
 ///
@@ -33,10 +55,8 @@ use super::metrics::{ErrorMetrics, Metric, SingleMetricAcc};
 pub struct EvalContext {
     /// Target function.
     pub f: ArithFn,
-    /// Sampled input vectors; `None` ⇒ exhaustive enumeration.
-    vectors: Option<Vec<u64>>,
-    /// Exact output per vector (indexed like the evaluation order).
-    exact: Vec<u64>,
+    /// The evaluation set (narrow or wide representation).
+    table: Table,
 }
 
 /// Per-worker scratch buffers for candidate evaluation.
@@ -73,8 +93,10 @@ impl EvalContext {
         let exact = (0..n_vec).map(|i| f.exact(i)).collect();
         EvalContext {
             f,
-            vectors: None,
-            exact,
+            table: Table::Narrow {
+                vectors: None,
+                exact,
+            },
         }
     }
 
@@ -91,31 +113,51 @@ impl EvalContext {
         let exact = vectors.iter().map(|&v| f.exact(v)).collect();
         EvalContext {
             f,
-            vectors: Some(vectors),
-            exact,
+            table: Table::Narrow {
+                vectors: Some(vectors),
+                exact,
+            },
         }
     }
 
     /// Sampled context over the deterministic stratified sample
     /// (used beyond the exhaustive-feasible widths; DESIGN.md §4).
+    /// Functions wider than 32 bits route to the multi-word path
+    /// transparently.
     pub fn sampled(f: ArithFn, per_stratum: usize, seed: u64) -> EvalContext {
-        let vectors = stratified_vectors(f, per_stratum, seed);
-        let exact = vectors.iter().map(|&v| f.exact(v)).collect();
-        EvalContext {
-            f,
-            vectors: Some(vectors),
-            exact,
-        }
+        let table = if f.is_narrow() {
+            let vectors = stratified_vectors(f, per_stratum, seed);
+            let exact = vectors.iter().map(|&v| f.exact(v)).collect();
+            Table::Narrow {
+                vectors: Some(vectors),
+                exact,
+            }
+        } else {
+            let vectors = stratified_vectors_wide(f, per_stratum, seed);
+            let exact = vectors.iter().map(|&v| f.exact_packed(v)).collect();
+            Table::Wide { vectors, exact }
+        };
+        EvalContext { f, table }
+    }
+
+    /// Sampled context whose stratified draw is capped at `max_vectors`
+    /// total vectors — the default for wide-width search, where the full
+    /// per-stratum grid (≈ `(w+1)²·s` vectors) would swamp the inner loop.
+    pub fn sampled_budgeted(f: ArithFn, max_vectors: usize, seed: u64) -> EvalContext {
+        EvalContext::sampled(f, per_stratum_for_budget(f, max_vectors), seed)
     }
 
     /// Number of vectors per evaluation.
     pub fn n_vectors(&self) -> u64 {
-        self.exact.len() as u64
+        match &self.table {
+            Table::Narrow { exact, .. } => exact.len() as u64,
+            Table::Wide { exact, .. } => exact.len() as u64,
+        }
     }
 
     /// Whether this context enumerates exhaustively.
     pub fn is_exhaustive(&self) -> bool {
-        self.vectors.is_none()
+        matches!(&self.table, Table::Narrow { vectors: None, .. })
     }
 
     /// Prepare the active-node order for `c` (grid order is topological),
@@ -148,14 +190,16 @@ impl EvalContext {
     /// Evaluate one word of 64 vectors starting at vector index `base`.
     #[inline]
     fn eval_word(&self, s: &mut EvalScratch, ni: u32, base: u64, lanes: u32) {
-        match &self.vectors {
-            None => {
+        match &self.table {
+            Table::Narrow { vectors: None, .. } => {
                 let w = base / 64;
                 for i in 0..ni {
                     s.in_words[i as usize] = exhaustive_input_word(i, w);
                 }
             }
-            Some(vs) => {
+            Table::Narrow {
+                vectors: Some(vs), ..
+            } => {
                 for i in 0..ni as usize {
                     s.in_words[i] = 0;
                 }
@@ -163,6 +207,17 @@ impl EvalContext {
                     let v = vs[base as usize + lane];
                     for i in 0..ni as usize {
                         s.in_words[i] |= ((v >> i) & 1) << lane;
+                    }
+                }
+            }
+            Table::Wide { vectors, .. } => {
+                for i in 0..ni as usize {
+                    s.in_words[i] = 0;
+                }
+                for lane in 0..lanes as usize {
+                    let v = vectors[base as usize + lane];
+                    for i in 0..ni {
+                        s.in_words[i as usize] |= v.bit(i) << lane;
                     }
                 }
             }
@@ -197,22 +252,41 @@ impl EvalContext {
             _ => bound * total as f64,
         };
         let ni = c.params.n_inputs;
-        let n_out = c.params.n_outputs;
+        let n_out = c.params.n_outputs as usize;
         let mut base = 0u64;
-        while base < total {
-            let lanes = ((total - base).min(64)) as u32;
-            self.eval_word(s, ni, base, lanes);
-            for lane in 0..lanes as u64 {
-                let mut val = 0u64;
-                for j in 0..n_out as usize {
-                    val |= ((s.out_words[j] >> lane) & 1) << j;
-                }
-                let ok = acc.push(val, self.exact[(base + lane) as usize], bound_acc);
-                if !ok {
-                    return f64::INFINITY;
+        match &self.table {
+            Table::Narrow { exact, .. } => {
+                while base < total {
+                    let lanes = ((total - base).min(64)) as u32;
+                    self.eval_word(s, ni, base, lanes);
+                    for lane in 0..lanes as u64 {
+                        let mut val = 0u64;
+                        for j in 0..n_out {
+                            val |= ((s.out_words[j] >> lane) & 1) << j;
+                        }
+                        if !acc.push(val, exact[(base + lane) as usize], bound_acc) {
+                            return f64::INFINITY;
+                        }
+                    }
+                    base += 64;
                 }
             }
-            base += 64;
+            Table::Wide { exact, .. } => {
+                while base < total {
+                    let lanes = ((total - base).min(64)) as u32;
+                    self.eval_word(s, ni, base, lanes);
+                    for lane in 0..lanes as u64 {
+                        let mut val = U256::ZERO;
+                        for (j, &ow) in s.out_words[..n_out].iter().enumerate() {
+                            val.or_bit(j as u32, (ow >> lane) & 1);
+                        }
+                        if !acc.push_wide(&val, &exact[(base + lane) as usize], bound_acc) {
+                            return f64::INFINITY;
+                        }
+                    }
+                    base += 64;
+                }
+            }
         }
         acc.value(total)
     }
@@ -222,22 +296,43 @@ impl EvalContext {
         self.prepare(s, c);
         let total = self.n_vectors();
         let ni = c.params.n_inputs;
-        let n_out = c.params.n_outputs;
-        let mut pairs: Vec<(u64, u64)> = Vec::with_capacity(total as usize);
+        let n_out = c.params.n_outputs as usize;
+        let exhaustive = self.is_exhaustive();
         let mut base = 0u64;
-        while base < total {
-            let lanes = ((total - base).min(64)) as u32;
-            self.eval_word(s, ni, base, lanes);
-            for lane in 0..lanes as u64 {
-                let mut val = 0u64;
-                for j in 0..n_out as usize {
-                    val |= ((s.out_words[j] >> lane) & 1) << j;
+        match &self.table {
+            Table::Narrow { exact, .. } => {
+                let mut pairs: Vec<(u64, u64)> = Vec::with_capacity(total as usize);
+                while base < total {
+                    let lanes = ((total - base).min(64)) as u32;
+                    self.eval_word(s, ni, base, lanes);
+                    for lane in 0..lanes as u64 {
+                        let mut val = 0u64;
+                        for j in 0..n_out {
+                            val |= ((s.out_words[j] >> lane) & 1) << j;
+                        }
+                        pairs.push((val, exact[(base + lane) as usize]));
+                    }
+                    base += 64;
                 }
-                pairs.push((val, self.exact[(base + lane) as usize]));
+                ErrorMetrics::from_pairs(pairs.into_iter(), exhaustive)
             }
-            base += 64;
+            Table::Wide { exact, .. } => {
+                let mut pairs: Vec<(U256, U256)> = Vec::with_capacity(total as usize);
+                while base < total {
+                    let lanes = ((total - base).min(64)) as u32;
+                    self.eval_word(s, ni, base, lanes);
+                    for lane in 0..lanes as u64 {
+                        let mut val = U256::ZERO;
+                        for (j, &ow) in s.out_words[..n_out].iter().enumerate() {
+                            val.or_bit(j as u32, (ow >> lane) & 1);
+                        }
+                        pairs.push((val, exact[(base + lane) as usize]));
+                    }
+                    base += 64;
+                }
+                ErrorMetrics::from_wide_pairs(pairs.into_iter(), false)
+            }
         }
-        ErrorMetrics::from_pairs(pairs.into_iter(), self.is_exhaustive())
     }
 
     /// Cost term of the paper's fitness: summed cell area of active gates.
@@ -289,6 +384,12 @@ impl Evaluator {
     /// Stratified-sample evaluator (see [`EvalContext::sampled`]).
     pub fn sampled(f: ArithFn, per_stratum: usize, seed: u64) -> Evaluator {
         Evaluator::from_ctx(EvalContext::sampled(f, per_stratum, seed))
+    }
+
+    /// Budgeted stratified-sample evaluator
+    /// (see [`EvalContext::sampled_budgeted`]).
+    pub fn sampled_budgeted(f: ArithFn, max_vectors: usize, seed: u64) -> Evaluator {
+        Evaluator::from_ctx(EvalContext::sampled_budgeted(f, max_vectors, seed))
     }
 
     /// The shared context.
@@ -440,6 +541,57 @@ mod tests {
         for (err, m) in results {
             assert_eq!(err, serial.0);
             assert_eq!(m, serial.1);
+        }
+    }
+
+    #[test]
+    fn wide_context_scores_exact_and_approximate_candidates() {
+        use crate::circuit::baselines::truncated_multiplier;
+        let f = ArithFn::Mul { w: 40 };
+        let ctx = EvalContext::sampled_budgeted(f, 2048, 11);
+        assert!(!ctx.is_exhaustive());
+        assert_eq!(ctx.n_vectors(), 41 * 41); // per-stratum floored at 1
+        let mut s = EvalScratch::new();
+        // exact seed: zero error on every metric
+        let exact = Chromosome::from_netlist(&wallace_multiplier(40), 0);
+        assert_eq!(ctx.error_bounded(&mut s, &exact, Metric::Mae, f64::INFINITY), 0.0);
+        assert_eq!(ctx.error_bounded(&mut s, &exact, Metric::Wce, f64::INFINITY), 0.0);
+        let m = ctx.full_metrics(&mut s, &exact);
+        assert!(m.verified_exact());
+        assert_eq!(m.n_vectors, ctx.n_vectors());
+        // truncated seed: strictly positive error, early abort works
+        let approx = Chromosome::from_netlist(&truncated_multiplier(40, 30), 0);
+        let mae = ctx.error_bounded(&mut s, &approx, Metric::Mae, f64::INFINITY);
+        assert!(mae > 0.0);
+        let aborted = ctx.error_bounded(&mut s, &approx, Metric::Wce, 1.0);
+        assert!(aborted.is_infinite());
+        let ma = ctx.full_metrics(&mut s, &approx);
+        assert!(ma.er > 0.0 && ma.wce > 0.0);
+    }
+
+    #[test]
+    fn wide_context_is_thread_safe_and_consistent() {
+        use crate::circuit::baselines::truncated_multiplier;
+        let f = ArithFn::Mul { w: 48 };
+        let ctx = EvalContext::sampled_budgeted(f, 1024, 3);
+        let c = Chromosome::from_netlist(&truncated_multiplier(48, 40), 0);
+        let serial = {
+            let mut s = EvalScratch::new();
+            ctx.error_bounded(&mut s, &c, Metric::Mae, f64::INFINITY)
+        };
+        let results: Vec<f64> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..3)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut s = EvalScratch::new();
+                        ctx.error_bounded(&mut s, &c, Metric::Mae, f64::INFINITY)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in results {
+            assert_eq!(r, serial);
         }
     }
 

@@ -3,6 +3,7 @@
 //! input vectors or over a (stratified) sample.
 
 use crate::circuit::verify::ArithFn;
+use crate::circuit::wide::U256;
 
 /// Which error metric drives an optimisation run / a Pareto selection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -88,6 +89,29 @@ pub struct ErrorMetrics {
 }
 
 impl ErrorMetrics {
+    /// The result of an *empty* evaluation: every metric NaN, so a run that
+    /// saw zero vectors can never masquerade as a verified-exact circuit
+    /// (all-zero metrics with `n_vectors: 0` used to be indistinguishable
+    /// from one).
+    fn poisoned(exhaustive: bool) -> ErrorMetrics {
+        ErrorMetrics {
+            er: f64::NAN,
+            mae: f64::NAN,
+            mse: f64::NAN,
+            mre: f64::NAN,
+            wce: f64::NAN,
+            wcre: f64::NAN,
+            n_vectors: 0,
+            exhaustive,
+        }
+    }
+
+    /// True only when a non-empty evaluation observed zero error (an empty
+    /// evaluation reports NaN metrics and never passes this test).
+    pub fn verified_exact(&self) -> bool {
+        self.n_vectors > 0 && self.er == 0.0
+    }
+
     /// Compute all metrics from parallel `(approx, exact)` output streams.
     pub fn from_pairs(pairs: impl Iterator<Item = (u64, u64)>, exhaustive: bool) -> ErrorMetrics {
         let mut n = 0u64;
@@ -114,13 +138,64 @@ impl ErrorMetrics {
                 wcre = rel;
             }
         }
-        let nf = n.max(1) as f64;
+        if n == 0 {
+            return Self::poisoned(exhaustive);
+        }
+        let nf = n as f64;
         ErrorMetrics {
             er: errors as f64 / nf,
             mae: sum_abs / nf,
             mse: sum_sq / nf,
             mre: sum_rel / nf,
             wce: wce as f64,
+            wcre,
+            n_vectors: n,
+            exhaustive,
+        }
+    }
+
+    /// Wide counterpart of [`ErrorMetrics::from_pairs`]: differences are
+    /// taken exactly in 256-bit arithmetic and accumulated in `f64`; WCE
+    /// keeps the exact [`U256`] maximum until the final conversion, so
+    /// 256-bit products neither wrap nor lose the worst case.
+    pub fn from_wide_pairs(
+        pairs: impl Iterator<Item = (U256, U256)>,
+        exhaustive: bool,
+    ) -> ErrorMetrics {
+        let mut n = 0u64;
+        let mut errors = 0u64;
+        let mut sum_abs = 0f64;
+        let mut sum_sq = 0f64;
+        let mut sum_rel = 0f64;
+        let mut wce = U256::ZERO;
+        let mut wcre = 0f64;
+        for (approx, exact) in pairs {
+            n += 1;
+            if approx == exact {
+                continue;
+            }
+            errors += 1;
+            let d = approx.abs_diff(exact);
+            let df = d.to_f64();
+            sum_abs += df;
+            sum_sq += df * df;
+            let rel = df / exact.to_f64().max(1.0);
+            sum_rel += rel;
+            wce = wce.max(d);
+            if rel > wcre {
+                wcre = rel;
+            }
+        }
+        if n == 0 {
+            return Self::poisoned(exhaustive);
+        }
+        let nf = n as f64;
+        ErrorMetrics {
+            er: errors as f64 / nf,
+            mae: sum_abs / nf,
+            mse: sum_sq / nf,
+            mre: sum_rel / nf,
+            wce: wce.to_f64(),
             wcre,
             n_vectors: n,
             exhaustive,
@@ -150,11 +225,24 @@ impl ErrorMetrics {
         )
     }
 
+    /// Metrics over a wide (multi-word packed) sampled evaluation.
+    pub fn vs_exact_wide_sampled(inputs: &[U256], outputs: &[U256], f: ArithFn) -> ErrorMetrics {
+        Self::from_wide_pairs(
+            inputs
+                .iter()
+                .zip(outputs)
+                .map(|(&i, &o)| (o, f.exact_packed(i))),
+            false,
+        )
+    }
+
     /// Express MAE / WCE / MSE as percentages of the function's maximum
     /// output value, and ER / MRE / WCRE as percentages — the units of the
     /// paper's Table II ("Relative Arithmetic errors").
     pub fn as_percentages(&self, f: ArithFn) -> RelativeErrors {
-        let max_out = (1u128 << f.n_outputs()) as f64 - 1.0;
+        // computed in f64 (`1u128 << n_outputs` wraps/panics at the 128
+        // outputs of a 64-bit multiplier, let alone the 256 of a 128-bit)
+        let max_out = (f.n_outputs() as f64).exp2() - 1.0;
         RelativeErrors {
             er_pct: self.er * 100.0,
             mae_pct: self.mae / max_out * 100.0,
@@ -220,6 +308,31 @@ impl SingleMetricAcc {
                 Metric::Mre => self.sum += d / (exact.max(1) as f64),
                 Metric::Wce => self.worst = self.worst.max(d),
                 Metric::Wcre => self.worst = self.worst.max(d / (exact.max(1) as f64)),
+            }
+        }
+        match self.metric {
+            Metric::Wce | Metric::Wcre => self.worst <= bound_times_n,
+            Metric::Er => (self.errors as f64) <= bound_times_n,
+            _ => self.sum <= bound_times_n,
+        }
+    }
+
+    /// Wide counterpart of [`SingleMetricAcc::push`]: the difference is
+    /// exact in 256 bits, then accumulated in `f64`.
+    #[inline]
+    pub fn push_wide(&mut self, approx: &U256, exact: &U256, bound_times_n: f64) -> bool {
+        self.n += 1;
+        if approx != exact {
+            let d = approx.abs_diff(*exact).to_f64();
+            match self.metric {
+                Metric::Er => self.errors += 1,
+                Metric::Mae => self.sum += d,
+                Metric::Mse => self.sum += d * d,
+                Metric::Mre => self.sum += d / exact.to_f64().max(1.0),
+                Metric::Wce => self.worst = self.worst.max(d),
+                Metric::Wcre => {
+                    self.worst = self.worst.max(d / exact.to_f64().max(1.0))
+                }
             }
         }
         match self.metric {
@@ -337,6 +450,97 @@ mod tests {
         let mut acc = SingleMetricAcc::new(Metric::Wce);
         assert!(acc.push(100, 100, 5.0));
         assert!(!acc.push(110, 100, 5.0), "wce 10 > bound 5 must abort");
+    }
+
+    #[test]
+    fn empty_evaluation_cannot_masquerade_as_exact() {
+        let m = ErrorMetrics::from_pairs(std::iter::empty(), false);
+        assert_eq!(m.n_vectors, 0);
+        assert!(m.er.is_nan() && m.mae.is_nan() && m.wce.is_nan());
+        assert!(!m.verified_exact(), "empty run must not look exact");
+        let mw = ErrorMetrics::from_wide_pairs(std::iter::empty(), true);
+        assert!(mw.er.is_nan());
+        assert!(!mw.verified_exact());
+        // a real zero-error evaluation still reads as exact
+        let exact = ErrorMetrics::from_pairs([(5u64, 5u64), (9, 9)].into_iter(), true);
+        assert!(exact.verified_exact());
+        assert_eq!(exact.er, 0.0);
+    }
+
+    #[test]
+    fn wide_pairs_match_narrow_pairs_on_narrow_data() {
+        use crate::circuit::wide::U256;
+        let t = eval_exhaustive_u64(&bam_multiplier(8, 1, 5));
+        let narrow = ErrorMetrics::vs_exact_table(&t, MUL8);
+        let wide = ErrorMetrics::from_wide_pairs(
+            t.iter().enumerate().map(|(i, &o)| {
+                (
+                    U256::from_u64(o),
+                    U256::from_u64(MUL8.exact(i as u64)),
+                )
+            }),
+            true,
+        );
+        assert_eq!(wide.n_vectors, narrow.n_vectors);
+        assert_eq!(wide.er, narrow.er);
+        assert_eq!(wide.wce, narrow.wce);
+        assert!((wide.mae - narrow.mae).abs() < 1e-9);
+        assert!((wide.mse - narrow.mse).abs() < 1e-6);
+        assert!((wide.mre - narrow.mre).abs() < 1e-12);
+        assert!((wide.wcre - narrow.wcre).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wide_wce_is_exact_for_256_bit_differences() {
+        use crate::circuit::wide::U256;
+        // one huge error: |0 − 2^254|
+        let exact = U256::from_u64(1).shl(254);
+        let m = ErrorMetrics::from_wide_pairs([(U256::ZERO, exact)].into_iter(), false);
+        assert_eq!(m.wce, 2f64.powi(254));
+        assert_eq!(m.er, 1.0);
+    }
+
+    #[test]
+    fn percentages_finite_for_128_bit_functions() {
+        let f = ArithFn::Mul { w: 128 }; // 256 outputs — used to overflow
+        let m = ErrorMetrics {
+            er: 0.5,
+            mae: 1e30,
+            mse: 1e60,
+            mre: 0.1,
+            wce: 1e35,
+            wcre: 0.2,
+            n_vectors: 100,
+            exhaustive: false,
+        };
+        let r = m.as_percentages(f);
+        assert!(r.mae_pct.is_finite() && r.mae_pct > 0.0);
+        assert!(r.mse_pct.is_finite());
+        assert!(r.wce_pct.is_finite());
+    }
+
+    #[test]
+    fn push_wide_matches_push_on_narrow_data() {
+        use crate::circuit::wide::U256;
+        let t = eval_exhaustive_u64(&bam_multiplier(8, 0, 5));
+        for metric in [
+            Metric::Er,
+            Metric::Mae,
+            Metric::Mse,
+            Metric::Mre,
+            Metric::Wce,
+            Metric::Wcre,
+        ] {
+            let mut narrow = SingleMetricAcc::new(metric);
+            let mut wide = SingleMetricAcc::new(metric);
+            for (i, &o) in t.iter().enumerate() {
+                let e = MUL8.exact(i as u64);
+                narrow.push(o, e, f64::INFINITY);
+                wide.push_wide(&U256::from_u64(o), &U256::from_u64(e), f64::INFINITY);
+            }
+            let (a, b) = (narrow.value(t.len() as u64), wide.value(t.len() as u64));
+            assert!((a - b).abs() < 1e-9, "{}: {a} vs {b}", metric.name());
+        }
     }
 
     #[test]

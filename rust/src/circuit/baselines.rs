@@ -82,7 +82,8 @@ mod tests {
         let t = eval_exhaustive_u64(n);
         let mut worst = 0u64;
         for (idx, &v) in t.iter().enumerate() {
-            let a = (idx as u64) & ((1 << w) - 1);
+            // 1u64: a bare `1` is i32 and overflows the shift at w ≥ 31
+            let a = (idx as u64) & ((1u64 << w) - 1);
             let b = (idx as u64) >> w;
             worst = worst.max((a * b).abs_diff(v));
         }

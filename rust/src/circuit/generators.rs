@@ -243,10 +243,16 @@ mod tests {
     use super::*;
     use crate::circuit::simulator::eval_exhaustive_u64;
 
+    // `1u64`, not a bare `1`: the literal would be i32 and overflow the
+    // shift for w ≥ 31 — the same cliff the wide path removes.
+    fn low_mask(w: u32) -> u64 {
+        (1u64 << w) - 1
+    }
+
     fn check_adder(n: &Netlist, w: u32) {
         let t = eval_exhaustive_u64(n);
         for (idx, &v) in t.iter().enumerate() {
-            let a = (idx as u64) & ((1 << w) - 1);
+            let a = (idx as u64) & low_mask(w);
             let b = (idx as u64) >> w;
             assert_eq!(v, a + b, "{}: {a}+{b}", n.name);
         }
@@ -255,9 +261,38 @@ mod tests {
     fn check_multiplier(n: &Netlist, w: u32) {
         let t = eval_exhaustive_u64(n);
         for (idx, &v) in t.iter().enumerate() {
-            let a = (idx as u64) & ((1 << w) - 1);
+            let a = (idx as u64) & low_mask(w);
             let b = (idx as u64) >> w;
             assert_eq!(v, a * b, "{}: {a}*{b}", n.name);
+        }
+    }
+
+    /// Sampled oracle check for widths past the exhaustive budget: `pairs`
+    /// of `w`-bit operands against a `u128` reference.
+    fn check_wide(n: &Netlist, w: u32, mul: bool) {
+        use crate::circuit::simulator::eval_vectors_wide;
+        use crate::circuit::wide::{mask128, U256};
+        let mut rng = crate::data::rng::SplitMix64::new(0xD1CE ^ w as u64);
+        let m = mask128(w);
+        let pairs: Vec<(u128, u128)> = (0..100)
+            .map(|_| {
+                let a = (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & m;
+                let b = (((rng.next_u64() as u128) << 64) | rng.next_u64() as u128) & m;
+                (a, b)
+            })
+            .collect();
+        let vecs: Vec<U256> = pairs
+            .iter()
+            .map(|&(a, b)| U256::pack_operands(a, b, w))
+            .collect();
+        let got = eval_vectors_wide(n, &vecs);
+        for (&(a, b), out) in pairs.iter().zip(&got) {
+            let want = if mul {
+                U256::mul_u128(a, b)
+            } else {
+                U256::add_u128(a, b)
+            };
+            assert_eq!(*out, want, "{}: a={a} b={b}", n.name);
         }
     }
 
@@ -333,5 +368,41 @@ mod tests {
             let b = v >> w;
             assert_eq!(got[k], a + b);
         }
+    }
+
+    #[test]
+    fn wide_seed_suite_constructs_at_library_widths() {
+        use crate::circuit::baselines::truncated_multiplier;
+        // The extended-library widths (8–128 bit): every conventional seed
+        // plus the truncated approximate seed must construct and validate.
+        for w in [16u32, 32, 64, 128] {
+            for n in [
+                ripple_carry_adder(w),
+                kogge_stone_adder(w),
+                wallace_multiplier(w),
+                array_multiplier(w),
+                truncated_multiplier(w, (3 * w) / 4),
+            ] {
+                assert!(n.validate().is_ok(), "{}", n.name);
+                assert!(n.active_gate_count() > 0, "{}", n.name);
+            }
+        }
+    }
+
+    #[test]
+    fn wide_adders_multi_word_oracle() {
+        for w in [33u32, 48, 64, 100, 128] {
+            check_wide(&ripple_carry_adder(w), w, false);
+            check_wide(&kogge_stone_adder(w), w, false);
+        }
+    }
+
+    #[test]
+    fn wide_multipliers_multi_word_oracle() {
+        for w in [33u32, 48, 64] {
+            check_wide(&wallace_multiplier(w), w, true);
+        }
+        // the 128-bit flagship: 256 inputs, 256 outputs
+        check_wide(&wallace_multiplier(128), 128, true);
     }
 }

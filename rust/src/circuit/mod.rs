@@ -11,9 +11,11 @@ pub mod generators;
 pub mod netlist;
 pub mod simulator;
 pub mod verify;
+pub mod wide;
 
 pub use cost::{CircuitCost, CostModel};
 pub use gate::GateKind;
 pub use netlist::{Netlist, Node, SignalId};
 pub use simulator::{Activity, BitSim};
 pub use verify::ArithFn;
+pub use wide::U256;

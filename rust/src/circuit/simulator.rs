@@ -10,16 +10,26 @@
 //!   [`MAX_EXHAUSTIVE_INPUTS`] primary inputs;
 //! * **sampled** — caller-supplied vectors (the library uses deterministic
 //!   stratified samples for wide adders/multipliers where the paper defers
-//!   to SAT/BDD-based analysis).
+//!   to SAT/BDD-based analysis); interfaces beyond 64 inputs/outputs go
+//!   through the multi-word variant ([`BitSim::eval_vectors_wide`], up to
+//!   [`MAX_IO_BITS`] = 256 bits — a 128×128-bit multiplier).
 //!
 //! The same sweep also collects per-signal ones-densities, from which the
 //! cost model derives zero-delay switching activities for dynamic power.
 
 use super::netlist::Netlist;
+use super::wide::U256;
 
 /// Exhaustive evaluation is permitted up to this many primary inputs
 /// (2²⁰ ≈ 1 M vectors; an 8×8 multiplier needs 2¹⁶).
 pub const MAX_EXHAUSTIVE_INPUTS: u32 = 20;
+
+/// Widest primary-input/-output interface of the multi-word sampled path:
+/// four packed words = 256 bits, enough for a 128×128-bit multiplier
+/// (256 inputs, 256 outputs). The bit-parallel sweep itself is
+/// width-agnostic — one 64-lane word per *signal* — so only vector
+/// packing/unpacking is multi-word.
+pub const MAX_IO_BITS: u32 = 256;
 
 /// Lane patterns for exhaustive enumeration: input `i < 6` toggles with
 /// period `2^i` inside every 64-lane word.
@@ -142,8 +152,14 @@ impl BitSim {
     /// Sampled evaluation: `vectors[k]` packs the primary-input values of
     /// sample `k` (bit `i` = input `i`). Returns one output value per sample.
     pub fn eval_vectors(&mut self, n: &Netlist, vectors: &[u64]) -> Vec<u64> {
-        assert!(n.n_inputs <= 64, "more than 64 inputs");
-        assert!(n.outputs.len() <= 64, "more than 64 outputs");
+        assert!(
+            n.n_inputs <= 64,
+            "more than 64 inputs — use eval_vectors_wide"
+        );
+        assert!(
+            n.outputs.len() <= 64,
+            "more than 64 outputs — use eval_vectors_wide"
+        );
         self.reset(n);
         let mut result = vec![0u64; vectors.len()];
         let mut in_words = vec![0u64; n.n_inputs as usize];
@@ -167,6 +183,49 @@ impl BitSim {
                 let mut val = 0u64;
                 for (j, &ow) in out_words.iter().enumerate() {
                     val |= ((ow >> lane) & 1) << j;
+                }
+                *slot = val;
+            }
+        }
+        result
+    }
+
+    /// Multi-word sampled evaluation for wide interfaces: `vectors[k]`
+    /// packs up to [`MAX_IO_BITS`] primary-input bits of sample `k`
+    /// (bit `i` = input `i`); returns one packed output value per sample.
+    /// This is the path that removes the 64-input/64-output cliff of
+    /// [`BitSim::eval_vectors`] — same single forward sweep, multi-word
+    /// lane packing at the boundary.
+    pub fn eval_vectors_wide(&mut self, n: &Netlist, vectors: &[U256]) -> Vec<U256> {
+        assert!(n.n_inputs <= MAX_IO_BITS, "more than {MAX_IO_BITS} inputs");
+        assert!(
+            n.outputs.len() <= MAX_IO_BITS as usize,
+            "more than {MAX_IO_BITS} outputs"
+        );
+        self.reset(n);
+        let mut result = vec![U256::ZERO; vectors.len()];
+        let mut in_words = vec![0u64; n.n_inputs as usize];
+        let mut out_words = vec![0u64; n.outputs.len()];
+        for (wi, chunk) in vectors.chunks(64).enumerate() {
+            in_words.iter_mut().for_each(|x| *x = 0);
+            for (lane, &v) in chunk.iter().enumerate() {
+                for i in 0..n.n_inputs {
+                    in_words[i as usize] |= v.bit(i) << lane;
+                }
+            }
+            let valid = if chunk.len() == 64 {
+                !0u64
+            } else {
+                (1u64 << chunk.len()) - 1
+            };
+            self.eval_word_into(n, &in_words, valid, &mut out_words);
+            for (lane, slot) in result[wi * 64..wi * 64 + chunk.len()]
+                .iter_mut()
+                .enumerate()
+            {
+                let mut val = U256::ZERO;
+                for (j, &ow) in out_words.iter().enumerate() {
+                    val.or_bit(j as u32, (ow >> lane) & 1);
                 }
                 *slot = val;
             }
@@ -226,6 +285,20 @@ pub fn eval_exhaustive_u64(n: &Netlist) -> Vec<u64> {
 /// One-shot sampled evaluation.
 pub fn eval_vectors_u64(n: &Netlist, vectors: &[u64]) -> Vec<u64> {
     BitSim::new(false).eval_vectors(n, vectors)
+}
+
+/// One-shot multi-word sampled evaluation (wide interfaces).
+pub fn eval_vectors_wide(n: &Netlist, vectors: &[U256]) -> Vec<U256> {
+    BitSim::new(false).eval_vectors_wide(n, vectors)
+}
+
+/// Multi-word sampled evaluation with activity collection (wide power
+/// estimation path).
+pub fn activity_vectors_wide(n: &Netlist, vectors: &[U256]) -> (Vec<U256>, Activity) {
+    let mut sim = BitSim::new(true);
+    let table = sim.eval_vectors_wide(n, vectors);
+    let act = sim.activity();
+    (table, act)
 }
 
 /// Exhaustive evaluation with activity collection (power estimation path).
@@ -330,5 +403,63 @@ mod tests {
     fn exhaustive_limit_enforced() {
         let n = Netlist::new(24, "wide");
         eval_exhaustive_u64(&n);
+    }
+
+    #[test]
+    fn wide_identity_200_inputs_echoes_vectors() {
+        // 200 inputs / 200 outputs — far past the old 64-bit cliff.
+        let mut n = Netlist::new(200, "id200");
+        for i in 0..200 {
+            n.output(i);
+        }
+        let mut vecs = Vec::new();
+        for k in 0..130u32 {
+            let mut v = U256::ZERO;
+            // deterministic sparse pattern touching every word
+            for bit in [k % 200, (k * 37) % 200, (k * 71 + 199) % 200] {
+                v.or_bit(bit, 1);
+            }
+            vecs.push(v);
+        }
+        let got = eval_vectors_wide(&n, &vecs);
+        assert_eq!(got, vecs, "identity must echo all 200 bits per lane");
+    }
+
+    #[test]
+    fn wide_matches_narrow_on_narrow_circuits() {
+        // 7-input parity, 130 samples (crosses a word boundary and ends
+        // mid-word): the wide path must agree bit-for-bit with eval_vectors.
+        let mut n = Netlist::new(7, "par7");
+        let mut acc = n.input(0);
+        for i in 1..7 {
+            acc = n.push(GateKind::Xor, acc, i);
+        }
+        n.output(acc);
+        let narrow_vecs: Vec<u64> = (0..130).map(|k| (k * 37) % 128).collect();
+        let wide_vecs: Vec<U256> = narrow_vecs.iter().map(|&v| U256::from_u64(v)).collect();
+        let narrow = eval_vectors_u64(&n, &narrow_vecs);
+        let wide = eval_vectors_wide(&n, &wide_vecs);
+        assert_eq!(narrow.len(), wide.len());
+        for (a, b) in narrow.iter().zip(&wide) {
+            assert_eq!(U256::from_u64(*a), *b);
+        }
+    }
+
+    #[test]
+    fn wide_activity_matches_narrow_activity() {
+        let n = xor2();
+        let vecs: Vec<u64> = (0..4).collect();
+        let (_, narrow) = activity_vectors(&n, &vecs);
+        let wide_vecs: Vec<U256> = vecs.iter().map(|&v| U256::from_u64(v)).collect();
+        let (_, wide) = activity_vectors_wide(&n, &wide_vecs);
+        assert_eq!(narrow.n_vectors, wide.n_vectors);
+        assert_eq!(narrow.ones_frac, wide.ones_frac);
+    }
+
+    #[test]
+    #[should_panic(expected = "eval_vectors_wide")]
+    fn narrow_sampled_path_rejects_wide_interfaces() {
+        let n = Netlist::new(65, "toowide");
+        eval_vectors_u64(&n, &[0]);
     }
 }

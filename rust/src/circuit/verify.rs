@@ -5,8 +5,28 @@
 
 
 use super::netlist::Netlist;
-use super::simulator::{eval_exhaustive_u64, eval_vectors_u64, MAX_EXHAUSTIVE_INPUTS};
+use super::simulator::{
+    eval_exhaustive_u64, eval_vectors_u64, eval_vectors_wide, MAX_EXHAUSTIVE_INPUTS,
+};
+use super::wide::{mask128, U256};
 use crate::data::rng::SplitMix64;
+
+/// Widest operand the library targets (a 128×128-bit multiplier needs 256
+/// primary inputs and 256 outputs — exactly one [`U256`] each).
+pub const MAX_WIDTH: u32 = 128;
+
+/// Widest operand the single-`u64` packed value path can hold: both
+/// operands (`2w` bits) and every output bit (`2w` for a multiplier) must
+/// fit one word.
+pub const NARROW_MAX_WIDTH: u32 = 32;
+
+/// Vector budget for *characterising* a wide circuit into the library
+/// (DESIGN.md §4: the stratified grid is scaled so 128-bit functions stay
+/// tractable).
+pub const WIDE_CHAR_MAX_VECTORS: usize = 16_384;
+
+/// Vector budget for the CGP *search* context on wide functions.
+pub const WIDE_SEARCH_MAX_VECTORS: usize = 4_096;
 
 /// The arithmetic function a circuit is meant to implement.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -18,6 +38,36 @@ pub enum ArithFn {
 }
 
 impl ArithFn {
+    /// Validated constructor for a `w`-bit adder (`1 ≤ w ≤` [`MAX_WIDTH`]).
+    pub fn add(w: u32) -> Result<ArithFn, String> {
+        ArithFn::Add { w }.validated()
+    }
+
+    /// Validated constructor for a `w×w`-bit multiplier.
+    pub fn mul(w: u32) -> Result<ArithFn, String> {
+        ArithFn::Mul { w }.validated()
+    }
+
+    /// Check the width against the representable range; every entry point
+    /// that accepts an external width (CLI flags, JSON, HTTP queries) goes
+    /// through this instead of silently mis-evaluating.
+    pub fn validated(self) -> Result<ArithFn, String> {
+        let w = self.width();
+        if w == 0 || w > MAX_WIDTH {
+            return Err(format!(
+                "{}: operand width must be in 1..={MAX_WIDTH} bits (got {w})",
+                self.tag()
+            ));
+        }
+        Ok(self)
+    }
+
+    /// Whether this function fits the single-`u64` packed value path
+    /// (all `2w` input bits and every output bit in one word ⇔ `w ≤ 32`).
+    pub fn is_narrow(self) -> bool {
+        self.width() <= NARROW_MAX_WIDTH
+    }
+
     /// Operand width in bits.
     pub fn width(self) -> u32 {
         match self {
@@ -39,16 +89,45 @@ impl ArithFn {
     }
 
     /// Exact result for the packed input index `a | (b << w)`.
+    ///
+    /// Only valid on the narrow path: for `w > 32` the shift `packed >> w`
+    /// would silently drop operand bits (the pre-multi-word bug), so wider
+    /// functions must use [`ArithFn::exact_wide`] / [`ArithFn::exact_packed`].
     #[inline]
     pub fn exact(self, packed: u64) -> u64 {
         let w = self.width();
-        let mask = if w == 64 { !0 } else { (1u64 << w) - 1 };
+        assert!(
+            self.is_narrow(),
+            "ArithFn::exact: {w}-bit operands exceed the packed-u64 path \
+             (w ≤ {NARROW_MAX_WIDTH}); use exact_wide/exact_packed"
+        );
+        let mask = (1u64 << w) - 1;
         let a = packed & mask;
         let b = (packed >> w) & mask;
         match self {
             ArithFn::Add { .. } => a + b,
-            ArithFn::Mul { .. } => a.wrapping_mul(b),
+            // 32×32-bit products fit u64 exactly — no wrapping on this path
+            ArithFn::Mul { .. } => a * b,
         }
+    }
+
+    /// Exact result for wide operands (any width up to [`MAX_WIDTH`]);
+    /// a 128×128-bit product needs the full 256-bit result type.
+    #[inline]
+    pub fn exact_wide(self, a: u128, b: u128) -> U256 {
+        let m = mask128(self.width());
+        let (a, b) = (a & m, b & m);
+        match self {
+            ArithFn::Add { .. } => U256::add_u128(a, b),
+            ArithFn::Mul { .. } => U256::mul_u128(a, b),
+        }
+    }
+
+    /// Exact result for a multi-word packed input vector (`a | b << w`).
+    #[inline]
+    pub fn exact_packed(self, v: U256) -> U256 {
+        let (a, b) = v.unpack_operands(self.width());
+        self.exact_wide(a, b)
     }
 
     /// Whether exhaustive evaluation over all `2^(2w)` vectors is in budget.
@@ -88,6 +167,10 @@ pub fn is_exact(n: &Netlist, f: ArithFn) -> bool {
 /// metrics (MRE/WCRE) and would be missed by plain uniform sampling.
 pub fn stratified_vectors(f: ArithFn, per_stratum: usize, seed: u64) -> Vec<u64> {
     let w = f.width();
+    assert!(
+        f.is_narrow(),
+        "stratified_vectors: {w}-bit operands need stratified_vectors_wide"
+    );
     let mut rng = SplitMix64::new(seed ^ 0xA55A_5AA5_u64 ^ ((w as u64) << 32));
     let buckets: Vec<(u64, u64)> = (0..=w)
         .map(|k| {
@@ -109,6 +192,72 @@ pub fn stratified_vectors(f: ArithFn, per_stratum: usize, seed: u64) -> Vec<u64>
         }
     }
     out
+}
+
+/// Uniform `u128` draw in `0..bound` (Lemire reduction through the
+/// 256-bit product's high half; one draw consumes two `u64`s).
+fn next_below_u128(rng: &mut SplitMix64, bound: u128) -> u128 {
+    debug_assert!(bound > 0);
+    let r = ((rng.next_u64() as u128) << 64) | rng.next_u64() as u128;
+    U256::mul_u128(r, bound).high_u128()
+}
+
+/// Deterministic stratified sample for any width up to [`MAX_WIDTH`],
+/// multi-word packed (`a | b << w`). Same magnitude-bucket strata as
+/// [`stratified_vectors`], drawn over `u128` operands.
+pub fn stratified_vectors_wide(f: ArithFn, per_stratum: usize, seed: u64) -> Vec<U256> {
+    let w = f.width();
+    assert!(w <= MAX_WIDTH, "width {w} beyond MAX_WIDTH {MAX_WIDTH}");
+    let mut rng = SplitMix64::new(seed ^ 0xA55A_5AA5_u64 ^ ((w as u64) << 32));
+    let buckets: Vec<(u128, u128)> = (0..=w)
+        .map(|k| {
+            if k == 0 {
+                (0, 0)
+            } else {
+                (1u128 << (k - 1), mask128(k))
+            }
+        })
+        .collect();
+    let mut out = Vec::with_capacity(per_stratum * buckets.len() * buckets.len());
+    for &(alo, ahi) in &buckets {
+        for &(blo, bhi) in &buckets {
+            for _ in 0..per_stratum {
+                let a = alo + next_below_u128(&mut rng, ahi - alo + 1);
+                let b = blo + next_below_u128(&mut rng, bhi - blo + 1);
+                out.push(U256::pack_operands(a, b, w));
+            }
+        }
+    }
+    out
+}
+
+/// Per-stratum count that keeps the total of [`stratified_vectors_wide`]
+/// at or under `max_vectors` (floored at 1 — very wide functions get one
+/// draw per stratum, ≈ `(w+1)²` vectors).
+pub fn per_stratum_for_budget(f: ArithFn, max_vectors: usize) -> usize {
+    let strata = (f.width() as usize + 1) * (f.width() as usize + 1);
+    (max_vectors / strata).max(1)
+}
+
+/// The shared deterministic evaluation set used to characterise (and
+/// functionally hash) wide library entries — same seed and budget
+/// everywhere, so entry ids stay stable.
+pub fn wide_characterisation_vectors(f: ArithFn) -> Vec<U256> {
+    stratified_vectors_wide(f, per_stratum_for_budget(f, WIDE_CHAR_MAX_VECTORS), 0x11B)
+}
+
+/// Wide counterpart of [`evaluate_for_metrics`]: always sampled (there is
+/// no exhaustive mode beyond [`MAX_EXHAUSTIVE_INPUTS`] inputs); returns
+/// the packed `(inputs, outputs)` streams.
+pub fn evaluate_for_metrics_wide(
+    n: &Netlist,
+    f: ArithFn,
+    per_stratum: usize,
+    seed: u64,
+) -> (Vec<U256>, Vec<U256>) {
+    let ins = stratified_vectors_wide(f, per_stratum, seed);
+    let outs = eval_vectors_wide(n, &ins);
+    (ins, outs)
 }
 
 /// Evaluate a netlist on either the exhaustive table (when feasible) or the
@@ -183,6 +332,125 @@ mod tests {
             v.iter().any(|&x| (x & 0xFFFF) == 1),
             "one-valued operand covered"
         );
+    }
+
+    #[test]
+    fn validated_constructors_reject_unrepresentable_widths() {
+        assert!(ArithFn::mul(8).is_ok());
+        assert!(ArithFn::add(128).is_ok());
+        assert!(ArithFn::mul(0).is_err());
+        assert!(ArithFn::add(129).is_err());
+        let msg = ArithFn::mul(200).unwrap_err();
+        assert!(msg.contains("128"), "{msg}");
+        for w in 1..=MAX_WIDTH {
+            assert!(ArithFn::mul(w).is_ok(), "w={w}");
+            assert!(ArithFn::add(w).is_ok(), "w={w}");
+        }
+    }
+
+    #[test]
+    fn exact_is_correct_at_the_packed_representation_edge() {
+        // Regression for the silent-garbage bug: w = 31 and w = 32 are the
+        // last widths the u64 packing can hold; both must agree with the
+        // u128 reference, and w = 33 must refuse (route wide) rather than
+        // drop operand bits.
+        let mut rng = crate::data::rng::SplitMix64::new(0xB16);
+        for w in [31u32, 32] {
+            let mask = (1u64 << w) - 1;
+            for _ in 0..200 {
+                let a = rng.next_u64() & mask;
+                let b = rng.next_u64() & mask;
+                let packed = a | (b << w);
+                let mul = ArithFn::Mul { w };
+                let add = ArithFn::Add { w };
+                assert_eq!(mul.exact(packed) as u128, a as u128 * b as u128, "w={w}");
+                assert_eq!(add.exact(packed) as u128, a as u128 + b as u128, "w={w}");
+                // wide and narrow paths agree where both are defined
+                assert_eq!(
+                    mul.exact_wide(a as u128, b as u128).low_u128(),
+                    mul.exact(packed) as u128
+                );
+            }
+        }
+        assert!(ArithFn::Mul { w: 32 }.is_narrow());
+        assert!(!ArithFn::Mul { w: 33 }.is_narrow());
+    }
+
+    #[test]
+    #[should_panic(expected = "exact_wide")]
+    fn exact_panics_instead_of_garbage_beyond_w32() {
+        // pre-fix this returned a wrong value; now it must refuse loudly
+        ArithFn::Mul { w: 33 }.exact(1 | (1 << 33));
+    }
+
+    #[test]
+    fn exact_wide_values() {
+        use crate::circuit::wide::U256;
+        let f = ArithFn::Mul { w: 128 };
+        assert_eq!(
+            f.exact_wide(u128::MAX, u128::MAX),
+            U256::mul_u128(u128::MAX, u128::MAX)
+        );
+        assert_eq!(f.exact_wide(3, 7).low_u128(), 21);
+        let g = ArithFn::Add { w: 128 };
+        assert_eq!(g.exact_wide(u128::MAX, 1).words(), [0, 0, 1, 0]);
+        // operands are masked to the function width
+        let h = ArithFn::Mul { w: 40 };
+        let m = mask128(40);
+        assert_eq!(
+            h.exact_wide(u128::MAX, 3).low_u128(),
+            (u128::MAX & m) * 3
+        );
+        // packed form round-trips through the same reference
+        let v = U256::pack_operands(0xFFFF_FFFF_FF, 3, 40);
+        assert_eq!(h.exact_packed(v), h.exact_wide(0xFFFF_FFFF_FF, 3));
+    }
+
+    #[test]
+    fn wide_stratified_sampler_is_deterministic_and_in_range() {
+        for w in [33u32, 48, 64, 128] {
+            let f = ArithFn::Mul { w };
+            let v1 = stratified_vectors_wide(f, 2, 42);
+            let v2 = stratified_vectors_wide(f, 2, 42);
+            assert_eq!(v1, v2, "w={w} determinism");
+            assert_eq!(v1.len(), (w as usize + 1).pow(2) * 2);
+            let m = mask128(w);
+            assert!(v1.iter().all(|v| {
+                let (a, b) = v.unpack_operands(w);
+                a <= m && b <= m
+            }));
+            // small-operand corners covered (the point of stratification)
+            assert!(v1.iter().any(|v| v.unpack_operands(w).0 == 0));
+            assert!(v1.iter().any(|v| v.unpack_operands(w).0 == 1));
+        }
+    }
+
+    #[test]
+    fn per_stratum_budget_caps_totals() {
+        for w in [33u32, 64, 128] {
+            let f = ArithFn::Mul { w };
+            let per = per_stratum_for_budget(f, WIDE_CHAR_MAX_VECTORS);
+            assert!(per >= 1);
+            let total = per * (w as usize + 1).pow(2);
+            // at most one stratum grid over budget (per == 1 floor)
+            assert!(
+                per == 1 || total <= WIDE_CHAR_MAX_VECTORS,
+                "w={w}: {total}"
+            );
+        }
+        // narrow-ish width: budget actually divides
+        assert!(per_stratum_for_budget(ArithFn::Mul { w: 33 }, 16_384) > 1);
+    }
+
+    #[test]
+    fn evaluate_for_metrics_wide_matches_reference() {
+        let w = 40;
+        let f = ArithFn::Mul { w };
+        let (ins, outs) = evaluate_for_metrics_wide(&wallace_multiplier(w), f, 1, 5);
+        assert_eq!(ins.len(), outs.len());
+        for (i, o) in ins.iter().zip(&outs) {
+            assert_eq!(*o, f.exact_packed(*i), "exact wallace must match");
+        }
     }
 
     #[test]

@@ -1,0 +1,322 @@
+//! Multi-word packed values — the representation behind the wide
+//! (> 32-bit operand) simulation and characterisation path.
+//!
+//! The single-`u64` value path packs both operands of a `w`-bit function
+//! into one word (`a | b << w`), which caps widths at 32 bits. [`U256`]
+//! extends the same packed layout to four little-endian words: 256 bits is
+//! exactly enough for the 256 primary inputs and 256 product bits of a
+//! 128×128-bit multiplier, the widest function in the paper's extended
+//! library. The bit-parallel simulator itself is width-agnostic (one
+//! 64-lane word per *signal*); only vector packing/unpacking and the exact
+//! reference arithmetic need multi-word values.
+
+use std::cmp::Ordering;
+
+/// A 256-bit unsigned integer as four little-endian `u64` words.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct U256 {
+    w: [u64; 4],
+}
+
+impl PartialOrd for U256 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for U256 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        for i in (0..4).rev() {
+            match self.w[i].cmp(&other.w[i]) {
+                Ordering::Equal => continue,
+                ord => return ord,
+            }
+        }
+        Ordering::Equal
+    }
+}
+
+impl U256 {
+    /// The zero value.
+    pub const ZERO: U256 = U256 { w: [0; 4] };
+
+    /// Width of the representation in bits.
+    pub const BITS: u32 = 256;
+
+    /// Construct from little-endian words.
+    pub fn from_words(w: [u64; 4]) -> U256 {
+        U256 { w }
+    }
+
+    /// The little-endian words (used for hashing and serialisation).
+    pub fn words(self) -> [u64; 4] {
+        self.w
+    }
+
+    /// Widen a `u64`.
+    pub fn from_u64(v: u64) -> U256 {
+        U256 {
+            w: [v, 0, 0, 0],
+        }
+    }
+
+    /// Widen a `u128`.
+    pub fn from_u128(v: u128) -> U256 {
+        U256 {
+            w: [v as u64, (v >> 64) as u64, 0, 0],
+        }
+    }
+
+    /// Low 128 bits.
+    pub fn low_u128(self) -> u128 {
+        self.w[0] as u128 | (self.w[1] as u128) << 64
+    }
+
+    /// High 128 bits.
+    pub fn high_u128(self) -> u128 {
+        self.w[2] as u128 | (self.w[3] as u128) << 64
+    }
+
+    /// True iff zero.
+    pub fn is_zero(self) -> bool {
+        self.w == [0; 4]
+    }
+
+    /// Bit `i` as `0`/`1`.
+    #[inline(always)]
+    pub fn bit(self, i: u32) -> u64 {
+        debug_assert!(i < Self::BITS);
+        (self.w[(i / 64) as usize] >> (i % 64)) & 1
+    }
+
+    /// OR `bit` (`0` or `1`) into position `i`.
+    #[inline(always)]
+    pub fn or_bit(&mut self, i: u32, bit: u64) {
+        debug_assert!(i < Self::BITS && bit <= 1);
+        self.w[(i / 64) as usize] |= bit << (i % 64);
+    }
+
+    /// Bitwise OR.
+    pub fn or(self, o: U256) -> U256 {
+        U256 {
+            w: [
+                self.w[0] | o.w[0],
+                self.w[1] | o.w[1],
+                self.w[2] | o.w[2],
+                self.w[3] | o.w[3],
+            ],
+        }
+    }
+
+    /// Left shift by `n < 256` bits.
+    pub fn shl(self, n: u32) -> U256 {
+        debug_assert!(n < Self::BITS);
+        let (ws, bs) = ((n / 64) as usize, n % 64);
+        let mut out = [0u64; 4];
+        for i in ws..4 {
+            let lo = self.w[i - ws] << bs;
+            let hi = if bs > 0 && i > ws {
+                self.w[i - ws - 1] >> (64 - bs)
+            } else {
+                0
+            };
+            out[i] = lo | hi;
+        }
+        U256 { w: out }
+    }
+
+    /// Right shift by `n < 256` bits.
+    pub fn shr(self, n: u32) -> U256 {
+        debug_assert!(n < Self::BITS);
+        let (ws, bs) = ((n / 64) as usize, n % 64);
+        let mut out = [0u64; 4];
+        for i in 0..4 - ws {
+            let lo = self.w[i + ws] >> bs;
+            let hi = if bs > 0 && i + ws + 1 < 4 {
+                self.w[i + ws + 1] << (64 - bs)
+            } else {
+                0
+            };
+            out[i] = lo | hi;
+        }
+        U256 { w: out }
+    }
+
+    /// Borrow-propagating subtraction; requires `self >= o`.
+    fn sub(self, o: U256) -> U256 {
+        let mut out = [0u64; 4];
+        let mut borrow = 0u64;
+        for i in 0..4 {
+            let (d1, b1) = self.w[i].overflowing_sub(o.w[i]);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out[i] = d2;
+            borrow = (b1 | b2) as u64;
+        }
+        debug_assert_eq!(borrow, 0, "U256 subtraction underflow");
+        U256 { w: out }
+    }
+
+    /// `|self − o|`, exact in 256 bits.
+    pub fn abs_diff(self, o: U256) -> U256 {
+        if self >= o {
+            self.sub(o)
+        } else {
+            o.sub(self)
+        }
+    }
+
+    /// Exact `a + b` of two 128-bit operands (result needs ≤ 129 bits).
+    pub fn add_u128(a: u128, b: u128) -> U256 {
+        let (lo, carry) = a.overflowing_add(b);
+        U256 {
+            w: [lo as u64, (lo >> 64) as u64, carry as u64, 0],
+        }
+    }
+
+    /// Exact 256-bit product of two 128-bit operands (schoolbook over
+    /// 64-bit halves; every intermediate sum is bounded by the true high
+    /// half, so nothing wraps).
+    pub fn mul_u128(a: u128, b: u128) -> U256 {
+        let (a0, a1) = (a as u64 as u128, a >> 64);
+        let (b0, b1) = (b as u64 as u128, b >> 64);
+        let p00 = a0 * b0;
+        let p01 = a0 * b1;
+        let p10 = a1 * b0;
+        let p11 = a1 * b1;
+        let (mid, mid_carry) = p01.overflowing_add(p10);
+        let (lo, lo_carry) = p00.overflowing_add(mid << 64);
+        let hi = p11 + (mid >> 64) + ((mid_carry as u128) << 64) + lo_carry as u128;
+        U256 {
+            w: [lo as u64, (lo >> 64) as u64, hi as u64, (hi >> 64) as u64],
+        }
+    }
+
+    /// Nearest-`f64` value (exact below 2⁵³, standard rounding above —
+    /// the precision error metrics are reported in anyway).
+    pub fn to_f64(self) -> f64 {
+        const WORD: f64 = 18_446_744_073_709_551_616.0; // 2^64, exact
+        ((self.w[3] as f64 * WORD + self.w[2] as f64) * WORD + self.w[1] as f64) * WORD
+            + self.w[0] as f64
+    }
+
+    /// Pack two `w`-bit operands in the simulator input layout
+    /// `a | (b << w)` (input bit `i < w` is `a`, `w ≤ i < 2w` is `b`).
+    pub fn pack_operands(a: u128, b: u128, w: u32) -> U256 {
+        debug_assert!(w <= 128);
+        U256::from_u128(a & mask128(w)).or(U256::from_u128(b & mask128(w)).shl(w))
+    }
+
+    /// Inverse of [`U256::pack_operands`].
+    pub fn unpack_operands(self, w: u32) -> (u128, u128) {
+        (
+            self.low_u128() & mask128(w),
+            self.shr(w).low_u128() & mask128(w),
+        )
+    }
+}
+
+/// All-ones mask of the low `w ≤ 128` bits of a `u128`.
+pub fn mask128(w: u32) -> u128 {
+    debug_assert!(w <= 128);
+    if w == 128 {
+        u128::MAX
+    } else {
+        (1u128 << w) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mul_matches_u128_for_small_operands() {
+        let mut s = crate::data::rng::SplitMix64::new(9);
+        for _ in 0..200 {
+            let a = s.next_u64() as u128;
+            let b = s.next_u64() as u128;
+            let p = U256::mul_u128(a, b);
+            assert_eq!(p.low_u128(), a * b);
+            assert_eq!(p.high_u128(), 0);
+        }
+    }
+
+    #[test]
+    fn mul_known_big_values() {
+        // (2^128 − 1)² = 2^256 − 2^129 + 1
+        let p = U256::mul_u128(u128::MAX, u128::MAX);
+        assert_eq!(p.words(), [1, 0, 0xFFFF_FFFF_FFFF_FFFE, u64::MAX]);
+        // (2^127)² = 2^254
+        let p = U256::mul_u128(1u128 << 127, 1u128 << 127);
+        assert_eq!(p.words(), [0, 0, 0, 1u64 << 62]);
+        // anything × 0
+        assert_eq!(U256::mul_u128(u128::MAX, 0), U256::ZERO);
+    }
+
+    #[test]
+    fn add_carries_past_128_bits() {
+        let s = U256::add_u128(u128::MAX, u128::MAX);
+        // 2^129 − 2
+        assert_eq!(s.words(), [0xFFFF_FFFF_FFFF_FFFE, u64::MAX, 1, 0]);
+        assert_eq!(U256::add_u128(3, 4).low_u128(), 7);
+    }
+
+    #[test]
+    fn ordering_is_numeric() {
+        let a = U256::from_words([0, 0, 1, 0]); // 2^128
+        let b = U256::from_u128(u128::MAX);
+        assert!(a > b);
+        assert!(U256::ZERO < b);
+        assert_eq!(a.max(b), a);
+    }
+
+    #[test]
+    fn abs_diff_exact() {
+        let a = U256::from_words([0, 0, 1, 0]); // 2^128
+        let b = U256::from_u128(1);
+        let d = a.abs_diff(b);
+        assert_eq!(d.low_u128(), u128::MAX);
+        assert_eq!(d.high_u128(), 0);
+        assert_eq!(b.abs_diff(a), d, "abs_diff is symmetric");
+        assert!(a.abs_diff(a).is_zero());
+    }
+
+    #[test]
+    fn shifts_round_trip() {
+        let v = U256::from_u128(0xDEAD_BEEF_CAFE_F00D_u128);
+        for n in [0u32, 1, 63, 64, 65, 127, 128] {
+            assert_eq!(v.shl(n).shr(n), v, "shift by {n}");
+        }
+        assert_eq!(U256::from_u64(1).shl(255).bit(255), 1);
+    }
+
+    #[test]
+    fn pack_unpack_round_trip() {
+        for w in [2u32, 31, 32, 33, 64, 100, 128] {
+            let a = mask128(w) & 0x1234_5678_9ABC_DEF0_1357_9BDF_0246_8ACE_u128;
+            let b = mask128(w) & 0xFEDC_BA98_7654_3210_FDB9_7531_ECA8_6420_u128;
+            let v = U256::pack_operands(a, b, w);
+            assert_eq!(v.unpack_operands(w), (a, b), "w={w}");
+        }
+    }
+
+    #[test]
+    fn bit_access_matches_packing() {
+        let v = U256::pack_operands(0b101, 0b11, 3);
+        assert_eq!(
+            (0..8).map(|i| v.bit(i)).collect::<Vec<_>>(),
+            vec![1, 0, 1, 1, 1, 0, 0, 0]
+        );
+        let mut m = U256::ZERO;
+        m.or_bit(200, 1);
+        assert_eq!(m.bit(200), 1);
+        assert_eq!(m.bit(199), 0);
+    }
+
+    #[test]
+    fn to_f64_values() {
+        assert_eq!(U256::from_u64(12345).to_f64(), 12345.0);
+        assert_eq!(U256::from_u64(1).shl(200).to_f64(), 2f64.powi(200));
+        assert_eq!(U256::ZERO.to_f64(), 0.0);
+    }
+}

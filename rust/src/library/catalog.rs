@@ -22,7 +22,7 @@ use crate::circuit::generators::{
     kogge_stone_adder, ripple_carry_adder, wallace_multiplier,
 };
 use crate::circuit::netlist::Netlist;
-use crate::circuit::verify::ArithFn;
+use crate::circuit::verify::{per_stratum_for_budget, ArithFn, WIDE_SEARCH_MAX_VECTORS};
 
 use super::entry::{Entry, Origin};
 use super::store::Library;
@@ -47,6 +47,8 @@ pub struct CampaignConfig {
     /// Master seed.
     pub seed: u64,
     /// Per-stratum sample count for wide (non-exhaustive) functions.
+    /// On the multi-word (> 32-bit) path it is additionally capped so the
+    /// search sample stays within `WIDE_SEARCH_MAX_VECTORS` total vectors.
     pub per_stratum: usize,
     /// Search on a stratified sample even when exhaustive evaluation is
     /// feasible (≈40× more generations per second for 8-bit multipliers;
@@ -82,7 +84,9 @@ impl CampaignConfig {
 /// The `e_max` target ladder for a metric on function `f`: log-spaced
 /// fractions of the metric's natural scale.
 pub fn target_ladder(f: ArithFn, metric: Metric, n: u32) -> Vec<f64> {
-    let max_out = ((1u128 << f.n_outputs()) - 1) as f64;
+    // in f64 from the start: `(1u128 << n_outputs) - 1` panics (debug) or
+    // wraps (release) at the 128 outputs of a 64-bit multiplier
+    let max_out = (f.n_outputs() as f64).exp2() - 1.0;
     let (lo, hi) = match metric {
         // fractions of max output value
         Metric::Mae => (1e-5 * max_out, 2e-2 * max_out),
@@ -152,8 +156,16 @@ pub fn campaign_context(cfg: &CampaignConfig) -> EvalContext {
         } else {
             EvalContext::exhaustive(cfg.f)
         }
-    } else {
+    } else if cfg.f.is_narrow() {
         EvalContext::sampled(cfg.f, cfg.per_stratum, cfg.seed ^ 0xE7A1)
+    } else {
+        // wide operands: per_stratum is still honoured, but capped so the
+        // search sample stays within the WIDE_SEARCH_MAX_VECTORS budget
+        // the CLI evolve path also uses (the full grid would be ≈ (w+1)²·s
+        // vectors at 128 bits; the one-draw-per-stratum floor still yields
+        // ≈ (w+1)² vectors at the very widest widths — DESIGN.md §4)
+        let cap = per_stratum_for_budget(cfg.f, WIDE_SEARCH_MAX_VECTORS);
+        EvalContext::sampled(cfg.f, cfg.per_stratum.min(cap).max(1), cfg.seed ^ 0xE7A1)
     }
 }
 
@@ -167,12 +179,13 @@ pub fn run_campaign(
 ) -> usize {
     let mut seeds = seeds_for(cfg.f);
     seeds.extend(approx_seeds_for(cfg.f));
-    assert!(
-        cfg.f.n_inputs() <= 64 && cfg.f.n_outputs() <= 64,
-        "{}: library construction is limited to ≤64 primary inputs/outputs \
-         (the u64-packed simulation path); see EXPERIMENTS.md Table I note",
-        cfg.f.tag()
-    );
+    // widths are validated at ArithFn construction; re-check here so a
+    // hand-built config cannot smuggle an unrepresentable width into the
+    // job grid (the old ≤64-input assert — the 32-bit width cliff — is
+    // gone: wider functions route through the multi-word path)
+    if let Err(e) = cfg.f.validated() {
+        panic!("run_campaign: {e}");
+    }
     // always ingest the exact seeds themselves (approximate run-seeds are
     // NOT ingested here — the baseline set is added by the callers that
     // want it, with proper Truncated/Bam origins)
@@ -243,16 +256,15 @@ pub fn run_campaign(
                     h.netlist,
                     cfg.f,
                     model,
-                    Origin::Evolved {
-                        metric: metric.name().to_string(),
-                        e_max_permille: (e_max * 1000.0) as u64,
-                        seed: run_seed,
-                    },
+                    Origin::evolved(metric.name(), e_max, run_seed),
                 );
                 // skip exact variants (the seeds are already ingested);
-                // checked on the *exhaustive* characterisation, since a
-                // sampled search can report spurious zero error.
-                if entry.metrics.er == 0.0 {
+                // checked on the characterisation evaluation (exhaustive
+                // for feasible widths), since a sampled *search* can
+                // report spurious zero error. `verified_exact` also keeps
+                // a degenerate empty evaluation (NaN metrics) out of the
+                // exact bucket.
+                if entry.metrics.verified_exact() {
                     continue;
                 }
                 entries.push(entry);
@@ -355,6 +367,28 @@ mod tests {
             assert_eq!(l.len(), 6);
             for w in l.windows(2) {
                 assert!(w[1] > w[0], "{metric:?} ladder not increasing");
+            }
+        }
+    }
+
+    #[test]
+    fn target_ladder_survives_128_output_functions() {
+        for f in [
+            ArithFn::Mul { w: 64 },  // 128 outputs — the old panic site
+            ArithFn::Mul { w: 128 }, // 256 outputs
+            ArithFn::Add { w: 128 },
+        ] {
+            for metric in [Metric::Mae, Metric::Wce, Metric::Mse, Metric::Er] {
+                let l = target_ladder(f, metric, 5);
+                assert_eq!(l.len(), 5);
+                assert!(
+                    l.iter().all(|v| v.is_finite() && *v > 0.0),
+                    "{metric:?} ladder degenerate at {}",
+                    f.tag()
+                );
+                for pair in l.windows(2) {
+                    assert!(pair[1] > pair[0]);
+                }
             }
         }
     }

@@ -3,8 +3,11 @@
 use crate::circuit::cost::{CircuitCost, CostModel};
 use crate::circuit::gate::GateKind;
 use crate::circuit::netlist::{Netlist, Node};
-use crate::circuit::simulator::{activity_exhaustive, activity_vectors, eval_exhaustive_u64};
-use crate::circuit::verify::{stratified_vectors, ArithFn};
+use crate::circuit::simulator::{
+    activity_exhaustive, activity_vectors, activity_vectors_wide, eval_exhaustive_u64,
+    eval_vectors_u64, eval_vectors_wide,
+};
+use crate::circuit::verify::{stratified_vectors, wide_characterisation_vectors, ArithFn};
 use crate::cgp::metrics::{ErrorMetrics, RelativeErrors};
 use crate::util::json::Json;
 
@@ -22,6 +25,20 @@ pub enum Origin {
 }
 
 impl Origin {
+    /// Evolved-origin constructor with a clamped budget: wide (up to
+    /// 256-output) functions have astronomical absolute `e_max` values,
+    /// and the JSON layer stores numbers as `f64` and reads integers back
+    /// only below 9e15 — so cap the permille at 2⁵² to keep the library
+    /// round trip lossless instead of saturating to `u64::MAX` (which
+    /// serialised as `-1` and made reloads fail).
+    pub fn evolved(metric: &str, e_max: f64, seed: u64) -> Origin {
+        Origin::Evolved {
+            metric: metric.to_string(),
+            e_max_permille: (e_max * 1000.0).min((1u64 << 52) as f64) as u64,
+            seed,
+        }
+    }
+
     /// Serialise.
     pub fn to_json(&self) -> Json {
         match self {
@@ -126,7 +143,8 @@ pub struct Entry {
 impl Entry {
     /// Characterise a netlist into an entry: functional hash id, all six
     /// metrics, activity-based power — exhaustively when feasible, over the
-    /// deterministic stratified sample otherwise.
+    /// deterministic stratified sample otherwise (multi-word packed beyond
+    /// 32-bit operands).
     pub fn characterise(
         netlist: Netlist,
         f: ArithFn,
@@ -139,12 +157,18 @@ impl Entry {
             let metrics = ErrorMetrics::vs_exact_table(&table, f);
             let cost = model.evaluate(&netlist, &act);
             (metrics, cost, fnv1a(table.iter().copied()))
-        } else {
+        } else if f.is_narrow() {
             let vecs = stratified_vectors(f, 16, 0x11B);
             let (outs, act) = activity_vectors(&netlist, &vecs);
             let metrics = ErrorMetrics::vs_exact_sampled(&vecs, &outs, f);
             let cost = model.evaluate(&netlist, &act);
             (metrics, cost, fnv1a(outs.iter().copied()))
+        } else {
+            let vecs = wide_characterisation_vectors(f);
+            let (outs, act) = activity_vectors_wide(&netlist, &vecs);
+            let metrics = ErrorMetrics::vs_exact_wide_sampled(&vecs, &outs, f);
+            let cost = model.evaluate(&netlist, &act);
+            (metrics, cost, fnv1a(outs.iter().flat_map(|v| v.words())))
         };
         let rel = metrics.as_percentages(f);
         let id = format!("{}_{:04X}", f.tag(), hash & 0xFFFF);
@@ -165,12 +189,15 @@ impl Entry {
     pub fn functional_hash(&self) -> u64 {
         if self.f.exhaustive_feasible() {
             fnv1a(eval_exhaustive_u64(&self.netlist).iter().copied())
-        } else {
+        } else if self.f.is_narrow() {
             let vecs = stratified_vectors(self.f, 16, 0x11B);
+            fnv1a(eval_vectors_u64(&self.netlist, &vecs).iter().copied())
+        } else {
+            let vecs = wide_characterisation_vectors(self.f);
             fnv1a(
-                crate::circuit::simulator::eval_vectors_u64(&self.netlist, &vecs)
+                eval_vectors_wide(&self.netlist, &vecs)
                     .iter()
-                    .copied(),
+                    .flat_map(|v| v.words()),
             )
         }
     }
@@ -241,7 +268,8 @@ impl Entry {
             ArithFn::Mul { w: width }
         } else {
             ArithFn::Add { w: width }
-        };
+        }
+        .validated()?;
         let n_inputs = j.req_i64("n_inputs")? as u32;
         let mut netlist = Netlist::new(n_inputs, j.req_str("id")?);
         for n in j.req_arr("nodes")? {
@@ -362,6 +390,61 @@ mod tests {
         );
         // both are exact 8-bit multipliers → identical functional hash/id
         assert_eq!(a.id, b.id);
+    }
+
+    #[test]
+    fn characterise_wide_adder_sampled() {
+        use crate::circuit::generators::ripple_carry_adder;
+        let model = CostModel::default();
+        let f = ArithFn::Add { w: 33 };
+        let e = Entry::characterise(
+            ripple_carry_adder(33),
+            f,
+            &model,
+            Origin::Seed("rca33".into()),
+        );
+        assert!(e.metrics.verified_exact(), "exact rca must sample clean");
+        assert!(!e.metrics.exhaustive);
+        assert!(e.metrics.n_vectors > 0);
+        assert!(e.id.starts_with("add33u_"), "{}", e.id);
+        assert!(e.cost.power_uw > 0.0);
+        // JSON round trip keeps the wide functional hash stable
+        let e2 = Entry::from_json(&e.to_json()).unwrap();
+        assert_eq!(e2.functional_hash(), e.functional_hash());
+        assert_eq!(e2.f, f);
+    }
+
+    #[test]
+    fn from_json_rejects_unrepresentable_width() {
+        let text = r#"{"id":"mul300u_0000","fn":"mul300u","width":300,
+            "is_mul":true,"n_inputs":600,"nodes":[],"outputs":[],
+            "metrics":{"er":0,"mae":0,"mse":0,"mre":0,"wce":0,"wcre":0,
+                       "n_vectors":1,"exhaustive":false},
+            "cost":{"gates":0,"area_um2":0,"delay_ps":0,"leakage_uw":0,
+                    "dynamic_uw":0,"power_uw":0},
+            "origin":{"kind":"seed","name":"x"}}"#;
+        let j = Json::parse(text).unwrap();
+        let err = Entry::from_json(&j).unwrap_err();
+        assert!(err.contains("128"), "{err}");
+    }
+
+    #[test]
+    fn evolved_origin_clamps_wide_budgets_for_json() {
+        // a 128-bit multiplier's MAE budget is ~1e75 — permille must clamp
+        // below the JSON integer ceiling instead of saturating/wrapping
+        let o = Origin::evolved("MAE", 1e75, 7);
+        let Origin::Evolved { e_max_permille, .. } = &o else {
+            panic!("wrong variant");
+        };
+        assert_eq!(*e_max_permille, 1u64 << 52);
+        let j = o.to_json();
+        assert!(j.req_i64("e_max_permille").unwrap() > 0);
+        assert_eq!(Origin::from_json(&j).unwrap(), o);
+        // small budgets stay exact
+        let Origin::Evolved { e_max_permille, .. } = Origin::evolved("WCE", 2.5, 1) else {
+            panic!("wrong variant");
+        };
+        assert_eq!(e_max_permille, 2500);
     }
 
     #[test]

@@ -28,7 +28,7 @@ use evoapproxlib::cgp::{
     IslandsConfig, Metric,
 };
 use evoapproxlib::circuit::cost::CostModel;
-use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::circuit::verify::{ArithFn, WIDE_SEARCH_MAX_VECTORS};
 use evoapproxlib::cli::{parse, render_help, Cli, CommandSpec, FlagSpec};
 use evoapproxlib::library::{run_campaign, CampaignConfig, Library};
 use evoapproxlib::util::table::TextTable;
@@ -77,7 +77,8 @@ const COMMANDS: &[CommandSpec] = &[
         name: "evolve",
         about: "one CGP run (or an island-model multi-deme run)",
         flags: &[
-            FlagSpec { name: "width", value: Some("BITS"), help: "operand width (default 8)" },
+            FlagSpec { name: "width", value: Some("BITS"), help: "operand width, 1..=128 (default 8)" },
+            FlagSpec { name: "quick", value: None, help: "smoke budget: 300 generations unless --generations is given" },
             FlagSpec { name: "adder", value: None, help: "target an adder instead of a multiplier" },
             FlagSpec { name: "metric", value: Some("NAME"), help: "error metric: ER|MAE|MSE|MRE|WCE|WCRE (default MAE)" },
             FlagSpec { name: "emax-frac", value: Some("F"), help: "error budget as a fraction of the metric scale (default 0.005)" },
@@ -98,7 +99,7 @@ const COMMANDS: &[CommandSpec] = &[
         flags: &[
             FlagSpec { name: "out", value: Some("FILE"), help: "output path (default library.json)" },
             FlagSpec { name: "quick", value: None, help: "reduced budgets" },
-            FlagSpec { name: "widths", value: Some("LIST"), help: "comma-separated operand widths (default 8)" },
+            FlagSpec { name: "widths", value: Some("LIST"), help: "comma-separated operand widths, 1..=128 (default 8)" },
             FlagSpec { name: "generations", value: Some("N"), help: "generations per run (default 10000)" },
             FlagSpec { name: "targets", value: Some("N"), help: "e_max targets per metric (default 5)" },
             FlagSpec { name: "seed", value: Some("N"), help: "campaign master seed" },
@@ -233,24 +234,30 @@ fn cmd_info(cli: &Cli) -> anyhow::Result<()> {
 
 fn cmd_evolve(cli: &Cli) -> anyhow::Result<()> {
     let w: u32 = cli.flag("width", 8u32)?;
+    // validated constructors: an unrepresentable width is a CLI error, not
+    // a silent mis-evaluation downstream
     let f = if cli.has("adder") {
-        ArithFn::Add { w }
+        ArithFn::add(w)
     } else {
-        ArithFn::Mul { w }
-    };
+        ArithFn::mul(w)
+    }
+    .map_err(|e| anyhow::anyhow!(e))?;
     let metric = Metric::parse(&cli.flag_str("metric", "MAE"))
         .ok_or_else(|| anyhow::anyhow!("bad --metric"))?;
-    let max_out = ((1u128 << f.n_outputs()) - 1) as f64;
+    // f64 from the start: `1u128 << n_outputs` overflows at the 128
+    // outputs of a 64-bit multiplier
+    let max_out = (f.n_outputs() as f64).exp2() - 1.0;
     let emax_frac: f64 = cli.flag("emax-frac", 0.005f64)?;
     let e_max = match metric {
         Metric::Er | Metric::Mre | Metric::Wcre => emax_frac,
         Metric::Mse => emax_frac * max_out * max_out,
         _ => emax_frac * max_out,
     };
+    let default_generations: u64 = if cli.has("quick") { 300 } else { 20_000 };
     let cfg = EvolveConfig {
         metric,
         e_max,
-        generations: cli.flag("generations", 20_000u64)?,
+        generations: cli.flag("generations", default_generations)?,
         lambda: cli.flag("lambda", 4u32)?,
         h: cli.flag("h", 5u32)?,
         seed: cli.flag("seed", 1u64)?,
@@ -262,8 +269,11 @@ fn cmd_evolve(cli: &Cli) -> anyhow::Result<()> {
     let seeds = evoapproxlib::library::seeds_for(f);
     let ctx = if f.exhaustive_feasible() {
         EvalContext::exhaustive(f)
-    } else {
+    } else if f.is_narrow() {
         EvalContext::sampled(f, 16, cfg.seed)
+    } else {
+        // wide operands: multi-word sampled context, budgeted for search
+        EvalContext::sampled_budgeted(f, WIDE_SEARCH_MAX_VECTORS, cfg.seed)
     };
     let t0 = std::time::Instant::now();
     let report = if demes > 1 {
@@ -314,11 +324,7 @@ fn cmd_evolve(cli: &Cli) -> anyhow::Result<()> {
                 h.netlist.clone(),
                 f,
                 &model,
-                evoapproxlib::library::Origin::Evolved {
-                    metric: metric.name().to_string(),
-                    e_max_permille: (e_max * 1000.0) as u64,
-                    seed: cfg.seed,
-                },
+                evoapproxlib::library::Origin::evolved(metric.name(), e_max, cfg.seed),
             ));
         }
         lib.save(out)?;
@@ -346,7 +352,10 @@ fn cmd_library(cli: &Cli) -> anyhow::Result<()> {
     let model = CostModel::default();
     let mut lib = Library::new();
     for &w in &widths {
-        for f in [ArithFn::Mul { w }, ArithFn::Add { w }] {
+        for f in [
+            ArithFn::mul(w).map_err(|e| anyhow::anyhow!(e))?,
+            ArithFn::add(w).map_err(|e| anyhow::anyhow!(e))?,
+        ] {
             let mut cfg = CampaignConfig::quick(f);
             if !quick {
                 cfg.generations = 10_000;

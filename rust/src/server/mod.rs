@@ -701,12 +701,18 @@ fn handle_pareto(state: &ServerState, target: &Target) -> Response {
         Ok(w) => w,
         Err(e) => return Response::error(400, e),
     };
+    // validated construction: widths beyond the 128-bit library range are
+    // a client error, not a silent empty front
     let f = match target.query_get("fn").unwrap_or("mul") {
-        "mul" => ArithFn::Mul { w: width },
-        "add" => ArithFn::Add { w: width },
+        "mul" => ArithFn::mul(width),
+        "add" => ArithFn::add(width),
         other => {
             return Response::error(400, format!("unknown fn `{other}` (mul|add)"));
         }
+    };
+    let f = match f {
+        Ok(f) => f,
+        Err(e) => return Response::error(400, e),
     };
     let all = state.library.for_fn(f);
     let front_idx = pareto_indices(&all, metric);

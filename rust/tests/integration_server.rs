@@ -134,6 +134,14 @@ fn bad_requests_are_4xx_and_workers_survive() {
     assert_eq!(status, 400);
     let (status, _) = http::get(&addr, "/v1/library/pareto?metric=BOGUS").unwrap();
     assert_eq!(status, 400);
+    // width beyond the 8–128-bit library range
+    let (status, body) = http::get(&addr, "/v1/library/pareto?width=500").unwrap();
+    assert_eq!(status, 400, "{body}");
+    let (status, _) = http::get(&addr, "/v1/library/pareto?width=0").unwrap();
+    assert_eq!(status, 400);
+    // an in-range wide width is valid (empty front, not an error)
+    let (status, body) = http::get(&addr, "/v1/library/pareto?width=128").unwrap();
+    assert_eq!(status, 200, "{body}");
     let (status, _) = http::get(&addr, "/v1/jobs/notanumber").unwrap();
     assert_eq!(status, 400);
     let (status, _) = http::get(&addr, "/v1/jobs/424242").unwrap();
