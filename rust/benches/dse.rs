@@ -1,0 +1,101 @@
+//! DSE pipeline throughput: probe / fit+search / verify, timed per stage.
+//!
+//! * **probe** — real per-layer accuracy evaluations (the expensive,
+//!   backend-bound stage the QoR model exists to amortise);
+//! * **fit + search** — pure-CPU model fitting and model-guided
+//!   exploration (should be orders of magnitude faster than probing,
+//!   otherwise the model is pointless);
+//! * **verify** — real whole-network evaluations of the predicted front
+//!   (+ uniform baselines), measured through `run_dse` on a warm cache so
+//!   the memoised probe stage costs nothing.
+//!
+//! Runs on the PJRT backend when artifacts + real bindings exist, on the
+//! native backend (synthetic model + split) everywhere else.
+//! `cargo bench --bench dse [-- --quick]`
+
+use evoapproxlib::accel::PowerModel;
+use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig};
+use evoapproxlib::dse::{build_space, probe_stage, run_dse, search_stage, DseConfig};
+use evoapproxlib::resilience::{standard_multipliers, EvalCache};
+use evoapproxlib::runtime::TestSet;
+use evoapproxlib::util::bench::{per_second, quick_mode, time_once};
+
+fn main() {
+    let quick = quick_mode();
+    let artifacts = std::env::var("EVOAPPROX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::new(&artifacts)).unwrap();
+
+    let mut cfg = DseConfig::new("resnet8");
+    cfg.candidates = if quick { 4 } else { 8 };
+    cfg.probe_multipliers = if quick { 2 } else { 4 };
+    cfg.search_iters = if quick { 2_000 } else { 20_000 };
+    cfg.budget_points = if quick { 3 } else { 6 };
+    let n_images = if quick { 16 } else { 64 };
+    let testset = match coord.manifest().load_testset(&artifacts) {
+        Ok(ts) => ts.truncated(n_images),
+        Err(_) => TestSet::synthetic(n_images),
+    };
+    println!(
+        "dse bench: {} backend, {} images, {} candidates, probe {}, {} budget points",
+        coord.backend().as_str(),
+        testset.n,
+        cfg.candidates,
+        cfg.probe_multipliers,
+        cfg.budget_points
+    );
+
+    let mults = standard_multipliers(None, 10, cfg.candidates).unwrap();
+    let meta = coord.manifest().model(&cfg.model).unwrap().clone();
+    let pm = PowerModel::from_manifest(&meta);
+    let cache = EvalCache::new();
+
+    // stage 1: probe — real evaluations on a cold cache
+    let (probe, dt_probe) =
+        time_once(|| probe_stage(&coord, &cfg, &mults, &testset, Some(&cache)).unwrap());
+    println!(
+        "probe:  {} evals in {dt_probe:?} ({:.1} evals/s, {:.0} images/s)",
+        probe.evals,
+        per_second(probe.evals as u64, dt_probe),
+        per_second((probe.evals * testset.n) as u64, dt_probe)
+    );
+
+    // stage 1b + 2: fit + model-guided search — pure CPU
+    let (so, dt_fit) = time_once(|| build_space(&probe, &mults, &pm));
+    let (search, dt_search) = time_once(|| search_stage(&so.space, &cfg));
+    println!(
+        "fit:    RMSE {:.5} over {} samples in {dt_fit:?}",
+        so.qor.fit_rmse, so.qor.n_samples
+    );
+    println!(
+        "search: {} proposals → {} assignments in {dt_search:?} ({:.0} proposals/s)",
+        search.iters,
+        search.assignments.len(),
+        per_second(search.iters, dt_search)
+    );
+
+    // stage 3: verify — the full pipeline on the warm cache times the
+    // verify evaluations (probe + golden are memoised)
+    let (report, dt_verify) = time_once(|| run_dse(&coord, None, &cfg, &testset, &cache).unwrap());
+    let verified = report.verified.len().saturating_sub(1); // minus the free exact anchor
+    println!(
+        "verify: {verified} configurations in {dt_verify:?} ({:.2} runs/s); \
+         front {} points, prediction MAE {:.5}",
+        per_second(verified as u64, dt_verify),
+        report.front.len(),
+        report.prediction_mae
+    );
+
+    // cold end-to-end for reference, and a determinism cross-check
+    let (cold, dt_all) = time_once(|| run_dse(&coord, None, &cfg, &testset, &EvalCache::new()).unwrap());
+    assert_eq!(
+        report.front.len(),
+        cold.front.len(),
+        "warm- and cold-cache runs must agree"
+    );
+    println!(
+        "end-to-end cold: {dt_all:?} (warm cache had {} hits over {} entries)",
+        cache.hits(),
+        cache.len()
+    );
+    coord.shutdown();
+}

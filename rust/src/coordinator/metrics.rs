@@ -133,6 +133,17 @@ pub struct Metrics {
     pub queue_wait: Histogram,
     /// Pure PJRT execute time per batch.
     pub execute_time: Histogram,
+    /// DSE runs completed (CLI or `/v1/dse`).
+    pub dse_jobs: AtomicU64,
+    /// Real backend evaluations (cache misses) in DSE probe stages —
+    /// a warm cache advances this less than the requested grid size.
+    pub dse_probe_evals: AtomicU64,
+    /// Local-search proposals evaluated by DSE search stages.
+    pub dse_search_iters: AtomicU64,
+    /// Real backend evaluations (cache misses) in DSE verify stages.
+    pub dse_verify_runs: AtomicU64,
+    /// End-to-end DSE run duration.
+    pub dse_duration: Histogram,
 }
 
 impl Metrics {
@@ -148,6 +159,11 @@ impl Metrics {
             job_latency_p99_us: self.job_latency.quantile_us(0.99),
             queue_wait_mean_us: self.queue_wait.mean_us(),
             execute_mean_us: self.execute_time.mean_us(),
+            dse_jobs: self.dse_jobs.load(Ordering::Relaxed),
+            dse_probe_evals: self.dse_probe_evals.load(Ordering::Relaxed),
+            dse_search_iters: self.dse_search_iters.load(Ordering::Relaxed),
+            dse_verify_runs: self.dse_verify_runs.load(Ordering::Relaxed),
+            dse_duration_mean_us: self.dse_duration.mean_us(),
         }
     }
 }
@@ -173,6 +189,16 @@ pub struct MetricsSnapshot {
     pub queue_wait_mean_us: f64,
     /// Mean PJRT execute time [µs].
     pub execute_mean_us: f64,
+    /// DSE runs completed.
+    pub dse_jobs: u64,
+    /// DSE probe-stage real backend evaluations (cache misses).
+    pub dse_probe_evals: u64,
+    /// DSE search proposals evaluated.
+    pub dse_search_iters: u64,
+    /// DSE verify-stage real backend evaluations (cache misses).
+    pub dse_verify_runs: u64,
+    /// Mean DSE run duration [µs].
+    pub dse_duration_mean_us: f64,
 }
 
 #[cfg(test)]
@@ -276,9 +302,19 @@ mod tests {
         m.jobs.fetch_add(3, Ordering::Relaxed);
         m.images.fetch_add(192, Ordering::Relaxed);
         m.job_latency.record(Duration::from_millis(7));
+        m.dse_jobs.fetch_add(1, Ordering::Relaxed);
+        m.dse_probe_evals.fetch_add(29, Ordering::Relaxed);
+        m.dse_search_iters.fetch_add(1600, Ordering::Relaxed);
+        m.dse_verify_runs.fetch_add(9, Ordering::Relaxed);
+        m.dse_duration.record(Duration::from_millis(40));
         let s = m.snapshot();
         assert_eq!(s.jobs, 3);
         assert_eq!(s.images, 192);
         assert!(s.job_latency_mean_us > 0.0);
+        assert_eq!(s.dse_jobs, 1);
+        assert_eq!(s.dse_probe_evals, 29);
+        assert_eq!(s.dse_search_iters, 1600);
+        assert_eq!(s.dse_verify_runs, 9);
+        assert!(s.dse_duration_mean_us > 0.0);
     }
 }

@@ -1,0 +1,578 @@
+//! Design-space exploration (DSE): heterogeneous per-layer multiplier
+//! assignment, autoAx-style (DESIGN.md §8).
+//!
+//! The paper's case study ends by *selecting one approximate multiplier*
+//! for the whole network. The scalable version of that step (autoAx,
+//! Mrazek et al. — PAPERS.md) assigns each conv layer its **own** library
+//! multiplier: fit cheap quality/cost estimators from a small sample of
+//! real evaluations, prune the combinatorial assignment space with them,
+//! and verify only the predicted Pareto front. This module is that
+//! pipeline in three deterministic stages:
+//!
+//! 1. **probe** ([`probe_stage`]) — a per-layer resilience campaign
+//!    ([`crate::resilience::per_layer_campaign_cached`]) over a small,
+//!    power-spread subset of the candidates measures each layer's
+//!    accuracy sensitivity; [`model::QorModel`] fits the additive
+//!    least-squares QoR predictor from those points. Power needs no
+//!    probing: it is an analytic sum of per-layer MAC-energy ratios from
+//!    [`crate::circuit::cost::CircuitCost`].
+//! 2. **search** ([`search_stage`]) — greedy + seeded local-search
+//!    refinement over the *predicted* objectives, one run per point of an
+//!    accuracy-budget ladder, fanned over `cgp::campaign::map_parallel`.
+//! 3. **verify** ([`run_dse`]) — the predicted-Pareto assignments (plus
+//!    every uniform single-multiplier configuration, so the report can
+//!    always compare against the paper's whole-network selection) run on
+//!    the real inference backend; the report carries predicted vs
+//!    measured drops and the measured-front/best-uniform comparison.
+//!
+//! Every stage is a pure function of its inputs and the shared
+//! [`EvalCache`] only memoises values the pipeline would recompute
+//! identically, so reports are byte-identical for any `--jobs` value and
+//! for HTTP vs in-process runs (tested).
+
+pub mod model;
+pub mod search;
+
+use std::collections::BTreeSet;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::accel::PowerModel;
+use crate::cgp::campaign::{default_workers, map_parallel};
+use crate::cgp::pareto::non_dominated_indices;
+use crate::coordinator::{Coordinator, KernelKind};
+use crate::library::Library;
+use crate::resilience::cache::{EvalCache, EvalKey};
+use crate::resilience::{
+    per_layer_campaign_cached, standard_multipliers, Fig4Report, MultiplierSummary,
+};
+use crate::runtime::{exact_lut, TestSet, LUT_LEN};
+
+pub use model::QorModel;
+pub use search::SearchSpace;
+
+/// Configuration of one DSE run. [`DseConfig::new`] is the single source
+/// of defaults for the CLI, the HTTP endpoint and the tests — which is
+/// what lets an HTTP run be compared byte-for-byte with an in-process one.
+#[derive(Debug, Clone)]
+pub struct DseConfig {
+    /// Network under exploration.
+    pub model: String,
+    /// Accuracy budget: the verified front targets drops within this.
+    pub max_accuracy_drop: f64,
+    /// Probe budget: candidates measured per layer in the probe campaign.
+    pub probe_multipliers: usize,
+    /// Per-layer candidate pool size (library Pareto pre-filter cap).
+    pub candidates: usize,
+    /// Local-search proposals per budget point.
+    pub search_iters: u64,
+    /// Points on the accuracy-budget ladder (each yields one search run).
+    pub budget_points: usize,
+    /// Most predicted-front assignments taken into verification
+    /// (uniform configurations are always verified on top of this).
+    pub verify_limit: usize,
+    /// Pool workers for probe/search/verify (output-identical for any N).
+    pub jobs: usize,
+    /// Root seed of the local-search walks.
+    pub seed: u64,
+    /// Kernel variant on the PJRT backend (ignored by native).
+    pub kernel: KernelKind,
+}
+
+impl DseConfig {
+    /// Defaults for `model`.
+    pub fn new(model: impl Into<String>) -> DseConfig {
+        DseConfig {
+            model: model.into(),
+            max_accuracy_drop: 0.05,
+            probe_multipliers: 4,
+            candidates: 8,
+            search_iters: 400,
+            budget_points: 4,
+            verify_limit: 8,
+            jobs: default_workers(),
+            seed: 0xD5E,
+            kernel: KernelKind::Jnp,
+        }
+    }
+
+    /// Parse a `--probe-budget` value: a named tier or a multiplier count.
+    pub fn parse_probe_budget(s: &str) -> Result<usize> {
+        let n = match s {
+            "small" => 2,
+            "medium" => 4,
+            "large" => 8,
+            other => other.parse().map_err(|_| {
+                anyhow!("invalid probe budget `{other}` (small|medium|large or a multiplier count)")
+            })?,
+        };
+        ensure!(n >= 1, "probe budget must be at least 1");
+        Ok(n)
+    }
+}
+
+/// Probe-stage output: the measured per-layer campaign plus which
+/// candidate indices were probed.
+#[derive(Debug, Clone)]
+pub struct ProbeOutcome {
+    /// The measured Fig. 4-style campaign over the probe roster.
+    pub fig4: Fig4Report,
+    /// Indices (into the candidate slice) that were measured.
+    pub probed: Vec<usize>,
+    /// Accuracy evaluations *requested* (grid + golden reference) —
+    /// shared-cache hits included, which keeps reports byte-identical
+    /// however warm the cache is. Real backend work is tracked
+    /// separately as cache-miss deltas in `coordinator::metrics`.
+    pub evals: usize,
+}
+
+/// Space-construction output: objective tables + the fitted QoR model.
+#[derive(Debug, Clone)]
+pub struct SpaceOutcome {
+    /// Per-layer objective tables (choice 0 = exact).
+    pub space: SearchSpace,
+    /// The fitted accuracy-drop predictor.
+    pub qor: QorModel,
+}
+
+/// Search-stage output: deduplicated candidate assignments in
+/// budget-ladder order.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// Candidate assignments (`a[layer] = choice`, 0 = exact).
+    pub assignments: Vec<Vec<usize>>,
+    /// Local-search proposals evaluated across all budget points.
+    pub iters: u64,
+}
+
+/// One verified configuration in the report.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    /// Per-layer multiplier ids (`"exact"` for the exact multiplier).
+    pub assignment: Vec<String>,
+    /// Whether every layer carries the same multiplier.
+    pub uniform: bool,
+    /// Model-predicted accuracy drop.
+    pub predicted_drop: f64,
+    /// Relative multiplier power [%] (analytic — not an estimate).
+    pub power_pct: f64,
+    /// Measured accuracy on the real backend.
+    pub accuracy: f64,
+    /// Measured accuracy drop vs the golden reference.
+    pub accuracy_drop: f64,
+}
+
+/// Full DSE report.
+#[derive(Debug, Clone)]
+pub struct DseReport {
+    /// Network explored.
+    pub model: String,
+    /// Evaluation-split size.
+    pub images: usize,
+    /// The accuracy budget the search targeted.
+    pub max_accuracy_drop: f64,
+    /// Golden (exact-multiplier) accuracy.
+    pub reference_accuracy: f64,
+    /// Candidate ids in roster order.
+    pub candidates: Vec<String>,
+    /// Candidates measured in the probe stage.
+    pub probe_multipliers: usize,
+    /// Accuracy evaluations requested by the probe stage (cache hits
+    /// included — deterministic across cache states).
+    pub probe_evals: usize,
+    /// QoR-model training residual (RMSE over probe points).
+    pub qor_fit_rmse: f64,
+    /// QoR-model training-sample size.
+    pub qor_samples: usize,
+    /// Local-search proposals across all budget points.
+    pub search_iters: u64,
+    /// Every verified configuration (exact anchor first, then the
+    /// predicted front, then the uniform sweeps), in deterministic order.
+    pub verified: Vec<DsePoint>,
+    /// Measured (accuracy drop, power) Pareto front over `verified`,
+    /// ascending power. Because `verified` always contains every uniform
+    /// configuration, this front weakly dominates the best uniform pick
+    /// by construction.
+    pub front: Vec<DsePoint>,
+    /// Cheapest uniform configuration whose measured drop fits the
+    /// budget (the paper's whole-network selection; the exact anchor
+    /// guarantees one exists).
+    pub best_uniform: Option<DsePoint>,
+    /// Mean |predicted − measured| drop over the verified set.
+    pub prediction_mae: f64,
+}
+
+/// `k` indices evenly spread over `0..n` (always including both ends for
+/// `k ≥ 2`), deduplicated — the probe roster should span the candidates'
+/// power range, not take a prefix.
+fn spread_indices(n: usize, k: usize) -> Vec<usize> {
+    if n == 0 {
+        return Vec::new();
+    }
+    if k >= n {
+        return (0..n).collect();
+    }
+    if k <= 1 {
+        return vec![0];
+    }
+    let mut out: Vec<usize> = (0..k).map(|i| i * (n - 1) / (k - 1)).collect();
+    out.dedup();
+    out
+}
+
+fn is_uniform(a: &[usize]) -> bool {
+    a.windows(2).all(|w| w[0] == w[1])
+}
+
+/// Cache identity of an assignment: the golden sentinel when all-exact,
+/// the multiplier id when uniform (sharing entries with `/v1/select` and
+/// Table-II-style evaluations), the joined per-layer ids otherwise.
+fn assignment_key(a: &[usize], cands: &[MultiplierSummary]) -> String {
+    if a.iter().all(|&c| c == 0) {
+        return EvalKey::GOLDEN.to_string();
+    }
+    if let Some(&c0) = a.first() {
+        if c0 != 0 && a.iter().all(|&c| c == c0) {
+            return cands[c0 - 1].id.clone();
+        }
+    }
+    a.iter()
+        .map(|&c| if c == 0 { "exact" } else { cands[c - 1].id.as_str() })
+        .collect::<Vec<_>>()
+        .join("+")
+}
+
+/// Concatenated per-layer LUT rows of an assignment.
+fn assignment_luts(a: &[usize], cands: &[MultiplierSummary], exact: &[i32]) -> Vec<i32> {
+    let mut luts = Vec::with_capacity(a.len() * LUT_LEN);
+    for &c in a {
+        match c {
+            0 => luts.extend_from_slice(exact),
+            c => luts.extend_from_slice(&cands[c - 1].lut),
+        }
+    }
+    luts
+}
+
+/// Stage 1: measure per-layer sensitivity of a power-spread probe subset
+/// of the candidates (exact reference included for the power model).
+pub fn probe_stage(
+    coord: &Coordinator,
+    cfg: &DseConfig,
+    mults: &[MultiplierSummary],
+    testset: &TestSet,
+    cache: Option<&EvalCache>,
+) -> Result<ProbeOutcome> {
+    ensure!(
+        mults.len() >= 2,
+        "DSE needs the exact reference plus at least one approximate candidate"
+    );
+    let cands = &mults[1..];
+    let probed = spread_indices(cands.len(), cfg.probe_multipliers.max(1));
+    let mut roster = vec![mults[0].clone()];
+    roster.extend(probed.iter().map(|&i| cands[i].clone()));
+    let fig4 = per_layer_campaign_cached(
+        coord,
+        &cfg.model,
+        &roster,
+        testset,
+        cfg.kernel,
+        cfg.jobs,
+        cache,
+    )?;
+    let evals = fig4.points.len() + 1; // grid + the golden reference
+    Ok(ProbeOutcome {
+        fig4,
+        probed,
+        evals,
+    })
+}
+
+/// Stage 1b: fit the QoR model from the probe campaign and assemble the
+/// per-layer objective tables. Probed `(layer, candidate)` cells keep
+/// their *measured* drop; everything else is model-predicted (clamped at
+/// zero). Power cells are analytic ratios — no estimation error.
+pub fn build_space(
+    probe: &ProbeOutcome,
+    mults: &[MultiplierSummary],
+    pm: &PowerModel,
+) -> SpaceOutcome {
+    let cands = &mults[1..];
+    let n_layers = pm.layer_mults.len();
+    // training sample: every measured point, features looked up by id
+    // (the exact row anchors the zero-error/zero-drop end)
+    let mut samples: Vec<model::ProbeSample> = Vec::with_capacity(probe.fig4.points.len());
+    for p in &probe.fig4.points {
+        if let Some(m) = mults.iter().find(|m| m.id == p.multiplier) {
+            samples.push((p.layer, model::features(m), p.accuracy_drop));
+        }
+    }
+    let qor = QorModel::fit(&samples, n_layers);
+    // measured overrides for probed candidates
+    let mut measured = vec![vec![None::<f64>; cands.len()]; n_layers];
+    for &ci in &probe.probed {
+        let id = &cands[ci].id;
+        for p in probe.fig4.points.iter().filter(|p| &p.multiplier == id) {
+            measured[p.layer][ci] = Some(p.accuracy_drop);
+        }
+    }
+    let mut drop = Vec::with_capacity(n_layers);
+    let mut power = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        let frac = pm.layer_fraction(l);
+        let mut dl = Vec::with_capacity(cands.len() + 1);
+        let mut pl = Vec::with_capacity(cands.len() + 1);
+        dl.push(0.0);
+        pl.push(frac * 100.0);
+        for (ci, c) in cands.iter().enumerate() {
+            dl.push(match measured[l][ci] {
+                Some(d) => d,
+                None => qor.predict(l, &model::features(c)),
+            });
+            pl.push(frac * c.rel_power_pct);
+        }
+        drop.push(dl);
+        power.push(pl);
+    }
+    SpaceOutcome {
+        space: SearchSpace { drop, power },
+        qor,
+    }
+}
+
+/// Stage 2: one greedy + local-search run per accuracy-budget ladder
+/// point, fanned over the deterministic job pool; results deduplicate in
+/// ladder order.
+pub fn search_stage(space: &SearchSpace, cfg: &DseConfig) -> SearchOutcome {
+    let points = cfg.budget_points.max(1);
+    let budgets: Vec<f64> = (0..points)
+        .map(|i| cfg.max_accuracy_drop * (i + 1) as f64 / points as f64)
+        .collect();
+    let results = map_parallel(budgets, cfg.jobs.max(1), |i, budget, _scratch| {
+        let start = space.greedy(budget);
+        space.local_search(
+            start,
+            budget,
+            cfg.search_iters,
+            cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        )
+    });
+    let mut seen = BTreeSet::new();
+    let mut assignments = Vec::new();
+    for a in results {
+        if seen.insert(a.clone()) {
+            assignments.push(a);
+        }
+    }
+    SearchOutcome {
+        assignments,
+        iters: points as u64 * cfg.search_iters,
+    }
+}
+
+/// The full pipeline: probe → fit → search → verify → report.
+///
+/// `testset` is the evaluation split (the HTTP endpoint and the
+/// determinism tests use [`TestSet::synthetic`]); `cache` memoises every
+/// real evaluation under [`EvalKey`]s shared with `/v1/select` and the
+/// campaign endpoints.
+pub fn run_dse(
+    coord: &Coordinator,
+    lib: Option<&Library>,
+    cfg: &DseConfig,
+    testset: &TestSet,
+    cache: &EvalCache,
+) -> Result<DseReport> {
+    let t0 = Instant::now();
+    ensure!(
+        cfg.max_accuracy_drop.is_finite() && cfg.max_accuracy_drop >= 0.0,
+        "max_accuracy_drop must be a non-negative finite number"
+    );
+    ensure!(testset.n > 0, "evaluation split is empty");
+    let meta = coord
+        .manifest()
+        .model(&cfg.model)
+        .ok_or_else(|| anyhow!("unknown model `{}`", cfg.model))?
+        .clone();
+    let pm = PowerModel::from_manifest(&meta);
+    let mults = standard_multipliers(lib, 10, cfg.candidates.max(1))?;
+    ensure!(
+        mults.first().map(|m| m.is_exact).unwrap_or(false),
+        "multiplier roster must lead with the exact reference"
+    );
+
+    // stage 1: probe + fit. The report carries deterministic *requested*
+    // counts (identical however warm the cache is); the Prometheus
+    // counters below record *real* backend evaluations as cache-miss
+    // deltas — best-effort attribution when runs share one cache.
+    let probe_misses_before = cache.misses();
+    let probe = probe_stage(coord, cfg, &mults, testset, Some(cache))?;
+    let probe_real_evals = cache.misses().saturating_sub(probe_misses_before);
+    let golden = probe.fig4.reference_accuracy;
+    let so = build_space(&probe, &mults, &pm);
+    let cands = &mults[1..];
+    let n_layers = so.space.n_layers();
+
+    // stage 2: model-guided search over the budget ladder
+    let search = search_stage(&so.space, cfg);
+
+    // stage 3: verify the predicted front + every uniform configuration
+    let all_exact = vec![0usize; n_layers];
+    let objs: Vec<Vec<f64>> = search
+        .assignments
+        .iter()
+        .map(|a| vec![so.space.predicted_drop(a), so.space.power_pct(a)])
+        .collect();
+    let mut verify: Vec<Vec<usize>> = non_dominated_indices(&objs)
+        .into_iter()
+        .take(cfg.verify_limit.max(1))
+        .map(|i| search.assignments[i].clone())
+        .collect();
+    for c in 1..=cands.len() {
+        let u = vec![c; n_layers];
+        if !verify.contains(&u) {
+            verify.push(u);
+        }
+    }
+    verify.retain(|a| a != &all_exact); // the anchor is the golden run itself
+    let images = Arc::new(testset.images.clone());
+    let exact = exact_lut();
+    let verify_misses_before = cache.misses();
+    let accs = map_parallel(verify.clone(), cfg.jobs.max(1), |_, a, _scratch| {
+        cache.get_or_compute(
+            EvalKey::whole(&cfg.model, &assignment_key(&a, cands), testset.n),
+            || {
+                coord.accuracy(
+                    &cfg.model,
+                    cfg.kernel,
+                    images.clone(),
+                    &testset.labels,
+                    Arc::new(assignment_luts(&a, cands, &exact)),
+                )
+            },
+        )
+    });
+    let verify_real_evals = cache.misses().saturating_sub(verify_misses_before);
+    let mut verified = Vec::with_capacity(verify.len() + 1);
+    verified.push(DsePoint {
+        assignment: vec!["exact".to_string(); n_layers],
+        uniform: true,
+        predicted_drop: 0.0,
+        power_pct: so.space.power_pct(&all_exact),
+        accuracy: golden,
+        accuracy_drop: 0.0,
+    });
+    for (a, acc) in verify.into_iter().zip(accs) {
+        let acc = acc?;
+        verified.push(DsePoint {
+            assignment: a
+                .iter()
+                .map(|&c| {
+                    if c == 0 {
+                        "exact".to_string()
+                    } else {
+                        cands[c - 1].id.clone()
+                    }
+                })
+                .collect(),
+            uniform: is_uniform(&a),
+            predicted_drop: so.space.predicted_drop(&a),
+            power_pct: so.space.power_pct(&a),
+            accuracy: acc,
+            accuracy_drop: golden - acc,
+        });
+    }
+
+    // measured Pareto front (ascending power) + the uniform baseline
+    let objs: Vec<Vec<f64>> = verified
+        .iter()
+        .map(|p| vec![p.accuracy_drop, p.power_pct])
+        .collect();
+    let mut front: Vec<DsePoint> = non_dominated_indices(&objs)
+        .into_iter()
+        .map(|i| verified[i].clone())
+        .collect();
+    front.sort_by(|x, y| x.power_pct.total_cmp(&y.power_pct));
+    let best_uniform = verified
+        .iter()
+        .filter(|p| p.uniform && p.accuracy_drop <= cfg.max_accuracy_drop)
+        .min_by(|x, y| {
+            x.power_pct
+                .total_cmp(&y.power_pct)
+                .then(x.accuracy_drop.total_cmp(&y.accuracy_drop))
+        })
+        .cloned();
+    let prediction_mae = if verified.len() > 1 {
+        verified[1..]
+            .iter()
+            .map(|p| (p.predicted_drop - p.accuracy_drop).abs())
+            .sum::<f64>()
+            / (verified.len() - 1) as f64
+    } else {
+        0.0
+    };
+
+    let m = coord.metrics_raw();
+    m.dse_jobs.fetch_add(1, Ordering::Relaxed);
+    m.dse_probe_evals.fetch_add(probe_real_evals, Ordering::Relaxed);
+    m.dse_search_iters.fetch_add(search.iters, Ordering::Relaxed);
+    m.dse_verify_runs.fetch_add(verify_real_evals, Ordering::Relaxed);
+    m.dse_duration.record(t0.elapsed());
+
+    Ok(DseReport {
+        model: cfg.model.clone(),
+        images: testset.n,
+        max_accuracy_drop: cfg.max_accuracy_drop,
+        reference_accuracy: golden,
+        candidates: cands.iter().map(|c| c.id.clone()).collect(),
+        probe_multipliers: probe.probed.len(),
+        probe_evals: probe.evals,
+        qor_fit_rmse: so.qor.fit_rmse,
+        qor_samples: so.qor.n_samples,
+        search_iters: search.iters,
+        verified,
+        front,
+        best_uniform,
+        prediction_mae,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spread_spans_the_range() {
+        assert_eq!(spread_indices(8, 3), vec![0, 3, 7]);
+        assert_eq!(spread_indices(8, 2), vec![0, 7]);
+        assert_eq!(spread_indices(3, 8), vec![0, 1, 2]);
+        assert_eq!(spread_indices(5, 1), vec![0]);
+        assert_eq!(spread_indices(1, 3), vec![0]);
+        assert!(spread_indices(0, 3).is_empty());
+        // near-duplicate targets collapse
+        let s = spread_indices(2, 5);
+        assert_eq!(s, vec![0, 1]);
+    }
+
+    #[test]
+    fn probe_budget_parsing() {
+        assert_eq!(DseConfig::parse_probe_budget("small").unwrap(), 2);
+        assert_eq!(DseConfig::parse_probe_budget("medium").unwrap(), 4);
+        assert_eq!(DseConfig::parse_probe_budget("large").unwrap(), 8);
+        assert_eq!(DseConfig::parse_probe_budget("6").unwrap(), 6);
+        assert!(DseConfig::parse_probe_budget("0").is_err());
+        assert!(DseConfig::parse_probe_budget("tiny").is_err());
+    }
+
+    #[test]
+    fn uniformity_and_keys() {
+        assert!(is_uniform(&[0, 0, 0]));
+        assert!(is_uniform(&[2, 2]));
+        assert!(is_uniform(&[1]));
+        assert!(is_uniform(&[]));
+        assert!(!is_uniform(&[1, 0]));
+    }
+}

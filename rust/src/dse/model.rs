@@ -1,0 +1,203 @@
+//! The QoR predictor: a cheap, deterministic substitute for autoAx's
+//! ML-based quality estimators.
+//!
+//! autoAx (Mrazek et al.) fits estimation models of quality-of-result and
+//! hardware cost from a small sample of real evaluations, then uses them
+//! to prune a combinatorial configuration space. We keep the shape of
+//! that idea but shrink the estimator to something dependency-free and
+//! exactly reproducible: per conv layer, the accuracy drop caused by
+//! replacing that layer's multiplier is modelled as a *linear* function
+//! of the multiplier's circuit-level error metrics,
+//!
+//! ```text
+//! drop(layer, m) ≈ β_layer · [1, MAE%, ER%, WCE%]
+//! ```
+//!
+//! fitted by ridge-regularised least squares over the probe campaign's
+//! measured points. The tiny ridge term keeps the normal equations
+//! solvable when the probe budget is smaller than the feature count
+//! (autoAx's "few real evaluations" regime); predictions are clamped at
+//! zero (an approximate multiplier never *predictably* helps accuracy).
+//! The hardware side needs no estimator at all — relative power is an
+//! analytic sum over `CircuitCost` ratios (see [`super::search`]).
+
+use crate::resilience::MultiplierSummary;
+
+/// Features of one multiplier: intercept + the three error metrics the
+/// paper's Table II leads with.
+pub const N_FEATURES: usize = 4;
+
+/// Feature vector of a multiplier summary.
+pub fn features(m: &MultiplierSummary) -> [f64; N_FEATURES] {
+    [1.0, m.mae_pct, m.er_pct, m.wce_pct]
+}
+
+/// One probe observation: `(layer, multiplier features, measured drop)`.
+pub type ProbeSample = (usize, [f64; N_FEATURES], f64);
+
+/// The fitted per-layer additive accuracy-drop model.
+#[derive(Debug, Clone)]
+pub struct QorModel {
+    betas: Vec<[f64; N_FEATURES]>,
+    /// Root-mean-square residual over the training (probe) sample.
+    pub fit_rmse: f64,
+    /// Training-sample size.
+    pub n_samples: usize,
+}
+
+impl QorModel {
+    /// Fit one ridge least-squares regression per layer from the probe
+    /// sample. Layers with no samples get an all-zero (exact) model.
+    pub fn fit(samples: &[ProbeSample], n_layers: usize) -> QorModel {
+        let mut betas = vec![[0.0f64; N_FEATURES]; n_layers];
+        for (layer, beta) in betas.iter_mut().enumerate() {
+            let xs: Vec<[f64; N_FEATURES]> = samples
+                .iter()
+                .filter(|s| s.0 == layer)
+                .map(|s| s.1)
+                .collect();
+            let ys: Vec<f64> = samples
+                .iter()
+                .filter(|s| s.0 == layer)
+                .map(|s| s.2)
+                .collect();
+            if !xs.is_empty() {
+                *beta = ridge_lsq(&xs, &ys, 1e-6);
+            }
+        }
+        let mut sq = 0.0;
+        for (layer, x, y) in samples {
+            let pred = dot(&betas[*layer], x);
+            sq += (pred - y) * (pred - y);
+        }
+        let n = samples.len();
+        QorModel {
+            betas,
+            fit_rmse: if n == 0 { 0.0 } else { (sq / n as f64).sqrt() },
+            n_samples: n,
+        }
+    }
+
+    /// Predicted accuracy drop of putting a multiplier with features `x`
+    /// into `layer` (all other layers exact). Clamped at zero.
+    pub fn predict(&self, layer: usize, x: &[f64; N_FEATURES]) -> f64 {
+        dot(&self.betas[layer], x).max(0.0)
+    }
+}
+
+fn dot(a: &[f64; N_FEATURES], b: &[f64; N_FEATURES]) -> f64 {
+    a.iter().zip(b.iter()).map(|(p, q)| p * q).sum()
+}
+
+/// Solve `(XᵀX + λI) β = Xᵀy` by Gaussian elimination with partial
+/// pivoting. λ > 0 guarantees the system is well-posed for any sample
+/// count, so the fit is total and deterministic.
+fn ridge_lsq(xs: &[[f64; N_FEATURES]], ys: &[f64], lambda: f64) -> [f64; N_FEATURES] {
+    const K: usize = N_FEATURES;
+    let mut a = [[0.0f64; K + 1]; K]; // augmented [XᵀX + λI | Xᵀy]
+    for (x, &y) in xs.iter().zip(ys.iter()) {
+        for i in 0..K {
+            for j in 0..K {
+                a[i][j] += x[i] * x[j];
+            }
+            a[i][K] += x[i] * y;
+        }
+    }
+    for (i, row) in a.iter_mut().enumerate() {
+        row[i] += lambda;
+    }
+    // forward elimination with partial pivoting
+    for col in 0..K {
+        let mut pivot = col;
+        for row in (col + 1)..K {
+            if a[row][col].abs() > a[pivot][col].abs() {
+                pivot = row;
+            }
+        }
+        a.swap(col, pivot);
+        let p = a[col][col];
+        if p.abs() < 1e-300 {
+            continue; // λI makes this unreachable for finite inputs
+        }
+        for row in (col + 1)..K {
+            let f = a[row][col] / p;
+            for j in col..=K {
+                a[row][j] -= f * a[col][j];
+            }
+        }
+    }
+    // back substitution
+    let mut beta = [0.0f64; K];
+    for col in (0..K).rev() {
+        let mut v = a[col][K];
+        for j in (col + 1)..K {
+            v -= a[col][j] * beta[j];
+        }
+        beta[col] = if a[col][col].abs() < 1e-300 {
+            0.0
+        } else {
+            v / a[col][col]
+        };
+    }
+    beta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_exact_linear_relation() {
+        // drop = 0.01 + 0.5*mae on layer 0; enough samples to determine it
+        let samples: Vec<ProbeSample> = [0.0f64, 0.5, 1.0, 2.0, 4.0]
+            .iter()
+            .map(|&mae| {
+                (
+                    0usize,
+                    [1.0, mae, 2.0 * mae, 3.0 * mae],
+                    0.01 + 0.5 * mae,
+                )
+            })
+            .collect();
+        let m = QorModel::fit(&samples, 2);
+        assert!(m.fit_rmse < 1e-4, "rmse {}", m.fit_rmse);
+        let pred = m.predict(0, &[1.0, 3.0, 6.0, 9.0]);
+        assert!((pred - 1.51).abs() < 1e-3, "{pred}");
+        // the unprobed layer predicts zero
+        assert_eq!(m.predict(1, &[1.0, 3.0, 6.0, 9.0]), 0.0);
+    }
+
+    #[test]
+    fn underdetermined_fit_is_total_and_interpolates() {
+        // fewer samples than features: ridge still yields a model that
+        // reproduces the probed points closely
+        let samples = vec![
+            (0usize, [1.0, 1.0, 10.0, 2.0], 0.05),
+            (0usize, [1.0, 4.0, 40.0, 8.0], 0.20),
+        ];
+        let m = QorModel::fit(&samples, 1);
+        for (l, x, y) in &samples {
+            assert!((m.predict(*l, x) - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn predictions_clamp_at_zero() {
+        let samples = vec![
+            (0usize, [1.0, 1.0, 1.0, 1.0], -0.5),
+            (0usize, [1.0, 2.0, 2.0, 2.0], -1.0),
+        ];
+        let m = QorModel::fit(&samples, 1);
+        assert_eq!(m.predict(0, &[1.0, 3.0, 3.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn empty_fit_is_all_zero() {
+        let m = QorModel::fit(&[], 3);
+        assert_eq!(m.n_samples, 0);
+        assert_eq!(m.fit_rmse, 0.0);
+        for l in 0..3 {
+            assert_eq!(m.predict(l, &[1.0, 9.0, 9.0, 9.0]), 0.0);
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Model-guided search over heterogeneous per-layer assignments.
+//!
+//! The assignment space is `choices^layers` (choice 0 = the exact
+//! multiplier, choice `c ≥ 1` = library candidate `c-1` in that layer) —
+//! far too large to evaluate on the real backend. Both objectives are
+//! *separable per layer* under the probe-fitted model:
+//!
+//! * predicted accuracy drop = Σ_layer `drop[layer][choice]` (the additive
+//!   QoR assumption of [`super::model`]);
+//! * relative multiplier power = Σ_layer `frac_layer · ratio_choice`
+//!   (exact, from [`crate::accel::PowerModel`] fractions and
+//!   [`crate::circuit::cost::CircuitCost`] power ratios — the hardware
+//!   side needs no estimator).
+//!
+//! The search is the classic budgeted heuristic pair: a **greedy** pass
+//! that repeatedly takes the single-layer change with the best
+//! power-saving per unit of predicted drop that still fits the budget,
+//! then a seeded **local-search** refinement proposing random single-layer
+//! reassignments and accepting strict improvements. Everything is a pure
+//! function of `(space, budget, iters, seed)` — never of thread timing —
+//! so a multi-budget sweep fanned over `cgp::campaign::map_parallel`
+//! is byte-identical for any `--jobs` value.
+
+use crate::data::rng::Xoshiro256;
+
+/// Tie-break / division floor for zero-predicted-drop moves.
+const EPS_DROP: f64 = 1e-12;
+
+/// The per-layer objective tables the search runs on.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// `drop[layer][choice]`: predicted accuracy drop of putting `choice`
+    /// into `layer` alone. `drop[layer][0] == 0` (exact).
+    pub drop: Vec<Vec<f64>>,
+    /// `power[layer][choice]`: contribution of `(layer, choice)` to the
+    /// whole-accelerator relative multiplier power, in percent
+    /// (`frac_layer · power_ratio_choice · 100`). `power[layer][0]` is the
+    /// layer's exact contribution.
+    pub power: Vec<Vec<f64>>,
+}
+
+impl SearchSpace {
+    /// Conv layers in the network.
+    pub fn n_layers(&self) -> usize {
+        self.drop.len()
+    }
+
+    /// Options per layer (candidates + 1 for the exact multiplier).
+    pub fn n_choices(&self) -> usize {
+        self.drop.first().map_or(0, Vec::len)
+    }
+
+    /// Predicted accuracy drop of an assignment (additive model).
+    pub fn predicted_drop(&self, a: &[usize]) -> f64 {
+        a.iter()
+            .enumerate()
+            .map(|(l, &c)| self.drop[l][c])
+            .sum()
+    }
+
+    /// Relative multiplier power [%] of an assignment.
+    pub fn power_pct(&self, a: &[usize]) -> f64 {
+        a.iter()
+            .enumerate()
+            .map(|(l, &c)| self.power[l][c])
+            .sum()
+    }
+
+    /// Greedy construction: from the all-exact assignment, repeatedly
+    /// apply the single-layer change with the highest power saving per
+    /// unit of *additional* predicted drop that keeps the total within
+    /// `budget`. Ties break on `(layer, choice)` order; every accepted
+    /// move strictly lowers power, so the loop terminates.
+    pub fn greedy(&self, budget: f64) -> Vec<usize> {
+        let mut a = vec![0usize; self.n_layers()];
+        let mut total_drop = 0.0;
+        loop {
+            let mut best: Option<(f64, usize, usize)> = None; // (score, layer, choice)
+            for l in 0..self.n_layers() {
+                for c in 0..self.n_choices() {
+                    if c == a[l] {
+                        continue;
+                    }
+                    let d_drop = self.drop[l][c] - self.drop[l][a[l]];
+                    let d_power = self.power[l][c] - self.power[l][a[l]];
+                    if d_power >= 0.0 || total_drop + d_drop > budget {
+                        continue;
+                    }
+                    let score = -d_power / d_drop.max(EPS_DROP);
+                    if best.map_or(true, |(s, _, _)| score > s) {
+                        best = Some((score, l, c));
+                    }
+                }
+            }
+            match best {
+                Some((_, l, c)) => {
+                    total_drop += self.drop[l][c] - self.drop[l][a[l]];
+                    a[l] = c;
+                }
+                None => return a,
+            }
+        }
+    }
+
+    /// Seeded local-search refinement: `iters` proposals of one random
+    /// `(layer, choice)` reassignment. A proposal is accepted when it
+    /// stays within `budget` and strictly lowers power (or matches power
+    /// with lower predicted drop); occasionally (1-in-8, RNG-driven) a
+    /// budget-*freeing* move (lower drop at worse power) is accepted as a
+    /// kick so the walk can escape greedy's stranded-budget local optima.
+    /// The best feasible assignment seen — which includes the start — is
+    /// returned, so refinement never loses ground. Deterministic in
+    /// `(start, budget, iters, seed)`.
+    pub fn local_search(
+        &self,
+        mut a: Vec<usize>,
+        budget: f64,
+        iters: u64,
+        seed: u64,
+    ) -> Vec<usize> {
+        if self.n_layers() == 0 || self.n_choices() < 2 {
+            return a;
+        }
+        let mut rng = Xoshiro256::new(seed);
+        let mut drop = self.predicted_drop(&a);
+        let mut power = self.power_pct(&a);
+        let mut best = a.clone();
+        let (mut best_power, mut best_drop) = (power, drop);
+        for _ in 0..iters {
+            let l = rng.next_usize(self.n_layers());
+            let c = rng.next_usize(self.n_choices());
+            let kick = rng.next_usize(8) == 0;
+            if c == a[l] {
+                continue;
+            }
+            let nd = drop + self.drop[l][c] - self.drop[l][a[l]];
+            let np = power + self.power[l][c] - self.power[l][a[l]];
+            if nd > budget {
+                continue;
+            }
+            let improves =
+                np < power - EPS_DROP || (np <= power + EPS_DROP && nd < drop - EPS_DROP);
+            if improves || (kick && nd < drop - EPS_DROP) {
+                a[l] = c;
+                drop = nd;
+                power = np;
+                if np < best_power - EPS_DROP
+                    || (np <= best_power + EPS_DROP && nd < best_drop - EPS_DROP)
+                {
+                    best = a.clone();
+                    best_power = np;
+                    best_drop = nd;
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two layers, two candidates. Layer 1 holds 90 % of the power;
+    /// candidate 1 is cheap/low-error, candidate 2 cheaper/high-error.
+    fn space() -> SearchSpace {
+        SearchSpace {
+            drop: vec![vec![0.0, 0.01, 0.05], vec![0.0, 0.02, 0.10]],
+            power: vec![
+                vec![10.0, 6.0, 3.0],  // layer 0: 10 % of total
+                vec![90.0, 54.0, 27.0], // layer 1: 90 % of total
+            ],
+        }
+    }
+
+    #[test]
+    fn objectives_are_separable_sums() {
+        let s = space();
+        assert_eq!(s.n_layers(), 2);
+        assert_eq!(s.n_choices(), 3);
+        assert!((s.power_pct(&[0, 0]) - 100.0).abs() < 1e-12);
+        assert!((s.power_pct(&[2, 1]) - 57.0).abs() < 1e-12);
+        assert!((s.predicted_drop(&[2, 1]) - 0.07).abs() < 1e-12);
+    }
+
+    #[test]
+    fn greedy_respects_budget_and_prefers_big_layers() {
+        let s = space();
+        // zero budget (with zero-drop floor): nothing fits
+        let a = s.greedy(-1.0);
+        assert_eq!(a, vec![0, 0]);
+        // tight budget: the high-share layer's low-error candidate first
+        let a = s.greedy(0.02);
+        assert_eq!(a[1], 1, "layer 1 saves 36 % for 0.02 drop: {a:?}");
+        assert!(s.predicted_drop(&a) <= 0.02 + 1e-12);
+        // generous budget: everything goes maximally approximate
+        let a = s.greedy(1.0);
+        assert_eq!(a, vec![2, 2]);
+    }
+
+    #[test]
+    fn local_search_only_improves_and_is_deterministic() {
+        let s = space();
+        let start = s.greedy(0.07);
+        let p0 = s.power_pct(&start);
+        let a = s.local_search(start.clone(), 0.07, 500, 42);
+        let b = s.local_search(start.clone(), 0.07, 500, 42);
+        assert_eq!(a, b, "same seed, same walk");
+        assert!(s.power_pct(&a) <= p0 + 1e-12);
+        assert!(s.predicted_drop(&a) <= 0.07 + 1e-12);
+        // a different seed still never worsens the start
+        let c = s.local_search(start, 0.07, 500, 7);
+        assert!(s.power_pct(&c) <= p0 + 1e-12);
+    }
+
+    #[test]
+    fn local_search_escapes_a_greedy_miss() {
+        // greedy takes layer-0's ratio-best move first and strands the
+        // budget; local search can reach the better single big move
+        let s = SearchSpace {
+            drop: vec![vec![0.0, 0.001], vec![0.0, 0.05]],
+            power: vec![vec![50.0, 45.0], vec![50.0, 10.0]],
+        };
+        let g = s.greedy(0.05);
+        // greedy spends 0.001 on layer 0, then cannot afford layer 1
+        assert_eq!(g, vec![1, 0]);
+        let refined = s.local_search(g, 0.05, 2_000, 1);
+        assert_eq!(refined, vec![0, 1], "the 40-point saving wins");
+    }
+}

@@ -29,7 +29,18 @@
 //! * [`resilience`] — the resilience-analysis framework of §IV: LUT
 //!   construction from netlists, per-layer and whole-network replacement
 //!   campaigns fanned over the job pool, accuracy/power trade-off reports
-//!   (Fig. 4, Table II) byte-identical for any worker count.
+//!   (Fig. 4, Table II) byte-identical for any worker count, and the
+//!   shared evaluation cache that memoises `(network, multiplier, layer
+//!   scope)` accuracies across campaigns, `/v1/select` and DSE.
+//! * [`dse`] — design-space exploration (DESIGN.md §8): heterogeneous
+//!   per-layer multiplier assignment in the autoAx mould — a probe
+//!   campaign fits an additive least-squares QoR predictor and an
+//!   analytic power model, greedy + seeded local search explores the
+//!   assignment space over an accuracy-budget ladder on the predicted
+//!   objectives, and only the predicted Pareto front (plus every uniform
+//!   configuration, for the paper's whole-network baseline) is verified
+//!   on the real backend. Deterministic for any `--jobs` value and
+//!   byte-identical over HTTP vs in-process.
 //! * [`runtime`] — inference runtimes behind one `EngineBackend` trait:
 //!   the PJRT engine for the AOT-compiled HLO artifacts produced by
 //!   `python/compile/aot.py`, and the pure-Rust `native` LUT-inference
@@ -58,6 +69,7 @@ pub mod circuit;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod dse;
 pub mod library;
 pub mod resilience;
 pub mod runtime;

@@ -13,4 +13,4 @@ pub use catalog::{
 };
 pub use entry::{Entry, Origin};
 pub use selection::{evenly_by_power, pareto_indices, select_diverse};
-pub use store::Library;
+pub use store::{CensusRow, Library};

@@ -10,6 +10,26 @@ use crate::util::json::Json;
 
 use super::entry::{Entry, Origin};
 
+/// One detailed census row: the Table-I count of a `(kind, width)` group
+/// plus its circuit-cost spread.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CensusRow {
+    /// `"adder"` or `"multiplier"`.
+    pub kind: String,
+    /// Operand bit width.
+    pub width: u32,
+    /// Entries in the group.
+    pub count: usize,
+    /// Smallest cell area in the group [µm²].
+    pub area_um2_min: f64,
+    /// Largest cell area in the group [µm²].
+    pub area_um2_max: f64,
+    /// Shortest critical path in the group [ps].
+    pub delay_ps_min: f64,
+    /// Longest critical path in the group [ps].
+    pub delay_ps_max: f64,
+}
+
 /// A library of approximate arithmetic circuits (the EvoApproxLib analogue).
 ///
 /// Entries are held in insertion order (`entries`), with two hash indices
@@ -104,17 +124,40 @@ impl Library {
 
     /// Census per `(circuit kind, bit width)` — the data of Table I.
     pub fn census(&self) -> Vec<(String, u32, usize)> {
-        let mut map: BTreeMap<(String, u32), usize> = BTreeMap::new();
+        self.census_rows()
+            .into_iter()
+            .map(|r| (r.kind, r.width, r.count))
+            .collect()
+    }
+
+    /// Detailed census: Table-I counts plus each group's area/delay spread
+    /// from [`crate::circuit::cost::CircuitCost`] (the paper's Pareto
+    /// fronts rank on more than power).
+    pub fn census_rows(&self) -> Vec<CensusRow> {
+        let mut map: BTreeMap<(String, u32), CensusRow> = BTreeMap::new();
         for e in &self.entries {
             let kind = match e.f {
                 ArithFn::Add { .. } => "adder".to_string(),
                 ArithFn::Mul { .. } => "multiplier".to_string(),
             };
-            *map.entry((kind, e.f.width())).or_default() += 1;
+            let row = map
+                .entry((kind.clone(), e.f.width()))
+                .or_insert_with(|| CensusRow {
+                    kind,
+                    width: e.f.width(),
+                    count: 0,
+                    area_um2_min: f64::INFINITY,
+                    area_um2_max: f64::NEG_INFINITY,
+                    delay_ps_min: f64::INFINITY,
+                    delay_ps_max: f64::NEG_INFINITY,
+                });
+            row.count += 1;
+            row.area_um2_min = row.area_um2_min.min(e.cost.area_um2);
+            row.area_um2_max = row.area_um2_max.max(e.cost.area_um2);
+            row.delay_ps_min = row.delay_ps_min.min(e.cost.delay_ps);
+            row.delay_ps_max = row.delay_ps_max.max(e.cost.delay_ps);
         }
-        map.into_iter()
-            .map(|((k, w), n)| (k, w, n))
-            .collect()
+        map.into_values().collect()
     }
 
     /// Serialise the whole library.
@@ -192,6 +235,27 @@ mod tests {
                 ("adder".to_string(), 12, 1),
                 ("multiplier".to_string(), 8, 2),
             ]
+        );
+    }
+
+    #[test]
+    fn census_rows_carry_cost_spread() {
+        let mut lib = Library::new();
+        lib.insert(mk(wallace_multiplier(8), ArithFn::Mul { w: 8 }));
+        lib.insert(mk(bam_multiplier(8, 0, 4), ArithFn::Mul { w: 8 }));
+        lib.insert(mk(truncated_multiplier(8, 6), ArithFn::Mul { w: 8 }));
+        let rows = lib.census_rows();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!((r.kind.as_str(), r.width, r.count), ("multiplier", 8, 3));
+        // the approximations are strictly smaller than the exact wallace
+        assert!(r.area_um2_min < r.area_um2_max, "{r:?}");
+        assert!(r.area_um2_min > 0.0 && r.delay_ps_min > 0.0);
+        assert!(r.delay_ps_min <= r.delay_ps_max);
+        // the tuple census stays the old shape
+        assert_eq!(
+            lib.census(),
+            vec![("multiplier".to_string(), 8, 3)]
         );
     }
 

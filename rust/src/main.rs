@@ -17,6 +17,12 @@
 //!                   # any machine via `--backend native` (no artifacts)
 //! evoapprox table2  [--lib lib.json] [--images 128] [--models resnet8,resnet14]
 //!                   [--backend auto|native|pjrt] [--jobs N]
+//! evoapprox dse     [--network resnet8] [--max-accuracy-drop 0.05]
+//!                   [--probe-budget small|medium|large|N] [--images 32]
+//!                   [--candidates 8] [--budget-points 4] [--search-iters 400]
+//!                   [--backend KIND] [--jobs N] [--lib lib.json] [--out dse.json]
+//!                   # heterogeneous per-layer multiplier assignment:
+//!                   # probe → model-guided search → verified Pareto front
 //! evoapprox serve   [--addr 127.0.0.1:8080] [--workers 4] [--model resnet8]
 //!                   [--backend KIND] [--library lib.json] [--max-wait-ms 20]
 //!                   # HTTP service: predict, library queries, campaign
@@ -143,6 +149,25 @@ const COMMANDS: &[CommandSpec] = &[
         ],
     },
     CommandSpec {
+        name: "dse",
+        about: "model-guided DSE: heterogeneous per-layer multiplier assignment",
+        flags: &[
+            LIB_FLAG,
+            ARTIFACTS_FLAG,
+            BACKEND_FLAG,
+            JOBS_FLAG,
+            FlagSpec { name: "network", value: Some("NAME"), help: "network to explore (default resnet8)" },
+            FlagSpec { name: "max-accuracy-drop", value: Some("D"), help: "accuracy budget (default 0.05)" },
+            FlagSpec { name: "probe-budget", value: Some("N"), help: "probed multipliers: small|medium|large or a count (default medium)" },
+            FlagSpec { name: "images", value: Some("N"), help: "test images (default 32)" },
+            FlagSpec { name: "candidates", value: Some("N"), help: "library candidate pool size (default 8)" },
+            FlagSpec { name: "budget-points", value: Some("N"), help: "accuracy-budget ladder points (default 4)" },
+            FlagSpec { name: "search-iters", value: Some("N"), help: "local-search proposals per budget point (default 400)" },
+            FlagSpec { name: "seed", value: Some("N"), help: "search seed" },
+            FlagSpec { name: "out", value: Some("FILE"), help: "write the JSON report" },
+        ],
+    },
+    CommandSpec {
         name: "serve",
         about: "HTTP service: batched inference, library queries, campaign jobs, /metrics",
         flags: &[
@@ -175,6 +200,7 @@ fn main() {
         "select" => cmd_select(&cli),
         "fig4" | "resilience" => cmd_fig4(&cli),
         "table2" => cmd_table2(&cli),
+        "dse" => cmd_dse(&cli),
         "serve" => cmd_serve(&cli),
         _ => {
             print!("{}", render_help("evoapprox", ABOUT, COMMANDS));
@@ -579,6 +605,103 @@ fn cmd_table2(cli: &Cli) -> anyhow::Result<()> {
         t.row(cells);
     }
     print!("{}", t.render());
+    println!("{:#?}", coord.metrics());
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_dse(cli: &Cli) -> anyhow::Result<()> {
+    use evoapproxlib::coordinator::{Backend, Coordinator, CoordinatorConfig, KernelKind};
+    use evoapproxlib::dse::{run_dse, DseConfig};
+    use evoapproxlib::resilience::EvalCache;
+
+    let dir = artifacts_dir(cli);
+    let (coord, _guard) =
+        Coordinator::start(CoordinatorConfig::new(&dir).with_backend(backend(cli)?))?;
+    let n_images = cli.flag("images", 32usize)?;
+    let testset = match coord.manifest().load_testset(&dir) {
+        Ok(ts) => ts.truncated(n_images),
+        Err(e) if coord.backend() == Backend::Native => {
+            eprintln!("note: no exported test set ({e:#}); using the synthetic split");
+            evoapproxlib::runtime::manifest::TestSet::synthetic(n_images)
+        }
+        Err(e) => return Err(e),
+    };
+    let lib = cli.get("lib").map(Library::load).transpose()?;
+    let mut cfg = DseConfig::new(cli.flag_str("network", "resnet8"));
+    cfg.max_accuracy_drop = cli.flag("max-accuracy-drop", cfg.max_accuracy_drop)?;
+    cfg.probe_multipliers =
+        DseConfig::parse_probe_budget(&cli.flag_str("probe-budget", "medium"))?;
+    cfg.candidates = cli.flag("candidates", cfg.candidates)?;
+    cfg.budget_points = cli.flag("budget-points", cfg.budget_points)?;
+    cfg.search_iters = cli.flag("search-iters", cfg.search_iters)?;
+    cfg.seed = cli.flag("seed", cfg.seed)?;
+    cfg.jobs = cli.flag("jobs", cfg.jobs)?;
+    cfg.kernel = KernelKind::Jnp;
+    let cache = EvalCache::new();
+    let t0 = std::time::Instant::now();
+    let report = run_dse(&coord, lib.as_ref(), &cfg, &testset, &cache)?;
+    println!(
+        "DSE — {} on {} images ({} backend, {} jobs): reference accuracy {:.2}%",
+        report.model,
+        report.images,
+        coord.backend().as_str(),
+        cfg.jobs,
+        report.reference_accuracy * 100.0
+    );
+    println!(
+        "probe: {} multipliers over {} evals; QoR fit RMSE {:.5} from {} samples",
+        report.probe_multipliers, report.probe_evals, report.qor_fit_rmse, report.qor_samples
+    );
+    println!(
+        "search: {} proposals; verify: {} configurations ({} cached evals, {} hits) in {:.1?}",
+        report.search_iters,
+        report.verified.len(),
+        cache.len(),
+        cache.hits(),
+        t0.elapsed()
+    );
+    println!(
+        "verified accuracy/power front within drop budget {:.4} ({} points):",
+        report.max_accuracy_drop,
+        report.front.len()
+    );
+    let mut t = TextTable::new(&[
+        "assignment (per layer)", "uniform", "pred drop", "meas drop", "power %",
+    ]);
+    for p in &report.front {
+        t.row(vec![
+            p.assignment.join(","),
+            (if p.uniform { "yes" } else { "no" }).to_string(),
+            format!("{:+.4}", p.predicted_drop),
+            format!("{:+.4}", p.accuracy_drop),
+            format!("{:.2}", p.power_pct),
+        ]);
+    }
+    print!("{}", t.render());
+    if let Some(u) = &report.best_uniform {
+        println!(
+            "best uniform pick within budget: {} — drop {:+.4}, power {:.2}%",
+            u.assignment.first().map(String::as_str).unwrap_or("exact"),
+            u.accuracy_drop,
+            u.power_pct
+        );
+        if let Some(d) = report.front.iter().find(|p| {
+            p.accuracy_drop <= u.accuracy_drop + 1e-12 && p.power_pct < u.power_pct - 1e-9
+        }) {
+            println!(
+                "heterogeneous front beats it: power {:.2}% at drop {:+.4}",
+                d.power_pct, d.accuracy_drop
+            );
+        } else {
+            println!("heterogeneous front matches it (weak dominance)");
+        }
+    }
+    println!("prediction MAE over the verified set: {:.5}", report.prediction_mae);
+    if let Some(out) = cli.get("out") {
+        std::fs::write(out, evoapproxlib::server::report::dse_to_json(&report).to_string())?;
+        println!("report JSON → {out}");
+    }
     println!("{:#?}", coord.metrics());
     coord.shutdown();
     Ok(())

@@ -1,0 +1,212 @@
+//! Shared resilience-evaluation cache.
+//!
+//! Every consumer of whole-network / per-layer accuracy numbers — the
+//! `/v1/select` endpoint, the Fig. 4 campaign endpoint, the CLI analysis
+//! commands and the `dse` subsystem — evaluates the *same* deterministic
+//! pipeline: `(network, multiplier, layer scope, image count)` fully
+//! determines the accuracy. This module gives them one process-wide memo
+//! table so identical evaluations are computed once, replacing the ad-hoc
+//! per-endpoint cache the server used to keep.
+//!
+//! Correctness under caching is free: the pipeline is deterministic, so a
+//! cached value is bit-identical to a recomputed one — which is what keeps
+//! the campaign/DSE "`--jobs 1` ≡ `--jobs N`" and "HTTP ≡ in-process"
+//! byte-identity contracts intact whether the cache is cold or warm.
+//! Lookups happen outside the lock; two racing misses compute twice and
+//! agree.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+/// Which layers of the network carry the approximate multiplier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scope {
+    /// Every conv layer (Table II / `/v1/select` style).
+    Whole,
+    /// A single conv layer, all others exact (Fig. 4 style).
+    Layer(usize),
+}
+
+/// Key of one resilience evaluation. `multiplier` is the library id for a
+/// uniform replacement, [`EvalKey::GOLDEN`] for the exact reference, or a
+/// `+`-joined per-layer id list for a heterogeneous DSE assignment.
+///
+/// The evaluation split is identified by its **size only**: every current
+/// consumer of a shared cache evaluates on the deterministic
+/// `TestSet::synthetic(n)` split, where `n` fully determines the data.
+/// Do NOT share one [`EvalCache`] across *different* splits of the same
+/// size (e.g. a truncated exported test set and a synthetic one) — their
+/// entries would silently alias. Use one cache per split, as the CLI
+/// does (a fresh cache per `evoapprox dse` invocation).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct EvalKey {
+    /// Network name (`resnet8`, …).
+    pub model: String,
+    /// Multiplier identity (see type docs).
+    pub multiplier: String,
+    /// Layer scope of the replacement.
+    pub scope: Scope,
+    /// Evaluation-split size (see the type docs: the split must be the
+    /// deterministic synthetic one, or at least unique per cache).
+    pub images: usize,
+}
+
+impl EvalKey {
+    /// Reserved multiplier name for the exact (golden) reference. All
+    /// functionally exact multipliers share it: exactness is exhaustive
+    /// zero error, so their accuracies are identical by construction.
+    pub const GOLDEN: &'static str = "__golden__";
+
+    /// Whole-network evaluation key.
+    pub fn whole(model: &str, multiplier: &str, images: usize) -> EvalKey {
+        EvalKey {
+            model: model.to_string(),
+            multiplier: multiplier.to_string(),
+            scope: Scope::Whole,
+            images,
+        }
+    }
+
+    /// Single-layer evaluation key.
+    pub fn layer(model: &str, multiplier: &str, layer: usize, images: usize) -> EvalKey {
+        EvalKey {
+            model: model.to_string(),
+            multiplier: multiplier.to_string(),
+            scope: Scope::Layer(layer),
+            images,
+        }
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    map: Mutex<HashMap<EvalKey, f64>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Cloneable handle to the shared accuracy memo table.
+#[derive(Clone, Default)]
+pub struct EvalCache {
+    inner: Arc<Inner>,
+}
+
+impl EvalCache {
+    /// Empty cache.
+    pub fn new() -> EvalCache {
+        EvalCache::default()
+    }
+
+    /// Cached value, if present.
+    pub fn get(&self, key: &EvalKey) -> Option<f64> {
+        let hit = self.inner.map.lock().expect("eval cache poisoned").get(key).copied();
+        match hit {
+            Some(v) => {
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                self.inner.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store a value (last write wins; racing writers agree by determinism).
+    pub fn insert(&self, key: EvalKey, value: f64) {
+        self.inner
+            .map
+            .lock()
+            .expect("eval cache poisoned")
+            .insert(key, value);
+    }
+
+    /// Fetch `key`, computing (outside the lock) and memoising on a miss.
+    /// Errors are not cached — a transient failure must not poison the key.
+    pub fn get_or_compute(
+        &self,
+        key: EvalKey,
+        compute: impl FnOnce() -> Result<f64>,
+    ) -> Result<f64> {
+        if let Some(v) = self.get(&key) {
+            return Ok(v);
+        }
+        let v = compute()?;
+        self.insert(key, v);
+        Ok(v)
+    }
+
+    /// Entries currently memoised.
+    pub fn len(&self) -> usize {
+        self.inner.map.lock().expect("eval cache poisoned").len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups answered from the table.
+    pub fn hits(&self) -> u64 {
+        self.inner.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that missed.
+    pub fn misses(&self) -> u64 {
+        self.inner.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    #[test]
+    fn memoises_and_counts() {
+        let cache = EvalCache::new();
+        let key = EvalKey::whole("resnet8", "mul8u_0001", 32);
+        assert!(cache.get(&key).is_none());
+        assert_eq!(cache.misses(), 1);
+        let mut computes = 0;
+        for _ in 0..3 {
+            let v = cache
+                .get_or_compute(key.clone(), || {
+                    computes += 1;
+                    Ok(0.75)
+                })
+                .unwrap();
+            assert_eq!(v, 0.75);
+        }
+        assert_eq!(computes, 1, "only the first lookup computes");
+        assert_eq!(cache.len(), 1);
+        assert!(cache.hits() >= 2);
+    }
+
+    #[test]
+    fn scopes_and_images_are_distinct_keys() {
+        let cache = EvalCache::new();
+        cache.insert(EvalKey::whole("resnet8", "m", 32), 0.5);
+        cache.insert(EvalKey::layer("resnet8", "m", 0, 32), 0.6);
+        cache.insert(EvalKey::layer("resnet8", "m", 1, 32), 0.7);
+        cache.insert(EvalKey::whole("resnet8", "m", 64), 0.8);
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.get(&EvalKey::whole("resnet8", "m", 32)), Some(0.5));
+        assert_eq!(cache.get(&EvalKey::layer("resnet8", "m", 1, 32)), Some(0.7));
+    }
+
+    #[test]
+    fn errors_are_not_cached() {
+        let cache = EvalCache::new();
+        let key = EvalKey::whole("resnet8", "m", 8);
+        assert!(cache
+            .get_or_compute(key.clone(), || Err(anyhow!("transient")))
+            .is_err());
+        assert_eq!(cache.len(), 0);
+        let v = cache.get_or_compute(key, || Ok(0.9)).unwrap();
+        assert_eq!(v, 0.9);
+    }
+}

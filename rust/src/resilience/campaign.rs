@@ -25,6 +25,7 @@ use crate::library::{select_diverse, Library};
 use crate::runtime::manifest::TestSet;
 use crate::runtime::{broadcast_lut, exact_lut, LUT_LEN};
 
+use super::cache::{EvalCache, EvalKey};
 use super::lut::lut_for_entry;
 
 /// A multiplier under analysis: its LUT plus reporting metadata.
@@ -161,6 +162,18 @@ pub struct Fig4Report {
     pub points: Vec<Fig4Point>,
 }
 
+/// Route one evaluation through the optional shared cache.
+fn run_cached(
+    cache: Option<&EvalCache>,
+    key: EvalKey,
+    compute: impl FnOnce() -> Result<f64>,
+) -> Result<f64> {
+    match cache {
+        Some(c) => c.get_or_compute(key, compute),
+        None => compute(),
+    }
+}
+
 /// Fig. 4: approximate ONE conv layer at a time (§IV). The
 /// (multiplier × layer) grid is evaluated on `jobs` pool workers; results
 /// are merged in submission order, so the report is byte-identical for any
@@ -173,6 +186,25 @@ pub fn per_layer_campaign(
     kernel: KernelKind,
     jobs: usize,
 ) -> Result<Fig4Report> {
+    per_layer_campaign_cached(coord, model, multipliers, testset, kernel, jobs, None)
+}
+
+/// [`per_layer_campaign`] with an optional shared [`EvalCache`]: every
+/// `(multiplier, layer)` accuracy — and the golden reference — is looked
+/// up under its [`EvalKey`] first and memoised after computing.
+/// The pipeline is deterministic, so a warm cache returns exactly the
+/// values a cold run computes and the byte-identity contract is
+/// unaffected; what changes is that `/v1/select`, campaign jobs and DSE
+/// runs stop re-evaluating identical grid points.
+pub fn per_layer_campaign_cached(
+    coord: &Coordinator,
+    model: &str,
+    multipliers: &[MultiplierSummary],
+    testset: &TestSet,
+    kernel: KernelKind,
+    jobs: usize,
+    cache: Option<&EvalCache>,
+) -> Result<Fig4Report> {
     let meta = coord
         .manifest()
         .model(model)
@@ -182,13 +214,15 @@ pub fn per_layer_campaign(
     let pm = PowerModel::from_manifest(&meta);
     let exact = exact_lut();
     let images = Arc::new(testset.images.clone());
-    let golden = coord.accuracy(
-        model,
-        kernel,
-        images.clone(),
-        &testset.labels,
-        Arc::new(broadcast_lut(&exact, n_layers)),
-    )?;
+    let golden = run_cached(cache, EvalKey::whole(model, EvalKey::GOLDEN, testset.n), || {
+        coord.accuracy(
+            model,
+            kernel,
+            images.clone(),
+            &testset.labels,
+            Arc::new(broadcast_lut(&exact, n_layers)),
+        )
+    })?;
     // The 100 % power reference is the exact multiplier itself, identified
     // by provenance — NOT by a floating-point `rel_power == 100` match,
     // which silently picks nothing (or a coincidental entry) when the
@@ -199,15 +233,25 @@ pub fn per_layer_campaign(
         .collect();
     let accuracies = map_parallel(grid.clone(), jobs.max(1), |_, (mi, layer), _scratch| {
         let m = &multipliers[mi];
-        let mut luts = broadcast_lut(&exact, n_layers);
-        luts[layer * LUT_LEN..(layer + 1) * LUT_LEN].copy_from_slice(&m.lut);
-        coord.accuracy(
-            model,
-            kernel,
-            images.clone(),
-            &testset.labels,
-            Arc::new(luts),
-        )
+        // a functionally exact multiplier in any single layer IS the
+        // golden network — share the golden cache entry instead of a
+        // per-layer one
+        let key = if m.is_exact {
+            EvalKey::whole(model, EvalKey::GOLDEN, testset.n)
+        } else {
+            EvalKey::layer(model, &m.id, layer, testset.n)
+        };
+        run_cached(cache, key, || {
+            let mut luts = broadcast_lut(&exact, n_layers);
+            luts[layer * LUT_LEN..(layer + 1) * LUT_LEN].copy_from_slice(&m.lut);
+            coord.accuracy(
+                model,
+                kernel,
+                images.clone(),
+                &testset.labels,
+                Arc::new(luts),
+            )
+        })
     });
     let mut points = Vec::with_capacity(grid.len());
     for ((mi, layer), acc) in grid.into_iter().zip(accuracies) {

@@ -11,12 +11,19 @@
 //!
 //! LUTs come from [`lut`]: exhaustive bit-parallel simulation of the
 //! multiplier netlist (the TFApprox ingestion path, done in Rust).
+//!
+//! [`cache`] is the shared evaluation memo table: every consumer of
+//! accuracy numbers — campaigns, `/v1/select`, the `dse` subsystem — keys
+//! its evaluations by `(network, multiplier, layer scope, images)` so
+//! identical grid points are computed once process-wide.
 
+pub mod cache;
 pub mod campaign;
 pub mod lut;
 
+pub use cache::{EvalCache, EvalKey, Scope};
 pub use campaign::{
-    per_layer_campaign, standard_multipliers, whole_network_campaign, Fig4Point, Fig4Report,
-    MultiplierSummary, Table2Report, Table2Row,
+    per_layer_campaign, per_layer_campaign_cached, standard_multipliers, whole_network_campaign,
+    Fig4Point, Fig4Report, MultiplierSummary, Table2Report, Table2Row,
 };
 pub use lut::{lut_for_entry, lut_from_netlist};

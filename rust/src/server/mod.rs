@@ -13,10 +13,14 @@
 //!   into full engine batches exactly like in-process callers —
 //!   backpressure comes from the batcher/engine, not from the socket
 //!   layer;
-//! * campaign requests become **async jobs** ([`jobs::JobStore`]): the
-//!   submit endpoint returns an id immediately and the campaign fans its
-//!   (multiplier × layer) grid over the deterministic `cgp::campaign`
-//!   pool on its own thread;
+//! * campaign and DSE requests become **async jobs** ([`jobs::JobStore`]):
+//!   the submit endpoint returns an id immediately and the work fans its
+//!   grid over the deterministic `cgp::campaign` pool on its own thread;
+//! * every resilience evaluation — `/v1/select`, campaign jobs, DSE
+//!   probe/verify stages — goes through one shared
+//!   [`crate::resilience::EvalCache`], so identical
+//!   `(network, multiplier, layer scope)` points are computed once per
+//!   server process;
 //! * **graceful shutdown** (`POST /v1/admin/shutdown`, or
 //!   [`ServerHandle::shutdown`]): stop accepting, drain queued
 //!   connections, join workers, drain campaign jobs, then retire the
@@ -31,8 +35,9 @@
 //! | POST | `/v1/predict` | classify `image`/`images` via the batcher |
 //! | GET  | `/v1/library/census` | Table-I counts |
 //! | GET  | `/v1/library/pareto?metric=MAE` | (power, metric) Pareto front |
-//! | GET  | `/v1/select?max_accuracy_drop=D` | autoAx-style pick |
+//! | GET  | `/v1/select?max_accuracy_drop=D` | autoAx-style uniform pick |
 //! | POST | `/v1/campaigns/resilience` | submit a Fig. 4 campaign job |
+//! | POST | `/v1/dse` | submit a heterogeneous per-layer DSE job |
 //! | GET  | `/v1/jobs/{id}` | poll a job |
 //! | POST | `/v1/admin/shutdown` | graceful shutdown |
 
@@ -57,8 +62,11 @@ use crate::circuit::verify::ArithFn;
 use crate::coordinator::batcher::{BatchPolicy, Batcher, BatcherGuard, BatcherStats};
 use crate::coordinator::metrics::Histogram;
 use crate::coordinator::{Coordinator, KernelKind};
+use crate::dse::{run_dse, DseConfig};
 use crate::library::{pareto_indices, Entry, Library};
-use crate::resilience::{per_layer_campaign, standard_multipliers};
+use crate::resilience::{
+    per_layer_campaign_cached, standard_multipliers, EvalCache, EvalKey, MultiplierSummary,
+};
 use crate::runtime::{broadcast_lut, exact_lut, TestSet};
 use crate::util::json::Json;
 
@@ -112,9 +120,10 @@ struct HttpMetrics {
     latency: Histogram,
 }
 
-/// One cached `/v1/select` evaluation: reference accuracy + per-candidate
+/// One `/v1/select` evaluation: reference accuracy + per-candidate
 /// whole-network accuracies (the join of resilience results with the §IV
-/// selection). The quality bound is applied per request against this.
+/// selection). The quality bound is applied per request against this; the
+/// accuracies themselves come from the shared [`EvalCache`].
 struct SelectEval {
     reference_accuracy: f64,
     candidates: Vec<SelectCandidate>,
@@ -138,7 +147,14 @@ struct ServerState {
     batcher: Mutex<Option<Batcher>>,
     batcher_stats: Mutex<Option<BatcherStats>>,
     jobs: JobStore,
-    select_cache: Mutex<HashMap<String, Arc<SelectEval>>>,
+    /// Shared resilience-evaluation memo table: `/v1/select`, campaign
+    /// jobs and DSE runs all key their accuracies through it.
+    cache: EvalCache,
+    /// Memoised multiplier rosters per `limit`. `standard_multipliers`
+    /// is a pure function of the loaded library, and rebuilding a roster
+    /// re-simulates every candidate's 65536-entry LUT — too heavy to
+    /// repeat on the synchronous select path once accuracies are cached.
+    rosters: Mutex<HashMap<usize, Arc<Vec<MultiplierSummary>>>>,
     shutdown: AtomicBool,
     http: HttpMetrics,
     started: Instant,
@@ -210,7 +226,8 @@ impl Server {
             batcher: Mutex::new(Some(batcher)),
             batcher_stats: Mutex::new(None),
             jobs: JobStore::new(),
-            select_cache: Mutex::new(HashMap::new()),
+            cache: EvalCache::new(),
+            rosters: Mutex::new(HashMap::new()),
             shutdown: AtomicBool::new(false),
             http: HttpMetrics::default(),
             started: Instant::now(),
@@ -440,6 +457,7 @@ const ENDPOINTS: &[&str] = &[
     "GET /v1/library/pareto?metric=MAE&width=8&fn=mul",
     "GET /v1/select?max_accuracy_drop=D&model=M&images=N&limit=K",
     "POST /v1/campaigns/resilience",
+    "POST /v1/dse",
     "GET /v1/jobs/{id}",
     "POST /v1/admin/shutdown",
 ];
@@ -455,6 +473,7 @@ fn known_path(p: &[&str]) -> bool {
             | ["v1", "library", "pareto"]
             | ["v1", "select"]
             | ["v1", "campaigns", "resilience"]
+            | ["v1", "dse"]
             | ["v1", "jobs", _]
             | ["v1", "admin", "shutdown"]
     )
@@ -483,6 +502,7 @@ fn dispatch(state: &Arc<ServerState>, req: &http::Request, peer_is_loopback: boo
         ("GET", ["v1", "library", "pareto"]) => handle_pareto(state, &target),
         ("GET", ["v1", "select"]) => handle_select(state, &target),
         ("POST", ["v1", "campaigns", "resilience"]) => handle_campaign(state, &req.body),
+        ("POST", ["v1", "dse"]) => handle_dse(state, &req.body),
         ("GET", ["v1", "jobs", id]) => handle_job(state, id),
         // admin surface is loopback-only: a non-loopback bind must not
         // hand every network peer a remote off-switch
@@ -559,6 +579,30 @@ fn handle_metrics(state: &ServerState) -> Response {
         "evoapprox_campaign_jobs_submitted_total {}",
         state.jobs.submitted()
     );
+    for (name, value) in [
+        ("evoapprox_dse_jobs_total", m.dse_jobs.load(Ordering::Relaxed)),
+        (
+            "evoapprox_dse_probe_evals_total",
+            m.dse_probe_evals.load(Ordering::Relaxed),
+        ),
+        (
+            "evoapprox_dse_search_iterations_total",
+            m.dse_search_iters.load(Ordering::Relaxed),
+        ),
+        (
+            "evoapprox_dse_verify_runs_total",
+            m.dse_verify_runs.load(Ordering::Relaxed),
+        ),
+    ] {
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {value}");
+    }
+    m.dse_duration
+        .render_prometheus("evoapprox_dse_duration_seconds", &mut out);
+    let _ = writeln!(out, "# TYPE evoapprox_eval_cache_entries gauge");
+    let _ = writeln!(out, "evoapprox_eval_cache_entries {}", state.cache.len());
+    let _ = writeln!(out, "# TYPE evoapprox_eval_cache_hits_total counter");
+    let _ = writeln!(out, "evoapprox_eval_cache_hits_total {}", state.cache.hits());
     Response {
         status: 200,
         content_type: "text/plain; version=0.0.4",
@@ -576,6 +620,16 @@ fn body_i64(j: &Json, key: &str, default: i64) -> Result<i64, String> {
         Some(v) => v
             .as_i64()
             .ok_or_else(|| format!("`{key}` must be an integer")),
+    }
+}
+
+/// Optional number body field with the same strictness as [`body_i64`].
+fn body_f64(j: &Json, key: &str, default: f64) -> Result<f64, String> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| format!("`{key}` must be a number")),
     }
 }
 
@@ -734,45 +788,63 @@ fn handle_pareto(state: &ServerState, target: &Target) -> Response {
 }
 
 impl ServerState {
-    /// Compute (or fetch) the `/v1/select` evaluation: whole-network
-    /// accuracy of every roster multiplier on a deterministic synthetic
-    /// split. Inference runs outside the cache lock; two racing misses
-    /// compute twice and agree (the whole pipeline is deterministic).
-    fn select_eval(
-        &self,
-        model: &str,
-        images: usize,
-        limit: usize,
-    ) -> Result<Arc<SelectEval>> {
-        let key = format!("{model}|{images}|{limit}");
-        if let Some(e) = self
-            .select_cache
+    /// Compute the `/v1/select` evaluation: whole-network accuracy of
+    /// every roster multiplier on a deterministic synthetic split. Each
+    /// accuracy goes through the shared [`EvalCache`] keyed by
+    /// `(network, multiplier id, whole-network scope, images)` — the same
+    /// keys campaign jobs and DSE runs use — so identical evaluations are
+    /// computed once per process, whichever endpoint asked first.
+    /// Inference runs outside the cache lock; two racing misses compute
+    /// twice and agree (the whole pipeline is deterministic).
+    /// Fetch (building once) the multiplier roster for `limit`. Built
+    /// outside the lock; racing misses build twice and agree (the roster
+    /// is a pure function of the loaded library).
+    fn roster(&self, limit: usize) -> Result<Arc<Vec<MultiplierSummary>>> {
+        if let Some(r) = self
+            .rosters
             .lock()
-            .expect("select cache poisoned")
-            .get(&key)
+            .expect("roster cache poisoned")
+            .get(&limit)
         {
-            return Ok(e.clone());
+            return Ok(r.clone());
         }
+        let roster = Arc::new(standard_multipliers(Some(&self.library), 10, limit)?);
+        self.rosters
+            .lock()
+            .expect("roster cache poisoned")
+            .insert(limit, roster.clone());
+        Ok(roster)
+    }
+
+    fn select_eval(&self, model: &str, images: usize, limit: usize) -> Result<SelectEval> {
         let n_layers = self
             .coord
             .manifest()
             .model(model)
             .ok_or_else(|| anyhow!("unknown model `{model}`"))?
             .n_conv_layers;
-        let mults = standard_multipliers(Some(&self.library), 10, limit)?;
+        let mults = self.roster(limit)?;
         let testset = TestSet::synthetic(images);
         let imgs = Arc::new(testset.images.clone());
         let accs = map_parallel(
             (0..mults.len()).collect(),
             default_workers(),
             |_, mi, _scratch| {
-                self.coord.accuracy(
-                    model,
-                    self.cfg.kernel,
-                    imgs.clone(),
-                    &testset.labels,
-                    Arc::new(broadcast_lut(&mults[mi].lut, n_layers)),
-                )
+                let m = &mults[mi];
+                let key = if m.is_exact {
+                    EvalKey::whole(model, EvalKey::GOLDEN, images)
+                } else {
+                    EvalKey::whole(model, &m.id, images)
+                };
+                self.cache.get_or_compute(key, || {
+                    self.coord.accuracy(
+                        model,
+                        self.cfg.kernel,
+                        imgs.clone(),
+                        &testset.labels,
+                        Arc::new(broadcast_lut(&m.lut, n_layers)),
+                    )
+                })
             },
         );
         let mut it = accs.into_iter();
@@ -790,15 +862,10 @@ impl ServerState {
                 accuracy_drop: reference_accuracy - acc,
             });
         }
-        let eval = Arc::new(SelectEval {
+        Ok(SelectEval {
             reference_accuracy,
             candidates,
-        });
-        self.select_cache
-            .lock()
-            .expect("select cache poisoned")
-            .insert(key, eval.clone());
-        Ok(eval)
+        })
     }
 }
 
@@ -845,10 +912,10 @@ fn handle_select(state: &ServerState, target: &Target) -> Response {
         Ok(n) => n,
         Err(e) => return Response::error(400, e),
     };
-    // select runs synchronously on an HTTP worker (cached per
-    // (model, images, limit) afterwards), so its worst case is bounded
-    // tighter than the async campaign endpoint's — heavy sweeps belong
-    // on POST /v1/campaigns/resilience
+    // select runs synchronously on an HTTP worker (its accuracies are
+    // memoised in the shared resilience cache afterwards), so its worst
+    // case is bounded tighter than the async campaign endpoint's — heavy
+    // sweeps belong on POST /v1/campaigns/resilience
     if images == 0 || images > 128 || limit == 0 || limit > 16 {
         return Response::error(400, "images must be 1..=128 and limit 1..=16");
     }
@@ -904,7 +971,9 @@ fn handle_campaign(state: &Arc<ServerState>, body: &[u8]) -> Response {
         Ok::<_, String>((
             body_i64(&j, "images", 32)?,
             body_i64(&j, "multipliers", 4)?,
-            body_i64(&j, "jobs", default_workers() as i64)?,
+            // clamp the default: a >64-core host must not fail its own
+            // no-`jobs` requests against the 1..=64 bound below
+            body_i64(&j, "jobs", default_workers().min(64) as i64)?,
         ))
     })() {
         Ok(t) => t,
@@ -920,11 +989,104 @@ fn handle_campaign(state: &Arc<ServerState>, body: &[u8]) -> Response {
     let (images, multipliers, jobs) = (images as usize, multipliers as usize, jobs as usize);
     let st = state.clone();
     let id = state.jobs.submit("resilience", move || {
-        let mults = standard_multipliers(Some(&st.library), 10, multipliers)?;
+        let mults = st.roster(multipliers)?;
         let testset = TestSet::synthetic(images);
-        let report =
-            per_layer_campaign(&st.coord, &model, &mults, &testset, st.cfg.kernel, jobs)?;
+        let report = per_layer_campaign_cached(
+            &st.coord,
+            &model,
+            &mults,
+            &testset,
+            st.cfg.kernel,
+            jobs,
+            Some(&st.cache),
+        )?;
         Ok(report::fig4_to_json(&report))
+    });
+    Response::json(
+        202,
+        Json::obj([
+            ("job", (id as i64).into()),
+            ("status", "queued".into()),
+            ("poll", format!("/v1/jobs/{id}").into()),
+        ]),
+    )
+}
+
+/// Submit a heterogeneous per-layer DSE run as an async job. Body fields
+/// (all optional; defaults come from [`DseConfig::new`], which is what
+/// makes an HTTP run byte-identical to an in-process one): `model`,
+/// `max_accuracy_drop`, `probe_budget` (`"small"|"medium"|"large"` or a
+/// multiplier count), `images`, `candidates`, `budget_points`,
+/// `search_iters`, `jobs`, `seed`.
+fn handle_dse(state: &Arc<ServerState>, body: &[u8]) -> Response {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return Response::error(400, "body is not UTF-8"),
+    };
+    let j = if text.trim().is_empty() {
+        Json::Obj(std::collections::BTreeMap::new())
+    } else {
+        match Json::parse(text) {
+            Ok(j) => j,
+            Err(e) => return Response::error(400, format!("invalid JSON: {e}")),
+        }
+    };
+    let model = match body_str(&j, "model", &state.cfg.model) {
+        Ok(m) => m.to_string(),
+        Err(msg) => return Response::error(400, msg),
+    };
+    if state.coord.manifest().model(&model).is_none() {
+        return Response::error(404, format!("unknown model `{model}`"));
+    }
+    let mut cfg = DseConfig::new(model);
+    cfg.kernel = state.cfg.kernel;
+    // the default worker count is the machine's core count — clamp it so
+    // a >64-thread host doesn't 400 every request that omits `jobs`
+    cfg.jobs = cfg.jobs.min(64);
+    let images = match (|| {
+        cfg.max_accuracy_drop = body_f64(&j, "max_accuracy_drop", cfg.max_accuracy_drop)?;
+        if let Some(v) = j.get("probe_budget") {
+            let text = match (v.as_str(), v.as_i64()) {
+                (Some(s), _) => s.to_string(),
+                (None, Some(n)) => n.to_string(),
+                (None, None) => {
+                    return Err("`probe_budget` must be a string or integer".to_string())
+                }
+            };
+            cfg.probe_multipliers =
+                DseConfig::parse_probe_budget(&text).map_err(|e| e.to_string())?;
+        }
+        cfg.candidates = body_i64(&j, "candidates", cfg.candidates as i64)? as usize;
+        cfg.budget_points = body_i64(&j, "budget_points", cfg.budget_points as i64)? as usize;
+        cfg.search_iters = body_i64(&j, "search_iters", cfg.search_iters as i64)? as u64;
+        cfg.jobs = body_i64(&j, "jobs", cfg.jobs as i64)? as usize;
+        cfg.seed = body_i64(&j, "seed", cfg.seed as i64)? as u64;
+        body_i64(&j, "images", 32)
+    })() {
+        Ok(n) => n,
+        Err(msg) => return Response::error(400, msg),
+    };
+    if !cfg.max_accuracy_drop.is_finite()
+        || cfg.max_accuracy_drop < 0.0
+        || !(1..=128).contains(&images)
+        || !(1..=16).contains(&cfg.candidates)
+        || !(1..=16).contains(&cfg.probe_multipliers)
+        || !(1..=16).contains(&cfg.budget_points)
+        || !(1..=100_000).contains(&cfg.search_iters)
+        || !(1..=64).contains(&cfg.jobs)
+    {
+        return Response::error(
+            400,
+            "bounds: max_accuracy_drop >= 0, images 1..=128, candidates 1..=16, \
+             probe_budget 1..=16, budget_points 1..=16, search_iters 1..=100000, jobs 1..=64",
+        );
+    }
+    let images = images as usize;
+    let st = state.clone();
+    let id = state.jobs.submit("dse", move || {
+        let testset = TestSet::synthetic(images);
+        let report = run_dse(&st.coord, Some(&st.library), &cfg, &testset, &st.cache)?;
+        Ok(report::dse_to_json(&report))
     });
     Response::json(
         202,
@@ -972,6 +1134,7 @@ mod tests {
             vec!["v1", "library", "pareto"],
             vec!["v1", "select"],
             vec!["v1", "campaigns", "resilience"],
+            vec!["v1", "dse"],
             vec!["v1", "jobs", "7"],
             vec!["v1", "admin", "shutdown"],
         ] {

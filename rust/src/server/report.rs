@@ -6,6 +6,7 @@
 //! objects with sorted keys), "the server's campaign result equals the
 //! in-process campaign" can be asserted byte-for-byte.
 
+use crate::dse::{DsePoint, DseReport};
 use crate::library::{Entry, Library};
 use crate::resilience::Fig4Report;
 use crate::util::json::Json;
@@ -28,19 +29,26 @@ pub fn entry_to_json(e: &Entry) -> Json {
 }
 
 /// Table-I census: `{"total": n, "census": [{kind, width, count}…]}`.
+/// Each row also carries the group's `CircuitCost` spread (`area_um2_*`,
+/// `delay_ps_*`) — the paper's Pareto fronts rank on more than power —
+/// while keeping the original fields so existing clients parse unchanged.
 pub fn census_to_json(lib: &Library) -> Json {
     Json::obj([
         ("total", lib.len().into()),
         (
             "census",
             Json::Arr(
-                lib.census()
+                lib.census_rows()
                     .into_iter()
-                    .map(|(kind, width, count)| {
+                    .map(|r| {
                         Json::obj([
-                            ("kind", kind.into()),
-                            ("width", width.into()),
-                            ("count", count.into()),
+                            ("kind", r.kind.into()),
+                            ("width", r.width.into()),
+                            ("count", r.count.into()),
+                            ("area_um2_min", r.area_um2_min.into()),
+                            ("area_um2_max", r.area_um2_max.into()),
+                            ("delay_ps_min", r.delay_ps_min.into()),
+                            ("delay_ps_max", r.delay_ps_max.into()),
                         ])
                     })
                     .collect(),
@@ -77,6 +85,58 @@ pub fn fig4_to_json(r: &Fig4Report) -> Json {
     ])
 }
 
+fn dse_point_to_json(p: &DsePoint) -> Json {
+    Json::obj([
+        (
+            "assignment",
+            Json::Arr(p.assignment.iter().map(|s| s.as_str().into()).collect()),
+        ),
+        ("uniform", p.uniform.into()),
+        ("predicted_drop", p.predicted_drop.into()),
+        ("power_pct", p.power_pct.into()),
+        ("accuracy", p.accuracy.into()),
+        ("accuracy_drop", p.accuracy_drop.into()),
+    ])
+}
+
+/// DSE report: probe/fit statistics, the verified configurations, the
+/// measured front and the uniform baseline. Rendered through here by the
+/// CLI `--out` path, the `/v1/dse` job endpoint and the integration
+/// tests' in-process reference, so HTTP ≡ in-process holds byte-for-byte.
+pub fn dse_to_json(r: &DseReport) -> Json {
+    Json::obj([
+        ("model", r.model.as_str().into()),
+        ("images", r.images.into()),
+        ("max_accuracy_drop", r.max_accuracy_drop.into()),
+        ("reference_accuracy", r.reference_accuracy.into()),
+        (
+            "candidates",
+            Json::Arr(r.candidates.iter().map(|s| s.as_str().into()).collect()),
+        ),
+        ("probe_multipliers", r.probe_multipliers.into()),
+        ("probe_evals", r.probe_evals.into()),
+        ("qor_fit_rmse", r.qor_fit_rmse.into()),
+        ("qor_samples", r.qor_samples.into()),
+        ("search_iters", (r.search_iters as i64).into()),
+        (
+            "verified",
+            Json::Arr(r.verified.iter().map(dse_point_to_json).collect()),
+        ),
+        (
+            "front",
+            Json::Arr(r.front.iter().map(dse_point_to_json).collect()),
+        ),
+        (
+            "best_uniform",
+            r.best_uniform
+                .as_ref()
+                .map(dse_point_to_json)
+                .unwrap_or(Json::Null),
+        ),
+        ("prediction_mae", r.prediction_mae.into()),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +151,54 @@ mod tests {
         assert!(!rows.is_empty());
         assert_eq!(rows[0].req_str("kind").unwrap(), "multiplier");
         assert_eq!(rows[0].req_i64("width").unwrap(), 8);
+        // the CircuitCost spread rides along without disturbing old fields
+        let amin = rows[0].req_f64("area_um2_min").unwrap();
+        let amax = rows[0].req_f64("area_um2_max").unwrap();
+        assert!(0.0 < amin && amin <= amax, "{amin} vs {amax}");
+        assert!(
+            rows[0].req_f64("delay_ps_min").unwrap()
+                <= rows[0].req_f64("delay_ps_max").unwrap()
+        );
+    }
+
+    #[test]
+    fn dse_report_renders_canonically() {
+        use crate::dse::{DsePoint, DseReport};
+        let p = DsePoint {
+            assignment: vec!["exact".into(), "mul8u_0AB3".into()],
+            uniform: false,
+            predicted_drop: 0.01,
+            power_pct: 82.5,
+            accuracy: 0.74,
+            accuracy_drop: 0.0125,
+        };
+        let r = DseReport {
+            model: "resnet8".into(),
+            images: 16,
+            max_accuracy_drop: 0.05,
+            reference_accuracy: 0.7525,
+            candidates: vec!["mul8u_0AB3".into()],
+            probe_multipliers: 1,
+            probe_evals: 15,
+            qor_fit_rmse: 0.002,
+            qor_samples: 14,
+            search_iters: 800,
+            verified: vec![p.clone()],
+            front: vec![p.clone()],
+            best_uniform: None,
+            prediction_mae: 0.0025,
+        };
+        let j = dse_to_json(&r);
+        let s = j.to_string();
+        assert_eq!(Json::parse(&s).unwrap().to_string(), s, "fixed point");
+        assert_eq!(j.req_str("model").unwrap(), "resnet8");
+        assert!(matches!(j.req("best_uniform").unwrap(), Json::Null));
+        let v = j.req_arr("verified").unwrap();
+        assert_eq!(
+            v[0].req_arr("assignment").unwrap()[0].as_str().unwrap(),
+            "exact"
+        );
+        assert_eq!(v[0].req_f64("power_pct").unwrap(), 82.5);
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! Integration: the DSE subsystem end-to-end on the native backend
+//! (synthetic manifest, zero artifacts — runs everywhere, never skips).
+//!
+//! Contracts under test:
+//! * per-layer campaigns are byte-identical for `--jobs 1` vs `--jobs N`,
+//!   and for cold- vs warm-cache runs through the shared
+//!   `resilience::cache`;
+//! * `run_dse` is byte-identical for any worker count, its verified
+//!   heterogeneous front weakly dominates the best uniform pick at the
+//!   same accuracy budget, and repeated runs feed off the shared cache;
+//! * a `POST /v1/dse` job over a real socket returns byte-for-byte the
+//!   JSON an in-process `run_dse` produces.
+
+use std::time::{Duration, Instant};
+
+use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, CoordinatorGuard, KernelKind};
+use evoapproxlib::dse::{run_dse, DseConfig};
+use evoapproxlib::library::Library;
+use evoapproxlib::resilience::{
+    per_layer_campaign, per_layer_campaign_cached, standard_multipliers, EvalCache,
+};
+use evoapproxlib::runtime::TestSet;
+use evoapproxlib::server::report::{dse_to_json, fig4_to_json};
+use evoapproxlib::server::{http, Server, ServerConfig};
+use evoapproxlib::util::json::Json;
+
+const MODEL: &str = "resnet8";
+
+fn native_coordinator() -> (Coordinator, CoordinatorGuard) {
+    let dir = std::env::temp_dir().join("evoapprox_dse_tests_no_artifacts");
+    Coordinator::start(CoordinatorConfig::native(dir)).unwrap()
+}
+
+fn small_cfg() -> DseConfig {
+    let mut cfg = DseConfig::new(MODEL);
+    cfg.candidates = 4;
+    cfg.probe_multipliers = 2;
+    cfg.budget_points = 3;
+    cfg.search_iters = 200;
+    cfg
+}
+
+#[test]
+fn per_layer_campaign_is_jobs_and_cache_invariant() {
+    let (coord, _guard) = native_coordinator();
+    let lib = Library::baseline();
+    let mults = standard_multipliers(Some(&lib), 10, 3).unwrap();
+    let testset = TestSet::synthetic(8);
+
+    let r1 = per_layer_campaign(&coord, MODEL, &mults, &testset, KernelKind::Jnp, 1).unwrap();
+    let r4 = per_layer_campaign(&coord, MODEL, &mults, &testset, KernelKind::Jnp, 4).unwrap();
+    assert_eq!(
+        fig4_to_json(&r1).to_string(),
+        fig4_to_json(&r4).to_string(),
+        "jobs 1 vs jobs 4 must be byte-identical"
+    );
+
+    // cold cache, then warm cache: same bytes, and the warm run actually
+    // answers from the memo table
+    let cache = EvalCache::new();
+    let c1 = per_layer_campaign_cached(
+        &coord, MODEL, &mults, &testset, KernelKind::Jnp, 2, Some(&cache),
+    )
+    .unwrap();
+    assert_eq!(fig4_to_json(&r1).to_string(), fig4_to_json(&c1).to_string());
+    assert!(!cache.is_empty());
+    let hits_before = cache.hits();
+    let c2 = per_layer_campaign_cached(
+        &coord, MODEL, &mults, &testset, KernelKind::Jnp, 3, Some(&cache),
+    )
+    .unwrap();
+    assert_eq!(fig4_to_json(&c1).to_string(), fig4_to_json(&c2).to_string());
+    assert!(
+        cache.hits() >= hits_before + cache.len() as u64,
+        "warm re-run must be answered from the cache: {} hits before, {} after, {} entries",
+        hits_before,
+        cache.hits(),
+        cache.len()
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn dse_is_deterministic_and_front_dominates_best_uniform() {
+    let (coord, _guard) = native_coordinator();
+    let lib = Library::baseline();
+    let cfg = small_cfg();
+    let testset = TestSet::synthetic(12);
+
+    let mut jobs1 = cfg.clone();
+    jobs1.jobs = 1;
+    let r1 = run_dse(&coord, Some(&lib), &jobs1, &testset, &EvalCache::new()).unwrap();
+    let mut jobs8 = cfg.clone();
+    jobs8.jobs = 8;
+    let r8 = run_dse(&coord, Some(&lib), &jobs8, &testset, &EvalCache::new()).unwrap();
+    assert_eq!(
+        dse_to_json(&r1).to_string(),
+        dse_to_json(&r8).to_string(),
+        "jobs 1 vs jobs 8 must be byte-identical"
+    );
+
+    // shape: non-empty front in ascending power, exact anchor verified
+    assert!(!r1.front.is_empty());
+    for w in r1.front.windows(2) {
+        assert!(w[0].power_pct <= w[1].power_pct);
+    }
+    assert!(r1.reference_accuracy > 0.0);
+    assert_eq!(r1.verified[0].assignment[0], "exact");
+    assert_eq!(r1.verified[0].accuracy_drop, 0.0);
+    assert!(r1.probe_evals > 0 && r1.probe_multipliers == 2);
+    assert!(r1.qor_fit_rmse.is_finite() && r1.prediction_mae.is_finite());
+    // every uniform configuration was verified (candidates + exact anchor)
+    let uniforms = r1.verified.iter().filter(|p| p.uniform).count();
+    assert!(uniforms >= r1.candidates.len() + 1, "{uniforms}");
+
+    // the acceptance claim: the verified heterogeneous front weakly
+    // dominates the best uniform pick at the same accuracy budget
+    let bu = r1
+        .best_uniform
+        .as_ref()
+        .expect("the exact anchor guarantees a best uniform");
+    assert!(bu.accuracy_drop <= cfg.max_accuracy_drop + 1e-12);
+    assert!(
+        r1.front.iter().any(|p| {
+            p.accuracy_drop <= bu.accuracy_drop + 1e-12 && p.power_pct <= bu.power_pct + 1e-12
+        }),
+        "no front point weakly dominates the best uniform: {bu:?}\n{:?}",
+        r1.front
+    );
+
+    // a re-run on a shared cache reproduces the bytes and hits the memo
+    let cache = EvalCache::new();
+    let a = run_dse(&coord, Some(&lib), &jobs1, &testset, &cache).unwrap();
+    let hits_before = cache.hits();
+    let b = run_dse(&coord, Some(&lib), &jobs1, &testset, &cache).unwrap();
+    assert_eq!(dse_to_json(&a).to_string(), dse_to_json(&b).to_string());
+    assert_eq!(dse_to_json(&a).to_string(), dse_to_json(&r1).to_string());
+    assert!(cache.hits() > hits_before, "second run must reuse evaluations");
+    coord.shutdown();
+}
+
+#[test]
+fn http_dse_job_matches_in_process_byte_for_byte() {
+    let (coord, _guard) = native_coordinator();
+    let server_cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        ..Default::default()
+    };
+    let handle = Server::start(coord.clone(), Library::baseline(), server_cfg).unwrap();
+    let addr = handle.addr().to_string();
+
+    let body = "{\"images\":8,\"candidates\":3,\"probe_budget\":\"small\",\
+                 \"budget_points\":3,\"search_iters\":200,\"jobs\":3}";
+    let (status, resp) = http::post_json(&addr, "/v1/dse", body).unwrap();
+    assert_eq!(status, 202, "{resp}");
+    let poll = Json::parse(&resp)
+        .unwrap()
+        .req_str("poll")
+        .unwrap()
+        .to_string();
+
+    let deadline = Instant::now() + Duration::from_secs(300);
+    let record = loop {
+        let (status, body) = http::get(&addr, &poll).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let rec = Json::parse(&body).unwrap();
+        match rec.req_str("status").unwrap() {
+            "done" => break rec,
+            "failed" => panic!("dse job failed: {body}"),
+            _ => {
+                assert!(Instant::now() < deadline, "dse job timed out");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+
+    // in-process reference: same defaults (DseConfig::new), same body
+    // overrides, worker count intentionally different (1 vs 3)
+    let mut cfg = DseConfig::new(MODEL);
+    cfg.candidates = 3;
+    cfg.probe_multipliers = DseConfig::parse_probe_budget("small").unwrap();
+    cfg.budget_points = 3;
+    cfg.search_iters = 200;
+    cfg.jobs = 1;
+    let reference = run_dse(
+        &coord,
+        Some(&Library::baseline()),
+        &cfg,
+        &TestSet::synthetic(8),
+        &EvalCache::new(),
+    )
+    .unwrap();
+    let reference_json = dse_to_json(&reference);
+    let got = record.req("result").unwrap();
+    assert_eq!(got, &reference_json, "HTTP vs in-process DSE must agree");
+    assert_eq!(got.to_string(), reference_json.to_string(), "byte-for-byte");
+
+    // bad requests are 4xx, not job submissions
+    let (status, _) = http::post_json(&addr, "/v1/dse", "{\"images\":0}").unwrap();
+    assert_eq!(status, 400);
+    let (status, _) =
+        http::post_json(&addr, "/v1/dse", "{\"probe_budget\":\"huge\"}").unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = http::post_json(&addr, "/v1/dse", "{\"model\":\"nope\"}").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = http::get(&addr, "/v1/dse").unwrap();
+    assert_eq!(status, 405, "GET on a POST route");
+
+    // the DSE counters surface on /metrics, and the census now carries
+    // the CircuitCost spread
+    let (status, metrics) = http::get(&addr, "/metrics").unwrap();
+    assert_eq!(status, 200);
+    // the in-process reference shares the coordinator's registry, so the
+    // counter reads 2 (server job + reference run) — assert >= 1 robustly
+    let dse_jobs: u64 = metrics
+        .lines()
+        .find(|l| l.starts_with("evoapprox_dse_jobs_total"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("no dse jobs counter in {metrics}"));
+    assert!(dse_jobs >= 1, "{metrics}");
+    assert!(metrics.contains("evoapprox_dse_probe_evals_total"));
+    assert!(metrics.contains("evoapprox_dse_search_iterations_total"));
+    assert!(metrics.contains("evoapprox_dse_verify_runs_total"));
+    assert!(metrics.contains("evoapprox_dse_duration_seconds_bucket{le=\"+Inf\"}"));
+    assert!(metrics.contains("evoapprox_eval_cache_entries"));
+    let (status, census) = http::get(&addr, "/v1/library/census").unwrap();
+    assert_eq!(status, 200);
+    let census = Json::parse(&census).unwrap();
+    let row = &census.req_arr("census").unwrap()[0];
+    assert!(row.req_f64("area_um2_min").unwrap() > 0.0);
+    assert!(row.req_f64("delay_ps_max").unwrap() >= row.req_f64("delay_ps_min").unwrap());
+    assert!(row.req_i64("count").unwrap() > 0, "old field still present");
+
+    handle.shutdown();
+    coord.shutdown();
+}
