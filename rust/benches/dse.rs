@@ -18,7 +18,7 @@ use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig};
 use evoapproxlib::dse::{build_space, probe_stage, run_dse, search_stage, DseConfig};
 use evoapproxlib::resilience::{standard_multipliers, EvalCache};
 use evoapproxlib::runtime::TestSet;
-use evoapproxlib::util::bench::{per_second, quick_mode, time_once};
+use evoapproxlib::util::bench::{per_second, quick_mode, time_once, Recorder};
 
 fn main() {
     let quick = quick_mode();
@@ -97,5 +97,11 @@ fn main() {
         cache.hits(),
         cache.len()
     );
+    let mut rec = Recorder::new("dse");
+    rec.record_value("dse/probe", per_second(probe.evals as u64, dt_probe), "evals/s");
+    rec.record_value("dse/search", per_second(search.iters, dt_search), "proposals/s");
+    rec.record_value("dse/verify", per_second(verified as u64, dt_verify), "runs/s");
+    rec.record_value("dse/end-to-end-cold", dt_all.as_secs_f64() * 1e3, "ms");
+    rec.finish().expect("writing bench snapshot");
     coord.shutdown();
 }

@@ -2,13 +2,19 @@
 //! isolation so the optimisation log in EXPERIMENTS.md §Perf has stable
 //! numbers to quote.
 //!
+//!   L2-native — quantized LUT-gather forward pass (the campaign / DSE /
+//!               /v1/predict hot path), batch and single-image
 //!   L3-sim   — bit-parallel exhaustive simulation of an 8×8 multiplier
 //!   L3-cgp   — CGP candidate evaluations/second (the evolution inner loop)
 //!   L3-lut   — netlist → 64 Ki LUT construction
 //!   L3-pjrt  — one PJRT batch through resnet8 (jnp vs pallas artifact)
 //!   L3-batch — dynamic-batcher round trip
 //!
-//! `cargo bench --bench hotpath [-- --quick]`
+//! `cargo bench --bench hotpath [-- --quick] [-- --json BENCH_hotpath.json --label <snapshot>]`
+//!
+//! With `--json`, timed cases are appended to the versioned snapshot
+//! trajectory (`util::bench::Recorder`) so the perf history is recorded,
+//! not asserted.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -19,15 +25,47 @@ use evoapproxlib::circuit::generators::wallace_multiplier;
 use evoapproxlib::circuit::simulator::eval_exhaustive_u64;
 use evoapproxlib::circuit::verify::ArithFn;
 use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, KernelKind};
+use evoapproxlib::data::dataset::{Dataset, DatasetConfig};
 use evoapproxlib::resilience::lut_from_netlist;
+use evoapproxlib::runtime::native::{NativeEngine, SYNTHETIC_SEED};
 use evoapproxlib::runtime::{broadcast_lut, exact_lut};
-use evoapproxlib::util::bench::{bench, per_second, quick_mode};
+use evoapproxlib::util::bench::{bench, per_second, quick_mode, Recorder};
 
 fn main() {
     let quick = quick_mode();
+    let mut rec = Recorder::new("hotpath");
     let samples = if quick { 3 } else { 10 };
     let f = ArithFn::Mul { w: 8 };
     let seed = wallace_multiplier(8);
+
+    // L2-native: the quantized LUT-gather forward pass — every resilience
+    // campaign point, DSE probe and /v1/predict goes through this.
+    {
+        let batch = if quick { 8 } else { 32 };
+        let engine = NativeEngine::synthetic(8, 8, SYNTHETIC_SEED, batch);
+        let ds = Dataset::generate(&DatasetConfig {
+            n: batch,
+            seed: 42,
+            noise: 0.10,
+        });
+        let luts = broadcast_lut(&exact_lut(), engine.n_layers());
+        let name = format!("L2-native/forward-resnet8-b{batch}");
+        let s = bench(&name, 1, samples, || {
+            std::hint::black_box(engine.forward(&ds.images, &luts).unwrap());
+        });
+        let ips = per_second(batch as u64, s.median());
+        println!("  => {ips:.1} images/s");
+        rec.record_throughput(&s, ips, "img/s");
+
+        // single image — the /v1/predict latency floor (no batch to hide in)
+        let one = &ds.images[..engine.image_len()];
+        let s = bench("L2-native/forward-resnet8-b1", 1, samples, || {
+            std::hint::black_box(engine.forward(one, &luts).unwrap());
+        });
+        let ips = per_second(1, s.median());
+        println!("  => {ips:.1} images/s");
+        rec.record_throughput(&s, ips, "img/s");
+    }
 
     // L3-sim: exhaustive 2^16-vector simulation
     let s = bench("L3-sim/exhaustive-mul8 (65536 vec)", 1, samples, || {
@@ -37,6 +75,7 @@ fn main() {
         "  => {:.1} M vector-evals/s",
         per_second(65_536, s.median()) / 1e6
     );
+    rec.record_throughput(&s, per_second(65_536, s.median()), "vec/s");
 
     // L3-cgp: candidate evaluations per second (error metric eval)
     let mut evaluator = Evaluator::exhaustive(f);
@@ -49,6 +88,7 @@ fn main() {
         1.0 / s.median().as_secs_f64(),
         per_second(65_536, s.median()) / 1e6
     );
+    rec.record_throughput(&s, 1.0 / s.median().as_secs_f64(), "evals/s");
     let model = CostModel::default();
     bench("L3-cgp/cost-eval (weighted area)", 2, samples, || {
         std::hint::black_box(evaluator.cost(&chrom, &model));
@@ -80,6 +120,7 @@ fn main() {
             });
         });
         let throughput = (workers * evals_per_worker) as f64 / s.median().as_secs_f64();
+        rec.record_throughput(&s, throughput, "evals/s");
         match baseline {
             None => {
                 baseline = Some(throughput);
@@ -95,9 +136,10 @@ fn main() {
     }
 
     // L3-lut
-    bench("L3-lut/netlist→65536-LUT", 1, samples, || {
+    let s = bench("L3-lut/netlist→65536-LUT", 1, samples, || {
         std::hint::black_box(lut_from_netlist(&seed).unwrap());
     });
+    rec.record(&s);
 
     // L3-pjrt: artifacts needed
     let artifacts = std::env::var("EVOAPPROX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -179,4 +221,6 @@ fn main() {
     } else {
         println!("(skipping PJRT benches — no artifacts; run `make artifacts`)");
     }
+
+    rec.finish().expect("writing bench snapshot");
 }

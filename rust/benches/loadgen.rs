@@ -19,7 +19,7 @@ use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, KernelKind};
 use evoapproxlib::library::Library;
 use evoapproxlib::runtime::{broadcast_lut, exact_lut, TestSet};
 use evoapproxlib::server::{http, Server, ServerConfig};
-use evoapproxlib::util::bench::{per_second, quick_mode};
+use evoapproxlib::util::bench::{per_second, quick_mode, Recorder};
 use evoapproxlib::util::json::Json;
 
 const MODEL: &str = "resnet8";
@@ -127,6 +127,19 @@ fn main() -> anyhow::Result<()> {
         percentile(&latencies, 0.95),
         percentile(&latencies, 0.99),
     );
+    let mut rec = Recorder::new("loadgen");
+    rec.record_value("loadgen/throughput", per_second(served as u64, wall), "req/s");
+    rec.record_value(
+        "loadgen/client-p50",
+        percentile(&latencies, 0.50).as_secs_f64() * 1e6,
+        "us",
+    );
+    rec.record_value(
+        "loadgen/client-p99",
+        percentile(&latencies, 0.99).as_secs_f64() * 1e6,
+        "us",
+    );
+    rec.finish().expect("writing bench snapshot");
     println!(
         "predictions identical to the in-process path: {} / {served} (mismatches {mismatches})",
         served - mismatches

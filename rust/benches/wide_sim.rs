@@ -6,7 +6,7 @@
 //!   wide-char — full library characterisation (metrics + activity +
 //!               functional hash) of a wide seed
 //!
-//! `cargo bench --bench wide_sim [-- --quick]`
+//! `cargo bench --bench wide_sim [-- --quick] [-- --json BENCH_wide_sim.json --label <snapshot>]`
 
 use evoapproxlib::circuit::cost::CostModel;
 use evoapproxlib::circuit::generators::{ripple_carry_adder, wallace_multiplier};
@@ -15,10 +15,11 @@ use evoapproxlib::circuit::verify::{
     per_stratum_for_budget, stratified_vectors_wide, ArithFn,
 };
 use evoapproxlib::library::{Entry, Origin};
-use evoapproxlib::util::bench::{bench, per_second, quick_mode};
+use evoapproxlib::util::bench::{bench, per_second, quick_mode, Recorder};
 
 fn main() {
     let quick = quick_mode();
+    let mut rec = Recorder::new("wide_sim");
     let samples = if quick { 3 } else { 10 };
     let budget = if quick { 2_048 } else { 16_384 };
 
@@ -35,10 +36,9 @@ fn main() {
         let s = bench(&name, 1, samples, || {
             std::hint::black_box(eval_vectors_wide(&netlist, &vecs));
         });
-        println!(
-            "  => {:.2} M vector-evals/s",
-            per_second(vecs.len() as u64, s.median()) / 1e6
-        );
+        let vps = per_second(vecs.len() as u64, s.median());
+        println!("  => {:.2} M vector-evals/s", vps / 1e6);
+        rec.record_throughput(&s, vps, "vec/s");
     }
 
     for w in [64u32, 128] {
@@ -50,10 +50,9 @@ fn main() {
         let s = bench(&name, 1, samples, || {
             std::hint::black_box(eval_vectors_wide(&netlist, &vecs));
         });
-        println!(
-            "  => {:.2} M vector-evals/s",
-            per_second(vecs.len() as u64, s.median()) / 1e6
-        );
+        let vps = per_second(vecs.len() as u64, s.median());
+        println!("  => {:.2} M vector-evals/s", vps / 1e6);
+        rec.record_throughput(&s, vps, "vec/s");
     }
 
     // full characterisation of the flagship width (metrics + activity +
@@ -65,7 +64,7 @@ fn main() {
         (ArithFn::mul(128).unwrap(), wallace_multiplier(128)),
     ] {
         let name = format!("wide-char/{} characterise", f.tag());
-        bench(&name, 1, char_samples, || {
+        let s = bench(&name, 1, char_samples, || {
             std::hint::black_box(Entry::characterise(
                 netlist.clone(),
                 f,
@@ -73,5 +72,8 @@ fn main() {
                 Origin::Seed(netlist.name.clone()),
             ));
         });
+        rec.record(&s);
     }
+
+    rec.finish().expect("writing bench snapshot");
 }

@@ -1,9 +1,15 @@
 //! Bit-parallel logic simulation.
 //!
 //! Evaluation packs 64 test vectors into each `u64` word (lane *i* of every
-//! word belongs to vector *i*), so one sweep over the gate list evaluates 64
-//! input vectors at once — the workhorse that makes exhaustive evaluation of
-//! 8×8-bit multipliers (2¹⁶ vectors) cheap enough for the CGP inner loop.
+//! word belongs to vector *i*), and the gate sweep is additionally
+//! *lane-blocked*: each pass over the gate list evaluates a block of
+//! [`LANE_BLOCK`] packed words (256 vectors) at once. Per-signal state is a
+//! `[u64; LANE_BLOCK]` so the netlist — and every gate node — is walked 4×
+//! less often per vector, the four lane words of a gate evaluate as
+//! independent unrolled chains, and the packing/unpacking boundary is
+//! amortised over the whole block. This is the workhorse that makes
+//! exhaustive evaluation of 8×8-bit multipliers (2¹⁶ vectors) cheap enough
+//! for the CGP inner loop.
 //!
 //! Two evaluation modes mirror the paper (§II-C):
 //! * **exhaustive** — all `2^n_inputs` vectors, used up to
@@ -14,8 +20,17 @@
 //!   through the multi-word variant ([`BitSim::eval_vectors_wide`], up to
 //!   [`MAX_IO_BITS`] = 256 bits — a 128×128-bit multiplier).
 //!
+//! A [`BitSim`] owns all of its buffers — signal words, packed input/output
+//! words and the result vector — and reuses them across calls, so repeated
+//! evaluation (library characterisation, LUT building, verification sweeps)
+//! performs no per-call heap allocation beyond initial growth. The one-shot
+//! helpers at the bottom route through a per-thread shared instance for the
+//! same reason.
+//!
 //! The same sweep also collects per-signal ones-densities, from which the
 //! cost model derives zero-delay switching activities for dynamic power.
+
+use std::cell::RefCell;
 
 use super::netlist::Netlist;
 use super::wide::U256;
@@ -27,9 +42,16 @@ pub const MAX_EXHAUSTIVE_INPUTS: u32 = 20;
 /// Widest primary-input/-output interface of the multi-word sampled path:
 /// four packed words = 256 bits, enough for a 128×128-bit multiplier
 /// (256 inputs, 256 outputs). The bit-parallel sweep itself is
-/// width-agnostic — one 64-lane word per *signal* — so only vector
+/// width-agnostic — one lane block per *signal* — so only vector
 /// packing/unpacking is multi-word.
 pub const MAX_IO_BITS: u32 = 256;
+
+/// Packed 64-lane words evaluated per gate-list sweep (4 words = 256
+/// vectors per pass over the netlist).
+pub const LANE_BLOCK: usize = 4;
+
+/// Vectors evaluated per gate-list sweep.
+const BLOCK_LANES: usize = LANE_BLOCK * 64;
 
 /// Lane patterns for exhaustive enumeration: input `i < 6` toggles with
 /// period `2^i` inside every 64-lane word.
@@ -55,16 +77,33 @@ pub fn exhaustive_input_word(i: u32, w: u64) -> u64 {
     }
 }
 
-/// Reusable simulation scratch (signal values for one 64-vector word).
-/// Keeping it allocated across candidate evaluations removes allocation from
-/// the CGP hot loop.
+/// Validity masks for the first `m` lanes of a block (`0 < m <=`
+/// [`BLOCK_LANES`]).
+#[inline]
+fn valid_masks(m: usize) -> [u64; LANE_BLOCK] {
+    let mut v = [0u64; LANE_BLOCK];
+    for (wi, slot) in v.iter_mut().enumerate() {
+        let lanes = m.saturating_sub(wi * 64).min(64);
+        *slot = if lanes == 64 { !0 } else { (1u64 << lanes) - 1 };
+    }
+    v
+}
+
+/// Reusable simulation scratch: per-signal lane blocks plus packed
+/// input/output words and the result buffer, all retained across calls.
+/// Keeping it allocated across candidate evaluations removes allocation
+/// from the characterisation and LUT-building hot loops.
 #[derive(Debug, Default)]
 pub struct BitSim {
-    sig: Vec<u64>,
+    sig: Vec<[u64; LANE_BLOCK]>,
     /// per-signal count of one-lanes accumulated over `n_vectors`.
     ones: Vec<u64>,
     n_vectors: u64,
     track_activity: bool,
+    in_words: Vec<[u64; LANE_BLOCK]>,
+    out_words: Vec<[u64; LANE_BLOCK]>,
+    result: Vec<u64>,
+    result_wide: Vec<U256>,
 }
 
 impl BitSim {
@@ -72,33 +111,43 @@ impl BitSim {
     /// ones counts (used by the power model, skipped in the CGP hot loop).
     pub fn new(track_activity: bool) -> Self {
         BitSim {
-            sig: Vec::new(),
-            ones: Vec::new(),
-            n_vectors: 0,
             track_activity,
+            ..Default::default()
         }
     }
 
     fn reset(&mut self, n: &Netlist) {
         self.sig.clear();
-        self.sig.resize(n.n_signals() as usize, 0);
+        self.sig.resize(n.n_signals() as usize, [0; LANE_BLOCK]);
         if self.track_activity {
             self.ones.clear();
             self.ones.resize(n.n_signals() as usize, 0);
         }
         self.n_vectors = 0;
+        self.in_words.clear();
+        self.in_words.resize(n.n_inputs as usize, [0; LANE_BLOCK]);
+        self.out_words.clear();
+        self.out_words.resize(n.outputs.len(), [0; LANE_BLOCK]);
     }
 
-    /// Evaluate one packed word: `inputs[i]` is the 64-lane word for primary
-    /// input `i`; `out[j]` receives the word for primary output `j`.
-    /// `valid_lanes` masks how many of the 64 lanes are real vectors.
-    #[inline]
-    fn eval_word_into(&mut self, n: &Netlist, inputs: &[u64], valid_lanes: u64, out: &mut [u64]) {
+    /// Evaluate one lane block: `in_words[i]` holds the packed words for
+    /// primary input `i`, `out_words[j]` receives primary output `j`.
+    /// `valid` masks how many lanes of each word are real vectors.
+    fn eval_block(&mut self, n: &Netlist, valid: &[u64; LANE_BLOCK]) {
         let ni = n.n_inputs as usize;
-        self.sig[..ni].copy_from_slice(inputs);
+        let BitSim {
+            sig,
+            ones,
+            n_vectors,
+            track_activity,
+            in_words,
+            out_words,
+            ..
+        } = self;
+        sig[..ni].copy_from_slice(&in_words[..ni]);
         // Single forward sweep — nodes are topologically ordered by
-        // construction.
-        let (in_sigs, gate_sigs) = self.sig.split_at_mut(ni);
+        // construction. The four words of a gate are independent chains.
+        let (in_sigs, gate_sigs) = sig.split_at_mut(ni);
         for (g, node) in n.nodes.iter().enumerate() {
             let a = if (node.a as usize) < ni {
                 in_sigs[node.a as usize]
@@ -110,22 +159,52 @@ impl BitSim {
             } else {
                 gate_sigs[node.b as usize - ni]
             };
-            gate_sigs[g] = node.kind.eval_word(a, b);
+            let k = node.kind;
+            gate_sigs[g] = [
+                k.eval_word(a[0], b[0]),
+                k.eval_word(a[1], b[1]),
+                k.eval_word(a[2], b[2]),
+                k.eval_word(a[3], b[3]),
+            ];
         }
-        for (j, &o) in n.outputs.iter().enumerate() {
-            out[j] = self.sig[o as usize] & valid_lanes;
+        for (ow, &o) in out_words.iter_mut().zip(n.outputs.iter()) {
+            let s = sig[o as usize];
+            *ow = [
+                s[0] & valid[0],
+                s[1] & valid[1],
+                s[2] & valid[2],
+                s[3] & valid[3],
+            ];
         }
-        if self.track_activity {
-            for (s, &w) in self.sig.iter().enumerate() {
-                self.ones[s] += (w & valid_lanes).count_ones() as u64;
+        if *track_activity {
+            for (acc, w) in ones.iter_mut().zip(sig.iter()) {
+                *acc += (w[0] & valid[0]).count_ones() as u64
+                    + (w[1] & valid[1]).count_ones() as u64
+                    + (w[2] & valid[2]).count_ones() as u64
+                    + (w[3] & valid[3]).count_ones() as u64;
             }
-            self.n_vectors += valid_lanes.count_ones() as u64;
+            *n_vectors += valid.iter().map(|v| v.count_ones() as u64).sum::<u64>();
+        }
+    }
+
+    /// Unpack the first `m` lanes of the current output block into
+    /// `result[base..base+m]` (outputs packed little-endian per vector).
+    fn unpack_block(&mut self, base: usize, m: usize) {
+        let out = &mut self.result[base..base + m];
+        for (lane, slot) in out.iter_mut().enumerate() {
+            let (wi, li) = (lane / 64, lane % 64);
+            let mut val = 0u64;
+            for (j, ow) in self.out_words.iter().enumerate() {
+                val |= ((ow[wi] >> li) & 1) << j;
+            }
+            *slot = val;
         }
     }
 
     /// Exhaustive evaluation: returns the output value (outputs packed
     /// little-endian into a `u64`) for every input index `0..2^n_inputs`.
-    pub fn eval_exhaustive(&mut self, n: &Netlist) -> Vec<u64> {
+    /// The slice borrows this simulator's reusable result buffer.
+    pub fn eval_exhaustive(&mut self, n: &Netlist) -> &[u64] {
         assert!(
             n.n_inputs <= MAX_EXHAUSTIVE_INPUTS,
             "{} inputs exceeds exhaustive limit {MAX_EXHAUSTIVE_INPUTS}; use sampled evaluation",
@@ -134,24 +213,31 @@ impl BitSim {
         assert!(n.outputs.len() <= 64, "more than 64 outputs");
         self.reset(n);
         let n_vec: u64 = 1u64 << n.n_inputs;
-        let n_words = n_vec.div_ceil(64);
-        let valid = if n_vec >= 64 { !0u64 } else { (1u64 << n_vec) - 1 };
-        let mut result = vec![0u64; n_vec as usize];
-        let mut in_words = vec![0u64; n.n_inputs as usize];
-        let mut out_words = vec![0u64; n.outputs.len()];
-        for w in 0..n_words {
+        self.result.clear();
+        self.result.resize(n_vec as usize, 0);
+        let mut base = 0u64;
+        while base < n_vec {
+            let m = (n_vec - base).min(BLOCK_LANES as u64) as usize;
+            let w0 = base / 64;
             for i in 0..n.n_inputs {
-                in_words[i as usize] = exhaustive_input_word(i, w);
+                self.in_words[i as usize] = [
+                    exhaustive_input_word(i, w0),
+                    exhaustive_input_word(i, w0 + 1),
+                    exhaustive_input_word(i, w0 + 2),
+                    exhaustive_input_word(i, w0 + 3),
+                ];
             }
-            self.eval_word_into(n, &in_words, valid, &mut out_words);
-            unpack_outputs(&out_words, w, n_vec, &mut result);
+            self.eval_block(n, &valid_masks(m));
+            self.unpack_block(base as usize, m);
+            base += m as u64;
         }
-        result
+        &self.result
     }
 
     /// Sampled evaluation: `vectors[k]` packs the primary-input values of
-    /// sample `k` (bit `i` = input `i`). Returns one output value per sample.
-    pub fn eval_vectors(&mut self, n: &Netlist, vectors: &[u64]) -> Vec<u64> {
+    /// sample `k` (bit `i` = input `i`). Returns one output value per
+    /// sample, borrowed from the reusable result buffer.
+    pub fn eval_vectors(&mut self, n: &Netlist, vectors: &[u64]) -> &[u64] {
         assert!(
             n.n_inputs <= 64,
             "more than 64 inputs — use eval_vectors_wide"
@@ -161,76 +247,64 @@ impl BitSim {
             "more than 64 outputs — use eval_vectors_wide"
         );
         self.reset(n);
-        let mut result = vec![0u64; vectors.len()];
-        let mut in_words = vec![0u64; n.n_inputs as usize];
-        let mut out_words = vec![0u64; n.outputs.len()];
-        for (w, chunk) in vectors.chunks(64).enumerate() {
-            in_words.iter_mut().for_each(|x| *x = 0);
+        self.result.clear();
+        self.result.resize(vectors.len(), 0);
+        for (blk, chunk) in vectors.chunks(BLOCK_LANES).enumerate() {
+            for w in self.in_words.iter_mut() {
+                *w = [0; LANE_BLOCK];
+            }
             for (lane, &v) in chunk.iter().enumerate() {
-                for i in 0..n.n_inputs as usize {
-                    in_words[i] |= ((v >> i) & 1) << lane;
+                let (wi, li) = (lane / 64, lane % 64);
+                for (i, w) in self.in_words.iter_mut().enumerate() {
+                    w[wi] |= ((v >> i) & 1) << li;
                 }
             }
-            let valid = if chunk.len() == 64 {
-                !0u64
-            } else {
-                (1u64 << chunk.len()) - 1
-            };
-            self.eval_word_into(n, &in_words, valid, &mut out_words);
-            for (lane, slot) in chunk.iter().enumerate().map(|(l, _)| l).zip(
-                result[w * 64..w * 64 + chunk.len()].iter_mut(),
-            ) {
-                let mut val = 0u64;
-                for (j, &ow) in out_words.iter().enumerate() {
-                    val |= ((ow >> lane) & 1) << j;
-                }
-                *slot = val;
-            }
+            self.eval_block(n, &valid_masks(chunk.len()));
+            self.unpack_block(blk * BLOCK_LANES, chunk.len());
         }
-        result
+        &self.result
     }
 
     /// Multi-word sampled evaluation for wide interfaces: `vectors[k]`
     /// packs up to [`MAX_IO_BITS`] primary-input bits of sample `k`
-    /// (bit `i` = input `i`); returns one packed output value per sample.
-    /// This is the path that removes the 64-input/64-output cliff of
-    /// [`BitSim::eval_vectors`] — same single forward sweep, multi-word
-    /// lane packing at the boundary.
-    pub fn eval_vectors_wide(&mut self, n: &Netlist, vectors: &[U256]) -> Vec<U256> {
+    /// (bit `i` = input `i`); returns one packed output value per sample,
+    /// borrowed from the reusable wide result buffer. This is the path
+    /// that removes the 64-input/64-output cliff of
+    /// [`BitSim::eval_vectors`] — same lane-blocked forward sweep,
+    /// multi-word lane packing at the boundary.
+    pub fn eval_vectors_wide(&mut self, n: &Netlist, vectors: &[U256]) -> &[U256] {
         assert!(n.n_inputs <= MAX_IO_BITS, "more than {MAX_IO_BITS} inputs");
         assert!(
             n.outputs.len() <= MAX_IO_BITS as usize,
             "more than {MAX_IO_BITS} outputs"
         );
         self.reset(n);
-        let mut result = vec![U256::ZERO; vectors.len()];
-        let mut in_words = vec![0u64; n.n_inputs as usize];
-        let mut out_words = vec![0u64; n.outputs.len()];
-        for (wi, chunk) in vectors.chunks(64).enumerate() {
-            in_words.iter_mut().for_each(|x| *x = 0);
+        self.result_wide.clear();
+        self.result_wide.resize(vectors.len(), U256::ZERO);
+        for (blk, chunk) in vectors.chunks(BLOCK_LANES).enumerate() {
+            for w in self.in_words.iter_mut() {
+                *w = [0; LANE_BLOCK];
+            }
             for (lane, &v) in chunk.iter().enumerate() {
-                for i in 0..n.n_inputs {
-                    in_words[i as usize] |= v.bit(i) << lane;
+                let (wi, li) = (lane / 64, lane % 64);
+                let vw = v.words();
+                for (i, w) in self.in_words.iter_mut().enumerate() {
+                    w[wi] |= ((vw[i >> 6] >> (i & 63)) & 1) << li;
                 }
             }
-            let valid = if chunk.len() == 64 {
-                !0u64
-            } else {
-                (1u64 << chunk.len()) - 1
-            };
-            self.eval_word_into(n, &in_words, valid, &mut out_words);
-            for (lane, slot) in result[wi * 64..wi * 64 + chunk.len()]
-                .iter_mut()
-                .enumerate()
-            {
+            self.eval_block(n, &valid_masks(chunk.len()));
+            let base = blk * BLOCK_LANES;
+            let out = &mut self.result_wide[base..base + chunk.len()];
+            for (lane, slot) in out.iter_mut().enumerate() {
+                let (wi, li) = (lane / 64, lane % 64);
                 let mut val = U256::ZERO;
-                for (j, &ow) in out_words.iter().enumerate() {
-                    val.or_bit(j as u32, (ow >> lane) & 1);
+                for (j, ow) in self.out_words.iter().enumerate() {
+                    val.or_bit(j as u32, (ow[wi] >> li) & 1);
                 }
                 *slot = val;
             }
         }
-        result
+        &self.result_wide
     }
 
     /// Per-signal ones-density `p` after an activity-tracked run, from which
@@ -263,58 +337,67 @@ impl Activity {
     }
 }
 
-#[inline]
-fn unpack_outputs(out_words: &[u64], w: u64, n_vec: u64, result: &mut [u64]) {
-    let base = w * 64;
-    let lanes = (n_vec - base).min(64);
-    for lane in 0..lanes {
-        let mut val = 0u64;
-        for (j, &ow) in out_words.iter().enumerate() {
-            val |= ((ow >> lane) & 1) << j;
-        }
-        result[(base + lane) as usize] = val;
-    }
+thread_local! {
+    /// Per-thread simulator shared by the one-shot helpers below, so
+    /// repeated helper calls (library ingestion, LUT building, sweeps)
+    /// reuse grown buffers instead of allocating a fresh `BitSim` each
+    /// time.
+    static SHARED: RefCell<BitSim> = RefCell::new(BitSim::new(false));
+    /// Activity-tracking twin of [`SHARED`].
+    static SHARED_ACTIVITY: RefCell<BitSim> = RefCell::new(BitSim::new(true));
 }
 
-/// One-shot exhaustive evaluation (convenience wrapper; tests and
-/// LUT-building use this, the CGP loop reuses a [`BitSim`]).
+/// Run `f` against this thread's shared (non-activity) simulator: borrow
+/// evaluation results without copying them out of the scratch buffer.
+pub fn with_shared_sim<R>(f: impl FnOnce(&mut BitSim) -> R) -> R {
+    SHARED.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// One-shot exhaustive evaluation (convenience wrapper over the shared
+/// per-thread simulator; use [`with_shared_sim`] to avoid the copy-out).
 pub fn eval_exhaustive_u64(n: &Netlist) -> Vec<u64> {
-    BitSim::new(false).eval_exhaustive(n)
+    SHARED.with(|s| s.borrow_mut().eval_exhaustive(n).to_vec())
 }
 
 /// One-shot sampled evaluation.
 pub fn eval_vectors_u64(n: &Netlist, vectors: &[u64]) -> Vec<u64> {
-    BitSim::new(false).eval_vectors(n, vectors)
+    SHARED.with(|s| s.borrow_mut().eval_vectors(n, vectors).to_vec())
 }
 
 /// One-shot multi-word sampled evaluation (wide interfaces).
 pub fn eval_vectors_wide(n: &Netlist, vectors: &[U256]) -> Vec<U256> {
-    BitSim::new(false).eval_vectors_wide(n, vectors)
+    SHARED.with(|s| s.borrow_mut().eval_vectors_wide(n, vectors).to_vec())
 }
 
 /// Multi-word sampled evaluation with activity collection (wide power
 /// estimation path).
 pub fn activity_vectors_wide(n: &Netlist, vectors: &[U256]) -> (Vec<U256>, Activity) {
-    let mut sim = BitSim::new(true);
-    let table = sim.eval_vectors_wide(n, vectors);
-    let act = sim.activity();
-    (table, act)
+    SHARED_ACTIVITY.with(|s| {
+        let mut sim = s.borrow_mut();
+        let table = sim.eval_vectors_wide(n, vectors).to_vec();
+        let act = sim.activity();
+        (table, act)
+    })
 }
 
 /// Exhaustive evaluation with activity collection (power estimation path).
 pub fn activity_exhaustive(n: &Netlist) -> (Vec<u64>, Activity) {
-    let mut sim = BitSim::new(true);
-    let table = sim.eval_exhaustive(n);
-    let act = sim.activity();
-    (table, act)
+    SHARED_ACTIVITY.with(|s| {
+        let mut sim = s.borrow_mut();
+        let table = sim.eval_exhaustive(n).to_vec();
+        let act = sim.activity();
+        (table, act)
+    })
 }
 
 /// Sampled evaluation with activity collection.
 pub fn activity_vectors(n: &Netlist, vectors: &[u64]) -> (Vec<u64>, Activity) {
-    let mut sim = BitSim::new(true);
-    let table = sim.eval_vectors(n, vectors);
-    let act = sim.activity();
-    (table, act)
+    SHARED_ACTIVITY.with(|s| {
+        let mut sim = s.borrow_mut();
+        let table = sim.eval_vectors(n, vectors).to_vec();
+        let act = sim.activity();
+        (table, act)
+    })
 }
 
 #[cfg(test)]
@@ -326,6 +409,16 @@ mod tests {
         let mut n = Netlist::new(2, "xor2");
         let g = n.push(GateKind::Xor, 0, 1);
         n.output(g);
+        n
+    }
+
+    fn par7() -> Netlist {
+        let mut n = Netlist::new(7, "par7");
+        let mut acc = n.input(0);
+        for i in 1..7 {
+            acc = n.push(GateKind::Xor, acc, i);
+        }
+        n.output(acc);
         n
     }
 
@@ -343,15 +436,10 @@ mod tests {
 
     #[test]
     fn sampled_partial_word_and_multiword() {
-        // 7-input parity circuit, 130 samples (crosses a word boundary and
-        // ends mid-word).
-        let mut n = Netlist::new(7, "par7");
-        let mut acc = n.input(0);
-        for i in 1..7 {
-            acc = n.push(GateKind::Xor, acc, i);
-        }
-        n.output(acc);
-        let vecs: Vec<u64> = (0..130).map(|k| (k * 37) % 128).collect();
+        // 7-input parity circuit, 300 samples (crosses word boundaries AND
+        // the 256-lane block boundary, ending mid-word).
+        let n = par7();
+        let vecs: Vec<u64> = (0..300).map(|k| (k * 37) % 128).collect();
         let got = eval_vectors_u64(&n, &vecs);
         for (k, &v) in vecs.iter().enumerate() {
             assert_eq!(got[k], (v.count_ones() as u64) & 1, "sample {k}");
@@ -360,7 +448,8 @@ mod tests {
 
     #[test]
     fn exhaustive_input_patterns_enumerate_all_vectors() {
-        // inputs reproduced as outputs must enumerate 0..2^n in order
+        // inputs reproduced as outputs must enumerate 0..2^n in order;
+        // 8 inputs = 256 vectors = exactly one lane block.
         let mut n = Netlist::new(8, "id8");
         for i in 0..8 {
             n.output(i);
@@ -369,6 +458,42 @@ mod tests {
         assert_eq!(t.len(), 256);
         for (i, &v) in t.iter().enumerate() {
             assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn exhaustive_multi_block_enumerates_in_order() {
+        // 10 inputs = 1024 vectors = four full lane blocks.
+        let mut n = Netlist::new(10, "id10");
+        for i in 0..10 {
+            n.output(i);
+        }
+        let t = eval_exhaustive_u64(&n);
+        assert_eq!(t.len(), 1024);
+        for (i, &v) in t.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_circuits_and_modes() {
+        // One simulator instance driven through shrinking/growing circuits
+        // and all three modes — stale buffer contents must never leak.
+        let mut sim = BitSim::new(false);
+        let x = xor2();
+        let n = par7();
+        assert_eq!(sim.eval_exhaustive(&x).to_vec(), vec![0, 1, 1, 0]);
+        let vecs: Vec<u64> = (0..300).map(|k| (k * 37) % 128).collect();
+        let got = sim.eval_vectors(&n, &vecs).to_vec();
+        for (k, &v) in vecs.iter().enumerate() {
+            assert_eq!(got[k], (v.count_ones() as u64) & 1, "sample {k}");
+        }
+        // back to the small circuit on the same (now larger) buffers
+        assert_eq!(sim.eval_exhaustive(&x).to_vec(), vec![0, 1, 1, 0]);
+        let wide_vecs: Vec<U256> = vecs.iter().map(|&v| U256::from_u64(v)).collect();
+        let wide = sim.eval_vectors_wide(&n, &wide_vecs).to_vec();
+        for (k, &v) in vecs.iter().enumerate() {
+            assert_eq!(wide[k], U256::from_u64((v.count_ones() as u64) & 1));
         }
     }
 
@@ -413,7 +538,7 @@ mod tests {
             n.output(i);
         }
         let mut vecs = Vec::new();
-        for k in 0..130u32 {
+        for k in 0..300u32 {
             let mut v = U256::ZERO;
             // deterministic sparse pattern touching every word
             for bit in [k % 200, (k * 37) % 200, (k * 71 + 199) % 200] {
@@ -427,15 +552,11 @@ mod tests {
 
     #[test]
     fn wide_matches_narrow_on_narrow_circuits() {
-        // 7-input parity, 130 samples (crosses a word boundary and ends
-        // mid-word): the wide path must agree bit-for-bit with eval_vectors.
-        let mut n = Netlist::new(7, "par7");
-        let mut acc = n.input(0);
-        for i in 1..7 {
-            acc = n.push(GateKind::Xor, acc, i);
-        }
-        n.output(acc);
-        let narrow_vecs: Vec<u64> = (0..130).map(|k| (k * 37) % 128).collect();
+        // 7-input parity, 300 samples (crosses word and block boundaries,
+        // ends mid-word): the wide path must agree bit-for-bit with
+        // eval_vectors.
+        let n = par7();
+        let narrow_vecs: Vec<u64> = (0..300).map(|k| (k * 37) % 128).collect();
         let wide_vecs: Vec<U256> = narrow_vecs.iter().map(|&v| U256::from_u64(v)).collect();
         let narrow = eval_vectors_u64(&n, &narrow_vecs);
         let wide = eval_vectors_wide(&n, &wide_vecs);

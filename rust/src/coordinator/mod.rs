@@ -129,6 +129,10 @@ pub struct CoordinatorConfig {
     pub artifacts_dir: PathBuf,
     /// Backend selection policy.
     pub backend: Backend,
+    /// Intra-batch worker count applied to native engines (per-image
+    /// decomposition with an ordered merge — byte-identical for any
+    /// value; see `NativeEngine::with_intra_jobs`). `1` = inline.
+    pub intra_jobs: usize,
 }
 
 impl CoordinatorConfig {
@@ -137,12 +141,19 @@ impl CoordinatorConfig {
         CoordinatorConfig {
             artifacts_dir: dir.into(),
             backend: Backend::Auto,
+            intra_jobs: 1,
         }
     }
 
     /// Force a backend.
     pub fn with_backend(mut self, backend: Backend) -> Self {
         self.backend = backend;
+        self
+    }
+
+    /// Set the native engines' intra-batch worker count (`0` clamps to 1).
+    pub fn with_intra_jobs(mut self, jobs: usize) -> Self {
+        self.intra_jobs = jobs.max(1);
         self
     }
 
@@ -163,6 +174,7 @@ pub struct Coordinator {
     backend: Backend,
     artifacts_dir: Arc<PathBuf>,
     natives: Arc<Mutex<HashMap<String, Arc<NativeEngine>>>>,
+    intra_jobs: usize,
 }
 
 impl Coordinator {
@@ -228,6 +240,7 @@ impl Coordinator {
                 backend,
                 artifacts_dir: Arc::new(cfg.artifacts_dir),
                 natives: Arc::new(Mutex::new(HashMap::new())),
+                intra_jobs: cfg.intra_jobs.max(1),
             },
             CoordinatorGuard {
                 tx: Some(tx),
@@ -268,7 +281,9 @@ impl Coordinator {
             .manifest
             .model(model)
             .ok_or_else(|| anyhow!("unknown model `{model}`"))?;
-        let engine = Arc::new(NativeEngine::for_model(self.artifacts_dir.as_ref(), meta)?);
+        let mut built = NativeEngine::for_model(self.artifacts_dir.as_ref(), meta)?;
+        built.set_intra_jobs(self.intra_jobs);
+        let engine = Arc::new(built);
         cache.insert(model.to_string(), engine.clone());
         Ok(engine)
     }

@@ -4,8 +4,7 @@ use crate::circuit::cost::{CircuitCost, CostModel};
 use crate::circuit::gate::GateKind;
 use crate::circuit::netlist::{Netlist, Node};
 use crate::circuit::simulator::{
-    activity_exhaustive, activity_vectors, activity_vectors_wide, eval_exhaustive_u64,
-    eval_vectors_u64, eval_vectors_wide,
+    activity_exhaustive, activity_vectors, activity_vectors_wide, with_shared_sim,
 };
 use crate::circuit::verify::{stratified_vectors, wide_characterisation_vectors, ArithFn};
 use crate::cgp::metrics::{ErrorMetrics, RelativeErrors};
@@ -186,19 +185,23 @@ impl Entry {
     }
 
     /// Functional hash — same id ⇔ same behaviour on the evaluation set.
+    /// Hashes straight out of the per-thread simulator scratch: no result
+    /// copy, no per-call `BitSim` allocation.
     pub fn functional_hash(&self) -> u64 {
         if self.f.exhaustive_feasible() {
-            fnv1a(eval_exhaustive_u64(&self.netlist).iter().copied())
+            with_shared_sim(|sim| fnv1a(sim.eval_exhaustive(&self.netlist).iter().copied()))
         } else if self.f.is_narrow() {
             let vecs = stratified_vectors(self.f, 16, 0x11B);
-            fnv1a(eval_vectors_u64(&self.netlist, &vecs).iter().copied())
+            with_shared_sim(|sim| fnv1a(sim.eval_vectors(&self.netlist, &vecs).iter().copied()))
         } else {
             let vecs = wide_characterisation_vectors(self.f);
-            fnv1a(
-                eval_vectors_wide(&self.netlist, &vecs)
-                    .iter()
-                    .flat_map(|v| v.words()),
-            )
+            with_shared_sim(|sim| {
+                fnv1a(
+                    sim.eval_vectors_wide(&self.netlist, &vecs)
+                        .iter()
+                        .flat_map(|v| v.words()),
+                )
+            })
         }
     }
 

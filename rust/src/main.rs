@@ -179,6 +179,7 @@ const COMMANDS: &[CommandSpec] = &[
             FlagSpec { name: "library", value: Some("FILE"), help: "library JSON backing the query endpoints (default: built-in baselines)" },
             FlagSpec { name: "max-wait-ms", value: Some("MS"), help: "batching deadline (default 20)" },
             FlagSpec { name: "max-batch", value: Some("N"), help: "max images per dispatched batch (default 64)" },
+            FlagSpec { name: "intra-jobs", value: Some("N"), help: "worker threads inside one native forward batch (default 1)" },
         ],
     },
 ];
@@ -714,8 +715,11 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
     use std::time::Duration;
 
     let dir = artifacts_dir(cli);
-    let (coord, _guard) =
-        Coordinator::start(CoordinatorConfig::new(&dir).with_backend(backend(cli)?))?;
+    let (coord, _guard) = Coordinator::start(
+        CoordinatorConfig::new(&dir)
+            .with_backend(backend(cli)?)
+            .with_intra_jobs(cli.flag("intra-jobs", 1usize)?),
+    )?;
     let library = match cli.get("library") {
         Some(path) => Library::load(path)?,
         None => Library::baseline(),

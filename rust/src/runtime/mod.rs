@@ -23,6 +23,7 @@
 
 pub mod manifest;
 pub mod native;
+pub mod scratch;
 
 use std::path::{Path, PathBuf};
 

@@ -31,11 +31,18 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::accel::ResNetSpec;
+use crate::cgp::campaign::map_parallel;
 use crate::data::dataset::{Dataset, DatasetConfig, IMAGE_SIZE, N_CHANNELS, N_CLASSES};
 use crate::data::rng::SplitMix64;
 
 use super::manifest::{ArtifactMeta, LayerMeta, Manifest, ModelMeta};
+use super::scratch::{with_conv_scratch, ConvScratch};
 use super::{EngineBackend, LUT_LEN};
+
+/// Output positions per im2col/gather-GEMM block: the register-tile height
+/// of the tiled conv (4 positions × 4 output channels = 16 independent
+/// accumulator chains per `k` step).
+const POS_BLOCK: usize = 4;
 
 /// Round half-to-even (numpy/jnp `round` semantics; Rust's `f32::round`
 /// rounds half away from zero, which would drift from the Python oracle on
@@ -186,6 +193,8 @@ pub struct NativeEngine {
     dense_w: Vec<f32>,
     /// Dense head bias.
     dense_b: Vec<f32>,
+    /// Intra-batch worker count for `forward` (1 = inline on the caller).
+    jobs: usize,
 }
 
 /// SAME-padding geometry: output extent and low-side padding for one axis
@@ -260,7 +269,28 @@ impl NativeEngine {
             blocks,
             dense_w,
             dense_b,
+            jobs: 1,
         })
+    }
+
+    /// Intra-batch parallelism for [`NativeEngine::forward`]: the batch is
+    /// decomposed per image and fanned across this many `cgp::campaign`
+    /// pool workers with a submission-ordered merge, so `jobs = 1` and
+    /// `jobs = N` produce byte-identical logits. Builder form; `0` clamps
+    /// to 1 (inline, no pool).
+    pub fn with_intra_jobs(mut self, jobs: usize) -> NativeEngine {
+        self.set_intra_jobs(jobs);
+        self
+    }
+
+    /// In-place form of [`NativeEngine::with_intra_jobs`].
+    pub fn set_intra_jobs(&mut self, jobs: usize) {
+        self.jobs = jobs.max(1);
+    }
+
+    /// Currently configured intra-batch worker count.
+    pub fn intra_jobs(&self) -> usize {
+        self.jobs
     }
 
     /// The conv layers (read-only view, used by tests).
@@ -454,9 +484,9 @@ impl NativeEngine {
         }
     }
 
-    /// Full forward pass: `images` is any whole number of images; `luts`
-    /// one 65536-entry row per conv layer. Returns `n × n_classes` logits.
-    pub fn forward(&self, images: &[f32], luts: &[i32]) -> Result<Vec<f32>> {
+    /// Shared `forward`/`forward_reference` buffer validation; returns the
+    /// image count.
+    fn validate_forward(&self, images: &[f32], luts: &[i32]) -> Result<usize> {
         let il = self.image_dims.0 * self.image_dims.1 * self.image_dims.2;
         if il == 0 || images.len() % il != 0 {
             bail!(
@@ -472,7 +502,74 @@ impl NativeEngine {
                 self.layers.len()
             );
         }
-        let b = images.len() / il;
+        Ok(images.len() / il)
+    }
+
+    /// High-water activation plane size (floats per image) across the
+    /// layer chain — the scratch planes grow to this once and never again.
+    fn max_activation_len(&self) -> usize {
+        let (mut h, mut w, c) = self.image_dims;
+        let mut best = h * w * c;
+        for q in &self.layers {
+            let (ho, _) = same_geometry(h, q.kh, q.stride);
+            let (wo, _) = same_geometry(w, q.kw, q.stride);
+            best = best.max(ho * wo * q.cout);
+            h = ho;
+            w = wo;
+        }
+        best
+    }
+
+    /// Full forward pass: `images` is any whole number of images; `luts`
+    /// one 65536-entry row per conv layer. Returns `n × n_classes` logits.
+    ///
+    /// This is the tiled gather-GEMM path (DESIGN.md §9): each image runs
+    /// through a reusable per-thread [`ConvScratch`] arena — ping/pong
+    /// activation planes swapped by pointer, zero per-layer heap
+    /// allocation — and every conv is a cache-blocked 4-position ×
+    /// 4-channel register-tiled LUT gather. With
+    /// [`NativeEngine::with_intra_jobs`] `> 1` the batch additionally fans
+    /// out per image over the deterministic `cgp::campaign` pool
+    /// (submission-ordered merge), so the worker count is unobservable in
+    /// the output. Bit-identical to [`NativeEngine::forward_reference`] —
+    /// enforced by the regression suite, not just asserted here.
+    pub fn forward(&self, images: &[f32], luts: &[i32]) -> Result<Vec<f32>> {
+        let b = self.validate_forward(images, luts)?;
+        let il = self.image_len();
+        let nc = self.n_classes;
+        let mut logits = vec![0.0f32; b * nc];
+        if b == 0 || nc == 0 {
+            return Ok(logits);
+        }
+        let jobs = self.jobs.min(b);
+        if jobs <= 1 {
+            with_conv_scratch(|s| {
+                for (bi, row) in logits.chunks_exact_mut(nc).enumerate() {
+                    self.forward_one(&images[bi * il..(bi + 1) * il], luts, s, row);
+                }
+            });
+        } else {
+            let rows = map_parallel((0..b).collect(), jobs, |_, bi, _| {
+                with_conv_scratch(|s| {
+                    let mut row = vec![0.0f32; nc];
+                    self.forward_one(&images[bi * il..(bi + 1) * il], luts, s, &mut row);
+                    row
+                })
+            });
+            for (row, dst) in rows.iter().zip(logits.chunks_exact_mut(nc)) {
+                dst.copy_from_slice(row);
+            }
+        }
+        Ok(logits)
+    }
+
+    /// Reference (pre-tiling) forward pass, retained verbatim as the
+    /// bit-exactness oracle for [`NativeEngine::forward`]: the regression
+    /// suite asserts the two agree to the last bit on synthetic and
+    /// fixture engines under arbitrary LUTs. Allocates per layer — use
+    /// `forward` everywhere else.
+    pub fn forward_reference(&self, images: &[f32], luts: &[i32]) -> Result<Vec<f32>> {
+        let b = self.validate_forward(images, luts)?;
         let (h, dims) = run_topology(&self.blocks, images.to_vec(), self.image_dims, |li, x, d| {
             self.quant_conv(li, &x, b, d, &luts[li * LUT_LEN..(li + 1) * LUT_LEN])
         });
@@ -501,9 +598,310 @@ impl NativeEngine {
         Ok(logits)
     }
 
+    /// One image through stem → residual blocks → GAP → dense head,
+    /// entirely inside the scratch arena. `logits` receives this image's
+    /// `n_classes` row.
+    fn forward_one(&self, image: &[f32], luts: &[i32], s: &mut ConvScratch, logits: &mut [f32]) {
+        let max_len = self.max_activation_len();
+        let ConvScratch {
+            codes,
+            patch,
+            bases,
+            ping,
+            pong,
+            shortcut,
+            gap,
+        } = s;
+        if ping.len() < max_len {
+            ping.resize(max_len, 0.0);
+        }
+        if pong.len() < max_len {
+            pong.resize(max_len, 0.0);
+        }
+        if shortcut.len() < max_len {
+            shortcut.resize(max_len, 0.0);
+        }
+        let (mut cur, mut next) = (ping, pong);
+
+        // stem conv straight out of the caller's image slice (no input
+        // copy), then relu
+        let mut dims = self.image_dims;
+        dims = self.conv_image(
+            0,
+            image,
+            dims,
+            &luts[..LUT_LEN],
+            codes,
+            patch,
+            bases,
+            &mut next[..],
+        );
+        std::mem::swap(&mut cur, &mut next);
+        relu(&mut cur[..plane_len(dims)]);
+
+        let mut li = 1;
+        for blk in &self.blocks {
+            let idims = dims;
+            let in_len = plane_len(idims);
+            shortcut[..in_len].copy_from_slice(&cur[..in_len]);
+            // conv1 + relu
+            let lut = &luts[li * LUT_LEN..(li + 1) * LUT_LEN];
+            dims = self.conv_image(
+                li,
+                &cur[..plane_len(dims)],
+                dims,
+                lut,
+                codes,
+                patch,
+                bases,
+                &mut next[..],
+            );
+            std::mem::swap(&mut cur, &mut next);
+            li += 1;
+            relu(&mut cur[..plane_len(dims)]);
+            // conv2 (its relu is fused into the shortcut add below)
+            let lut = &luts[li * LUT_LEN..(li + 1) * LUT_LEN];
+            dims = self.conv_image(
+                li,
+                &cur[..plane_len(dims)],
+                dims,
+                lut,
+                codes,
+                patch,
+                bases,
+                &mut next[..],
+            );
+            std::mem::swap(&mut cur, &mut next);
+            li += 1;
+            // fused option-A shortcut: subsample + zero-pad + add + relu,
+            // with no materialised shortcut tensor
+            add_shortcut_a_relu(
+                &mut cur[..plane_len(dims)],
+                &shortcut[..in_len],
+                idims,
+                blk.stride,
+                blk.cout,
+            );
+        }
+
+        // global average pool — channel-major, 4-wide unrolled: each
+        // channel keeps its ascending-position f32 addition order, so the
+        // sums are bit-identical to the reference loop nest
+        let (ho, wo, c) = dims;
+        let hw = ho * wo;
+        let h = &cur[..hw * c];
+        if gap.len() < c {
+            gap.resize(c, 0.0);
+        }
+        let gap = &mut gap[..c];
+        gap.fill(0.0);
+        for p in 0..hw {
+            let row = &h[p * c..(p + 1) * c];
+            let mut ch = 0;
+            while ch + 4 <= c {
+                gap[ch] += row[ch];
+                gap[ch + 1] += row[ch + 1];
+                gap[ch + 2] += row[ch + 2];
+                gap[ch + 3] += row[ch + 3];
+                ch += 4;
+            }
+            while ch < c {
+                gap[ch] += row[ch];
+                ch += 1;
+            }
+        }
+        // dense head, feature-major with all classes live in `logits`:
+        // each class still sums bias + ascending-feature products, i.e.
+        // the exact f32 sequence of the class-major reference
+        let inv = 1.0 / hw as f32;
+        logits.copy_from_slice(&self.dense_b);
+        for (f, g) in gap.iter().enumerate() {
+            let gv = g * inv;
+            let wrow = &self.dense_w[f * self.n_classes..(f + 1) * self.n_classes];
+            for (l, &wv) in logits.iter_mut().zip(wrow) {
+                *l += gv * wv;
+            }
+        }
+    }
+
+    /// One quantised LUT convolution for a single image, writing into the
+    /// caller's output plane. Same algebra as
+    /// [`NativeEngine::quant_conv`] (the retained scalar reference),
+    /// restructured as a cache-blocked tiled gather-GEMM:
+    ///
+    /// * output positions go in blocks of [`POS_BLOCK`]; each block's
+    ///   im2col patch rows (zero-point padded), operand sums and LUT row
+    ///   bases (`code << 8`) are precomputed once;
+    /// * output channels are walked in 4-wide register tiles: one weight
+    ///   code load feeds all [`POS_BLOCK`] positions, giving a 4×4 tile
+    ///   of 16 independent i32 accumulator chains per `k` step and
+    ///   bounds-check-free `&[i32; 256]` row gathers;
+    /// * i32 accumulation is order-free (exact), and dequantisation uses
+    ///   the reference f32 expression verbatim per output — so the tiling
+    ///   cannot change a single output bit.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_image(
+        &self,
+        li: usize,
+        x: &[f32],
+        (h, w, cin): (usize, usize, usize),
+        lut: &[i32],
+        codes: &mut Vec<u8>,
+        patch: &mut Vec<u8>,
+        bases: &mut Vec<u32>,
+        out: &mut [f32],
+    ) -> (usize, usize, usize) {
+        let q = &self.layers[li];
+        debug_assert_eq!(cin, q.cin);
+        // fake-quant boundary (same op, same element order as the
+        // reference)
+        codes.clear();
+        codes.extend(x.iter().map(|&v| quantize_code(v, q.s_a, q.z_a)));
+        let (ho, pad_top) = same_geometry(h, q.kh, q.stride);
+        let (wo, pad_left) = same_geometry(w, q.kw, q.stride);
+        let cout = q.cout;
+        let k = q.kh * q.kw * cin;
+        if patch.len() < POS_BLOCK * k {
+            patch.resize(POS_BLOCK * k, 0);
+        }
+        if bases.len() < POS_BLOCK * k {
+            bases.resize(POS_BLOCK * k, 0);
+        }
+        let za_f = q.z_a as f32;
+        let zw_f = q.z_w as f32;
+        let k_za_zw = (k as f32 * za_f) * zw_f;
+        let scale = q.s_a * q.s_w;
+        let pad_code = q.z_a as u8;
+        let n_pos = ho * wo;
+        let mut a_sums = [0.0f32; POS_BLOCK];
+        let mut p0 = 0;
+        while p0 < n_pos {
+            let pb = (n_pos - p0).min(POS_BLOCK);
+            // im2col one block: patch rows, operand sums, LUT row bases
+            for slot in 0..pb {
+                let p = p0 + slot;
+                let (oy, ox) = (p / wo, p % wo);
+                let prow = &mut patch[slot * k..(slot + 1) * k];
+                for ki in 0..q.kh {
+                    let iy = (oy * q.stride + ki) as isize - pad_top as isize;
+                    let row_ok = iy >= 0 && iy < h as isize;
+                    for kj in 0..q.kw {
+                        let ix = (ox * q.stride + kj) as isize - pad_left as isize;
+                        let dst = &mut prow[(ki * q.kw + kj) * cin..][..cin];
+                        if row_ok && ix >= 0 && ix < w as isize {
+                            let src = (iy as usize * w + ix as usize) * cin;
+                            dst.copy_from_slice(&codes[src..src + cin]);
+                        } else {
+                            dst.fill(pad_code);
+                        }
+                    }
+                }
+                let mut a_sum = 0i32;
+                for (base, &code) in bases[slot * k..(slot + 1) * k].iter_mut().zip(prow.iter()) {
+                    a_sum += code as i32;
+                    *base = (code as u32) << 8;
+                }
+                a_sums[slot] = a_sum as f32;
+            }
+            if pb == POS_BLOCK {
+                let (b0, b1, b2, b3) = (
+                    &bases[..k],
+                    &bases[k..2 * k],
+                    &bases[2 * k..3 * k],
+                    &bases[3 * k..4 * k],
+                );
+                let mut n0 = 0;
+                while n0 + 4 <= cout {
+                    let mut acc = [[0i32; 4]; POS_BLOCK];
+                    for kk in 0..k {
+                        let wrow = &q.w_q[kk * cout + n0..][..4];
+                        let (w0, w1, w2, w3) = (
+                            wrow[0] as usize,
+                            wrow[1] as usize,
+                            wrow[2] as usize,
+                            wrow[3] as usize,
+                        );
+                        let r0 = lut_row(lut, b0[kk]);
+                        let r1 = lut_row(lut, b1[kk]);
+                        let r2 = lut_row(lut, b2[kk]);
+                        let r3 = lut_row(lut, b3[kk]);
+                        acc[0][0] += r0[w0];
+                        acc[0][1] += r0[w1];
+                        acc[0][2] += r0[w2];
+                        acc[0][3] += r0[w3];
+                        acc[1][0] += r1[w0];
+                        acc[1][1] += r1[w1];
+                        acc[1][2] += r1[w2];
+                        acc[1][3] += r1[w3];
+                        acc[2][0] += r2[w0];
+                        acc[2][1] += r2[w1];
+                        acc[2][2] += r2[w2];
+                        acc[2][3] += r2[w3];
+                        acc[3][0] += r3[w0];
+                        acc[3][1] += r3[w1];
+                        acc[3][2] += r3[w2];
+                        acc[3][3] += r3[w3];
+                    }
+                    for (slot, acc4) in acc.iter().enumerate() {
+                        let orow = &mut out[(p0 + slot) * cout..][..cout];
+                        dequant4(q, acc4, n0, a_sums[slot], zw_f, za_f, k_za_zw, scale, orow);
+                    }
+                    n0 += 4;
+                }
+                if n0 < cout {
+                    for slot in 0..POS_BLOCK {
+                        let orow = &mut out[(p0 + slot) * cout..][..cout];
+                        conv_cols_scalar(
+                            q,
+                            lut,
+                            &bases[slot * k..(slot + 1) * k],
+                            n0,
+                            a_sums[slot],
+                            zw_f,
+                            za_f,
+                            k_za_zw,
+                            scale,
+                            orow,
+                        );
+                    }
+                }
+            } else {
+                // position tail (< POS_BLOCK positions left): per
+                // position, 4-wide channel tiles + scalar channel tail
+                for slot in 0..pb {
+                    let brow = &bases[slot * k..(slot + 1) * k];
+                    let orow = &mut out[(p0 + slot) * cout..][..cout];
+                    let mut n0 = 0;
+                    while n0 + 4 <= cout {
+                        let mut acc = [0i32; 4];
+                        for (kk, &b) in brow.iter().enumerate() {
+                            let wrow = &q.w_q[kk * cout + n0..][..4];
+                            let r = lut_row(lut, b);
+                            acc[0] += r[wrow[0] as usize];
+                            acc[1] += r[wrow[1] as usize];
+                            acc[2] += r[wrow[2] as usize];
+                            acc[3] += r[wrow[3] as usize];
+                        }
+                        dequant4(q, &acc, n0, a_sums[slot], zw_f, za_f, k_za_zw, scale, orow);
+                        n0 += 4;
+                    }
+                    if n0 < cout {
+                        conv_cols_scalar(
+                            q, lut, brow, n0, a_sums[slot], zw_f, za_f, k_za_zw, scale, orow,
+                        );
+                    }
+                }
+            }
+            p0 += pb;
+        }
+        (ho, wo, cout)
+    }
+
     /// One quantised LUT convolution (fake-quant boundary → im2col with
     /// zero-point padding → LUT gather-matmul → zero-point-corrected
     /// dequantisation → bias), mirroring `model.py::_approx_conv_q`.
+    /// This is the scalar reference the tiled [`NativeEngine::conv_image`]
+    /// is verified against.
     fn quant_conv(
         &self,
         li: usize,
@@ -609,6 +1007,106 @@ impl EngineBackend for NativeEngine {
             .chunks_exact(self.n_classes)
             .map(super::argmax_u8)
             .collect())
+    }
+}
+
+/// Floats in one (H, W, C) activation plane.
+#[inline]
+fn plane_len((h, w, c): (usize, usize, usize)) -> usize {
+    h * w * c
+}
+
+/// In-place ReLU — the exact expression `run_topology` uses.
+#[inline]
+fn relu(x: &mut [f32]) {
+    x.iter_mut().for_each(|v| *v = v.max(0.0));
+}
+
+/// One 256-entry LUT row for base offset `code << 8`. The fixed-size
+/// reborrow lets the gathers index with `u8`-derived values
+/// bounds-check-free (the index is provably < 256).
+#[inline(always)]
+fn lut_row(lut: &[i32], base: u32) -> &[i32; 256] {
+    lut[base as usize..base as usize + 256]
+        .try_into()
+        .expect("LUT rows are 256 entries")
+}
+
+/// Dequantise a 4-wide accumulator tile into `orow[n0..n0+4]`: the
+/// reference `quant_conv` expression, term for term in f32, per output.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn dequant4(
+    q: &QuantConv,
+    acc: &[i32; 4],
+    n0: usize,
+    a_sum_f: f32,
+    zw_f: f32,
+    za_f: f32,
+    k_za_zw: f32,
+    scale: f32,
+    orow: &mut [f32],
+) {
+    for (j, &a) in acc.iter().enumerate() {
+        let n = n0 + j;
+        let corr = ((a as f32 - zw_f * a_sum_f) - za_f * q.w_sum[n] as f32) + k_za_zw;
+        orow[n] = scale * corr + q.bias[n];
+    }
+}
+
+/// Scalar channel tail (`cout % 4` columns) of one output position.
+#[allow(clippy::too_many_arguments)]
+fn conv_cols_scalar(
+    q: &QuantConv,
+    lut: &[i32],
+    brow: &[u32],
+    n_from: usize,
+    a_sum_f: f32,
+    zw_f: f32,
+    za_f: f32,
+    k_za_zw: f32,
+    scale: f32,
+    orow: &mut [f32],
+) {
+    let cout = q.cout;
+    for n in n_from..cout {
+        let mut acc = 0i32;
+        for (kk, &b) in brow.iter().enumerate() {
+            acc += lut_row(lut, b)[q.w_q[kk * cout + n] as usize];
+        }
+        let corr = ((acc as f32 - zw_f * a_sum_f) - za_f * q.w_sum[n] as f32) + k_za_zw;
+        orow[n] = scale * corr + q.bias[n];
+    }
+}
+
+/// Fused option-A residual tail: `h2 = relu(h2 + shortcut_a(inp))`
+/// computed in place, without materialising the subsampled/zero-padded
+/// shortcut tensor. Mirrors [`shortcut_a`] + the residual add in
+/// [`run_topology`] expression for expression — including the `+ 0.0` in
+/// the zero-padded channels, which is *not* a no-op in f32 (it normalises
+/// `-0.0` exactly like adding the reference's zero-filled shortcut does).
+fn add_shortcut_a_relu(
+    h2: &mut [f32],
+    inp: &[f32],
+    (h, w, c): (usize, usize, usize),
+    stride: usize,
+    cout: usize,
+) {
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let cc = c.min(cout);
+    for oy in 0..ho {
+        let src_row = (oy * stride) * w;
+        for ox in 0..wo {
+            let src = (src_row + ox * stride) * c;
+            let dst = (oy * wo + ox) * cout;
+            for j in 0..cc {
+                h2[dst + j] = (h2[dst + j] + inp[src + j]).max(0.0);
+            }
+            for j in cc..cout {
+                h2[dst + j] = (h2[dst + j] + 0.0).max(0.0);
+            }
+        }
     }
 }
 
@@ -913,5 +1411,53 @@ mod tests {
         let r8 = m.model("resnet8").unwrap();
         assert_eq!(r8.n_conv_layers, 7);
         assert!(r8.total_mults() > 0);
+    }
+
+    #[test]
+    fn tiled_forward_is_bit_identical_to_reference() {
+        let e = NativeEngine::synthetic(8, 4, 7, 4);
+        let imgs = Dataset::generate(&DatasetConfig {
+            n: 5,
+            seed: 3,
+            noise: 0.2,
+        });
+        let exact = broadcast_lut(&exact_lut(), e.n_layers());
+        let tiled = e.forward(&imgs.images, &exact).unwrap();
+        let reference = e.forward_reference(&imgs.images, &exact).unwrap();
+        assert_eq!(tiled, reference, "tiling must not change a single bit");
+        // and under a destroyed LUT (error propagation paths differ from
+        // the exact table)
+        let zero = vec![0i32; e.n_layers() * LUT_LEN];
+        assert_eq!(
+            e.forward(&imgs.images, &zero).unwrap(),
+            e.forward_reference(&imgs.images, &zero).unwrap()
+        );
+    }
+
+    #[test]
+    fn intra_jobs_do_not_change_output_bits() {
+        let e = NativeEngine::synthetic(8, 4, 11, 4);
+        let exact = broadcast_lut(&exact_lut(), e.n_layers());
+        for n in [1usize, 2, 5] {
+            let imgs = Dataset::generate(&DatasetConfig {
+                n,
+                seed: 9,
+                noise: 0.15,
+            });
+            let serial = e.forward(&imgs.images, &exact).unwrap();
+            let parallel = e
+                .clone()
+                .with_intra_jobs(8)
+                .forward(&imgs.images, &exact)
+                .unwrap();
+            assert_eq!(serial, parallel, "batch {n}: jobs must be unobservable");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let e = NativeEngine::synthetic(8, 4, 1, 2);
+        let exact = broadcast_lut(&exact_lut(), e.n_layers());
+        assert!(e.forward(&[], &exact).unwrap().is_empty());
     }
 }

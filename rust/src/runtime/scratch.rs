@@ -1,0 +1,85 @@
+//! Reusable scratch arena for the native forward pass.
+//!
+//! One [`ConvScratch`] holds every intermediate buffer a single image
+//! needs on its way through the quantised ResNet — activation ping/pong
+//! planes, the saved residual input, uint8 activation codes, the im2col
+//! patch block with its precomputed LUT row bases, and the
+//! global-average-pool accumulator. All buffers grow once to the model's
+//! high-water mark and are reused for every subsequent layer and image, so
+//! the steady-state forward pass performs **zero** per-layer heap
+//! allocation.
+//!
+//! The arena is handed out per worker thread via [`with_conv_scratch`]
+//! (a `thread_local`), which is what makes the per-image intra-batch
+//! parallel path allocation-free too: each pool worker owns one arena for
+//! the lifetime of the process.
+
+use std::cell::RefCell;
+
+/// Per-image working buffers of the tiled native forward pass
+/// (see `runtime::native` and DESIGN.md §9).
+#[derive(Debug, Default)]
+pub struct ConvScratch {
+    /// uint8 activation codes of the current conv input (one image).
+    pub codes: Vec<u8>,
+    /// im2col patch rows for one block of output positions
+    /// (`POS_BLOCK × k` codes).
+    pub patch: Vec<u8>,
+    /// Per-patch-element LUT row base offsets (`code << 8`), same layout
+    /// as `patch`.
+    pub bases: Vec<u32>,
+    /// Activation plane A (ping) — input/output alternate between the two
+    /// planes layer by layer via pointer swap, never by copy.
+    pub ping: Vec<f32>,
+    /// Activation plane B (pong).
+    pub pong: Vec<f32>,
+    /// Saved residual-block input (option-A shortcut source).
+    pub shortcut: Vec<f32>,
+    /// Global-average-pool accumulator (`cout` of the last layer).
+    pub gap: Vec<f32>,
+}
+
+impl ConvScratch {
+    /// Empty arena; buffers grow on first use and are then reused.
+    pub fn new() -> ConvScratch {
+        ConvScratch::default()
+    }
+
+    /// Total bytes currently retained by the arena (diagnostics).
+    pub fn retained_bytes(&self) -> usize {
+        self.codes.capacity()
+            + self.patch.capacity()
+            + 4 * self.bases.capacity()
+            + 4 * (self.ping.capacity() + self.pong.capacity())
+            + 4 * (self.shortcut.capacity() + self.gap.capacity())
+    }
+}
+
+thread_local! {
+    static CONV_SCRATCH: RefCell<ConvScratch> = RefCell::new(ConvScratch::new());
+}
+
+/// Run `f` with this thread's persistent [`ConvScratch`]. Nested calls are
+/// a bug (the arena is exclusively borrowed while `f` runs) — the forward
+/// pass never nests.
+pub fn with_conv_scratch<R>(f: impl FnOnce(&mut ConvScratch) -> R) -> R {
+    CONV_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_persists_across_calls() {
+        with_conv_scratch(|s| {
+            s.ping.clear();
+            s.ping.resize(1024, 0.0);
+        });
+        let retained = with_conv_scratch(|s| {
+            assert!(s.ping.capacity() >= 1024, "buffers must persist");
+            s.retained_bytes()
+        });
+        assert!(retained >= 4096);
+    }
+}

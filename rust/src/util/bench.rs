@@ -5,7 +5,10 @@
 //! median/mean/min reporting, and a `--quick` mode every bench honours so
 //! the full suite stays runnable on the single-core testbed.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use super::json::Json;
 
 /// Measurement of one benchmark case.
 #[derive(Debug, Clone)]
@@ -83,6 +86,196 @@ pub fn per_second(items: u64, d: Duration) -> f64 {
     items as f64 / d.as_secs_f64().max(1e-12)
 }
 
+/// Version of the `BENCH_*.json` snapshot format written by [`Recorder`].
+pub const BENCH_JSON_VERSION: i64 = 1;
+
+/// One recorded case inside a snapshot.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Case label (same string `bench` printed).
+    pub name: String,
+    /// Median per-iteration time in nanoseconds.
+    pub median_ns: u64,
+    /// Mean per-iteration time in nanoseconds.
+    pub mean_ns: u64,
+    /// Fastest iteration in nanoseconds.
+    pub min_ns: u64,
+    /// Number of timed iterations.
+    pub samples: usize,
+    /// Optional derived throughput `(value, unit)`, e.g. `(1.2e6, "vec/s")`.
+    pub throughput: Option<(f64, String)>,
+}
+
+/// Collects [`BenchRecord`]s for one bench binary and appends them as one
+/// snapshot to a versioned `BENCH_<name>.json` trajectory file — the
+/// recorded perf history that lets PRs prove (rather than assert) a
+/// speedup. Disabled (records silently dropped) unless a `--json PATH`
+/// flag or the `EVOAPPROX_BENCH_JSON` env var names an output file; the
+/// snapshot label comes from `--label L` / `EVOAPPROX_BENCH_LABEL`.
+///
+/// File schema (`version` = [`BENCH_JSON_VERSION`]):
+///
+/// ```json
+/// { "version": 1, "bench": "hotpath", "snapshots": [
+///     { "label": "pre-optimisation", "quick": false,
+///       "results": [ { "name": "...", "median_ns": 1, "mean_ns": 1,
+///                      "min_ns": 1, "samples": 10,
+///                      "throughput": 2.5, "unit": "img/s" } ] } ] }
+/// ```
+///
+/// Appending (never truncating) keeps the whole trajectory in one file, so
+/// before/after pairs — and any future PR's snapshots — diff cleanly.
+pub struct Recorder {
+    bench: String,
+    label: String,
+    path: Option<PathBuf>,
+    records: Vec<BenchRecord>,
+}
+
+fn arg_value(flag: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+impl Recorder {
+    /// Recorder for the bench binary `bench`; output path/label resolved
+    /// from CLI flags first, env vars second.
+    pub fn new(bench: &str) -> Recorder {
+        let path = arg_value("--json")
+            .or_else(|| std::env::var("EVOAPPROX_BENCH_JSON").ok().filter(|v| !v.is_empty()))
+            .map(PathBuf::from);
+        let label = arg_value("--label")
+            .or_else(|| std::env::var("EVOAPPROX_BENCH_LABEL").ok())
+            .unwrap_or_else(|| "snapshot".to_string());
+        Recorder {
+            bench: bench.to_string(),
+            label,
+            path,
+            records: Vec::new(),
+        }
+    }
+
+    /// Recorder with an explicit output path and label (tests, tooling).
+    pub fn with_output(bench: &str, label: &str, path: impl Into<PathBuf>) -> Recorder {
+        Recorder {
+            bench: bench.to_string(),
+            label: label.to_string(),
+            path: Some(path.into()),
+            records: Vec::new(),
+        }
+    }
+
+    /// Whether a JSON output path is configured.
+    pub fn enabled(&self) -> bool {
+        self.path.is_some()
+    }
+
+    /// Record one timed case.
+    pub fn record(&mut self, s: &Sample) {
+        self.push(s, None);
+    }
+
+    /// Record one timed case with a derived throughput figure.
+    pub fn record_throughput(&mut self, s: &Sample, value: f64, unit: &str) {
+        self.push(s, Some((value, unit.to_string())));
+    }
+
+    /// Record a raw figure with no per-iteration timing (whole-run
+    /// aggregates such as loadgen requests/second).
+    pub fn record_value(&mut self, name: &str, value: f64, unit: &str) {
+        self.records.push(BenchRecord {
+            name: name.to_string(),
+            median_ns: 0,
+            mean_ns: 0,
+            min_ns: 0,
+            samples: 0,
+            throughput: Some((value, unit.to_string())),
+        });
+    }
+
+    fn push(&mut self, s: &Sample, throughput: Option<(f64, String)>) {
+        self.records.push(BenchRecord {
+            name: s.name.clone(),
+            median_ns: s.median().as_nanos() as u64,
+            mean_ns: s.mean().as_nanos() as u64,
+            min_ns: s.min().as_nanos() as u64,
+            samples: s.times.len(),
+            throughput,
+        });
+    }
+
+    /// Append the collected records as one snapshot to the trajectory file
+    /// (no-op when no output path is configured). An existing file must be
+    /// a same-version trajectory for the same bench; anything else is an
+    /// error — a snapshot silently written under the wrong name would
+    /// corrupt the perf history.
+    pub fn finish(self) -> Result<(), String> {
+        let Some(path) = &self.path else {
+            return Ok(());
+        };
+        let mut snapshots: Vec<Json> = match std::fs::read_to_string(path) {
+            Ok(text) => {
+                let j = Json::parse(&text)?;
+                if j.req_i64("version")? != BENCH_JSON_VERSION {
+                    return Err(format!(
+                        "{}: unsupported bench-json version",
+                        path.display()
+                    ));
+                }
+                if j.req_str("bench")? != self.bench {
+                    return Err(format!(
+                        "{}: trajectory belongs to bench `{}`, not `{}`",
+                        path.display(),
+                        j.req_str("bench")?,
+                        self.bench
+                    ));
+                }
+                j.req_arr("snapshots")?.to_vec()
+            }
+            Err(_) => Vec::new(),
+        };
+        let results: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                let mut pairs = vec![
+                    ("name", r.name.as_str().into()),
+                    ("median_ns", (r.median_ns as i64).into()),
+                    ("mean_ns", (r.mean_ns as i64).into()),
+                    ("min_ns", (r.min_ns as i64).into()),
+                    ("samples", r.samples.into()),
+                ];
+                if let Some((v, unit)) = &r.throughput {
+                    pairs.push(("throughput", (*v).into()));
+                    pairs.push(("unit", unit.as_str().into()));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        snapshots.push(Json::obj([
+            ("label", self.label.as_str().into()),
+            ("quick", quick_mode().into()),
+            ("results", Json::Arr(results)),
+        ]));
+        let doc = Json::obj([
+            ("version", BENCH_JSON_VERSION.into()),
+            ("bench", self.bench.as_str().into()),
+            ("snapshots", Json::Arr(snapshots)),
+        ]);
+        std::fs::write(path, doc.to_string() + "\n").map_err(|e| e.to_string())?;
+        println!(
+            "bench-json: appended snapshot `{}` ({} cases) to {}",
+            self.label,
+            self.records.len(),
+            path.display()
+        );
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,5 +293,44 @@ mod tests {
     fn per_second_math() {
         let r = per_second(1000, Duration::from_millis(500));
         assert!((r - 2000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn recorder_appends_snapshots() {
+        let dir = std::env::temp_dir().join("evoapprox_bench_recorder_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let _ = std::fs::remove_file(&path);
+
+        let sample = Sample {
+            name: "case-a".into(),
+            times: vec![Duration::from_micros(10), Duration::from_micros(12)],
+        };
+        let mut rec = Recorder::with_output("test", "pre", &path);
+        rec.record_throughput(&sample, 123.0, "img/s");
+        rec.record_value("agg", 7.5, "req/s");
+        rec.finish().unwrap();
+
+        let mut rec = Recorder::with_output("test", "post", &path);
+        rec.record(&sample);
+        rec.finish().unwrap();
+
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.req_i64("version").unwrap(), BENCH_JSON_VERSION);
+        assert_eq!(j.req_str("bench").unwrap(), "test");
+        let snaps = j.req_arr("snapshots").unwrap();
+        assert_eq!(snaps.len(), 2, "second run must append, not truncate");
+        assert_eq!(snaps[0].req_str("label").unwrap(), "pre");
+        let results = snaps[0].req_arr("results").unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].req_str("name").unwrap(), "case-a");
+        assert!(results[0].req_i64("median_ns").unwrap() > 0);
+        assert_eq!(results[0].req_str("unit").unwrap(), "img/s");
+        assert_eq!(snaps[1].req_str("label").unwrap(), "post");
+
+        // a different bench name must refuse to append to this trajectory
+        let mut rec = Recorder::with_output("other", "x", &path);
+        rec.record(&sample);
+        assert!(rec.finish().is_err());
     }
 }

@@ -1,0 +1,176 @@
+//! Bit-exactness regression suite for the tiled native forward pass.
+//!
+//! The raw-speed rework (tiled gather-GEMM, scratch arena, intra-batch
+//! parallelism) is only admissible because it changes **no output bit**.
+//! This suite pins that contract from three directions:
+//!
+//! 1. `forward` (tiled) must be byte-identical to `forward_reference`
+//!    (the retained scalar oracle) across network shapes, batch sizes and
+//!    LUT families — exact, truncated, and adversarially pseudo-random.
+//! 2. The ref.py-pinned golden fixture must produce identical bytes
+//!    through both paths (the fixture-vs-golden check itself lives in
+//!    `integration_native.rs` and now exercises the tiled path).
+//! 3. `--jobs 1` and `--jobs N` must agree byte-for-byte, including
+//!    batch=1 and odd batch sizes that leave ragged worker chunks.
+
+use evoapproxlib::runtime::native::NativeEngine;
+use evoapproxlib::runtime::{broadcast_lut, exact_lut, EngineBackend, LUT_LEN};
+
+/// Deterministic splitmix64 — test-vector generator, not a real RNG.
+fn splitmix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Pseudo-random images in roughly the post-normalisation value range.
+fn random_images(n: usize, image_len: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed;
+    (0..n * image_len)
+        .map(|_| (splitmix(&mut s) % 4096) as f32 / 512.0 - 4.0)
+        .collect()
+}
+
+/// An adversarial product table: no algebraic structure whatsoever, so any
+/// gather reordering or base-offset slip produces loudly different logits.
+fn chaotic_lut(n_layers: usize, seed: u64) -> Vec<i32> {
+    let mut s = seed;
+    (0..n_layers * LUT_LEN)
+        .map(|_| (splitmix(&mut s) % 131072) as i32 - 65536)
+        .collect()
+}
+
+/// Truncated 8×8 product table (keep top `keep` bits of each operand).
+fn trunc_lut(keep: u32, n_layers: usize) -> Vec<i32> {
+    let mask = 0xFFu32 & !((1u32 << (8 - keep)) - 1);
+    let mut one = Vec::with_capacity(LUT_LEN);
+    for a in 0..256u32 {
+        for w in 0..256u32 {
+            one.push(((a & mask) * (w & mask)) as i32);
+        }
+    }
+    broadcast_lut(&one, n_layers)
+}
+
+fn assert_bit_identical(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: logit {i} differs: {x} vs {y}"
+        );
+    }
+}
+
+/// 1. Tiled `forward` ≡ scalar `forward_reference`, byte for byte, across
+///    geometries that hit every tile tail: cout not a multiple of 4, output
+///    positions not a multiple of the position block, stride-2 blocks with
+///    zero-padded shortcut channels.
+#[test]
+fn tiled_forward_matches_reference_across_shapes_and_luts() {
+    // (depth, width, seed, batch): width 4 → cout tails, depth 20 → many
+    // stride-2 shortcut blocks, batch 5/3 → odd worker chunking later.
+    let shapes = [(8u32, 4u32, 7u64, 5usize), (8, 8, 11, 3), (20, 4, 3, 2)];
+    for &(depth, width, seed, batch) in &shapes {
+        let e = NativeEngine::synthetic(depth, width, seed, batch);
+        let nl = e.n_layers();
+        let images = random_images(batch, e.image_len(), seed ^ 0xABCD);
+        let luts = [
+            ("exact", broadcast_lut(&exact_lut(), nl)),
+            ("trunc4", trunc_lut(4, nl)),
+            ("chaotic", chaotic_lut(nl, seed ^ 0x5EED)),
+        ];
+        for (name, lut) in &luts {
+            let tiled = e.forward(&images, lut).unwrap();
+            let reference = e.forward_reference(&images, lut).unwrap();
+            assert_bit_identical(
+                &tiled,
+                &reference,
+                &format!("d{depth} w{width} b{batch} {name}"),
+            );
+        }
+    }
+}
+
+/// A single-layer LUT substitution must flow through the tiled per-layer
+/// row slicing exactly as it does through the reference.
+#[test]
+fn tiled_forward_matches_reference_single_layer_substitution() {
+    let e = NativeEngine::synthetic(8, 8, 23, 4);
+    let nl = e.n_layers();
+    let images = random_images(4, e.image_len(), 99);
+    for layer in [0, nl / 2, nl - 1] {
+        let mut luts = broadcast_lut(&exact_lut(), nl);
+        let chaos = chaotic_lut(1, layer as u64 + 1);
+        luts[layer * LUT_LEN..(layer + 1) * LUT_LEN].copy_from_slice(&chaos);
+        let tiled = e.forward(&images, &luts).unwrap();
+        let reference = e.forward_reference(&images, &luts).unwrap();
+        assert_bit_identical(&tiled, &reference, &format!("layer {layer} substituted"));
+    }
+}
+
+/// 3. Intra-batch workers never change output bits: jobs=1 ≡ jobs=8 for
+///    batch 1 (fewer images than workers), odd batches (ragged chunks) and
+///    a full power-of-two batch.
+#[test]
+fn intra_jobs_are_bit_invariant() {
+    for &batch in &[1usize, 3, 5, 8] {
+        let e1 = NativeEngine::synthetic(8, 8, 42, batch);
+        let e8 = e1.clone().with_intra_jobs(8);
+        assert_eq!(e8.intra_jobs(), 8);
+        let nl = e1.n_layers();
+        let images = random_images(batch, e1.image_len(), 1234 + batch as u64);
+        for lut in [broadcast_lut(&exact_lut(), nl), chaotic_lut(nl, 77)] {
+            let a = e1.forward(&images, &lut).unwrap();
+            let b = e8.forward(&images, &lut).unwrap();
+            assert_bit_identical(&a, &b, &format!("batch {batch} jobs 1 vs 8"));
+        }
+    }
+}
+
+/// Worker-count invariance also holds through the trait-level dataset
+/// helpers (tail-batch padding path).
+#[test]
+fn predict_all_is_jobs_invariant() {
+    let e1 = NativeEngine::synthetic(8, 4, 9, 4);
+    let e8 = e1.clone().with_intra_jobs(8);
+    let nl = e1.n_layers();
+    // 7 images through a batch-4 engine: one full batch + a padded tail
+    let images = random_images(7, e1.image_len(), 555);
+    let luts = trunc_lut(5, nl);
+    assert_eq!(
+        e1.predict_all(&images, &luts).unwrap(),
+        e8.predict_all(&images, &luts).unwrap(),
+        "padded tail batches must be jobs-invariant too"
+    );
+}
+
+/// The scratch arena must not leak state between calls: interleaving
+/// engines of different geometry on one thread reuses the same
+/// thread-local buffers, and every answer must still match the reference.
+#[test]
+fn scratch_arena_is_geometry_clean_across_interleaved_engines() {
+    let small = NativeEngine::synthetic(8, 4, 1, 2);
+    let large = NativeEngine::synthetic(14, 8, 2, 2);
+    let imgs_s = random_images(2, small.image_len(), 10);
+    let imgs_l = random_images(2, large.image_len(), 20);
+    let lut_s = broadcast_lut(&exact_lut(), small.n_layers());
+    let lut_l = chaotic_lut(large.n_layers(), 30);
+    for round in 0..3 {
+        let a = small.forward(&imgs_s, &lut_s).unwrap();
+        let b = large.forward(&imgs_l, &lut_l).unwrap();
+        assert_bit_identical(
+            &a,
+            &small.forward_reference(&imgs_s, &lut_s).unwrap(),
+            &format!("small engine, round {round}"),
+        );
+        assert_bit_identical(
+            &b,
+            &large.forward_reference(&imgs_l, &lut_l).unwrap(),
+            &format!("large engine, round {round}"),
+        );
+    }
+}
