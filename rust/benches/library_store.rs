@@ -1,0 +1,132 @@
+//! Library storage backends: JSON text vs the compiled binary store
+//! (DESIGN.md §10) at 1k/10k/100k entries.
+//!
+//!   cold — open a library file from a cold process state and answer the
+//!          first census + Pareto query (the `serve`/`census` startup path)
+//!   warm — census / Pareto-front / diverse-selection queries against an
+//!          already-open source
+//!
+//! `cargo bench --bench library_store [-- --quick] [-- --json BENCH_library.json --label <snapshot>]`
+
+use evoapproxlib::cgp::metrics::{Metric, SELECTION_METRICS};
+use evoapproxlib::circuit::baselines::bam_multiplier;
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::generators::ripple_carry_adder;
+use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::library::{compile_library, Entry, Library, LibrarySource, Origin};
+use evoapproxlib::util::bench::{bench, per_second, quick_mode, Recorder};
+
+/// Deterministic synthetic library: two characterised base circuits
+/// cloned out to `n` entries with unique ids and a spread of power/error
+/// figures, so censuses have two rows and the Pareto fronts are
+/// non-trivial. A cheap xorshift keeps the spread reproducible.
+fn synthetic_library(n: usize) -> Library {
+    let model = CostModel::default();
+    let mul = Entry::characterise(
+        bam_multiplier(8, 2, 8),
+        ArithFn::Mul { w: 8 },
+        &model,
+        Origin::Bam { h: 2, v: 8 },
+    );
+    let add = Entry::characterise(
+        ripple_carry_adder(8),
+        ArithFn::Add { w: 8 },
+        &model,
+        Origin::Seed("rca".into()),
+    );
+    let mut lib = Library::new();
+    let mut state = 0x243F_6A88_85A3_08D3u64;
+    // xorshift64: deterministic, well-spread variation factors
+    let mut next_u = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        (state >> 11) as f64 / (1u64 << 53) as f64 // [0, 1)
+    };
+    for i in 0..n {
+        // power and error vary independently, so the Pareto fronts keep a
+        // realistic size instead of degenerating to the whole population
+        let (u, v) = (next_u(), next_u());
+        let mut e = if i % 8 == 7 { add.clone() } else { mul.clone() };
+        e.id = format!("{}_S{i:06X}", if i % 8 == 7 { "add8u" } else { "mul8u" });
+        e.cost.power_uw *= 0.25 + 1.5 * u;
+        e.cost.area_um2 *= 0.25 + 1.5 * u;
+        e.metrics.mae *= 0.1 + 2.0 * v;
+        e.metrics.wce *= 0.1 + 2.0 * v;
+        e.metrics.er = (e.metrics.er * (0.5 + v)).min(1.0);
+        e.rel = e.metrics.as_percentages(e.f);
+        lib.insert(e);
+    }
+    lib
+}
+
+fn main() {
+    let quick = quick_mode();
+    let mut rec = Recorder::new("library");
+    let sizes: &[usize] = if quick {
+        &[1_000, 10_000]
+    } else {
+        &[1_000, 10_000, 100_000]
+    };
+    let samples = if quick { 3 } else { 5 };
+    let f = ArithFn::Mul { w: 8 };
+
+    let dir = std::env::temp_dir().join("evoapprox_bench_library_store");
+    std::fs::create_dir_all(&dir).expect("bench scratch dir");
+
+    for &n in sizes {
+        let lib = synthetic_library(n);
+        let json_path = dir.join(format!("lib_{n}.json"));
+        let bin_path = dir.join(format!("lib_{n}.bin"));
+        lib.save(&json_path).expect("writing JSON library");
+        std::fs::write(&bin_path, compile_library(&lib)).expect("writing compiled library");
+
+        // cold start: open + first census + first Pareto front — the
+        // whole reason the compiled store exists. The 100k JSON parse
+        // runs once untimed-free (it is seconds long).
+        let (warmup, cold_samples) = if n >= 100_000 { (0, 1) } else { (1, samples) };
+        let s = bench(
+            &format!("cold/json open+census+pareto {n}"),
+            warmup,
+            cold_samples,
+            || {
+                let src = LibrarySource::open(&json_path).unwrap();
+                std::hint::black_box(src.census_rows());
+                std::hint::black_box(src.pareto_front(f, Metric::Mae));
+            },
+        );
+        rec.record_throughput(&s, per_second(n as u64, s.median()), "entry/s");
+        let s = bench(
+            &format!("cold/compiled open+census+pareto {n}"),
+            1,
+            samples,
+            || {
+                let src = LibrarySource::open(&bin_path).unwrap();
+                std::hint::black_box(src.census_rows());
+                std::hint::black_box(src.pareto_front(f, Metric::Mae));
+            },
+        );
+        rec.record_throughput(&s, per_second(n as u64, s.median()), "entry/s");
+
+        // warm queries against already-open sources
+        let json_src = LibrarySource::open(&json_path).unwrap();
+        let bin_src = LibrarySource::open(&bin_path).unwrap();
+        for (tag, src) in [("json", &json_src), ("compiled", &bin_src)] {
+            let s = bench(&format!("warm/{tag} census {n}"), 1, samples, || {
+                std::hint::black_box(src.census_rows());
+            });
+            rec.record(&s);
+            let s = bench(&format!("warm/{tag} pareto {n}"), 1, samples, || {
+                std::hint::black_box(src.pareto_front(f, Metric::Mae));
+            });
+            rec.record(&s);
+            let s = bench(&format!("warm/{tag} select {n}"), 1, samples, || {
+                std::hint::black_box(src.select_diverse(f, &SELECTION_METRICS, 10));
+            });
+            rec.record(&s);
+        }
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+    rec.finish().expect("writing bench snapshot");
+}

@@ -10,7 +10,9 @@
 //! * `--flag value` and `--flag=value`;
 //! * boolean switches (`--quick`) that take no value;
 //! * negative numbers as values (`--seed -5`): only a leading `--` marks
-//!   the next token as a flag.
+//!   the next token as a flag;
+//! * multi-token subcommands (`library compile`): the longest spec-name
+//!   match over the leading tokens wins.
 
 use std::collections::HashMap;
 use std::fmt;
@@ -152,6 +154,20 @@ pub fn parse(specs: &[CommandSpec], args: &[String]) -> Result<Cli, CliError> {
             flags: HashMap::new(),
         });
     }
+    // Multi-token subcommands (`library compile`): when the first two
+    // tokens joined name a spec, that longer name wins over the
+    // single-token prefix (`library`), and the flag scan starts after it.
+    let (command, consumed) = match args.get(1) {
+        Some(second) if !second.starts_with("--") => {
+            let two = format!("{command} {second}");
+            if specs.iter().any(|c| c.name == two) {
+                (two, 2)
+            } else {
+                (command, 1)
+            }
+        }
+        _ => (command, 1),
+    };
     let spec = specs
         .iter()
         .find(|c| c.name == command)
@@ -160,7 +176,7 @@ pub fn parse(specs: &[CommandSpec], args: &[String]) -> Result<Cli, CliError> {
             known: specs.iter().map(|c| c.name.to_string()).collect(),
         })?;
     let mut flags = HashMap::new();
-    let mut i = 1;
+    let mut i = consumed;
     while i < args.len() {
         let arg = &args[i];
         let Some(body) = arg.strip_prefix("--") else {
@@ -247,7 +263,7 @@ impl Cli {
 pub fn render_help(binary: &str, about: &str, specs: &[CommandSpec]) -> String {
     let mut out = format!("{binary} — {about}\n\nCOMMANDS\n");
     for c in specs {
-        out.push_str(&format!("  {:<9} {}\n", c.name, c.about));
+        out.push_str(&format!("  {:<16} {}\n", c.name, c.about));
         for f in c.flags {
             let left = match f.value {
                 Some(v) => format!("--{} <{v}>", f.name),
@@ -291,6 +307,16 @@ mod tests {
             name: "info",
             about: "print info",
             flags: &[],
+        },
+        CommandSpec {
+            name: "lib",
+            about: "library ops",
+            flags: &[],
+        },
+        CommandSpec {
+            name: "lib compile",
+            about: "compile the library",
+            flags: FLAGS,
         },
     ];
 
@@ -398,6 +424,25 @@ mod tests {
                 value: "lots".into()
             }
         );
+    }
+
+    #[test]
+    fn multi_token_command_wins_over_prefix() {
+        // the two-token spec name matches, and its flags parse after it
+        let cli = parse(SPECS, &args(&["lib", "compile", "--width", "16"])).unwrap();
+        assert_eq!(cli.command, "lib compile");
+        assert_eq!(cli.flag("width", 8u32).unwrap(), 16);
+        // the bare prefix still resolves to the single-token spec
+        let cli = parse(SPECS, &args(&["lib"])).unwrap();
+        assert_eq!(cli.command, "lib");
+        // a flag right after the prefix doesn't get mistaken for a
+        // second command token (`lib` takes no flags → UnknownFlag)
+        let e = parse(SPECS, &args(&["lib", "--width", "8"])).unwrap_err();
+        assert!(matches!(e, CliError::UnknownFlag { .. }));
+        // a stray second token that names no two-token spec is rejected
+        // against the prefix command
+        let e = parse(SPECS, &args(&["lib", "compil"])).unwrap_err();
+        assert!(matches!(e, CliError::UnexpectedArg { .. }));
     }
 
     #[test]

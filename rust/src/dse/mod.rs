@@ -44,7 +44,7 @@ use crate::accel::PowerModel;
 use crate::cgp::campaign::{default_workers, map_parallel};
 use crate::cgp::pareto::non_dominated_indices;
 use crate::coordinator::{Coordinator, KernelKind};
-use crate::library::Library;
+use crate::library::LibrarySource;
 use crate::resilience::cache::{EvalCache, EvalKey};
 use crate::resilience::{
     per_layer_campaign_cached, standard_multipliers, Fig4Report, MultiplierSummary,
@@ -381,7 +381,7 @@ pub fn search_stage(space: &SearchSpace, cfg: &DseConfig) -> SearchOutcome {
 /// campaign endpoints.
 pub fn run_dse(
     coord: &Coordinator,
-    lib: Option<&Library>,
+    lib: Option<&LibrarySource>,
     cfg: &DseConfig,
     testset: &TestSet,
     cache: &EvalCache,

@@ -22,7 +22,10 @@
 //! * [`library`] — the approximate-circuit library itself: typed entries with
 //!   full metric characterisation, JSON persistence, Pareto-front extraction
 //!   and the paper's "10 circuits evenly spaced along the power axis per
-//!   metric" selection procedure (§III/§IV).
+//!   metric" selection procedure (§III/§IV) — plus the compiled zero-copy
+//!   binary store (`library compile`, DESIGN.md §10) and the
+//!   `LibrarySource` Json|Compiled abstraction every read-only consumer
+//!   loads through.
 //! * [`accel`] — the DNN hardware-accelerator model: ResNet-N architecture
 //!   descriptions, per-layer multiplier counts and the power model used to
 //!   report "relative power of multipliers in convolutional layers".

@@ -1,16 +1,21 @@
 //! The approximate-circuit library (§III): characterised entries, JSON
-//! persistence, Table-I census, Pareto selection (§IV) and the CGP
-//! construction campaigns.
+//! persistence, a compiled zero-copy binary store (DESIGN.md §10),
+//! Table-I census, Pareto selection (§IV) and the CGP construction
+//! campaigns.
 
 pub mod catalog;
+pub mod compiled;
 pub mod entry;
 pub mod selection;
+pub mod source;
 pub mod store;
 
 pub use catalog::{
     approx_seeds_for, campaign_context, run_campaign, seeds_for, target_ladder, CampaignConfig,
     CampaignProgress,
 };
+pub use compiled::{compile_library, metric_slot, CompiledLibrary, EntryView, METRIC_ORDER};
 pub use entry::{Entry, Origin};
 pub use selection::{evenly_by_power, pareto_indices, select_diverse};
+pub use source::LibrarySource;
 pub use store::{CensusRow, Library};

@@ -1,0 +1,341 @@
+//! [`LibrarySource`]: the Json | Compiled abstraction every read-only
+//! consumer of a library holds (DESIGN.md §10).
+//!
+//! A source answers the hot queries — census, Pareto front, `get`,
+//! `for_fn`, diverse selection — from whichever representation it wraps:
+//! a fully-owned JSON-loaded [`Library`], or a [`CompiledLibrary`] slab
+//! whose precomputed indices answer them without deserialising untouched
+//! entries. The two paths are byte-identical by construction: the compiler
+//! runs the very same `census_rows`/`pareto_indices` code the JSON path
+//! runs per query and freezes the result, and the compiled `select_diverse`
+//! replays the JSON selection procedure operation for operation over the
+//! frozen fronts. Only mutation paths (evolve/ingest) need the owned form
+//! — they keep taking `&mut Library` and recompile afterwards.
+
+use std::path::Path;
+
+use crate::cgp::metrics::Metric;
+use crate::circuit::verify::ArithFn;
+
+use super::compiled::{compile_library, CompiledLibrary, Fnv64, MAGIC};
+use super::selection::{evenly_by_power, pareto_indices};
+use super::store::{CensusRow, Library};
+use super::Entry;
+
+enum Inner {
+    Json(Library),
+    Compiled(CompiledLibrary),
+}
+
+/// A read-only library backend: `Json` (owned entries) or `Compiled`
+/// (zero-copy slab with precomputed indices). See the module docs.
+pub struct LibrarySource {
+    inner: Inner,
+    fingerprint: u64,
+}
+
+impl From<Library> for LibrarySource {
+    fn from(lib: Library) -> LibrarySource {
+        let mut h = Fnv64::new();
+        h.write(&(lib.len() as u64).to_le_bytes());
+        for e in lib.entries() {
+            h.write(e.id.as_bytes());
+            h.write(&[0]); // id terminator: no ambiguity between adjacent ids
+            h.write(&e.f.width().to_le_bytes());
+            h.write(&e.cost.power_uw.to_bits().to_le_bytes());
+        }
+        LibrarySource {
+            fingerprint: h.finish(),
+            inner: Inner::Json(lib),
+        }
+    }
+}
+
+impl From<CompiledLibrary> for LibrarySource {
+    fn from(lib: CompiledLibrary) -> LibrarySource {
+        LibrarySource {
+            fingerprint: lib.fingerprint(),
+            inner: Inner::Compiled(lib),
+        }
+    }
+}
+
+impl std::fmt::Debug for LibrarySource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self.inner {
+            Inner::Json(_) => "Json",
+            Inner::Compiled(_) => "Compiled",
+        };
+        f.debug_struct("LibrarySource")
+            .field("kind", &kind)
+            .field("entries", &self.len())
+            .finish()
+    }
+}
+
+impl LibrarySource {
+    /// Open a library file, sniffing the format: a compiled-store magic
+    /// prefix loads the zero-copy slab, anything else parses as JSON.
+    pub fn open(path: impl AsRef<Path>) -> anyhow::Result<LibrarySource> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        if bytes.len() >= MAGIC.len() && bytes[..MAGIC.len()] == MAGIC {
+            let compiled = CompiledLibrary::from_bytes(bytes)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+            return Ok(LibrarySource::from(compiled));
+        }
+        let text = String::from_utf8(bytes)
+            .map_err(|_| anyhow::anyhow!("{}: neither compiled store nor UTF-8 JSON", path.display()))?;
+        let lib = Library::from_json_str(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Ok(LibrarySource::from(lib))
+    }
+
+    /// The built-in Table-II baseline library, as a source.
+    pub fn baseline() -> LibrarySource {
+        LibrarySource::from(Library::baseline())
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        match &self.inner {
+            Inner::Json(l) => l.len(),
+            Inner::Compiled(c) => c.len(),
+        }
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True for the compiled backend.
+    pub fn is_compiled(&self) -> bool {
+        matches!(self.inner, Inner::Compiled(_))
+    }
+
+    /// Content fingerprint: the payload checksum for compiled stores, an
+    /// id/width/power digest for JSON libraries. Cache keys hang off this.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// The owned library, when this source is JSON-backed.
+    pub fn as_json(&self) -> Option<&Library> {
+        match &self.inner {
+            Inner::Json(l) => Some(l),
+            Inner::Compiled(_) => None,
+        }
+    }
+
+    /// Compile this source to the binary format (no-op re-encode for an
+    /// already-compiled slab is avoided: compiled sources round-trip
+    /// through materialisation only when explicitly asked).
+    pub fn compile(&self) -> Vec<u8> {
+        match &self.inner {
+            Inner::Json(l) => compile_library(l),
+            Inner::Compiled(c) => {
+                let mut lib = Library::new();
+                for i in 0..c.len() {
+                    lib.insert(c.entry(i).materialise());
+                }
+                compile_library(&lib)
+            }
+        }
+    }
+
+    /// `(kind, width, count)` census triples (CLI `census` output).
+    pub fn census(&self) -> Vec<(String, u32, usize)> {
+        match &self.inner {
+            Inner::Json(l) => l.census(),
+            Inner::Compiled(c) => c
+                .census_rows()
+                .into_iter()
+                .map(|r| (r.kind, r.width, r.count))
+                .collect(),
+        }
+    }
+
+    /// Full census rows — precomputed for compiled stores.
+    pub fn census_rows(&self) -> Vec<CensusRow> {
+        match &self.inner {
+            Inner::Json(l) => l.census_rows(),
+            Inner::Compiled(c) => c.census_rows(),
+        }
+    }
+
+    /// Owned copies of the entries implementing `f`, insertion order.
+    pub fn for_fn(&self, f: ArithFn) -> Vec<Entry> {
+        match &self.inner {
+            Inner::Json(l) => l.for_fn(f).into_iter().cloned().collect(),
+            Inner::Compiled(c) => c
+                .for_fn_indices(f)
+                .into_iter()
+                .map(|i| c.entry(i).materialise())
+                .collect(),
+        }
+    }
+
+    /// Number of entries implementing `f` — no materialisation either way.
+    pub fn for_fn_len(&self, f: ArithFn) -> usize {
+        match &self.inner {
+            Inner::Json(l) => l.for_fn(f).len(),
+            Inner::Compiled(c) => c.for_fn_len(f),
+        }
+    }
+
+    /// Entry by id.
+    pub fn get(&self, id: &str) -> Option<Entry> {
+        match &self.inner {
+            Inner::Json(l) => l.get(id).cloned(),
+            Inner::Compiled(c) => c.get(id).map(|v| v.materialise()),
+        }
+    }
+
+    /// The (power, `metric`) Pareto front of `f`: `(population, front)`
+    /// with the front in insertion order — derived per call on the JSON
+    /// path, read off the precomputed FNTAB section on the compiled path.
+    pub fn pareto_front(&self, f: ArithFn, metric: Metric) -> (usize, Vec<Entry>) {
+        match &self.inner {
+            Inner::Json(l) => {
+                let all = l.for_fn(f);
+                let front = pareto_indices(&all, metric)
+                    .into_iter()
+                    .map(|i| all[i].clone())
+                    .collect();
+                (all.len(), front)
+            }
+            Inner::Compiled(c) => (
+                c.for_fn_len(f),
+                c.front_indices(f, metric)
+                    .into_iter()
+                    .map(|i| c.entry(i).materialise())
+                    .collect(),
+            ),
+        }
+    }
+
+    /// The §IV diverse selection (see `selection::select_diverse`), owned.
+    ///
+    /// The compiled arm replays the JSON procedure operation for
+    /// operation — per-metric precomputed front → `evenly_by_power` →
+    /// id-dedup union → descending-power sort — so both backends return
+    /// the same entries in the same order.
+    pub fn select_diverse(&self, f: ArithFn, metrics: &[Metric], k: usize) -> Vec<Entry> {
+        match &self.inner {
+            Inner::Json(l) => super::selection::select_diverse(l, f, metrics, k)
+                .into_iter()
+                .cloned()
+                .collect(),
+            Inner::Compiled(c) => {
+                let mut chosen: Vec<Entry> = Vec::new();
+                for &m in metrics {
+                    let front: Vec<Entry> = c
+                        .front_indices(f, m)
+                        .into_iter()
+                        .map(|i| c.entry(i).materialise())
+                        .collect();
+                    let refs: Vec<&Entry> = front.iter().collect();
+                    for e in evenly_by_power(&refs, k) {
+                        if !chosen.iter().any(|ch| ch.id == e.id) {
+                            chosen.push(e.clone());
+                        }
+                    }
+                }
+                chosen.sort_by(|a, b| b.cost.power_uw.total_cmp(&a.cost.power_uw));
+                chosen
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgp::metrics::SELECTION_METRICS;
+
+    fn both_sources() -> (LibrarySource, LibrarySource) {
+        let lib = Library::baseline();
+        let compiled =
+            CompiledLibrary::from_bytes(compile_library(&lib)).expect("baseline compiles");
+        (LibrarySource::from(lib), LibrarySource::from(compiled))
+    }
+
+    #[test]
+    fn open_sniffs_both_formats() {
+        let dir = std::env::temp_dir().join("evoapprox_test_source");
+        std::fs::create_dir_all(&dir).unwrap();
+        let lib = Library::baseline();
+        let json_path = dir.join("lib.json");
+        lib.save(&json_path).unwrap();
+        let bin_path = dir.join("lib.bin");
+        std::fs::write(&bin_path, compile_library(&lib)).unwrap();
+
+        let json_src = LibrarySource::open(&json_path).unwrap();
+        let bin_src = LibrarySource::open(&bin_path).unwrap();
+        assert!(!json_src.is_compiled());
+        assert!(bin_src.is_compiled());
+        assert_eq!(json_src.len(), lib.len());
+        assert_eq!(bin_src.len(), lib.len());
+        assert_eq!(json_src.census_rows(), bin_src.census_rows());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn query_surface_is_backend_identical() {
+        let (json, bin) = both_sources();
+        assert_eq!(json.len(), bin.len());
+        assert_eq!(json.census(), bin.census());
+        assert_eq!(json.census_rows(), bin.census_rows());
+        let f = ArithFn::Mul { w: 8 };
+        assert_eq!(json.for_fn_len(f), bin.for_fn_len(f));
+
+        let a = json.for_fn(f);
+        let b = bin.for_fn(f);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.netlist, y.netlist);
+            assert_eq!(x.metrics, y.metrics);
+            assert_eq!(x.cost, y.cost);
+            assert_eq!(x.rel, y.rel);
+            assert_eq!(x.origin, y.origin);
+        }
+
+        for e in &a {
+            let g1 = json.get(&e.id).unwrap();
+            let g2 = bin.get(&e.id).unwrap();
+            assert_eq!(g1.id, g2.id);
+            assert_eq!(g1.cost, g2.cost);
+        }
+        assert!(json.get("nope").is_none());
+        assert!(bin.get("nope").is_none());
+
+        for m in [Metric::Mae, Metric::Wce, Metric::Er] {
+            let (p1, f1) = json.pareto_front(f, m);
+            let (p2, f2) = bin.pareto_front(f, m);
+            assert_eq!(p1, p2);
+            let ids1: Vec<&str> = f1.iter().map(|e| e.id.as_str()).collect();
+            let ids2: Vec<&str> = f2.iter().map(|e| e.id.as_str()).collect();
+            assert_eq!(ids1, ids2, "{m:?}");
+        }
+
+        let s1 = json.select_diverse(f, &SELECTION_METRICS, 10);
+        let s2 = bin.select_diverse(f, &SELECTION_METRICS, 10);
+        let ids1: Vec<&str> = s1.iter().map(|e| e.id.as_str()).collect();
+        let ids2: Vec<&str> = s2.iter().map(|e| e.id.as_str()).collect();
+        assert_eq!(ids1, ids2);
+    }
+
+    #[test]
+    fn fingerprints_are_stable_and_content_sensitive() {
+        let (json, bin) = both_sources();
+        let (json2, bin2) = both_sources();
+        assert_eq!(json.fingerprint(), json2.fingerprint());
+        assert_eq!(bin.fingerprint(), bin2.fingerprint());
+        // an empty library fingerprints differently from the baseline
+        let empty = LibrarySource::from(Library::new());
+        assert_ne!(empty.fingerprint(), json.fingerprint());
+    }
+}

@@ -182,17 +182,23 @@ impl Library {
         Ok(lib)
     }
 
-    /// Save to a JSON file.
+    /// Deserialise from JSON text.
+    pub fn from_json_str(text: &str) -> Result<Library, String> {
+        Library::from_json(&Json::parse(text)?)
+    }
+
+    /// Save to a JSON file, atomically: the serialised bytes are staged in
+    /// a temp file beside the destination and renamed over it, so a crash
+    /// mid-save can't truncate a multi-thousand-entry library.
     pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
-        std::fs::write(path, self.to_json().to_string())?;
+        crate::util::atomic_write(path, self.to_json().to_string().as_bytes())?;
         Ok(())
     }
 
     /// Load from a JSON file.
     pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Library> {
         let text = std::fs::read_to_string(&path)?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
-        Library::from_json(&j).map_err(|e| anyhow::anyhow!("{e}"))
+        Library::from_json_str(&text).map_err(|e| anyhow::anyhow!("{e}"))
     }
 }
 
@@ -274,6 +280,31 @@ mod tests {
         let b = loaded.get(&a.id).unwrap();
         assert_eq!(a.netlist, b.netlist);
         assert_eq!(a.metrics.mae, b.metrics.mae);
+    }
+
+    /// `save` must replace a pre-existing destination atomically: after the
+    /// save the file holds exactly the new library (the rename is all or
+    /// nothing) and no temp staging file survives in the directory.
+    #[test]
+    fn save_replaces_existing_destination_atomically() {
+        let dir = std::env::temp_dir().join("evoapprox_test_store_atomic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lib.json");
+        // pre-existing destination: garbage much longer than the real save
+        std::fs::write(&path, "x".repeat(1 << 20)).unwrap();
+        let mut lib = Library::new();
+        lib.insert(mk(bam_multiplier(8, 0, 4), ArithFn::Mul { w: 8 }));
+        lib.save(&path).unwrap();
+        let loaded = Library::load(&path).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded.entries()[0].id, lib.entries()[0].id);
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -9,7 +9,10 @@
 //!                   [--generations 20000] [--seed 1] [--adder]
 //!                   [--demes 4] [--migration-interval 500] [--jobs N]
 //! evoapprox library [--out lib.json] [--quick] [--widths 8,12,16] [--jobs N]
-//! evoapprox census  --lib lib.json       # Table I counts
+//! evoapprox library compile [--lib lib.json] [--out lib.bin] [--check]
+//!                   # lower a JSON library into the versioned binary store
+//!                   # (zero-copy cold start, precomputed census/fronts)
+//! evoapprox census  --lib lib.json        # Table I counts (JSON or .bin)
 //! evoapprox select  --lib lib.json [--k 10]
 //! evoapprox fig4    [--lib lib.json] [--images 256] [--multipliers 6]
 //!                   [--backend auto|native|pjrt] [--jobs N]
@@ -36,7 +39,7 @@ use evoapproxlib::cgp::{
 use evoapproxlib::circuit::cost::CostModel;
 use evoapproxlib::circuit::verify::{ArithFn, WIDE_SEARCH_MAX_VECTORS};
 use evoapproxlib::cli::{parse, render_help, Cli, CommandSpec, FlagSpec};
-use evoapproxlib::library::{run_campaign, CampaignConfig, Library};
+use evoapproxlib::library::{run_campaign, CampaignConfig, Library, LibrarySource};
 use evoapproxlib::util::table::TextTable;
 
 const ABOUT: &str = "approximate-circuit library + DNN resilience analysis";
@@ -49,7 +52,7 @@ const ARTIFACTS_FLAG: FlagSpec = FlagSpec {
 const LIB_FLAG: FlagSpec = FlagSpec {
     name: "lib",
     value: Some("FILE"),
-    help: "library JSON (default library.json)",
+    help: "library file, JSON or compiled .bin (default library.json)",
 };
 const JOBS_FLAG: FlagSpec = FlagSpec {
     name: "jobs",
@@ -110,6 +113,15 @@ const COMMANDS: &[CommandSpec] = &[
             FlagSpec { name: "targets", value: Some("N"), help: "e_max targets per metric (default 5)" },
             FlagSpec { name: "seed", value: Some("N"), help: "campaign master seed" },
             JOBS_FLAG,
+        ],
+    },
+    CommandSpec {
+        name: "library compile",
+        about: "lower a JSON library into the compiled binary store (DESIGN.md §10)",
+        flags: &[
+            LIB_FLAG,
+            FlagSpec { name: "out", value: Some("FILE"), help: "output path (default: input with a .bin extension)" },
+            FlagSpec { name: "check", value: None, help: "reopen the output and verify census + fronts match the source" },
         ],
     },
     CommandSpec {
@@ -176,7 +188,7 @@ const COMMANDS: &[CommandSpec] = &[
             FlagSpec { name: "addr", value: Some("HOST:PORT"), help: "bind address (default 127.0.0.1:8080; port 0 = ephemeral)" },
             FlagSpec { name: "workers", value: Some("N"), help: "HTTP worker threads (default 4)" },
             FlagSpec { name: "model", value: Some("NAME"), help: "served network (default resnet8)" },
-            FlagSpec { name: "library", value: Some("FILE"), help: "library JSON backing the query endpoints (default: built-in baselines)" },
+            FlagSpec { name: "library", value: Some("FILE"), help: "library file (JSON or compiled .bin) backing the query endpoints (default: built-in baselines)" },
             FlagSpec { name: "max-wait-ms", value: Some("MS"), help: "batching deadline (default 20)" },
             FlagSpec { name: "max-batch", value: Some("N"), help: "max images per dispatched batch (default 64)" },
             FlagSpec { name: "intra-jobs", value: Some("N"), help: "worker threads inside one native forward batch (default 1)" },
@@ -197,6 +209,7 @@ fn main() {
         "info" => cmd_info(&cli),
         "evolve" => cmd_evolve(&cli),
         "library" => cmd_library(&cli),
+        "library compile" => cmd_library_compile(&cli),
         "census" => cmd_census(&cli),
         "select" => cmd_select(&cli),
         "fig4" | "resilience" => cmd_fig4(&cli),
@@ -427,8 +440,63 @@ fn cmd_library(cli: &Cli) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_library_compile(cli: &Cli) -> anyhow::Result<()> {
+    use evoapproxlib::library::{CompiledLibrary, METRIC_ORDER};
+
+    let input = cli.flag_str("lib", "library.json");
+    let default_out = std::path::Path::new(&input)
+        .with_extension("bin")
+        .to_string_lossy()
+        .into_owned();
+    let out = cli.flag_str("out", &default_out);
+    let t0 = std::time::Instant::now();
+    let source = LibrarySource::open(&input)?;
+    let bytes = source.compile();
+    evoapproxlib::util::atomic_write(&out, &bytes)?;
+    println!(
+        "compiled {} entries ({} bytes) → {out} in {:.1?}",
+        source.len(),
+        bytes.len(),
+        t0.elapsed()
+    );
+    if cli.has("check") {
+        let reopened = CompiledLibrary::open(&out)?;
+        anyhow::ensure!(
+            reopened.len() == source.len(),
+            "entry count mismatch after reload"
+        );
+        anyhow::ensure!(
+            reopened.census_rows() == source.census_rows(),
+            "census mismatch after reload"
+        );
+        for f in reopened.functions() {
+            for m in METRIC_ORDER {
+                let want: Vec<String> = source
+                    .pareto_front(f, m)
+                    .1
+                    .into_iter()
+                    .map(|e| e.id)
+                    .collect();
+                let got: Vec<String> = reopened
+                    .front_indices(f, m)
+                    .into_iter()
+                    .map(|i| reopened.entry(i).id().to_string())
+                    .collect();
+                anyhow::ensure!(
+                    got == want,
+                    "{} {} front mismatch after reload",
+                    f.tag(),
+                    m.name()
+                );
+            }
+        }
+        println!("check ok: census and all precomputed fronts match the source");
+    }
+    Ok(())
+}
+
 fn cmd_census(cli: &Cli) -> anyhow::Result<()> {
-    let lib = Library::load(cli.flag_str("lib", "library.json"))?;
+    let lib = LibrarySource::open(cli.flag_str("lib", "library.json"))?;
     let mut t = TextTable::new(&["Circuit", "Bit-width", "# approx. implementations"]);
     for (kind, w, n) in lib.census() {
         t.row(vec![kind, w.to_string(), n.to_string()]);
@@ -438,10 +506,9 @@ fn cmd_census(cli: &Cli) -> anyhow::Result<()> {
 }
 
 fn cmd_select(cli: &Cli) -> anyhow::Result<()> {
-    let lib = Library::load(cli.flag_str("lib", "library.json"))?;
+    let lib = LibrarySource::open(cli.flag_str("lib", "library.json"))?;
     let k = cli.flag("k", 10usize)?;
-    let sel = evoapproxlib::library::select_diverse(
-        &lib,
+    let sel = lib.select_diverse(
         ArithFn::Mul { w: 8 },
         &evoapproxlib::cgp::SELECTION_METRICS,
         k,
@@ -492,7 +559,7 @@ fn analysis_setup(
 
     // exact reference + §IV selection (or baselines): the same roster
     // builder the HTTP server uses for its select/campaign endpoints
-    let lib = cli.get("lib").map(Library::load).transpose()?;
+    let lib = cli.get("lib").map(LibrarySource::open).transpose()?;
     let mults = evoapproxlib::resilience::standard_multipliers(
         lib.as_ref(),
         k_per_metric,
@@ -628,7 +695,7 @@ fn cmd_dse(cli: &Cli) -> anyhow::Result<()> {
         }
         Err(e) => return Err(e),
     };
-    let lib = cli.get("lib").map(Library::load).transpose()?;
+    let lib = cli.get("lib").map(LibrarySource::open).transpose()?;
     let mut cfg = DseConfig::new(cli.flag_str("network", "resnet8"));
     cfg.max_accuracy_drop = cli.flag("max-accuracy-drop", cfg.max_accuracy_drop)?;
     cfg.probe_multipliers =
@@ -720,9 +787,11 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
             .with_backend(backend(cli)?)
             .with_intra_jobs(cli.flag("intra-jobs", 1usize)?),
     )?;
+    // JSON or compiled .bin — the server's query endpoints hit whichever
+    // backend the file sniffs to, with identical responses either way
     let library = match cli.get("library") {
-        Some(path) => Library::load(path)?,
-        None => Library::baseline(),
+        Some(path) => LibrarySource::open(path)?,
+        None => LibrarySource::baseline(),
     };
     let cfg = ServerConfig {
         addr: cli.flag_str("addr", "127.0.0.1:8080"),

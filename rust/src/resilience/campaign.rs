@@ -21,7 +21,7 @@ use crate::circuit::generators::wallace_multiplier;
 use crate::circuit::verify::ArithFn;
 use crate::coordinator::{Coordinator, KernelKind};
 use crate::library::entry::{Entry, Origin};
-use crate::library::{select_diverse, Library};
+use crate::library::LibrarySource;
 use crate::runtime::manifest::TestSet;
 use crate::runtime::{broadcast_lut, exact_lut, LUT_LEN};
 
@@ -93,7 +93,7 @@ impl MultiplierSummary {
 /// function of `(k_per_metric, limit)`, which is what lets the server's
 /// campaign endpoint reproduce an in-process campaign byte-for-byte.
 pub fn standard_multipliers(
-    lib: Option<&Library>,
+    lib: Option<&LibrarySource>,
     k_per_metric: usize,
     limit: usize,
 ) -> Result<Vec<MultiplierSummary>> {
@@ -107,10 +107,7 @@ pub fn standard_multipliers(
     );
     let mut sel: Vec<Entry> = Vec::new();
     if let Some(lib) = lib {
-        sel = select_diverse(lib, f, &SELECTION_METRICS, k_per_metric)
-            .into_iter()
-            .cloned()
-            .collect();
+        sel = lib.select_diverse(f, &SELECTION_METRICS, k_per_metric);
     }
     if sel.is_empty() {
         // pre-campaign fallback: the paper's published baseline rows
@@ -406,7 +403,7 @@ mod tests {
         assert!(mults[0].is_exact);
         assert!(mults[1..].iter().all(|m| !m.is_exact));
         // library-backed roster is a pure function of its inputs
-        let lib = Library::baseline();
+        let lib = LibrarySource::baseline();
         let a = standard_multipliers(Some(&lib), 10, 6).unwrap();
         let b = standard_multipliers(Some(&lib), 10, 6).unwrap();
         assert_eq!(a.len(), b.len());

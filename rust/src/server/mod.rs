@@ -63,7 +63,7 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher, BatcherGuard, BatcherSta
 use crate::coordinator::metrics::Histogram;
 use crate::coordinator::{Coordinator, KernelKind};
 use crate::dse::{run_dse, DseConfig};
-use crate::library::{pareto_indices, Entry, Library};
+use crate::library::{metric_slot, LibrarySource};
 use crate::resilience::{
     per_layer_campaign_cached, standard_multipliers, EvalCache, EvalKey, MultiplierSummary,
 };
@@ -140,7 +140,7 @@ struct SelectCandidate {
 /// Shared state behind every worker.
 struct ServerState {
     coord: Coordinator,
-    library: Library,
+    library: LibrarySource,
     cfg: ServerConfig,
     addr: SocketAddr,
     image_len: usize,
@@ -155,6 +155,12 @@ struct ServerState {
     /// re-simulates every candidate's 65536-entry LUT — too heavy to
     /// repeat on the synchronous select path once accuracies are cached.
     rosters: Mutex<HashMap<usize, Arc<Vec<MultiplierSummary>>>>,
+    /// Memoised `/v1/library/pareto` response bodies keyed by
+    /// `(library fingerprint, metric slot, fn)`. Compiled stores answer
+    /// from their precomputed fronts; JSON-backed stores re-derive the
+    /// front once, after which the rendered body is served from here.
+    /// The fingerprint key keeps the memo correct if the source changes.
+    pareto_cache: Mutex<HashMap<(u64, u8, ArithFn), Arc<String>>>,
     shutdown: AtomicBool,
     http: HttpMetrics,
     started: Instant,
@@ -195,7 +201,12 @@ impl Server {
     /// Bind `cfg.addr`, warm the served model and start the acceptor +
     /// worker threads. The coordinator stays owned by the caller (keep its
     /// `CoordinatorGuard` alive for the server's lifetime).
-    pub fn start(coord: Coordinator, library: Library, cfg: ServerConfig) -> Result<ServerHandle> {
+    pub fn start(
+        coord: Coordinator,
+        library: impl Into<LibrarySource>,
+        cfg: ServerConfig,
+    ) -> Result<ServerHandle> {
+        let library = library.into();
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding HTTP listener on {}", cfg.addr))?;
         let addr = listener.local_addr().context("resolving bound address")?;
@@ -228,6 +239,7 @@ impl Server {
             jobs: JobStore::new(),
             cache: EvalCache::new(),
             rosters: Mutex::new(HashMap::new()),
+            pareto_cache: Mutex::new(HashMap::new()),
             shutdown: AtomicBool::new(false),
             http: HttpMetrics::default(),
             started: Instant::now(),
@@ -390,6 +402,15 @@ impl Response {
             status,
             content_type: "application/json",
             body: j.to_string(),
+            shutdown_after: false,
+        }
+    }
+
+    fn json_body(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body,
             shutdown_after: false,
         }
     }
@@ -768,23 +789,39 @@ fn handle_pareto(state: &ServerState, target: &Target) -> Response {
         Ok(f) => f,
         Err(e) => return Response::error(400, e),
     };
-    let all = state.library.for_fn(f);
-    let front_idx = pareto_indices(&all, metric);
-    let mut front: Vec<&Entry> = front_idx.iter().map(|&i| all[i]).collect();
+    // The front is a pure function of the loaded library: compiled stores
+    // carry it precomputed, JSON stores derive it once, and the rendered
+    // body is memoised per (fingerprint, metric, fn) either way.
+    let key = (state.library.fingerprint(), metric_slot(metric) as u8, f);
+    if let Some(body) = state
+        .pareto_cache
+        .lock()
+        .expect("pareto cache poisoned")
+        .get(&key)
+    {
+        return Response::json_body(200, String::clone(body));
+    }
+    let (population, mut front) = state.library.pareto_front(f, metric);
     front.sort_by(|a, b| a.cost.power_uw.total_cmp(&b.cost.power_uw));
-    Response::json(
-        200,
+    let body = Arc::new(
         Json::obj([
             ("metric", metric.name().into()),
             ("fn", f.tag().into()),
-            ("population", all.len().into()),
+            ("population", population.into()),
             ("count", front.len().into()),
             (
                 "front",
-                Json::Arr(front.iter().map(|e| report::entry_to_json(e)).collect()),
+                Json::Arr(front.iter().map(report::entry_to_json).collect()),
             ),
-        ]),
-    )
+        ])
+        .to_string(),
+    );
+    state
+        .pareto_cache
+        .lock()
+        .expect("pareto cache poisoned")
+        .insert(key, body.clone());
+    Response::json_body(200, String::clone(&body))
 }
 
 impl ServerState {

@@ -7,7 +7,7 @@
 //! in-process campaign" can be asserted byte-for-byte.
 
 use crate::dse::{DsePoint, DseReport};
-use crate::library::{Entry, Library};
+use crate::library::{Entry, LibrarySource};
 use crate::resilience::Fig4Report;
 use crate::util::json::Json;
 
@@ -32,7 +32,10 @@ pub fn entry_to_json(e: &Entry) -> Json {
 /// Each row also carries the group's `CircuitCost` spread (`area_um2_*`,
 /// `delay_ps_*`) — the paper's Pareto fronts rank on more than power —
 /// while keeping the original fields so existing clients parse unchanged.
-pub fn census_to_json(lib: &Library) -> Json {
+/// Takes a [`LibrarySource`] so JSON-backed and compiled stores render
+/// through the same function — compiled census rows come straight from
+/// the precomputed section, so the bodies match byte-for-byte.
+pub fn census_to_json(lib: &LibrarySource) -> Json {
     Json::obj([
         ("total", lib.len().into()),
         (
@@ -144,7 +147,7 @@ mod tests {
 
     #[test]
     fn census_shape() {
-        let lib = Library::baseline();
+        let lib = LibrarySource::baseline();
         let j = census_to_json(&lib);
         assert_eq!(j.req_i64("total").unwrap() as usize, lib.len());
         let rows = j.req_arr("census").unwrap();
@@ -203,7 +206,7 @@ mod tests {
 
     #[test]
     fn entry_and_fig4_round_trip_canonically() {
-        let lib = Library::baseline();
+        let lib = crate::library::Library::baseline();
         let e = &lib.entries()[0];
         let j = entry_to_json(e);
         // canonical: serialise → parse → serialise is a fixed point

@@ -7,3 +7,67 @@ pub mod json;
 pub mod table;
 
 pub use json::Json;
+
+/// Atomically replace `path` with `bytes`: write a temp file in the same
+/// directory, then `rename(2)` over the destination. A crash mid-save
+/// leaves either the old file or the new one — never a truncated hybrid.
+/// The temp name embeds the pid so concurrent writers in the same
+/// directory don't clobber each other's staging files.
+pub fn atomic_write(path: impl AsRef<std::path::Path>, bytes: &[u8]) -> std::io::Result<()> {
+    let path = path.as_ref();
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidInput, "path has no file name"))?;
+    let tmp_name = format!(
+        ".{}.tmp.{}",
+        file_name.to_string_lossy(),
+        std::process::id()
+    );
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+    std::fs::write(&tmp, bytes)?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::atomic_write;
+
+    #[test]
+    fn atomic_write_replaces_existing_destination() {
+        let dir = std::env::temp_dir().join("evoapprox_test_atomic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.txt");
+        std::fs::write(&path, b"old contents, longer than the new ones").unwrap();
+        atomic_write(&path, b"new").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"new");
+        // no staging file left behind
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn atomic_write_creates_fresh_file() {
+        let dir = std::env::temp_dir().join("evoapprox_test_atomic_fresh");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fresh.bin");
+        std::fs::remove_file(&path).ok();
+        atomic_write(&path, &[1, 2, 3]).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), vec![1, 2, 3]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

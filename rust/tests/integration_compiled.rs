@@ -1,0 +1,196 @@
+//! Integration: the compiled binary library store (DESIGN.md §10).
+//!
+//! Covers the storage-layer contract end to end:
+//! * `library compile`-style lowering → cold `LibrarySource::open` is
+//!   field-exact for every entry, including wide (64/128-bit) circuits;
+//! * precomputed census rows and Pareto fronts equal what the JSON path
+//!   derives per query;
+//! * corrupted, truncated or mislabelled files are rejected at open;
+//! * a server cold-started on a compiled store answers the library and
+//!   selection endpoints byte-for-byte like a JSON-backed server.
+
+use evoapproxlib::circuit::baselines::{bam_multiplier, truncated_multiplier};
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::generators::ripple_carry_adder;
+use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig};
+use evoapproxlib::library::{
+    compile_library, CompiledLibrary, Entry, Library, LibrarySource, Origin, METRIC_ORDER,
+};
+use evoapproxlib::server::{http, Server, ServerConfig};
+
+fn scratch_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A mixed-width library: 8-bit multipliers (exhaustive characterisation)
+/// plus 8/64/128-bit adders (the wide sampled path).
+fn mixed_width_library() -> Library {
+    let model = CostModel::default();
+    let mut lib = Library::new();
+    for (h, v) in [(0, 4), (1, 6), (2, 7)] {
+        lib.insert(Entry::characterise(
+            bam_multiplier(8, h, v),
+            ArithFn::Mul { w: 8 },
+            &model,
+            Origin::Bam { h, v },
+        ));
+    }
+    lib.insert(Entry::characterise(
+        truncated_multiplier(8, 6),
+        ArithFn::Mul { w: 8 },
+        &model,
+        Origin::Truncated { keep: 6 },
+    ));
+    for w in [8u32, 64, 128] {
+        lib.insert(Entry::characterise(
+            ripple_carry_adder(w),
+            ArithFn::Add { w },
+            &model,
+            Origin::Seed(format!("rca{w}")),
+        ));
+    }
+    lib
+}
+
+#[test]
+fn compile_load_round_trip_is_field_exact_including_wide() {
+    let dir = scratch_dir("evoapprox_itest_compiled_roundtrip");
+    let lib = mixed_width_library();
+    let path = dir.join("lib.bin");
+    std::fs::write(&path, compile_library(&lib)).unwrap();
+
+    let src = LibrarySource::open(&path).unwrap();
+    assert!(src.is_compiled());
+    assert_eq!(src.len(), lib.len());
+    assert_eq!(src.census_rows(), lib.census_rows());
+
+    for want in lib.entries() {
+        let got = src.get(&want.id).unwrap_or_else(|| panic!("missing {}", want.id));
+        assert_eq!(got.id, want.id);
+        assert_eq!(got.f, want.f);
+        assert_eq!(got.netlist, want.netlist, "{}", want.id);
+        assert_eq!(got.metrics, want.metrics, "{}", want.id);
+        assert_eq!(got.rel, want.rel, "{}", want.id);
+        assert_eq!(got.cost, want.cost, "{}", want.id);
+        assert_eq!(got.origin, want.origin, "{}", want.id);
+    }
+
+    // precomputed fronts equal the per-query JSON derivation, for every
+    // function (8/64/128-bit) and every metric
+    let json_src = LibrarySource::from(lib);
+    for f in [
+        ArithFn::Mul { w: 8 },
+        ArithFn::Add { w: 8 },
+        ArithFn::Add { w: 64 },
+        ArithFn::Add { w: 128 },
+    ] {
+        assert_eq!(src.for_fn_len(f), json_src.for_fn_len(f), "{f:?}");
+        for m in METRIC_ORDER {
+            let (p1, f1) = json_src.pareto_front(f, m);
+            let (p2, f2) = src.pareto_front(f, m);
+            assert_eq!(p1, p2, "{f:?} {m:?} population");
+            let ids1: Vec<&str> = f1.iter().map(|e| e.id.as_str()).collect();
+            let ids2: Vec<&str> = f2.iter().map(|e| e.id.as_str()).collect();
+            assert_eq!(ids1, ids2, "{f:?} {m:?} front");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_and_truncated_files_are_rejected() {
+    let dir = scratch_dir("evoapprox_itest_compiled_corruption");
+    let lib = Library::baseline();
+    let bytes = compile_library(&lib);
+
+    let pristine = dir.join("ok.bin");
+    std::fs::write(&pristine, &bytes).unwrap();
+    assert!(LibrarySource::open(&pristine).is_ok());
+    assert!(CompiledLibrary::open(&pristine).is_ok());
+
+    // bad magic: not sniffed as a compiled store, and not JSON either
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xFF;
+    let p = dir.join("magic.bin");
+    std::fs::write(&p, &bad).unwrap();
+    assert!(LibrarySource::open(&p).is_err());
+
+    // truncation at several depths: inside the header, inside the record
+    // table, and just shy of the full payload
+    for keep in [7usize, 40, bytes.len() / 2, bytes.len() - 1] {
+        let p = dir.join(format!("trunc_{keep}.bin"));
+        std::fs::write(&p, &bytes[..keep]).unwrap();
+        let err = CompiledLibrary::open(&p).expect_err(&format!("keep={keep}"));
+        assert!(!err.to_string().is_empty());
+    }
+
+    // a flipped payload byte fails the checksum
+    let mut flipped = bytes.clone();
+    let mid = flipped.len() - 9;
+    flipped[mid] ^= 0x01;
+    let p = dir.join("flip.bin");
+    std::fs::write(&p, &flipped).unwrap();
+    let err = CompiledLibrary::open(&p).expect_err("bit flip");
+    assert!(err.to_string().contains("checksum"), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Boot one server on the JSON file and one on the compiled store (same
+/// coordinator, same library content) and require byte-identical bodies
+/// from the census, Pareto and selection endpoints. The second Pareto
+/// request per server exercises the memoised-response path.
+#[test]
+fn json_and_compiled_servers_serve_identical_bytes() {
+    let dir = scratch_dir("evoapprox_itest_compiled_server");
+    let lib = Library::baseline();
+    let json_path = dir.join("lib.json");
+    lib.save(&json_path).unwrap();
+    let bin_path = dir.join("lib.bin");
+    std::fs::write(&bin_path, compile_library(&lib)).unwrap();
+
+    let coord_dir = dir.join("no_artifacts");
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::native(coord_dir)).unwrap();
+    let cfg = || ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        ..Default::default()
+    };
+    let json_srv = Server::start(
+        coord.clone(),
+        LibrarySource::open(&json_path).unwrap(),
+        cfg(),
+    )
+    .unwrap();
+    let bin_srv = Server::start(
+        coord.clone(),
+        LibrarySource::open(&bin_path).unwrap(),
+        cfg(),
+    )
+    .unwrap();
+    let a = json_srv.addr().to_string();
+    let b = bin_srv.addr().to_string();
+
+    for path in [
+        "/v1/library/census",
+        "/v1/library/pareto?metric=MAE&fn=mul&width=8",
+        "/v1/library/pareto?metric=MAE&fn=mul&width=8", // memoised replay
+        "/v1/library/pareto?metric=ER&fn=mul&width=8",
+        "/v1/library/pareto?metric=WCE&fn=mul&width=8",
+        "/v1/select?max_accuracy_drop=0.1&images=4&limit=2",
+    ] {
+        let (s1, body1) = http::get(&a, path).unwrap();
+        let (s2, body2) = http::get(&b, path).unwrap();
+        assert_eq!(s1, 200, "{path}: {body1}");
+        assert_eq!(s2, 200, "{path}: {body2}");
+        assert_eq!(body1, body2, "{path} must be byte-identical");
+    }
+
+    json_srv.shutdown();
+    bin_srv.shutdown();
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -15,7 +15,7 @@ use std::time::{Duration, Instant};
 
 use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, CoordinatorGuard, KernelKind};
 use evoapproxlib::dse::{run_dse, DseConfig};
-use evoapproxlib::library::Library;
+use evoapproxlib::library::{Library, LibrarySource};
 use evoapproxlib::resilience::{
     per_layer_campaign, per_layer_campaign_cached, standard_multipliers, EvalCache,
 };
@@ -43,7 +43,7 @@ fn small_cfg() -> DseConfig {
 #[test]
 fn per_layer_campaign_is_jobs_and_cache_invariant() {
     let (coord, _guard) = native_coordinator();
-    let lib = Library::baseline();
+    let lib = LibrarySource::baseline();
     let mults = standard_multipliers(Some(&lib), 10, 3).unwrap();
     let testset = TestSet::synthetic(8);
 
@@ -83,7 +83,7 @@ fn per_layer_campaign_is_jobs_and_cache_invariant() {
 #[test]
 fn dse_is_deterministic_and_front_dominates_best_uniform() {
     let (coord, _guard) = native_coordinator();
-    let lib = Library::baseline();
+    let lib = LibrarySource::baseline();
     let cfg = small_cfg();
     let testset = TestSet::synthetic(12);
 
@@ -185,7 +185,7 @@ fn http_dse_job_matches_in_process_byte_for_byte() {
     cfg.jobs = 1;
     let reference = run_dse(
         &coord,
-        Some(&Library::baseline()),
+        Some(&LibrarySource::baseline()),
         &cfg,
         &TestSet::synthetic(8),
         &EvalCache::new(),

@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 
 use evoapproxlib::coordinator::batcher::BatchPolicy;
 use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, CoordinatorGuard, KernelKind};
-use evoapproxlib::library::Library;
+use evoapproxlib::library::{Library, LibrarySource};
 use evoapproxlib::resilience::{per_layer_campaign, standard_multipliers};
 use evoapproxlib::runtime::{broadcast_lut, exact_lut, TestSet};
 use evoapproxlib::server::report::fig4_to_json;
@@ -216,7 +216,7 @@ fn campaign_job_matches_in_process_byte_for_byte() {
     // the in-process reference: same roster builder, same synthetic split,
     // same campaign — job count intentionally different (1 vs 3); the
     // deterministic pool contract makes that invisible in the bytes
-    let lib = Library::baseline();
+    let lib = LibrarySource::baseline();
     let mults = standard_multipliers(Some(&lib), 10, multipliers).unwrap();
     let testset = TestSet::synthetic(images);
     let reference =
