@@ -5,7 +5,22 @@
 //! `max_wait` elapses, then dispatches one PJRT execution and fans the
 //! per-image results back out — the same shape as a vLLM-style router's
 //! continuous batching, specialised to fixed-size classification batches.
+//!
+//! Two completion styles share one queue:
+//!
+//! * **channel** ([`Batcher::classify`] / [`Batcher::classify_async`]) —
+//!   the caller blocks on (or polls) a reply channel; used by in-process
+//!   callers and tests;
+//! * **callback** ([`Batcher::classify_with`]) — the prediction is
+//!   delivered by invoking a closure on the batcher thread; this is what
+//!   lets the evented HTTP server park a predict request without holding
+//!   any thread, and it is the mechanism behind its throughput edge over
+//!   the old blocking worker pool (DESIGN.md §11).
+//!
+//! [`Batcher::queue_depth`] exposes the number of submitted-but-unanswered
+//! requests — the server's backpressure signal.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -15,10 +30,30 @@ use anyhow::{anyhow, Result};
 
 use super::{Coordinator, KernelKind};
 
+/// How a finished prediction reaches its requester.
+enum Completion {
+    /// Send on a reply channel (blocking/polling callers).
+    Channel(Sender<Result<u8>>),
+    /// Invoke a closure on the batcher thread (evented callers — keep it
+    /// cheap: hand the result off, don't compute in it).
+    Callback(Box<dyn FnOnce(Result<u8>) + Send>),
+}
+
+impl Completion {
+    fn deliver(self, r: Result<u8>) {
+        match self {
+            Completion::Channel(tx) => {
+                let _ = tx.send(r);
+            }
+            Completion::Callback(f) => f(r),
+        }
+    }
+}
+
 /// One in-flight request.
 struct Pending {
     image: Vec<f32>,
-    reply: Sender<Result<u8>>,
+    reply: Completion,
     enqueued: Instant,
 }
 
@@ -45,6 +80,7 @@ impl Default for BatchPolicy {
 pub struct Batcher {
     tx: Sender<Pending>,
     image_len: usize,
+    depth: Arc<AtomicU64>,
 }
 
 /// Join handle for the batcher thread.
@@ -93,50 +129,74 @@ impl Batcher {
         let image_len = h * w * c;
         let model = model.to_string();
         let (tx, rx) = channel::<Pending>();
-        let handle = std::thread::Builder::new()
-            .name("batcher".into())
-            .spawn(move || batcher_loop(rx, coord, model, kernel, luts, policy, image_len))?;
+        let depth = Arc::new(AtomicU64::new(0));
+        let loop_depth = depth.clone();
+        let handle = std::thread::Builder::new().name("batcher".into()).spawn(
+            move || batcher_loop(rx, coord, model, kernel, luts, policy, image_len, loop_depth),
+        )?;
         Ok((
-            Batcher { tx, image_len },
+            Batcher {
+                tx,
+                image_len,
+                depth,
+            },
             BatcherGuard {
                 handle: Some(handle),
             },
         ))
     }
 
-    /// Submit one image; blocks until its class prediction is ready.
-    pub fn classify(&self, image: Vec<f32>) -> Result<u8> {
+    fn submit(&self, image: Vec<f32>, reply: Completion) -> Result<()> {
         if image.len() != self.image_len {
             anyhow::bail!("image length {} != {}", image.len(), self.image_len);
         }
-        let (rtx, rrx) = channel();
+        // count before sending: a request is "pending" the instant it is
+        // accepted, so the backpressure gauge can never under-read
+        self.depth.fetch_add(1, Ordering::Relaxed);
         self.tx
             .send(Pending {
                 image,
-                reply: rtx,
+                reply,
                 enqueued: Instant::now(),
             })
-            .map_err(|_| anyhow!("batcher stopped"))?;
+            .map_err(|_| {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                anyhow!("batcher stopped")
+            })
+    }
+
+    /// Submit one image; blocks until its class prediction is ready.
+    pub fn classify(&self, image: Vec<f32>) -> Result<u8> {
+        let (rtx, rrx) = channel();
+        self.submit(image, Completion::Channel(rtx))?;
         rrx.recv().map_err(|_| anyhow!("batcher stopped"))?
     }
 
     /// Submit one image without waiting; returns the reply channel.
     pub fn classify_async(&self, image: Vec<f32>) -> Result<Receiver<Result<u8>>> {
-        if image.len() != self.image_len {
-            anyhow::bail!("image length {} != {}", image.len(), self.image_len);
-        }
         let (rtx, rrx) = channel();
-        self.tx
-            .send(Pending {
-                image,
-                reply: rtx,
-                enqueued: Instant::now(),
-            })
-            .map_err(|_| anyhow!("batcher stopped"))?;
+        self.submit(image, Completion::Channel(rtx))?;
         Ok(rrx)
+    }
+
+    /// Submit one image with a completion callback, invoked on the batcher
+    /// thread once the prediction (or failure) is known. The evented
+    /// server's predict path: no thread waits between submit and delivery.
+    pub fn classify_with(
+        &self,
+        image: Vec<f32>,
+        done: impl FnOnce(Result<u8>) + Send + 'static,
+    ) -> Result<()> {
+        self.submit(image, Completion::Callback(Box::new(done)))
+    }
+
+    /// Requests submitted but not yet answered — the backpressure gauge.
+    pub fn queue_depth(&self) -> u64 {
+        self.depth.load(Ordering::Relaxed)
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn batcher_loop(
     rx: Receiver<Pending>,
     coord: Coordinator,
@@ -145,6 +205,7 @@ fn batcher_loop(
     luts: Arc<Vec<i32>>,
     policy: BatchPolicy,
     image_len: usize,
+    depth: Arc<AtomicU64>,
 ) -> BatcherStats {
     let mut stats = BatcherStats::default();
     let mut occupancy_sum = 0.0f64;
@@ -166,7 +227,7 @@ fn batcher_loop(
                 Ok(p) => Some(p),
                 Err(RecvTimeoutError::Timeout) => None,
                 Err(RecvTimeoutError::Disconnected) => {
-                    dispatch(&coord, &model, kernel, &luts, &mut queue, image_len, policy.max_batch, &mut stats, &mut occupancy_sum);
+                    dispatch(&coord, &model, kernel, &luts, &mut queue, image_len, policy.max_batch, &mut stats, &mut occupancy_sum, &depth);
                     break;
                 }
             }
@@ -189,7 +250,7 @@ fn batcher_loop(
             .map(|p| p.enqueued.elapsed() >= policy.max_wait)
             .unwrap_or(false);
         if queue.len() >= policy.max_batch || (deadline_hit && !queue.is_empty()) {
-            dispatch(&coord, &model, kernel, &luts, &mut queue, image_len, policy.max_batch, &mut stats, &mut occupancy_sum);
+            dispatch(&coord, &model, kernel, &luts, &mut queue, image_len, policy.max_batch, &mut stats, &mut occupancy_sum, &depth);
         }
     }
     if stats.batches > 0 {
@@ -209,6 +270,7 @@ fn dispatch(
     max_batch: usize,
     stats: &mut BatcherStats,
     occupancy_sum: &mut f64,
+    depth: &AtomicU64,
 ) {
     // Never hand the engine more than `max_batch` requests at once: drain
     // in chunks and re-loop for the remainder, so occupancy stays ≤ 1 and
@@ -229,16 +291,17 @@ fn dispatch(
         stats.batches += 1;
         stats.requests += take.len() as u64;
         *occupancy_sum += take.len() as f64 / max_batch as f64;
+        depth.fetch_sub(take.len() as u64, Ordering::Relaxed);
         match preds {
             Ok(preds) => {
                 for (p, pred) in take.into_iter().zip(preds) {
-                    let _ = p.reply.send(Ok(pred));
+                    p.reply.deliver(Ok(pred));
                 }
             }
             Err(e) => {
                 let msg = format!("{e:#}");
                 for p in take {
-                    let _ = p.reply.send(Err(anyhow!("{msg}")));
+                    p.reply.deliver(Err(anyhow!("{msg}")));
                 }
             }
         }
@@ -272,11 +335,12 @@ mod tests {
         let n = 2 * max_batch + 1; // forces 2 full chunks + 1 remainder
         let mut queue = Vec::new();
         let mut replies = Vec::new();
+        let depth = AtomicU64::new(n as u64);
         for _ in 0..n {
             let (rtx, rrx) = channel();
             queue.push(Pending {
                 image: vec![0.25; image_len],
-                reply: rtx,
+                reply: Completion::Channel(rtx),
                 enqueued: Instant::now(),
             });
             replies.push(rrx);
@@ -293,16 +357,56 @@ mod tests {
             max_batch,
             &mut stats,
             &mut occupancy_sum,
+            &depth,
         );
         assert!(queue.is_empty());
         assert_eq!(stats.batches, 3);
         assert_eq!(stats.full_batches, 2);
         assert_eq!(stats.requests, n as u64);
+        assert_eq!(depth.load(Ordering::Relaxed), 0, "gauge must drain to zero");
         let mean = occupancy_sum / stats.batches as f64;
         assert!(mean <= 1.0, "mean occupancy {mean} must not exceed 1.0");
         for rx in replies {
             assert!(rx.recv().unwrap().is_ok(), "every request must be answered");
         }
+        coord.shutdown();
+    }
+
+    /// The callback completion style delivers the same predictions as the
+    /// channel style — same queue, same dispatch path.
+    #[test]
+    fn callback_completions_match_channel_completions() {
+        let dir = std::env::temp_dir().join("evoapprox_batcher_cb_no_artifacts");
+        let (coord, _guard) = Coordinator::start(CoordinatorConfig::native(dir)).unwrap();
+        let meta = coord.manifest().model("resnet8").unwrap();
+        let (h, w, c) = meta.image_dims;
+        let image_len = h * w * c;
+        let luts = Arc::new(broadcast_lut(&exact_lut(), meta.n_conv_layers));
+        let (batcher, guard) = Batcher::spawn(
+            coord.clone(),
+            "resnet8",
+            KernelKind::Jnp,
+            luts,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(5),
+            },
+        )
+        .unwrap();
+        let image = vec![0.5f32; image_len];
+        let via_channel = batcher.classify(image.clone()).unwrap();
+        let (tx, rx) = channel();
+        batcher
+            .classify_with(image, move |r| {
+                let _ = tx.send(r);
+            })
+            .unwrap();
+        let via_callback = rx.recv().unwrap().unwrap();
+        assert_eq!(via_channel, via_callback);
+        assert_eq!(batcher.queue_depth(), 0);
+        drop(batcher);
+        let stats = guard.join();
+        assert_eq!(stats.requests, 2);
         coord.shutdown();
     }
 }

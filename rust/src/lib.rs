@@ -53,11 +53,16 @@
 //!   (`auto`/`native`/`pjrt`), job scheduling of evolution and analysis
 //!   campaigns, a dynamic batcher in front of the engines, and service
 //!   metrics (with a Prometheus-style histogram renderer).
-//! * [`server`] — the L4 service layer: a std-only HTTP/1.1 server
-//!   (`evoapprox serve`) exposing classification through the batcher,
-//!   library census/Pareto/selection queries, async resilience-campaign
-//!   jobs and a Prometheus `/metrics` exporter, plus the tiny in-crate
-//!   HTTP client the `loadgen` bench drives it with (DESIGN.md §7).
+//! * [`server`] — the L4 service layer: a std-only evented HTTP/1.1
+//!   server (`evoapprox serve`) built on a `poll(2)` readiness loop with
+//!   keep-alive, pipelining, slowloris/idle deadlines and explicit 429
+//!   backpressure, exposing classification through the batcher (deferred
+//!   completions — no blocked threads), library census/Pareto/selection
+//!   queries, bounded async campaign jobs and a Prometheus `/metrics`
+//!   exporter; the `evoapprox fleet` shard/replica router scales the
+//!   same surface across supervised `serve` processes, and the in-crate
+//!   keep-alive HTTP client drives both from tests and the open-loop
+//!   `loadgen` bench (DESIGN.md §7, §11).
 //! * [`data`] — synthetic CIFAR-like dataset generation (shared, seeded
 //!   generator mirrored by `python/compile/data.py`).
 //!

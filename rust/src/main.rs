@@ -28,8 +28,14 @@
 //!                   # probe → model-guided search → verified Pareto front
 //! evoapprox serve   [--addr 127.0.0.1:8080] [--workers 4] [--model resnet8]
 //!                   [--backend KIND] [--library lib.json] [--max-wait-ms 20]
+//!                   [--addr-file FILE]
 //!                   # HTTP service: predict, library queries, campaign
 //!                   # jobs, /metrics — POST /v1/admin/shutdown stops it
+//! evoapprox fleet   [--addr 127.0.0.1:8080] [--shards 2] [--backend KIND]
+//!                   [--model resnet8] [--library lib.json] [--workers 4]
+//!                   # shard/replica router over N serve processes:
+//!                   # replicated predict/reads, model-sharded campaigns,
+//!                   # fleet-wide job ids and aggregated /metrics
 //! ```
 
 use evoapproxlib::cgp::{
@@ -192,6 +198,22 @@ const COMMANDS: &[CommandSpec] = &[
             FlagSpec { name: "max-wait-ms", value: Some("MS"), help: "batching deadline (default 20)" },
             FlagSpec { name: "max-batch", value: Some("N"), help: "max images per dispatched batch (default 64)" },
             FlagSpec { name: "intra-jobs", value: Some("N"), help: "worker threads inside one native forward batch (default 1)" },
+            FlagSpec { name: "addr-file", value: Some("FILE"), help: "write the bound address here once listening (fleet handshake)" },
+        ],
+    },
+    CommandSpec {
+        name: "fleet",
+        about: "shard/replica router over N serve processes (scale-out serving)",
+        flags: &[
+            ARTIFACTS_FLAG,
+            BACKEND_FLAG,
+            FlagSpec { name: "addr", value: Some("HOST:PORT"), help: "router bind address (default 127.0.0.1:8080; port 0 = ephemeral)" },
+            FlagSpec { name: "shards", value: Some("N"), help: "shard processes to spawn and supervise (default 2)" },
+            FlagSpec { name: "model", value: Some("NAME"), help: "served network (default resnet8)" },
+            FlagSpec { name: "library", value: Some("FILE"), help: "library file forwarded to every shard" },
+            FlagSpec { name: "workers", value: Some("N"), help: "worker flag forwarded to each shard (default 4)" },
+            FlagSpec { name: "max-wait-ms", value: Some("MS"), help: "shard batching deadline (default 20)" },
+            FlagSpec { name: "max-batch", value: Some("N"), help: "shard max images per batch (default 64)" },
         ],
     },
 ];
@@ -216,6 +238,7 @@ fn main() {
         "table2" => cmd_table2(&cli),
         "dse" => cmd_dse(&cli),
         "serve" => cmd_serve(&cli),
+        "fleet" => cmd_fleet(&cli),
         _ => {
             print!("{}", render_help("evoapprox", ABOUT, COMMANDS));
             Ok(())
@@ -806,6 +829,11 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
     };
     let model = cfg.model.clone();
     let handle = Server::start(coord.clone(), library, cfg)?;
+    // fleet handshake: publish the bound address (resolves port 0)
+    // atomically so a watching router never reads a partial write
+    if let Some(path) = cli.get("addr-file") {
+        evoapproxlib::util::atomic_write(path, handle.addr().to_string().as_bytes())?;
+    }
     println!(
         "evoapprox server on http://{} — {} backend, model {model}",
         handle.addr(),
@@ -823,6 +851,10 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
         report.request_p99_us
     );
     println!(
+        "connections: {} accepted, {} keep-alive reuses, {} requests shed (429)",
+        report.accepted_conns, report.keepalive_reuses, report.shed_429
+    );
+    println!(
         "batcher: {} requests in {} batches ({} full), mean occupancy {:.2}; {} campaign jobs",
         report.batcher.requests,
         report.batcher.batches,
@@ -832,5 +864,48 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
     );
     println!("{:#?}", coord.metrics());
     coord.shutdown();
+    Ok(())
+}
+
+fn cmd_fleet(cli: &Cli) -> anyhow::Result<()> {
+    use evoapproxlib::server::fleet::{Fleet, FleetConfig};
+
+    let cfg = FleetConfig {
+        addr: cli.flag_str("addr", "127.0.0.1:8080"),
+        shards: cli.flag("shards", 2usize)?,
+        backend: cli.flag_str("backend", "auto"),
+        model: cli.flag_str("model", "resnet8"),
+        workers: cli.flag("workers", 4usize)?,
+        library: cli.get("library").map(str::to_string),
+        artifacts: cli.get("artifacts").map(str::to_string),
+        max_wait_ms: cli.flag("max-wait-ms", 20u64)?,
+        max_batch: cli.flag("max-batch", 64usize)?,
+        shard_exe: None,
+    };
+    let shards = cfg.shards;
+    let model = cfg.model.clone();
+    let handle = Fleet::start(cfg)?;
+    println!(
+        "evoapprox fleet router on http://{} — {shards} shards, model {model}",
+        handle.addr()
+    );
+    for (i, addr) in handle.shard_addrs().iter().enumerate() {
+        println!("  shard {i}: http://{addr}");
+    }
+    println!("routing: predict/reads replicated round-robin; campaigns and DSE sharded by model");
+    println!("POST /v1/admin/shutdown stops the fleet (router + all shards)");
+    let report = handle.join();
+    println!(
+        "routed {} requests ({} ok / {} client err / {} server err) over {} connections",
+        report.requests,
+        report.responses_2xx,
+        report.responses_4xx,
+        report.responses_5xx,
+        report.accepted_conns
+    );
+    println!(
+        "keep-alive reuses {}, shard restarts {}",
+        report.keepalive_reuses, report.shard_restarts
+    );
     Ok(())
 }

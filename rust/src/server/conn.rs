@@ -1,0 +1,255 @@
+//! Per-connection state machine for the evented server.
+//!
+//! A [`Conn`] owns one non-blocking `TcpStream` plus its read and write
+//! buffers. The event loop (`server::event`) drives it edge by edge:
+//! [`Conn::fill`] pulls available bytes, the loop parses/dispatches
+//! requests out of `buf` (at most one outstanding request per connection —
+//! the pipelining guarantee), responses are queued with [`Conn::queue`]
+//! and drained by [`Conn::flush`]. All I/O here is strictly non-blocking:
+//! `WouldBlock` returns control to the poller, fatal errors latch
+//! [`Conn::closed`] and the loop reaps the connection.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// One live client connection.
+pub struct Conn {
+    /// The socket (non-blocking).
+    pub stream: TcpStream,
+    /// Whether the peer is a loopback address (admin-endpoint gate).
+    pub peer_is_loopback: bool,
+    /// Unparsed request bytes.
+    pub buf: Vec<u8>,
+    /// Rendered response bytes not yet written.
+    pub out: Vec<u8>,
+    /// Write cursor into `out`.
+    pub out_pos: usize,
+    /// A dispatched request is parked (deferred completion pending). While
+    /// set, no further request is parsed — the pipelining order guarantee
+    /// — and the socket is not read, so TCP flow control pushes back on
+    /// the peer.
+    pub awaiting: bool,
+    /// Keep-alive decision of the in-flight request (captured at dispatch
+    /// so a deferred completion renders the right `Connection` header).
+    pub cur_keep_alive: bool,
+    /// When the in-flight request was dispatched (latency clock).
+    pub cur_started: Instant,
+    /// Close once `out` drains (final response on this connection).
+    pub close_after_write: bool,
+    /// Peer sent EOF; no more requests will arrive.
+    pub peer_closed: bool,
+    /// Fatal: reap this connection (I/O error, or drained after close).
+    pub closed: bool,
+    /// Last byte moved in either direction (idle-timeout clock).
+    pub last_activity: Instant,
+    /// When the first byte of a not-yet-complete request arrived
+    /// (slowloris clock; `None` while idle between requests).
+    pub request_started: Option<Instant>,
+    /// Requests dispatched on this connection so far.
+    pub requests_served: u64,
+    /// Stop reading once `buf` reaches this size (bounds read-ahead of
+    /// pipelined requests; the kernel socket buffer takes over).
+    read_cap: usize,
+}
+
+impl Conn {
+    /// Wrap an accepted, already non-blocking stream.
+    pub fn new(stream: TcpStream, peer_is_loopback: bool, read_cap: usize) -> Conn {
+        let now = Instant::now();
+        Conn {
+            stream,
+            peer_is_loopback,
+            buf: Vec::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            awaiting: false,
+            cur_keep_alive: false,
+            cur_started: now,
+            close_after_write: false,
+            peer_closed: false,
+            closed: false,
+            last_activity: now,
+            request_started: None,
+            requests_served: 0,
+            read_cap,
+        }
+    }
+
+    /// Whether the poller should watch this connection for readability.
+    pub fn wants_read(&self) -> bool {
+        !self.closed
+            && !self.peer_closed
+            && !self.awaiting
+            && !self.close_after_write
+            && self.buf.len() < self.read_cap
+    }
+
+    /// Whether the poller should watch this connection for writability.
+    pub fn wants_write(&self) -> bool {
+        !self.closed && self.out_pos < self.out.len()
+    }
+
+    /// All queued output has been written.
+    pub fn out_drained(&self) -> bool {
+        self.out_pos >= self.out.len()
+    }
+
+    /// The loop can drop this connection.
+    pub fn done(&self) -> bool {
+        self.closed || (self.peer_closed && !self.awaiting && self.out_drained())
+    }
+
+    /// Read everything currently available (up to the read cap) into
+    /// `buf`. Never blocks.
+    pub fn fill(&mut self) {
+        let mut chunk = [0u8; 16 * 1024];
+        while self.buf.len() < self.read_cap {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.peer_closed = true;
+                    return;
+                }
+                Ok(n) => {
+                    self.buf.extend_from_slice(&chunk[..n]);
+                    self.last_activity = Instant::now();
+                    // a short read usually means the socket is drained;
+                    // poll is level-triggered, so stopping early is safe
+                    if n < chunk.len() {
+                        return;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.closed = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Append rendered response bytes to the write queue.
+    pub fn queue(&mut self, bytes: &[u8]) {
+        // compact instead of growing forever when the peer reads slowly
+        if self.out_pos > 0 && self.out_pos == self.out.len() {
+            self.out.clear();
+            self.out_pos = 0;
+        }
+        self.out.extend_from_slice(bytes);
+    }
+
+    /// Write as much queued output as the socket accepts. Never blocks.
+    /// Latches `closed` once everything is out and the connection is
+    /// marked close-after-write.
+    pub fn flush(&mut self) {
+        while self.out_pos < self.out.len() {
+            match self.stream.write(&self.out[self.out_pos..]) {
+                Ok(0) => {
+                    self.closed = true;
+                    return;
+                }
+                Ok(n) => {
+                    self.out_pos += n;
+                    self.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.closed = true;
+                    return;
+                }
+            }
+        }
+        if !self.out.is_empty() {
+            self.out.clear();
+            self.out_pos = 0;
+        }
+        if self.close_after_write {
+            self.closed = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Loopback pair: returns (server side non-blocking, client side).
+    fn pair() -> (Conn, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, peer) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        (Conn::new(server, peer.ip().is_loopback(), 1 << 20), client)
+    }
+
+    #[test]
+    fn fill_reads_available_bytes_without_blocking() {
+        let (mut conn, mut client) = pair();
+        assert!(conn.peer_is_loopback);
+        // nothing written yet: fill must return immediately, empty-handed
+        conn.fill();
+        assert!(conn.buf.is_empty());
+        assert!(!conn.peer_closed && !conn.closed);
+        client.write_all(b"GET / HTTP/1.1\r\n").unwrap();
+        client.flush().unwrap();
+        // give loopback delivery a moment, then read
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        conn.fill();
+        assert_eq!(conn.buf, b"GET / HTTP/1.1\r\n");
+    }
+
+    #[test]
+    fn fill_detects_peer_close() {
+        let (mut conn, client) = pair();
+        drop(client);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        conn.fill();
+        assert!(conn.peer_closed);
+        assert!(conn.done(), "no pending work: the loop may reap it");
+    }
+
+    #[test]
+    fn flush_writes_queued_output_and_honours_close_after_write() {
+        let (mut conn, mut client) = pair();
+        conn.queue(b"hello ");
+        conn.queue(b"world");
+        conn.close_after_write = true;
+        conn.flush();
+        assert!(conn.out_drained());
+        assert!(conn.closed, "close-after-write latches once drained");
+        drop(conn); // closes the socket so the client read sees EOF
+        let mut got = String::new();
+        client.read_to_string(&mut got).unwrap();
+        assert_eq!(got, "hello world");
+    }
+
+    #[test]
+    fn read_cap_bounds_the_buffer() {
+        let (mut conn, mut client) = pair();
+        conn.read_cap = 8;
+        client.write_all(&[b'x'; 64]).unwrap();
+        client.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        conn.fill();
+        assert!(
+            conn.buf.len() >= 8 && conn.buf.len() <= 16 * 1024,
+            "fill stops at the cap boundary (len {})",
+            conn.buf.len()
+        );
+        assert!(!conn.wants_read(), "over-cap connection must not poll for reads");
+    }
+
+    #[test]
+    fn awaiting_suppresses_reads_but_not_writes() {
+        let (mut conn, _client) = pair();
+        conn.awaiting = true;
+        assert!(!conn.wants_read());
+        conn.queue(b"partial");
+        assert!(conn.wants_write());
+        assert!(!conn.done(), "awaiting connections are never reaped");
+    }
+}

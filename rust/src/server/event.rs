@@ -1,0 +1,725 @@
+//! Readiness-polled event loop for the HTTP server.
+//!
+//! One thread multiplexes the listener, a wake channel and every live
+//! connection through `poll(2)` (via the vendored `libc` shim). The old
+//! acceptor + blocking-worker-per-connection model parked a thread on each
+//! slow client; here no thread ever blocks on a socket, so concurrency is
+//! bounded by `max_conns` instead of the worker count.
+//!
+//! Protocol surface:
+//!
+//! * **Keep-alive + pipelining** — HTTP/1.1 connections persist by default
+//!   (`Connection: close` opts out, `max_requests_per_conn` caps reuse).
+//!   Pipelined requests are answered strictly in order because at most one
+//!   request per connection is ever in flight; while one is parked the
+//!   socket is not even read, so TCP flow control throttles the peer.
+//! * **Deferred completion** — a handler may return [`Outcome::Deferred`]
+//!   and later resolve the request from any thread via
+//!   [`Completions::deliver`]; the loop is interrupted by a [`Waker`]
+//!   writing to an in-process socket pair. This is how predict requests
+//!   ride the batcher without blocking anything.
+//! * **Deadlines** — a request that trickles in slower than
+//!   `request_read_timeout` is answered `408` and closed (slowloris
+//!   defence); a connection idle between requests longer than
+//!   `idle_timeout` is silently closed.
+//! * **Shutdown** — once the shutdown flag is observed the listener stops
+//!   being polled, idle connections close immediately, and in-flight
+//!   requests get [`SHUTDOWN_DRAIN_CAP`] to finish.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read};
+use std::net::TcpListener;
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Histogram;
+use crate::server::conn::Conn;
+use crate::server::http;
+use crate::util::json::Json;
+
+/// How long in-flight requests get to finish after shutdown is observed.
+pub const SHUTDOWN_DRAIN_CAP: Duration = Duration::from_secs(30);
+
+/// Slack added on top of header + body limits for the per-connection
+/// read-ahead cap (room for pipelined request heads).
+const READ_CAP_SLACK: usize = 64 * 1024;
+
+/// A rendered-but-not-yet-serialised HTTP response.
+#[derive(Debug)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// Response body.
+    pub body: String,
+    /// Trip the server-wide shutdown flag after this response is queued.
+    pub shutdown_after: bool,
+    /// Emit a `Retry-After: <secs>` header (backpressure responses).
+    pub retry_after: Option<u32>,
+}
+
+impl Response {
+    /// JSON response from a [`Json`] value.
+    pub fn json(status: u16, j: Json) -> Response {
+        Response::json_body(status, j.to_string())
+    }
+
+    /// JSON response from an already-rendered body.
+    pub fn json_body(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body,
+            shutdown_after: false,
+            retry_after: None,
+        }
+    }
+
+    /// `{"error": msg}` with the given status.
+    pub fn error(status: u16, msg: impl std::fmt::Display) -> Response {
+        Response::json(status, Json::obj([("error", Json::Str(msg.to_string()))]))
+    }
+
+    /// Non-JSON response (the Prometheus text exposition).
+    pub fn text(status: u16, content_type: &'static str, body: String) -> Response {
+        Response {
+            status,
+            content_type,
+            body,
+            shutdown_after: false,
+            retry_after: None,
+        }
+    }
+
+    /// `429 Too Many Requests` with a `Retry-After` hint — the
+    /// backpressure response shed when a queue or pool is saturated.
+    pub fn too_busy(msg: impl std::fmt::Display, retry_after_secs: u32) -> Response {
+        let mut r = Response::error(429, msg);
+        r.retry_after = Some(retry_after_secs);
+        r
+    }
+
+    /// Mark this response as the last thing the server does.
+    pub fn with_shutdown(mut self) -> Response {
+        self.shutdown_after = true;
+        self
+    }
+}
+
+/// What a handler did with a request.
+pub enum Outcome {
+    /// The response is ready; queue it now.
+    Ready(Response),
+    /// The handler parked the request; a [`Completions::deliver`] call for
+    /// this connection will resolve it later.
+    Deferred,
+}
+
+/// Per-request context passed to the handler.
+#[derive(Debug, Clone, Copy)]
+pub struct ReqCtx {
+    /// Identifies the connection for deferred delivery.
+    pub conn_id: u64,
+    /// Whether the peer is a loopback address (gates admin endpoints).
+    pub peer_is_loopback: bool,
+}
+
+/// Interrupts a blocked `poll(2)` by writing one byte to an in-process
+/// socket pair whose read half the loop watches.
+pub struct Waker(UnixStream);
+
+impl Waker {
+    /// Wake the event loop. Never blocks: if the pipe is full a wake is
+    /// already pending and the byte is simply dropped.
+    pub fn wake(&self) {
+        use std::io::Write;
+        let _ = (&self.0).write(&[1u8]);
+    }
+}
+
+/// Build the waker and the read half the event loop drains.
+pub fn waker_pair() -> std::io::Result<(Arc<Waker>, UnixStream)> {
+    let (tx, rx) = UnixStream::pair()?;
+    tx.set_nonblocking(true)?;
+    rx.set_nonblocking(true)?;
+    Ok((Arc::new(Waker(tx)), rx))
+}
+
+/// Cloneable handle handlers use to resolve deferred requests from other
+/// threads (batcher completions, proxy workers).
+#[derive(Clone)]
+pub struct Completions {
+    tx: Sender<(u64, Response)>,
+    waker: Arc<Waker>,
+}
+
+impl Completions {
+    /// Resolve the parked request on `conn_id` with `resp` and wake the
+    /// loop. Safe to call after the loop exits (the send is simply lost).
+    pub fn deliver(&self, conn_id: u64, resp: Response) {
+        if self.tx.send((conn_id, resp)).is_ok() {
+            self.waker.wake();
+        }
+    }
+}
+
+/// Build the completion channel bound to `waker`.
+pub fn completion_channel(waker: Arc<Waker>) -> (Completions, Receiver<(u64, Response)>) {
+    let (tx, rx) = channel();
+    (Completions { tx, waker }, rx)
+}
+
+/// Tunables for the event loop.
+#[derive(Debug, Clone)]
+pub struct EventConfig {
+    /// Reject request bodies larger than this (413).
+    pub max_body_bytes: usize,
+    /// A partially-received request older than this is answered 408.
+    pub request_read_timeout: Duration,
+    /// A connection idle between requests longer than this is closed.
+    pub idle_timeout: Duration,
+    /// Stop accepting once this many connections are live.
+    pub max_conns: usize,
+    /// Close a keep-alive connection after this many requests.
+    pub max_requests_per_conn: u64,
+}
+
+/// Connection- and request-level counters owned by the event loop. All the
+/// 2xx/4xx/5xx accounting and the request latency histogram live here so
+/// every path — ready, deferred, 408, parse reject — is counted once, in
+/// one place.
+#[derive(Debug, Default)]
+pub struct ConnMetrics {
+    /// Requests dispatched (including protocol rejects and 408s).
+    pub requests: AtomicU64,
+    /// Responses with a 2xx status.
+    pub responses_2xx: AtomicU64,
+    /// Responses with a 4xx status.
+    pub responses_4xx: AtomicU64,
+    /// Responses with any other status (5xx bucket, matching the old
+    /// worker accounting).
+    pub responses_5xx: AtomicU64,
+    /// Dispatch-to-response-queued latency.
+    pub latency: Histogram,
+    /// Connections accepted since start.
+    pub accepted: AtomicU64,
+    /// Currently live connections (gauge).
+    pub active: AtomicU64,
+    /// Requests served on an already-used connection (keep-alive wins).
+    pub keepalive_reuses: AtomicU64,
+    /// Requests answered 408 by the slowloris deadline.
+    pub timeouts_408: AtomicU64,
+    /// Requests shed 429 by backpressure (incremented by handlers).
+    pub shed_429: AtomicU64,
+}
+
+impl ConnMetrics {
+    fn class_counter(&self, status: u16) -> &AtomicU64 {
+        match status / 100 {
+            2 => &self.responses_2xx,
+            4 => &self.responses_4xx,
+            _ => &self.responses_5xx,
+        }
+    }
+}
+
+/// What each pollfd slot refers to this iteration.
+enum Target {
+    Listener,
+    WakeChannel,
+    Conn(u64),
+}
+
+/// Render `resp` onto `c`, count it, and propagate the shutdown flag.
+fn finish_response(c: &mut Conn, resp: &Response, metrics: &ConnMetrics, shutdown: &AtomicBool) {
+    let keep = c.cur_keep_alive && !resp.shutdown_after;
+    let bytes = http::render_response(
+        resp.status,
+        resp.content_type,
+        resp.body.as_bytes(),
+        keep,
+        resp.retry_after,
+    );
+    c.queue(&bytes);
+    if !keep {
+        c.close_after_write = true;
+    }
+    metrics.class_counter(resp.status).fetch_add(1, Ordering::Relaxed);
+    metrics.latency.record(c.cur_started.elapsed());
+    if resp.shutdown_after {
+        shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Parse and dispatch as many requests as `c.buf` holds, stopping at the
+/// first deferred one (one outstanding request per connection).
+fn pump<H>(
+    id: u64,
+    c: &mut Conn,
+    cfg: &EventConfig,
+    metrics: &ConnMetrics,
+    shutdown: &AtomicBool,
+    handle: &mut H,
+) where
+    H: FnMut(&http::Request, ReqCtx) -> Outcome,
+{
+    loop {
+        if c.closed || c.awaiting || c.close_after_write {
+            return;
+        }
+        match http::try_parse(&c.buf, cfg.max_body_bytes) {
+            Ok(None) => {
+                // incomplete: arm (or keep) the slowloris clock
+                if c.buf.is_empty() {
+                    c.request_started = None;
+                } else if c.request_started.is_none() {
+                    c.request_started = Some(Instant::now());
+                }
+                return;
+            }
+            Ok(Some((req, consumed))) => {
+                c.buf.drain(..consumed);
+                // leftover bytes are the head of a pipelined follower
+                c.request_started = if c.buf.is_empty() {
+                    None
+                } else {
+                    Some(Instant::now())
+                };
+                c.requests_served += 1;
+                if c.requests_served > 1 {
+                    metrics.keepalive_reuses.fetch_add(1, Ordering::Relaxed);
+                }
+                metrics.requests.fetch_add(1, Ordering::Relaxed);
+                c.cur_started = Instant::now();
+                c.cur_keep_alive =
+                    req.keep_alive() && c.requests_served < cfg.max_requests_per_conn;
+                let ctx = ReqCtx {
+                    conn_id: id,
+                    peer_is_loopback: c.peer_is_loopback,
+                };
+                let outcome = catch_unwind(AssertUnwindSafe(|| handle(&req, ctx)))
+                    .unwrap_or_else(|_| {
+                        Outcome::Ready(Response::error(500, "internal server error"))
+                    });
+                match outcome {
+                    Outcome::Ready(resp) => finish_response(c, &resp, metrics, shutdown),
+                    Outcome::Deferred => {
+                        c.awaiting = true;
+                        return;
+                    }
+                }
+            }
+            Err(e) => {
+                let resp = match e {
+                    http::ReadError::Malformed(m) => Response::error(400, m),
+                    http::ReadError::HeaderTooLarge => {
+                        Response::error(431, "request headers too large")
+                    }
+                    http::ReadError::BodyTooLarge => Response::error(
+                        413,
+                        format!("body exceeds the {} byte limit", cfg.max_body_bytes),
+                    ),
+                    // try_parse never reports Disconnected; treat it as malformed
+                    http::ReadError::Disconnected => Response::error(400, "connection error"),
+                };
+                metrics.requests.fetch_add(1, Ordering::Relaxed);
+                c.cur_started = Instant::now();
+                c.cur_keep_alive = false; // protocol errors always close
+                finish_response(c, &resp, metrics, shutdown);
+                c.buf.clear();
+                c.request_started = None;
+                return;
+            }
+        }
+    }
+}
+
+/// Milliseconds until the nearest connection deadline, clamped to
+/// `[0, 1000]` so flag changes are noticed within a second regardless.
+fn poll_timeout_ms(
+    conns: &HashMap<u64, Conn>,
+    cfg: &EventConfig,
+    shutting_down: bool,
+) -> libc::c_int {
+    let now = Instant::now();
+    let mut t = if shutting_down {
+        Duration::from_millis(50)
+    } else {
+        Duration::from_millis(1000)
+    };
+    for c in conns.values() {
+        if c.closed || c.awaiting {
+            continue;
+        }
+        let deadline = match c.request_started {
+            Some(t0) => t0 + cfg.request_read_timeout,
+            None => c.last_activity + cfg.idle_timeout,
+        };
+        t = t.min(deadline.saturating_duration_since(now));
+    }
+    t.as_millis().min(1000) as libc::c_int
+}
+
+/// Run the event loop until the shutdown flag is set and the drain
+/// completes. `handle` is invoked inline on the loop thread — it must
+/// either answer fast or return [`Outcome::Deferred`].
+pub fn run<H>(
+    listener: TcpListener,
+    cfg: &EventConfig,
+    metrics: &ConnMetrics,
+    shutdown: &AtomicBool,
+    wake_rx: UnixStream,
+    completions_rx: Receiver<(u64, Response)>,
+    mut handle: H,
+) where
+    H: FnMut(&http::Request, ReqCtx) -> Outcome,
+{
+    let _ = listener.set_nonblocking(true);
+    let _ = wake_rx.set_nonblocking(true);
+    let read_cap = http::MAX_HEADER_BYTES + cfg.max_body_bytes + READ_CAP_SLACK;
+
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_id: u64 = 0;
+    let mut drain_started: Option<Instant> = None;
+    let mut fds: Vec<libc::pollfd> = Vec::new();
+    let mut targets: Vec<Target> = Vec::new();
+
+    loop {
+        let shutting_down = shutdown.load(Ordering::SeqCst);
+        if shutting_down {
+            let started = *drain_started.get_or_insert_with(Instant::now);
+            // close everything idle; in-flight work gets the drain window
+            conns.retain(|_, c| c.awaiting || !c.out_drained());
+            metrics.active.store(conns.len() as u64, Ordering::Relaxed);
+            if conns.is_empty() || started.elapsed() >= SHUTDOWN_DRAIN_CAP {
+                break;
+            }
+        }
+
+        fds.clear();
+        targets.clear();
+        if !shutting_down && conns.len() < cfg.max_conns {
+            fds.push(libc::pollfd {
+                fd: listener.as_raw_fd(),
+                events: libc::POLLIN,
+                revents: 0,
+            });
+            targets.push(Target::Listener);
+        }
+        fds.push(libc::pollfd {
+            fd: wake_rx.as_raw_fd(),
+            events: libc::POLLIN,
+            revents: 0,
+        });
+        targets.push(Target::WakeChannel);
+        for (&id, c) in conns.iter() {
+            let mut events: libc::c_short = 0;
+            if c.wants_read() {
+                events |= libc::POLLIN;
+            }
+            if c.wants_write() {
+                events |= libc::POLLOUT;
+            }
+            if events != 0 {
+                fds.push(libc::pollfd {
+                    fd: c.stream.as_raw_fd(),
+                    events,
+                    revents: 0,
+                });
+                targets.push(Target::Conn(id));
+            }
+        }
+
+        let timeout = poll_timeout_ms(&conns, cfg, shutting_down);
+        let n = unsafe { libc::poll(fds.as_mut_ptr(), fds.len() as libc::nfds_t, timeout) };
+        if n < 0 {
+            if std::io::Error::last_os_error().kind() == ErrorKind::Interrupted {
+                continue;
+            }
+            break; // unrecoverable poll failure: drop every connection
+        }
+
+        // deferred completions first: they free connections for more work
+        while let Ok((id, resp)) = completions_rx.try_recv() {
+            if let Some(c) = conns.get_mut(&id) {
+                if c.awaiting {
+                    c.awaiting = false;
+                    finish_response(c, &resp, metrics, shutdown);
+                    pump(id, c, cfg, metrics, shutdown, &mut handle);
+                    c.flush();
+                }
+            }
+        }
+
+        for (i, target) in targets.iter().enumerate() {
+            let revents = fds[i].revents;
+            if revents == 0 {
+                continue;
+            }
+            match target {
+                Target::Listener => loop {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            if conns.len() >= cfg.max_conns {
+                                drop(stream); // shed: over capacity
+                                break;
+                            }
+                            let _ = stream.set_nonblocking(true);
+                            let _ = stream.set_nodelay(true);
+                            next_id += 1;
+                            metrics.accepted.fetch_add(1, Ordering::Relaxed);
+                            conns.insert(
+                                next_id,
+                                Conn::new(stream, peer.ip().is_loopback(), read_cap),
+                            );
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(_) => break,
+                    }
+                },
+                Target::WakeChannel => {
+                    let mut sink = [0u8; 64];
+                    loop {
+                        match (&wake_rx).read(&mut sink) {
+                            Ok(0) => break, // every waker dropped
+                            Ok(_) => continue,
+                            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                            Err(_) => break,
+                        }
+                    }
+                }
+                Target::Conn(id) => {
+                    let Some(c) = conns.get_mut(id) else { continue };
+                    if revents & (libc::POLLERR | libc::POLLNVAL) != 0 {
+                        c.closed = true;
+                        continue;
+                    }
+                    if revents & (libc::POLLIN | libc::POLLHUP) != 0 {
+                        c.fill();
+                        pump(*id, c, cfg, metrics, shutdown, &mut handle);
+                    }
+                    if c.wants_write() {
+                        c.flush();
+                    }
+                }
+            }
+        }
+
+        // deadline sweep: slowloris 408s and idle closes
+        let now = Instant::now();
+        for c in conns.values_mut() {
+            if c.closed || c.awaiting {
+                continue;
+            }
+            if let Some(t0) = c.request_started {
+                if now.duration_since(t0) >= cfg.request_read_timeout {
+                    metrics.timeouts_408.fetch_add(1, Ordering::Relaxed);
+                    metrics.requests.fetch_add(1, Ordering::Relaxed);
+                    c.cur_started = now;
+                    c.cur_keep_alive = false;
+                    let resp = Response::error(408, "request not received in time");
+                    finish_response(c, &resp, metrics, shutdown);
+                    c.buf.clear();
+                    c.request_started = None;
+                    c.flush();
+                }
+            } else if c.out_drained() && now.duration_since(c.last_activity) >= cfg.idle_timeout {
+                c.closed = true; // silent close of an idle keep-alive conn
+            }
+        }
+
+        conns.retain(|_, c| !c.done());
+        metrics.active.store(conns.len() as u64, Ordering::Relaxed);
+    }
+
+    metrics.active.store(0, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpStream;
+    use std::sync::atomic::AtomicBool;
+    use std::thread;
+
+    fn test_cfg() -> EventConfig {
+        EventConfig {
+            max_body_bytes: 1 << 20,
+            request_read_timeout: Duration::from_millis(300),
+            idle_timeout: Duration::from_secs(30),
+            max_conns: 64,
+            max_requests_per_conn: 1000,
+        }
+    }
+
+    struct Loop {
+        addr: std::net::SocketAddr,
+        metrics: Arc<ConnMetrics>,
+        shutdown: Arc<AtomicBool>,
+        waker: Arc<Waker>,
+        thread: thread::JoinHandle<()>,
+    }
+
+    impl Loop {
+        fn stop(self) -> Arc<ConnMetrics> {
+            self.shutdown.store(true, Ordering::SeqCst);
+            self.waker.wake();
+            self.thread.join().unwrap();
+            self.metrics
+        }
+    }
+
+    /// Spawn the loop with a handler built from the completion channel.
+    fn spawn_loop<F>(cfg: EventConfig, make: F) -> Loop
+    where
+        F: FnOnce(Completions) -> Box<dyn FnMut(&http::Request, ReqCtx) -> Outcome + Send>,
+    {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let metrics = Arc::new(ConnMetrics::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (waker, wake_rx) = waker_pair().unwrap();
+        let (completions, completions_rx) = completion_channel(waker.clone());
+        let handler = make(completions);
+        let m = metrics.clone();
+        let s = shutdown.clone();
+        let thread = thread::spawn(move || {
+            run(listener, &cfg, &m, &s, wake_rx, completions_rx, handler);
+        });
+        Loop {
+            addr,
+            metrics,
+            shutdown,
+            waker,
+            thread,
+        }
+    }
+
+    fn echo_handler() -> Box<dyn FnMut(&http::Request, ReqCtx) -> Outcome + Send> {
+        Box::new(|req, _ctx| {
+            Outcome::Ready(Response::json(
+                200,
+                Json::obj([("path", Json::Str(req.target.clone()))]),
+            ))
+        })
+    }
+
+    #[test]
+    fn keep_alive_serves_multiple_requests_on_one_connection() {
+        let lp = spawn_loop(test_cfg(), |_| echo_handler());
+        let client =
+            http::Client::new(lp.addr.to_string()).with_timeout(Duration::from_secs(5));
+        for i in 0..3 {
+            let (status, body) = client.get(&format!("/p{i}")).unwrap();
+            assert_eq!(status, 200);
+            assert!(body.contains(&format!("/p{i}")), "body: {body}");
+        }
+        assert_eq!(client.connects(), 1, "keep-alive must reuse the socket");
+        client.clear_pool();
+        let m = lp.stop();
+        assert_eq!(m.requests.load(Ordering::Relaxed), 3);
+        assert_eq!(m.responses_2xx.load(Ordering::Relaxed), 3);
+        assert_eq!(m.keepalive_reuses.load(Ordering::Relaxed), 2);
+        assert_eq!(m.accepted.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn deferred_outcomes_resolve_via_the_completion_channel() {
+        let lp = spawn_loop(test_cfg(), |completions| {
+            Box::new(move |_req, ctx| {
+                let comps = completions.clone();
+                let id = ctx.conn_id;
+                thread::spawn(move || {
+                    thread::sleep(Duration::from_millis(30));
+                    comps.deliver(
+                        id,
+                        Response::json(200, Json::obj([("deferred", Json::Bool(true))])),
+                    );
+                });
+                Outcome::Deferred
+            })
+        });
+        let (status, body) = http::request_with_timeout(
+            &lp.addr.to_string(),
+            "GET",
+            "/x",
+            None,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("deferred"), "body: {body}");
+        let m = lp.stop();
+        assert_eq!(m.responses_2xx.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn slow_requests_get_408_and_close() {
+        let mut cfg = test_cfg();
+        cfg.request_read_timeout = Duration::from_millis(100);
+        let lp = spawn_loop(cfg, |_| echo_handler());
+        let mut stream = TcpStream::connect(lp.addr).unwrap();
+        use std::io::Write;
+        // send only a fragment of a request line, then stall
+        stream.write_all(b"GET /slow HTTP/1.1\r\n").unwrap();
+        stream.flush().unwrap();
+        let mut raw = Vec::new();
+        stream.read_to_end(&mut raw).unwrap(); // server closes after the 408
+        let text = String::from_utf8_lossy(&raw);
+        assert!(text.starts_with("HTTP/1.1 408"), "got: {text}");
+        assert!(text.contains("Connection: close"), "got: {text}");
+        let m = lp.stop();
+        assert_eq!(m.timeouts_408.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn pipelined_requests_are_answered_in_order() {
+        let lp = spawn_loop(test_cfg(), |_| echo_handler());
+        let mut stream = TcpStream::connect(lp.addr).unwrap();
+        use std::io::Write;
+        stream
+            .write_all(
+                b"GET /a HTTP/1.1\r\nHost: x\r\n\r\nGET /b HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n",
+            )
+            .unwrap();
+        stream.flush().unwrap();
+        let mut raw = Vec::new();
+        stream.read_to_end(&mut raw).unwrap();
+        let text = String::from_utf8_lossy(&raw);
+        let a = text.find("/a").expect("first response present");
+        let b = text.find("/b").expect("second response present");
+        assert!(a < b, "pipelined responses must keep request order: {text}");
+        let m = lp.stop();
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn shutdown_flag_drains_and_exits() {
+        let lp = spawn_loop(test_cfg(), |_| echo_handler());
+        let client = http::Client::new(lp.addr.to_string());
+        let (status, _) = client.get("/x").unwrap();
+        assert_eq!(status, 200);
+        client.clear_pool();
+        let addr = lp.addr;
+        let m = lp.stop();
+        assert_eq!(m.active.load(Ordering::Relaxed), 0);
+        // the listener is gone: new connections must fail or be refused
+        let refused = TcpStream::connect_timeout(&addr, Duration::from_millis(500));
+        if let Ok(s) = refused {
+            // accepted by a lingering backlog entry at worst — but nothing
+            // will ever answer; a read must see EOF or error, not data
+            let mut s = s;
+            s.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+            let mut buf = [0u8; 16];
+            assert!(!matches!(s.read(&mut buf), Ok(n) if n > 0));
+        }
+    }
+}

@@ -1,0 +1,819 @@
+//! Scale-out serving: an `evoapprox fleet` router that spawns, supervises
+//! and routes across N `serve` shard processes (DESIGN.md §11).
+//!
+//! Topology: the router binds the public address and runs the same
+//! readiness event loop as a single server ([`super::event::run`]). Every
+//! request is handed to a small proxy-worker pool as a deferred
+//! completion — the loop never blocks on a shard. Shards are full
+//! `evoapprox serve` processes bound to ephemeral loopback ports,
+//! discovered through `--addr-file` handshake files.
+//!
+//! Routing policy:
+//!
+//! * **Replicated reads + predict** (`/v1/predict`, `/v1/library/*`,
+//!   `/v1/select`, `/healthz`, `GET /`): every shard serves the same
+//!   model and library, so these round-robin across shards and fail over
+//!   to the next shard before giving up with 502. Responses are passed
+//!   through byte-for-byte.
+//! * **Sharded submits** (`/v1/campaigns/resilience`, `/v1/dse`): routed
+//!   by FNV-1a hash of the request's `model`, so repeated campaigns for
+//!   one network land on one shard and share its [`EvalCache`] and
+//!   roster memos.
+//! * **Jobs** (`/v1/jobs/{id}`): the router issues fleet-wide job ids and
+//!   keeps an id → (shard, local id) map; 202 bodies and job polls are
+//!   rewritten so clients never see shard-local ids.
+//! * **`/metrics`**: fetched from every shard and summed per series
+//!   (first-seen order), then the fleet gauges (`evoapprox_fleet_*`) and
+//!   the router's own connection counters are appended.
+//! * **Supervision**: a supervisor thread reaps dead shards and respawns
+//!   them (counted in `evoapprox_fleet_shard_restarts_total`) unless the
+//!   fleet is shutting down.
+//!
+//! [`EvalCache`]: crate::resilience::EvalCache
+
+use std::collections::{HashMap, HashSet};
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::event::{self, ConnMetrics, EventConfig, Outcome, Response, Waker};
+use super::http;
+use super::router::Target;
+use super::ServerConfig;
+
+/// How long a shard gets to report its bound address (covers model
+/// warm-up on debug builds).
+const SHARD_START_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// How long shards get to exit after a shutdown request before they are
+/// killed.
+const SHARD_STOP_TIMEOUT: Duration = Duration::from_secs(15);
+
+/// Supervisor poll cadence.
+const SUPERVISE_INTERVAL: Duration = Duration::from_millis(200);
+
+/// Fleet configuration: the public bind address plus everything forwarded
+/// to each `serve` shard.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Public bind address of the router.
+    pub addr: String,
+    /// Number of shard processes.
+    pub shards: usize,
+    /// Backend flag forwarded to shards (`auto`|`native`|`pjrt`).
+    pub backend: String,
+    /// Model served (also the default for campaign routing).
+    pub model: String,
+    /// Worker-count flag forwarded to shards.
+    pub workers: usize,
+    /// Library file forwarded to shards (baseline when `None`).
+    pub library: Option<String>,
+    /// Artifacts directory forwarded to shards.
+    pub artifacts: Option<String>,
+    /// Batching `--max-wait-ms` forwarded to shards.
+    pub max_wait_ms: u64,
+    /// Batching `--max-batch` forwarded to shards.
+    pub max_batch: usize,
+    /// Shard executable (defaults to the running binary).
+    pub shard_exe: Option<PathBuf>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            shards: 2,
+            backend: "auto".to_string(),
+            model: "resnet8".to_string(),
+            workers: 4,
+            library: None,
+            artifacts: None,
+            max_wait_ms: 20,
+            max_batch: 64,
+            shard_exe: None,
+        }
+    }
+}
+
+/// One routable shard: its address and a pooled keep-alive client.
+#[derive(Clone)]
+struct ShardSlot {
+    addr: String,
+    client: Arc<http::Client>,
+}
+
+/// Shared state behind the router loop, proxy workers and supervisor.
+struct FleetState {
+    cfg: FleetConfig,
+    routing: RwLock<Vec<ShardSlot>>,
+    children: Mutex<Vec<Child>>,
+    restarts: AtomicU64,
+    /// fleet job id → (shard index, shard-local job id).
+    jobs: Mutex<HashMap<u64, (usize, u64)>>,
+    next_job_id: AtomicU64,
+    /// Round-robin cursor for replicated endpoints.
+    rr: AtomicUsize,
+    shutdown: AtomicBool,
+    http: ConnMetrics,
+    waker: Arc<Waker>,
+    completions: event::Completions,
+}
+
+/// Final report a fleet run hands back on shutdown.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FleetReport {
+    /// Requests the router dispatched.
+    pub requests: u64,
+    /// 2xx responses (as seen by clients of the router).
+    pub responses_2xx: u64,
+    /// 4xx responses.
+    pub responses_4xx: u64,
+    /// 5xx responses.
+    pub responses_5xx: u64,
+    /// Connections accepted by the router.
+    pub accepted_conns: u64,
+    /// Requests served on reused keep-alive connections.
+    pub keepalive_reuses: u64,
+    /// Shard processes restarted by the supervisor.
+    pub shard_restarts: u64,
+    /// Configured shard count.
+    pub shards: usize,
+}
+
+/// A running fleet. Dropping the handle shuts everything down.
+pub struct Fleet;
+
+/// Join/shutdown handle for a running fleet.
+pub struct FleetHandle {
+    addr: SocketAddr,
+    state: Arc<FleetState>,
+    router: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    supervisor: Option<JoinHandle<()>>,
+}
+
+/// One proxied request in flight between the event loop and a worker.
+struct ProxyReq {
+    conn_id: u64,
+    peer_is_loopback: bool,
+    method: String,
+    target: String,
+    body: Option<String>,
+}
+
+/// FNV-1a of the model name — the consistent shard key for submits.
+fn shard_for(model: &str, shards: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in model.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    (h % shards.max(1) as u64) as usize
+}
+
+/// Spawn shard `index` and wait for its `--addr-file` handshake.
+fn spawn_shard(cfg: &FleetConfig, index: usize) -> Result<(Child, String)> {
+    let exe = match &cfg.shard_exe {
+        Some(p) => p.clone(),
+        None => std::env::current_exe().context("resolving the shard executable")?,
+    };
+    let addr_file = std::env::temp_dir().join(format!(
+        "evoapprox-fleet-{}-shard-{index}.addr",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&addr_file);
+    let mut cmd = Command::new(exe);
+    cmd.arg("serve")
+        .arg("--addr")
+        .arg("127.0.0.1:0")
+        .arg("--addr-file")
+        .arg(&addr_file)
+        .arg("--backend")
+        .arg(&cfg.backend)
+        .arg("--model")
+        .arg(&cfg.model)
+        .arg("--workers")
+        .arg(cfg.workers.to_string())
+        .arg("--max-wait-ms")
+        .arg(cfg.max_wait_ms.to_string())
+        .arg("--max-batch")
+        .arg(cfg.max_batch.to_string());
+    if let Some(lib) = &cfg.library {
+        cmd.arg("--library").arg(lib);
+    }
+    if let Some(dir) = &cfg.artifacts {
+        cmd.arg("--artifacts").arg(dir);
+    }
+    cmd.stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::null());
+    let mut child = cmd
+        .spawn()
+        .with_context(|| format!("spawning shard {index}"))?;
+    let deadline = Instant::now() + SHARD_START_TIMEOUT;
+    loop {
+        if let Ok(text) = std::fs::read_to_string(&addr_file) {
+            let addr = text.trim().to_string();
+            if !addr.is_empty() {
+                let _ = std::fs::remove_file(&addr_file);
+                return Ok((child, addr));
+            }
+        }
+        if let Ok(Some(status)) = child.try_wait() {
+            bail!("shard {index} exited during startup ({status})");
+        }
+        if Instant::now() >= deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            bail!(
+                "shard {index} did not report an address within {:?}",
+                SHARD_START_TIMEOUT
+            );
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+impl Fleet {
+    /// Bind the router address, spawn and handshake every shard, then
+    /// start the router loop, proxy workers and the supervisor.
+    pub fn start(cfg: FleetConfig) -> Result<FleetHandle> {
+        if cfg.shards == 0 {
+            bail!("a fleet needs at least one shard");
+        }
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding fleet router on {}", cfg.addr))?;
+        let addr = listener.local_addr().context("resolving router address")?;
+        let mut children = Vec::with_capacity(cfg.shards);
+        let mut slots = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            match spawn_shard(&cfg, i) {
+                Ok((child, shard_addr)) => {
+                    slots.push(ShardSlot {
+                        client: Arc::new(http::Client::new(shard_addr.clone())),
+                        addr: shard_addr,
+                    });
+                    children.push(child);
+                }
+                Err(e) => {
+                    for mut c in children {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let (waker, wake_rx) = event::waker_pair().context("creating router waker")?;
+        let (completions, completions_rx) = event::completion_channel(waker.clone());
+        let worker_count = (2 * cfg.shards).clamp(2, 16);
+        let state = Arc::new(FleetState {
+            routing: RwLock::new(slots),
+            children: Mutex::new(children),
+            restarts: AtomicU64::new(0),
+            jobs: Mutex::new(HashMap::new()),
+            next_job_id: AtomicU64::new(0),
+            rr: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            http: ConnMetrics::default(),
+            waker,
+            completions,
+            cfg,
+        });
+        let (proxy_tx, proxy_rx) = channel::<ProxyReq>();
+        let proxy_rx = Arc::new(Mutex::new(proxy_rx));
+        let mut workers = Vec::with_capacity(worker_count);
+        for i in 0..worker_count {
+            let st = state.clone();
+            let rx = proxy_rx.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("fleet-proxy-{i}"))
+                .spawn(move || proxy_worker(st, rx))
+                .context("spawning proxy worker")?;
+            workers.push(h);
+        }
+        let router_state = state.clone();
+        let router = std::thread::Builder::new()
+            .name("fleet-router".into())
+            .spawn(move || router_loop(listener, router_state, wake_rx, completions_rx, proxy_tx))
+            .context("spawning router thread")?;
+        let sup_state = state.clone();
+        let supervisor = std::thread::Builder::new()
+            .name("fleet-supervisor".into())
+            .spawn(move || supervisor_loop(sup_state))
+            .context("spawning supervisor thread")?;
+        Ok(FleetHandle {
+            addr,
+            state,
+            router: Some(router),
+            workers,
+            supervisor: Some(supervisor),
+        })
+    }
+}
+
+impl FleetHandle {
+    /// The router's bound address (resolves port `0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Addresses of the current shard processes.
+    pub fn shard_addrs(&self) -> Vec<String> {
+        self.state
+            .routing
+            .read()
+            .expect("routing poisoned")
+            .iter()
+            .map(|s| s.addr.clone())
+            .collect()
+    }
+
+    /// Shard restarts performed by the supervisor so far.
+    pub fn restarts(&self) -> u64 {
+        self.state.restarts.load(Ordering::Relaxed)
+    }
+
+    /// Kill shard `index`'s process (test hook for supervision: the
+    /// supervisor respawns it on its next sweep).
+    pub fn kill_shard(&self, index: usize) -> Result<()> {
+        let mut children = self.state.children.lock().expect("children poisoned");
+        let child = children
+            .get_mut(index)
+            .ok_or_else(|| anyhow!("no shard {index}"))?;
+        child.kill().with_context(|| format!("killing shard {index}"))
+    }
+
+    /// Request shutdown without waiting.
+    pub fn trigger_shutdown(&self) {
+        if !self.state.shutdown.swap(true, Ordering::SeqCst) {
+            self.state.waker.wake();
+        }
+    }
+
+    /// Graceful shutdown: stop routing, shut every shard down, join all
+    /// threads, return the run report.
+    pub fn shutdown(mut self) -> FleetReport {
+        self.trigger_shutdown();
+        self.join_inner()
+    }
+
+    /// Block until the fleet shuts down (admin endpoint or
+    /// [`FleetHandle::trigger_shutdown`]) and return the run report.
+    pub fn join(mut self) -> FleetReport {
+        self.join_inner()
+    }
+
+    fn join_inner(&mut self) -> FleetReport {
+        if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+        let h = &self.state.http;
+        FleetReport {
+            requests: h.requests.load(Ordering::Relaxed),
+            responses_2xx: h.responses_2xx.load(Ordering::Relaxed),
+            responses_4xx: h.responses_4xx.load(Ordering::Relaxed),
+            responses_5xx: h.responses_5xx.load(Ordering::Relaxed),
+            accepted_conns: h.accepted.load(Ordering::Relaxed),
+            keepalive_reuses: h.keepalive_reuses.load(Ordering::Relaxed),
+            shard_restarts: self.state.restarts.load(Ordering::Relaxed),
+            shards: self.state.cfg.shards,
+        }
+    }
+}
+
+impl Drop for FleetHandle {
+    fn drop(&mut self) {
+        if self.router.is_some() {
+            self.trigger_shutdown();
+            self.join_inner();
+        }
+    }
+}
+
+/// The router thread: run the event loop, then shut the shards down and
+/// reap them.
+fn router_loop(
+    listener: TcpListener,
+    state: Arc<FleetState>,
+    wake_rx: std::os::unix::net::UnixStream,
+    completions_rx: Receiver<(u64, Response)>,
+    proxy_tx: Sender<ProxyReq>,
+) {
+    let defaults = ServerConfig::default();
+    let cfg = EventConfig {
+        max_body_bytes: defaults.max_body_bytes,
+        request_read_timeout: defaults.request_read_timeout,
+        idle_timeout: defaults.idle_timeout,
+        max_conns: defaults.max_conns,
+        max_requests_per_conn: defaults.max_requests_per_conn,
+    };
+    event::run(
+        listener,
+        &cfg,
+        &state.http,
+        &state.shutdown,
+        wake_rx,
+        completions_rx,
+        move |req, ctx| {
+            let p = ProxyReq {
+                conn_id: ctx.conn_id,
+                peer_is_loopback: ctx.peer_is_loopback,
+                method: req.method.clone(),
+                target: req.target.clone(),
+                body: if req.body.is_empty() {
+                    None
+                } else {
+                    Some(String::from_utf8_lossy(&req.body).into_owned())
+                },
+            };
+            if proxy_tx.send(p).is_err() {
+                return Outcome::Ready(Response::error(503, "router is shutting down"));
+            }
+            Outcome::Deferred
+        },
+    );
+    // the handler (and with it the proxy sender) is gone: workers drain
+    // the queue and exit; shards are told to stop, then reaped
+    shutdown_shards(&state);
+    reap_children(&state);
+}
+
+/// Post `admin/shutdown` to every shard (idempotent; errors ignored —
+/// dead shards are reaped regardless).
+fn shutdown_shards(state: &FleetState) {
+    state.shutdown.store(true, Ordering::SeqCst);
+    let slots: Vec<ShardSlot> = state.routing.read().expect("routing poisoned").clone();
+    for slot in &slots {
+        let _ = slot.client.post_json("/v1/admin/shutdown", "");
+    }
+}
+
+/// Wait for every shard to exit, killing stragglers after the timeout.
+fn reap_children(state: &FleetState) {
+    let deadline = Instant::now() + SHARD_STOP_TIMEOUT;
+    let mut children = state.children.lock().expect("children poisoned");
+    for child in children.iter_mut() {
+        loop {
+            match child.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(50))
+                }
+                _ => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// The supervisor: respawn dead shards until shutdown.
+fn supervisor_loop(state: Arc<FleetState>) {
+    while !state.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(SUPERVISE_INTERVAL);
+        let shard_count = state.cfg.shards;
+        for i in 0..shard_count {
+            if state.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let exited = {
+                let mut children = state.children.lock().expect("children poisoned");
+                matches!(children[i].try_wait(), Ok(Some(_)))
+            };
+            if !exited {
+                continue;
+            }
+            match spawn_shard(&state.cfg, i) {
+                Ok((child, addr)) => {
+                    if state.shutdown.load(Ordering::SeqCst) {
+                        // shutdown raced the respawn: don't leak the child
+                        let mut child = child;
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        return;
+                    }
+                    state.restarts.fetch_add(1, Ordering::Relaxed);
+                    state.children.lock().expect("children poisoned")[i] = child;
+                    let slot = ShardSlot {
+                        client: Arc::new(http::Client::new(addr.clone())),
+                        addr,
+                    };
+                    state.routing.write().expect("routing poisoned")[i] = slot;
+                }
+                Err(_) => {
+                    // spawn failed (transient resource pressure): the slot
+                    // keeps its stale address and the next sweep retries
+                }
+            }
+        }
+    }
+}
+
+/// A proxy worker: route one request at a time and deliver the response
+/// as a deferred completion.
+fn proxy_worker(state: Arc<FleetState>, rx: Arc<Mutex<Receiver<ProxyReq>>>) {
+    loop {
+        let req = {
+            let guard = rx.lock().expect("proxy queue poisoned");
+            guard.recv()
+        };
+        match req {
+            Ok(p) => {
+                let resp = route_request(&state, &p);
+                state.completions.deliver(p.conn_id, resp);
+            }
+            Err(_) => break, // router dropped the sender: drain complete
+        }
+    }
+}
+
+fn route_request(state: &FleetState, p: &ProxyReq) -> Response {
+    let target = Target::parse(&p.target);
+    let path = target.path();
+    match (p.method.as_str(), path.as_slice()) {
+        ("GET", ["metrics"]) => aggregate_metrics(state),
+        ("POST", ["v1", "admin", "shutdown"]) if !p.peer_is_loopback => {
+            Response::error(403, "admin endpoints are restricted to loopback peers")
+        }
+        ("POST", ["v1", "admin", "shutdown"]) => {
+            shutdown_shards(state);
+            Response::json(200, Json::obj([("status", "shutting-down".into())])).with_shutdown()
+        }
+        ("POST", ["v1", "campaigns", "resilience"]) | ("POST", ["v1", "dse"]) => {
+            proxy_submit(state, p)
+        }
+        ("GET", ["v1", "jobs", id]) => proxy_job(state, id),
+        // everything else is replicated: predict, census, pareto, select,
+        // healthz, the endpoint listing — and unknown routes, which any
+        // shard rejects exactly like a single server would
+        _ => proxy_replicated(state, p),
+    }
+}
+
+/// Round-robin across shards with fail-over to the next shard.
+fn proxy_replicated(state: &FleetState, p: &ProxyReq) -> Response {
+    let slots: Vec<ShardSlot> = state.routing.read().expect("routing poisoned").clone();
+    if slots.is_empty() {
+        return Response::error(502, "no shards available");
+    }
+    let start = state.rr.fetch_add(1, Ordering::Relaxed) % slots.len();
+    let mut last_err = None;
+    for k in 0..slots.len() {
+        let slot = &slots[(start + k) % slots.len()];
+        match slot.client.request(&p.method, &p.target, p.body.as_deref()) {
+            Ok((status, body)) => return Response::json_body(status, body),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Response::error(
+        502,
+        format!(
+            "no shard reachable: {}",
+            last_err.map(|e| format!("{e:#}")).unwrap_or_default()
+        ),
+    )
+}
+
+/// Route a campaign/DSE submit to the model's shard and rewrite the 202
+/// body with a fleet-wide job id.
+fn proxy_submit(state: &FleetState, p: &ProxyReq) -> Response {
+    let model = p
+        .body
+        .as_deref()
+        .filter(|t| !t.trim().is_empty())
+        .and_then(|t| Json::parse(t).ok())
+        .and_then(|j| j.get("model").and_then(Json::as_str).map(str::to_string))
+        .unwrap_or_else(|| state.cfg.model.clone());
+    let slots: Vec<ShardSlot> = state.routing.read().expect("routing poisoned").clone();
+    if slots.is_empty() {
+        return Response::error(502, "no shards available");
+    }
+    let shard = shard_for(&model, slots.len());
+    match slots[shard]
+        .client
+        .request(&p.method, &p.target, p.body.as_deref())
+    {
+        Ok((202, body)) => match Json::parse(&body) {
+            Ok(Json::Obj(mut obj)) => match obj.get("job").and_then(Json::as_i64) {
+                Some(local) => {
+                    let fid = state.next_job_id.fetch_add(1, Ordering::Relaxed) + 1;
+                    state
+                        .jobs
+                        .lock()
+                        .expect("job map poisoned")
+                        .insert(fid, (shard, local as u64));
+                    obj.insert("job".to_string(), Json::Num(fid as f64));
+                    obj.insert("poll".to_string(), Json::Str(format!("/v1/jobs/{fid}")));
+                    Response::json(202, Json::Obj(obj))
+                }
+                None => Response::json_body(202, body),
+            },
+            _ => Response::json_body(202, body),
+        },
+        Ok((status, body)) => Response::json_body(status, body),
+        Err(e) => Response::error(502, format!("shard {shard} unreachable: {e:#}")),
+    }
+}
+
+/// Poll a fleet job: translate the fleet id, fetch from the owning shard,
+/// rewrite the id in the body.
+fn proxy_job(state: &FleetState, id: &str) -> Response {
+    let Ok(fid) = id.parse::<u64>() else {
+        return Response::error(400, "job id must be an integer");
+    };
+    let Some((shard, local)) = state
+        .jobs
+        .lock()
+        .expect("job map poisoned")
+        .get(&fid)
+        .copied()
+    else {
+        return Response::error(404, format!("no job {fid}"));
+    };
+    let client = {
+        let slots = state.routing.read().expect("routing poisoned");
+        match slots.get(shard) {
+            Some(s) => s.client.clone(),
+            None => return Response::error(502, format!("shard {shard} unavailable")),
+        }
+    };
+    match client.get(&format!("/v1/jobs/{local}")) {
+        Ok((200, body)) => match Json::parse(&body) {
+            Ok(Json::Obj(mut obj)) => {
+                obj.insert("id".to_string(), Json::Num(fid as f64));
+                Response::json(200, Json::Obj(obj))
+            }
+            _ => Response::json_body(200, body),
+        },
+        // a restarted shard forgot its jobs: surface that as the fleet id
+        Ok((404, _)) => Response::error(404, format!("no job {fid}")),
+        Ok((status, body)) => Response::json_body(status, body),
+        Err(e) => Response::error(502, format!("shard {shard} unreachable: {e:#}")),
+    }
+}
+
+/// The metric name a `# TYPE` line would use for a sample key (histogram
+/// series share their parent's TYPE line).
+fn type_base(key: &str) -> String {
+    let name = key.split('{').next().unwrap_or(key);
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            return base.to_string();
+        }
+    }
+    name.to_string()
+}
+
+/// Sum every shard's `/metrics` per series (first-seen order) and append
+/// the fleet- and router-level series.
+fn aggregate_metrics(state: &FleetState) -> Response {
+    use std::fmt::Write as _;
+    let slots: Vec<ShardSlot> = state.routing.read().expect("routing poisoned").clone();
+    let mut order: Vec<String> = Vec::new();
+    let mut sums: HashMap<String, f64> = HashMap::new();
+    let mut types: HashMap<String, String> = HashMap::new();
+    let mut reachable = 0usize;
+    for slot in &slots {
+        let Ok((200, text)) = slot.client.get("/metrics") else {
+            continue;
+        };
+        reachable += 1;
+        for line in text.lines() {
+            let line = line.trim_end();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                if let (Some(name), Some(kind)) = (it.next(), it.next()) {
+                    types
+                        .entry(name.to_string())
+                        .or_insert_with(|| kind.to_string());
+                }
+                continue;
+            }
+            if line.starts_with('#') {
+                continue;
+            }
+            let Some(split_at) = line.rfind(' ') else { continue };
+            let (key, value) = line.split_at(split_at);
+            let Ok(v) = value.trim().parse::<f64>() else {
+                continue;
+            };
+            if !sums.contains_key(key) {
+                order.push(key.to_string());
+            }
+            *sums.entry(key.to_string()).or_insert(0.0) += v;
+        }
+    }
+    let mut out = String::new();
+    let mut typed: HashSet<String> = HashSet::new();
+    for key in &order {
+        let base = type_base(key);
+        if let Some(kind) = types.get(&base) {
+            if typed.insert(base.clone()) {
+                let _ = writeln!(out, "# TYPE {base} {kind}");
+            }
+        }
+        let _ = writeln!(out, "{key} {}", sums[key]);
+    }
+    let _ = writeln!(out, "# TYPE evoapprox_fleet_shards gauge");
+    let _ = writeln!(out, "evoapprox_fleet_shards {}", slots.len());
+    let _ = writeln!(out, "# TYPE evoapprox_fleet_shards_reachable gauge");
+    let _ = writeln!(out, "evoapprox_fleet_shards_reachable {reachable}");
+    let _ = writeln!(out, "# TYPE evoapprox_fleet_shard_restarts_total counter");
+    let _ = writeln!(
+        out,
+        "evoapprox_fleet_shard_restarts_total {}",
+        state.restarts.load(Ordering::Relaxed)
+    );
+    let h = &state.http;
+    for (name, kind, value) in [
+        (
+            "evoapprox_fleet_router_requests_total",
+            "counter",
+            h.requests.load(Ordering::Relaxed),
+        ),
+        (
+            "evoapprox_fleet_router_connections_active",
+            "gauge",
+            h.active.load(Ordering::Relaxed),
+        ),
+        (
+            "evoapprox_fleet_router_connections_accepted_total",
+            "counter",
+            h.accepted.load(Ordering::Relaxed),
+        ),
+        (
+            "evoapprox_fleet_router_keepalive_reuses_total",
+            "counter",
+            h.keepalive_reuses.load(Ordering::Relaxed),
+        ),
+    ] {
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        let _ = writeln!(out, "{name} {value}");
+    }
+    Response::text(200, "text/plain; version=0.0.4", out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_hashing_is_stable_and_in_range() {
+        for shards in 1..=8 {
+            for model in ["resnet8", "resnet14", "resnet50", ""] {
+                let a = shard_for(model, shards);
+                let b = shard_for(model, shards);
+                assert_eq!(a, b, "routing must be deterministic");
+                assert!(a < shards);
+            }
+        }
+        // single-shard fleets route everything to shard 0
+        assert_eq!(shard_for("resnet8", 1), 0);
+    }
+
+    #[test]
+    fn type_base_maps_histogram_series_to_their_parent() {
+        assert_eq!(type_base("evoapprox_http_requests_total"), "evoapprox_http_requests_total");
+        assert_eq!(
+            type_base("evoapprox_http_request_seconds_bucket{le=\"0.001\"}"),
+            "evoapprox_http_request_seconds"
+        );
+        assert_eq!(
+            type_base("evoapprox_http_request_seconds_sum"),
+            "evoapprox_http_request_seconds"
+        );
+        assert_eq!(
+            type_base("evoapprox_http_request_seconds_count"),
+            "evoapprox_http_request_seconds"
+        );
+    }
+
+    #[test]
+    fn fleet_config_defaults_are_sane() {
+        let cfg = FleetConfig::default();
+        assert_eq!(cfg.shards, 2);
+        assert_eq!(cfg.model, "resnet8");
+        assert!(cfg.library.is_none());
+    }
+}

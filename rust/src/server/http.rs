@@ -1,24 +1,42 @@
-//! Minimal HTTP/1.1 wire layer: request reader, response writer and a
-//! tiny blocking client — std-only, one request per connection
-//! (`Connection: close`), which is all the service endpoints need.
+//! HTTP/1.1 wire layer: incremental request/response parsers, response
+//! rendering, and the in-crate clients — std-only.
 //!
-//! Deliberate limits (documented in DESIGN.md §7):
+//! This module is shared by three consumers:
+//!
+//! * the **evented server** (`server::event` / `server::conn`) parses
+//!   requests incrementally out of per-connection read buffers via
+//!   [`try_parse`] and renders responses with [`render_response`]
+//!   (keep-alive aware, optional `Retry-After` for backpressure sheds);
+//! * the **keep-alive client pool** ([`Client`]) used by the fleet
+//!   router's shard proxying and the loadgen bench — one TCP connection
+//!   serves many requests, with stale pooled connections retried
+//!   transparently;
+//! * the **one-shot helpers** ([`get`], [`post_json`], [`request`]) kept
+//!   for tests and examples: `Connection: close`, read-to-EOF.
+//!
+//! Deliberate limits (documented in DESIGN.md §7/§11):
 //! * headers are capped at [`MAX_HEADER_BYTES`]; bodies at the server's
 //!   configured maximum — an oversized `Content-Length` is rejected with
-//!   413 *before* the body is read;
-//! * no chunked transfer encoding, no keep-alive, no TLS — future scaling
-//!   surfaces, not current requirements;
+//!   413 *before* the body is buffered;
+//! * no chunked transfer encoding, no TLS — every message carries an
+//!   explicit `Content-Length` (the only framing the endpoints need);
 //! * request targets are used verbatim (the endpoints only ever need
 //!   ASCII identifiers and numbers, so percent-decoding is omitted).
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 /// Maximum bytes of request line + headers.
 pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// Default client read timeout (the old hardcoded value — overridable via
+/// [`Client::with_timeout`] / [`request_with_timeout`]).
+pub const DEFAULT_CLIENT_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// One parsed HTTP request.
 #[derive(Debug, Clone)]
@@ -27,6 +45,9 @@ pub struct Request {
     pub method: String,
     /// Raw request target (`/v1/predict`, `/v1/select?max_accuracy_drop=1`).
     pub target: String,
+    /// Whether the request was HTTP/1.1 (keep-alive by default) rather
+    /// than HTTP/1.0 (close by default).
+    pub http11: bool,
     /// Headers with lower-cased names, in arrival order.
     pub headers: Vec<(String, String)>,
     /// Request body (empty when no `Content-Length`).
@@ -41,10 +62,21 @@ impl Request {
             .find(|(k, _)| k == name)
             .map(|(_, v)| v.as_str())
     }
+
+    /// Whether the connection may serve another request after this one:
+    /// `Connection: close` forbids it, `Connection: keep-alive` requests
+    /// it, and the HTTP version decides the default.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+            _ => self.http11,
+        }
+    }
 }
 
 /// Why a request could not be read. The server maps these onto 4xx
-/// responses without tearing down the worker.
+/// responses without tearing down the connection handler.
 #[derive(Debug)]
 pub enum ReadError {
     /// Peer closed before sending a full request (not an error worth a
@@ -58,30 +90,21 @@ pub enum ReadError {
     BodyTooLarge,
 }
 
-/// Read one HTTP/1.1 request from `stream`. Bodies larger than
-/// `max_body_bytes` are rejected from the `Content-Length` declaration
+/// Try to parse one complete request out of the front of `buf`.
+///
+/// * `Ok(None)` — the buffer holds only a prefix; read more bytes.
+/// * `Ok(Some((req, consumed)))` — one request parsed; the caller drains
+///   `consumed` bytes (pipelined followers stay in the buffer).
+/// * `Err(_)` — the prefix can never become a valid request.
+///
+/// Oversized bodies are rejected from the `Content-Length` declaration
 /// alone — the body is never buffered.
-pub fn read_request(stream: &mut TcpStream, max_body_bytes: usize) -> Result<Request, ReadError> {
-    let mut buf: Vec<u8> = Vec::with_capacity(1024);
-    let mut chunk = [0u8; 2048];
-    let header_end = loop {
-        if let Some(pos) = find_header_end(&buf) {
-            break pos;
-        }
+pub fn try_parse(buf: &[u8], max_body_bytes: usize) -> Result<Option<(Request, usize)>, ReadError> {
+    let Some(header_end) = find_header_end(buf) else {
         if buf.len() > MAX_HEADER_BYTES {
             return Err(ReadError::HeaderTooLarge);
         }
-        match stream.read(&mut chunk) {
-            Ok(0) => {
-                return if buf.is_empty() {
-                    Err(ReadError::Disconnected)
-                } else {
-                    Err(ReadError::Malformed("connection closed mid-header"))
-                };
-            }
-            Ok(n) => buf.extend_from_slice(&chunk[..n]),
-            Err(_) => return Err(ReadError::Disconnected),
-        }
+        return Ok(None);
     };
     let head = std::str::from_utf8(&buf[..header_end])
         .map_err(|_| ReadError::Malformed("non-UTF-8 header block"))?;
@@ -103,6 +126,7 @@ pub fn read_request(stream: &mut TcpStream, max_body_bytes: usize) -> Result<Req
     if !version.starts_with("HTTP/1.") || parts.next().is_some() {
         return Err(ReadError::Malformed("bad HTTP version"));
     }
+    let http11 = version == "HTTP/1.1";
     let mut headers = Vec::new();
     for line in lines {
         if line.is_empty() {
@@ -122,21 +146,44 @@ pub fn read_request(stream: &mut TcpStream, max_body_bytes: usize) -> Result<Req
     if content_length > max_body_bytes {
         return Err(ReadError::BodyTooLarge);
     }
-    let mut body = buf[header_end + 4..].to_vec();
-    while body.len() < content_length {
+    let body_start = header_end + 4;
+    if buf.len() < body_start + content_length {
+        return Ok(None);
+    }
+    let body = buf[body_start..body_start + content_length].to_vec();
+    Ok(Some((
+        Request {
+            method,
+            target,
+            http11,
+            headers,
+            body,
+        },
+        body_start + content_length,
+    )))
+}
+
+/// Read one HTTP/1.1 request from `stream` (blocking). Built on
+/// [`try_parse`] — the tests and the one-shot tooling path.
+pub fn read_request(stream: &mut TcpStream, max_body_bytes: usize) -> Result<Request, ReadError> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 2048];
+    loop {
+        if let Some((req, _consumed)) = try_parse(&buf, max_body_bytes)? {
+            return Ok(req);
+        }
         match stream.read(&mut chunk) {
-            Ok(0) => return Err(ReadError::Malformed("connection closed mid-body")),
-            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Ok(0) => {
+                return if buf.is_empty() {
+                    Err(ReadError::Disconnected)
+                } else {
+                    Err(ReadError::Malformed("connection closed mid-request"))
+                };
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
             Err(_) => return Err(ReadError::Disconnected),
         }
     }
-    body.truncate(content_length);
-    Ok(Request {
-        method,
-        target,
-        headers,
-        body,
-    })
 }
 
 fn find_header_end(buf: &[u8]) -> Option<usize> {
@@ -152,66 +199,318 @@ pub fn reason(status: u16) -> &'static str {
         403 => "Forbidden",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
+        502 => "Bad Gateway",
         503 => "Service Unavailable",
         _ => "Response",
     }
 }
 
+/// Render one complete response as wire bytes. `keep_alive` picks the
+/// `Connection` header; `retry_after_secs` adds the `Retry-After` a 429
+/// backpressure shed carries.
+pub fn render_response(
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+    retry_after_secs: Option<u32>,
+) -> Vec<u8> {
+    use std::fmt::Write as _;
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len()
+    );
+    if let Some(secs) = retry_after_secs {
+        let _ = writeln!(head, "Retry-After: {secs}\r");
+    }
+    head.push_str(if keep_alive {
+        "Connection: keep-alive\r\n\r\n"
+    } else {
+        "Connection: close\r\n\r\n"
+    });
+    let mut out = head.into_bytes();
+    out.extend_from_slice(body);
+    out
+}
+
 /// Write one complete response and flush. Always closes the exchange
-/// (`Connection: close`).
+/// (`Connection: close`) — the blocking/one-shot path.
 pub fn write_response(
     stream: &mut TcpStream,
     status: u16,
     content_type: &str,
     body: &[u8],
 ) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
-        status,
-        reason(status),
-        content_type,
-        body.len()
-    );
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body)?;
+    stream.write_all(&render_response(status, content_type, body, false, None))?;
     stream.flush()
 }
 
-/// Blocking one-shot HTTP client: connect, send, read the full response.
-/// This is the client the `loadgen` bench, the serving example and the
-/// integration tests drive the server with — kept in-crate so the whole
-/// network path needs zero external tooling.
-pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+/// One parsed HTTP response (client side).
+#[derive(Debug, Clone)]
+pub struct ClientResponse {
+    /// Status code.
+    pub status: u16,
+    /// Whether the server spoke HTTP/1.1.
+    pub http11: bool,
+    /// Headers with lower-cased names, in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// Response body.
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    /// First header value with the given (lower-case) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the server left the connection open for reuse.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+            _ => self.http11,
+        }
+    }
+}
+
+/// Try to parse one complete response out of the front of `buf`:
+/// `Ok(None)` means read more, `Ok(Some((resp, consumed)))` hands the
+/// response over. Responses must carry `Content-Length` (everything this
+/// crate's servers emit does).
+pub fn try_parse_response(buf: &[u8]) -> Result<Option<(ClientResponse, usize)>> {
+    let Some(header_end) = find_header_end(buf) else {
+        if buf.len() > MAX_HEADER_BYTES {
+            bail!("response header block too large");
+        }
+        return Ok(None);
+    };
+    let head = std::str::from_utf8(&buf[..header_end])
+        .map_err(|_| anyhow!("non-UTF-8 response header block"))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or_default();
+    let mut parts = status_line.split(' ');
+    let version = parts
+        .next()
+        .ok_or_else(|| anyhow!("empty status line"))?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("bad status line `{status_line}`");
+    }
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line `{status_line}`"))?;
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| anyhow!("response header line without a colon"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let content_length = match headers.iter().find(|(k, _)| k == "content-length") {
+        None => 0usize,
+        Some((_, v)) => v
+            .parse::<usize>()
+            .context("unparseable response Content-Length")?,
+    };
+    let body_start = header_end + 4;
+    if buf.len() < body_start + content_length {
+        return Ok(None);
+    }
+    Ok(Some((
+        ClientResponse {
+            status,
+            http11: version == "HTTP/1.1",
+            headers,
+            body: buf[body_start..body_start + content_length].to_vec(),
+        },
+        body_start + content_length,
+    )))
+}
+
+/// Send one request on `stream` and read the full response. The second
+/// return value is whether the exchange consumed the stream cleanly (no
+/// trailing garbage) — a prerequisite for pooling the connection.
+fn exchange(stream: &mut TcpStream, head: &[u8], body: &[u8]) -> Result<(ClientResponse, bool)> {
+    stream.write_all(head)?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some((resp, consumed)) = try_parse_response(&buf)? {
+            return Ok((resp, consumed == buf.len()));
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => bail!("connection closed before a full response"),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Keep-alive HTTP client: a small pool of idle connections to one
+/// address, reused across requests. Used by the fleet router's shard
+/// proxying and the loadgen bench — the per-request TCP connect of the
+/// one-shot helpers is exactly the overhead the evented server's
+/// keep-alive support removes.
+///
+/// A pooled connection the server has since closed (idle reaper, restart)
+/// fails on reuse; the client retries such failures on a fresh connection
+/// transparently, so callers only ever see errors from live sockets.
+pub struct Client {
+    addr: String,
+    read_timeout: Duration,
+    max_idle: usize,
+    idle: Mutex<Vec<TcpStream>>,
+    connects: AtomicU64,
+    reuses: AtomicU64,
+}
+
+impl Client {
+    /// Client for `addr` with the default timeout and pool size.
+    pub fn new(addr: impl Into<String>) -> Client {
+        Client {
+            addr: addr.into(),
+            read_timeout: DEFAULT_CLIENT_TIMEOUT,
+            max_idle: 8,
+            idle: Mutex::new(Vec::new()),
+            connects: AtomicU64::new(0),
+            reuses: AtomicU64::new(0),
+        }
+    }
+
+    /// Override the per-request read timeout.
+    pub fn with_timeout(mut self, d: Duration) -> Client {
+        self.read_timeout = d;
+        self
+    }
+
+    /// Target address.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Fresh TCP connections opened so far.
+    pub fn connects(&self) -> u64 {
+        self.connects.load(Ordering::Relaxed)
+    }
+
+    /// Requests that reused a pooled connection.
+    pub fn reuses(&self) -> u64 {
+        self.reuses.load(Ordering::Relaxed)
+    }
+
+    /// Drop every idle pooled connection (e.g. after the server restarts).
+    pub fn clear_pool(&self) {
+        self.idle.lock().expect("client pool poisoned").clear();
+    }
+
+    fn checkout(&self) -> Result<(TcpStream, bool)> {
+        if let Some(s) = self.idle.lock().expect("client pool poisoned").pop() {
+            self.reuses.fetch_add(1, Ordering::Relaxed);
+            return Ok((s, true));
+        }
+        let s = TcpStream::connect(&self.addr)
+            .with_context(|| format!("connecting {}", self.addr))?;
+        let _ = s.set_read_timeout(Some(self.read_timeout));
+        let _ = s.set_nodelay(true);
+        self.connects.fetch_add(1, Ordering::Relaxed);
+        Ok((s, false))
+    }
+
+    fn checkin(&self, s: TcpStream) {
+        let mut idle = self.idle.lock().expect("client pool poisoned");
+        if idle.len() < self.max_idle {
+            idle.push(s);
+        }
+    }
+
+    /// One request/response exchange, reusing a pooled connection when
+    /// one is available.
+    pub fn request(&self, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+        let payload = body.unwrap_or_default();
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            self.addr,
+            payload.len()
+        );
+        loop {
+            let (mut stream, reused) = self.checkout()?;
+            match exchange(&mut stream, head.as_bytes(), payload.as_bytes()) {
+                Ok((resp, clean)) => {
+                    if clean && resp.keep_alive() {
+                        self.checkin(stream);
+                    }
+                    let text = String::from_utf8(resp.body)
+                        .map_err(|_| anyhow!("non-UTF-8 response body"))?;
+                    return Ok((resp.status, text));
+                }
+                // A stale pooled connection (closed server-side since its
+                // last use) fails here — retry on the next one; the loop is
+                // bounded because every retry consumes a pooled socket and
+                // a fresh-connection failure propagates immediately.
+                Err(e) if !reused => return Err(e),
+                Err(_) => continue,
+            }
+        }
+    }
+
+    /// `GET path`.
+    pub fn get(&self, path: &str) -> Result<(u16, String)> {
+        self.request("GET", path, None)
+    }
+
+    /// `POST path` with a JSON body.
+    pub fn post_json(&self, path: &str, body: &str) -> Result<(u16, String)> {
+        self.request("POST", path, Some(body))
+    }
+}
+
+/// Blocking one-shot HTTP exchange with an explicit read timeout:
+/// connect, send (`Connection: close`), read the full response.
+pub fn request_with_timeout(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    timeout: Duration,
+) -> Result<(u16, String)> {
     let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-    stream
-        .set_read_timeout(Some(Duration::from_secs(120)))
-        .ok();
+    stream.set_read_timeout(Some(timeout)).ok();
     let body = body.unwrap_or_default();
     let head = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n",
         body.len()
     );
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
-    stream.flush()?;
-    let mut raw = Vec::new();
-    stream
-        .read_to_end(&mut raw)
-        .context("reading HTTP response")?;
-    let text = String::from_utf8(raw).map_err(|_| anyhow!("non-UTF-8 response"))?;
-    let (head, payload) = text
-        .split_once("\r\n\r\n")
-        .ok_or_else(|| anyhow!("response without header terminator"))?;
-    let status: u16 = head
-        .split(' ')
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .ok_or_else(|| anyhow!("bad status line `{}`", head.lines().next().unwrap_or("")))?;
-    Ok((status, payload.to_string()))
+    let (resp, _clean) = exchange(&mut stream, head.as_bytes(), body.as_bytes())?;
+    let text =
+        String::from_utf8(resp.body).map_err(|_| anyhow!("non-UTF-8 response body"))?;
+    Ok((resp.status, text))
+}
+
+/// Blocking one-shot HTTP client with the default timeout. This is the
+/// client the integration tests and the serving example drive the server
+/// with — kept in-crate so the whole network path needs zero external
+/// tooling.
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    request_with_timeout(addr, method, path, body, DEFAULT_CLIENT_TIMEOUT)
 }
 
 /// Render the canonical single-image `POST /v1/predict` body for `image`.
@@ -263,6 +562,7 @@ mod tests {
         assert_eq!(req.target, "/v1/predict");
         assert_eq!(req.header("content-length"), Some("4"));
         assert_eq!(req.body, b"abcd");
+        assert!(req.http11);
     }
 
     #[test]
@@ -296,6 +596,84 @@ mod tests {
         assert!(matches!(parse_raw(raw, 1024), Err(ReadError::BodyTooLarge)));
     }
 
+    /// The incremental parser: prefixes are `None`, a complete request
+    /// reports its exact consumed length, and pipelined followers parse
+    /// out of the remaining bytes.
+    #[test]
+    fn try_parse_is_incremental_and_pipelines() {
+        let one = b"POST /a HTTP/1.1\r\nContent-Length: 3\r\n\r\nxyz";
+        // every strict prefix is incomplete
+        for cut in 0..one.len() {
+            assert!(
+                try_parse(&one[..cut], 1024).unwrap().is_none(),
+                "cut {cut}"
+            );
+        }
+        let (req, consumed) = try_parse(one, 1024).unwrap().unwrap();
+        assert_eq!(req.target, "/a");
+        assert_eq!(req.body, b"xyz");
+        assert_eq!(consumed, one.len());
+
+        // two pipelined requests in one buffer parse in order
+        let mut buf = one.to_vec();
+        buf.extend_from_slice(b"GET /b HTTP/1.1\r\n\r\n");
+        let (first, consumed) = try_parse(&buf, 1024).unwrap().unwrap();
+        assert_eq!(first.target, "/a");
+        let rest = &buf[consumed..];
+        let (second, consumed2) = try_parse(rest, 1024).unwrap().unwrap();
+        assert_eq!(second.target, "/b");
+        assert_eq!(second.method, "GET");
+        assert_eq!(consumed2, rest.len());
+    }
+
+    #[test]
+    fn keep_alive_semantics() {
+        let parse_one = |raw: &[u8]| try_parse(raw, 1024).unwrap().unwrap().0;
+        // HTTP/1.1 defaults to keep-alive…
+        assert!(parse_one(b"GET / HTTP/1.1\r\n\r\n").keep_alive());
+        // …unless the client says close
+        assert!(!parse_one(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").keep_alive());
+        assert!(!parse_one(b"GET / HTTP/1.1\r\nConnection: Close\r\n\r\n").keep_alive());
+        // HTTP/1.0 defaults to close unless keep-alive is requested
+        assert!(!parse_one(b"GET / HTTP/1.0\r\n\r\n").keep_alive());
+        assert!(parse_one(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").keep_alive());
+    }
+
+    #[test]
+    fn render_response_headers() {
+        let bytes = render_response(200, "application/json", b"{}", true, None);
+        let text = String::from_utf8(bytes).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+
+        let bytes = render_response(429, "application/json", b"{}", false, Some(2));
+        let text = String::from_utf8(bytes).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 2\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"));
+    }
+
+    #[test]
+    fn response_parser_round_trips() {
+        let bytes = render_response(202, "application/json", b"{\"job\":1}", true, None);
+        // prefixes are incomplete
+        for cut in [0usize, 10, bytes.len() - 1] {
+            assert!(try_parse_response(&bytes[..cut]).unwrap().is_none());
+        }
+        let (resp, consumed) = try_parse_response(&bytes).unwrap().unwrap();
+        assert_eq!(consumed, bytes.len());
+        assert_eq!(resp.status, 202);
+        assert!(resp.keep_alive());
+        assert_eq!(resp.body, b"{\"job\":1}");
+        assert_eq!(resp.header("content-type"), Some("application/json"));
+
+        let bytes = render_response(200, "text/plain; version=0.0.4", b"ok", false, None);
+        let (resp, _) = try_parse_response(&bytes).unwrap().unwrap();
+        assert!(!resp.keep_alive());
+    }
+
     #[test]
     fn client_server_round_trip() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -314,10 +692,79 @@ mod tests {
         assert_eq!(body, "{\"x\":1}");
     }
 
+    /// The pooled client reuses one TCP connection across requests when
+    /// the server keeps it alive.
+    #[test]
+    fn pooled_client_reuses_connections() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            // one accepted connection serves both requests
+            let (mut conn, _) = listener.accept().unwrap();
+            for i in 0..2 {
+                let req = read_request(&mut conn, 1 << 20).unwrap();
+                assert_eq!(req.target, format!("/r{i}"));
+                let body = format!("{{\"i\":{i}}}");
+                conn.write_all(&render_response(
+                    200,
+                    "application/json",
+                    body.as_bytes(),
+                    true,
+                    None,
+                ))
+                .unwrap();
+                conn.flush().unwrap();
+            }
+        });
+        let client = Client::new(addr).with_timeout(Duration::from_secs(5));
+        let (status, body) = client.get("/r0").unwrap();
+        assert_eq!((status, body.as_str()), (200, "{\"i\":0}"));
+        let (status, body) = client.get("/r1").unwrap();
+        assert_eq!((status, body.as_str()), (200, "{\"i\":1}"));
+        server.join().unwrap();
+        assert_eq!(client.connects(), 1, "second request must reuse the socket");
+        assert_eq!(client.reuses(), 1);
+    }
+
+    /// A stale pooled connection (server closed it between requests) is
+    /// retried on a fresh socket instead of surfacing an error.
+    #[test]
+    fn pooled_client_retries_stale_connections() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            // first connection: answer keep-alive, then drop it
+            let (mut conn, _) = listener.accept().unwrap();
+            let _ = read_request(&mut conn, 1 << 20).unwrap();
+            conn.write_all(&render_response(200, "application/json", b"{}", true, None))
+                .unwrap();
+            drop(conn);
+            // second connection: serve the retried request
+            let (mut conn, _) = listener.accept().unwrap();
+            let req = read_request(&mut conn, 1 << 20).unwrap();
+            assert_eq!(req.target, "/second");
+            conn.write_all(&render_response(200, "application/json", b"{\"ok\":true}", true, None))
+                .unwrap();
+        });
+        let client = Client::new(addr).with_timeout(Duration::from_secs(5));
+        let (status, _) = client.get("/first").unwrap();
+        assert_eq!(status, 200);
+        // the pooled socket is now dead server-side; the client must
+        // recover transparently
+        let (status, body) = client.get("/second").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "{\"ok\":true}");
+        server.join().unwrap();
+        assert_eq!(client.connects(), 2);
+    }
+
     #[test]
     fn reason_phrases() {
         assert_eq!(reason(200), "OK");
+        assert_eq!(reason(408), "Request Timeout");
         assert_eq!(reason(413), "Payload Too Large");
+        assert_eq!(reason(429), "Too Many Requests");
+        assert_eq!(reason(502), "Bad Gateway");
         assert_eq!(reason(599), "Response");
     }
 }

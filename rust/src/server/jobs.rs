@@ -1,16 +1,28 @@
-//! Async job store for long-running campaign work.
+//! Async job store for long-running campaign work — bounded.
 //!
 //! `POST /v1/campaigns/…` returns immediately with a job id; the campaign
 //! runs on its own thread (fanning its grid over the deterministic
 //! `cgp::campaign` pool) and clients poll `GET /v1/jobs/{id}` until the
-//! record flips to `done`/`failed`. Results are retained for the life of
-//! the server process — the store is a service-lifetime ledger, not a
-//! cache with eviction (a future scaling surface, like keep-alive).
+//! record flips to `done`/`failed`.
+//!
+//! The store is bounded on three axes (DESIGN.md §11):
+//!
+//! * **terminal retention** — finished records are evicted once they
+//!   outnumber [`JobLimits::max_terminal`] (oldest first) or outlive
+//!   [`JobLimits::ttl`]; the sweep runs on every submit and is counted in
+//!   [`JobStore::evicted`], exported on `/metrics`;
+//! * **active saturation** — [`JobStore::saturated`] reports when
+//!   queued+running jobs reach [`JobLimits::max_active`]; the server
+//!   answers further submissions with `429 Retry-After` instead of
+//!   spawning unboundedly;
+//! * **thread handles** — finished worker handles are joined opportunistically
+//!   on submit, so the handle list tracks live jobs, not history.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -39,6 +51,11 @@ impl JobState {
             JobState::Failed => "failed",
         }
     }
+
+    /// Whether the job has finished (successfully or not).
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed)
+    }
 }
 
 /// One job's record (cloned out to handlers).
@@ -54,35 +71,83 @@ pub struct JobRecord {
     pub result: Option<Json>,
     /// Error chain (present iff `Failed`).
     pub error: Option<String>,
+    /// When the job reached a terminal state (eviction clock).
+    pub finished_at: Option<Instant>,
+}
+
+/// Retention and saturation bounds for a [`JobStore`].
+#[derive(Debug, Clone, Copy)]
+pub struct JobLimits {
+    /// Most terminal (done/failed) records retained before the oldest are
+    /// evicted.
+    pub max_terminal: usize,
+    /// Terminal records older than this are evicted on the next sweep.
+    pub ttl: Duration,
+    /// Queued+running jobs at which [`JobStore::saturated`] trips.
+    pub max_active: usize,
+}
+
+impl Default for JobLimits {
+    fn default() -> Self {
+        JobLimits {
+            max_terminal: 256,
+            ttl: Duration::from_secs(15 * 60),
+            max_active: 32,
+        }
+    }
 }
 
 #[derive(Default)]
 struct Inner {
     next_id: AtomicU64,
+    evicted: AtomicU64,
     jobs: Mutex<HashMap<u64, JobRecord>>,
     handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
 /// Cloneable handle to the shared job ledger.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct JobStore {
     inner: Arc<Inner>,
+    limits: JobLimits,
+}
+
+impl Default for JobStore {
+    fn default() -> Self {
+        JobStore::new()
+    }
 }
 
 impl JobStore {
-    /// Empty store.
+    /// Empty store with [`JobLimits::default`].
     pub fn new() -> JobStore {
-        JobStore::default()
+        JobStore::with_limits(JobLimits::default())
+    }
+
+    /// Empty store with explicit bounds.
+    pub fn with_limits(limits: JobLimits) -> JobStore {
+        JobStore {
+            inner: Arc::new(Inner::default()),
+            limits,
+        }
+    }
+
+    /// The store's configured bounds.
+    pub fn limits(&self) -> JobLimits {
+        self.limits
     }
 
     /// Submit `work` as a named job: allocates an id, spawns the worker
     /// thread and returns immediately. The closure's `Ok(Json)` becomes
-    /// the job result; its `Err` chain the failure message.
+    /// the job result; its `Err` chain the failure message. Runs the
+    /// eviction sweep and reaps finished worker handles first.
     pub fn submit(
         &self,
         kind: &str,
         work: impl FnOnce() -> Result<Json> + Send + 'static,
     ) -> u64 {
+        self.evict_terminal();
+        self.reap_finished_handles();
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         {
             let mut jobs = self.inner.jobs.lock().expect("job ledger poisoned");
@@ -94,6 +159,7 @@ impl JobStore {
                     state: JobState::Queued,
                     result: None,
                     error: None,
+                    finished_at: None,
                 },
             );
         }
@@ -102,21 +168,20 @@ impl JobStore {
             .name(format!("job-{id}"))
             .spawn(move || {
                 set_state(&inner, id, JobState::Running);
-                match work() {
-                    Ok(result) => {
-                        let mut jobs = inner.jobs.lock().expect("job ledger poisoned");
-                        if let Some(rec) = jobs.get_mut(&id) {
+                let outcome = work();
+                let mut jobs = inner.jobs.lock().expect("job ledger poisoned");
+                if let Some(rec) = jobs.get_mut(&id) {
+                    match outcome {
+                        Ok(result) => {
                             rec.state = JobState::Done;
                             rec.result = Some(result);
                         }
-                    }
-                    Err(e) => {
-                        let mut jobs = inner.jobs.lock().expect("job ledger poisoned");
-                        if let Some(rec) = jobs.get_mut(&id) {
+                        Err(e) => {
                             rec.state = JobState::Failed;
                             rec.error = Some(format!("{e:#}"));
                         }
                     }
+                    rec.finished_at = Some(Instant::now());
                 }
             })
             .expect("spawning job thread");
@@ -141,6 +206,77 @@ impl JobStore {
     /// Number of jobs ever submitted.
     pub fn submitted(&self) -> u64 {
         self.inner.next_id.load(Ordering::Relaxed)
+    }
+
+    /// Terminal records evicted so far (capacity + TTL sweeps combined).
+    pub fn evicted(&self) -> u64 {
+        self.inner.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Jobs currently queued or running.
+    pub fn active(&self) -> usize {
+        self.inner
+            .jobs
+            .lock()
+            .expect("job ledger poisoned")
+            .values()
+            .filter(|r| !r.state.is_terminal())
+            .count()
+    }
+
+    /// Whether the active-job pool is at its bound — the server's signal
+    /// to shed new submissions with `429`.
+    pub fn saturated(&self) -> bool {
+        self.active() >= self.limits.max_active
+    }
+
+    /// Evict terminal records that outlived the TTL, then the oldest
+    /// surplus beyond `max_terminal`. Active jobs are never evicted.
+    fn evict_terminal(&self) {
+        let now = Instant::now();
+        let mut jobs = self.inner.jobs.lock().expect("job ledger poisoned");
+        let mut terminal: Vec<(u64, Instant)> = Vec::new();
+        for rec in jobs.values() {
+            if rec.state.is_terminal() {
+                terminal.push((rec.id, rec.finished_at.unwrap_or(now)));
+            }
+        }
+        terminal.sort_by_key(|&(_, at)| at);
+        let mut evicted = 0u64;
+        let mut keep = Vec::with_capacity(terminal.len());
+        for (id, at) in terminal {
+            if now.duration_since(at) >= self.limits.ttl {
+                jobs.remove(&id);
+                evicted += 1;
+            } else {
+                keep.push(id);
+            }
+        }
+        if keep.len() > self.limits.max_terminal {
+            // oldest first: `keep` inherited the finished_at ordering
+            let surplus = keep.len() - self.limits.max_terminal;
+            for id in keep.into_iter().take(surplus) {
+                jobs.remove(&id);
+                evicted += 1;
+            }
+        }
+        if evicted > 0 {
+            self.inner.evicted.fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+
+    /// Join worker handles whose jobs have finished, so the handle list
+    /// stays proportional to live jobs.
+    fn reap_finished_handles(&self) {
+        let mut handles = self.inner.handles.lock().expect("job handles poisoned");
+        let mut i = 0;
+        while i < handles.len() {
+            if handles[i].is_finished() {
+                let _ = handles.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
     }
 
     /// Wait for every submitted job to finish (graceful-shutdown drain).
@@ -179,7 +315,9 @@ mod tests {
         assert_eq!(rec.state, JobState::Done);
         assert_eq!(rec.result.unwrap().to_string(), "{\"x\":1}");
         assert!(rec.error.is_none());
+        assert!(rec.finished_at.is_some());
         assert_eq!(store.submitted(), 1);
+        assert_eq!(store.active(), 0);
     }
 
     #[test]
@@ -206,5 +344,85 @@ mod tests {
         store.join_all();
         assert_eq!(store.get(a).unwrap().state, JobState::Done);
         assert_eq!(store.get(b).unwrap().state, JobState::Done);
+    }
+
+    /// Capacity eviction: terminal records beyond `max_terminal` drop
+    /// oldest-first; the submit that triggered the sweep keeps its record.
+    #[test]
+    fn capacity_eviction_drops_oldest_terminal() {
+        let store = JobStore::with_limits(JobLimits {
+            max_terminal: 2,
+            ttl: Duration::from_secs(3600),
+            max_active: 32,
+        });
+        let mut ids = Vec::new();
+        for _ in 0..4 {
+            ids.push(store.submit("test", || Ok(Json::Null)));
+            // finish each job before the next submit so finished_at
+            // ordering (the eviction order) matches submission order
+            store.join_all();
+        }
+        // the 4th submit's sweep saw 3 terminal records and evicted the
+        // oldest surplus one
+        assert!(store.get(ids[0]).is_none(), "oldest record must be evicted");
+        assert!(store.get(ids[2]).is_some());
+        assert!(store.get(ids[3]).is_some());
+        assert_eq!(store.evicted(), 1);
+    }
+
+    /// TTL eviction: with a zero TTL every terminal record is gone by the
+    /// next sweep, while an active job always survives.
+    #[test]
+    fn ttl_eviction_spares_active_jobs() {
+        let store = JobStore::with_limits(JobLimits {
+            max_terminal: 256,
+            ttl: Duration::ZERO,
+            max_active: 32,
+        });
+        let first = store.submit("test", || Ok(Json::Null));
+        store.join_all();
+        // gate the second job so it is provably active during the sweep
+        let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+        let second = store.submit("test", move || {
+            release_rx.recv().ok();
+            Ok(Json::Null)
+        });
+        // third submit sweeps: `first` is terminal+expired, `second` active
+        let third = store.submit("test", || Ok(Json::Null));
+        assert!(store.get(first).is_none(), "expired terminal record");
+        assert!(store.get(second).is_some(), "active jobs are never evicted");
+        assert!(store.evicted() >= 1);
+        release_tx.send(()).ok();
+        store.join_all();
+        // no sweep has run since `third` finished, so its record is intact
+        assert_eq!(store.get(third).unwrap().state, JobState::Done);
+        assert_eq!(store.active(), 0);
+    }
+
+    /// `saturated()` trips at the configured active bound and clears once
+    /// jobs finish.
+    #[test]
+    fn saturation_tracks_active_jobs() {
+        let store = JobStore::with_limits(JobLimits {
+            max_terminal: 256,
+            ttl: Duration::from_secs(3600),
+            max_active: 2,
+        });
+        assert!(!store.saturated());
+        let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+        let rx = Arc::new(Mutex::new(release_rx));
+        for _ in 0..2 {
+            let rx = rx.clone();
+            store.submit("test", move || {
+                rx.lock().expect("gate poisoned").recv().ok();
+                Ok(Json::Null)
+            });
+        }
+        assert!(store.saturated(), "two gated jobs reach the bound of 2");
+        release_tx.send(()).ok();
+        release_tx.send(()).ok();
+        store.join_all();
+        assert!(!store.saturated());
+        assert_eq!(store.active(), 0);
     }
 }

@@ -1,19 +1,24 @@
 //! L4 service layer: a std-only HTTP/1.1 server fronting the
 //! [`Coordinator`] — the paper's accelerator-selection case study as a
-//! network service (DESIGN.md §7).
+//! network service (DESIGN.md §7, §11).
 //!
 //! Architecture (no tokio/hyper — consistent with the vendored-shim
 //! policy):
 //!
-//! * an **acceptor thread** owns the `TcpListener` and feeds accepted
-//!   connections to a fixed pool of **worker threads** over a channel
-//!   (one request per connection, `Connection: close`);
-//! * classification requests route through the [`Batcher`], so
-//!   single-image requests from many concurrent connections aggregate
-//!   into full engine batches exactly like in-process callers —
-//!   backpressure comes from the batcher/engine, not from the socket
-//!   layer;
-//! * campaign and DSE requests become **async jobs** ([`jobs::JobStore`]):
+//! * one **event-loop thread** ([`event::run`]) multiplexes the listener
+//!   and every connection through `poll(2)`: non-blocking accepts,
+//!   per-connection read/parse state machines ([`conn::Conn`]),
+//!   HTTP/1.1 **keep-alive** with in-order pipelining, slowloris (408)
+//!   and idle deadlines — no thread ever blocks on a socket;
+//! * classification requests route through the [`Batcher`] as **deferred
+//!   completions**: the handler parks the connection, the batcher's
+//!   callback reassembles the response and wakes the loop — so a full
+//!   batch of in-flight predicts costs zero blocked threads;
+//! * **backpressure** is explicit: when the batcher queue exceeds
+//!   `max_pending` or the job pool is saturated, requests are shed with
+//!   `429` + `Retry-After` instead of queueing without bound;
+//! * campaign and DSE requests become **async jobs** ([`jobs::JobStore`],
+//!   bounded: terminal records are evicted by capacity and TTL):
 //!   the submit endpoint returns an id immediately and the work fans its
 //!   grid over the deterministic `cgp::campaign` pool on its own thread;
 //! * every resilience evaluation — `/v1/select`, campaign jobs, DSE
@@ -22,9 +27,11 @@
 //!   `(network, multiplier, layer scope)` points are computed once per
 //!   server process;
 //! * **graceful shutdown** (`POST /v1/admin/shutdown`, or
-//!   [`ServerHandle::shutdown`]): stop accepting, drain queued
-//!   connections, join workers, drain campaign jobs, then retire the
-//!   batcher and collect its stats.
+//!   [`ServerHandle::shutdown`]): stop accepting, drain in-flight
+//!   requests, drain campaign jobs, then retire the batcher and collect
+//!   its stats;
+//! * [`fleet`] scales this out: a router process supervises N `serve`
+//!   shard processes and routes/replicates requests across them.
 //!
 //! Endpoints (all JSON unless noted):
 //!
@@ -41,18 +48,22 @@
 //! | GET  | `/v1/jobs/{id}` | poll a job |
 //! | POST | `/v1/admin/shutdown` | graceful shutdown |
 
+pub mod conn;
+pub mod event;
+pub mod fleet;
 pub mod http;
 pub mod jobs;
 pub mod report;
 pub mod router;
 
 use std::collections::HashMap;
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver};
+use std::net::{SocketAddr, TcpListener};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -60,7 +71,6 @@ use crate::cgp::campaign::{default_workers, map_parallel};
 use crate::cgp::metrics::Metric;
 use crate::circuit::verify::ArithFn;
 use crate::coordinator::batcher::{BatchPolicy, Batcher, BatcherGuard, BatcherStats};
-use crate::coordinator::metrics::Histogram;
 use crate::coordinator::{Coordinator, KernelKind};
 use crate::dse::{run_dse, DseConfig};
 use crate::library::{metric_slot, LibrarySource};
@@ -70,6 +80,7 @@ use crate::resilience::{
 use crate::runtime::{broadcast_lut, exact_lut, TestSet};
 use crate::util::json::Json;
 
+use event::{Completions, ConnMetrics, EventConfig, Outcome, ReqCtx, Response, Waker};
 use jobs::JobStore;
 use router::Target;
 
@@ -81,7 +92,9 @@ pub const MAX_IMAGES_PER_REQUEST: usize = 256;
 pub struct ServerConfig {
     /// Bind address (`127.0.0.1:8080`; port `0` picks an ephemeral port).
     pub addr: String,
-    /// HTTP worker threads.
+    /// Retained for CLI compatibility. The evented loop replaced the
+    /// worker pool: connection concurrency is bounded by `max_conns`, and
+    /// compute concurrency by the batcher and the job pool.
     pub workers: usize,
     /// Model served by `/v1/predict` (and the default for campaigns).
     pub model: String,
@@ -94,6 +107,20 @@ pub struct ServerConfig {
     pub max_body_bytes: usize,
     /// Default evaluation-image count for `/v1/select`.
     pub select_images: usize,
+    /// Shed `/v1/predict` with 429 once this many images are queued in
+    /// the batcher.
+    pub max_pending: usize,
+    /// A request that trickles in slower than this is answered 408
+    /// (slowloris defence).
+    pub request_read_timeout: Duration,
+    /// Close keep-alive connections idle longer than this.
+    pub idle_timeout: Duration,
+    /// Stop accepting once this many connections are live.
+    pub max_conns: usize,
+    /// Close a keep-alive connection after this many requests.
+    pub max_requests_per_conn: u64,
+    /// `Retry-After` hint on 429 backpressure responses [s].
+    pub retry_after_secs: u32,
 }
 
 impl Default for ServerConfig {
@@ -106,18 +133,14 @@ impl Default for ServerConfig {
             batch_policy: BatchPolicy::default(),
             max_body_bytes: 8 * 1024 * 1024,
             select_images: 32,
+            max_pending: 256,
+            request_read_timeout: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(60),
+            max_conns: 1024,
+            max_requests_per_conn: 10_000,
+            retry_after_secs: 1,
         }
     }
-}
-
-/// HTTP-layer service metrics (the coordinator keeps its own).
-#[derive(Debug, Default)]
-struct HttpMetrics {
-    requests: AtomicU64,
-    responses_2xx: AtomicU64,
-    responses_4xx: AtomicU64,
-    responses_5xx: AtomicU64,
-    latency: Histogram,
 }
 
 /// One `/v1/select` evaluation: reference accuracy + per-candidate
@@ -137,7 +160,7 @@ struct SelectCandidate {
     accuracy_drop: f64,
 }
 
-/// Shared state behind every worker.
+/// Shared state behind the event loop and the job/batcher threads.
 struct ServerState {
     coord: Coordinator,
     library: LibrarySource,
@@ -162,7 +185,12 @@ struct ServerState {
     /// The fingerprint key keeps the memo correct if the source changes.
     pareto_cache: Mutex<HashMap<(u64, u8, ArithFn), Arc<String>>>,
     shutdown: AtomicBool,
-    http: HttpMetrics,
+    /// Connection/request counters, owned by the event loop.
+    http: ConnMetrics,
+    /// Interrupts the event loop (shutdown, deferred completions).
+    waker: Arc<Waker>,
+    /// Resolves deferred requests from batcher callbacks.
+    completions: Completions,
     started: Instant,
 }
 
@@ -183,6 +211,12 @@ pub struct ServerReport {
     pub request_p99_us: u64,
     /// Campaign jobs submitted over the run.
     pub campaign_jobs: u64,
+    /// Connections accepted over the run.
+    pub accepted_conns: u64,
+    /// Requests served on reused keep-alive connections.
+    pub keepalive_reuses: u64,
+    /// Requests shed with 429 by backpressure.
+    pub shed_429: u64,
     /// Batcher statistics for the predict path.
     pub batcher: BatcherStats,
 }
@@ -198,8 +232,8 @@ pub struct ServerHandle {
 }
 
 impl Server {
-    /// Bind `cfg.addr`, warm the served model and start the acceptor +
-    /// worker threads. The coordinator stays owned by the caller (keep its
+    /// Bind `cfg.addr`, warm the served model and start the event-loop
+    /// thread. The coordinator stays owned by the caller (keep its
     /// `CoordinatorGuard` alive for the server's lifetime).
     pub fn start(
         coord: Coordinator,
@@ -228,7 +262,8 @@ impl Server {
             luts,
             cfg.batch_policy,
         )?;
-        let workers = cfg.workers.max(1);
+        let (waker, wake_rx) = event::waker_pair().context("creating event-loop waker")?;
+        let (completions, completions_rx) = event::completion_channel(waker.clone());
         let state = Arc::new(ServerState {
             coord,
             library,
@@ -241,15 +276,17 @@ impl Server {
             rosters: Mutex::new(HashMap::new()),
             pareto_cache: Mutex::new(HashMap::new()),
             shutdown: AtomicBool::new(false),
-            http: HttpMetrics::default(),
+            http: ConnMetrics::default(),
+            waker,
+            completions,
             started: Instant::now(),
             cfg,
         });
-        let acceptor_state = state.clone();
+        let loop_state = state.clone();
         let listener_handle = std::thread::Builder::new()
-            .name("http-acceptor".into())
-            .spawn(move || acceptor_loop(listener, acceptor_state, workers, batcher_guard))
-            .context("spawning acceptor thread")?;
+            .name("http-event-loop".into())
+            .spawn(move || event_loop(listener, loop_state, batcher_guard, wake_rx, completions_rx))
+            .context("spawning event-loop thread")?;
         Ok(ServerHandle {
             addr,
             state,
@@ -295,6 +332,9 @@ impl ServerHandle {
             request_p50_us: state.http.latency.quantile_us(0.5),
             request_p99_us: state.http.latency.quantile_us(0.99),
             campaign_jobs: state.jobs.submitted(),
+            accepted_conns: state.http.accepted.load(Ordering::Relaxed),
+            keepalive_reuses: state.http.keepalive_reuses.load(Ordering::Relaxed),
+            shed_429: state.http.shed_429.load(Ordering::Relaxed),
             batcher: state
                 .batcher_stats
                 .lock()
@@ -314,60 +354,40 @@ impl Drop for ServerHandle {
     }
 }
 
-/// Flip the shutdown flag and poke the acceptor out of `accept()` with a
-/// throwaway connection. A wildcard bind address (`0.0.0.0`/`::`) is not
-/// connectable on every platform, so the wake targets loopback on the
-/// bound port instead.
+/// Flip the shutdown flag and wake the event loop so it notices.
 fn trigger_shutdown(state: &ServerState) {
     if !state.shutdown.swap(true, Ordering::SeqCst) {
-        let mut wake = state.addr;
-        if wake.ip().is_unspecified() {
-            wake.set_ip(match wake.ip() {
-                std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
-                std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
-            });
-        }
-        let _ = TcpStream::connect(wake);
+        state.waker.wake();
     }
 }
 
-fn acceptor_loop(
+/// The event-loop thread: run the readiness loop until shutdown, then
+/// drain campaign jobs and retire the batcher (same drain order as the
+/// old acceptor thread, so reports stay complete).
+fn event_loop(
     listener: TcpListener,
     state: Arc<ServerState>,
-    workers: usize,
     batcher_guard: BatcherGuard,
+    wake_rx: UnixStream,
+    completions_rx: Receiver<(u64, Response)>,
 ) {
-    let (tx, rx) = channel::<TcpStream>();
-    let rx = Arc::new(Mutex::new(rx));
-    let mut handles = Vec::with_capacity(workers);
-    for i in 0..workers {
-        let state = state.clone();
-        let rx = rx.clone();
-        let h = std::thread::Builder::new()
-            .name(format!("http-worker-{i}"))
-            .spawn(move || worker_loop(state, rx))
-            .expect("spawning http worker");
-        handles.push(h);
-    }
-    for conn in listener.incoming() {
-        if state.shutdown.load(Ordering::SeqCst) {
-            break; // the waking connection (if any) is dropped unanswered
-        }
-        match conn {
-            Ok(stream) => {
-                let _ = tx.send(stream);
-            }
-            // transient accept failures (e.g. EMFILE under fd exhaustion)
-            // return instantly — back off instead of spinning a core
-            Err(_) => std::thread::sleep(std::time::Duration::from_millis(50)),
-        }
-    }
-    // Drain: close the queue (workers finish whatever is already accepted
-    // and exit), join them, drain campaign jobs, then retire the batcher.
-    drop(tx);
-    for h in handles {
-        let _ = h.join();
-    }
+    let cfg = EventConfig {
+        max_body_bytes: state.cfg.max_body_bytes,
+        request_read_timeout: state.cfg.request_read_timeout,
+        idle_timeout: state.cfg.idle_timeout,
+        max_conns: state.cfg.max_conns,
+        max_requests_per_conn: state.cfg.max_requests_per_conn,
+    };
+    let handler_state = state.clone();
+    event::run(
+        listener,
+        &cfg,
+        &state.http,
+        &state.shutdown,
+        wake_rx,
+        completions_rx,
+        move |req, ctx| dispatch(&handler_state, req, ctx),
+    );
     state.jobs.join_all();
     *state.batcher.lock().expect("batcher slot poisoned") = None;
     let stats = batcher_guard.join();
@@ -375,99 +395,6 @@ fn acceptor_loop(
         .batcher_stats
         .lock()
         .expect("batcher stats poisoned") = Some(stats);
-}
-
-fn worker_loop(state: Arc<ServerState>, rx: Arc<Mutex<Receiver<TcpStream>>>) {
-    loop {
-        // lock only for the dequeue — handling runs lock-free
-        let conn = rx.lock().expect("connection queue poisoned").recv();
-        match conn {
-            Ok(stream) => handle_connection(&state, stream),
-            Err(_) => break, // acceptor dropped the sender: drain complete
-        }
-    }
-}
-
-/// One response, plus whether to initiate shutdown after sending it.
-struct Response {
-    status: u16,
-    content_type: &'static str,
-    body: String,
-    shutdown_after: bool,
-}
-
-impl Response {
-    fn json(status: u16, j: Json) -> Response {
-        Response {
-            status,
-            content_type: "application/json",
-            body: j.to_string(),
-            shutdown_after: false,
-        }
-    }
-
-    fn json_body(status: u16, body: String) -> Response {
-        Response {
-            status,
-            content_type: "application/json",
-            body,
-            shutdown_after: false,
-        }
-    }
-
-    fn error(status: u16, msg: impl std::fmt::Display) -> Response {
-        Response::json(
-            status,
-            Json::obj([("error", msg.to_string().into())]),
-        )
-    }
-}
-
-/// How long a worker will wait on a silent peer before giving the
-/// connection up. Without this a client that connects and sends nothing
-/// would park a worker forever — and park shutdown with it, since the
-/// acceptor joins every worker while draining.
-const CONNECTION_IO_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
-
-fn handle_connection(state: &Arc<ServerState>, mut stream: TcpStream) {
-    let t0 = Instant::now();
-    // a timed-out read surfaces as ReadError::Disconnected below
-    let _ = stream.set_read_timeout(Some(CONNECTION_IO_TIMEOUT));
-    let _ = stream.set_write_timeout(Some(CONNECTION_IO_TIMEOUT));
-    let peer_is_loopback = stream
-        .peer_addr()
-        .map(|a| a.ip().is_loopback())
-        .unwrap_or(false);
-    let response = match http::read_request(&mut stream, state.cfg.max_body_bytes) {
-        Err(http::ReadError::Disconnected) => return, // nobody to answer
-        Err(http::ReadError::Malformed(msg)) => Response::error(400, msg),
-        Err(http::ReadError::HeaderTooLarge) => Response::error(431, "header block too large"),
-        Err(http::ReadError::BodyTooLarge) => Response::error(
-            413,
-            format!("body exceeds the {} byte limit", state.cfg.max_body_bytes),
-        ),
-        Ok(req) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            dispatch(state, &req, peer_is_loopback)
-        }))
-        .unwrap_or_else(|_| Response::error(500, "handler panicked")),
-    };
-    state.http.requests.fetch_add(1, Ordering::Relaxed);
-    let class = match response.status / 100 {
-        2 => &state.http.responses_2xx,
-        4 => &state.http.responses_4xx,
-        _ => &state.http.responses_5xx,
-    };
-    class.fetch_add(1, Ordering::Relaxed);
-    let _ = http::write_response(
-        &mut stream,
-        response.status,
-        response.content_type,
-        response.body.as_bytes(),
-    );
-    state.http.latency.record(t0.elapsed());
-    if response.shutdown_after {
-        trigger_shutdown(state);
-    }
 }
 
 const ENDPOINTS: &[&str] = &[
@@ -500,10 +427,10 @@ fn known_path(p: &[&str]) -> bool {
     )
 }
 
-fn dispatch(state: &Arc<ServerState>, req: &http::Request, peer_is_loopback: bool) -> Response {
+fn dispatch(state: &Arc<ServerState>, req: &http::Request, ctx: ReqCtx) -> Outcome {
     let target = Target::parse(&req.target);
     let path = target.path();
-    match (req.method.as_str(), path.as_slice()) {
+    let resp = match (req.method.as_str(), path.as_slice()) {
         ("GET", []) => Response::json(
             200,
             Json::obj([
@@ -516,7 +443,9 @@ fn dispatch(state: &Arc<ServerState>, req: &http::Request, peer_is_loopback: boo
         ),
         ("GET", ["healthz"]) => handle_healthz(state),
         ("GET", ["metrics"]) => handle_metrics(state),
-        ("POST", ["v1", "predict"]) => handle_predict(state, &req.body),
+        // the one deferred path: predict parks the connection on the
+        // batcher and resolves through the completion channel
+        ("POST", ["v1", "predict"]) => return handle_predict(state, &req.body, ctx),
         ("GET", ["v1", "library", "census"]) => {
             Response::json(200, report::census_to_json(&state.library))
         }
@@ -527,18 +456,16 @@ fn dispatch(state: &Arc<ServerState>, req: &http::Request, peer_is_loopback: boo
         ("GET", ["v1", "jobs", id]) => handle_job(state, id),
         // admin surface is loopback-only: a non-loopback bind must not
         // hand every network peer a remote off-switch
-        ("POST", ["v1", "admin", "shutdown"]) if !peer_is_loopback => {
+        ("POST", ["v1", "admin", "shutdown"]) if !ctx.peer_is_loopback => {
             Response::error(403, "admin endpoints are restricted to loopback peers")
         }
-        ("POST", ["v1", "admin", "shutdown"]) => Response {
-            status: 200,
-            content_type: "application/json",
-            body: Json::obj([("status", "shutting-down".into())]).to_string(),
-            shutdown_after: true,
-        },
+        ("POST", ["v1", "admin", "shutdown"]) => {
+            Response::json(200, Json::obj([("status", "shutting-down".into())])).with_shutdown()
+        }
         (_, p) if known_path(p) => Response::error(405, "method not allowed for this route"),
         _ => Response::error(404, "unknown route (GET / lists the endpoints)"),
-    }
+    };
+    Outcome::Ready(resp)
 }
 
 fn handle_healthz(state: &ServerState) -> Response {
@@ -594,12 +521,53 @@ fn handle_metrics(state: &ServerState) -> Response {
     }
     h.latency
         .render_prometheus("evoapprox_http_request_seconds", &mut out);
+    // connection-level counters from the event loop
+    let _ = writeln!(out, "# TYPE evoapprox_http_connections_active gauge");
+    let _ = writeln!(
+        out,
+        "evoapprox_http_connections_active {}",
+        h.active.load(Ordering::Relaxed)
+    );
+    for (name, value) in [
+        (
+            "evoapprox_http_connections_accepted_total",
+            h.accepted.load(Ordering::Relaxed),
+        ),
+        (
+            "evoapprox_http_keepalive_reuses_total",
+            h.keepalive_reuses.load(Ordering::Relaxed),
+        ),
+        (
+            "evoapprox_http_request_timeouts_total",
+            h.timeouts_408.load(Ordering::Relaxed),
+        ),
+        (
+            "evoapprox_http_shed_429_total",
+            h.shed_429.load(Ordering::Relaxed),
+        ),
+    ] {
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {value}");
+    }
+    let queue_depth = state
+        .batcher
+        .lock()
+        .expect("batcher slot poisoned")
+        .as_ref()
+        .map(|b| b.queue_depth())
+        .unwrap_or(0);
+    let _ = writeln!(out, "# TYPE evoapprox_predict_queue_depth gauge");
+    let _ = writeln!(out, "evoapprox_predict_queue_depth {queue_depth}");
     let _ = writeln!(out, "# TYPE evoapprox_campaign_jobs_submitted_total counter");
     let _ = writeln!(
         out,
         "evoapprox_campaign_jobs_submitted_total {}",
         state.jobs.submitted()
     );
+    let _ = writeln!(out, "# TYPE evoapprox_jobs_active gauge");
+    let _ = writeln!(out, "evoapprox_jobs_active {}", state.jobs.active());
+    let _ = writeln!(out, "# TYPE evoapprox_jobs_evicted_total counter");
+    let _ = writeln!(out, "evoapprox_jobs_evicted_total {}", state.jobs.evicted());
     for (name, value) in [
         ("evoapprox_dse_jobs_total", m.dse_jobs.load(Ordering::Relaxed)),
         (
@@ -624,12 +592,7 @@ fn handle_metrics(state: &ServerState) -> Response {
     let _ = writeln!(out, "evoapprox_eval_cache_entries {}", state.cache.len());
     let _ = writeln!(out, "# TYPE evoapprox_eval_cache_hits_total counter");
     let _ = writeln!(out, "evoapprox_eval_cache_hits_total {}", state.cache.hits());
-    Response {
-        status: 200,
-        content_type: "text/plain; version=0.0.4",
-        body: out,
-        shutdown_after: false,
-    }
+    Response::text(200, "text/plain; version=0.0.4", out)
 }
 
 /// Optional integer body field: absent → default, present but not an
@@ -683,22 +646,83 @@ fn parse_image(j: &Json, image_len: usize) -> Result<Vec<f32>, String> {
         .collect()
 }
 
-fn handle_predict(state: &ServerState, body: &[u8]) -> Response {
+/// Reassembles one deferred `/v1/predict` response from per-image batcher
+/// callbacks. The last callback to land (success or failure) renders the
+/// response and delivers it to the event loop — no thread ever waits.
+struct Assembly {
+    model: String,
+    conn_id: u64,
+    completions: Completions,
+    slots: Mutex<Vec<Option<Result<u8, (u16, String)>>>>,
+    remaining: AtomicUsize,
+}
+
+impl Assembly {
+    fn finish(&self, i: usize, r: Result<u8, (u16, String)>) {
+        {
+            let mut slots = self.slots.lock().expect("assembly slots poisoned");
+            if slots[i].is_some() {
+                return; // double completion: first result wins
+            }
+            slots[i] = Some(r);
+        }
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.deliver();
+        }
+    }
+
+    fn deliver(&self) {
+        let mut slots = self.slots.lock().expect("assembly slots poisoned");
+        let mut preds = Vec::with_capacity(slots.len());
+        for s in slots.iter_mut() {
+            match s.take() {
+                Some(Ok(p)) => preds.push(Json::Num(p as f64)),
+                // first error (in request order) wins, matching the old
+                // sequential recv loop
+                Some(Err((status, msg))) => {
+                    self.completions
+                        .deliver(self.conn_id, Response::error(status, msg));
+                    return;
+                }
+                None => {
+                    self.completions.deliver(
+                        self.conn_id,
+                        Response::error(500, "prediction slot never completed"),
+                    );
+                    return;
+                }
+            }
+        }
+        self.completions.deliver(
+            self.conn_id,
+            Response::json(
+                200,
+                Json::obj([
+                    ("model", self.model.as_str().into()),
+                    ("count", preds.len().into()),
+                    ("predictions", Json::Arr(preds)),
+                ]),
+            ),
+        );
+    }
+}
+
+fn handle_predict(state: &Arc<ServerState>, body: &[u8], ctx: ReqCtx) -> Outcome {
     let text = match std::str::from_utf8(body) {
         Ok(t) => t,
-        Err(_) => return Response::error(400, "body is not UTF-8"),
+        Err(_) => return Outcome::Ready(Response::error(400, "body is not UTF-8")),
     };
     let j = match Json::parse(text) {
         Ok(j) => j,
-        Err(e) => return Response::error(400, format!("invalid JSON: {e}")),
+        Err(e) => return Outcome::Ready(Response::error(400, format!("invalid JSON: {e}"))),
     };
     match body_str(&j, "model", &state.cfg.model) {
-        Err(msg) => return Response::error(400, msg),
+        Err(msg) => return Outcome::Ready(Response::error(400, msg)),
         Ok(m) if m != state.cfg.model => {
-            return Response::error(
+            return Outcome::Ready(Response::error(
                 400,
                 format!("this server serves model `{}`", state.cfg.model),
-            );
+            ));
         }
         Ok(_) => {}
     }
@@ -725,10 +749,10 @@ fn handle_predict(state: &ServerState, body: &[u8]) -> Response {
         }
     })();
     if let Err(msg) = parsed {
-        return Response::error(400, msg);
+        return Outcome::Ready(Response::error(400, msg));
     }
     if images.is_empty() {
-        return Response::error(400, "no images in request");
+        return Outcome::Ready(Response::error(400, "no images in request"));
     }
     let batcher = match state
         .batcher
@@ -737,31 +761,35 @@ fn handle_predict(state: &ServerState, body: &[u8]) -> Response {
         .clone()
     {
         Some(b) => b,
-        None => return Response::error(503, "server is shutting down"),
+        None => return Outcome::Ready(Response::error(503, "server is shutting down")),
     };
-    let mut pending = Vec::with_capacity(images.len());
-    for img in images {
-        match batcher.classify_async(img) {
-            Ok(rx) => pending.push(rx),
-            Err(e) => return Response::error(503, format!("{e:#}")),
+    // backpressure: a saturated batcher queue sheds instead of parking
+    // unbounded work behind it
+    if batcher.queue_depth() >= state.cfg.max_pending as u64 {
+        state.http.shed_429.fetch_add(1, Ordering::Relaxed);
+        return Outcome::Ready(Response::too_busy(
+            "predict queue is full, retry shortly",
+            state.cfg.retry_after_secs,
+        ));
+    }
+    let assembly = Arc::new(Assembly {
+        model: state.cfg.model.clone(),
+        conn_id: ctx.conn_id,
+        completions: state.completions.clone(),
+        slots: Mutex::new((0..images.len()).map(|_| None).collect()),
+        remaining: AtomicUsize::new(images.len()),
+    });
+    for (i, img) in images.into_iter().enumerate() {
+        let cb = assembly.clone();
+        let submitted = batcher.classify_with(img, move |r| {
+            cb.finish(i, r.map_err(|e| (500, format!("{e:#}"))));
+        });
+        if let Err(e) = submitted {
+            // the callback was dropped unsubmitted — fill the slot here
+            assembly.finish(i, Err((503, format!("{e:#}"))));
         }
     }
-    let mut preds = Vec::with_capacity(pending.len());
-    for rx in pending {
-        match rx.recv() {
-            Ok(Ok(p)) => preds.push(Json::Num(p as f64)),
-            Ok(Err(e)) => return Response::error(500, format!("{e:#}")),
-            Err(_) => return Response::error(503, "batcher stopped mid-request"),
-        }
-    }
-    Response::json(
-        200,
-        Json::obj([
-            ("model", state.cfg.model.as_str().into()),
-            ("count", preds.len().into()),
-            ("predictions", Json::Arr(preds)),
-        ]),
-    )
+    Outcome::Deferred
 }
 
 fn handle_pareto(state: &ServerState, target: &Target) -> Response {
@@ -949,7 +977,7 @@ fn handle_select(state: &ServerState, target: &Target) -> Response {
         Ok(n) => n,
         Err(e) => return Response::error(400, e),
     };
-    // select runs synchronously on an HTTP worker (its accuracies are
+    // select runs synchronously on the event loop (its accuracies are
     // memoised in the shared resilience cache afterwards), so its worst
     // case is bounded tighter than the async campaign endpoint's — heavy
     // sweeps belong on POST /v1/campaigns/resilience
@@ -1003,6 +1031,10 @@ fn handle_campaign(state: &Arc<ServerState>, body: &[u8]) -> Response {
     };
     if state.coord.manifest().model(&model).is_none() {
         return Response::error(404, format!("unknown model `{model}`"));
+    }
+    if state.jobs.saturated() {
+        state.http.shed_429.fetch_add(1, Ordering::Relaxed);
+        return Response::too_busy("job pool is full, retry shortly", state.cfg.retry_after_secs);
     }
     let (images, multipliers, jobs) = match (|| {
         Ok::<_, String>((
@@ -1074,6 +1106,10 @@ fn handle_dse(state: &Arc<ServerState>, body: &[u8]) -> Response {
     };
     if state.coord.manifest().model(&model).is_none() {
         return Response::error(404, format!("unknown model `{model}`"));
+    }
+    if state.jobs.saturated() {
+        state.http.shed_429.fetch_add(1, Ordering::Relaxed);
+        return Response::too_busy("job pool is full, retry shortly", state.cfg.retry_after_secs);
     }
     let mut cfg = DseConfig::new(model);
     cfg.kernel = state.cfg.kernel;
@@ -1187,9 +1223,13 @@ mod tests {
         assert_eq!(r.status, 404);
         assert_eq!(r.body, "{\"error\":\"nope\"}");
         assert!(!r.shutdown_after);
+        assert!(r.retry_after.is_none());
         let r = Response::json(200, Json::obj([("ok", true.into())]));
         assert_eq!(r.content_type, "application/json");
         assert_eq!(r.body, "{\"ok\":true}");
+        let r = Response::too_busy("later", 2);
+        assert_eq!(r.status, 429);
+        assert_eq!(r.retry_after, Some(2));
     }
 
     #[test]
@@ -1198,5 +1238,9 @@ mod tests {
         assert_eq!(cfg.model, "resnet8");
         assert!(cfg.workers >= 1);
         assert!(cfg.max_body_bytes >= 1024 * 1024);
+        assert!(cfg.max_pending >= 64, "predict backpressure has headroom");
+        assert!(cfg.max_conns >= 128);
+        assert!(cfg.request_read_timeout < cfg.idle_timeout);
+        assert!(cfg.max_requests_per_conn > 1, "keep-alive must be usable");
     }
 }

@@ -1,0 +1,204 @@
+//! Integration: the evented connection layer over a real ephemeral-port
+//! socket, native backend, zero artifacts — runs everywhere, never skips.
+//!
+//! Covers the connection-level contract the event loop makes
+//! (DESIGN.md §11):
+//! * slow (slowloris-style) requests draw a `408` and a close, and the
+//!   server keeps serving;
+//! * pipelined requests on one connection are answered in order;
+//! * keep-alive reuses one TCP connection across requests and the reuse
+//!   shows up on `/metrics`;
+//! * a saturated predict queue sheds with `429` + `Retry-After` instead
+//!   of queueing without bound;
+//! * the per-connection request budget closes the connection politely.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, CoordinatorGuard};
+use evoapproxlib::library::Library;
+use evoapproxlib::runtime::TestSet;
+use evoapproxlib::server::{http, Server, ServerConfig, ServerHandle};
+
+fn start_server(cfg: ServerConfig) -> (Coordinator, CoordinatorGuard, ServerHandle) {
+    let dir = std::env::temp_dir().join("evoapprox_evented_tests_no_artifacts");
+    let (coord, guard) = Coordinator::start(CoordinatorConfig::native(dir)).unwrap();
+    let handle = Server::start(coord.clone(), Library::baseline(), cfg).unwrap();
+    (coord, guard, handle)
+}
+
+fn ephemeral(cfg_mut: impl FnOnce(&mut ServerConfig)) -> ServerConfig {
+    let mut cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    };
+    cfg_mut(&mut cfg);
+    cfg
+}
+
+/// Send raw bytes on a fresh connection, return everything the server
+/// sends back before closing (or before the 20 s safety timeout).
+fn raw_exchange(addr: &str, payload: &[u8]) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(20)))
+        .unwrap();
+    stream.write_all(payload).unwrap();
+    stream.flush().unwrap();
+    let mut out = Vec::new();
+    let _ = stream.read_to_end(&mut out);
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// The value of a (label-free) counter/gauge line on `/metrics`.
+fn metric_value(metrics: &str, name: &str) -> f64 {
+    metrics
+        .lines()
+        .find_map(|l| l.strip_prefix(&format!("{name} ")))
+        .unwrap_or_else(|| panic!("metric {name} missing from:\n{metrics}"))
+        .trim()
+        .parse()
+        .unwrap()
+}
+
+#[test]
+fn slow_requests_draw_a_408_and_the_server_keeps_serving() {
+    let (coord, _guard, handle) = start_server(ephemeral(|c| {
+        c.request_read_timeout = Duration::from_millis(200);
+    }));
+    let addr = handle.addr().to_string();
+
+    // a header that never completes: the slowloris deadline must fire
+    let text = raw_exchange(&addr, b"GET /healthz HTTP/1.1\r\nHost: x\r\n");
+    assert!(
+        text.starts_with("HTTP/1.1 408"),
+        "expected a 408, got:\n{text}"
+    );
+    assert!(text.contains("Connection: close"), "{text}");
+
+    // the loop is still healthy for well-behaved clients
+    let (status, _) = http::get(&addr, "/healthz").unwrap();
+    assert_eq!(status, 200);
+    let (_, metrics) = http::get(&addr, "/metrics").unwrap();
+    assert!(
+        metric_value(&metrics, "evoapprox_http_request_timeouts_total") >= 1.0,
+        "timeout not counted:\n{metrics}"
+    );
+
+    handle.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn pipelined_requests_are_answered_in_request_order() {
+    let (coord, _guard, handle) = start_server(ephemeral(|_| {}));
+    let addr = handle.addr().to_string();
+
+    // two requests in one write; the second closes the connection
+    let payload = b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n\
+                    GET / HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n";
+    let text = raw_exchange(&addr, payload);
+    let statuses: Vec<usize> = text
+        .match_indices("HTTP/1.1 200")
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(statuses.len(), 2, "expected two responses:\n{text}");
+    // the healthz body must come back before the endpoint catalogue
+    let healthz_at = text.find("uptime_ms").expect("healthz body missing");
+    let catalogue_at = text.find("/v1/predict").expect("catalogue body missing");
+    assert!(
+        healthz_at < catalogue_at,
+        "pipelined responses out of order:\n{text}"
+    );
+
+    handle.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn keep_alive_reuses_one_connection_and_counts_it() {
+    let (coord, _guard, handle) = start_server(ephemeral(|_| {}));
+    let addr = handle.addr().to_string();
+
+    let client = http::Client::new(addr.clone());
+    for _ in 0..5 {
+        let (status, _) = client.get("/healthz").unwrap();
+        assert_eq!(status, 200);
+    }
+    assert_eq!(client.connects(), 1, "five requests must share one socket");
+    let (_, metrics) = client.get("/metrics").unwrap();
+    assert!(
+        metric_value(&metrics, "evoapprox_http_keepalive_reuses_total") >= 5.0,
+        "reuse not counted:\n{metrics}"
+    );
+    assert_eq!(
+        metric_value(&metrics, "evoapprox_http_connections_accepted_total"),
+        1.0
+    );
+
+    handle.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn saturated_predict_queue_sheds_429_with_retry_after() {
+    // max_pending = 0 models a permanently full queue: every predict must
+    // shed deterministically while the rest of the API stays available
+    let (coord, _guard, handle) = start_server(ephemeral(|c| {
+        c.max_pending = 0;
+        c.retry_after_secs = 2;
+    }));
+    let addr = handle.addr().to_string();
+
+    let testset = TestSet::synthetic(1);
+    let body = http::predict_body(&testset.images[..testset.image_len]);
+    let payload = format!(
+        "POST /v1/predict HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let text = raw_exchange(&addr, payload.as_bytes());
+    assert!(
+        text.starts_with("HTTP/1.1 429"),
+        "expected a 429 shed, got:\n{text}"
+    );
+    assert!(text.contains("Retry-After: 2"), "{text}");
+    assert!(text.contains("retry shortly"), "{text}");
+
+    // non-predict endpoints are unaffected by predict backpressure
+    let (status, _) = http::get(&addr, "/healthz").unwrap();
+    assert_eq!(status, 200);
+    let (_, metrics) = http::get(&addr, "/metrics").unwrap();
+    assert!(metric_value(&metrics, "evoapprox_http_shed_429_total") >= 1.0);
+
+    handle.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn per_connection_request_budget_closes_politely() {
+    let (coord, _guard, handle) = start_server(ephemeral(|c| {
+        c.max_requests_per_conn = 2;
+    }));
+    let addr = handle.addr().to_string();
+
+    // three pipelined keep-alive requests: the budget allows two, then the
+    // connection closes — the third is never answered on this socket
+    let one = b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n";
+    let mut payload = Vec::new();
+    for _ in 0..3 {
+        payload.extend_from_slice(one);
+    }
+    let text = raw_exchange(&addr, &payload);
+    let responses = text.match_indices("HTTP/1.1 200").count();
+    assert_eq!(responses, 2, "budget of 2 must answer exactly two:\n{text}");
+    assert!(text.contains("Connection: close"), "{text}");
+
+    // a fresh connection serves again
+    let (status, _) = http::get(&addr, "/healthz").unwrap();
+    assert_eq!(status, 200);
+
+    handle.shutdown();
+    coord.shutdown();
+}

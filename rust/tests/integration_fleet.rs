@@ -1,0 +1,175 @@
+//! Integration: the `fleet` shard/replica router against real `serve`
+//! child processes (spawned from `CARGO_BIN_EXE_evoapprox`), native
+//! backend, zero artifacts — runs everywhere, never skips.
+//!
+//! Covers the scale-out contract (DESIGN.md §11):
+//! * routing is transparent: predict / census / pareto / select through
+//!   the router are byte-identical to a single in-process server;
+//! * a killed shard is routed around immediately (fail-over) and
+//!   respawned by the supervisor, after which it serves again.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig};
+use evoapproxlib::library::Library;
+use evoapproxlib::runtime::TestSet;
+use evoapproxlib::server::fleet::{Fleet, FleetConfig, FleetHandle};
+use evoapproxlib::server::{http, Server, ServerConfig};
+
+const MODEL: &str = "resnet8";
+
+fn fleet_config(shards: usize) -> FleetConfig {
+    FleetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards,
+        backend: "native".to_string(),
+        model: MODEL.to_string(),
+        workers: 2,
+        library: None,
+        artifacts: Some(
+            std::env::temp_dir()
+                .join("evoapprox_fleet_tests_no_artifacts")
+                .display()
+                .to_string(),
+        ),
+        max_wait_ms: 5,
+        max_batch: 64,
+        shard_exe: Some(PathBuf::from(env!("CARGO_BIN_EXE_evoapprox"))),
+    }
+}
+
+/// Poll `path` on the fleet until it answers 200, or panic after the
+/// deadline. Used across shard restarts, where 502s are expected.
+fn await_ok(fleet: &FleetHandle, method: &str, path: &str, body: Option<&str>, why: &str) -> String {
+    let addr = fleet.addr().to_string();
+    let deadline = Instant::now() + Duration::from_secs(150);
+    loop {
+        match http::request(&addr, method, path, body) {
+            Ok((200, text)) => return text,
+            Ok((status, text)) if Instant::now() >= deadline => {
+                panic!("{why}: still {status} at deadline: {text}")
+            }
+            Err(e) if Instant::now() >= deadline => panic!("{why}: {e:#}"),
+            _ => std::thread::sleep(Duration::from_millis(250)),
+        }
+    }
+}
+
+#[test]
+fn fleet_routing_is_byte_identical_to_a_single_server() {
+    // the reference: one in-process server with the same model + library
+    let dir = std::env::temp_dir().join("evoapprox_fleet_tests_no_artifacts");
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::native(dir)).unwrap();
+    let single = Server::start(
+        coord.clone(),
+        Library::baseline(),
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            model: MODEL.to_string(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let single_addr = single.addr().to_string();
+
+    let fleet = Fleet::start(fleet_config(2)).unwrap();
+    let fleet_addr = fleet.addr().to_string();
+    assert_eq!(fleet.shard_addrs().len(), 2);
+
+    let testset = TestSet::synthetic(2);
+    let il = testset.image_len;
+    let predict = http::predict_body(&testset.images[..il]);
+    let cases: [(&str, &str, Option<&str>); 6] = [
+        ("POST", "/v1/predict", Some(&predict)),
+        ("GET", "/v1/library/census", None),
+        ("GET", "/v1/library/pareto?metric=MAE", None),
+        ("GET", "/v1/select?max_accuracy_drop=0&images=8&limit=3", None),
+        // error surfaces must agree too: unknown routes and unknown jobs
+        ("GET", "/v1/nope", None),
+        ("GET", "/v1/jobs/424242", None),
+    ];
+    for (method, path, body) in cases {
+        let (s_status, s_body) = http::request(&single_addr, method, path, body).unwrap();
+        let (f_status, f_body) = http::request(&fleet_addr, method, path, body).unwrap();
+        assert_eq!(s_status, f_status, "{method} {path}: status diverged");
+        assert_eq!(
+            s_body, f_body,
+            "{method} {path}: fleet response is not byte-identical"
+        );
+    }
+
+    // every shard serves the replicated endpoints: ask more times than
+    // there are shards so round-robin must wrap
+    for _ in 0..4 {
+        let (status, body) = http::post_json(&fleet_addr, "/v1/predict", &predict).unwrap();
+        assert_eq!(status, 200, "{body}");
+    }
+
+    let report = fleet.shutdown();
+    assert!(report.requests >= cases.len() as u64 + 4);
+    assert_eq!(report.shard_restarts, 0);
+    single.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn killed_shards_are_routed_around_and_respawned() {
+    let fleet = Fleet::start(fleet_config(2)).unwrap();
+    let fleet_addr = fleet.addr().to_string();
+
+    let testset = TestSet::synthetic(1);
+    let predict = http::predict_body(&testset.images[..testset.image_len]);
+    let (status, reference) = http::post_json(&fleet_addr, "/v1/predict", &predict).unwrap();
+    assert_eq!(status, 200, "{reference}");
+
+    let before = fleet.shard_addrs();
+    fleet.kill_shard(0).unwrap();
+
+    // fail-over: the surviving replica answers while shard 0 is down (the
+    // router retries the next shard, so this succeeds on the first try or
+    // within a few polls at worst)
+    let body = await_ok(
+        &fleet,
+        "POST",
+        "/v1/predict",
+        Some(&predict),
+        "fail-over predict",
+    );
+    assert_eq!(body, reference, "fail-over answer must not change");
+
+    // supervision: the dead shard is respawned on a new port and counted
+    let deadline = Instant::now() + Duration::from_secs(150);
+    while fleet.restarts() < 1 {
+        assert!(
+            Instant::now() < deadline,
+            "supervisor never respawned the killed shard"
+        );
+        std::thread::sleep(Duration::from_millis(250));
+    }
+    let after = fleet.shard_addrs();
+    assert_eq!(after.len(), 2);
+    assert_ne!(before[0], after[0], "respawned shard must be re-addressed");
+    assert_eq!(before[1], after[1], "surviving shard must be untouched");
+
+    // the rebuilt fleet serves end to end, and /metrics aggregates both
+    // shards plus the fleet-level series
+    let body = await_ok(
+        &fleet,
+        "POST",
+        "/v1/predict",
+        Some(&predict),
+        "post-restart predict",
+    );
+    assert_eq!(body, reference);
+    let metrics = await_ok(&fleet, "GET", "/metrics", None, "fleet metrics");
+    assert!(metrics.contains("evoapprox_fleet_shards 2"), "{metrics}");
+    assert!(
+        metrics.contains("evoapprox_fleet_shard_restarts_total 1"),
+        "{metrics}"
+    );
+    assert!(metrics.contains("evoapprox_http_requests_total"), "{metrics}");
+
+    let report = fleet.shutdown();
+    assert!(report.shard_restarts >= 1);
+}
