@@ -1,0 +1,74 @@
+//! Static-analysis throughput — how cheap is a provable bound compared to
+//! the simulation-based characterisation it pre-screens for (DESIGN.md §12)?
+//!
+//!   analysis/verify — well-formedness verification (circuits/second)
+//!   analysis/bounds — sound wce/mae bound derivation via the shared
+//!                     `BoundEngine` (circuits/second)
+//!   analysis/char   — full `Entry::characterise` of the same circuit
+//!                     (exhaustive at w=8, sampled wide path above), the
+//!                     cost the CGP pre-screen avoids per discarded mutant
+//!
+//! `cargo bench --bench analysis [-- --quick] [-- --json BENCH_analysis.json --label <snapshot>]`
+
+use evoapproxlib::circuit::baselines::truncated_multiplier;
+use evoapproxlib::circuit::cost::CostModel;
+use evoapproxlib::circuit::generators::wallace_multiplier;
+use evoapproxlib::circuit::verify::ArithFn;
+use evoapproxlib::circuit::{verify_netlist, BoundEngine};
+use evoapproxlib::library::{Entry, Origin};
+use evoapproxlib::util::bench::{bench, per_second, quick_mode, Recorder};
+
+fn main() {
+    let quick = quick_mode();
+    let mut rec = Recorder::new("analysis");
+    let samples = if quick { 3 } else { 10 };
+    let char_samples = if quick { 2 } else { 5 };
+    let model = CostModel::default();
+
+    for w in [8u32, 32, 128] {
+        let f = ArithFn::mul(w).expect("library width");
+        let engine = BoundEngine::new(f);
+        let circuits = vec![
+            wallace_multiplier(w),
+            truncated_multiplier(w, w / 2),
+            truncated_multiplier(w, 3 * w / 4),
+        ];
+        let gates: usize = circuits.iter().map(|n| n.nodes.len()).sum();
+
+        let name = format!("analysis/mul{w}u verify ({gates} gates)");
+        let s = bench(&name, 1, samples, || {
+            for nl in &circuits {
+                std::hint::black_box(verify_netlist(nl));
+            }
+        });
+        let cps = per_second(circuits.len() as u64, s.median());
+        println!("  => {:.1} k circuits/s", cps / 1e3);
+        rec.record_throughput(&s, cps, "circ/s");
+
+        let name = format!("analysis/mul{w}u bounds ({gates} gates)");
+        let s = bench(&name, 1, samples, || {
+            for nl in &circuits {
+                std::hint::black_box(engine.bounds(nl));
+            }
+        });
+        let cps = per_second(circuits.len() as u64, s.median());
+        println!("  => {:.1} k circuits/s", cps / 1e3);
+        rec.record_throughput(&s, cps, "circ/s");
+
+        // the simulation-based cost the pre-screen saves per discarded
+        // mutant: one full characterisation of a representative circuit
+        let nl = truncated_multiplier(w, w / 2);
+        let name = format!("analysis/mul{w}u characterise");
+        let s = bench(&name, 1, char_samples, || {
+            std::hint::black_box(Entry::characterise(
+                nl.clone(),
+                f,
+                &model,
+                Origin::Truncated { keep: w / 2 },
+            ));
+        });
+        rec.record(&s);
+    }
+
+    rec.finish().expect("writing bench snapshot");
+}

@@ -132,7 +132,7 @@ fn main() {
     let best_layer = per_layer_saving
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap();
     let frac_best = report

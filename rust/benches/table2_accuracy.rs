@@ -88,7 +88,7 @@ fn main() {
         mults.truncate(6);
     }
     // descending power, Table II row order
-    mults.sort_by(|a, b| b.rel_power_pct.partial_cmp(&a.rel_power_pct).unwrap());
+    mults.sort_by(|a, b| b.rel_power_pct.total_cmp(&a.rel_power_pct));
     println!(
         "rows: {} multipliers ({n_evolved} evolved + {} baselines)",
         mults.len(),

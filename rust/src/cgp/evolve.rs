@@ -22,6 +22,7 @@
 //! contributes many library entries (the paper's library counts thousands of
 //! circuits from its campaign of runs).
 
+use crate::circuit::analysis::{BoundEngine, StaticBounds};
 use crate::circuit::cost::CostModel;
 use crate::circuit::netlist::Netlist;
 use crate::circuit::verify::ArithFn;
@@ -54,6 +55,14 @@ pub struct EvolveConfig {
     pub seed: u64,
     /// Extra inactive grid columns appended to the seed for headroom.
     pub slack: u32,
+    /// Static-analysis fitness pre-screen (`circuit::analysis`): discard a
+    /// mutant without simulating it when its provable error *floor*
+    /// already exceeds `e_max` — the floor holds for every input vector,
+    /// so a screened mutant is infeasible with certainty and no feasible
+    /// candidate is ever discarded. Off by default (changes the search
+    /// trajectory for infeasible candidates, which otherwise still rank
+    /// by window distance).
+    pub prescreen: bool,
 }
 
 impl Default for EvolveConfig {
@@ -67,6 +76,7 @@ impl Default for EvolveConfig {
             h: 5,
             seed: 1,
             slack: 0,
+            prescreen: false,
         }
     }
 }
@@ -120,6 +130,9 @@ pub struct EvolveReport {
     pub harvest: Vec<Harvested>,
     /// Candidate evaluations performed.
     pub evaluations: u64,
+    /// Candidates discarded by the static pre-screen without touching the
+    /// simulator (0 unless `EvolveConfig::prescreen`).
+    pub prescreened: u64,
     /// `(generation, best_cost)` improvement trace.
     pub trace: Vec<(u64, f64)>,
 }
@@ -162,6 +175,27 @@ fn fitness_of(err: f64, cost: f64, cfg: &EvolveConfig) -> Fitness {
     }
 }
 
+/// Provable *lower* bound on `metric` implied by a circuit's static
+/// bounds. `wce_floor` holds for **every** input vector, so: WCE, MAE and
+/// the per-vector maximum all sit at or above it; MSE at or above its
+/// square; and a nonzero floor means every vector errs, forcing ER = 1.
+/// The relative metrics get the trivial floor 0 (a relative bound would
+/// need per-magnitude reasoning the abstract domain does not track).
+pub fn metric_floor(metric: Metric, b: &StaticBounds) -> f64 {
+    match metric {
+        Metric::Wce | Metric::Mae => b.wce_floor,
+        Metric::Mse => b.wce_floor * b.wce_floor,
+        Metric::Er => {
+            if b.wce_floor > 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        Metric::Mre | Metric::Wcre => 0.0,
+    }
+}
+
 /// The early-abort bound: anything beyond e_max can abort, but the abort
 /// must still produce a comparable "distance" for invalid candidates, so
 /// only abort at a slack multiple of the window.
@@ -184,7 +218,10 @@ struct DemeState {
     best: Option<(Chromosome, f64, f64)>,
     trace: Vec<(u64, f64)>,
     evaluations: u64,
+    prescreened: u64,
     generation: u64,
+    /// Static bound engine, present iff `EvolveConfig::prescreen`.
+    engine: Option<BoundEngine>,
 }
 
 impl DemeState {
@@ -216,7 +253,9 @@ impl DemeState {
             best,
             trace: Vec::new(),
             evaluations: 1,
+            prescreened: 0,
             generation: 0,
+            engine: cfg.prescreen.then(|| BoundEngine::new(ctx.f)),
         }
     }
 
@@ -237,7 +276,20 @@ impl DemeState {
             for _ in 0..cfg.lambda {
                 let child = mutated_copy(&self.parent, cfg.h, &mut self.rng);
                 self.evaluations += 1;
-                let err = ctx.error_bounded(scratch, &child, cfg.metric, bound);
+                // Static pre-screen: a provable error floor above e_max
+                // means the child is infeasible on every input — skip the
+                // simulator entirely and rank it like an aborted eval.
+                let screened = self.engine.as_ref().map_or(false, |eng| {
+                    let nl = child.decode("prescreen").compact();
+                    eng.bounds(&nl)
+                        .map_or(false, |b| metric_floor(cfg.metric, &b) > cfg.e_max)
+                });
+                let err = if screened {
+                    self.prescreened += 1;
+                    f64::INFINITY
+                } else {
+                    ctx.error_bounded(scratch, &child, cfg.metric, bound)
+                };
                 let cost = ctx.cost(scratch, &child, model);
                 let fit = fitness_of(err, cost, cfg);
                 if err.is_finite() {
@@ -272,7 +324,13 @@ impl DemeState {
     }
 
     fn finish(self) -> EvolveReport {
-        report_from(self.front, self.best, self.evaluations, self.trace)
+        report_from(
+            self.front,
+            self.best,
+            self.evaluations,
+            self.prescreened,
+            self.trace,
+        )
     }
 }
 
@@ -280,6 +338,7 @@ fn report_from(
     front: ParetoArchive<(Chromosome, u64)>,
     best: Option<(Chromosome, f64, f64)>,
     evaluations: u64,
+    prescreened: u64,
     trace: Vec<(u64, f64)>,
 ) -> EvolveReport {
     let harvest = front
@@ -299,6 +358,7 @@ fn report_from(
             best_cost: cost,
             harvest,
             evaluations,
+            prescreened,
             trace,
         },
         None => EvolveReport {
@@ -307,6 +367,7 @@ fn report_from(
             best_cost: f64::INFINITY,
             harvest,
             evaluations,
+            prescreened,
             trace,
         },
     }
@@ -409,8 +470,10 @@ pub fn evolve_islands(
     let mut best: Option<(Chromosome, f64, f64)> = None;
     let mut trace: Vec<(u64, f64)> = Vec::new();
     let mut evaluations = 0u64;
+    let mut prescreened = 0u64;
     for deme in demes {
         evaluations += deme.evaluations;
+        prescreened += deme.prescreened;
         let take = match (&best, &deme.best) {
             (_, None) => false,
             (None, Some(_)) => true,
@@ -424,7 +487,7 @@ pub fn evolve_islands(
             merged.insert(obj, item);
         }
     }
-    report_from(merged, best, evaluations, trace)
+    report_from(merged, best, evaluations, prescreened, trace)
 }
 
 /// Ring migration: deme `d` adopts the pre-migration parent of deme
@@ -462,9 +525,18 @@ pub fn evolve_multi(
     let seed_chrom = Chromosome::from_netlist(seed_netlist, cfg.slack);
     let mut pool: Vec<Chromosome> = vec![seed_chrom];
     let mut archive: ParetoArchive<Netlist> = ParetoArchive::new();
+    let engine = cfg.prescreen.then(|| BoundEngine::new(f));
     for _ in 0..cfg.generations {
         let pick = rng.next_usize(pool.len());
         let child = mutated_copy(&pool[pick], cfg.h, &mut rng);
+        let screened = engine.as_ref().map_or(false, |eng| {
+            let nl = child.decode("prescreen").compact();
+            eng.bounds(&nl)
+                .map_or(false, |b| metric_floor(cfg.metric, &b) > cfg.e_max)
+        });
+        if screened {
+            continue;
+        }
         let err = ctx.error_bounded(scratch, &child, cfg.metric, cfg.e_max * 4.0);
         if !err.is_finite() || err > cfg.e_max {
             continue;
@@ -609,6 +681,49 @@ mod tests {
             let m = characterise(nl, MUL4, &mut ev);
             assert!((m.mae - obj[0]).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn prescreen_is_deterministic_and_window_safe() {
+        let seed = wallace_multiplier(4);
+        let model = CostModel::default();
+        let cfg = EvolveConfig {
+            prescreen: true,
+            ..quick_cfg(Metric::Wce, 4.0, 800)
+        };
+        let mut ev1 = Evaluator::exhaustive(MUL4);
+        let mut ev2 = Evaluator::exhaustive(MUL4);
+        let a = evolve(&seed, MUL4, &cfg, &model, &mut ev1);
+        let b = evolve(&seed, MUL4, &cfg, &model, &mut ev2);
+        assert_eq!(a.best_cost, b.best_cost);
+        assert_eq!(a.prescreened, b.prescreened);
+        assert_eq!(a.harvest.len(), b.harvest.len());
+        // screening replaces simulator calls, it does not skip candidates
+        assert_eq!(a.evaluations, 1 + 800 * 4);
+        // screening only kills provably infeasible mutants, so the run
+        // still lands inside the window
+        assert!(a.best.is_some());
+        assert!(a.best_error <= 4.0);
+    }
+
+    #[test]
+    fn prescreen_discards_provably_infeasible_mutants() {
+        use crate::circuit::gate::GateKind;
+        // Invert output bit 3 of the exact multiplier: every mutant that
+        // keeps the inverted bit carries a provable error floor of 8,
+        // beyond e_max = 4, and must be screened without simulation.
+        let mut seed = wallace_multiplier(4);
+        let inv = seed.push1(GateKind::Not, seed.outputs[3]);
+        seed.outputs[3] = inv;
+        let model = CostModel::default();
+        let cfg = EvolveConfig {
+            prescreen: true,
+            ..quick_cfg(Metric::Wce, 4.0, 200)
+        };
+        let mut ev = Evaluator::exhaustive(MUL4);
+        let rep = evolve(&seed, MUL4, &cfg, &model, &mut ev);
+        assert!(rep.prescreened > 0, "no mutant kept the complemented bit");
+        assert!(rep.prescreened <= rep.evaluations);
     }
 
     #[test]

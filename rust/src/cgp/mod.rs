@@ -18,7 +18,7 @@ pub use chromosome::{CgpParams, Chromosome};
 pub use evaluator::{EvalContext, EvalScratch, Evaluator};
 pub use evolve::{
     characterise, characterise_with, evolve, evolve_islands, evolve_multi, evolve_with,
-    EvolveConfig, EvolveReport, Harvested, IslandsConfig,
+    metric_floor, EvolveConfig, EvolveReport, Harvested, IslandsConfig,
 };
 pub use metrics::{ErrorMetrics, Metric, RelativeErrors, SELECTION_METRICS};
 pub use mutation::{mutate, mutated_copy};

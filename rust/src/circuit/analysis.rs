@@ -1,0 +1,877 @@
+//! Static netlist analysis: well-formedness verification and *sound* error
+//! bounds, computed on the DAG without simulating a single vector
+//! (DESIGN.md §12).
+//!
+//! Two engines share this module:
+//!
+//! * [`verify_netlist`] — a structural verifier that returns an
+//!   [`AnalysisReport`] instead of the simulator's panics: operand /
+//!   topological-order violations, out-of-range outputs, arity-convention
+//!   breaches on unary/const gates, plus a reachability census (dead gates,
+//!   live inputs, depth, fanout). Every external ingest boundary (JSON
+//!   library load, HTTP, CLI) validates through it.
+//! * [`BoundEngine`] — a sound error-bound engine. It value-numbers a
+//!   *miter* of the candidate against the exact reference generator of the
+//!   target [`ArithFn`] (Kildall-style forward dataflow in the netlist's
+//!   topological node order, with hash-consing congruence and constant
+//!   folding as the transfer functions), classifies every output bit of the
+//!   difference as *proven equal*, *proven different* or *unknown*, and
+//!   derives provable bounds: `wce_bound ≥ WCE ≥ wce_floor` for **every**
+//!   input vector, with `exact_proven` set when the upper bound collapses
+//!   to zero. Soundness is the contract; tightness is best-effort.
+//!
+//! The bound argument, per-gate transfer functions and the composition with
+//! sampled metrics are documented in DESIGN.md §12.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt;
+
+use super::gate::GateKind;
+use super::generators::{ripple_carry_adder, wallace_multiplier};
+use super::netlist::{Netlist, SignalId};
+use super::verify::ArithFn;
+use super::wide::{mask128, U256};
+
+/// Hard structural violation: simulating such a netlist would index out of
+/// range or break the topological invariant every consumer relies on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Violation {
+    /// A gate operand references its own or a later signal. Both operand
+    /// fields are read by the bit-parallel simulator regardless of arity,
+    /// so both must respect topological order.
+    ForwardOperand {
+        /// Gate index (0-based).
+        gate: u32,
+        /// Which operand field (`'a'` or `'b'`).
+        operand: char,
+        /// The offending signal id.
+        signal: SignalId,
+    },
+    /// A primary output references a signal id outside the netlist.
+    OutputOutOfRange {
+        /// Output index (0-based).
+        index: u32,
+        /// The offending signal id.
+        signal: SignalId,
+    },
+    /// The netlist's input/output shape does not match the target function.
+    Nonconforming {
+        /// Human-readable shape mismatch.
+        detail: String,
+    },
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::ForwardOperand {
+                gate,
+                operand,
+                signal,
+            } => write!(
+                f,
+                "gate {gate} operand {operand} references future signal {signal}"
+            ),
+            Violation::OutputOutOfRange { index, signal } => {
+                write!(f, "output {index} references unknown signal {signal}")
+            }
+            Violation::Nonconforming { detail } => write!(f, "nonconforming netlist: {detail}"),
+        }
+    }
+}
+
+/// Convention breach that does not endanger simulation (operands are still
+/// in range) but signals a malformed producer: the canonical encoders set
+/// `b = a` on unary gates and `a = b = 0` on const gates.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Advisory {
+    /// Unary gate whose unused `b` operand differs from `a`.
+    UnaryOperandConvention {
+        /// Gate index (0-based).
+        gate: u32,
+    },
+    /// Const gate with nonzero operand fields.
+    ConstOperandConvention {
+        /// Gate index (0-based).
+        gate: u32,
+    },
+}
+
+impl fmt::Display for Advisory {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Advisory::UnaryOperandConvention { gate } => {
+                write!(f, "gate {gate}: unary gate with b != a")
+            }
+            Advisory::ConstOperandConvention { gate } => {
+                write!(f, "gate {gate}: const gate with nonzero operands")
+            }
+        }
+    }
+}
+
+/// Provable error bounds of a candidate against the exact semantics of its
+/// target [`ArithFn`], derived without simulation.
+///
+/// Invariants (the soundness contract, enforced by
+/// `tests/integration_analysis.rs`):
+///
+/// * `wce_floor ≤ |candidate(x) − exact(x)| ≤ wce_bound` — the *upper*
+///   bound holds for the worst input; the *floor*, when nonzero, holds for
+///   **every** input vector (so `wce_floor > 0` also implies error rate 1).
+/// * `mae_bound ≥ MAE` (currently the worst-case bound; without input
+///   distribution facts the expectation bound degenerates to it).
+/// * `exact_proven ⇒ WCE = 0` (the candidate is provably exact).
+///
+/// Bounds wider than 2^53 inherit f64 rounding (≤ 1 ulp, relative 2⁻⁵²) —
+/// irrelevant at the budgets any consumer compares against.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StaticBounds {
+    /// Sound upper bound on the worst-case error.
+    pub wce_bound: f64,
+    /// Sound upper bound on the mean absolute error.
+    pub mae_bound: f64,
+    /// Sound lower bound on the error of *every* input vector
+    /// (0 when nothing is proven).
+    pub wce_floor: f64,
+    /// The upper bound collapsed to zero: the candidate is provably exact.
+    pub exact_proven: bool,
+}
+
+impl StaticBounds {
+    /// Bounds of a provably exact circuit.
+    pub fn exact() -> StaticBounds {
+        StaticBounds {
+            wce_bound: 0.0,
+            mae_bound: 0.0,
+            wce_floor: 0.0,
+            exact_proven: true,
+        }
+    }
+
+    /// The trivially sound "know nothing" bounds for `f`: upper bound =
+    /// the maximum representable disagreement, floor 0.
+    pub fn vacuous(f: ArithFn) -> StaticBounds {
+        let full = all_ones(f.n_outputs());
+        let b = full.or(BoundEngine::exact_max(f)).to_f64();
+        StaticBounds {
+            wce_bound: b,
+            mae_bound: b,
+            wce_floor: 0.0,
+            exact_proven: false,
+        }
+    }
+}
+
+/// Structured result of static netlist analysis — what the simulator's
+/// asserts would have told you, plus reachability census and (when a target
+/// function is supplied and the netlist conforms) provable error bounds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnalysisReport {
+    /// Netlist name.
+    pub name: String,
+    /// Primary input count.
+    pub n_inputs: u32,
+    /// Total gate count (including dead gates).
+    pub n_gates: u32,
+    /// Primary output count.
+    pub n_outputs: u32,
+    /// Hard violations; empty ⇔ well-formed.
+    pub violations: Vec<Violation>,
+    /// Convention breaches (never fatal).
+    pub advisories: Vec<Advisory>,
+    /// Logic gates (excluding wires/constants) in the output cone.
+    pub active_gates: u32,
+    /// Gates of any kind outside every output cone.
+    pub dead_gates: u32,
+    /// Primary inputs reaching at least one output.
+    pub live_inputs: u32,
+    /// Logic depth (as [`Netlist::depth`]); 0 when malformed.
+    pub depth: u32,
+    /// Maximum fanout over signals feeding the output cone.
+    pub max_fanout: u32,
+    /// Provable error bounds (present iff well-formed, conforming, and a
+    /// target function was supplied).
+    pub bounds: Option<StaticBounds>,
+}
+
+impl AnalysisReport {
+    /// No hard violations — every structural invariant the simulator and
+    /// the compiled store assume holds.
+    pub fn is_wellformed(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// First violation as an error message, `Ok` when well-formed.
+    pub fn into_result(self) -> Result<AnalysisReport, String> {
+        match self.violations.first() {
+            None => Ok(self),
+            Some(v) => Err(format!("invalid netlist {:?}: {v}", self.name)),
+        }
+    }
+}
+
+/// Structural verification + reachability census, with no target function
+/// (no bounds). Never panics, whatever the input.
+pub fn verify_netlist(nl: &Netlist) -> AnalysisReport {
+    let mut violations = Vec::new();
+    let mut advisories = Vec::new();
+    for (g, node) in nl.nodes.iter().enumerate() {
+        let gate = g as u32;
+        let id = nl.n_inputs + gate;
+        if node.a >= id {
+            violations.push(Violation::ForwardOperand {
+                gate,
+                operand: 'a',
+                signal: node.a,
+            });
+        }
+        if node.b >= id {
+            violations.push(Violation::ForwardOperand {
+                gate,
+                operand: 'b',
+                signal: node.b,
+            });
+        }
+        match node.kind.arity() {
+            1 if node.b != node.a => advisories.push(Advisory::UnaryOperandConvention { gate }),
+            0 if node.a != 0 || node.b != 0 => {
+                advisories.push(Advisory::ConstOperandConvention { gate })
+            }
+            _ => {}
+        }
+    }
+    for (i, &o) in nl.outputs.iter().enumerate() {
+        if o >= nl.n_signals() {
+            violations.push(Violation::OutputOutOfRange {
+                index: i as u32,
+                signal: o,
+            });
+        }
+    }
+    // The census walks operand edges, so it is only safe on a well-formed
+    // DAG; report zeros otherwise (the violations are the story then).
+    let (active_gates, dead_gates, live_inputs, depth, max_fanout) = if violations.is_empty() {
+        census(nl)
+    } else {
+        (0, 0, 0, 0, 0)
+    };
+    AnalysisReport {
+        name: nl.name.clone(),
+        n_inputs: nl.n_inputs,
+        n_gates: nl.nodes.len() as u32,
+        n_outputs: nl.n_outputs(),
+        violations,
+        advisories,
+        active_gates,
+        dead_gates,
+        live_inputs,
+        depth,
+        max_fanout,
+        bounds: None,
+    }
+}
+
+/// Full analysis against a target function: [`verify_netlist`] plus
+/// conformance checking and, when well-formed and conforming, the sound
+/// error bounds of a fresh [`BoundEngine`]. Callers analysing many
+/// netlists against one function should build the engine once and use
+/// [`analyze_with`].
+pub fn analyze(nl: &Netlist, f: ArithFn) -> AnalysisReport {
+    analyze_with(nl, &BoundEngine::new(f))
+}
+
+/// [`analyze`] against a prebuilt engine (amortises the reference netlist
+/// across a library or a CGP run).
+pub fn analyze_with(nl: &Netlist, engine: &BoundEngine) -> AnalysisReport {
+    let mut report = verify_netlist(nl);
+    let f = engine.f();
+    if nl.n_inputs != f.n_inputs() || nl.n_outputs() != f.n_outputs() {
+        report.violations.push(Violation::Nonconforming {
+            detail: format!(
+                "{} has {} inputs / {} outputs, {} needs {} / {}",
+                nl.name,
+                nl.n_inputs,
+                nl.n_outputs(),
+                f.tag(),
+                f.n_inputs(),
+                f.n_outputs()
+            ),
+        });
+    }
+    if report.is_wellformed() {
+        report.bounds = engine.bounds(nl);
+    }
+    report
+}
+
+/// Reachability census of a well-formed netlist:
+/// `(active logic gates, dead gates, live inputs, depth, max fanout)`.
+fn census(nl: &Netlist) -> (u32, u32, u32, u32, u32) {
+    let n_sig = nl.n_signals() as usize;
+    let n_in = nl.n_inputs as usize;
+    let mut reach = vec![false; n_sig];
+    let mut stack: Vec<SignalId> = Vec::new();
+    for &o in &nl.outputs {
+        if !reach[o as usize] {
+            reach[o as usize] = true;
+            stack.push(o);
+        }
+    }
+    while let Some(s) = stack.pop() {
+        if (s as usize) < n_in {
+            continue;
+        }
+        let node = &nl.nodes[s as usize - n_in];
+        let arity = node.kind.arity();
+        if arity >= 1 && !reach[node.a as usize] {
+            reach[node.a as usize] = true;
+            stack.push(node.a);
+        }
+        if arity >= 2 && !reach[node.b as usize] {
+            reach[node.b as usize] = true;
+            stack.push(node.b);
+        }
+    }
+    let mut active_gates = 0u32;
+    let mut dead_gates = 0u32;
+    let mut fanout = vec![0u32; n_sig];
+    for (g, node) in nl.nodes.iter().enumerate() {
+        if !reach[n_in + g] {
+            dead_gates += 1;
+            continue;
+        }
+        if !matches!(
+            node.kind,
+            GateKind::Identity | GateKind::Const0 | GateKind::Const1
+        ) {
+            active_gates += 1;
+        }
+        let arity = node.kind.arity();
+        if arity >= 1 {
+            fanout[node.a as usize] += 1;
+        }
+        if arity >= 2 {
+            fanout[node.b as usize] += 1;
+        }
+    }
+    for &o in &nl.outputs {
+        fanout[o as usize] += 1;
+    }
+    let live_inputs = reach[..n_in].iter().filter(|&&r| r).count() as u32;
+    let max_fanout = fanout.iter().copied().max().unwrap_or(0);
+    (active_gates, dead_gates, live_inputs, nl.depth(), max_fanout)
+}
+
+/// U256 with the low `n` bits set.
+fn all_ones(n: u32) -> U256 {
+    let mut v = U256::ZERO;
+    for i in 0..n.min(U256::BITS) {
+        v.or_bit(i, 1);
+    }
+    v
+}
+
+// Value-numbering tags for the hash-consed base operators. Negative kinds
+// (NAND/NOR/XNOR) are canonicalised to NOT of the positive base so that
+// structurally different but equivalent netlists still merge.
+const TAG_AND: u8 = 0;
+const TAG_OR: u8 = 1;
+const TAG_XOR: u8 = 2;
+
+const VN_FALSE: u32 = 0;
+const VN_TRUE: u32 = 1;
+const VN_NONE: u32 = u32::MAX;
+
+/// Hash-consed value graph. Equal value numbers ⇒ equal boolean functions
+/// of the primary inputs; `not_of` links prove complements. The converse
+/// does NOT hold (distinct numbers may still be equal functions) — which is
+/// exactly the asymmetry a *sound* bound needs.
+struct VnGraph {
+    table: HashMap<(u8, u32, u32), u32>,
+    not_of: Vec<u32>,
+}
+
+impl VnGraph {
+    /// Fresh graph with `n_inputs` opaque input values; returns the graph
+    /// and the input value numbers.
+    fn new(n_inputs: u32) -> (VnGraph, Vec<u32>) {
+        let mut g = VnGraph {
+            table: HashMap::new(),
+            not_of: vec![VN_TRUE, VN_FALSE],
+        };
+        let inputs = (0..n_inputs).map(|_| g.fresh()).collect();
+        (g, inputs)
+    }
+
+    fn fresh(&mut self) -> u32 {
+        let v = self.not_of.len() as u32;
+        self.not_of.push(VN_NONE);
+        v
+    }
+
+    /// ¬a — hash-consed through the complement links (¬¬a = a for free).
+    fn mk_not(&mut self, a: u32) -> u32 {
+        if self.not_of[a as usize] != VN_NONE {
+            return self.not_of[a as usize];
+        }
+        let v = self.fresh();
+        self.not_of[a as usize] = v;
+        self.not_of[v as usize] = a;
+        v
+    }
+
+    /// AND/OR/XOR with constant folding, idempotence/annihilation/
+    /// complement rewrites and commutative canonicalisation. Every rewrite
+    /// is a boolean identity, so value equality stays sound.
+    fn mk_base(&mut self, tag: u8, a: u32, b: u32) -> u32 {
+        if a <= VN_TRUE && b <= VN_TRUE {
+            let (x, y) = (a == VN_TRUE, b == VN_TRUE);
+            let r = match tag {
+                TAG_AND => x && y,
+                TAG_OR => x || y,
+                _ => x ^ y,
+            };
+            return if r { VN_TRUE } else { VN_FALSE };
+        }
+        if a <= VN_TRUE || b <= VN_TRUE {
+            let (c, x) = if a <= VN_TRUE {
+                (a == VN_TRUE, b)
+            } else {
+                (b == VN_TRUE, a)
+            };
+            return match (tag, c) {
+                (TAG_AND, false) => VN_FALSE,
+                (TAG_AND, true) => x,
+                (TAG_OR, true) => VN_TRUE,
+                (TAG_OR, false) => x,
+                (TAG_XOR, false) => x,
+                _ => self.mk_not(x),
+            };
+        }
+        if a == b {
+            // x∧x = x∨x = x, x⊕x = 0
+            return if tag == TAG_XOR { VN_FALSE } else { a };
+        }
+        if self.not_of[a as usize] == b {
+            // x∧¬x = 0, x∨¬x = 1, x⊕¬x = 1
+            return if tag == TAG_AND { VN_FALSE } else { VN_TRUE };
+        }
+        let (a, b) = if a <= b { (a, b) } else { (b, a) };
+        match self.table.get(&(tag, a, b)) {
+            Some(&v) => v,
+            None => {
+                let v = self.fresh();
+                self.table.insert((tag, a, b), v);
+                v
+            }
+        }
+    }
+
+    /// Transfer function of one gate — mirrors `GateKind::eval_word`
+    /// semantics exactly (unary gates ignore `b`, consts ignore both).
+    fn mk_gate(&mut self, kind: GateKind, a: u32, b: u32) -> u32 {
+        match kind {
+            GateKind::Identity => a,
+            GateKind::Not => self.mk_not(a),
+            GateKind::Const0 => VN_FALSE,
+            GateKind::Const1 => VN_TRUE,
+            GateKind::And => self.mk_base(TAG_AND, a, b),
+            GateKind::Or => self.mk_base(TAG_OR, a, b),
+            GateKind::Xor => self.mk_base(TAG_XOR, a, b),
+            GateKind::Nand => {
+                let t = self.mk_base(TAG_AND, a, b);
+                self.mk_not(t)
+            }
+            GateKind::Nor => {
+                let t = self.mk_base(TAG_OR, a, b);
+                self.mk_not(t)
+            }
+            GateKind::Xnor => {
+                let t = self.mk_base(TAG_XOR, a, b);
+                self.mk_not(t)
+            }
+        }
+    }
+
+    /// Forward dataflow over the (topological) node order: value numbers of
+    /// every primary output. Caller guarantees well-formedness.
+    fn outputs_of(&mut self, nl: &Netlist, inputs: &[u32]) -> Vec<u32> {
+        let mut sig: Vec<u32> = Vec::with_capacity(nl.n_signals() as usize);
+        sig.extend_from_slice(inputs);
+        for node in &nl.nodes {
+            let va = sig[node.a as usize];
+            let vb = sig[node.b as usize];
+            let v = self.mk_gate(node.kind, va, vb);
+            sig.push(v);
+        }
+        nl.outputs.iter().map(|&o| sig[o as usize]).collect()
+    }
+}
+
+/// Sound error-bound engine for one target function.
+///
+/// Holds the exact reference netlist (`ripple_carry_adder` /
+/// `wallace_multiplier` — the generator-correctness tests in
+/// `circuit::generators` are the trusted base of the soundness argument)
+/// and value-numbers candidate and reference over shared inputs.
+pub struct BoundEngine {
+    f: ArithFn,
+    reference: Netlist,
+}
+
+impl BoundEngine {
+    /// Build the engine (constructs the reference netlist once).
+    pub fn new(f: ArithFn) -> BoundEngine {
+        let reference = match f {
+            ArithFn::Add { w } => ripple_carry_adder(w),
+            ArithFn::Mul { w } => wallace_multiplier(w),
+        };
+        BoundEngine { f, reference }
+    }
+
+    /// Target function.
+    pub fn f(&self) -> ArithFn {
+        self.f
+    }
+
+    /// Maximum exact output of `f` (the minimum is 0 at a = b = 0).
+    pub fn exact_max(f: ArithFn) -> U256 {
+        let m = mask128(f.width());
+        match f {
+            ArithFn::Add { .. } => U256::add_u128(m, m),
+            ArithFn::Mul { .. } => U256::mul_u128(m, m),
+        }
+    }
+
+    /// Provable bounds for `nl`, or `None` when the netlist is malformed
+    /// or does not conform to the target shape (never panics).
+    pub fn bounds(&self, nl: &Netlist) -> Option<StaticBounds> {
+        if nl.n_inputs != self.f.n_inputs()
+            || nl.n_outputs() != self.f.n_outputs()
+            || nl.validate().is_err()
+        {
+            return None;
+        }
+        let (mut g, inputs) = VnGraph::new(self.f.n_inputs());
+        let ref_out = g.outputs_of(&self.reference, &inputs);
+        let cand_out = g.outputs_of(nl, &inputs);
+        let n_out = self.f.n_outputs();
+
+        // Classify each difference bit d_j = ref_j ⊕ cand_j.
+        let mut may_differ = U256::ZERO; // D: not proven equal
+        let mut must_differ: Vec<u32> = Vec::new(); // K: proven complement
+        let mut c_lo = U256::ZERO; // candidate interval from known bits
+        let mut c_hi = U256::ZERO;
+        for j in 0..n_out {
+            let (rv, cv) = (ref_out[j as usize], cand_out[j as usize]);
+            if rv != cv {
+                may_differ.or_bit(j, 1);
+                if g.not_of[rv as usize] == cv {
+                    must_differ.push(j);
+                }
+            }
+            match cv {
+                VN_TRUE => {
+                    c_lo.or_bit(j, 1);
+                    c_hi.or_bit(j, 1);
+                }
+                VN_FALSE => {}
+                _ => c_hi.or_bit(j, 1),
+            }
+        }
+
+        // Upper bound 1 (bit-difference): |c − e| = |Σ_{j∈D} 2^j·d_j|
+        // ≤ Σ_{j∈D} 2^j, since d_j = 0 outside D.
+        let diff_bound = may_differ;
+        // Upper bound 2 (interval): c ∈ [c_lo, c_hi], e ∈ [0, e_hi] per-bit
+        // soundly, so sup|c − e| ≤ max(c_hi − 0, |e_hi − c_lo|).
+        let e_hi = Self::exact_max(self.f);
+        let interval_bound = c_hi.max(e_hi.abs_diff(c_lo));
+        let bound = diff_bound.min(interval_bound);
+
+        // Floor: if some bit J is proven to differ on EVERY input, then
+        // |c − e| ≥ 2^J − Σ_{j∈D\{J}, j<J} 2^j when no D-bit lies above J,
+        // and ≥ 1 otherwise (a signed sum of distinct powers of two with a
+        // guaranteed ±2^J term cannot vanish). The interval floor
+        // c_lo − e_hi (when positive) also holds for every input.
+        let mut floor = 0.0f64;
+        if let Some(&top) = must_differ.iter().max() {
+            let above = (top + 1..n_out).any(|j| may_differ.bit(j) == 1);
+            floor = if above {
+                1.0
+            } else {
+                let mut below = 0.0f64;
+                for j in 0..top {
+                    if may_differ.bit(j) == 1 {
+                        below += (j as f64).exp2();
+                    }
+                }
+                // conservative shave: keep the floor a lower bound through
+                // f64 rounding of the subtraction
+                (((top as f64).exp2() - below) * (1.0 - 1e-12)).max(1.0)
+            };
+        }
+        if c_lo > e_hi {
+            floor = floor.max(c_lo.abs_diff(e_hi).to_f64() * (1.0 - 1e-12));
+        }
+
+        let wce_bound = bound.to_f64();
+        Some(StaticBounds {
+            wce_bound,
+            mae_bound: wce_bound,
+            wce_floor: floor,
+            exact_proven: bound.is_zero(),
+        })
+    }
+}
+
+thread_local! {
+    /// Per-thread engine cache: library ingestion characterises many
+    /// entries of the same function back to back, and rebuilding the
+    /// reference netlist per entry would dominate at wide widths.
+    static SHARED_ENGINE: RefCell<Option<BoundEngine>> = const { RefCell::new(None) };
+}
+
+/// Run `body` against a cached per-thread [`BoundEngine`] for `f`
+/// (rebuilt only when the target function changes).
+pub fn with_shared_engine<R>(f: ArithFn, body: impl FnOnce(&BoundEngine) -> R) -> R {
+    SHARED_ENGINE.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.as_ref().map(|e| e.f()) != Some(f) {
+            *slot = Some(BoundEngine::new(f));
+        }
+        body(slot.as_ref().expect("engine just installed"))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::baselines::{bam_multiplier, truncated_multiplier};
+    use crate::circuit::generators::{array_multiplier, kogge_stone_adder};
+    use crate::circuit::netlist::Node;
+    use crate::circuit::simulator::eval_exhaustive_u64;
+
+    fn measured_wce(nl: &Netlist, f: ArithFn) -> f64 {
+        let t = eval_exhaustive_u64(nl);
+        let mut worst = 0u64;
+        for (idx, &v) in t.iter().enumerate() {
+            worst = worst.max(v.abs_diff(f.exact(idx as u64)));
+        }
+        worst as f64
+    }
+
+    #[test]
+    fn reference_circuits_prove_exact() {
+        for w in [2u32, 4, 8] {
+            let mul = analyze(&wallace_multiplier(w), ArithFn::Mul { w });
+            let b = mul.bounds.expect("wellformed");
+            assert!(b.exact_proven && b.wce_bound == 0.0, "mul{w}");
+            let add = analyze(&ripple_carry_adder(w), ArithFn::Add { w });
+            let b = add.bounds.expect("wellformed");
+            assert!(b.exact_proven && b.wce_bound == 0.0, "add{w}");
+        }
+    }
+
+    #[test]
+    fn bounds_are_sound_on_baselines() {
+        let f = ArithFn::Mul { w: 8 };
+        let engine = BoundEngine::new(f);
+        for nl in crate::circuit::baselines::table2_baselines() {
+            let b = engine.bounds(&nl).expect("conforming");
+            let wce = measured_wce(&nl, f);
+            assert!(
+                b.wce_bound >= wce,
+                "{}: bound {} < measured {}",
+                nl.name,
+                b.wce_bound,
+                wce
+            );
+            assert!(
+                b.wce_floor <= wce,
+                "{}: floor {} > measured {}",
+                nl.name,
+                b.wce_floor,
+                wce
+            );
+            if b.exact_proven {
+                assert_eq!(wce, 0.0, "{}", nl.name);
+            }
+        }
+    }
+
+    #[test]
+    fn structurally_different_exact_circuits_stay_sound() {
+        // array multiplier / Kogge–Stone adder are exact but structurally
+        // far from the references: exactness need not be *proven*, but the
+        // bound must still be ≥ 0 = the true WCE (trivially) and the floor
+        // must be 0 (they never differ).
+        let mul = analyze(&array_multiplier(4), ArithFn::Mul { w: 4 });
+        let b = mul.bounds.unwrap();
+        assert_eq!(b.wce_floor, 0.0);
+        let add = analyze(&kogge_stone_adder(4), ArithFn::Add { w: 4 });
+        let b = add.bounds.unwrap();
+        assert_eq!(b.wce_floor, 0.0);
+    }
+
+    #[test]
+    fn stuck_at_zero_outputs_bound_tightly() {
+        // All outputs forced to 0: true WCE = max product; the interval
+        // bound must catch it exactly.
+        let f = ArithFn::Mul { w: 4 };
+        let mut nl = Netlist::new(8, "mul4u_stuck0");
+        let z = nl.zero();
+        for _ in 0..8 {
+            nl.output(z);
+        }
+        let b = BoundEngine::new(f).bounds(&nl).unwrap();
+        assert_eq!(b.wce_bound, 225.0); // (2^4−1)² = 225
+        assert_eq!(measured_wce(&nl, f), 225.0);
+        assert!(!b.exact_proven);
+    }
+
+    #[test]
+    fn proven_complement_bit_raises_the_floor() {
+        // Invert output bit 0 of the reference: it differs on every input,
+        // so the floor must be ≥ 1 and the measured WCE must respect it.
+        let f = ArithFn::Mul { w: 3 };
+        let mut nl = wallace_multiplier(3);
+        let inv = nl.push1(GateKind::Not, nl.outputs[0]);
+        nl.outputs[0] = inv;
+        let b = BoundEngine::new(f).bounds(&nl).unwrap();
+        assert!(b.wce_floor >= 1.0, "floor {}", b.wce_floor);
+        assert!(!b.exact_proven);
+        let wce = measured_wce(&nl, f);
+        assert!(b.wce_floor <= wce && wce <= b.wce_bound);
+    }
+
+    #[test]
+    fn truncated_multiplier_bound_reflects_truncation() {
+        // Truncation keeps the top partial products: the bound should be
+        // sound and meaningfully below the vacuous full-range bound.
+        let f = ArithFn::Mul { w: 8 };
+        let nl = truncated_multiplier(8, 6);
+        let b = BoundEngine::new(f).bounds(&nl).unwrap();
+        let wce = measured_wce(&nl, f);
+        assert!(b.wce_bound >= wce);
+        assert!(b.wce_bound <= StaticBounds::vacuous(f).wce_bound);
+    }
+
+    #[test]
+    fn forward_reference_is_reported_not_panicked() {
+        let mut nl = Netlist::new(2, "bad_forward");
+        nl.nodes.push(Node {
+            kind: GateKind::And,
+            a: 0,
+            b: 7, // future signal
+        });
+        nl.outputs.push(2);
+        let rep = verify_netlist(&nl);
+        assert!(!rep.is_wellformed());
+        assert_eq!(
+            rep.violations,
+            vec![Violation::ForwardOperand {
+                gate: 0,
+                operand: 'b',
+                signal: 7
+            }]
+        );
+        assert!(rep.violations[0].to_string().contains("future signal 7"));
+        assert!(rep.clone().into_result().is_err());
+    }
+
+    #[test]
+    fn out_of_range_output_is_reported() {
+        let mut nl = Netlist::new(2, "bad_output");
+        nl.push(GateKind::And, 0, 1);
+        nl.outputs.push(99);
+        let rep = verify_netlist(&nl);
+        assert_eq!(
+            rep.violations,
+            vec![Violation::OutputOutOfRange {
+                index: 0,
+                signal: 99
+            }]
+        );
+    }
+
+    #[test]
+    fn arity_conventions_are_advisory_only() {
+        let mut nl = Netlist::new(2, "sloppy");
+        nl.nodes.push(Node {
+            kind: GateKind::Not,
+            a: 0,
+            b: 1, // in range, but unary convention is b = a
+        });
+        nl.nodes.push(Node {
+            kind: GateKind::Const0,
+            a: 1,
+            b: 0, // in range, but const convention is a = b = 0
+        });
+        nl.outputs.push(2);
+        let rep = verify_netlist(&nl);
+        assert!(rep.is_wellformed());
+        assert_eq!(rep.advisories.len(), 2);
+    }
+
+    #[test]
+    fn nonconforming_shape_is_a_violation() {
+        let rep = analyze(&wallace_multiplier(4), ArithFn::Mul { w: 8 });
+        assert!(!rep.is_wellformed());
+        assert!(matches!(
+            rep.violations[0],
+            Violation::Nonconforming { .. }
+        ));
+        assert!(rep.bounds.is_none());
+    }
+
+    #[test]
+    fn census_counts_dead_gates_and_live_inputs() {
+        let mut nl = Netlist::new(3, "census");
+        let g0 = nl.push(GateKind::And, 0, 1);
+        nl.push(GateKind::Or, 0, 2); // dead
+        nl.output(g0);
+        let rep = verify_netlist(&nl);
+        assert_eq!(rep.active_gates, 1);
+        assert_eq!(rep.dead_gates, 1);
+        assert_eq!(rep.live_inputs, 2);
+        assert_eq!(rep.depth, 1);
+        assert!(rep.max_fanout >= 1);
+    }
+
+    #[test]
+    fn bam_bound_monotone_in_vertical_break() {
+        // More broken cells ⇒ a bound that does not decrease.
+        let engine = BoundEngine::new(ArithFn::Mul { w: 8 });
+        let mut prev = 0.0;
+        for v in [0u32, 2, 4, 6, 8] {
+            let b = engine.bounds(&bam_multiplier(8, 0, v)).unwrap();
+            assert!(b.wce_bound >= prev, "v={v}");
+            prev = b.wce_bound;
+        }
+    }
+
+    #[test]
+    fn wide_widths_do_not_panic_and_stay_finite() {
+        for w in [32u32, 64] {
+            let f = ArithFn::Mul { w };
+            let b = BoundEngine::new(f)
+                .bounds(&truncated_multiplier(w, w - 4))
+                .unwrap();
+            assert!(b.wce_bound.is_finite() && b.wce_bound > 0.0, "w={w}");
+            assert!(b.wce_floor <= b.wce_bound);
+        }
+    }
+
+    #[test]
+    fn vacuous_bounds_dominate_any_engine_bound() {
+        let f = ArithFn::Mul { w: 8 };
+        let v = StaticBounds::vacuous(f);
+        for nl in crate::circuit::baselines::table2_baselines() {
+            let b = BoundEngine::new(f).bounds(&nl).unwrap();
+            assert!(b.wce_bound <= v.wce_bound);
+        }
+    }
+}

@@ -4,6 +4,7 @@
 //! This module is the foundation both the CGP engine (`crate::cgp`) and the
 //! library (`crate::library`) are built on; see `DESIGN.md` §5.
 
+pub mod analysis;
 pub mod baselines;
 pub mod cost;
 pub mod gate;
@@ -13,6 +14,7 @@ pub mod simulator;
 pub mod verify;
 pub mod wide;
 
+pub use analysis::{analyze, verify_netlist, AnalysisReport, BoundEngine, StaticBounds};
 pub use cost::{CircuitCost, CostModel};
 pub use gate::GateKind;
 pub use netlist::{Netlist, Node, SignalId};

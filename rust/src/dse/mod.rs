@@ -178,6 +178,15 @@ pub struct DseReport {
     pub reference_accuracy: f64,
     /// Candidate ids in roster order.
     pub candidates: Vec<String>,
+    /// Provable WCE ceiling per candidate [% of max output], index-aligned
+    /// with `candidates`. The QoR model is fit on *sampled* error columns,
+    /// which can undershoot on wide operands; the static bound is the
+    /// sound ceiling a consumer can audit the roster against.
+    pub candidate_wce_bound_pct: Vec<f64>,
+    /// Candidates statically proven exact (index-aligned with
+    /// `candidates`) — their true error contribution is provably zero
+    /// regardless of sampling.
+    pub candidate_exact_proven: Vec<bool>,
     /// Candidates measured in the probe stage.
     pub probe_multipliers: usize,
     /// Accuracy evaluations requested by the probe stage (cache hits
@@ -528,6 +537,8 @@ pub fn run_dse(
         max_accuracy_drop: cfg.max_accuracy_drop,
         reference_accuracy: golden,
         candidates: cands.iter().map(|c| c.id.clone()).collect(),
+        candidate_wce_bound_pct: cands.iter().map(|c| c.wce_bound_pct).collect(),
+        candidate_exact_proven: cands.iter().map(|c| c.exact_proven).collect(),
         probe_multipliers: probe.probed.len(),
         probe_evals: probe.evals,
         qor_fit_rmse: so.qor.fit_rmse,

@@ -8,8 +8,13 @@
 //!
 //! * [`circuit`] — gate-level netlist substrate: representation, bit-parallel
 //!   simulation, exact adder/multiplier generators, truncation and BAM
-//!   baseline approximations, and a 45 nm-style area/power/delay cost model
-//!   (substituting for Synopsys Design Compiler — see `DESIGN.md`).
+//!   baseline approximations, a 45 nm-style area/power/delay cost model
+//!   (substituting for Synopsys Design Compiler — see `DESIGN.md`), and the
+//!   static-analysis subsystem (`circuit::analysis`, DESIGN.md §12):
+//!   simulation-free well-formedness verification at every ingest boundary
+//!   and a sound error-bound engine whose provable `wce_bound`/`wce_floor`/
+//!   `exact_proven` facts ride alongside every entry's sampled metrics and
+//!   power the CGP fitness pre-screen.
 //! * [`cgp`] — Cartesian Genetic Programming engine: chromosome encoding,
 //!   mutation, (1+λ) evolutionary strategy, all six error metrics of the
 //!   paper (eqs. 1–6), single-objective error-constrained search,
@@ -23,9 +28,9 @@
 //!   full metric characterisation, JSON persistence, Pareto-front extraction
 //!   and the paper's "10 circuits evenly spaced along the power axis per
 //!   metric" selection procedure (§III/§IV) — plus the compiled zero-copy
-//!   binary store (`library compile`, DESIGN.md §10) and the
-//!   `LibrarySource` Json|Compiled abstraction every read-only consumer
-//!   loads through.
+//!   binary store (`library compile`, DESIGN.md §10; format v2 carries the
+//!   static bounds byte-exactly) and the `LibrarySource` Json|Compiled
+//!   abstraction every read-only consumer loads through.
 //! * [`accel`] — the DNN hardware-accelerator model: ResNet-N architecture
 //!   descriptions, per-layer multiplier counts and the power model used to
 //!   report "relative power of multipliers in convolutional layers".

@@ -58,6 +58,12 @@ pub struct CampaignConfig {
     /// Worker threads for the run grid (1 = serial; the library output is
     /// byte-identical for every value).
     pub jobs: usize,
+    /// Static-analysis fitness pre-screen: discard mutants whose provable
+    /// error floor already exceeds the run's `e_max` without simulating
+    /// them (see [`EvolveConfig::prescreen`]). Deterministic and sound —
+    /// never discards a feasible candidate — but off by default because it
+    /// changes how infeasible candidates rank during the search.
+    pub prescreen: bool,
 }
 
 impl CampaignConfig {
@@ -77,6 +83,7 @@ impl CampaignConfig {
             per_stratum: 24,
             sampled_search: true,
             jobs: 1,
+            prescreen: false,
         }
     }
 }
@@ -231,6 +238,7 @@ pub fn run_campaign(
                         h: cfg.h,
                         seed: run_seed,
                         slack: cfg.slack,
+                        prescreen: cfg.prescreen,
                     },
                 });
                 job_meta.push((metric, e_max, run_seed));

@@ -9,22 +9,23 @@
 //! ```text
 //! header (160 bytes)
 //!   0   magic            b"EVOAPXL1"
-//!   8   format version   u32 (= 1)
+//!   8   format version   u32 (= 2)
 //!   12  endianness tag   u32 (= 0x0A0B0C0D as LE bytes 0D 0C 0B 0A)
 //!   16  n_entries        u64
 //!   24  payload length   u64 (file length − header length)
 //!   32  payload checksum u64 (FNV-1a over every payload byte)
 //!   40  n_sections       u32 (= 7)
-//!   44  record size      u32 (= 172)
+//!   44  record size      u32 (= 200)
 //!   48  section table    7 × (offset u64, length u64), payload-relative
 //! payload
-//!   RECORDS   n_entries fixed 172-byte records (field table in `record`)
+//!   RECORDS   n_entries fixed 200-byte records (field table in `record`)
 //!   STRINGS   interned UTF-8 blob (entry ids, origin strings)
 //!   NETS      netlist blob: 9-byte nodes (kind u8, a u32, b u32) and
 //!             4-byte output signal ids, per-record ranges
-//!   CENSUS    48-byte rows: kind u8 + pad, width u32, count u64,
-//!             area min/max f64, delay min/max f64 — precomputed
-//!             `Library::census_rows` output in its (kind, width) order
+//!   CENSUS    64-byte rows: kind u8 + pad, width u32, count u64,
+//!             area min/max f64, delay min/max f64, exact_proven u64,
+//!             wce_bound_max f64 — precomputed `Library::census_rows`
+//!             output in its (kind, width) order
 //!   FNTAB     120-byte rows, one per distinct function, sorted by
 //!             (kind, width): the entry list, 7 metric-sorted index lists
 //!             (power + ER/MAE/MSE/MRE/WCE/WCRE) and 6 precomputed
@@ -36,7 +37,9 @@
 //!
 //! Versioning rules: the magic pins the family, `format version` is bumped
 //! on any incompatible layout change and the reader rejects versions it
-//! does not know. The endianness tag guards against a big-endian writer —
+//! does not know. Version 2 appended the static-analysis bound fields
+//! (`circuit::analysis`) to records and census rows; v1 files are rejected
+//! (recompile from the JSON source). The endianness tag guards against a big-endian writer —
 //! the format is defined little-endian and a reader on any host decodes
 //! it with explicit `from_le_bytes`, so the tag only rejects files from a
 //! hypothetical non-conforming producer. The record-size field lets a
@@ -55,6 +58,7 @@ use std::collections::HashMap;
 use std::path::Path;
 
 use crate::cgp::metrics::{ErrorMetrics, Metric};
+use crate::circuit::analysis::StaticBounds;
 use crate::circuit::cost::CircuitCost;
 use crate::circuit::gate::GateKind;
 use crate::circuit::netlist::{Netlist, Node};
@@ -66,15 +70,16 @@ use super::store::{CensusRow, Library};
 
 /// File magic — first 8 bytes of every compiled library.
 pub const MAGIC: [u8; 8] = *b"EVOAPXL1";
-/// Current (and only) format version.
-pub const FORMAT_VERSION: u32 = 1;
+/// Current format version (2: records and census rows carry the
+/// `circuit::analysis` static bound fields).
+pub const FORMAT_VERSION: u32 = 2;
 /// Byte-order sentinel: decodes to this value only through `from_le_bytes`.
 const ENDIAN_TAG: u32 = 0x0A0B_0C0D;
 const N_SECTIONS: usize = 7;
 /// Fixed header length; the payload starts here.
 pub const HEADER_LEN: usize = 48 + N_SECTIONS * 16;
-const RECORD_SIZE: usize = 172;
-const CENSUS_ROW_SIZE: usize = 48;
+const RECORD_SIZE: usize = 200;
+const CENSUS_ROW_SIZE: usize = 64;
 const FNTAB_ROW_SIZE: usize = 120;
 const NODE_SIZE: usize = 9;
 
@@ -108,6 +113,10 @@ const R_ORIGIN_STR_OFF: usize = 148; // u32 into STRINGS
 const R_ORIGIN_STR_LEN: usize = 152; // u32
 const R_ORIGIN_X: usize = 156; // u64: e_max_permille / keep / h
 const R_ORIGIN_Y: usize = 164; // u64: seed / v
+const R_WCE_BOUND: usize = 172; // f64: provable WCE upper bound
+const R_MAE_BOUND: usize = 180; // f64: provable MAE upper bound
+const R_WCE_FLOOR: usize = 188; // f64: provable WCE lower bound
+const R_EXACT_PROVEN: usize = 196; // u8 bool (+3 pad)
 
 /// Canonical metric order of the FNTAB index/front lists.
 pub const METRIC_ORDER: [Metric; 6] = [
@@ -290,6 +299,11 @@ pub fn compile_library(lib: &Library) -> Vec<u8> {
         records.extend_from_slice(&ostr_len.to_le_bytes());
         records.extend_from_slice(&ox.to_le_bytes());
         records.extend_from_slice(&oy.to_le_bytes());
+        for v in [e.bounds.wce_bound, e.bounds.mae_bound, e.bounds.wce_floor] {
+            records.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        records.push(e.bounds.exact_proven as u8);
+        records.extend_from_slice(&[0u8; 3]);
         debug_assert_eq!(records.len() - r0, RECORD_SIZE);
     }
 
@@ -308,6 +322,8 @@ pub fn compile_library(lib: &Library) -> Vec<u8> {
         ] {
             census.extend_from_slice(&v.to_bits().to_le_bytes());
         }
+        census.extend_from_slice(&r.exact_proven.to_le_bytes());
+        census.extend_from_slice(&r.wce_bound_max.to_bits().to_le_bytes());
     }
 
     // Group entries per function, in insertion order (the order every
@@ -701,6 +717,8 @@ impl CompiledLibrary {
                 area_um2_max: rd_f64(row, 24),
                 delay_ps_min: rd_f64(row, 32),
                 delay_ps_max: rd_f64(row, 40),
+                exact_proven: rd_u64(row, 48),
+                wce_bound_max: rd_f64(row, 56),
             })
             .collect()
     }
@@ -858,6 +876,17 @@ impl<'a> EntryView<'a> {
         }
     }
 
+    /// Provable static error bounds (`circuit::analysis`).
+    pub fn bounds(&self) -> StaticBounds {
+        let r = self.rec();
+        StaticBounds {
+            wce_bound: rd_f64(r, R_WCE_BOUND),
+            mae_bound: rd_f64(r, R_MAE_BOUND),
+            wce_floor: rd_f64(r, R_WCE_FLOOR),
+            exact_proven: r[R_EXACT_PROVEN] != 0,
+        }
+    }
+
     /// Provenance.
     pub fn origin(&self) -> Origin {
         let r = self.rec();
@@ -911,6 +940,7 @@ impl<'a> EntryView<'a> {
             netlist,
             metrics,
             cost: self.cost(),
+            bounds: self.bounds(),
             origin: self.origin(),
         }
     }
@@ -952,7 +982,11 @@ mod tests {
 
     #[test]
     fn record_layout_constants_are_consistent() {
-        assert_eq!(R_ORIGIN_Y + 8, RECORD_SIZE);
+        assert_eq!(R_WCE_BOUND, R_ORIGIN_Y + 8);
+        assert_eq!(R_MAE_BOUND, R_WCE_BOUND + 8);
+        assert_eq!(R_WCE_FLOOR, R_MAE_BOUND + 8);
+        assert_eq!(R_EXACT_PROVEN, R_WCE_FLOOR + 8);
+        assert_eq!(R_EXACT_PROVEN + 4, RECORD_SIZE);
         assert_eq!(R_METRICS, R_OUTS_OFF + 8);
         assert_eq!(R_N_VECTORS, R_METRICS + 48);
         assert_eq!(R_ORIGIN_TAG, R_COST + 40);
@@ -974,6 +1008,12 @@ mod tests {
             assert_eq!(m.metrics, e.metrics);
             assert_eq!(m.cost, e.cost);
             assert_eq!(m.rel, e.rel);
+            // bound fields survive byte-exactly (IEEE-754 bit patterns)
+            assert_eq!(m.bounds.wce_bound.to_bits(), e.bounds.wce_bound.to_bits());
+            assert_eq!(m.bounds.mae_bound.to_bits(), e.bounds.mae_bound.to_bits());
+            assert_eq!(m.bounds.wce_floor.to_bits(), e.bounds.wce_floor.to_bits());
+            assert_eq!(m.bounds.exact_proven, e.bounds.exact_proven);
+            assert_eq!(v.bounds(), e.bounds);
         }
     }
 

@@ -1,5 +1,6 @@
 //! One library entry: a characterised approximate circuit.
 
+use crate::circuit::analysis::{verify_netlist, with_shared_engine, StaticBounds};
 use crate::circuit::cost::{CircuitCost, CostModel};
 use crate::circuit::gate::GateKind;
 use crate::circuit::netlist::{Netlist, Node};
@@ -135,6 +136,9 @@ pub struct Entry {
     pub rel: RelativeErrors,
     /// Synthesis-model characterisation.
     pub cost: CircuitCost,
+    /// Provable static error bounds (`circuit::analysis`) — sound
+    /// companions to the (possibly sampled) `metrics`.
+    pub bounds: StaticBounds,
     /// Provenance.
     pub origin: Origin,
 }
@@ -170,6 +174,8 @@ impl Entry {
             (metrics, cost, fnv1a(outs.iter().flat_map(|v| v.words())))
         };
         let rel = metrics.as_percentages(f);
+        let bounds = with_shared_engine(f, |eng| eng.bounds(&netlist))
+            .unwrap_or_else(|| StaticBounds::vacuous(f));
         let id = format!("{}_{:04X}", f.tag(), hash & 0xFFFF);
         let mut netlist = netlist;
         netlist.name = id.clone();
@@ -180,6 +186,7 @@ impl Entry {
             metrics,
             rel,
             cost,
+            bounds,
             origin,
         }
     }
@@ -260,6 +267,15 @@ impl Entry {
                     ("power_uw", self.cost.power_uw.into()),
                 ]),
             ),
+            (
+                "bounds",
+                Json::obj([
+                    ("wce_bound", self.bounds.wce_bound.into()),
+                    ("mae_bound", self.bounds.mae_bound.into()),
+                    ("wce_floor", self.bounds.wce_floor.into()),
+                    ("exact_proven", self.bounds.exact_proven.into()),
+                ]),
+            ),
             ("origin", self.origin.to_json()),
         ])
     }
@@ -291,7 +307,37 @@ impl Entry {
         for o in j.req_arr("outputs")? {
             netlist.outputs.push(o.as_i64().ok_or("output")? as u32);
         }
-        netlist.validate()?;
+        // Validate through the static analyzer at the ingest boundary:
+        // forward operand references, out-of-range outputs and shape
+        // mismatches become proper errors here instead of simulator
+        // panics downstream.
+        let report = verify_netlist(&netlist);
+        if let Some(v) = report.violations.first() {
+            return Err(format!("invalid netlist `{}`: {v}", netlist.name));
+        }
+        if netlist.n_inputs != f.n_inputs() || netlist.n_outputs() != f.n_outputs() {
+            return Err(format!(
+                "invalid netlist `{}`: {} inputs / {} outputs, {} needs {} / {}",
+                netlist.name,
+                netlist.n_inputs,
+                netlist.n_outputs(),
+                f.tag(),
+                f.n_inputs(),
+                f.n_outputs()
+            ));
+        }
+        // Pre-bounds libraries (no `bounds` object) get provable bounds
+        // recomputed on load; fresh libraries round-trip them verbatim.
+        let bounds = match j.get("bounds") {
+            Some(b) => StaticBounds {
+                wce_bound: b.req_f64("wce_bound")?,
+                mae_bound: b.req_f64("mae_bound")?,
+                wce_floor: b.req_f64("wce_floor")?,
+                exact_proven: b.req("exact_proven")?.as_bool().unwrap_or(false),
+            },
+            None => with_shared_engine(f, |eng| eng.bounds(&netlist))
+                .unwrap_or_else(|| StaticBounds::vacuous(f)),
+        };
         let m = j.req("metrics")?;
         let metrics = ErrorMetrics {
             er: m.req_f64("er")?,
@@ -319,6 +365,7 @@ impl Entry {
             netlist,
             metrics,
             cost,
+            bounds,
             origin: Origin::from_json(j.req("origin")?)?,
         })
     }

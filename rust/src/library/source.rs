@@ -185,6 +185,17 @@ impl LibrarySource {
         }
     }
 
+    /// Owned copy of entry `i` in storage order — insertion order for the
+    /// JSON backend, record order for the compiled one; the two coincide
+    /// by construction (the compiler writes records in insertion order).
+    /// `None` when out of range. The `library analyze` walk uses this.
+    pub fn entry_at(&self, i: usize) -> Option<Entry> {
+        match &self.inner {
+            Inner::Json(l) => l.entries().get(i).cloned(),
+            Inner::Compiled(c) => (i < c.len()).then(|| c.entry(i).materialise()),
+        }
+    }
+
     /// Entry by id.
     pub fn get(&self, id: &str) -> Option<Entry> {
         match &self.inner {
@@ -301,7 +312,18 @@ mod tests {
             assert_eq!(x.cost, y.cost);
             assert_eq!(x.rel, y.rel);
             assert_eq!(x.origin, y.origin);
+            assert_eq!(x.bounds, y.bounds);
         }
+
+        // storage-order walk agrees across backends and with for_fn order
+        for i in 0..json.len() {
+            let e1 = json.entry_at(i).unwrap();
+            let e2 = bin.entry_at(i).unwrap();
+            assert_eq!(e1.id, e2.id);
+            assert_eq!(e1.bounds, e2.bounds);
+        }
+        assert!(json.entry_at(json.len()).is_none());
+        assert!(bin.entry_at(bin.len()).is_none());
 
         for e in &a {
             let g1 = json.get(&e.id).unwrap();

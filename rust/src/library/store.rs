@@ -28,6 +28,12 @@ pub struct CensusRow {
     pub delay_ps_min: f64,
     /// Longest critical path in the group [ps].
     pub delay_ps_max: f64,
+    /// Entries whose static analysis proved them exact (`wce_bound == 0`).
+    pub exact_proven: u64,
+    /// Largest provable worst-case-error bound in the group
+    /// (`circuit::analysis`); infinite entries are clamped out by the
+    /// vacuous bound, so this stays finite.
+    pub wce_bound_max: f64,
 }
 
 /// A library of approximate arithmetic circuits (the EvoApproxLib analogue).
@@ -150,12 +156,18 @@ impl Library {
                     area_um2_max: f64::NEG_INFINITY,
                     delay_ps_min: f64::INFINITY,
                     delay_ps_max: f64::NEG_INFINITY,
+                    exact_proven: 0,
+                    wce_bound_max: 0.0,
                 });
             row.count += 1;
             row.area_um2_min = row.area_um2_min.min(e.cost.area_um2);
             row.area_um2_max = row.area_um2_max.max(e.cost.area_um2);
             row.delay_ps_min = row.delay_ps_min.min(e.cost.delay_ps);
             row.delay_ps_max = row.delay_ps_max.max(e.cost.delay_ps);
+            if e.bounds.exact_proven {
+                row.exact_proven += 1;
+            }
+            row.wce_bound_max = row.wce_bound_max.max(e.bounds.wce_bound);
         }
         map.into_values().collect()
     }
@@ -258,6 +270,10 @@ mod tests {
         assert!(r.area_um2_min < r.area_um2_max, "{r:?}");
         assert!(r.area_um2_min > 0.0 && r.delay_ps_min > 0.0);
         assert!(r.delay_ps_min <= r.delay_ps_max);
+        // static-analysis aggregates: the exact wallace is proven exact,
+        // and the lossy entries give the group a nonzero bound ceiling
+        assert_eq!(r.exact_proven, 1);
+        assert!(r.wce_bound_max > 0.0 && r.wce_bound_max.is_finite(), "{r:?}");
         // the tuple census stays the old shape
         assert_eq!(
             lib.census(),
@@ -280,6 +296,7 @@ mod tests {
         let b = loaded.get(&a.id).unwrap();
         assert_eq!(a.netlist, b.netlist);
         assert_eq!(a.metrics.mae, b.metrics.mae);
+        assert_eq!(a.bounds, b.bounds, "static bounds round-trip via JSON");
     }
 
     /// `save` must replace a pre-existing destination atomically: after the

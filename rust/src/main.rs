@@ -12,6 +12,9 @@
 //! evoapprox library compile [--lib lib.json] [--out lib.bin] [--check]
 //!                   # lower a JSON library into the versioned binary store
 //!                   # (zero-copy cold start, precomputed census/fronts)
+//! evoapprox library analyze [--lib lib.json] [--id ID]
+//!                   # static analysis per entry: well-formedness verdicts
+//!                   # plus provable wce/mae bounds (no simulation)
 //! evoapprox census  --lib lib.json        # Table I counts (JSON or .bin)
 //! evoapprox select  --lib lib.json [--k 10]
 //! evoapprox fig4    [--lib lib.json] [--images 256] [--multipliers 6]
@@ -102,6 +105,7 @@ const COMMANDS: &[CommandSpec] = &[
             FlagSpec { name: "h", value: Some("N"), help: "genes mutated per offspring (default 5)" },
             FlagSpec { name: "seed", value: Some("N"), help: "RNG seed (default 1)" },
             FlagSpec { name: "slack", value: Some("N"), help: "extra grid columns (default 16)" },
+            FlagSpec { name: "prescreen", value: None, help: "discard mutants whose provable error floor exceeds the budget before simulating" },
             FlagSpec { name: "demes", value: Some("M"), help: "island-model demes; >1 enables migration (default 1)" },
             FlagSpec { name: "migration-interval", value: Some("G"), help: "generations between migrations (default 500)" },
             JOBS_FLAG,
@@ -118,6 +122,7 @@ const COMMANDS: &[CommandSpec] = &[
             FlagSpec { name: "generations", value: Some("N"), help: "generations per run (default 10000)" },
             FlagSpec { name: "targets", value: Some("N"), help: "e_max targets per metric (default 5)" },
             FlagSpec { name: "seed", value: Some("N"), help: "campaign master seed" },
+            FlagSpec { name: "prescreen", value: None, help: "discard mutants whose provable error floor exceeds the budget before simulating" },
             JOBS_FLAG,
         ],
     },
@@ -128,6 +133,14 @@ const COMMANDS: &[CommandSpec] = &[
             LIB_FLAG,
             FlagSpec { name: "out", value: Some("FILE"), help: "output path (default: input with a .bin extension)" },
             FlagSpec { name: "check", value: None, help: "reopen the output and verify census + fronts match the source" },
+        ],
+    },
+    CommandSpec {
+        name: "library analyze",
+        about: "static analysis per entry: well-formedness + provable error bounds",
+        flags: &[
+            LIB_FLAG,
+            FlagSpec { name: "id", value: Some("ID"), help: "analyse a single entry" },
         ],
     },
     CommandSpec {
@@ -232,6 +245,7 @@ fn main() {
         "evolve" => cmd_evolve(&cli),
         "library" => cmd_library(&cli),
         "library compile" => cmd_library_compile(&cli),
+        "library analyze" => cmd_library_analyze(&cli),
         "census" => cmd_census(&cli),
         "select" => cmd_select(&cli),
         "fig4" | "resilience" => cmd_fig4(&cli),
@@ -325,6 +339,7 @@ fn cmd_evolve(cli: &Cli) -> anyhow::Result<()> {
         h: cli.flag("h", 5u32)?,
         seed: cli.flag("seed", 1u64)?,
         slack: cli.flag("slack", 16u32)?,
+        prescreen: cli.has("prescreen"),
         ..Default::default()
     };
     let demes: u32 = cli.flag("demes", 1u32)?;
@@ -430,6 +445,7 @@ fn cmd_library(cli: &Cli) -> anyhow::Result<()> {
             cfg.targets_per_metric = cli.flag("targets", cfg.targets_per_metric)?;
             cfg.seed = cli.flag("seed", 0x5EEDu64)?;
             cfg.jobs = jobs;
+            cfg.prescreen = cli.has("prescreen");
             println!("campaign: {} ({jobs} workers)…", f.tag());
             let added = run_campaign(
                 &mut lib,
@@ -525,6 +541,67 @@ fn cmd_census(cli: &Cli) -> anyhow::Result<()> {
         t.row(vec![kind, w.to_string(), n.to_string()]);
     }
     print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_library_analyze(cli: &Cli) -> anyhow::Result<()> {
+    use evoapproxlib::circuit::analyze;
+
+    let lib = LibrarySource::open(cli.flag_str("lib", "library.json"))?;
+    let filter = cli.get("id");
+    let mut t = TextTable::new(&[
+        "id", "gates", "dead", "depth", "wce_bound", "wce_floor", "wce", "exact", "verdict",
+    ]);
+    let mut shown = 0usize;
+    let mut malformed = 0usize;
+    let mut exact = 0usize;
+    for i in 0..lib.len() {
+        let e = lib.entry_at(i).expect("index within library length");
+        if filter.map_or(false, |id| e.id != id) {
+            continue;
+        }
+        shown += 1;
+        let rep = analyze(&e.netlist, e.f);
+        if e.bounds.exact_proven {
+            exact += 1;
+        }
+        let verdict = if rep.is_wellformed() {
+            "ok".to_string()
+        } else {
+            malformed += 1;
+            rep.violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("; ")
+        };
+        t.row(vec![
+            e.id.clone(),
+            rep.active_gates.to_string(),
+            rep.dead_gates.to_string(),
+            rep.depth.to_string(),
+            format!("{:.3}", e.bounds.wce_bound),
+            format!("{:.3}", e.bounds.wce_floor),
+            format!("{:.3}", e.metrics.wce),
+            if e.bounds.exact_proven { "yes" } else { "no" }.to_string(),
+            verdict,
+        ]);
+    }
+    if shown == 0 {
+        if let Some(id) = filter {
+            anyhow::bail!("unknown entry id `{id}`");
+        }
+        println!("library is empty — nothing to analyse");
+        return Ok(());
+    }
+    print!("{}", t.render());
+    println!(
+        "{shown} entries analysed: {} well-formed, {exact} proven exact",
+        shown - malformed
+    );
+    if malformed > 0 {
+        anyhow::bail!("{malformed} malformed entries in the library");
+    }
     Ok(())
 }
 

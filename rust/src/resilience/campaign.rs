@@ -53,6 +53,11 @@ pub struct MultiplierSummary {
     pub wcre_pct: f64,
     /// ER [%].
     pub er_pct: f64,
+    /// Provable WCE ceiling [% of max output] from static analysis — a
+    /// sound bound the sampled `wce_pct` can never legitimately exceed.
+    pub wce_bound_pct: f64,
+    /// Whether static analysis proved the circuit functionally exact.
+    pub exact_proven: bool,
     /// The 65536-entry product table.
     pub lut: Vec<i32>,
     /// Circuit power characterisation (for per-layer power accounting).
@@ -77,6 +82,11 @@ impl MultiplierSummary {
             mre_pct: e.rel.mre_pct,
             wcre_pct: e.rel.wcre_pct,
             er_pct: e.rel.er_pct,
+            wce_bound_pct: {
+                let max_out = (e.f.n_outputs() as f64).exp2() - 1.0;
+                e.bounds.wce_bound / max_out * 100.0
+            },
+            exact_proven: e.bounds.exact_proven,
             lut: lut_for_entry(e)?,
             cost: e.cost,
         })

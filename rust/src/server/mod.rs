@@ -41,6 +41,7 @@
 //! | GET  | `/metrics` | Prometheus text exporter |
 //! | POST | `/v1/predict` | classify `image`/`images` via the batcher |
 //! | GET  | `/v1/library/census` | Table-I counts |
+//! | GET  | `/v1/library/analyze?id=ID` | static-analysis verdicts + provable bounds |
 //! | GET  | `/v1/library/pareto?metric=MAE` | (power, metric) Pareto front |
 //! | GET  | `/v1/select?max_accuracy_drop=D` | autoAx-style uniform pick |
 //! | POST | `/v1/campaigns/resilience` | submit a Fig. 4 campaign job |
@@ -402,6 +403,7 @@ const ENDPOINTS: &[&str] = &[
     "GET /metrics",
     "POST /v1/predict",
     "GET /v1/library/census",
+    "GET /v1/library/analyze?id=ID",
     "GET /v1/library/pareto?metric=MAE&width=8&fn=mul",
     "GET /v1/select?max_accuracy_drop=D&model=M&images=N&limit=K",
     "POST /v1/campaigns/resilience",
@@ -418,6 +420,7 @@ fn known_path(p: &[&str]) -> bool {
             | ["metrics"]
             | ["v1", "predict"]
             | ["v1", "library", "census"]
+            | ["v1", "library", "analyze"]
             | ["v1", "library", "pareto"]
             | ["v1", "select"]
             | ["v1", "campaigns", "resilience"]
@@ -449,6 +452,7 @@ fn dispatch(state: &Arc<ServerState>, req: &http::Request, ctx: ReqCtx) -> Outco
         ("GET", ["v1", "library", "census"]) => {
             Response::json(200, report::census_to_json(&state.library))
         }
+        ("GET", ["v1", "library", "analyze"]) => handle_analyze(state, &target),
         ("GET", ["v1", "library", "pareto"]) => handle_pareto(state, &target),
         ("GET", ["v1", "select"]) => handle_select(state, &target),
         ("POST", ["v1", "campaigns", "resilience"]) => handle_campaign(state, &req.body),
@@ -790,6 +794,17 @@ fn handle_predict(state: &Arc<ServerState>, body: &[u8], ctx: ReqCtx) -> Outcome
         }
     }
     Outcome::Deferred
+}
+
+/// `/v1/library/analyze`: per-entry static-analysis verdicts + provable
+/// bounds (see [`report::analyze_to_json`]); `?id=` narrows to one entry
+/// and 404s when unknown.
+fn handle_analyze(state: &ServerState, target: &Target) -> Response {
+    let id = target.query_get("id");
+    match report::analyze_to_json(&state.library, id) {
+        Some(j) => Response::json(200, j),
+        None => Response::error(404, format!("unknown entry id `{}`", id.unwrap_or(""))),
+    }
 }
 
 fn handle_pareto(state: &ServerState, target: &Target) -> Response {
@@ -1204,6 +1219,7 @@ mod tests {
             vec!["metrics"],
             vec!["v1", "predict"],
             vec!["v1", "library", "census"],
+            vec!["v1", "library", "analyze"],
             vec!["v1", "library", "pareto"],
             vec!["v1", "select"],
             vec!["v1", "campaigns", "resilience"],

@@ -6,6 +6,7 @@
 //! objects with sorted keys), "the server's campaign result equals the
 //! in-process campaign" can be asserted byte-for-byte.
 
+use crate::circuit::analysis::analyze;
 use crate::dse::{DsePoint, DseReport};
 use crate::library::{Entry, LibrarySource};
 use crate::resilience::Fig4Report;
@@ -52,12 +53,70 @@ pub fn census_to_json(lib: &LibrarySource) -> Json {
                             ("area_um2_max", r.area_um2_max.into()),
                             ("delay_ps_min", r.delay_ps_min.into()),
                             ("delay_ps_max", r.delay_ps_max.into()),
+                            ("exact_proven", (r.exact_proven as i64).into()),
+                            ("wce_bound_max", r.wce_bound_max.into()),
                         ])
                     })
                     .collect(),
             ),
         ),
     ])
+}
+
+/// Static-analysis report over a library (`/v1/library/analyze`, CLI
+/// `library analyze`): per-entry well-formedness verdict and structural
+/// census from `circuit::analysis`, joined with the stored provable
+/// bounds and the (possibly sampled) measured WCE so a client can see at
+/// a glance where the sample could undershoot. `id` filters to a single
+/// entry; returns `None` when that id is unknown. Both backends render
+/// identically (entries walk in storage order either way).
+pub fn analyze_to_json(lib: &LibrarySource, id: Option<&str>) -> Option<Json> {
+    let entries: Vec<Entry> = match id {
+        Some(id) => vec![lib.get(id)?],
+        None => (0..lib.len()).filter_map(|i| lib.entry_at(i)).collect(),
+    };
+    let mut wellformed = 0usize;
+    let mut exact_proven = 0usize;
+    let mut rows = Vec::with_capacity(entries.len());
+    for e in &entries {
+        let rep = analyze(&e.netlist, e.f);
+        if rep.is_wellformed() {
+            wellformed += 1;
+        }
+        if e.bounds.exact_proven {
+            exact_proven += 1;
+        }
+        rows.push(Json::obj([
+            ("id", e.id.as_str().into()),
+            ("wellformed", rep.is_wellformed().into()),
+            (
+                "violations",
+                Json::Arr(
+                    rep.violations
+                        .iter()
+                        .map(|v| v.to_string().into())
+                        .collect(),
+                ),
+            ),
+            ("active_gates", rep.active_gates.into()),
+            ("dead_gates", rep.dead_gates.into()),
+            ("live_inputs", rep.live_inputs.into()),
+            ("depth", rep.depth.into()),
+            ("max_fanout", rep.max_fanout.into()),
+            ("wce_bound", e.bounds.wce_bound.into()),
+            ("mae_bound", e.bounds.mae_bound.into()),
+            ("wce_floor", e.bounds.wce_floor.into()),
+            ("exact_proven", e.bounds.exact_proven.into()),
+            ("wce", e.metrics.wce.into()),
+            ("wce_exhaustive", e.metrics.exhaustive.into()),
+        ]));
+    }
+    Some(Json::obj([
+        ("total", entries.len().into()),
+        ("wellformed", wellformed.into()),
+        ("exact_proven", exact_proven.into()),
+        ("entries", Json::Arr(rows)),
+    ]))
 }
 
 /// Fig. 4 per-layer campaign report.
@@ -116,6 +175,14 @@ pub fn dse_to_json(r: &DseReport) -> Json {
             "candidates",
             Json::Arr(r.candidates.iter().map(|s| s.as_str().into()).collect()),
         ),
+        (
+            "candidate_wce_bound_pct",
+            Json::Arr(r.candidate_wce_bound_pct.iter().map(|&b| b.into()).collect()),
+        ),
+        (
+            "candidate_exact_proven",
+            Json::Arr(r.candidate_exact_proven.iter().map(|&b| b.into()).collect()),
+        ),
         ("probe_multipliers", r.probe_multipliers.into()),
         ("probe_evals", r.probe_evals.into()),
         ("qor_fit_rmse", r.qor_fit_rmse.into()),
@@ -162,6 +229,34 @@ mod tests {
             rows[0].req_f64("delay_ps_min").unwrap()
                 <= rows[0].req_f64("delay_ps_max").unwrap()
         );
+        // static-analysis aggregates ride along
+        assert!(rows[0].req_i64("exact_proven").unwrap() >= 0);
+        assert!(rows[0].req_f64("wce_bound_max").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn analyze_report_renders_canonically() {
+        let lib = LibrarySource::baseline();
+        let j = analyze_to_json(&lib, None).unwrap();
+        let s = j.to_string();
+        assert_eq!(Json::parse(&s).unwrap().to_string(), s, "fixed point");
+        assert_eq!(j.req_i64("total").unwrap() as usize, lib.len());
+        // the baseline set is entirely well-formed
+        assert_eq!(j.req_i64("wellformed").unwrap() as usize, lib.len());
+        let rows = j.req_arr("entries").unwrap();
+        assert_eq!(rows.len(), lib.len());
+        for r in rows {
+            assert!(r.req("wellformed").unwrap().as_bool().unwrap());
+            assert!(r.req_arr("violations").unwrap().is_empty());
+            // stored bound must dominate the measured (exhaustive) WCE
+            assert!(r.req_f64("wce_bound").unwrap() >= r.req_f64("wce").unwrap());
+            assert!(r.req_i64("active_gates").unwrap() > 0);
+        }
+        // id filter: one row for a real id, None for an unknown one
+        let id = rows[0].req_str("id").unwrap().to_string();
+        let one = analyze_to_json(&lib, Some(&id)).unwrap();
+        assert_eq!(one.req_i64("total").unwrap(), 1);
+        assert!(analyze_to_json(&lib, Some("mul8u_ZZZZ")).is_none());
     }
 
     #[test]
@@ -181,6 +276,8 @@ mod tests {
             max_accuracy_drop: 0.05,
             reference_accuracy: 0.7525,
             candidates: vec!["mul8u_0AB3".into()],
+            candidate_wce_bound_pct: vec![1.5],
+            candidate_exact_proven: vec![false],
             probe_multipliers: 1,
             probe_evals: 15,
             qor_fit_rmse: 0.002,

@@ -1,0 +1,293 @@
+//! Integration: the static-analysis subsystem (`circuit::analysis`).
+//!
+//! * **Soundness** — for every circuit with exhaustively measured error,
+//!   the provable bounds must dominate it: `wce_bound >= WCE`,
+//!   `mae_bound >= MAE`, `wce_floor <= WCE`, and `exact_proven` implies
+//!   a measured WCE of exactly zero. This is checked over the published
+//!   baseline set, exact generators, chaotic rewirings and a full evolved
+//!   campaign harvest.
+//! * **Width robustness** — the bound engine must be panic-free and keep
+//!   its invariants at 8/32/64/128-bit operand widths, where exhaustive
+//!   simulation is impossible and the bounds are the only ground truth.
+//! * **Ingest validation** — structurally invalid netlists must be
+//!   rejected with an error (never a downstream simulator panic) at every
+//!   external boundary: `Entry::from_json`, `Library::from_json_str`,
+//!   and the file-open path the CLI and server use.
+//! * **Pre-screen safety** — the CGP fitness pre-screen discards on the
+//!   provable *floor*, so it can never discard a feasible candidate; and
+//!   a campaign with the pre-screen enabled must stay byte-identical
+//!   across `--jobs` values.
+
+use evoapproxlib::cgp::{metric_floor, Metric};
+use evoapproxlib::circuit::baselines::{table2_baselines, truncated_multiplier};
+use evoapproxlib::circuit::generators::{ripple_carry_adder, wallace_multiplier};
+use evoapproxlib::circuit::{ArithFn, BoundEngine, CostModel, GateKind, Netlist};
+use evoapproxlib::library::{run_campaign, CampaignConfig, Entry, Library, LibrarySource, Origin};
+
+/// Measured-vs-proven invariants every characterised entry must satisfy.
+fn assert_sound(e: &Entry) {
+    assert!(
+        e.metrics.exhaustive,
+        "{}: soundness check needs exhaustive metrics",
+        e.id
+    );
+    assert!(
+        e.bounds.wce_bound >= e.metrics.wce,
+        "{}: wce_bound {} < measured WCE {}",
+        e.id,
+        e.bounds.wce_bound,
+        e.metrics.wce
+    );
+    assert!(
+        e.bounds.mae_bound >= e.metrics.mae,
+        "{}: mae_bound {} < measured MAE {}",
+        e.id,
+        e.bounds.mae_bound,
+        e.metrics.mae
+    );
+    assert!(
+        e.bounds.wce_floor <= e.metrics.wce,
+        "{}: wce_floor {} > measured WCE {}",
+        e.id,
+        e.bounds.wce_floor,
+        e.metrics.wce
+    );
+    if e.bounds.exact_proven {
+        assert_eq!(
+            e.metrics.wce, 0.0,
+            "{}: proven exact but measured WCE is nonzero",
+            e.id
+        );
+    }
+    // every metric floor must sit at or below its measured metric —
+    // this is exactly the property that makes the CGP pre-screen safe
+    for (m, measured) in [
+        (Metric::Wce, e.metrics.wce),
+        (Metric::Mae, e.metrics.mae),
+        (Metric::Mse, e.metrics.mse),
+        (Metric::Er, e.metrics.er),
+        (Metric::Mre, e.metrics.mre),
+        (Metric::Wcre, e.metrics.wcre),
+    ] {
+        assert!(
+            metric_floor(m, &e.bounds) <= measured,
+            "{}: {m:?} floor {} > measured {measured}",
+            e.id,
+            metric_floor(m, &e.bounds)
+        );
+    }
+}
+
+#[test]
+fn bounds_dominate_exhaustive_error_for_the_baseline_set() {
+    let model = CostModel::default();
+    let f = ArithFn::Mul { w: 8 };
+    let mut lossy = 0;
+    let mut checked = 0;
+    for n in table2_baselines() {
+        let origin = Origin::from_baseline_name(&n.name);
+        let e = Entry::characterise(n, f, &model, origin);
+        assert_sound(&e);
+        if e.metrics.wce > 0.0 {
+            lossy += 1;
+            // a lossy circuit must not be proven exact, and its bound
+            // must be non-vacuous enough to be finite
+            assert!(!e.bounds.exact_proven, "{}", e.id);
+            assert!(e.bounds.wce_bound.is_finite(), "{}", e.id);
+        }
+        checked += 1;
+    }
+    assert!(checked >= 5, "baseline set shrank to {checked}");
+    assert!(lossy >= 3, "baseline set has only {lossy} lossy circuits");
+
+    // the exact generators must be *proven* exact, not just measured so
+    let mul = Entry::characterise(
+        wallace_multiplier(8),
+        f,
+        &model,
+        Origin::Seed("wallace".into()),
+    );
+    assert!(mul.bounds.exact_proven && mul.bounds.wce_bound == 0.0);
+    let add = Entry::characterise(
+        ripple_carry_adder(8),
+        ArithFn::Add { w: 8 },
+        &model,
+        Origin::Seed("rca".into()),
+    );
+    assert!(add.bounds.exact_proven && add.bounds.wce_bound == 0.0);
+    assert_sound(&mul);
+    assert_sound(&add);
+}
+
+/// Deterministic xorshift for chaotic-rewiring generation.
+fn next_rand(s: &mut u64) -> u64 {
+    *s ^= *s << 13;
+    *s ^= *s >> 7;
+    *s ^= *s << 17;
+    *s
+}
+
+/// A structurally valid but functionally chaotic variant of `base`:
+/// random extra gates appended, random outputs rewired.
+fn chaotic_variant(base: &Netlist, seed: u64) -> Netlist {
+    let mut s = seed | 1;
+    let mut nl = base.clone();
+    let kinds = [
+        GateKind::And,
+        GateKind::Or,
+        GateKind::Xor,
+        GateKind::Nand,
+        GateKind::Nor,
+        GateKind::Xnor,
+    ];
+    for _ in 0..(next_rand(&mut s) % 24 + 4) {
+        let n = nl.n_signals();
+        let kind = kinds[(next_rand(&mut s) % kinds.len() as u64) as usize];
+        let a = (next_rand(&mut s) % n as u64) as u32;
+        let b = (next_rand(&mut s) % n as u64) as u32;
+        nl.push(kind, a, b);
+    }
+    let n = nl.n_signals();
+    for _ in 0..(next_rand(&mut s) % 4 + 1) {
+        let o = (next_rand(&mut s) % nl.outputs.len() as u64) as usize;
+        nl.outputs[o] = (next_rand(&mut s) % n as u64) as u32;
+    }
+    nl.name = format!("{}_chaos{seed:x}", base.name);
+    nl
+}
+
+#[test]
+fn bounds_stay_sound_on_chaotic_rewirings() {
+    let model = CostModel::default();
+    let f = ArithFn::Mul { w: 8 };
+    let base = wallace_multiplier(8);
+    for seed in 0..40u64 {
+        let nl = chaotic_variant(&base, 0x9E37_79B9 ^ seed);
+        let name = nl.name.clone();
+        let e = Entry::characterise(nl, f, &model, Origin::Seed(name));
+        assert_sound(&e);
+    }
+}
+
+#[test]
+fn bounds_stay_sound_on_an_evolved_harvest() {
+    let f = ArithFn::Mul { w: 4 };
+    let mut cfg = CampaignConfig::quick(f);
+    cfg.generations = 300;
+    cfg.targets_per_metric = 2;
+    cfg.metrics = vec![Metric::Mae, Metric::Wce];
+    let model = CostModel::default();
+    let mut lib = Library::new();
+    let added = run_campaign(&mut lib, &cfg, &model, None);
+    assert!(added > 0, "campaign produced no entries");
+    for e in lib.entries() {
+        assert_sound(e);
+    }
+}
+
+#[test]
+fn width_sweep_is_panic_free_and_keeps_the_invariants() {
+    let mut trunc_bounds = Vec::new();
+    for &w in &[8u32, 32, 64, 128] {
+        let f = ArithFn::mul(w).unwrap();
+        let max_out = (f.n_outputs() as f64).exp2() - 1.0;
+        let eng = BoundEngine::new(f);
+
+        // the exact generator is proven exact at every width
+        let b = eng.bounds(&wallace_multiplier(w)).expect("wallace bounds");
+        assert!(b.exact_proven && b.wce_bound == 0.0, "w={w}: {b:?}");
+
+        let fa = ArithFn::add(w).unwrap();
+        let ba = BoundEngine::new(fa)
+            .bounds(&ripple_carry_adder(w))
+            .expect("rca bounds");
+        assert!(ba.exact_proven && ba.wce_bound == 0.0, "w={w}: {ba:?}");
+
+        // a truncated multiplier is provably lossy, with sane bounds
+        let bt = eng
+            .bounds(&truncated_multiplier(w, w / 2))
+            .expect("truncated bounds");
+        assert!(!bt.exact_proven, "w={w}");
+        assert!(bt.wce_bound > 0.0 && bt.wce_bound.is_finite(), "w={w}");
+        assert!(bt.wce_floor <= bt.wce_bound, "w={w}: {bt:?}");
+        assert!(bt.mae_bound <= bt.wce_bound, "w={w}: {bt:?}");
+        assert!(bt.wce_bound <= max_out, "w={w}: bound above output range");
+        trunc_bounds.push(bt.wce_bound);
+    }
+    // truncating half the operand bits loses strictly more magnitude at
+    // every wider width — the provable bound must track that
+    for pair in trunc_bounds.windows(2) {
+        assert!(pair[1] > pair[0], "bounds not monotone: {trunc_bounds:?}");
+    }
+}
+
+#[test]
+fn malformed_netlists_are_rejected_at_every_ingest_boundary() {
+    let model = CostModel::default();
+    let f = ArithFn::Mul { w: 8 };
+    let good = Entry::characterise(
+        wallace_multiplier(8),
+        f,
+        &model,
+        Origin::Seed("wallace".into()),
+    );
+
+    // (a) output referencing a signal that does not exist
+    let mut bad = good.clone();
+    bad.netlist.outputs[0] = 1_000_000;
+    let err = Entry::from_json(&bad.to_json()).unwrap_err();
+    assert!(err.contains("invalid netlist"), "{err}");
+
+    // (b) topological-order violation: a gate reading its own output
+    let mut bad = good.clone();
+    bad.netlist.nodes[0].a = bad.netlist.n_inputs; // node 0 drives this id
+    let err = Entry::from_json(&bad.to_json()).unwrap_err();
+    assert!(err.contains("invalid netlist"), "{err}");
+
+    // (c) shape mismatch: wrong output count for the declared function
+    let mut bad = good.clone();
+    bad.netlist.outputs.pop();
+    let err = Entry::from_json(&bad.to_json()).unwrap_err();
+    assert!(err.contains("invalid netlist"), "{err}");
+
+    // (d) the library-level parser propagates the rejection
+    let mut lib = Library::new();
+    let mut bad = good.clone();
+    bad.netlist.outputs[0] = 1_000_000;
+    lib.insert(bad);
+    let text = lib.to_json().to_string();
+    assert!(Library::from_json_str(&text).is_err());
+
+    // (e) the file boundary (CLI `--lib`, server `--library`) errors
+    // instead of loading a store that would panic the simulator later
+    let dir = std::env::temp_dir().join("evoapprox_analysis_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("malformed.json");
+    std::fs::write(&path, text).unwrap();
+    assert!(LibrarySource::open(path.to_str().unwrap()).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn prescreen_campaign_is_jobs_invariant() {
+    let json_for = |jobs: usize| {
+        let f = ArithFn::Mul { w: 4 };
+        let mut cfg = CampaignConfig::quick(f);
+        cfg.generations = 300;
+        cfg.targets_per_metric = 2;
+        cfg.metrics = vec![Metric::Wce, Metric::Mae];
+        cfg.jobs = jobs;
+        cfg.prescreen = true;
+        let model = CostModel::default();
+        let mut lib = Library::new();
+        let added = run_campaign(&mut lib, &cfg, &model, None);
+        assert!(added > 0, "prescreened campaign must still harvest");
+        lib.to_json().to_string()
+    };
+    let serial = json_for(1);
+    let pooled = json_for(3);
+    assert_eq!(
+        serial, pooled,
+        "prescreen must keep the --jobs byte-identity contract"
+    );
+}

@@ -114,7 +114,7 @@ fn assert_logits_close(got: &[f32], want: &[f64], what: &str) {
         let argmax = |row: &[f64]| {
             row.iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap()
                 .0
         };

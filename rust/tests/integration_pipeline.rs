@@ -66,7 +66,7 @@ fn evolved_multipliers_run_through_accelerator() {
     // the mildest evolved multiplier must stay within 15 points of golden
     let mild = sel
         .iter()
-        .min_by(|a, b| a.metrics.mae.partial_cmp(&b.metrics.mae).unwrap())
+        .min_by(|a, b| a.metrics.mae.total_cmp(&b.metrics.mae))
         .unwrap();
     let lut = lut_for_entry(mild).unwrap();
     let acc = coord

@@ -1,0 +1,65 @@
+#!/usr/bin/env bash
+# Determinism lints — cheap textual rules that keep the repo's
+# byte-identical-output contracts (DESIGN.md §7, §12) from regressing.
+#
+# Rules:
+#   1. No `partial_cmp(..).unwrap()` anywhere under rust/. NaN-poisoned
+#      comparators panic at runtime and make sort orders input-dependent;
+#      floats must be ordered with `total_cmp` (see cgp/pareto.rs,
+#      dse/mod.rs for the idiom).
+#   2. No HashMap in modules whose output is contractually deterministic
+#      (JSON reports, library serialisation, CGP evolution, DSE). Iteration
+#      order of std HashMap is randomised per process; anything that feeds
+#      serialised or user-visible output must use BTreeMap or sorted Vecs.
+#      Keyed-lookup-only HashMaps are fine elsewhere (cli.rs flag table,
+#      store.rs/compiled.rs indexes, server caches) — the module list below is the
+#      set where *any* HashMap is one refactor away from leaking ordering
+#      into output.
+#   3. No same-line iteration of a HashMap (`HashMap ... .iter()/.keys()/
+#      .values()/.drain()`) anywhere — catches the declared-and-iterated-
+#      in-one-expression case the module allowlist cannot.
+#
+# Run from the repo root: `bash tools/lint.sh`. Exits non-zero with the
+# offending lines on any hit; silent success otherwise.
+
+set -u
+cd "$(dirname "$0")/.."
+
+fail=0
+
+hits=$(grep -rn --include='*.rs' 'partial_cmp([^)]*)[[:space:]]*\.[[:space:]]*unwrap()' rust/ || true)
+if [ -n "$hits" ]; then
+    echo "lint: partial_cmp().unwrap() is non-total and panics on NaN — use total_cmp:" >&2
+    echo "$hits" >&2
+    fail=1
+fi
+
+# modules with a byte-identical-output contract: no HashMap at all
+DETERMINISTIC_MODULES="
+rust/src/server/report.rs
+rust/src/library/entry.rs
+rust/src/library/source.rs
+rust/src/library/catalog.rs
+rust/src/cgp
+rust/src/dse
+"
+for m in $DETERMINISTIC_MODULES; do
+    hits=$(grep -rn --include='*.rs' 'HashMap' "$m" 2>/dev/null || true)
+    if [ -n "$hits" ]; then
+        echo "lint: HashMap in deterministic-output module $m — use BTreeMap or a sorted Vec:" >&2
+        echo "$hits" >&2
+        fail=1
+    fi
+done
+
+hits=$(grep -rn --include='*.rs' 'HashMap[^;]*\.\(iter\|keys\|values\|drain\|into_iter\)()' rust/ || true)
+if [ -n "$hits" ]; then
+    echo "lint: iterating a HashMap — iteration order is process-random; use BTreeMap:" >&2
+    echo "$hits" >&2
+    fail=1
+fi
+
+if [ "$fail" -ne 0 ]; then
+    exit 1
+fi
+echo "determinism lints: ok"
