@@ -1,0 +1,95 @@
+//! Observability overhead micro-benchmarks (DESIGN.md §13): the span
+//! recorder must be free when disabled and a rounding error when enabled,
+//! because it sits on the serve/campaign hot paths.
+//!
+//!   obs/span-disabled    — span create/drop with collection off (the
+//!                          default CLI state: one relaxed load per span)
+//!   obs/span-enabled     — span create/drop with collection on (two
+//!                          clock reads + one thread-local push)
+//!   obs/export-full-ring — a full 16 Ki ring rendered to Chrome
+//!                          trace-event JSON (`GET /debug/trace` worst case)
+//!   obs/forward-trace-*  — the native forward pass with tracing off vs
+//!                          on, spanned per batch exactly like the
+//!                          batcher's `engine-forward` span; the pair
+//!                          backs the ≤3% overhead budget in CI
+//!
+//! `cargo bench --bench obs [-- --quick] [-- --json BENCH_obs.json --label <snapshot>]`
+
+use evoapproxlib::data::dataset::{Dataset, DatasetConfig};
+use evoapproxlib::obs::trace;
+use evoapproxlib::runtime::native::{NativeEngine, SYNTHETIC_SEED};
+use evoapproxlib::runtime::{broadcast_lut, exact_lut};
+use evoapproxlib::util::bench::{bench, per_second, quick_mode, Recorder};
+
+fn main() {
+    let quick = quick_mode();
+    let mut rec = Recorder::new("obs");
+    let samples = if quick { 3 } else { 10 };
+    let spans_per_iter = 10_000u64;
+
+    // span create/drop, collection off — the state every CLI run is in
+    trace::enable(false);
+    let s = bench("obs/span-disabled (10k spans)", 1, samples, || {
+        for _ in 0..spans_per_iter {
+            std::hint::black_box(trace::span("bench", "noop"));
+        }
+    });
+    println!(
+        "  => {:.1} M spans/s",
+        per_second(spans_per_iter, s.median()) / 1e6
+    );
+    rec.record_throughput(&s, per_second(spans_per_iter, s.median()), "spans/s");
+
+    // span create/drop, collection on — what a serving process pays
+    trace::enable(true);
+    trace::clear();
+    let s = bench("obs/span-enabled (10k spans)", 1, samples, || {
+        for _ in 0..spans_per_iter {
+            std::hint::black_box(trace::span("bench", "noop"));
+        }
+    });
+    println!(
+        "  => {:.1} M spans/s",
+        per_second(spans_per_iter, s.median()) / 1e6
+    );
+    rec.record_throughput(&s, per_second(spans_per_iter, s.median()), "spans/s");
+
+    // the ring is saturated by the loop above: export it end to end
+    let s = bench("obs/export-full-ring", 1, samples, || {
+        std::hint::black_box(trace::export_since(0).to_string());
+    });
+    rec.record(&s);
+
+    // the acceptance pair: one native forward batch, bare vs spanned the
+    // way the batcher spans it (one `engine-forward` span per dispatch)
+    let batch = if quick { 8 } else { 32 };
+    let engine = NativeEngine::synthetic(8, 8, SYNTHETIC_SEED, batch);
+    let ds = Dataset::generate(&DatasetConfig {
+        n: batch,
+        seed: 42,
+        noise: 0.10,
+    });
+    let luts = broadcast_lut(&exact_lut(), engine.n_layers());
+
+    trace::enable(false);
+    let s_off = bench("obs/forward-trace-off", 1, samples, || {
+        std::hint::black_box(engine.forward(&ds.images, &luts).unwrap());
+    });
+    println!("  => {:.1} images/s", per_second(batch as u64, s_off.median()));
+    rec.record_throughput(&s_off, per_second(batch as u64, s_off.median()), "img/s");
+
+    trace::enable(true);
+    trace::clear();
+    let s_on = bench("obs/forward-trace-on", 1, samples, || {
+        let _span = trace::span("batcher", "engine-forward");
+        std::hint::black_box(engine.forward(&ds.images, &luts).unwrap());
+    });
+    println!("  => {:.1} images/s", per_second(batch as u64, s_on.median()));
+    rec.record_throughput(&s_on, per_second(batch as u64, s_on.median()), "img/s");
+
+    let overhead = s_on.median().as_secs_f64() / s_off.median().as_secs_f64() - 1.0;
+    println!("  tracing-on forward overhead: {:+.2}%", overhead * 100.0);
+    trace::enable(false);
+
+    rec.finish().expect("writing bench snapshot");
+}

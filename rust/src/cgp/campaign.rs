@@ -113,10 +113,32 @@ where
     T: Send,
     F: Fn(usize, I, &mut EvalScratch) -> T + Sync,
 {
+    map_parallel_progress(items, workers, None, work)
+}
+
+/// [`map_parallel`] with an optional [`Progress`] handle ticked once per
+/// delivered result. Ticks happen on the calling thread's in-order
+/// delivery path and only touch the handle's side-channel atomics — the
+/// results vector is byte-identical with or without a handle, for any
+/// worker count.
+pub fn map_parallel_progress<I, T, F>(
+    items: Vec<I>,
+    workers: usize,
+    progress: Option<&crate::obs::progress::Progress>,
+    work: F,
+) -> Vec<T>
+where
+    I: Send,
+    T: Send,
+    F: Fn(usize, I, &mut EvalScratch) -> T + Sync,
+{
     let mut out: Vec<T> = Vec::with_capacity(items.len());
     pool_run(items, workers, work, |i, result| {
         debug_assert_eq!(i, out.len(), "pool must deliver in order");
         out.push(result);
+        if let Some(p) = progress {
+            p.tick();
+        }
     });
     out
 }
@@ -181,6 +203,17 @@ mod tests {
             });
             assert_eq!(out, (0..25).map(|x| x * 2).collect::<Vec<_>>());
         }
+    }
+
+    #[test]
+    fn map_parallel_progress_ticks_per_delivery() {
+        use crate::obs::progress::Progress;
+        let p = Progress::new();
+        p.set_stage("map", 25);
+        let items: Vec<usize> = (0..25).collect();
+        let out = map_parallel_progress(items, 4, Some(&p), |_, x, _| x * 3);
+        assert_eq!(out, (0..25).map(|x| x * 3).collect::<Vec<_>>());
+        assert_eq!((p.completed(), p.total()), (25, 25));
     }
 
     #[test]

@@ -269,6 +269,10 @@ impl DemeState {
         scratch: &mut EvalScratch,
     ) {
         let bound = abort_bound(cfg);
+        // Sampled once per epoch: the per-generation mark below costs one
+        // branch when tracing is off and one ring write per 1024
+        // generations when it is on — never on the eval path itself.
+        let tracing = crate::obs::trace::enabled();
         let end = self.generation + gens;
         while self.generation < end {
             let gen = self.generation + 1;
@@ -320,6 +324,9 @@ impl DemeState {
                 }
             }
             self.generation = gen;
+            if tracing && gen % 1024 == 0 {
+                crate::obs::trace::instant("evolve", "generation-stride");
+            }
         }
     }
 
@@ -385,6 +392,9 @@ pub fn evolve_with(
     scratch: &mut EvalScratch,
 ) -> EvolveReport {
     assert_eq!(ctx.f, f, "evaluator target mismatch");
+    let _span = crate::obs::trace::span_arg("evolve", "evolve-run", "generations", || {
+        cfg.generations.to_string()
+    });
     let mut deme = DemeState::init(seed_netlist, cfg, cfg.seed, model, ctx, scratch);
     deme.run_epoch(cfg.generations, cfg, model, ctx, scratch);
     deme.finish()

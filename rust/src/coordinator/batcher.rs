@@ -287,7 +287,11 @@ fn dispatch(
         for p in &take {
             images.extend_from_slice(&p.image);
         }
+        let fwd = crate::obs::trace::span_arg("batcher", "engine-forward", "batch", || {
+            take.len().to_string()
+        });
         let preds = coord.predict(model, kernel, Arc::new(images), luts.clone());
+        drop(fwd);
         stats.batches += 1;
         stats.requests += take.len() as u64;
         *occupancy_sum += take.len() as f64 / max_batch as f64;

@@ -95,6 +95,31 @@ impl Histogram {
         let _ = writeln!(out, "{name}_count {}", self.count());
     }
 
+    /// [`Histogram::render_prometheus`] with extra label pairs (e.g.
+    /// `route="predict"`) merged into every `_bucket`/`_sum`/`_count`
+    /// line — the per-route request-duration export (DESIGN.md §13).
+    /// Emits no `# TYPE` header: one header covers all labelled series of
+    /// a name, so the caller writes it once before the first call.
+    pub fn render_prometheus_labeled(&self, name: &str, labels: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        for (bound, cum) in self.cumulative_buckets() {
+            match bound {
+                Some(us) => {
+                    let _ = writeln!(
+                        out,
+                        "{name}_bucket{{{labels},le=\"{}\"}} {cum}",
+                        us as f64 / 1e6
+                    );
+                }
+                None => {
+                    let _ = writeln!(out, "{name}_bucket{{{labels},le=\"+Inf\"}} {cum}");
+                }
+            }
+        }
+        let _ = writeln!(out, "{name}_sum{{{labels}}} {}", self.sum_us() as f64 / 1e6);
+        let _ = writeln!(out, "{name}_count{{{labels}}} {}", self.count());
+    }
+
     /// Approximate quantile (upper bucket bound).
     pub fn quantile_us(&self, q: f64) -> u64 {
         let total = self.count();
@@ -294,6 +319,20 @@ mod tests {
             .unwrap();
         let sum: f64 = sum_line.split_whitespace().nth(1).unwrap().parse().unwrap();
         assert!((sum - 200.00208).abs() < 1e-6, "sum {sum}");
+    }
+
+    #[test]
+    fn labeled_prometheus_rendering() {
+        let h = Histogram::default();
+        h.record(Duration::from_micros(80));
+        h.record(Duration::from_millis(2));
+        let mut out = String::new();
+        h.render_prometheus_labeled("route_seconds", "route=\"predict\"", &mut out);
+        assert!(!out.contains("# TYPE"), "labelled series carry no header");
+        assert!(out.contains("route_seconds_bucket{route=\"predict\",le=\"0.0001\"} 1"), "{out}");
+        assert!(out.contains("route_seconds_bucket{route=\"predict\",le=\"+Inf\"} 2"), "{out}");
+        assert!(out.contains("route_seconds_sum{route=\"predict\"} "), "{out}");
+        assert!(out.contains("route_seconds_count{route=\"predict\"} 2"), "{out}");
     }
 
     #[test]

@@ -41,13 +41,15 @@ use std::time::Instant;
 use anyhow::{anyhow, ensure, Result};
 
 use crate::accel::PowerModel;
-use crate::cgp::campaign::{default_workers, map_parallel};
+use crate::cgp::campaign::{default_workers, map_parallel_progress};
 use crate::cgp::pareto::non_dominated_indices;
 use crate::coordinator::{Coordinator, KernelKind};
 use crate::library::LibrarySource;
+use crate::obs::progress::Progress;
+use crate::obs::trace;
 use crate::resilience::cache::{EvalCache, EvalKey};
 use crate::resilience::{
-    per_layer_campaign_cached, standard_multipliers, Fig4Report, MultiplierSummary,
+    per_layer_campaign_progress, standard_multipliers, Fig4Report, MultiplierSummary,
 };
 use crate::runtime::{exact_lut, TestSet, LUT_LEN};
 
@@ -275,6 +277,21 @@ pub fn probe_stage(
     testset: &TestSet,
     cache: Option<&EvalCache>,
 ) -> Result<ProbeOutcome> {
+    probe_stage_progress(coord, cfg, mults, testset, cache, None)
+}
+
+/// [`probe_stage`] with an optional [`Progress`] handle: enters stage
+/// `probe` sized to the probe campaign's grid and ticks per delivered
+/// point (side-channel only — the outcome is byte-identical).
+pub fn probe_stage_progress(
+    coord: &Coordinator,
+    cfg: &DseConfig,
+    mults: &[MultiplierSummary],
+    testset: &TestSet,
+    cache: Option<&EvalCache>,
+    progress: Option<&Progress>,
+) -> Result<ProbeOutcome> {
+    let _span = trace::span("dse", "probe");
     ensure!(
         mults.len() >= 2,
         "DSE needs the exact reference plus at least one approximate candidate"
@@ -283,7 +300,7 @@ pub fn probe_stage(
     let probed = spread_indices(cands.len(), cfg.probe_multipliers.max(1));
     let mut roster = vec![mults[0].clone()];
     roster.extend(probed.iter().map(|&i| cands[i].clone()));
-    let fig4 = per_layer_campaign_cached(
+    let fig4 = per_layer_campaign_progress(
         coord,
         &cfg.model,
         &roster,
@@ -291,6 +308,8 @@ pub fn probe_stage(
         cfg.kernel,
         cfg.jobs,
         cache,
+        progress,
+        "probe",
     )?;
     let evals = fig4.points.len() + 1; // grid + the golden reference
     Ok(ProbeOutcome {
@@ -356,11 +375,25 @@ pub fn build_space(
 /// point, fanned over the deterministic job pool; results deduplicate in
 /// ladder order.
 pub fn search_stage(space: &SearchSpace, cfg: &DseConfig) -> SearchOutcome {
+    search_stage_progress(space, cfg, None)
+}
+
+/// [`search_stage`] with an optional [`Progress`] handle: enters stage
+/// `search` with one tick per budget-ladder point.
+pub fn search_stage_progress(
+    space: &SearchSpace,
+    cfg: &DseConfig,
+    progress: Option<&Progress>,
+) -> SearchOutcome {
+    let _span = trace::span("dse", "search");
     let points = cfg.budget_points.max(1);
+    if let Some(p) = progress {
+        p.set_stage("search", points as u64);
+    }
     let budgets: Vec<f64> = (0..points)
         .map(|i| cfg.max_accuracy_drop * (i + 1) as f64 / points as f64)
         .collect();
-    let results = map_parallel(budgets, cfg.jobs.max(1), |i, budget, _scratch| {
+    let results = map_parallel_progress(budgets, cfg.jobs.max(1), progress, |i, budget, _scratch| {
         let start = space.greedy(budget);
         space.local_search(
             start,
@@ -395,6 +428,23 @@ pub fn run_dse(
     testset: &TestSet,
     cache: &EvalCache,
 ) -> Result<DseReport> {
+    run_dse_progress(coord, lib, cfg, testset, cache, None)
+}
+
+/// [`run_dse`] with an optional [`Progress`] handle: the pipeline walks
+/// the stages `probe` → `fit` → `search` → `verify`, each sized to its
+/// own work-item count, so `GET /v1/jobs/{id}` shows live per-stage
+/// progress for DSE jobs. Progress and the `dse` trace spans are side
+/// channels; the report is byte-identical with them on or off (tested).
+pub fn run_dse_progress(
+    coord: &Coordinator,
+    lib: Option<&LibrarySource>,
+    cfg: &DseConfig,
+    testset: &TestSet,
+    cache: &EvalCache,
+    progress: Option<&Progress>,
+) -> Result<DseReport> {
+    let _span = trace::span_arg("dse", "run", "model", || cfg.model.clone());
     let t0 = Instant::now();
     ensure!(
         cfg.max_accuracy_drop.is_finite() && cfg.max_accuracy_drop >= 0.0,
@@ -418,15 +468,25 @@ pub fn run_dse(
     // counters below record *real* backend evaluations as cache-miss
     // deltas — best-effort attribution when runs share one cache.
     let probe_misses_before = cache.misses();
-    let probe = probe_stage(coord, cfg, &mults, testset, Some(cache))?;
+    let probe = probe_stage_progress(coord, cfg, &mults, testset, Some(cache), progress)?;
     let probe_real_evals = cache.misses().saturating_sub(probe_misses_before);
     let golden = probe.fig4.reference_accuracy;
-    let so = build_space(&probe, &mults, &pm);
+    let so = {
+        let _s = trace::span("dse", "fit");
+        if let Some(p) = progress {
+            p.set_stage("fit", 1);
+        }
+        let so = build_space(&probe, &mults, &pm);
+        if let Some(p) = progress {
+            p.tick();
+        }
+        so
+    };
     let cands = &mults[1..];
     let n_layers = so.space.n_layers();
 
     // stage 2: model-guided search over the budget ladder
-    let search = search_stage(&so.space, cfg);
+    let search = search_stage_progress(&so.space, cfg, progress);
 
     // stage 3: verify the predicted front + every uniform configuration
     let all_exact = vec![0usize; n_layers];
@@ -450,7 +510,12 @@ pub fn run_dse(
     let images = Arc::new(testset.images.clone());
     let exact = exact_lut();
     let verify_misses_before = cache.misses();
-    let accs = map_parallel(verify.clone(), cfg.jobs.max(1), |_, a, _scratch| {
+    let verify_span = trace::span("dse", "verify");
+    if let Some(p) = progress {
+        p.set_stage("verify", verify.len() as u64);
+    }
+    let accs = map_parallel_progress(verify.clone(), cfg.jobs.max(1), progress, |_, a, _scratch| {
+        let _s = trace::span("dse", "verify-eval");
         cache.get_or_compute(
             EvalKey::whole(&cfg.model, &assignment_key(&a, cands), testset.n),
             || {
@@ -464,6 +529,7 @@ pub fn run_dse(
             },
         )
     });
+    drop(verify_span);
     let verify_real_evals = cache.misses().saturating_sub(verify_misses_before);
     let mut verified = Vec::with_capacity(verify.len() + 1);
     verified.push(DsePoint {

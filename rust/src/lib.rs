@@ -70,6 +70,14 @@
 //!   `loadgen` bench (DESIGN.md §7, §11).
 //! * [`data`] — synthetic CIFAR-like dataset generation (shared, seeded
 //!   generator mirrored by `python/compile/data.py`).
+//! * [`obs`] — observability (DESIGN.md §13): per-thread span tracing
+//!   into a bounded ring buffer exported as Chrome trace-event JSON
+//!   (`GET /debug/trace`, `evoapprox trace dump`), a leveled JSON-lines
+//!   logger (`--log-level`/`EVOAPPROX_LOG`) replacing ad-hoc stderr
+//!   diagnostics, `X-Request-Id` correlation across router → shard →
+//!   job-worker hops, and live per-stage job progress (stage/completed/
+//!   total/ETA on `GET /v1/jobs/{id}`) — all off the data path, so the
+//!   byte-identity contracts hold with collection enabled.
 //!
 //! Python (JAX + Pallas) is used only at build time: `make artifacts` trains
 //! the ResNet family on the synthetic dataset and lowers the quantised
@@ -84,6 +92,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dse;
 pub mod library;
+pub mod obs;
 pub mod resilience;
 pub mod runtime;
 pub mod server;

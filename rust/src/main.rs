@@ -39,7 +39,14 @@
 //!                   # shard/replica router over N serve processes:
 //!                   # replicated predict/reads, model-sharded campaigns,
 //!                   # fleet-wide job ids and aggregated /metrics
+//! evoapprox trace dump [--addr 127.0.0.1:8080] [--since SEQ] [--out FILE]
+//!                   # pull a serve/fleet /debug/trace ring as Chrome
+//!                   # trace-event JSON (loadable in about://tracing)
 //! ```
+//!
+//! Every command takes `--log-level SPEC` (or `$EVOAPPROX_LOG`) for the
+//! structured JSON-lines diagnostics on stderr, and `$EVOAPPROX_TRACE=1`
+//! turns the in-process span recorder on for CLI runs.
 
 use evoapproxlib::cgp::{
     default_workers, evolve_islands, evolve_with, EvalContext, EvalScratch, EvolveConfig,
@@ -49,10 +56,16 @@ use evoapproxlib::circuit::cost::CostModel;
 use evoapproxlib::circuit::verify::{ArithFn, WIDE_SEARCH_MAX_VECTORS};
 use evoapproxlib::cli::{parse, render_help, Cli, CommandSpec, FlagSpec};
 use evoapproxlib::library::{run_campaign, CampaignConfig, Library, LibrarySource};
+use evoapproxlib::obs::log;
 use evoapproxlib::util::table::TextTable;
 
 const ABOUT: &str = "approximate-circuit library + DNN resilience analysis";
 
+const LOG_FLAG: FlagSpec = FlagSpec {
+    name: "log-level",
+    value: Some("SPEC"),
+    help: "stderr log threshold: error|warn|info|debug|trace, with target=level overrides (default $EVOAPPROX_LOG or info)",
+};
 const ARTIFACTS_FLAG: FlagSpec = FlagSpec {
     name: "artifacts",
     value: Some("DIR"),
@@ -80,6 +93,7 @@ const FIG4_FLAGS: &[FlagSpec] = &[
     ARTIFACTS_FLAG,
     BACKEND_FLAG,
     JOBS_FLAG,
+    LOG_FLAG,
     FlagSpec { name: "images", value: Some("N"), help: "test images (default 256)" },
     FlagSpec { name: "multipliers", value: Some("N"), help: "multipliers to sweep (default 8)" },
     FlagSpec { name: "model", value: Some("NAME"), help: "network (default resnet8)" },
@@ -89,7 +103,7 @@ const COMMANDS: &[CommandSpec] = &[
     CommandSpec {
         name: "info",
         about: "manifest + artifact inventory",
-        flags: &[ARTIFACTS_FLAG],
+        flags: &[ARTIFACTS_FLAG, LOG_FLAG],
     },
     CommandSpec {
         name: "evolve",
@@ -109,6 +123,7 @@ const COMMANDS: &[CommandSpec] = &[
             FlagSpec { name: "demes", value: Some("M"), help: "island-model demes; >1 enables migration (default 1)" },
             FlagSpec { name: "migration-interval", value: Some("G"), help: "generations between migrations (default 500)" },
             JOBS_FLAG,
+            LOG_FLAG,
             FlagSpec { name: "out", value: Some("FILE"), help: "save the harvested front as a library JSON" },
         ],
     },
@@ -124,6 +139,7 @@ const COMMANDS: &[CommandSpec] = &[
             FlagSpec { name: "seed", value: Some("N"), help: "campaign master seed" },
             FlagSpec { name: "prescreen", value: None, help: "discard mutants whose provable error floor exceeds the budget before simulating" },
             JOBS_FLAG,
+            LOG_FLAG,
         ],
     },
     CommandSpec {
@@ -133,6 +149,7 @@ const COMMANDS: &[CommandSpec] = &[
             LIB_FLAG,
             FlagSpec { name: "out", value: Some("FILE"), help: "output path (default: input with a .bin extension)" },
             FlagSpec { name: "check", value: None, help: "reopen the output and verify census + fronts match the source" },
+            LOG_FLAG,
         ],
     },
     CommandSpec {
@@ -141,12 +158,13 @@ const COMMANDS: &[CommandSpec] = &[
         flags: &[
             LIB_FLAG,
             FlagSpec { name: "id", value: Some("ID"), help: "analyse a single entry" },
+            LOG_FLAG,
         ],
     },
     CommandSpec {
         name: "census",
         about: "Table I counts from a library",
-        flags: &[LIB_FLAG],
+        flags: &[LIB_FLAG, LOG_FLAG],
     },
     CommandSpec {
         name: "select",
@@ -154,6 +172,7 @@ const COMMANDS: &[CommandSpec] = &[
         flags: &[
             LIB_FLAG,
             FlagSpec { name: "k", value: Some("N"), help: "circuits per metric front (default 10)" },
+            LOG_FLAG,
         ],
     },
     CommandSpec {
@@ -174,6 +193,7 @@ const COMMANDS: &[CommandSpec] = &[
             ARTIFACTS_FLAG,
             BACKEND_FLAG,
             JOBS_FLAG,
+            LOG_FLAG,
             FlagSpec { name: "images", value: Some("N"), help: "test images (default 256)" },
             FlagSpec { name: "multipliers", value: Some("N"), help: "multiplier rows (default 28)" },
             FlagSpec { name: "models", value: Some("LIST"), help: "comma-separated networks (default: all)" },
@@ -196,6 +216,7 @@ const COMMANDS: &[CommandSpec] = &[
             FlagSpec { name: "search-iters", value: Some("N"), help: "local-search proposals per budget point (default 400)" },
             FlagSpec { name: "seed", value: Some("N"), help: "search seed" },
             FlagSpec { name: "out", value: Some("FILE"), help: "write the JSON report" },
+            LOG_FLAG,
         ],
     },
     CommandSpec {
@@ -212,6 +233,7 @@ const COMMANDS: &[CommandSpec] = &[
             FlagSpec { name: "max-batch", value: Some("N"), help: "max images per dispatched batch (default 64)" },
             FlagSpec { name: "intra-jobs", value: Some("N"), help: "worker threads inside one native forward batch (default 1)" },
             FlagSpec { name: "addr-file", value: Some("FILE"), help: "write the bound address here once listening (fleet handshake)" },
+            LOG_FLAG,
         ],
     },
     CommandSpec {
@@ -227,6 +249,17 @@ const COMMANDS: &[CommandSpec] = &[
             FlagSpec { name: "workers", value: Some("N"), help: "worker flag forwarded to each shard (default 4)" },
             FlagSpec { name: "max-wait-ms", value: Some("MS"), help: "shard batching deadline (default 20)" },
             FlagSpec { name: "max-batch", value: Some("N"), help: "shard max images per batch (default 64)" },
+            LOG_FLAG,
+        ],
+    },
+    CommandSpec {
+        name: "trace dump",
+        about: "fetch a serve/fleet /debug/trace ring as Chrome trace-event JSON",
+        flags: &[
+            FlagSpec { name: "addr", value: Some("HOST:PORT"), help: "server or fleet router address (default 127.0.0.1:8080)" },
+            FlagSpec { name: "since", value: Some("SEQ"), help: "export spans after this cursor (default 0; pass `next` from the previous dump to tail)" },
+            FlagSpec { name: "out", value: Some("FILE"), help: "write the JSON here instead of stdout" },
+            LOG_FLAG,
         ],
     },
 ];
@@ -236,10 +269,23 @@ fn main() {
     let cli = match parse(COMMANDS, &args) {
         Ok(cli) => cli,
         Err(e) => {
-            eprintln!("error: {e}\n\n{}", render_help("evoapprox", ABOUT, COMMANDS));
+            log::error("cli", format!("{e}"));
+            print!("{}", render_help("evoapprox", ABOUT, COMMANDS));
             std::process::exit(2);
         }
     };
+    if let Err(e) = log::init(cli.get("log-level")) {
+        log::error("cli", e);
+        std::process::exit(2);
+    }
+    // CLI runs keep the span recorder off unless asked for: tracing is a
+    // side channel and `$EVOAPPROX_TRACE=1` is the opt-in
+    if std::env::var("EVOAPPROX_TRACE").map_or(false, |v| {
+        let v = v.trim();
+        !v.is_empty() && v != "0"
+    }) {
+        evoapproxlib::obs::trace::enable(true);
+    }
     let r = match cli.command.as_str() {
         "info" => cmd_info(&cli),
         "evolve" => cmd_evolve(&cli),
@@ -253,13 +299,14 @@ fn main() {
         "dse" => cmd_dse(&cli),
         "serve" => cmd_serve(&cli),
         "fleet" => cmd_fleet(&cli),
+        "trace dump" => cmd_trace_dump(&cli),
         _ => {
             print!("{}", render_help("evoapprox", ABOUT, COMMANDS));
             Ok(())
         }
     };
     if let Err(e) = r {
-        eprintln!("error: {e:#}");
+        log::error("cli", format!("{e:#}"));
         std::process::exit(1);
     }
 }
@@ -372,9 +419,10 @@ fn cmd_evolve(cli: &Cli) -> anyhow::Result<()> {
         evolve_islands(&seeds[0], f, &cfg, &isl, &model, &ctx)
     } else {
         if cli.has("jobs") {
-            eprintln!(
-                "note: --jobs only parallelises multi-deme runs; a single (1+λ) \
-                 run is inherently serial — pass --demes N to use workers"
+            log::warn(
+                "evolve",
+                "--jobs only parallelises multi-deme runs; a single (1+λ) \
+                 run is inherently serial — pass --demes N to use workers",
             );
         }
         println!(
@@ -651,7 +699,10 @@ fn analysis_setup(
     let testset = match coord.manifest().load_testset(&dir) {
         Ok(ts) => ts.truncated(n_images),
         Err(e) if coord.backend() == Backend::Native => {
-            eprintln!("note: no exported test set ({e:#}); using the synthetic split");
+            log::warn(
+                "analysis",
+                format!("no exported test set ({e:#}); using the synthetic split"),
+            );
             evoapproxlib::runtime::manifest::TestSet::synthetic(n_images)
         }
         Err(e) => return Err(e),
@@ -703,7 +754,7 @@ fn cmd_fig4(cli: &Cli) -> anyhow::Result<()> {
         ]);
     }
     print!("{}", t.render());
-    println!("{:#?}", coord.metrics());
+    log::debug("metrics", format!("{:?}", coord.metrics()));
     coord.shutdown();
     Ok(())
 }
@@ -773,7 +824,7 @@ fn cmd_table2(cli: &Cli) -> anyhow::Result<()> {
         t.row(cells);
     }
     print!("{}", t.render());
-    println!("{:#?}", coord.metrics());
+    log::debug("metrics", format!("{:?}", coord.metrics()));
     coord.shutdown();
     Ok(())
 }
@@ -790,7 +841,10 @@ fn cmd_dse(cli: &Cli) -> anyhow::Result<()> {
     let testset = match coord.manifest().load_testset(&dir) {
         Ok(ts) => ts.truncated(n_images),
         Err(e) if coord.backend() == Backend::Native => {
-            eprintln!("note: no exported test set ({e:#}); using the synthetic split");
+            log::warn(
+                "dse",
+                format!("no exported test set ({e:#}); using the synthetic split"),
+            );
             evoapproxlib::runtime::manifest::TestSet::synthetic(n_images)
         }
         Err(e) => return Err(e),
@@ -870,7 +924,7 @@ fn cmd_dse(cli: &Cli) -> anyhow::Result<()> {
         std::fs::write(out, evoapproxlib::server::report::dse_to_json(&report).to_string())?;
         println!("report JSON → {out}");
     }
-    println!("{:#?}", coord.metrics());
+    log::debug("metrics", format!("{:?}", coord.metrics()));
     coord.shutdown();
     Ok(())
 }
@@ -939,8 +993,29 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
         report.batcher.mean_occupancy,
         report.campaign_jobs
     );
-    println!("{:#?}", coord.metrics());
+    log::debug("metrics", format!("{:?}", coord.metrics()));
     coord.shutdown();
+    Ok(())
+}
+
+fn cmd_trace_dump(cli: &Cli) -> anyhow::Result<()> {
+    let addr = cli.flag_str("addr", "127.0.0.1:8080");
+    let since: u64 = cli.flag("since", 0u64)?;
+    let (status, body) =
+        evoapproxlib::server::http::get(&addr, &format!("/debug/trace?since={since}"))?;
+    anyhow::ensure!(status == 200, "GET /debug/trace returned {status}: {body}");
+    match cli.get("out") {
+        Some(out) => {
+            std::fs::write(out, &body)?;
+            let spans = evoapproxlib::util::json::Json::parse(&body)
+                .ok()
+                .and_then(|j| j.get("traceEvents").and_then(|t| t.as_arr().map(<[_]>::len)))
+                .unwrap_or(0);
+            println!("{spans} trace events → {out} (load in about://tracing)");
+        }
+        // the dump itself is the result: raw JSON on stdout, pipeable
+        None => println!("{body}"),
+    }
     Ok(())
 }
 

@@ -1,0 +1,246 @@
+//! Leveled JSON-lines logging (DESIGN.md §13).
+//!
+//! One line per event on **stderr** — stdout stays reserved for
+//! user-facing CLI result output (tables, reports, saved-file notices).
+//! Each line is a compact JSON object:
+//!
+//! ```text
+//! {"level":"info","msg":"listening","request_id":"ab12-3","target":"serve","ts_ms":1765432100123}
+//! ```
+//!
+//! The level threshold comes from `--log-level` (any command) or the
+//! `EVOAPPROX_LOG` environment variable; the spec is a global level
+//! optionally followed by `target=level` overrides, e.g.
+//! `info,fleet=debug,dse=warn`. Overrides match by target prefix
+//! (`fleet` matches `fleet.shard`). Lines carry the current thread's
+//! request id (see [`crate::obs::request_scope`]) so one id links a
+//! request's logs across router, shard and job-worker processes.
+//!
+//! Levels are ordered `error < warn < info < debug < trace`; the
+//! default threshold is `info`. `off` silences everything.
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// The command/request failed or will misbehave.
+    Error = 1,
+    /// Suspicious but recoverable.
+    Warn = 2,
+    /// Lifecycle diagnostics (default threshold).
+    Info = 3,
+    /// Per-stage/per-connection detail.
+    Debug = 4,
+    /// Per-item firehose.
+    Trace = 5,
+}
+
+impl Level {
+    /// Parse a level name (case-insensitive). `off` is represented as
+    /// `None` by [`init`]; it is not a `Level`.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    /// Canonical lower-case name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+}
+
+const DEFAULT_MAX: u8 = Level::Info as u8;
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(DEFAULT_MAX);
+static FILTERS: Mutex<Vec<(String, u8)>> = Mutex::new(Vec::new());
+
+/// Configure the logger from a spec string (see module docs); `None`
+/// falls back to `$EVOAPPROX_LOG`, then to the `info` default. Unknown
+/// level names in the spec are an error (a typo'd `--log-level` must
+/// not silently log at the default).
+pub fn init(spec: Option<&str>) -> Result<(), String> {
+    let owned = match spec {
+        Some(s) => s.to_string(),
+        None => match std::env::var("EVOAPPROX_LOG") {
+            Ok(v) if !v.trim().is_empty() => v,
+            _ => {
+                MAX_LEVEL.store(DEFAULT_MAX, Ordering::Relaxed);
+                *lock_filters() = Vec::new();
+                return Ok(());
+            }
+        },
+    };
+    let mut global = DEFAULT_MAX;
+    let mut filters: Vec<(String, u8)> = Vec::new();
+    for part in owned.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let parse_one = |s: &str| -> Result<u8, String> {
+            if s.eq_ignore_ascii_case("off") {
+                return Ok(0);
+            }
+            Level::parse(s)
+                .map(|l| l as u8)
+                .ok_or_else(|| format!("unknown log level `{s}` in `{owned}`"))
+        };
+        match part.split_once('=') {
+            Some((target, level)) => {
+                filters.push((target.trim().to_string(), parse_one(level)?));
+            }
+            None => global = parse_one(part)?,
+        }
+    }
+    MAX_LEVEL.store(global, Ordering::Relaxed);
+    *lock_filters() = filters;
+    Ok(())
+}
+
+fn lock_filters() -> std::sync::MutexGuard<'static, Vec<(String, u8)>> {
+    FILTERS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Would a line at `level` for `target` be emitted?
+pub fn enabled(level: Level, target: &str) -> bool {
+    let mut max = MAX_LEVEL.load(Ordering::Relaxed);
+    {
+        let filters = lock_filters();
+        // longest (most specific) matching prefix wins
+        let mut best = 0usize;
+        for (prefix, lvl) in filters.iter() {
+            if target.starts_with(prefix.as_str()) && prefix.len() >= best {
+                best = prefix.len();
+                max = *lvl;
+            }
+        }
+    }
+    level as u8 <= max
+}
+
+/// Emit one structured line (no-op below the threshold).
+pub fn log(level: Level, target: &str, msg: &str) {
+    if !enabled(level, target) {
+        return;
+    }
+    let ts_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0);
+    let mut fields: Vec<(&'static str, Json)> = vec![
+        ("level", Json::from(level.as_str())),
+        ("msg", Json::from(msg)),
+        ("target", Json::from(target)),
+        ("ts_ms", Json::from(ts_ms as i64)),
+    ];
+    if let Some(rid) = super::current_request_id() {
+        fields.push(("request_id", Json::from(rid)));
+    }
+    let line = Json::obj(fields).to_string();
+    // one locked write per line — lines from concurrent threads interleave
+    // whole, never mid-line
+    let stderr = std::io::stderr();
+    let mut out = stderr.lock();
+    let _ = writeln!(out, "{line}");
+}
+
+/// Log at [`Level::Error`].
+pub fn error(target: &str, msg: impl AsRef<str>) {
+    log(Level::Error, target, msg.as_ref());
+}
+
+/// Log at [`Level::Warn`].
+pub fn warn(target: &str, msg: impl AsRef<str>) {
+    log(Level::Warn, target, msg.as_ref());
+}
+
+/// Log at [`Level::Info`].
+pub fn info(target: &str, msg: impl AsRef<str>) {
+    log(Level::Info, target, msg.as_ref());
+}
+
+/// Log at [`Level::Debug`].
+pub fn debug(target: &str, msg: impl AsRef<str>) {
+    log(Level::Debug, target, msg.as_ref());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Logger config is process-global; tests that change it serialise on
+    // this lock and restore the default before releasing it.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn with_spec<R>(spec: Option<&str>, f: impl FnOnce() -> R) -> R {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        init(spec).expect("valid spec");
+        let r = f();
+        MAX_LEVEL.store(DEFAULT_MAX, Ordering::Relaxed);
+        *lock_filters() = Vec::new();
+        r
+    }
+
+    #[test]
+    fn level_ordering_and_parse() {
+        assert!(Level::Error < Level::Trace);
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+        assert_eq!(Level::Debug.as_str(), "debug");
+    }
+
+    #[test]
+    fn default_threshold_is_info() {
+        with_spec(Some("info"), || {
+            assert!(enabled(Level::Error, "any"));
+            assert!(enabled(Level::Info, "any"));
+            assert!(!enabled(Level::Debug, "any"));
+        });
+    }
+
+    #[test]
+    fn target_filters_override_by_longest_prefix() {
+        with_spec(Some("warn,fleet=debug,fleet.shard=error"), || {
+            assert!(!enabled(Level::Info, "serve"), "global warn");
+            assert!(enabled(Level::Debug, "fleet"), "fleet override");
+            assert!(enabled(Level::Debug, "fleet.router"), "prefix match");
+            assert!(!enabled(Level::Warn, "fleet.shard"), "most specific wins");
+            assert!(enabled(Level::Error, "fleet.shard"));
+        });
+    }
+
+    #[test]
+    fn off_silences_everything() {
+        with_spec(Some("off"), || {
+            assert!(!enabled(Level::Error, "any"));
+        });
+        with_spec(Some("info,noisy=off"), || {
+            assert!(!enabled(Level::Error, "noisy"));
+            assert!(enabled(Level::Info, "other"));
+        });
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let _g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(init(Some("verbose")).is_err());
+        assert!(init(Some("info,x=loud")).is_err());
+        // state restored for other tests
+        MAX_LEVEL.store(DEFAULT_MAX, Ordering::Relaxed);
+        *lock_filters() = Vec::new();
+    }
+}

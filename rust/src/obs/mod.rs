@@ -1,0 +1,141 @@
+//! Observability: span tracing, structured logging, request correlation
+//! and live job progress (DESIGN.md §13).
+//!
+//! Three pillars, all std-only and all **off the data path**:
+//!
+//! * [`trace`] — a per-thread span recorder draining into one bounded
+//!   global ring buffer, exported as Chrome trace-event JSON
+//!   (`GET /debug/trace?since=`, `evoapprox trace dump`). Collection is
+//!   gated on a single relaxed atomic: when disabled a span is a `None`
+//!   and costs one load; when enabled, spans record wall-clock timing
+//!   into the side ring and never touch the values a pipeline computes,
+//!   so every byte-identity contract (jobs-1 ≡ jobs-N, HTTP ≡
+//!   in-process) holds with collection on.
+//! * [`log`] — a leveled JSON-lines logger on stderr
+//!   (`--log-level`/`EVOAPPROX_LOG`, per-target filtering) that replaces
+//!   the ad-hoc `eprintln!`/`println!` diagnostics; user-facing CLI
+//!   result output stays on stdout, untouched.
+//! * [`progress`] — a cheap shared [`progress::Progress`] handle the
+//!   campaign pool and the DSE stage driver tick as grid points complete,
+//!   surfaced live through `GET /v1/jobs/{id}` (stage, completed, total,
+//!   ETA) on both a single `serve` and through the fleet's remapped
+//!   job-id space.
+//!
+//! Request correlation ties the pillars together: the fleet router (or
+//! the shard server, for direct requests) assigns every request an
+//! `X-Request-Id`, the id rides a thread-local scope across the handler,
+//! into JobStore entries and job worker threads, and every span and log
+//! line stamps it — one id follows a request across processes.
+
+pub mod log;
+pub mod progress;
+pub mod trace;
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+thread_local! {
+    static REQUEST_ID: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+/// The request id attached to the current thread, if any.
+pub fn current_request_id() -> Option<String> {
+    REQUEST_ID.with(|r| r.borrow().clone())
+}
+
+/// Attach `id` to the current thread for the lifetime of the returned
+/// guard; the previous id (usually `None`) is restored on drop. Spans
+/// and log lines emitted while the guard lives carry the id.
+pub fn request_scope(id: Option<String>) -> RequestIdGuard {
+    let prev = REQUEST_ID.with(|r| r.replace(id));
+    RequestIdGuard { prev }
+}
+
+/// Restores the previously attached request id when dropped.
+pub struct RequestIdGuard {
+    prev: Option<String>,
+}
+
+impl Drop for RequestIdGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        REQUEST_ID.with(|r| *r.borrow_mut() = prev);
+    }
+}
+
+/// Generate a fresh request id: a per-process random-ish prefix (pid
+/// mixed with the process start instant, FNV-1a) plus a monotonic
+/// counter — unique within a fleet (distinct pids → distinct prefixes)
+/// without any global coordination.
+pub fn new_request_id() -> String {
+    static PREFIX: OnceLock<u64> = OnceLock::new();
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let prefix = *PREFIX.get_or_init(|| {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos() as u64 ^ d.as_secs())
+            .unwrap_or(0);
+        for b in std::process::id()
+            .to_le_bytes()
+            .iter()
+            .chain(nanos.to_le_bytes().iter())
+        {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    });
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    format!("{:08x}-{n:06x}", prefix as u32 as u64 ^ (prefix >> 32))
+}
+
+/// `true` iff `id` looks like a sane request id a client handed us —
+/// bounded length, printable ASCII, no header-splitting characters. Ids
+/// failing this are replaced rather than echoed back.
+pub fn valid_request_id(id: &str) -> bool {
+    !id.is_empty()
+        && id.len() <= 64
+        && id
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_' || b == b'.')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_ids_are_unique_and_valid() {
+        let a = new_request_id();
+        let b = new_request_id();
+        assert_ne!(a, b);
+        assert!(valid_request_id(&a), "{a}");
+        assert!(valid_request_id(&b), "{b}");
+    }
+
+    #[test]
+    fn request_scope_nests_and_restores() {
+        assert_eq!(current_request_id(), None);
+        {
+            let _outer = request_scope(Some("outer-1".into()));
+            assert_eq!(current_request_id().as_deref(), Some("outer-1"));
+            {
+                let _inner = request_scope(Some("inner-2".into()));
+                assert_eq!(current_request_id().as_deref(), Some("inner-2"));
+            }
+            assert_eq!(current_request_id().as_deref(), Some("outer-1"));
+        }
+        assert_eq!(current_request_id(), None);
+    }
+
+    #[test]
+    fn request_id_validation() {
+        assert!(valid_request_id("abc-123_X.y"));
+        assert!(!valid_request_id(""));
+        assert!(!valid_request_id("bad id"));
+        assert!(!valid_request_id("x\r\ny"));
+        assert!(!valid_request_id(&"a".repeat(65)));
+    }
+}

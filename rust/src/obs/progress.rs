@@ -1,0 +1,204 @@
+//! Live job progress (DESIGN.md §13).
+//!
+//! A [`Progress`] handle is a cheap `Arc` the job owner (the server's
+//! `JobStore`, or a CLI command) creates and the pipeline ticks as grid
+//! points complete. Stages partition a job's life (`probe` → `fit` →
+//! `search` → `verify` for DSE; `layer-campaign` for Fig. 4 jobs);
+//! within a stage `completed` climbs monotonically to `total`, and a
+//! lifetime `ticks` counter never resets, so pollers can assert
+//! monotonic progress across stage boundaries too.
+//!
+//! The handle is pure side-channel state: ticking happens on the pool's
+//! in-order delivery path (or on worker threads), writes are relaxed
+//! atomics and nothing downstream reads them, so enabling progress
+//! cannot perturb a single output byte.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+#[derive(Debug)]
+struct StageInfo {
+    name: String,
+    started: Instant,
+}
+
+#[derive(Debug)]
+struct Inner {
+    stage: Mutex<StageInfo>,
+    completed: AtomicU64,
+    total: AtomicU64,
+    ticks: AtomicU64,
+    started_at_ms: u64,
+}
+
+/// Shared, clonable progress state for one job.
+#[derive(Debug, Clone)]
+pub struct Progress {
+    inner: Arc<Inner>,
+}
+
+impl Default for Progress {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Progress {
+    /// A fresh handle in stage `"queued"` with zero totals.
+    pub fn new() -> Progress {
+        let started_at_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        Progress {
+            inner: Arc::new(Inner {
+                stage: Mutex::new(StageInfo { name: "queued".into(), started: Instant::now() }),
+                completed: AtomicU64::new(0),
+                total: AtomicU64::new(0),
+                ticks: AtomicU64::new(0),
+                started_at_ms,
+            }),
+        }
+    }
+
+    /// Enter a named stage expecting `total` work items; `completed`
+    /// resets to 0 (the lifetime `ticks` counter does not).
+    pub fn set_stage(&self, name: &str, total: u64) {
+        {
+            let mut s = self.inner.stage.lock().unwrap_or_else(|e| e.into_inner());
+            s.name.clear();
+            s.name.push_str(name);
+            s.started = Instant::now();
+        }
+        self.inner.completed.store(0, Ordering::Relaxed);
+        self.inner.total.store(total, Ordering::Relaxed);
+    }
+
+    /// Record one completed work item.
+    pub fn tick(&self) {
+        self.inner.completed.fetch_add(1, Ordering::Relaxed);
+        self.inner.ticks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Force `completed == total` (the job owner calls this when the job
+    /// reaches a terminal state, so pollers always observe a full bar).
+    pub fn finish(&self) {
+        let total = self.inner.total.load(Ordering::Relaxed);
+        self.inner.completed.store(total, Ordering::Relaxed);
+    }
+
+    /// Completed items in the current stage.
+    pub fn completed(&self) -> u64 {
+        self.inner.completed.load(Ordering::Relaxed)
+    }
+
+    /// Expected items in the current stage.
+    pub fn total(&self) -> u64 {
+        self.inner.total.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime tick count (monotonic across stage transitions).
+    pub fn ticks(&self) -> u64 {
+        self.inner.ticks.load(Ordering::Relaxed)
+    }
+
+    /// Current stage name.
+    pub fn stage(&self) -> String {
+        self.inner
+            .stage
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .name
+            .clone()
+    }
+
+    /// Snapshot as the JSON object `GET /v1/jobs/{id}` embeds:
+    /// `{stage, completed, total, ticks, eta_ms, started_at, elapsed_ms}`.
+    /// `eta_ms` linearly extrapolates the current stage's rate and is
+    /// `null` until the stage completes its first item (or when idle).
+    pub fn to_json(&self) -> Json {
+        let (stage, stage_elapsed) = {
+            let s = self.inner.stage.lock().unwrap_or_else(|e| e.into_inner());
+            (s.name.clone(), s.started.elapsed())
+        };
+        let completed = self.completed();
+        let total = self.total();
+        let eta_ms = if completed > 0 && total > completed {
+            let per_item_ms = stage_elapsed.as_millis() as f64 / completed as f64;
+            Json::from((per_item_ms * (total - completed) as f64) as i64)
+        } else {
+            Json::Null
+        };
+        Json::obj([
+            ("stage", Json::from(stage)),
+            ("completed", Json::from(completed as i64)),
+            ("total", Json::from(total as i64)),
+            ("ticks", Json::from(self.ticks() as i64)),
+            ("eta_ms", eta_ms),
+            ("started_at", Json::from(self.inner.started_at_ms as i64)),
+            ("elapsed_ms", Json::from(stage_elapsed.as_millis() as i64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stages_reset_completed_but_not_ticks() {
+        let p = Progress::new();
+        assert_eq!(p.stage(), "queued");
+        p.set_stage("probe", 3);
+        p.tick();
+        p.tick();
+        assert_eq!((p.completed(), p.total(), p.ticks()), (2, 3, 2));
+        p.set_stage("verify", 5);
+        assert_eq!((p.completed(), p.total(), p.ticks()), (0, 5, 2));
+        p.tick();
+        assert_eq!((p.completed(), p.ticks()), (1, 3));
+    }
+
+    #[test]
+    fn finish_fills_the_bar() {
+        let p = Progress::new();
+        p.set_stage("verify", 7);
+        p.tick();
+        p.finish();
+        assert_eq!(p.completed(), 7);
+    }
+
+    #[test]
+    fn json_snapshot_shape_and_eta() {
+        let p = Progress::new();
+        p.set_stage("search", 4);
+        let j = p.to_json();
+        assert_eq!(j.get("stage").and_then(Json::as_str), Some("search"));
+        assert_eq!(j.get("completed").and_then(Json::as_i64), Some(0));
+        assert_eq!(j.get("total").and_then(Json::as_i64), Some(4));
+        // no items done yet → no ETA
+        assert!(matches!(j.get("eta_ms"), Some(Json::Null)));
+        assert!(j.get("started_at").and_then(Json::as_i64).unwrap() > 0);
+        p.tick();
+        p.tick();
+        let j = p.to_json();
+        // 2 of 4 done → a (possibly zero) finite ETA
+        assert!(j.get("eta_ms").and_then(Json::as_i64).is_some());
+        p.finish();
+        let j = p.to_json();
+        assert_eq!(j.get("completed").and_then(Json::as_i64), Some(4));
+        assert!(matches!(j.get("eta_ms"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let p = Progress::new();
+        let q = p.clone();
+        p.set_stage("probe", 2);
+        q.tick();
+        assert_eq!(p.completed(), 1);
+    }
+}

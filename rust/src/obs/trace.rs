@@ -1,0 +1,435 @@
+//! Span tracing: per-thread recorders draining into one bounded global
+//! ring buffer, exported as Chrome trace-event JSON (DESIGN.md §13).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero-cost when disabled.** [`span`] starts with one relaxed
+//!    atomic load; disabled it returns an inert guard (`start: None`)
+//!    whose drop is a no-op. No clock is read, nothing allocates.
+//! 2. **No output perturbation.** Spans record wall-clock timing into a
+//!    side ring; they never touch the values a pipeline computes, so
+//!    byte-identity contracts hold with collection enabled.
+//! 3. **Bounded memory.** Completed spans buffer in a small per-thread
+//!    `Vec` (one uncontended push per span) and drain into the global
+//!    ring when the thread's outermost span closes or the buffer fills;
+//!    the ring holds [`RING_CAPACITY`] events, dropping the *oldest* on
+//!    overflow (recent history wins) and counting drops.
+//!
+//! Every event gets a process-wide monotonic sequence number, which is
+//! the `since=` cursor of `GET /debug/trace`: clients poll with the
+//! `next` value of the previous export and only ever pay for new events.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Global ring capacity in events. At ~100 events per campaign job this
+/// holds minutes of history; the export cursor makes overflow a loss of
+/// old (already-exported) history, not of live data.
+pub const RING_CAPACITY: usize = 16_384;
+
+/// Per-thread buffer drains into the ring at this many pending events
+/// even if a long-running outer span is still open.
+const LOCAL_FLUSH: usize = 32;
+
+/// Chrome trace-event phase of an event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// A complete span with a start timestamp and a duration (`"X"`).
+    Complete,
+    /// A zero-duration instant marker (`"i"`).
+    Instant,
+}
+
+/// One recorded event.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    /// Process-wide monotonic sequence number (the export cursor).
+    pub seq: u64,
+    /// Span name (static so recording never allocates for it).
+    pub name: &'static str,
+    /// Category (`http`, `fleet`, `campaign`, `dse`, `cgp`, `engine`, `job`).
+    pub cat: &'static str,
+    /// Phase of the event.
+    pub ph: Phase,
+    /// Start timestamp, µs since the collector epoch.
+    pub ts_us: u64,
+    /// Duration in µs (0 for instants).
+    pub dur_us: u64,
+    /// Recording thread (small dense ids, assigned per thread).
+    pub tid: u64,
+    /// Request id attached to the recording thread, if any.
+    pub request_id: Option<String>,
+    /// Optional single `key: value` argument.
+    pub arg: Option<(&'static str, String)>,
+}
+
+struct Collector {
+    ring: Mutex<VecDeque<SpanEvent>>,
+    dropped: AtomicU64,
+    seq: AtomicU64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+fn collector() -> &'static Collector {
+    static C: OnceLock<Collector> = OnceLock::new();
+    C.get_or_init(|| Collector {
+        ring: Mutex::new(VecDeque::with_capacity(RING_CAPACITY)),
+        dropped: AtomicU64::new(0),
+        seq: AtomicU64::new(0),
+    })
+}
+
+/// The collector's time origin; all `ts_us` values are relative to it.
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+thread_local! {
+    static LOCAL: RefCell<Vec<SpanEvent>> = const { RefCell::new(Vec::new()) };
+    static DEPTH: Cell<usize> = const { Cell::new(0) };
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+fn tid() -> u64 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        t.set(v);
+        v
+    })
+}
+
+/// Turn collection on or off. Pins the time epoch on first enable so
+/// timestamps are comparable across the whole process lifetime.
+pub fn enable(on: bool) {
+    if on {
+        let _ = epoch();
+    }
+    ENABLED.store(on, Ordering::Release);
+}
+
+/// The fast-path gate: one relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Events evicted from the ring so far.
+pub fn dropped() -> u64 {
+    collector().dropped.load(Ordering::Relaxed)
+}
+
+/// Events currently resident in the ring (post-flush; for tests/metrics).
+pub fn ring_len() -> usize {
+    collector().ring.lock().expect("trace ring poisoned").len()
+}
+
+/// Start a span. When collection is disabled this is one atomic load and
+/// an inert guard; when enabled, the span records a [`Phase::Complete`]
+/// event on drop.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    if !enabled() {
+        return Span { start: None, cat, name, arg: None };
+    }
+    span_slow(cat, name, None)
+}
+
+/// [`span`] with one `key: value` argument; `value` is only invoked (and
+/// its `String` only built) when collection is enabled.
+#[inline]
+pub fn span_arg(
+    cat: &'static str,
+    name: &'static str,
+    key: &'static str,
+    value: impl FnOnce() -> String,
+) -> Span {
+    if !enabled() {
+        return Span { start: None, cat, name, arg: None };
+    }
+    span_slow(cat, name, Some((key, value())))
+}
+
+#[cold]
+fn span_slow(cat: &'static str, name: &'static str, arg: Option<(&'static str, String)>) -> Span {
+    DEPTH.with(|d| d.set(d.get() + 1));
+    Span { start: Some(Instant::now()), cat, name, arg }
+}
+
+/// Record a zero-duration instant marker (no guard to hold).
+#[inline]
+pub fn instant(cat: &'static str, name: &'static str) {
+    if !enabled() {
+        return;
+    }
+    let now = Instant::now();
+    let ts_us = now.checked_duration_since(epoch()).unwrap_or_default().as_micros() as u64;
+    record(SpanEvent {
+        seq: 0,
+        name,
+        cat,
+        ph: Phase::Instant,
+        ts_us,
+        dur_us: 0,
+        tid: tid(),
+        request_id: super::current_request_id(),
+        arg: None,
+    });
+}
+
+/// An in-flight span; records its event when dropped (if collecting was
+/// enabled when it started).
+pub struct Span {
+    start: Option<Instant>,
+    cat: &'static str,
+    name: &'static str,
+    arg: Option<(&'static str, String)>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let dur_us = start.elapsed().as_micros() as u64;
+        let ts_us = start.checked_duration_since(epoch()).unwrap_or_default().as_micros() as u64;
+        record(SpanEvent {
+            seq: 0,
+            name: self.name,
+            cat: self.cat,
+            ph: Phase::Complete,
+            ts_us,
+            dur_us,
+            tid: tid(),
+            request_id: super::current_request_id(),
+            arg: self.arg.take(),
+        });
+        DEPTH.with(|d| {
+            let depth = d.get().saturating_sub(1);
+            d.set(depth);
+            if depth == 0 {
+                flush();
+            }
+        });
+    }
+}
+
+fn record(mut ev: SpanEvent) {
+    ev.seq = collector().seq.fetch_add(1, Ordering::Relaxed) + 1;
+    let len = LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        l.push(ev);
+        l.len()
+    });
+    if len >= LOCAL_FLUSH {
+        flush();
+    }
+}
+
+/// Drain the current thread's buffered events into the global ring.
+/// Called automatically when a thread's outermost span closes; call it
+/// explicitly before a thread exits mid-span-tree (job workers do).
+pub fn flush() {
+    let pending = LOCAL.with(|l| std::mem::take(&mut *l.borrow_mut()));
+    if pending.is_empty() {
+        return;
+    }
+    let c = collector();
+    let mut ring = c.ring.lock().expect("trace ring poisoned");
+    for ev in pending {
+        if ring.len() >= RING_CAPACITY {
+            ring.pop_front();
+            c.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(ev);
+    }
+}
+
+/// Drop all collected events and reset the drop counter (tests).
+pub fn clear() {
+    let c = collector();
+    LOCAL.with(|l| l.borrow_mut().clear());
+    c.ring.lock().expect("trace ring poisoned").clear();
+    c.dropped.store(0, Ordering::Relaxed);
+}
+
+fn event_json(e: &SpanEvent) -> Json {
+    let mut args: Vec<(&'static str, Json)> = vec![("seq", Json::from(e.seq as i64))];
+    if let Some(rid) = &e.request_id {
+        args.push(("request_id", Json::from(rid.as_str())));
+    }
+    if let Some((k, v)) = &e.arg {
+        args.push((*k, Json::from(v.as_str())));
+    }
+    let mut fields: Vec<(&'static str, Json)> = vec![
+        ("name", Json::from(e.name)),
+        ("cat", Json::from(e.cat)),
+        ("ph", Json::from(match e.ph {
+            Phase::Complete => "X",
+            Phase::Instant => "i",
+        })),
+        ("ts", Json::from(e.ts_us as i64)),
+        ("pid", Json::from(i64::from(std::process::id()))),
+        ("tid", Json::from(e.tid as i64)),
+        ("args", Json::obj(args)),
+    ];
+    if e.ph == Phase::Complete {
+        fields.push(("dur", Json::from(e.dur_us as i64)));
+    }
+    if e.ph == Phase::Instant {
+        // instant scope: thread
+        fields.push(("s", Json::from("t")));
+    }
+    Json::obj(fields)
+}
+
+/// Export every collected event with `seq > since` as a Chrome
+/// trace-event JSON document (`chrome://tracing` / Perfetto load the
+/// `traceEvents` array directly). `next` is the cursor to poll with,
+/// `dropped` the ring's lifetime eviction count.
+pub fn export_since(since: u64) -> Json {
+    flush();
+    let c = collector();
+    let ring = c.ring.lock().expect("trace ring poisoned");
+    let mut next = since;
+    let events: Vec<Json> = ring
+        .iter()
+        .filter(|e| e.seq > since)
+        .map(|e| {
+            next = next.max(e.seq);
+            event_json(e)
+        })
+        .collect();
+    Json::obj([
+        ("traceEvents", Json::Arr(events)),
+        ("next", Json::from(next as i64)),
+        ("dropped", Json::from(c.dropped.load(Ordering::Relaxed) as i64)),
+        ("enabled", Json::from(enabled())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The trace collector (and its enable flag) is process-global state
+    // shared by every #[test] thread in this binary — tests that toggle
+    // it serialise on TEST_LOCK and only assert on their OWN spans
+    // (matched by name), never on global counts.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = test_lock();
+        enable(false);
+        {
+            let _s = span("test", "disabled-span-marker");
+        }
+        let doc = export_since(0);
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(events
+            .iter()
+            .all(|e| e.get("name").and_then(Json::as_str) != Some("disabled-span-marker")));
+    }
+
+    #[test]
+    fn enabled_spans_export_as_chrome_events() {
+        let _g = test_lock();
+        enable(true);
+        {
+            let _outer = span_arg("test", "outer-span-marker", "k", || "v1".into());
+            let _inner = span("test", "inner-span-marker");
+        }
+        instant("test", "instant-marker");
+        enable(false);
+        let doc = export_since(0);
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let find = |name: &str| {
+            events
+                .iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .unwrap_or_else(|| panic!("no event named {name}"))
+        };
+        let outer = find("outer-span-marker");
+        assert_eq!(outer.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(outer.get("cat").and_then(Json::as_str), Some("test"));
+        assert!(outer.get("dur").and_then(Json::as_i64).is_some());
+        assert_eq!(
+            outer.get("args").and_then(|a| a.get("k")).and_then(Json::as_str),
+            Some("v1")
+        );
+        let inner = find("inner-span-marker");
+        // same thread, inner nested within outer's [ts, ts+dur] window
+        assert_eq!(inner.get("tid"), outer.get("tid"));
+        let (ots, odur) = (
+            outer.get("ts").and_then(Json::as_i64).unwrap(),
+            outer.get("dur").and_then(Json::as_i64).unwrap(),
+        );
+        let its = inner.get("ts").and_then(Json::as_i64).unwrap();
+        assert!(its >= ots && its <= ots + odur);
+        let mark = find("instant-marker");
+        assert_eq!(mark.get("ph").and_then(Json::as_str), Some("i"));
+        assert_eq!(mark.get("s").and_then(Json::as_str), Some("t"));
+    }
+
+    #[test]
+    fn since_cursor_only_returns_new_events() {
+        let _g = test_lock();
+        enable(true);
+        {
+            let _s = span("test", "cursor-first");
+        }
+        let doc = export_since(0);
+        let next = doc.get("next").and_then(Json::as_i64).unwrap() as u64;
+        {
+            let _s = span("test", "cursor-second");
+        }
+        enable(false);
+        let doc2 = export_since(next);
+        let events = doc2.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(events
+            .iter()
+            .all(|e| e.get("name").and_then(Json::as_str) != Some("cursor-first")));
+        assert!(events
+            .iter()
+            .any(|e| e.get("name").and_then(Json::as_str) == Some("cursor-second")));
+        // cursor advances monotonically
+        assert!(doc2.get("next").and_then(Json::as_i64).unwrap() as u64 >= next);
+    }
+
+    #[test]
+    fn spans_carry_the_thread_request_id() {
+        let _g = test_lock();
+        enable(true);
+        {
+            let _rid = crate::obs::request_scope(Some("rid-span-test".into()));
+            let _s = span("test", "rid-span-marker");
+        }
+        enable(false);
+        let doc = export_since(0);
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let ev = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("rid-span-marker"))
+            .unwrap();
+        assert_eq!(
+            ev.get("args")
+                .and_then(|a| a.get("request_id"))
+                .and_then(Json::as_str),
+            Some("rid-span-test")
+        );
+    }
+}

@@ -25,6 +25,10 @@ use crate::library::LibrarySource;
 use crate::runtime::manifest::TestSet;
 use crate::runtime::{broadcast_lut, exact_lut, LUT_LEN};
 
+use crate::cgp::campaign::map_parallel_progress;
+use crate::obs::progress::Progress;
+use crate::obs::trace;
+
 use super::cache::{EvalCache, EvalKey};
 use super::lut::lut_for_entry;
 
@@ -212,6 +216,38 @@ pub fn per_layer_campaign_cached(
     jobs: usize,
     cache: Option<&EvalCache>,
 ) -> Result<Fig4Report> {
+    per_layer_campaign_progress(
+        coord,
+        model,
+        multipliers,
+        testset,
+        kernel,
+        jobs,
+        cache,
+        None,
+        "layer-campaign",
+    )
+}
+
+/// [`per_layer_campaign_cached`] with an optional [`Progress`] handle:
+/// enters `stage` (the DSE driver names it `probe`, campaign jobs
+/// `layer-campaign`) sized to one golden-reference tick plus one tick
+/// per `(multiplier, layer)` grid point, delivered in pool order.
+/// Progress and the `campaign` trace spans are pure side channels — the
+/// report is byte-identical with them on or off (tested).
+#[allow(clippy::too_many_arguments)]
+pub fn per_layer_campaign_progress(
+    coord: &Coordinator,
+    model: &str,
+    multipliers: &[MultiplierSummary],
+    testset: &TestSet,
+    kernel: KernelKind,
+    jobs: usize,
+    cache: Option<&EvalCache>,
+    progress: Option<&Progress>,
+    stage: &str,
+) -> Result<Fig4Report> {
+    let _span = trace::span_arg("campaign", "per-layer", "model", || model.to_string());
     let meta = coord
         .manifest()
         .model(model)
@@ -221,15 +257,25 @@ pub fn per_layer_campaign_cached(
     let pm = PowerModel::from_manifest(&meta);
     let exact = exact_lut();
     let images = Arc::new(testset.images.clone());
-    let golden = run_cached(cache, EvalKey::whole(model, EvalKey::GOLDEN, testset.n), || {
-        coord.accuracy(
-            model,
-            kernel,
-            images.clone(),
-            &testset.labels,
-            Arc::new(broadcast_lut(&exact, n_layers)),
-        )
-    })?;
+    if let Some(p) = progress {
+        // golden reference + the full (multiplier × layer) grid
+        p.set_stage(stage, (multipliers.len() * n_layers) as u64 + 1);
+    }
+    let golden = {
+        let _s = trace::span("campaign", "golden-reference");
+        run_cached(cache, EvalKey::whole(model, EvalKey::GOLDEN, testset.n), || {
+            coord.accuracy(
+                model,
+                kernel,
+                images.clone(),
+                &testset.labels,
+                Arc::new(broadcast_lut(&exact, n_layers)),
+            )
+        })?
+    };
+    if let Some(p) = progress {
+        p.tick();
+    }
     // The 100 % power reference is the exact multiplier itself, identified
     // by provenance — NOT by a floating-point `rel_power == 100` match,
     // which silently picks nothing (or a coincidental entry) when the
@@ -238,7 +284,8 @@ pub fn per_layer_campaign_cached(
     let grid: Vec<(usize, usize)> = (0..multipliers.len())
         .flat_map(|mi| (0..n_layers).map(move |layer| (mi, layer)))
         .collect();
-    let accuracies = map_parallel(grid.clone(), jobs.max(1), |_, (mi, layer), _scratch| {
+    let accuracies = map_parallel_progress(grid.clone(), jobs.max(1), progress, |_, (mi, layer), _scratch| {
+        let _s = trace::span("campaign", "layer-eval");
         let m = &multipliers[mi];
         // a functionally exact multiplier in any single layer IS the
         // golden network — share the golden cache entry instead of a

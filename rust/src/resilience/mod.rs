@@ -23,7 +23,8 @@ pub mod lut;
 
 pub use cache::{EvalCache, EvalKey, Scope};
 pub use campaign::{
-    per_layer_campaign, per_layer_campaign_cached, standard_multipliers, whole_network_campaign,
-    Fig4Point, Fig4Report, MultiplierSummary, Table2Report, Table2Row,
+    per_layer_campaign, per_layer_campaign_cached, per_layer_campaign_progress,
+    standard_multipliers, whole_network_campaign, Fig4Point, Fig4Report, MultiplierSummary,
+    Table2Report, Table2Row,
 };
 pub use lut::{lut_for_entry, lut_from_netlist};

@@ -62,6 +62,8 @@ pub struct Response {
     pub shutdown_after: bool,
     /// Emit a `Retry-After: <secs>` header (backpressure responses).
     pub retry_after: Option<u32>,
+    /// Echo this correlation id as `X-Request-Id` (DESIGN.md §13).
+    pub request_id: Option<String>,
 }
 
 impl Response {
@@ -78,6 +80,7 @@ impl Response {
             body,
             shutdown_after: false,
             retry_after: None,
+            request_id: None,
         }
     }
 
@@ -94,7 +97,14 @@ impl Response {
             body,
             shutdown_after: false,
             retry_after: None,
+            request_id: None,
         }
+    }
+
+    /// Attach the correlation id echoed as `X-Request-Id`.
+    pub fn with_request_id(mut self, id: Option<String>) -> Response {
+        self.request_id = id;
+        self
     }
 
     /// `429 Too Many Requests` with a `Retry-After` hint — the
@@ -239,12 +249,13 @@ enum Target {
 /// Render `resp` onto `c`, count it, and propagate the shutdown flag.
 fn finish_response(c: &mut Conn, resp: &Response, metrics: &ConnMetrics, shutdown: &AtomicBool) {
     let keep = c.cur_keep_alive && !resp.shutdown_after;
-    let bytes = http::render_response(
+    let bytes = http::render_response_traced(
         resp.status,
         resp.content_type,
         resp.body.as_bytes(),
         keep,
         resp.retry_after,
+        resp.request_id.as_deref(),
     );
     c.queue(&bytes);
     if !keep {

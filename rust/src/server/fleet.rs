@@ -11,9 +11,9 @@
 //! Routing policy:
 //!
 //! * **Replicated reads + predict** (`/v1/predict`, `/v1/library/*`,
-//!   `/v1/select`, `/healthz`, `GET /`): every shard serves the same
-//!   model and library, so these round-robin across shards and fail over
-//!   to the next shard before giving up with 502. Responses are passed
+//!   `/v1/select`, `GET /`): every shard serves the same model and
+//!   library, so these round-robin across shards and fail over to the
+//!   next shard before giving up with 502. Responses are passed
 //!   through byte-for-byte.
 //! * **Sharded submits** (`/v1/campaigns/resilience`, `/v1/dse`): routed
 //!   by FNV-1a hash of the request's `model`, so repeated campaigns for
@@ -25,9 +25,20 @@
 //! * **`/metrics`**: fetched from every shard and summed per series
 //!   (first-seen order), then the fleet gauges (`evoapprox_fleet_*`) and
 //!   the router's own connection counters are appended.
+//! * **`/healthz`**: answered by the router itself — it probes every
+//!   shard and reports per-shard reachability alongside its own uptime
+//!   and version, so a degraded fleet is visible from one poll.
+//! * **`/debug/trace`**: answered from the router's own span ring (shard
+//!   cursors don't merge); shard traces stay pollable on the shard
+//!   addresses.
 //! * **Supervision**: a supervisor thread reaps dead shards and respawns
 //!   them (counted in `evoapprox_fleet_shard_restarts_total`) unless the
 //!   fleet is shutting down.
+//!
+//! Every request picks up an `X-Request-Id` at the router (client-supplied
+//! ids are honoured when syntactically valid) which is forwarded to the
+//! shard, stamped on router spans, and echoed on the response — one id
+//! correlates router, shard, and job records.
 //!
 //! [`EvalCache`]: crate::resilience::EvalCache
 
@@ -43,6 +54,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::obs::{self, trace};
 use crate::util::json::Json;
 
 use super::event::{self, ConnMetrics, EventConfig, Outcome, Response, Waker};
@@ -126,6 +138,7 @@ struct FleetState {
     http: ConnMetrics,
     waker: Arc<Waker>,
     completions: event::Completions,
+    started: Instant,
 }
 
 /// Final report a fleet run hands back on shutdown.
@@ -168,6 +181,9 @@ struct ProxyReq {
     method: String,
     target: String,
     body: Option<String>,
+    /// Correlation id minted (or validated) at the router and forwarded
+    /// to the shard as `X-Request-Id`.
+    request_id: String,
 }
 
 /// FNV-1a of the model name — the consistent shard key for submits.
@@ -275,6 +291,9 @@ impl Fleet {
         }
         let (waker, wake_rx) = event::waker_pair().context("creating router waker")?;
         let (completions, completions_rx) = event::completion_channel(waker.clone());
+        // span collection defaults on like a single serve — the recorder
+        // is off the data path and `/debug/trace` answers from this ring
+        trace::enable(true);
         let worker_count = (2 * cfg.shards).clamp(2, 16);
         let state = Arc::new(FleetState {
             routing: RwLock::new(slots),
@@ -287,6 +306,7 @@ impl Fleet {
             http: ConnMetrics::default(),
             waker,
             completions,
+            started: Instant::now(),
             cfg,
         });
         let (proxy_tx, proxy_rx) = channel::<ProxyReq>();
@@ -431,6 +451,11 @@ fn router_loop(
         wake_rx,
         completions_rx,
         move |req, ctx| {
+            let request_id = req
+                .header("x-request-id")
+                .filter(|id| obs::valid_request_id(id))
+                .map(str::to_string)
+                .unwrap_or_else(obs::new_request_id);
             let p = ProxyReq {
                 conn_id: ctx.conn_id,
                 peer_is_loopback: ctx.peer_is_loopback,
@@ -441,9 +466,13 @@ fn router_loop(
                 } else {
                     Some(String::from_utf8_lossy(&req.body).into_owned())
                 },
+                request_id: request_id.clone(),
             };
             if proxy_tx.send(p).is_err() {
-                return Outcome::Ready(Response::error(503, "router is shutting down"));
+                return Outcome::Ready(
+                    Response::error(503, "router is shutting down")
+                        .with_request_id(Some(request_id)),
+                );
             }
             Outcome::Deferred
         },
@@ -537,8 +566,16 @@ fn proxy_worker(state: Arc<FleetState>, rx: Arc<Mutex<Receiver<ProxyReq>>>) {
         };
         match req {
             Ok(p) => {
+                // scope the worker so router spans/logs carry the id, and
+                // echo it on the response regardless of which shard (or
+                // router-local handler) produced the body
+                let _scope = obs::request_scope(Some(p.request_id.clone()));
+                let span = trace::span_arg("fleet", "route", "target", || p.target.clone());
                 let resp = route_request(&state, &p);
-                state.completions.deliver(p.conn_id, resp);
+                drop(span);
+                state
+                    .completions
+                    .deliver(p.conn_id, resp.with_request_id(Some(p.request_id.clone())));
             }
             Err(_) => break, // router dropped the sender: drain complete
         }
@@ -550,6 +587,8 @@ fn route_request(state: &FleetState, p: &ProxyReq) -> Response {
     let path = target.path();
     match (p.method.as_str(), path.as_slice()) {
         ("GET", ["metrics"]) => aggregate_metrics(state),
+        ("GET", ["healthz"]) => fleet_healthz(state),
+        ("GET", ["debug", "trace"]) => fleet_trace(&target),
         ("POST", ["v1", "admin", "shutdown"]) if !p.peer_is_loopback => {
             Response::error(403, "admin endpoints are restricted to loopback peers")
         }
@@ -560,10 +599,10 @@ fn route_request(state: &FleetState, p: &ProxyReq) -> Response {
         ("POST", ["v1", "campaigns", "resilience"]) | ("POST", ["v1", "dse"]) => {
             proxy_submit(state, p)
         }
-        ("GET", ["v1", "jobs", id]) => proxy_job(state, id),
+        ("GET", ["v1", "jobs", id]) => proxy_job(state, p, id),
         // everything else is replicated: predict, census, pareto, select,
-        // healthz, the endpoint listing — and unknown routes, which any
-        // shard rejects exactly like a single server would
+        // the endpoint listing — and unknown routes, which any shard
+        // rejects exactly like a single server would
         _ => proxy_replicated(state, p),
     }
 }
@@ -578,7 +617,15 @@ fn proxy_replicated(state: &FleetState, p: &ProxyReq) -> Response {
     let mut last_err = None;
     for k in 0..slots.len() {
         let slot = &slots[(start + k) % slots.len()];
-        match slot.client.request(&p.method, &p.target, p.body.as_deref()) {
+        let hop = trace::span_arg("fleet", "shard-hop", "addr", || slot.addr.clone());
+        let result = slot.client.request_with_headers(
+            &p.method,
+            &p.target,
+            p.body.as_deref(),
+            &[("X-Request-Id", &p.request_id)],
+        );
+        drop(hop);
+        match result {
             Ok((status, body)) => return Response::json_body(status, body),
             Err(e) => last_err = Some(e),
         }
@@ -607,10 +654,13 @@ fn proxy_submit(state: &FleetState, p: &ProxyReq) -> Response {
         return Response::error(502, "no shards available");
     }
     let shard = shard_for(&model, slots.len());
-    match slots[shard]
-        .client
-        .request(&p.method, &p.target, p.body.as_deref())
-    {
+    let _hop = trace::span_arg("fleet", "shard-hop", "addr", || slots[shard].addr.clone());
+    match slots[shard].client.request_with_headers(
+        &p.method,
+        &p.target,
+        p.body.as_deref(),
+        &[("X-Request-Id", &p.request_id)],
+    ) {
         Ok((202, body)) => match Json::parse(&body) {
             Ok(Json::Obj(mut obj)) => match obj.get("job").and_then(Json::as_i64) {
                 Some(local) => {
@@ -635,7 +685,7 @@ fn proxy_submit(state: &FleetState, p: &ProxyReq) -> Response {
 
 /// Poll a fleet job: translate the fleet id, fetch from the owning shard,
 /// rewrite the id in the body.
-fn proxy_job(state: &FleetState, id: &str) -> Response {
+fn proxy_job(state: &FleetState, p: &ProxyReq, id: &str) -> Response {
     let Ok(fid) = id.parse::<u64>() else {
         return Response::error(400, "job id must be an integer");
     };
@@ -655,7 +705,12 @@ fn proxy_job(state: &FleetState, id: &str) -> Response {
             None => return Response::error(502, format!("shard {shard} unavailable")),
         }
     };
-    match client.get(&format!("/v1/jobs/{local}")) {
+    match client.request_with_headers(
+        "GET",
+        &format!("/v1/jobs/{local}"),
+        None,
+        &[("X-Request-Id", &p.request_id)],
+    ) {
         Ok((200, body)) => match Json::parse(&body) {
             Ok(Json::Obj(mut obj)) => {
                 obj.insert("id".to_string(), Json::Num(fid as f64));
@@ -668,6 +723,58 @@ fn proxy_job(state: &FleetState, id: &str) -> Response {
         Ok((status, body)) => Response::json_body(status, body),
         Err(e) => Response::error(502, format!("shard {shard} unreachable: {e:#}")),
     }
+}
+
+/// Router-answered `/healthz`: probe every shard and report per-shard
+/// reachability next to the router's own identity. `status` degrades from
+/// `ok` to `degraded` to `down` as shards stop answering.
+fn fleet_healthz(state: &FleetState) -> Response {
+    let slots: Vec<ShardSlot> = state.routing.read().expect("routing poisoned").clone();
+    let mut shards = Vec::with_capacity(slots.len());
+    let mut reachable = 0usize;
+    for slot in &slots {
+        let ok = matches!(slot.client.get("/healthz"), Ok((200, _)));
+        if ok {
+            reachable += 1;
+        }
+        shards.push(Json::obj([
+            ("addr", slot.addr.clone().into()),
+            ("ok", ok.into()),
+        ]));
+    }
+    let status = if reachable == slots.len() {
+        "ok"
+    } else if reachable > 0 {
+        "degraded"
+    } else {
+        "down"
+    };
+    Response::json(
+        200,
+        Json::obj([
+            ("status", status.into()),
+            ("role", "router".into()),
+            ("version", env!("CARGO_PKG_VERSION").into()),
+            (
+                "uptime_ms",
+                (state.started.elapsed().as_millis() as f64).into(),
+            ),
+            ("shards", Json::Arr(shards)),
+            ("shards_reachable", reachable.into()),
+            ("shards_total", slots.len().into()),
+        ]),
+    )
+}
+
+/// Router-answered `/debug/trace`: export the router's own span ring.
+/// Shard rings keep independent cursors, so they stay pollable on the
+/// shard addresses instead of being merged here.
+fn fleet_trace(target: &Target) -> Response {
+    let since = match target.query_parse("since", 0u64) {
+        Ok(v) => v,
+        Err(e) => return Response::error(400, e),
+    };
+    Response::json(200, trace::export_since(since))
 }
 
 /// The metric name a `# TYPE` line would use for a sample key (histogram

@@ -220,6 +220,21 @@ pub fn render_response(
     keep_alive: bool,
     retry_after_secs: Option<u32>,
 ) -> Vec<u8> {
+    render_response_traced(status, content_type, body, keep_alive, retry_after_secs, None)
+}
+
+/// [`render_response`] plus an optional `X-Request-Id` echo header — the
+/// correlation id the evented server stamps on every response
+/// (DESIGN.md §13). Ids are validated before they get here, so the value
+/// can be emitted verbatim.
+pub fn render_response_traced(
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+    retry_after_secs: Option<u32>,
+    request_id: Option<&str>,
+) -> Vec<u8> {
     use std::fmt::Write as _;
     let mut head = format!(
         "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
@@ -230,6 +245,9 @@ pub fn render_response(
     );
     if let Some(secs) = retry_after_secs {
         let _ = writeln!(head, "Retry-After: {secs}\r");
+    }
+    if let Some(id) = request_id {
+        let _ = writeln!(head, "X-Request-Id: {id}\r");
     }
     head.push_str(if keep_alive {
         "Connection: keep-alive\r\n\r\n"
@@ -443,13 +461,31 @@ impl Client {
     /// One request/response exchange, reusing a pooled connection when
     /// one is available.
     pub fn request(&self, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+        self.request_with_headers(method, path, body, &[])
+    }
+
+    /// [`Client::request`] with extra request headers — the fleet router
+    /// uses this to forward `X-Request-Id` to its shards. Header names and
+    /// values must be single-line ASCII (callers pass validated ids).
+    pub fn request_with_headers(
+        &self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        headers: &[(&str, &str)],
+    ) -> Result<(u16, String)> {
+        use std::fmt::Write as _;
         let payload = body.unwrap_or_default();
-        let head = format!(
+        let mut head = format!(
             "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\n\
-             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+             Content-Length: {}\r\n",
             self.addr,
             payload.len()
         );
+        for (name, value) in headers {
+            let _ = writeln!(head, "{name}: {value}\r");
+        }
+        head.push_str("Connection: keep-alive\r\n\r\n");
         loop {
             let (mut stream, reused) = self.checkout()?;
             match exchange(&mut stream, head.as_bytes(), payload.as_bytes()) {
@@ -653,6 +689,37 @@ mod tests {
         assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
         assert!(text.contains("Retry-After: 2\r\n"), "{text}");
         assert!(text.contains("Connection: close\r\n"));
+    }
+
+    #[test]
+    fn traced_responses_echo_the_request_id() {
+        let bytes =
+            render_response_traced(200, "application/json", b"{}", true, None, Some("abc-1"));
+        let text = String::from_utf8(bytes).unwrap();
+        assert!(text.contains("X-Request-Id: abc-1\r\n"), "{text}");
+        // the plain renderer emits no id header at all
+        let plain =
+            String::from_utf8(render_response(200, "application/json", b"{}", true, None))
+                .unwrap();
+        assert!(!plain.to_ascii_lowercase().contains("x-request-id"), "{plain}");
+    }
+
+    #[test]
+    fn client_forwards_extra_headers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let req = read_request(&mut conn, 1 << 20).unwrap();
+            let id = req.header("x-request-id").unwrap_or("missing").to_string();
+            write_response(&mut conn, 200, "text/plain", id.as_bytes()).unwrap();
+        });
+        let client = Client::new(addr).with_timeout(Duration::from_secs(5));
+        let (status, body) = client
+            .request_with_headers("GET", "/x", None, &[("X-Request-Id", "rid-7")])
+            .unwrap();
+        server.join().unwrap();
+        assert_eq!((status, body.as_str()), (200, "rid-7"));
     }
 
     #[test]

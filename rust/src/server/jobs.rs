@@ -26,6 +26,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::obs::progress::Progress;
+use crate::obs::trace;
 use crate::util::json::Json;
 
 /// Lifecycle of one job.
@@ -73,6 +75,10 @@ pub struct JobRecord {
     pub error: Option<String>,
     /// When the job reached a terminal state (eviction clock).
     pub finished_at: Option<Instant>,
+    /// Live stage/completed/total state the worker ticks (DESIGN.md §13).
+    pub progress: Progress,
+    /// Request id of the submission that created the job, if any.
+    pub request_id: Option<String>,
 }
 
 /// Retention and saturation bounds for a [`JobStore`].
@@ -139,16 +145,21 @@ impl JobStore {
 
     /// Submit `work` as a named job: allocates an id, spawns the worker
     /// thread and returns immediately. The closure's `Ok(Json)` becomes
-    /// the job result; its `Err` chain the failure message. Runs the
-    /// eviction sweep and reaps finished worker handles first.
+    /// the job result; its `Err` chain the failure message. The worker
+    /// runs under `request_id`'s scope (spans and log lines it emits
+    /// carry the id) and receives the record's [`Progress`] handle to
+    /// tick; terminal states force the bar full. Runs the eviction sweep
+    /// and reaps finished worker handles first.
     pub fn submit(
         &self,
         kind: &str,
-        work: impl FnOnce() -> Result<Json> + Send + 'static,
+        request_id: Option<String>,
+        work: impl FnOnce(&Progress) -> Result<Json> + Send + 'static,
     ) -> u64 {
         self.evict_terminal();
         self.reap_finished_handles();
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let progress = Progress::new();
         {
             let mut jobs = self.inner.jobs.lock().expect("job ledger poisoned");
             jobs.insert(
@@ -160,29 +171,39 @@ impl JobStore {
                     result: None,
                     error: None,
                     finished_at: None,
+                    progress: progress.clone(),
+                    request_id: request_id.clone(),
                 },
             );
         }
         let inner = self.inner.clone();
+        let kind = kind.to_string();
         let handle = std::thread::Builder::new()
             .name(format!("job-{id}"))
             .spawn(move || {
+                let _scope = crate::obs::request_scope(request_id);
+                let span = trace::span_arg("job", "job-run", "kind", || kind.clone());
                 set_state(&inner, id, JobState::Running);
-                let outcome = work();
-                let mut jobs = inner.jobs.lock().expect("job ledger poisoned");
-                if let Some(rec) = jobs.get_mut(&id) {
-                    match outcome {
-                        Ok(result) => {
-                            rec.state = JobState::Done;
-                            rec.result = Some(result);
+                let outcome = work(&progress);
+                progress.finish();
+                {
+                    let mut jobs = inner.jobs.lock().expect("job ledger poisoned");
+                    if let Some(rec) = jobs.get_mut(&id) {
+                        match outcome {
+                            Ok(result) => {
+                                rec.state = JobState::Done;
+                                rec.result = Some(result);
+                            }
+                            Err(e) => {
+                                rec.state = JobState::Failed;
+                                rec.error = Some(format!("{e:#}"));
+                            }
                         }
-                        Err(e) => {
-                            rec.state = JobState::Failed;
-                            rec.error = Some(format!("{e:#}"));
-                        }
+                        rec.finished_at = Some(Instant::now());
                     }
-                    rec.finished_at = Some(Instant::now());
                 }
+                drop(span);
+                trace::flush();
             })
             .expect("spawning job thread");
         self.inner
@@ -309,7 +330,7 @@ mod tests {
     #[test]
     fn submit_poll_result() {
         let store = JobStore::new();
-        let id = store.submit("test", || Ok(Json::obj([("x", 1i64.into())])));
+        let id = store.submit("test", None, |_p| Ok(Json::obj([("x", 1i64.into())])));
         store.join_all();
         let rec = store.get(id).unwrap();
         assert_eq!(rec.state, JobState::Done);
@@ -323,7 +344,7 @@ mod tests {
     #[test]
     fn failures_are_recorded_not_propagated() {
         let store = JobStore::new();
-        let id = store.submit("test", || {
+        let id = store.submit("test", None, |_p| {
             Err(anyhow!("inner").context("outer"))
         });
         store.join_all();
@@ -334,12 +355,38 @@ mod tests {
         assert!(msg.contains("outer") && msg.contains("inner"), "{msg}");
     }
 
+    /// The record's progress handle is live while the job runs, carries
+    /// the submission's request id, and is forced full on completion.
+    #[test]
+    fn progress_and_request_id_ride_the_record() {
+        let store = JobStore::new();
+        let id = store.submit("test", Some("req-42".into()), |p| {
+            p.set_stage("probe", 4);
+            p.tick();
+            assert_eq!(
+                crate::obs::current_request_id().as_deref(),
+                Some("req-42"),
+                "worker thread runs under the submission's request scope"
+            );
+            Ok(Json::Null)
+        });
+        store.join_all();
+        let rec = store.get(id).unwrap();
+        assert_eq!(rec.request_id.as_deref(), Some("req-42"));
+        assert_eq!(rec.progress.stage(), "probe");
+        assert_eq!(
+            (rec.progress.completed(), rec.progress.total()),
+            (4, 4),
+            "terminal jobs always report a full bar"
+        );
+    }
+
     #[test]
     fn unknown_id_is_none_and_ids_are_distinct() {
         let store = JobStore::new();
         assert!(store.get(1).is_none());
-        let a = store.submit("test", || Ok(Json::Null));
-        let b = store.submit("test", || Ok(Json::Null));
+        let a = store.submit("test", None, |_p| Ok(Json::Null));
+        let b = store.submit("test", None, |_p| Ok(Json::Null));
         assert_ne!(a, b);
         store.join_all();
         assert_eq!(store.get(a).unwrap().state, JobState::Done);
@@ -357,7 +404,7 @@ mod tests {
         });
         let mut ids = Vec::new();
         for _ in 0..4 {
-            ids.push(store.submit("test", || Ok(Json::Null)));
+            ids.push(store.submit("test", None, |_p| Ok(Json::Null)));
             // finish each job before the next submit so finished_at
             // ordering (the eviction order) matches submission order
             store.join_all();
@@ -379,16 +426,16 @@ mod tests {
             ttl: Duration::ZERO,
             max_active: 32,
         });
-        let first = store.submit("test", || Ok(Json::Null));
+        let first = store.submit("test", None, |_p| Ok(Json::Null));
         store.join_all();
         // gate the second job so it is provably active during the sweep
         let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
-        let second = store.submit("test", move || {
+        let second = store.submit("test", None, move |_p| {
             release_rx.recv().ok();
             Ok(Json::Null)
         });
         // third submit sweeps: `first` is terminal+expired, `second` active
-        let third = store.submit("test", || Ok(Json::Null));
+        let third = store.submit("test", None, |_p| Ok(Json::Null));
         assert!(store.get(first).is_none(), "expired terminal record");
         assert!(store.get(second).is_some(), "active jobs are never evicted");
         assert!(store.evicted() >= 1);
@@ -413,7 +460,7 @@ mod tests {
         let rx = Arc::new(Mutex::new(release_rx));
         for _ in 0..2 {
             let rx = rx.clone();
-            store.submit("test", move || {
+            store.submit("test", None, move |_p| {
                 rx.lock().expect("gate poisoned").recv().ok();
                 Ok(Json::Null)
             });

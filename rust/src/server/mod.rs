@@ -72,11 +72,13 @@ use crate::cgp::campaign::{default_workers, map_parallel};
 use crate::cgp::metrics::Metric;
 use crate::circuit::verify::ArithFn;
 use crate::coordinator::batcher::{BatchPolicy, Batcher, BatcherGuard, BatcherStats};
+use crate::coordinator::metrics::Histogram;
 use crate::coordinator::{Coordinator, KernelKind};
-use crate::dse::{run_dse, DseConfig};
+use crate::dse::{run_dse_progress, DseConfig};
 use crate::library::{metric_slot, LibrarySource};
+use crate::obs::{self, trace};
 use crate::resilience::{
-    per_layer_campaign_cached, standard_multipliers, EvalCache, EvalKey, MultiplierSummary,
+    per_layer_campaign_progress, standard_multipliers, EvalCache, EvalKey, MultiplierSummary,
 };
 use crate::runtime::{broadcast_lut, exact_lut, TestSet};
 use crate::util::json::Json;
@@ -122,6 +124,10 @@ pub struct ServerConfig {
     pub max_requests_per_conn: u64,
     /// `Retry-After` hint on 429 backpressure responses [s].
     pub retry_after_secs: u32,
+    /// Enable span collection on start (`GET /debug/trace` exports it).
+    /// Tracing is a pure side channel — §13's byte-identity argument —
+    /// so it defaults on.
+    pub trace: bool,
 }
 
 impl Default for ServerConfig {
@@ -140,7 +146,68 @@ impl Default for ServerConfig {
             max_conns: 1024,
             max_requests_per_conn: 10_000,
             retry_after_secs: 1,
+            trace: true,
         }
+    }
+}
+
+/// Route labels `/metrics` keys its per-endpoint duration histograms by.
+/// A fixed table of static labels — recording is one array index plus the
+/// histogram's relaxed atomics, and the export allocates nothing per
+/// request.
+const ROUTE_LABELS: &[&str] = &[
+    "root", "healthz", "metrics", "predict", "census", "analyze", "pareto", "select",
+    "campaign", "dse", "jobs", "admin", "trace", "other",
+];
+
+/// Per-route request-duration histograms (DESIGN.md §13).
+struct RouteMetrics {
+    routes: Vec<(&'static str, Histogram)>,
+}
+
+impl RouteMetrics {
+    fn new() -> RouteMetrics {
+        RouteMetrics {
+            routes: ROUTE_LABELS
+                .iter()
+                .map(|&r| (r, Histogram::default()))
+                .collect(),
+        }
+    }
+
+    fn record(&self, route: &'static str, d: Duration) {
+        if let Some((_, h)) = self.routes.iter().find(|(r, _)| *r == route) {
+            h.record(d);
+        }
+    }
+
+    /// Append every route's histogram as one labelled Prometheus family.
+    fn render(&self, name: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        for (route, h) in &self.routes {
+            h.render_prometheus_labeled(name, &format!("route=\"{route}\""), out);
+        }
+    }
+}
+
+/// The histogram label (and span name) for a dispatched request.
+fn route_label(path: &[&str]) -> &'static str {
+    match path {
+        [] => "root",
+        ["healthz"] => "healthz",
+        ["metrics"] => "metrics",
+        ["v1", "predict"] => "predict",
+        ["v1", "library", "census"] => "census",
+        ["v1", "library", "analyze"] => "analyze",
+        ["v1", "library", "pareto"] => "pareto",
+        ["v1", "select"] => "select",
+        ["v1", "campaigns", "resilience"] => "campaign",
+        ["v1", "dse"] => "dse",
+        ["v1", "jobs", _] => "jobs",
+        ["v1", "admin", "shutdown"] => "admin",
+        ["debug", "trace"] => "trace",
+        _ => "other",
     }
 }
 
@@ -188,6 +255,9 @@ struct ServerState {
     shutdown: AtomicBool,
     /// Connection/request counters, owned by the event loop.
     http: ConnMetrics,
+    /// Per-route request-duration histograms (`Arc` so the deferred
+    /// predict path can record at delivery time from batcher callbacks).
+    routes: Arc<RouteMetrics>,
     /// Interrupts the event loop (shutdown, deferred completions).
     waker: Arc<Waker>,
     /// Resolves deferred requests from batcher callbacks.
@@ -255,6 +325,9 @@ impl Server {
         };
         // fail fast: build/compile the serving engine before accepting
         coord.warm(&cfg.model, cfg.kernel)?;
+        if cfg.trace {
+            trace::enable(true);
+        }
         let luts = Arc::new(broadcast_lut(&exact_lut(), n_layers));
         let (batcher, batcher_guard) = Batcher::spawn(
             coord.clone(),
@@ -278,6 +351,7 @@ impl Server {
             pareto_cache: Mutex::new(HashMap::new()),
             shutdown: AtomicBool::new(false),
             http: ConnMetrics::default(),
+            routes: Arc::new(RouteMetrics::new()),
             waker,
             completions,
             started: Instant::now(),
@@ -409,6 +483,7 @@ const ENDPOINTS: &[&str] = &[
     "POST /v1/campaigns/resilience",
     "POST /v1/dse",
     "GET /v1/jobs/{id}",
+    "GET /debug/trace?since=SEQ",
     "POST /v1/admin/shutdown",
 ];
 
@@ -426,13 +501,26 @@ fn known_path(p: &[&str]) -> bool {
             | ["v1", "campaigns", "resilience"]
             | ["v1", "dse"]
             | ["v1", "jobs", _]
+            | ["debug", "trace"]
             | ["v1", "admin", "shutdown"]
     )
 }
 
 fn dispatch(state: &Arc<ServerState>, req: &http::Request, ctx: ReqCtx) -> Outcome {
+    // Correlation: honour a syntactically valid client-supplied
+    // `X-Request-Id`, mint one otherwise. The id scopes the handler (all
+    // spans/log lines it emits carry it) and is echoed on the response.
+    let request_id = req
+        .header("x-request-id")
+        .filter(|id| obs::valid_request_id(id))
+        .map(str::to_string)
+        .unwrap_or_else(obs::new_request_id);
+    let _scope = obs::request_scope(Some(request_id.clone()));
     let target = Target::parse(&req.target);
     let path = target.path();
+    let route = route_label(path.as_slice());
+    let started = Instant::now();
+    let _span = trace::span_arg("http", route, "target", || req.target.clone());
     let resp = match (req.method.as_str(), path.as_slice()) {
         ("GET", []) => Response::json(
             200,
@@ -447,8 +535,11 @@ fn dispatch(state: &Arc<ServerState>, req: &http::Request, ctx: ReqCtx) -> Outco
         ("GET", ["healthz"]) => handle_healthz(state),
         ("GET", ["metrics"]) => handle_metrics(state),
         // the one deferred path: predict parks the connection on the
-        // batcher and resolves through the completion channel
-        ("POST", ["v1", "predict"]) => return handle_predict(state, &req.body, ctx),
+        // batcher and resolves through the completion channel; its route
+        // duration is recorded at delivery time by the assembly
+        ("POST", ["v1", "predict"]) => {
+            return handle_predict(state, &req.body, ctx, request_id, started)
+        }
         ("GET", ["v1", "library", "census"]) => {
             Response::json(200, report::census_to_json(&state.library))
         }
@@ -458,6 +549,7 @@ fn dispatch(state: &Arc<ServerState>, req: &http::Request, ctx: ReqCtx) -> Outco
         ("POST", ["v1", "campaigns", "resilience"]) => handle_campaign(state, &req.body),
         ("POST", ["v1", "dse"]) => handle_dse(state, &req.body),
         ("GET", ["v1", "jobs", id]) => handle_job(state, id),
+        ("GET", ["debug", "trace"]) => handle_trace_export(&target),
         // admin surface is loopback-only: a non-loopback bind must not
         // hand every network peer a remote off-switch
         ("POST", ["v1", "admin", "shutdown"]) if !ctx.peer_is_loopback => {
@@ -469,7 +561,20 @@ fn dispatch(state: &Arc<ServerState>, req: &http::Request, ctx: ReqCtx) -> Outco
         (_, p) if known_path(p) => Response::error(405, "method not allowed for this route"),
         _ => Response::error(404, "unknown route (GET / lists the endpoints)"),
     };
-    Outcome::Ready(resp)
+    state.routes.record(route, started.elapsed());
+    Outcome::Ready(resp.with_request_id(Some(request_id)))
+}
+
+/// `GET /debug/trace?since=SEQ`: the span ring as Chrome trace-event JSON
+/// (load the body's `traceEvents` in Perfetto / `chrome://tracing`).
+/// `since` cursors incrementally: pass the previous response's `next` to
+/// receive only newer events.
+fn handle_trace_export(target: &Target) -> Response {
+    let since = match target.query_parse("since", 0u64) {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, e),
+    };
+    Response::json(200, trace::export_since(since))
 }
 
 fn handle_healthz(state: &ServerState) -> Response {
@@ -477,10 +582,16 @@ fn handle_healthz(state: &ServerState) -> Response {
         200,
         Json::obj([
             ("status", "ok".into()),
+            ("version", env!("CARGO_PKG_VERSION").into()),
             ("backend", state.coord.backend().as_str().into()),
             ("model", state.cfg.model.as_str().into()),
+            (
+                "library_fingerprint",
+                format!("{:016x}", state.library.fingerprint()).into(),
+            ),
             ("uptime_ms", (state.started.elapsed().as_millis() as i64).into()),
             ("jobs_submitted", (state.jobs.submitted() as i64).into()),
+            ("active_jobs", (state.jobs.active() as i64).into()),
         ]),
     )
 }
@@ -488,6 +599,22 @@ fn handle_healthz(state: &ServerState) -> Response {
 fn handle_metrics(state: &ServerState) -> Response {
     use std::fmt::Write as _;
     let mut out = String::new();
+    // build/identity gauges first: the constant-value series dashboards
+    // join everything else against
+    let _ = writeln!(out, "# TYPE evoapprox_build_info gauge");
+    let _ = writeln!(
+        out,
+        "evoapprox_build_info{{version=\"{}\",git_sha=\"{}\",format_version=\"{}\"}} 1",
+        env!("CARGO_PKG_VERSION"),
+        option_env!("EVOAPPROX_GIT_SHA").unwrap_or("unknown"),
+        crate::library::compiled::FORMAT_VERSION,
+    );
+    let _ = writeln!(out, "# TYPE evoapprox_process_uptime_seconds gauge");
+    let _ = writeln!(
+        out,
+        "evoapprox_process_uptime_seconds {:.3}",
+        state.started.elapsed().as_secs_f64()
+    );
     let m = state.coord.metrics_raw();
     for (name, value) in [
         ("evoapprox_coordinator_jobs_total", m.jobs.load(Ordering::Relaxed)),
@@ -525,6 +652,11 @@ fn handle_metrics(state: &ServerState) -> Response {
     }
     h.latency
         .render_prometheus("evoapprox_http_request_seconds", &mut out);
+    state
+        .routes
+        .render("evoapprox_http_route_duration_seconds", &mut out);
+    let _ = writeln!(out, "# TYPE evoapprox_trace_dropped_total counter");
+    let _ = writeln!(out, "evoapprox_trace_dropped_total {}", trace::dropped());
     // connection-level counters from the event loop
     let _ = writeln!(out, "# TYPE evoapprox_http_connections_active gauge");
     let _ = writeln!(
@@ -659,6 +791,14 @@ struct Assembly {
     completions: Completions,
     slots: Mutex<Vec<Option<Result<u8, (u16, String)>>>>,
     remaining: AtomicUsize,
+    /// Correlation id echoed on the delivered response and stamped on the
+    /// delivery-side trace events.
+    request_id: String,
+    /// Dispatch timestamp + route table: the deferred path records its
+    /// route duration when the last callback delivers, not when the
+    /// handler parks the connection.
+    started: Instant,
+    routes: Arc<RouteMetrics>,
 }
 
 impl Assembly {
@@ -675,6 +815,20 @@ impl Assembly {
         }
     }
 
+    fn send(&self, resp: Response) {
+        let _scope = obs::request_scope(Some(self.request_id.clone()));
+        trace::instant("http", "predict-delivered");
+        // the delivering thread (batcher side) holds no outer span here,
+        // so push the instant to the ring now instead of letting it sit
+        // in the thread-local buffer until the next dispatch
+        trace::flush();
+        self.routes.record("predict", self.started.elapsed());
+        self.completions.deliver(
+            self.conn_id,
+            resp.with_request_id(Some(self.request_id.clone())),
+        );
+    }
+
     fn deliver(&self) {
         let mut slots = self.slots.lock().expect("assembly slots poisoned");
         let mut preds = Vec::with_capacity(slots.len());
@@ -684,46 +838,52 @@ impl Assembly {
                 // first error (in request order) wins, matching the old
                 // sequential recv loop
                 Some(Err((status, msg))) => {
-                    self.completions
-                        .deliver(self.conn_id, Response::error(status, msg));
+                    self.send(Response::error(status, msg));
                     return;
                 }
                 None => {
-                    self.completions.deliver(
-                        self.conn_id,
-                        Response::error(500, "prediction slot never completed"),
-                    );
+                    self.send(Response::error(500, "prediction slot never completed"));
                     return;
                 }
             }
         }
-        self.completions.deliver(
-            self.conn_id,
-            Response::json(
-                200,
-                Json::obj([
-                    ("model", self.model.as_str().into()),
-                    ("count", preds.len().into()),
-                    ("predictions", Json::Arr(preds)),
-                ]),
-            ),
-        );
+        let count = preds.len();
+        self.send(Response::json(
+            200,
+            Json::obj([
+                ("model", self.model.as_str().into()),
+                ("count", count.into()),
+                ("predictions", Json::Arr(preds)),
+            ]),
+        ));
     }
 }
 
-fn handle_predict(state: &Arc<ServerState>, body: &[u8], ctx: ReqCtx) -> Outcome {
+fn handle_predict(
+    state: &Arc<ServerState>,
+    body: &[u8],
+    ctx: ReqCtx,
+    request_id: String,
+    started: Instant,
+) -> Outcome {
+    // synchronous rejects still count toward the predict route histogram
+    // and still echo the correlation id
+    let ready = |resp: Response| {
+        state.routes.record("predict", started.elapsed());
+        Outcome::Ready(resp.with_request_id(Some(request_id.clone())))
+    };
     let text = match std::str::from_utf8(body) {
         Ok(t) => t,
-        Err(_) => return Outcome::Ready(Response::error(400, "body is not UTF-8")),
+        Err(_) => return ready(Response::error(400, "body is not UTF-8")),
     };
     let j = match Json::parse(text) {
         Ok(j) => j,
-        Err(e) => return Outcome::Ready(Response::error(400, format!("invalid JSON: {e}"))),
+        Err(e) => return ready(Response::error(400, format!("invalid JSON: {e}"))),
     };
     match body_str(&j, "model", &state.cfg.model) {
-        Err(msg) => return Outcome::Ready(Response::error(400, msg)),
+        Err(msg) => return ready(Response::error(400, msg)),
         Ok(m) if m != state.cfg.model => {
-            return Outcome::Ready(Response::error(
+            return ready(Response::error(
                 400,
                 format!("this server serves model `{}`", state.cfg.model),
             ));
@@ -753,10 +913,10 @@ fn handle_predict(state: &Arc<ServerState>, body: &[u8], ctx: ReqCtx) -> Outcome
         }
     })();
     if let Err(msg) = parsed {
-        return Outcome::Ready(Response::error(400, msg));
+        return ready(Response::error(400, msg));
     }
     if images.is_empty() {
-        return Outcome::Ready(Response::error(400, "no images in request"));
+        return ready(Response::error(400, "no images in request"));
     }
     let batcher = match state
         .batcher
@@ -765,23 +925,30 @@ fn handle_predict(state: &Arc<ServerState>, body: &[u8], ctx: ReqCtx) -> Outcome
         .clone()
     {
         Some(b) => b,
-        None => return Outcome::Ready(Response::error(503, "server is shutting down")),
+        None => return ready(Response::error(503, "server is shutting down")),
     };
     // backpressure: a saturated batcher queue sheds instead of parking
     // unbounded work behind it
     if batcher.queue_depth() >= state.cfg.max_pending as u64 {
         state.http.shed_429.fetch_add(1, Ordering::Relaxed);
-        return Outcome::Ready(Response::too_busy(
+        return ready(Response::too_busy(
             "predict queue is full, retry shortly",
             state.cfg.retry_after_secs,
         ));
     }
+    let n_images = images.len();
+    let enqueue_span = trace::span_arg("http", "batcher-enqueue", "images", || {
+        n_images.to_string()
+    });
     let assembly = Arc::new(Assembly {
         model: state.cfg.model.clone(),
         conn_id: ctx.conn_id,
         completions: state.completions.clone(),
         slots: Mutex::new((0..images.len()).map(|_| None).collect()),
         remaining: AtomicUsize::new(images.len()),
+        request_id,
+        started,
+        routes: state.routes.clone(),
     });
     for (i, img) in images.into_iter().enumerate() {
         let cb = assembly.clone();
@@ -793,6 +960,7 @@ fn handle_predict(state: &Arc<ServerState>, body: &[u8], ctx: ReqCtx) -> Outcome
             assembly.finish(i, Err((503, format!("{e:#}"))));
         }
     }
+    drop(enqueue_span);
     Outcome::Deferred
 }
 
@@ -1072,20 +1240,24 @@ fn handle_campaign(state: &Arc<ServerState>, body: &[u8]) -> Response {
     }
     let (images, multipliers, jobs) = (images as usize, multipliers as usize, jobs as usize);
     let st = state.clone();
-    let id = state.jobs.submit("resilience", move || {
-        let mults = st.roster(multipliers)?;
-        let testset = TestSet::synthetic(images);
-        let report = per_layer_campaign_cached(
-            &st.coord,
-            &model,
-            &mults,
-            &testset,
-            st.cfg.kernel,
-            jobs,
-            Some(&st.cache),
-        )?;
-        Ok(report::fig4_to_json(&report))
-    });
+    let id = state
+        .jobs
+        .submit("resilience", obs::current_request_id(), move |progress| {
+            let mults = st.roster(multipliers)?;
+            let testset = TestSet::synthetic(images);
+            let report = per_layer_campaign_progress(
+                &st.coord,
+                &model,
+                &mults,
+                &testset,
+                st.cfg.kernel,
+                jobs,
+                Some(&st.cache),
+                Some(progress),
+                "layer-campaign",
+            )?;
+            Ok(report::fig4_to_json(&report))
+        });
     Response::json(
         202,
         Json::obj([
@@ -1171,11 +1343,20 @@ fn handle_dse(state: &Arc<ServerState>, body: &[u8]) -> Response {
     }
     let images = images as usize;
     let st = state.clone();
-    let id = state.jobs.submit("dse", move || {
-        let testset = TestSet::synthetic(images);
-        let report = run_dse(&st.coord, Some(&st.library), &cfg, &testset, &st.cache)?;
-        Ok(report::dse_to_json(&report))
-    });
+    let id = state
+        .jobs
+        .submit("dse", obs::current_request_id(), move |progress| {
+            let testset = TestSet::synthetic(images);
+            let report = run_dse_progress(
+                &st.coord,
+                Some(&st.library),
+                &cfg,
+                &testset,
+                &st.cache,
+                Some(progress),
+            )?;
+            Ok(report::dse_to_json(&report))
+        });
     Response::json(
         202,
         Json::obj([
@@ -1199,6 +1380,11 @@ fn handle_job(state: &ServerState, id: &str) -> Response {
             ("id", (rec.id as i64).into()),
             ("kind", rec.kind.as_str().into()),
             ("status", rec.state.as_str().into()),
+            ("progress", rec.progress.to_json()),
+            (
+                "request_id",
+                rec.request_id.map(Json::Str).unwrap_or(Json::Null),
+            ),
             ("result", rec.result.unwrap_or(Json::Null)),
             (
                 "error",
@@ -1225,12 +1411,48 @@ mod tests {
             vec!["v1", "campaigns", "resilience"],
             vec!["v1", "dse"],
             vec!["v1", "jobs", "7"],
+            vec!["debug", "trace"],
             vec!["v1", "admin", "shutdown"],
         ] {
             assert!(known_path(&p), "{p:?}");
         }
         assert!(!known_path(&["v2", "predict"]));
         assert!(!known_path(&["v1", "jobs"]));
+    }
+
+    /// Every dispatchable path maps to a distinct route label present in
+    /// the fixed histogram table, and unknown paths land in `other`.
+    #[test]
+    fn route_labels_cover_known_paths() {
+        for (p, want) in [
+            (vec![], "root"),
+            (vec!["healthz"], "healthz"),
+            (vec!["metrics"], "metrics"),
+            (vec!["v1", "predict"], "predict"),
+            (vec!["v1", "library", "census"], "census"),
+            (vec!["v1", "library", "analyze"], "analyze"),
+            (vec!["v1", "library", "pareto"], "pareto"),
+            (vec!["v1", "select"], "select"),
+            (vec!["v1", "campaigns", "resilience"], "campaign"),
+            (vec!["v1", "dse"], "dse"),
+            (vec!["v1", "jobs", "3"], "jobs"),
+            (vec!["v1", "admin", "shutdown"], "admin"),
+            (vec!["debug", "trace"], "trace"),
+            (vec!["nope"], "other"),
+        ] {
+            let got = route_label(&p);
+            assert_eq!(got, want, "{p:?}");
+            assert!(ROUTE_LABELS.contains(&got), "{got} must be in the table");
+        }
+        let rm = RouteMetrics::new();
+        rm.record("predict", Duration::from_millis(1));
+        rm.record("not-a-route", Duration::from_millis(1)); // silently ignored
+        let mut out = String::new();
+        rm.render("evoapprox_http_route_duration_seconds", &mut out);
+        assert!(
+            out.contains("evoapprox_http_route_duration_seconds_count{route=\"predict\"} 1"),
+            "{out}"
+        );
     }
 
     #[test]
@@ -1258,5 +1480,6 @@ mod tests {
         assert!(cfg.max_conns >= 128);
         assert!(cfg.request_read_timeout < cfg.idle_timeout);
         assert!(cfg.max_requests_per_conn > 1, "keep-alive must be usable");
+        assert!(cfg.trace, "span collection defaults on (it is off the data path)");
     }
 }

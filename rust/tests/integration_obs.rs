@@ -1,0 +1,534 @@
+//! Integration: the observability subsystem end-to-end (DESIGN.md §13),
+//! native backend, zero artifacts — runs everywhere, never skips.
+//!
+//! Contracts under test:
+//! * every response carries an `X-Request-Id` — a valid supplied id is
+//!   echoed, an absent or invalid one is replaced — and the id rides a
+//!   submitted job from the fleet router through the shard into the
+//!   JobStore record;
+//! * `GET /debug/trace` exports valid Chrome trace-event JSON with the
+//!   expected span tree for a predict (route → batcher enqueue → engine
+//!   forward → delivery instant) and a campaign (job-run → per-layer →
+//!   golden-reference → layer-eval);
+//! * `GET /v1/jobs/{id}` reports live progress: `completed` climbs
+//!   monotonically within a stage, never exceeds `total`, and a terminal
+//!   record shows a full bar;
+//! * the campaign and DSE pipelines are byte-identical with span
+//!   collection and progress reporting enabled — jobs-1 ≡ jobs-N and
+//!   HTTP-through-the-fleet ≡ in-process.
+//!
+//! The span ring is process-global and tests in one binary run
+//! concurrently, so every assertion here matches its *own* events (by
+//! name, and by request id where one is attached) and none asserts
+//! global counts, absence, or clears the ring.
+
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use evoapproxlib::coordinator::{Coordinator, CoordinatorConfig, CoordinatorGuard, KernelKind};
+use evoapproxlib::dse::{run_dse_progress, DseConfig};
+use evoapproxlib::library::{Library, LibrarySource};
+use evoapproxlib::obs::progress::Progress;
+use evoapproxlib::obs::trace;
+use evoapproxlib::resilience::{
+    per_layer_campaign, per_layer_campaign_progress, standard_multipliers, EvalCache,
+};
+use evoapproxlib::runtime::TestSet;
+use evoapproxlib::server::fleet::{Fleet, FleetConfig};
+use evoapproxlib::server::report::{dse_to_json, fig4_to_json};
+use evoapproxlib::server::{http, Server, ServerConfig, ServerHandle};
+use evoapproxlib::util::json::Json;
+
+const MODEL: &str = "resnet8";
+
+fn start_server() -> (Coordinator, CoordinatorGuard, ServerHandle) {
+    let dir = std::env::temp_dir().join("evoapprox_obs_tests_no_artifacts");
+    let (coord, guard) = Coordinator::start(CoordinatorConfig::native(dir)).unwrap();
+    let handle = Server::start(
+        coord.clone(),
+        Library::baseline(),
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    (coord, guard, handle)
+}
+
+fn fleet_config(shards: usize) -> FleetConfig {
+    FleetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        shards,
+        backend: "native".to_string(),
+        model: MODEL.to_string(),
+        workers: 2,
+        library: None,
+        artifacts: Some(
+            std::env::temp_dir()
+                .join("evoapprox_obs_tests_no_artifacts")
+                .display()
+                .to_string(),
+        ),
+        max_wait_ms: 5,
+        max_batch: 64,
+        shard_exe: Some(PathBuf::from(env!("CARGO_BIN_EXE_evoapprox"))),
+    }
+}
+
+fn parse(body: &str) -> Json {
+    Json::parse(body).unwrap_or_else(|e| panic!("bad JSON `{body}`: {e}"))
+}
+
+/// One raw HTTP/1.1 exchange — the `http` client helpers hide headers,
+/// and the request-id contract lives in headers.
+fn raw_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: Option<&str>,
+) -> http::ClientResponse {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n");
+    for (k, v) in headers {
+        req.push_str(&format!("{k}: {v}\r\n"));
+    }
+    match body {
+        Some(b) => req.push_str(&format!(
+            "Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{b}",
+            b.len()
+        )),
+        None => req.push_str("\r\n"),
+    }
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap();
+    let (resp, _) = http::try_parse_response(&raw)
+        .unwrap()
+        .unwrap_or_else(|| panic!("incomplete response from {method} {path}"));
+    resp
+}
+
+fn body_str(resp: &http::ClientResponse) -> &str {
+    std::str::from_utf8(&resp.body).expect("UTF-8 body")
+}
+
+fn has_event(events: &[Json], name: &str, cat: &str) -> bool {
+    events.iter().any(|e| {
+        e.get("name").and_then(Json::as_str) == Some(name)
+            && e.get("cat").and_then(Json::as_str) == Some(cat)
+    })
+}
+
+fn find_with_request_id<'a>(events: &'a [Json], name: &str, rid: &str) -> Option<&'a Json> {
+    events.iter().find(|e| {
+        e.get("name").and_then(Json::as_str) == Some(name)
+            && e
+                .get("args")
+                .and_then(|a| a.get("request_id"))
+                .and_then(Json::as_str)
+                == Some(rid)
+    })
+}
+
+/// Poll `GET /debug/trace` until every `(name, cat)` pair in `wanted`
+/// has surfaced (thread-local buffers drain on span drop / explicit
+/// flush, so freshly recorded events can trail by a poll or two).
+fn await_events(addr: &str, wanted: &[(&str, &str)], why: &str) -> Vec<Json> {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let (status, body) = http::get(addr, "/debug/trace?since=0").unwrap();
+        assert_eq!(status, 200, "{body}");
+        let export = parse(&body);
+        assert_eq!(
+            export.get("enabled").and_then(Json::as_bool),
+            Some(true),
+            "span collection must be on while serving"
+        );
+        let events = export.req_arr("traceEvents").unwrap().to_vec();
+        if wanted.iter().all(|(n, c)| has_event(&events, n, c)) {
+            return events;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{why}: missing spans from {wanted:?} in {body}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Submit a job with a request id, poll `poll` to a terminal record,
+/// asserting the progress invariants on every snapshot along the way.
+fn poll_job_to_done(addr: &str, poll: &str, why: &str) -> (Json, Vec<(String, i64, i64, i64)>) {
+    let deadline = Instant::now() + Duration::from_secs(300);
+    let mut snapshots: Vec<(String, i64, i64, i64)> = Vec::new();
+    let record = loop {
+        let (status, body) = http::get(addr, poll).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let rec = parse(&body);
+        let prog = rec.req("progress").unwrap();
+        let stage = prog.req_str("stage").unwrap().to_string();
+        let completed = prog.req_i64("completed").unwrap();
+        let total = prog.req_i64("total").unwrap();
+        let ticks = prog.req_i64("ticks").unwrap();
+        if total > 0 {
+            assert!(completed <= total, "{why}: {completed}/{total} overflows");
+        }
+        snapshots.push((stage, completed, total, ticks));
+        match rec.req_str("status").unwrap() {
+            "done" => break rec,
+            "failed" => panic!("{why}: job failed: {body}"),
+            _ => {
+                assert!(Instant::now() < deadline, "{why}: job timed out");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    };
+    // monotonic within a stage; the lifetime tick counter monotonic
+    // across stages too
+    for w in snapshots.windows(2) {
+        if w[0].0 == w[1].0 {
+            assert!(w[1].1 >= w[0].1, "{why}: completed went backwards: {snapshots:?}");
+        }
+        assert!(w[1].3 >= w[0].3, "{why}: ticks went backwards: {snapshots:?}");
+    }
+    // a terminal record always shows a full bar
+    let last = snapshots.last().unwrap();
+    assert!(last.2 > 0, "{why}: terminal record has no total: {snapshots:?}");
+    assert_eq!(last.1, last.2, "{why}: terminal bar not full: {snapshots:?}");
+    (record, snapshots)
+}
+
+#[test]
+fn request_id_echo_healthz_and_metrics_identity() {
+    let (coord, _guard, handle) = start_server();
+    let addr = handle.addr().to_string();
+
+    // a valid supplied id is echoed back verbatim
+    let resp = raw_request(&addr, "GET", "/healthz", &[("X-Request-Id", "obs-test.echo-1")], None);
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("x-request-id"), Some("obs-test.echo-1"));
+    let j = parse(body_str(&resp));
+    assert_eq!(j.req_str("status").unwrap(), "ok");
+    assert_eq!(j.req_str("version").unwrap(), env!("CARGO_PKG_VERSION"));
+    assert_eq!(j.req_str("backend").unwrap(), "native");
+    assert!(j.req_f64("uptime_ms").unwrap() >= 0.0);
+    assert!(!j.req_str("library_fingerprint").unwrap().is_empty());
+    assert!(j.req_i64("active_jobs").unwrap() >= 0);
+
+    // an absent id is minted, an invalid one replaced — never echoed
+    let resp = raw_request(&addr, "GET", "/healthz", &[], None);
+    let minted = resp.header("x-request-id").expect("minted id").to_string();
+    assert!(!minted.is_empty());
+    let resp = raw_request(
+        &addr,
+        "GET",
+        "/healthz",
+        &[("X-Request-Id", "id with spaces")],
+        None,
+    );
+    let replaced = resp.header("x-request-id").expect("replacement id");
+    assert_ne!(replaced, "id with spaces");
+
+    // /metrics: build identity, uptime, per-route histograms, trace drops
+    let (status, metrics) = http::get(&addr, "/metrics").unwrap();
+    assert_eq!(status, 200);
+    assert!(metrics.contains("# TYPE evoapprox_build_info gauge"), "{metrics}");
+    assert!(metrics.contains("evoapprox_build_info{version=\""), "{metrics}");
+    assert!(metrics.contains("format_version=\""), "{metrics}");
+    assert!(metrics.contains("evoapprox_process_uptime_seconds"), "{metrics}");
+    assert!(
+        metrics.contains("evoapprox_http_route_duration_seconds_bucket{route=\"healthz\""),
+        "{metrics}"
+    );
+    assert!(
+        metrics.contains("evoapprox_http_route_duration_seconds_count{route=\"healthz\""),
+        "{metrics}"
+    );
+    assert!(metrics.contains("evoapprox_trace_dropped_total"), "{metrics}");
+
+    handle.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn trace_export_has_predict_and_campaign_span_trees() {
+    let (coord, _guard, handle) = start_server();
+    let addr = handle.addr().to_string();
+
+    // one predict, tagged so its spans are distinguishable from every
+    // other test's traffic in the shared ring
+    let rid = format!("obs-predict-{}", std::process::id());
+    let testset = TestSet::synthetic(2);
+    let body = http::predict_body(&testset.images[..testset.image_len]);
+    let resp = raw_request(&addr, "POST", "/v1/predict", &[("X-Request-Id", &rid)], Some(&body));
+    assert_eq!(resp.status, 200, "{}", body_str(&resp));
+    assert_eq!(resp.header("x-request-id"), Some(rid.as_str()));
+
+    let events = await_events(
+        &addr,
+        &[
+            ("predict", "http"),
+            ("batcher-enqueue", "http"),
+            ("engine-forward", "batcher"),
+            ("predict-delivered", "http"),
+        ],
+        "predict span tree",
+    );
+    // the route span is a Complete event stamped with our request id
+    let route = find_with_request_id(&events, "predict", &rid)
+        .unwrap_or_else(|| panic!("no predict span carries {rid}"));
+    assert_eq!(route.get("ph").and_then(Json::as_str), Some("X"));
+    assert!(route.req_i64("dur").unwrap() >= 0);
+    assert!(route.req_i64("ts").unwrap() >= 0);
+    assert!(route.get("args").and_then(|a| a.req_i64("seq").ok()).is_some());
+    // the delivery mark is an Instant event
+    let delivered = events
+        .iter()
+        .find(|e| e.get("name").and_then(Json::as_str) == Some("predict-delivered"))
+        .unwrap();
+    assert_eq!(delivered.get("ph").and_then(Json::as_str), Some("i"));
+
+    // a campaign job adds the job-run → per-layer → golden-reference →
+    // layer-eval tree, with the job span carrying the submit's id
+    let job_rid = format!("obs-job-{}", std::process::id());
+    let resp = raw_request(
+        &addr,
+        "POST",
+        "/v1/campaigns/resilience",
+        &[("X-Request-Id", &job_rid)],
+        Some("{\"images\":6,\"multipliers\":2,\"jobs\":2}"),
+    );
+    assert_eq!(resp.status, 202, "{}", body_str(&resp));
+    let poll = parse(body_str(&resp)).req_str("poll").unwrap().to_string();
+    poll_job_to_done(&addr, &poll, "trace-export campaign");
+
+    let events = await_events(
+        &addr,
+        &[
+            ("job-run", "job"),
+            ("per-layer", "campaign"),
+            ("golden-reference", "campaign"),
+            ("layer-eval", "campaign"),
+        ],
+        "campaign span tree",
+    );
+    let job_span = find_with_request_id(&events, "job-run", &job_rid)
+        .unwrap_or_else(|| panic!("no job-run span carries {job_rid}"));
+    assert_eq!(
+        job_span.get("args").and_then(|a| a.get("kind")).and_then(Json::as_str),
+        Some("resilience")
+    );
+
+    // the export is a consumable cursor stream: `next` advances and a
+    // re-export from it never replays what we already saw
+    let (status, body) = http::get(&addr, "/debug/trace?since=0").unwrap();
+    assert_eq!(status, 200);
+    let export = parse(&body);
+    let next = export.req_i64("next").unwrap();
+    assert!(next > 0);
+    let (status, body) = http::get(&addr, &format!("/debug/trace?since={next}")).unwrap();
+    assert_eq!(status, 200);
+    for e in parse(&body).req_arr("traceEvents").unwrap() {
+        assert!(e.get("args").and_then(|a| a.req_i64("seq").ok()).unwrap() >= next);
+    }
+    // and a malformed cursor is a 400, not a junk export
+    let (status, _) = http::get(&addr, "/debug/trace?since=banana").unwrap();
+    assert_eq!(status, 400);
+
+    handle.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn job_progress_is_live_monotonic_and_terminates_full() {
+    let (coord, _guard, handle) = start_server();
+    let addr = handle.addr().to_string();
+
+    let rid = "obs-progress.rid-1";
+    let resp = raw_request(
+        &addr,
+        "POST",
+        "/v1/campaigns/resilience",
+        &[("X-Request-Id", rid)],
+        Some("{\"images\":24,\"multipliers\":2,\"jobs\":2}"),
+    );
+    assert_eq!(resp.status, 202, "{}", body_str(&resp));
+    let submitted = parse(body_str(&resp));
+    let poll = submitted.req_str("poll").unwrap().to_string();
+
+    let (record, snapshots) = poll_job_to_done(&addr, &poll, "live progress");
+    // the terminal snapshot is in the campaign stage with a full bar
+    // (poll_job_to_done already asserted completed == total > 0)
+    assert_eq!(snapshots.last().unwrap().0, "layer-campaign", "{snapshots:?}");
+    // the id supplied at submit time is on the job record
+    assert_eq!(record.req_str("request_id").unwrap(), rid);
+    assert_eq!(record.req_str("kind").unwrap(), "resilience");
+
+    handle.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn fleet_propagates_ids_reports_shard_health_and_matches_in_process() {
+    let fleet = Fleet::start(fleet_config(2)).unwrap();
+    let fleet_addr = fleet.addr().to_string();
+
+    // the router answers /healthz itself, with per-shard reachability;
+    // poll until both shards pass their probe (they boot asynchronously)
+    let deadline = Instant::now() + Duration::from_secs(150);
+    let health = loop {
+        let (status, body) = http::get(&fleet_addr, "/healthz").unwrap();
+        assert_eq!(status, 200, "{body}");
+        let j = parse(&body);
+        if j.req_str("status").unwrap() == "ok" {
+            break j;
+        }
+        assert!(Instant::now() < deadline, "fleet never became healthy: {body}");
+        std::thread::sleep(Duration::from_millis(100));
+    };
+    assert_eq!(health.req_str("role").unwrap(), "router");
+    assert_eq!(health.req_str("version").unwrap(), env!("CARGO_PKG_VERSION"));
+    assert_eq!(health.req_i64("shards_total").unwrap(), 2);
+    assert_eq!(health.req_i64("shards_reachable").unwrap(), 2);
+    let shards = health.req_arr("shards").unwrap();
+    assert_eq!(shards.len(), 2);
+    for s in shards {
+        assert!(s.req("ok").unwrap().as_bool().unwrap(), "{health:?}");
+        assert!(!s.req_str("addr").unwrap().is_empty());
+    }
+
+    // the router echoes a supplied id on proxied responses too
+    let resp = raw_request(
+        &fleet_addr,
+        "GET",
+        "/v1/library/census",
+        &[("X-Request-Id", "obs-fleet.rid-7")],
+        None,
+    );
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("x-request-id"), Some("obs-fleet.rid-7"));
+
+    // submit a campaign through the router: the id must survive the
+    // router → shard → JobStore hop and come back on the job record
+    let rid = "obs-fleet.campaign-1";
+    let resp = raw_request(
+        &fleet_addr,
+        "POST",
+        "/v1/campaigns/resilience",
+        &[("X-Request-Id", rid)],
+        Some("{\"images\":6,\"multipliers\":2,\"jobs\":2}"),
+    );
+    assert_eq!(resp.status, 202, "{}", body_str(&resp));
+    let poll = parse(body_str(&resp)).req_str("poll").unwrap().to_string();
+    let (record, _) = poll_job_to_done(&fleet_addr, &poll, "fleet campaign");
+    assert_eq!(record.req_str("request_id").unwrap(), rid);
+
+    // HTTP through the fleet (shard process, jobs 2, tracing on) equals
+    // the in-process campaign (jobs 1) byte-for-byte
+    let dir = std::env::temp_dir().join("evoapprox_obs_tests_no_artifacts");
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::native(dir)).unwrap();
+    let mults = standard_multipliers(Some(&LibrarySource::baseline()), 10, 2).unwrap();
+    let reference =
+        per_layer_campaign(&coord, MODEL, &mults, &TestSet::synthetic(6), KernelKind::Jnp, 1)
+            .unwrap();
+    assert_eq!(
+        record.req("result").unwrap().to_string(),
+        fig4_to_json(&reference).to_string(),
+        "fleet campaign must be byte-identical to the in-process run"
+    );
+
+    // the router's own ring has the fleet spans for the traffic above
+    let events = await_events(&fleet_addr, &[("route", "fleet"), ("shard-hop", "fleet")], "fleet spans");
+    assert!(find_with_request_id(&events, "route", "obs-fleet.rid-7").is_some());
+
+    // aggregated metrics carry the new families; build_info sums to the
+    // shard count by construction (each shard exports the gauge at 1)
+    let (status, metrics) = http::get(&fleet_addr, "/metrics").unwrap();
+    assert_eq!(status, 200);
+    let build_info = metrics
+        .lines()
+        .find(|l| l.starts_with("evoapprox_build_info{"))
+        .unwrap_or_else(|| panic!("no build_info in {metrics}"));
+    let shards_sum: f64 = build_info.split_whitespace().last().unwrap().parse().unwrap();
+    assert_eq!(shards_sum, 2.0, "{build_info}");
+    assert!(
+        metrics.contains("evoapprox_http_route_duration_seconds_bucket{route="),
+        "{metrics}"
+    );
+    assert!(metrics.contains("evoapprox_process_uptime_seconds"), "{metrics}");
+
+    fleet.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn campaign_and_dse_bytes_are_invariant_under_tracing_and_progress() {
+    // collection on for the whole test — the contract is that nothing
+    // traced or ticked can perturb an output byte
+    trace::enable(true);
+    let dir = std::env::temp_dir().join("evoapprox_obs_tests_no_artifacts");
+    let (coord, _guard) = Coordinator::start(CoordinatorConfig::native(dir)).unwrap();
+    let lib = LibrarySource::baseline();
+    let mults = standard_multipliers(Some(&lib), 10, 2).unwrap();
+    let testset = TestSet::synthetic(8);
+
+    // campaign: jobs 1 + progress + cache vs jobs 8 bare
+    let progress = Progress::new();
+    let cache = EvalCache::new();
+    let traced = per_layer_campaign_progress(
+        &coord,
+        MODEL,
+        &mults,
+        &testset,
+        KernelKind::Jnp,
+        1,
+        Some(&cache),
+        Some(&progress),
+        "layer-campaign",
+    )
+    .unwrap();
+    let plain = per_layer_campaign(&coord, MODEL, &mults, &testset, KernelKind::Jnp, 8).unwrap();
+    assert_eq!(
+        fig4_to_json(&traced).to_string(),
+        fig4_to_json(&plain).to_string(),
+        "jobs 1 + tracing + progress vs jobs 8 bare must be byte-identical"
+    );
+    // the handle saw the whole grid: golden + (multipliers × layers)
+    assert_eq!(progress.stage(), "layer-campaign");
+    assert!(progress.total() > 0);
+    assert_eq!(progress.completed(), progress.total());
+    assert_eq!(progress.ticks(), progress.total());
+
+    // DSE: jobs 1 + progress vs jobs 4 bare, fresh caches
+    let mut cfg = DseConfig::new(MODEL);
+    cfg.candidates = 4;
+    cfg.probe_multipliers = 2;
+    cfg.budget_points = 3;
+    cfg.search_iters = 200;
+    let mut jobs1 = cfg.clone();
+    jobs1.jobs = 1;
+    let mut jobs4 = cfg;
+    jobs4.jobs = 4;
+    let p = Progress::new();
+    let r1 = run_dse_progress(&coord, Some(&lib), &jobs1, &testset, &EvalCache::new(), Some(&p))
+        .unwrap();
+    let r4 = run_dse_progress(&coord, Some(&lib), &jobs4, &testset, &EvalCache::new(), None)
+        .unwrap();
+    assert_eq!(
+        dse_to_json(&r1).to_string(),
+        dse_to_json(&r4).to_string(),
+        "DSE jobs 1 + progress vs jobs 4 bare must be byte-identical"
+    );
+    // the driver walked probe → fit → search → verify and left a full bar
+    assert_eq!(p.stage(), "verify");
+    assert!(p.total() > 0);
+    assert_eq!(p.completed(), p.total());
+    assert!(p.ticks() > p.total(), "earlier stages must have ticked too");
+
+    coord.shutdown();
+}

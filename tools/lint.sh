@@ -18,6 +18,12 @@
 #   3. No same-line iteration of a HashMap (`HashMap ... .iter()/.keys()/
 #      .values()/.drain()`) anywhere — catches the declared-and-iterated-
 #      in-one-expression case the module allowlist cannot.
+#   4. No raw `eprintln!` under rust/src/ outside the logger itself
+#      (obs/log.rs) and the bench recorder (util/bench.rs). Diagnostics
+#      go through `obs::log` (DESIGN.md §13) so they are leveled,
+#      filterable JSON lines stamped with the request id — a stray
+#      eprintln! is invisible to `--log-level` and unparseable to log
+#      shippers. Comment lines are exempt (docs may name the macro).
 #
 # Run from the repo root: `bash tools/lint.sh`. Exits non-zero with the
 # offending lines on any hit; silent success otherwise.
@@ -55,6 +61,18 @@ done
 hits=$(grep -rn --include='*.rs' 'HashMap[^;]*\.\(iter\|keys\|values\|drain\|into_iter\)()' rust/ || true)
 if [ -n "$hits" ]; then
     echo "lint: iterating a HashMap — iteration order is process-random; use BTreeMap:" >&2
+    echo "$hits" >&2
+    fail=1
+fi
+
+# library code logs through obs::log, never raw eprintln! (comment lines
+# are exempt; the logger and the bench recorder own their stderr writes)
+hits=$(grep -rn --include='*.rs' 'eprintln!' rust/src/ \
+    | grep -v '^rust/src/obs/log\.rs:' \
+    | grep -v '^rust/src/util/bench\.rs:' \
+    | grep -v ':[0-9]*:[[:space:]]*//' || true)
+if [ -n "$hits" ]; then
+    echo "lint: raw eprintln! in rust/src/ — route diagnostics through obs::log:" >&2
     echo "$hits" >&2
     fail=1
 fi
